@@ -1,0 +1,69 @@
+//! Scheme comparison: the paper's §7.2 analysis on one tensor.
+//!
+//!     cargo run --release --example scheme_comparison [-- --dataset enron --p 32]
+//!
+//! Distributes the same workload under all four schemes and prints the
+//! §4 metrics, communication volumes, memory and the simulated HOOI time —
+//! a single-table view of why Lite wins: near-perfect TTM balance at
+//! near-optimal SVD redundancy, while CoarseG sacrifices balance and
+//! MediumG/HyperG sacrifice redundancy.
+
+use tucker_lite::coordinator::{run_scheme, Workload};
+use tucker_lite::dist::NetModel;
+use tucker_lite::runtime::Engine;
+use tucker_lite::sched;
+use tucker_lite::tensor::datasets;
+use tucker_lite::util::args::Args;
+use tucker_lite::util::table::{fmt_secs, fmt_si, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.str_or("dataset", "enron");
+    let p: usize = args.parse_or("p", 32);
+    let k: usize = args.parse_or("k", 10);
+    let scale: f64 = args.parse_or("scale", 0.2);
+
+    let spec = datasets::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown dataset {name}; see `tucker-lite datasets`");
+        std::process::exit(2);
+    });
+    let w = Workload::from_spec(&spec, scale);
+    println!(
+        "{name}: dims={:?} nnz={} | P={p} K={k}",
+        w.tensor.dims,
+        w.tensor.nnz()
+    );
+    // native = timing-faithful at simulation scale (see DESIGN.md §Perf);
+    // pass --engine pjrt to run on the compiled artifacts instead.
+    let engine = match args.get("engine") {
+        Some("pjrt") => Engine::pjrt_or_native().0,
+        _ => Engine::Native,
+    };
+    println!("engine: {}", engine.name());
+
+    let mut t = Table::new(
+        "scheme comparison",
+        &[
+            "scheme", "HOOI", "TTM", "SVD", "comm", "TTM bal", "SVD load",
+            "vol(SVD)", "vol(FM)", "mem MB", "dist time",
+        ],
+    );
+    for scheme in sched::all_schemes() {
+        let rec = run_scheme(&w, scheme.as_ref(), p, k, 1, &engine, NetModel::default(), 1);
+        t.row(vec![
+            rec.scheme.clone(),
+            fmt_secs(rec.hooi_secs),
+            fmt_secs(rec.ttm_secs),
+            fmt_secs(rec.svd_secs),
+            fmt_secs(rec.comm_secs),
+            format!("{:.2}", rec.ttm_balance),
+            format!("{:.2}", rec.svd_load_norm),
+            fmt_si(rec.svd_volume),
+            fmt_si(rec.fm_volume),
+            format!("{:.1}", rec.mem_mb),
+            fmt_secs(rec.dist_secs),
+        ]);
+    }
+    t.print();
+    println!("(expect: Lite best HOOI; CoarseG worst TTM bal; MediumG/HyperG higher SVD load)");
+}

@@ -1,0 +1,114 @@
+"""AOT emitter: lower the L2 graphs to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is listed in artifacts/manifest.txt with its static shapes:
+
+    <name>.hlo.txt kind=<kind> n=<N> k=<K> khat=<K^{N-1}> b=<B> rtile=<R>
+
+The rust runtime/artifacts.rs registry parses the manifest, compiles each
+module once on the PJRT CPU client, and dispatches padded batches.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+# (K, B) configs for the TTM contribution artifacts. K covers the paper's
+# configurations (K=10 and the K=20 core-size study) plus a small smoke
+# size used by tests; B is the padded batch the rust hot loop dispatches.
+TTM3D_CONFIGS = [(4, 256), (10, 8192), (16, 4096), (20, 4096)]
+TTM4D_CONFIGS = [(4, 256), (10, 2048)]
+# Fused segsum ablation: (K, B, R_BLK).
+SEGSUM3D_CONFIGS = [(10, 2048, 256)]
+# Lanczos matvec tiles: (khat, rtile). Khat = K^{N-1} for each config above.
+MATVEC_CONFIGS = [(16, 256), (100, 512), (256, 512), (400, 512), (1000, 256), (64, 256)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def emit(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def write(name, lowered, **meta):
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name}.hlo.txt " + " ".join(f"{k}={v}" for k, v in meta.items())
+        )
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    for k, b in TTM3D_CONFIGS:
+        name = f"ttm3d_k{k}_b{b}"
+        lowered = jax.jit(model.ttm_contrib_3d).lower(
+            _spec(b, k), _spec(b, k), _spec(b)
+        )
+        write(name, lowered, kind="ttm", n=3, k=k, khat=k * k, b=b)
+
+    for k, b in TTM4D_CONFIGS:
+        name = f"ttm4d_k{k}_b{b}"
+        lowered = jax.jit(model.ttm_contrib_4d).lower(
+            _spec(b, k), _spec(b, k), _spec(b, k), _spec(b)
+        )
+        write(name, lowered, kind="ttm", n=4, k=k, khat=k**3, b=b)
+
+    for k, b, r in SEGSUM3D_CONFIGS:
+        name = f"segsum3d_k{k}_b{b}_r{r}"
+        lowered = jax.jit(model.ttm_contrib_segsum_3d).lower(
+            _spec(b, k), _spec(b, k), _spec(b), _spec(b, r)
+        )
+        write(name, lowered, kind="segsum", n=3, k=k, khat=k * k, b=b, rtile=r)
+
+    for khat, rtile in MATVEC_CONFIGS:
+        name = f"matvec_kh{khat}_r{rtile}"
+        lowered = jax.jit(model.z_matvec_tile).lower(
+            _spec(rtile, khat), _spec(khat)
+        )
+        write(name, lowered, kind="matvec", khat=khat, rtile=rtile)
+
+        name = f"rmatvec_kh{khat}_r{rtile}"
+        lowered = jax.jit(model.z_rmatvec_tile).lower(
+            _spec(rtile), _spec(rtile, khat)
+        )
+        write(name, lowered, kind="rmatvec", khat=khat, rtile=rtile)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    emit(args.out)
+
+
+if __name__ == "__main__":
+    main()

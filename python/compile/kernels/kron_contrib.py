@@ -1,0 +1,159 @@
+"""L1 Pallas kernels: batched Kronecker contributions (the TTM hot spot).
+
+The HOOI TTM-chain reformulation (paper §3, Eq. 1) reduces the per-mode
+TTM-chain to, per non-zero element e:
+
+    contr_n(e) = val(e) * F_a[l_a,:] (x) F_b[l_b,:] ( (x) F_c[l_c,:] )
+
+followed by a segment-sum into the slice rows of the local penultimate
+matrix Z^p. These kernels compute the contribution batch; the reduction is
+either done by the rust runtime (scatter-add) or by the fused `seg_matmul`
+graph in model.py (MXU formulation).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the batch dimension B is
+tiled via BlockSpec into BLK_B-row blocks so each grid step streams
+(BLK_B, K) row-gathers from HBM into VMEM and writes a (BLK_B, K^{N-1})
+contribution block. The outer product is broadcast-multiply work on the
+VPU; the fused reduction variant turns it into an MXU matmul.
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowering emits plain HLO that any
+backend (including the rust `xla`-crate client) runs. Correctness is
+asserted against kernels/ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_blk(b: int, preferred: int) -> int:
+    """Largest block size <= preferred that divides b."""
+    blk = min(b, preferred)
+    while b % blk != 0:
+        blk -= 1
+    return blk
+
+
+def _kron3_kernel(a_ref, b_ref, v_ref, o_ref):
+    """One grid step: (BLK,Ka),(BLK,Kb),(BLK,) -> (BLK, Ka*Kb)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    v = v_ref[...]
+    blk = a.shape[0]
+    # [BLK, Kb, Ka] so that mode-a is fastest after the row-major reshape —
+    # the layout contract in ref.py.
+    outer = b[:, :, None] * a[:, None, :]
+    o_ref[...] = v[:, None] * outer.reshape(blk, -1)
+
+
+def kron_contrib_3d(rows_a, rows_b, vals, *, blk_b: int = 256):
+    """Pallas TTM contribution kernel for 3-D tensors.
+
+    Args/returns match ref.kron_contrib_3d. `blk_b` is the B-tile streamed
+    through VMEM per grid step (auto-shrunk to divide B).
+    """
+    b, ka = rows_a.shape
+    kb = rows_b.shape[1]
+    blk = _pick_blk(b, blk_b)
+    grid = (b // blk,)
+    return pl.pallas_call(
+        _kron3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, ka), lambda i: (i, 0)),
+            pl.BlockSpec((blk, kb), lambda i: (i, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk, ka * kb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ka * kb), rows_a.dtype),
+        interpret=True,
+    )(rows_a, rows_b, vals)
+
+
+def _kron4_kernel(a_ref, b_ref, c_ref, v_ref, o_ref):
+    """One grid step: three row blocks -> (BLK, Ka*Kb*Kc)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    v = v_ref[...]
+    blk = a.shape[0]
+    outer = c[:, :, None, None] * b[:, None, :, None] * a[:, None, None, :]
+    o_ref[...] = v[:, None] * outer.reshape(blk, -1)
+
+
+def kron_contrib_4d(rows_a, rows_b, rows_c, vals, *, blk_b: int = 128):
+    """Pallas TTM contribution kernel for 4-D tensors (kron of three rows)."""
+    b, ka = rows_a.shape
+    kb = rows_b.shape[1]
+    kc = rows_c.shape[1]
+    blk = _pick_blk(b, blk_b)
+    grid = (b // blk,)
+    return pl.pallas_call(
+        _kron4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, ka), lambda i: (i, 0)),
+            pl.BlockSpec((blk, kb), lambda i: (i, 0)),
+            pl.BlockSpec((blk, kc), lambda i: (i, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk, ka * kb * kc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ka * kb * kc), rows_a.dtype),
+        interpret=True,
+    )(rows_a, rows_b, rows_c, vals)
+
+
+def _matvec_kernel(z_ref, x_ref, o_ref):
+    o_ref[...] = z_ref[...] @ x_ref[...]
+
+
+def z_matvec(z_tile, x, *, blk_r: int = 128):
+    """Pallas x-query tile: (R, Khat) @ (Khat,) -> (R,), tiled over R.
+
+    Used by the Lanczos oracle; R is the fixed artifact tile (R_TILE), the
+    rust runtime pads the ragged last tile with zero rows.
+    """
+    r, khat = z_tile.shape
+    blk = _pick_blk(r, blk_r)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(r // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, khat), lambda i: (i, 0)),
+            pl.BlockSpec((khat,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), z_tile.dtype),
+        interpret=True,
+    )(z_tile, x)
+
+
+def _rmatvec_kernel(y_ref, z_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += y_ref[...] @ z_ref[...]
+
+
+def z_rmatvec(y, z_tile, *, blk_r: int = 128):
+    """Pallas y-query tile: (R,) @ (R, Khat) -> (Khat,), accumulated over R
+    blocks (sequential grid, accumulator output block)."""
+    r, khat = z_tile.shape
+    blk = _pick_blk(r, blk_r)
+    return pl.pallas_call(
+        _rmatvec_kernel,
+        grid=(r // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk, khat), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((khat,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((khat,), z_tile.dtype),
+        interpret=True,
+    )(y, z_tile)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package is
+checked against the functions here (pytest + hypothesis sweeps in
+python/tests/test_kernel.py). They also document the *layout contract* the
+rust L3 coordinator relies on.
+
+Layout contract (paper, Appendix A): the Kronecker product of rows taken in
+ascending mode order places the EARLIEST mode fastest-varying, i.e. for a
+3-D tensor and modes (a, b) with a < b, the contribution vector satisfies
+
+    contr[c_a + c_b * K_a] = val * F_a[l_a, c_a] * F_b[l_b, c_b]
+
+so as a row-major (B, K_b, K_a) array the fastest axis is mode a. For 4-D
+and modes (a, b, c) ascending:
+
+    contr[c_a + c_b*K_a + c_c*K_a*K_b] = val * F_a[.,c_a] F_b[.,c_b] F_c[.,c_c]
+"""
+
+import jax.numpy as jnp
+
+
+def kron_contrib_3d(rows_a, rows_b, vals):
+    """Batched mode-skipping Kronecker contribution for 3-D tensors.
+
+    Args:
+      rows_a: (B, K_a) factor-matrix rows of the *earlier* non-skipped mode.
+      rows_b: (B, K_b) rows of the later non-skipped mode.
+      vals:   (B,)     element values.
+    Returns:
+      (B, K_a * K_b) contributions, mode-a fastest (see layout contract).
+    """
+    b = rows_a.shape[0]
+    # [B, K_b, K_a]: axis order makes mode-a fastest after row-major reshape.
+    outer = rows_b[:, :, None] * rows_a[:, None, :]
+    return (vals[:, None] * outer.reshape(b, -1)).astype(rows_a.dtype)
+
+
+def kron_contrib_4d(rows_a, rows_b, rows_c, vals):
+    """Batched Kronecker contribution for 4-D tensors (three rows).
+
+    Returns (B, K_a*K_b*K_c), mode-a fastest, then b, then c.
+    """
+    b = rows_a.shape[0]
+    outer = (
+        rows_c[:, :, None, None]
+        * rows_b[:, None, :, None]
+        * rows_a[:, None, None, :]
+    )
+    return (vals[:, None] * outer.reshape(b, -1)).astype(rows_a.dtype)
+
+
+def seg_matmul(contrib, onehot):
+    """Segment-reduce contributions into local penultimate rows via matmul.
+
+    The MXU-friendly formulation of the scatter-add (DESIGN.md
+    §Hardware-Adaptation): Z_partial = S^T @ C.
+
+    Args:
+      contrib: (B, Khat) contribution batch.
+      onehot:  (B, R) one-hot slice-row assignment.
+    Returns: (R, Khat).
+    """
+    return onehot.T @ contrib
+
+
+def z_matvec(z_tile, x):
+    """x-query tile: (R_TILE, Khat) @ (Khat,) -> (R_TILE,)."""
+    return z_tile @ x
+
+
+def z_rmatvec(y, z_tile):
+    """y-query tile: (R_TILE,) @ (R_TILE, Khat) -> (Khat,)."""
+    return y @ z_tile

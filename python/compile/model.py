@@ -1,0 +1,67 @@
+"""L2: JAX compute graphs for the HOOI hot spots.
+
+Each function here is a build-time graph that aot.py lowers ONCE to HLO
+text; the rust runtime loads + compiles the artifacts and executes them on
+the request path. Python never runs at decomposition time.
+
+Graphs (all fixed-shape; the rust side pads ragged batches/tiles):
+
+  ttm_contrib_3d / ttm_contrib_4d
+      gather-free contribution batch: the rust coordinator gathers the
+      factor-matrix rows per element (cheap, cache-friendly, and keeps the
+      artifact shape independent of L_n) and the graph computes the batched
+      Kronecker contributions via the L1 Pallas kernel.
+
+  ttm_contrib_segsum_3d
+      fused variant: contributions + one-hot segment reduction (S^T @ C),
+      the MXU formulation of the scatter-add; ablated in
+      rust/benches/ablate_runtime.rs.
+
+  z_matvec_tile / z_rmatvec_tile
+      Lanczos oracle tiles over the truncated local penultimate matrix.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import kron_contrib as kk
+
+
+# AOT block sizing: on a real TPU the BlockSpec tile would be bounded by
+# VMEM (BLK_B ≈ 256 for 3-D K=20, 128 for 4-D K=10 — DESIGN.md §7); the
+# CPU-PJRT execution target prefers grid=1 (one block covering the whole
+# batch), because interpret-mode multi-step grids lower to a while-loop of
+# dynamic slices that the CPU backend executes an order of magnitude
+# slower. The tiling machinery itself is exercised by the hypothesis tests
+# (block-size invariance), so correctness is independent of this choice.
+
+
+def ttm_contrib_3d(rows_a, rows_b, vals):
+    """(B,K),(B,K),(B,) -> (B,K^2) contributions. Pallas on the inside."""
+    return (kk.kron_contrib_3d(rows_a, rows_b, vals, blk_b=rows_a.shape[0]),)
+
+
+def ttm_contrib_4d(rows_a, rows_b, rows_c, vals):
+    """(B,K)x3,(B,) -> (B,K^3) contributions."""
+    return (
+        kk.kron_contrib_4d(rows_a, rows_b, rows_c, vals, blk_b=rows_a.shape[0]),
+    )
+
+
+def ttm_contrib_segsum_3d(rows_a, rows_b, vals, onehot):
+    """Fused contribution + segment reduction.
+
+    onehot: (B, R_BLK) one-hot assignment of each batch element to a local
+    penultimate row. Output (R_BLK, K^2) partial Z^p block.
+    """
+    contrib = kk.kron_contrib_3d(rows_a, rows_b, vals, blk_b=rows_a.shape[0])
+    return (onehot.T @ contrib,)
+
+
+def z_matvec_tile(z_tile, x):
+    """(R_TILE, Khat),(Khat,) -> (R_TILE,) local x-query tile."""
+    return (kk.z_matvec(z_tile, x, blk_r=z_tile.shape[0]),)
+
+
+def z_rmatvec_tile(y, z_tile):
+    """(R_TILE,),(R_TILE, Khat) -> (Khat,) local y-query tile."""
+    return (kk.z_rmatvec(y, z_tile, blk_r=z_tile.shape[0]),)

@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value distributions; assert_allclose against
+ref.py is the core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kron_contrib as kk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 1e-5
+RTOL = 1e-5
+
+
+def _rows(rng, b, k):
+    return jnp.asarray(rng.standard_normal((b, k)), dtype=jnp.float32)
+
+
+def _vals(rng, b):
+    return jnp.asarray(rng.standard_normal((b,)), dtype=jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    ka=st.integers(1, 9),
+    kb=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kron3_matches_ref(b, ka, kb, seed):
+    rng = np.random.default_rng(seed)
+    ra, rb, v = _rows(rng, b, ka), _rows(rng, b, kb), _vals(rng, b)
+    got = kk.kron_contrib_3d(ra, rb, v)
+    want = ref.kron_contrib_3d(ra, rb, v)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 24),
+    ka=st.integers(1, 6),
+    kb=st.integers(1, 6),
+    kc=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kron4_matches_ref(b, ka, kb, kc, seed):
+    rng = np.random.default_rng(seed)
+    ra, rb, rc = _rows(rng, b, ka), _rows(rng, b, kb), _rows(rng, b, kc)
+    v = _vals(rng, b)
+    got = kk.kron_contrib_4d(ra, rb, rc, v)
+    want = ref.kron_contrib_4d(ra, rb, rc, v)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_kron3_layout_contract():
+    """contr[c_a + c_b*K_a] = val * a[c_a] * b[c_b] — the exact indexing the
+    rust coordinator assumes (earliest mode fastest)."""
+    ka, kb = 3, 2
+    a = jnp.arange(ka, dtype=jnp.float32) + 1.0  # [1,2,3]
+    b = jnp.arange(kb, dtype=jnp.float32) + 10.0  # [10,11]
+    out = np.asarray(kk.kron_contrib_3d(a[None, :], b[None, :], jnp.ones(1)))[0]
+    for cb in range(kb):
+        for ca in range(ka):
+            assert out[ca + cb * ka] == pytest.approx(a[ca] * b[cb])
+
+
+def test_kron4_layout_contract():
+    ka, kb, kc = 2, 3, 2
+    a = jnp.array([1.0, 2.0])
+    b = jnp.array([1.0, 10.0, 100.0])
+    c = jnp.array([1.0, 1000.0])
+    out = np.asarray(
+        kk.kron_contrib_4d(a[None], b[None], c[None], jnp.ones(1))
+    )[0]
+    for cc in range(kc):
+        for cb in range(kb):
+            for ca in range(ka):
+                assert out[ca + cb * ka + cc * ka * kb] == pytest.approx(
+                    float(a[ca] * b[cb] * c[cc])
+                )
+
+
+def test_kron3_zero_vals_pad_rows_are_zero():
+    """The rust runtime pads ragged batches with val=0 rows; those rows must
+    contribute exactly zero regardless of row content."""
+    rng = np.random.default_rng(0)
+    ra, rb = _rows(rng, 8, 5), _rows(rng, 8, 5)
+    v = jnp.zeros(8, dtype=jnp.float32).at[:3].set(1.0)
+    out = np.asarray(kk.kron_contrib_3d(ra, rb, v))
+    assert np.all(out[3:] == 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.integers(1, 64),
+    khat=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(r, khat, seed):
+    rng = np.random.default_rng(seed)
+    z = _rows(rng, r, khat)
+    x = jnp.asarray(rng.standard_normal(khat), dtype=jnp.float32)
+    got = kk.z_matvec(z, x)
+    want = ref.z_matvec(z, x)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.integers(1, 64),
+    khat=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmatvec_matches_ref(r, khat, seed):
+    rng = np.random.default_rng(seed)
+    z = _rows(rng, r, khat)
+    y = jnp.asarray(rng.standard_normal(r), dtype=jnp.float32)
+    got = kk.z_rmatvec(y, z)
+    want = ref.z_rmatvec(y, z)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_matvec_zero_row_padding():
+    """Tiled matvec: zero rows (tile padding) must produce zero outputs."""
+    rng = np.random.default_rng(1)
+    z = np.zeros((16, 10), dtype=np.float32)
+    z[:5] = rng.standard_normal((5, 10))
+    x = jnp.asarray(rng.standard_normal(10), dtype=jnp.float32)
+    out = np.asarray(kk.z_matvec(jnp.asarray(z), x))
+    assert np.all(out[5:] == 0.0)
+
+
+@pytest.mark.parametrize("blk", [1, 2, 4, 8])
+def test_kron3_block_size_invariance(blk):
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(7)
+    ra, rb, v = _rows(rng, 8, 6), _rows(rng, 8, 6), _vals(rng, 8)
+    base = ref.kron_contrib_3d(ra, rb, v)
+    got = kk.kron_contrib_3d(ra, rb, v, blk_b=blk)
+    np.testing.assert_allclose(got, base, atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("blk", [1, 4, 16])
+def test_rmatvec_block_size_invariance(blk):
+    rng = np.random.default_rng(8)
+    z = _rows(rng, 16, 12)
+    y = jnp.asarray(rng.standard_normal(16), dtype=jnp.float32)
+    base = ref.z_rmatvec(y, z)
+    got = kk.z_rmatvec(y, z, blk_r=blk)
+    np.testing.assert_allclose(got, base, atol=1e-4, rtol=1e-4)

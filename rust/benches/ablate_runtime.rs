@@ -1,0 +1,70 @@
+//! Ablation: compute-engine variants on the TTM hot path.
+//!
+//!   - pjrt        batched contributions through the compiled HLO artifact
+//!   - native      same batched contract, in-process reference kernel
+//!   - fused       native scatter-fused assembly (no batch materialization)
+//!
+//! DESIGN.md calls this out: the batch-materialize-then-scatter structure
+//! is the price of the fixed-shape AOT architecture; this bench quantifies
+//! it (and the perf pass in EXPERIMENTS.md §Perf tracks the gap).
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+use tucker_lite::hooi::{assemble_local_z, assemble_local_z_fused};
+use tucker_lite::linalg::orthonormal_random;
+use tucker_lite::runtime::Engine;
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::{fmt_secs, Table};
+
+fn main() {
+    let quick = std::env::var("TUCKER_BENCH_QUICK").is_ok();
+    let nnz = if quick { 20_000 } else { 400_000 };
+    let reps = if quick { 2 } else { 5 };
+    let k = 10;
+    let mut rng = Rng::new(3);
+    let t = SparseTensor::random(vec![4000, 3000, 1500], nnz, &mut rng);
+    let factors: Vec<_> = t
+        .dims
+        .iter()
+        .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+        .collect();
+    let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+    let (pjrt, label) = Engine::pjrt_or_native();
+    eprintln!("# pjrt engine: {label}; nnz={nnz} K={k} reps={reps}");
+
+    let mut table = Table::new(
+        "ablate_runtime — TTM local-Z assembly (one full mode)",
+        &["variant", "secs/assembly", "Melem/s"],
+    );
+    let mut run = |name: &str, f: &mut dyn FnMut()| {
+        f(); // warmup (compiles artifacts on first pjrt call)
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        table.row(vec![
+            name.into(),
+            fmt_secs(per),
+            format!("{:.2}", nnz as f64 / per / 1e6),
+        ]);
+    };
+
+    run("pjrt", &mut || {
+        let z = assemble_local_z(&t, 0, &elems, &factors, k, &pjrt);
+        std::hint::black_box(z.rows.len());
+    });
+    run("native (batched)", &mut || {
+        let z = assemble_local_z(&t, 0, &elems, &factors, k, &Engine::NativeBatched);
+        std::hint::black_box(z.rows.len());
+    });
+    run("native (fused)", &mut || {
+        let z = assemble_local_z_fused(&t, 0, &elems, &factors, k);
+        std::hint::black_box(z.rows.len());
+    });
+    table.print();
+    let _ = table.save_csv("ablate_runtime");
+}

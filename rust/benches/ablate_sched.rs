@@ -1,0 +1,100 @@
+//! Ablation: scheme design choices DESIGN.md calls out.
+//!
+//!   1. Lite stage-1 round-robin vs CoarseG-BPF (best processor fit):
+//!      §6.1 argues BPF alone cannot fix giant slices — measure E_max.
+//!   2. Sample sort vs std sort for Lite's slice ordering: the parallel
+//!      critical path vs a serial sort.
+//!   3. HyperG refinement passes: connectivity cut vs passes (quality/time
+//!      tradeoff of the multilevel partitioner).
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+use tucker_lite::sched::hypergraph::{partition, Hypergraph, PartitionParams};
+use tucker_lite::sched::{self, ModeMetrics, Scheme};
+use tucker_lite::tensor::datasets;
+use tucker_lite::tensor::slices::build_all;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::{fmt_secs, Table};
+
+fn main() {
+    let quick = std::env::var("TUCKER_BENCH_QUICK").is_ok();
+    let scale = if quick { 0.02 } else { 0.2 };
+    let p = if quick { 4 } else { 64 };
+
+    // --- 1. giant-slice handling: Lite vs BPF vs CoarseG ---
+    let spec = datasets::by_name("enron").unwrap();
+    let t = spec.scaled(scale).generate();
+    let idx = build_all(&t);
+    let limit = t.nnz().div_ceil(p);
+    let mut t1 = Table::new(
+        &format!("ablate — giant slices (enron, P={p}): E_max vs optimal {limit}"),
+        &["scheme", "E_max(mode0)", "E_max/opt", "R_sum/L"],
+    );
+    for name in ["coarseg", "coarseg-bpf", "lite"] {
+        let scheme = sched::by_name(name).unwrap();
+        let d = scheme.distribute(&t, &idx, p, &mut Rng::new(1));
+        let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
+        t1.row(vec![
+            scheme.name().into(),
+            m.e_max.to_string(),
+            format!("{:.2}", m.e_max as f64 / limit as f64),
+            format!("{:.2}", m.svd_redundancy()),
+        ]);
+    }
+    t1.print();
+    let _ = t1.save_csv("ablate_giant_slices");
+
+    // --- 2. sample sort vs std sort on Lite's slice ordering ---
+    let sizes = idx[2].sizes();
+    let reps = if quick { 3 } else { 20 };
+    let mut t2 = Table::new(
+        &format!("ablate — slice sort ({} slices)", sizes.len()),
+        &["sort", "serial secs", "parallel critical path"],
+    );
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut v: Vec<u32> = (0..sizes.len() as u32).collect();
+        v.sort_unstable_by_key(|&i| sizes[i as usize]);
+        std::hint::black_box(v.len());
+    }
+    let std_sort = t0.elapsed().as_secs_f64() / reps as f64;
+    t2.row(vec!["std (serial)".into(), fmt_secs(std_sort), "-".into()]);
+    let mut rng = Rng::new(2);
+    let t0 = Instant::now();
+    let mut crit = 0.0;
+    for _ in 0..reps {
+        let out = sched::samplesort::sample_sort(&sizes, p, &mut rng);
+        crit += out.prefix_secs / p as f64 + out.max_bucket_secs;
+        std::hint::black_box(out.order.len());
+    }
+    let ss = t0.elapsed().as_secs_f64() / reps as f64;
+    t2.row(vec![
+        format!("sample sort (P={p})"),
+        fmt_secs(ss),
+        fmt_secs(crit / reps as f64),
+    ]);
+    t2.print();
+    let _ = t2.save_csv("ablate_sort");
+
+    // --- 3. HyperG refinement passes ---
+    let spec = datasets::by_name("nell2").unwrap();
+    let t = spec.scaled(scale * 0.5).generate();
+    let idx = build_all(&t);
+    let hg = Hypergraph::from_tensor(&t, &idx);
+    let mut t3 = Table::new(
+        &format!("ablate — HyperG refinement (nell2, nnz={}, P={p})", t.nnz()),
+        &["passes", "connectivity-1 cut", "partition secs"],
+    );
+    for passes in [0usize, 1, 3, 6] {
+        let params = PartitionParams { passes, ..Default::default() };
+        let t0 = Instant::now();
+        let part = partition(&hg, p, params, &mut Rng::new(4));
+        let secs = t0.elapsed().as_secs_f64();
+        let cut = hg.connectivity_cut(&part, p);
+        t3.row(vec![passes.to_string(), cut.to_string(), fmt_secs(secs)]);
+    }
+    t3.print();
+    let _ = t3.save_csv("ablate_hyperg_passes");
+}

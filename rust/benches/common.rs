@@ -1,0 +1,53 @@
+//! Shared bench harness (criterion is not vendored in the offline image —
+//! benches are harness=false binaries that print the paper's tables and
+//! mirror them to results/*.csv).
+//!
+//! Environment knobs:
+//!   TUCKER_BENCH_SCALE   dataset scale multiplier (default 0.2)
+//!   TUCKER_BENCH_QUICK   set to any value for the tiny smoke config
+//!   TUCKER_BENCH_ENGINE  pjrt (default) | native
+
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use tucker_lite::coordinator::ExpConfig;
+use tucker_lite::runtime::Engine;
+
+pub fn bench_config() -> ExpConfig {
+    let mut cfg = if std::env::var("TUCKER_BENCH_QUICK").is_ok() {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+    if let Ok(s) = std::env::var("TUCKER_BENCH_SCALE") {
+        if let Ok(v) = s.parse() {
+            cfg.scale = v;
+        }
+    }
+    cfg
+}
+
+pub fn bench_engine() -> Engine {
+    match std::env::var("TUCKER_BENCH_ENGINE").as_deref() {
+        Ok("pjrt") => {
+            let (e, label) = Engine::pjrt_or_native();
+            eprintln!("# engine: {label} (TUCKER_BENCH_ENGINE)");
+            e
+        }
+        _ => {
+            // native is the timing-faithful engine at simulation scale:
+            // CPU-PJRT dispatch overhead (~ms/call) would swamp the
+            // per-rank FLOP differences the figures measure. The pjrt
+            // path is exercised by ablate_runtime, the e2e example and
+            // the roundtrip integration tests.
+            eprintln!("# engine: native (set TUCKER_BENCH_ENGINE=pjrt to override)");
+            Engine::Native
+        }
+    }
+}
+
+pub fn banner(name: &str, cfg: &ExpConfig) {
+    eprintln!(
+        "# {name}: scale={} P=({},{}) K=({},{}) invocations={}",
+        cfg.scale, cfg.p_lo, cfg.p_hi, cfg.k, cfg.k_big, cfg.invocations
+    );
+}

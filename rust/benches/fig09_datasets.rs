@@ -1,0 +1,11 @@
+//! Fig 9: the dataset table (synthetic analogues + paper nnz column).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let t = tucker_lite::tensor::datasets::fig9_table();
+    t.print();
+    if let Ok(p) = t.save_csv("fig09_datasets") {
+        eprintln!("# csv: {}", p.display());
+    }
+}

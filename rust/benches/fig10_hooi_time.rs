@@ -1,0 +1,16 @@
+//! Fig 10: HOOI execution time — 4 schemes × 5 medium tensors × 3 configs
+//! (P_lo/K, P_hi/K, P_hi/K_big). The paper's headline table: Lite best
+//! everywhere, gain growing with ranks and core size.
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig10;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig10", &cfg);
+    let engine = common::bench_engine();
+    for (i, t) in fig10(&cfg, &engine).iter().enumerate() {
+        t.print();
+        let _ = t.save_csv(&format!("fig10_config{}", i + 1));
+    }
+}

@@ -1,0 +1,14 @@
+//! Fig 11: HOOI time breakup (TTM / SVD / communication) — computation
+//! dominates; CoarseG better on SVD, MediumG/HyperG on TTM, Lite on both.
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig11;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig11", &cfg);
+    let engine = common::bench_engine();
+    let t = fig11(&cfg, &engine);
+    t.print();
+    let _ = t.save_csv("fig11_breakup");
+}

@@ -1,0 +1,14 @@
+//! Fig 12: the §4 computation metrics — (a) TTM load balance,
+//! (b) normalized SVD load (redundancy), (c) SVD load balance.
+//! Distribution-only (no HOOI timing needed).
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig12;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig12", &cfg);
+    let t = fig12(&cfg);
+    t.print();
+    let _ = t.save_csv("fig12_metrics");
+}

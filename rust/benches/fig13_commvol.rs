@@ -1,0 +1,13 @@
+//! Fig 13: communication volume breakup (SVD oracle vs factor-matrix
+//! transfer). Multi-policy schemes pay FM volume, uni-policy pay SVD.
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig13;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig13", &cfg);
+    let t = fig13(&cfg);
+    t.print();
+    let _ = t.save_csv("fig13_commvol");
+}

@@ -1,0 +1,14 @@
+//! Fig 14: big tensors (amazon/patents/reddit analogues) — lightweight
+//! schemes only (HyperG cannot partition them, as in the paper).
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig14;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig14", &cfg);
+    let engine = common::bench_engine();
+    let t = fig14(&cfg, &engine);
+    t.print();
+    let _ = t.save_csv("fig14_big");
+}

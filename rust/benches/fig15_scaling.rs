@@ -1,0 +1,16 @@
+//! Fig 15: strong scaling — (a) speedup P_lo→P_hi for every scheme,
+//! (b) the Lite scaling curve over the P sweep.
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig15;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig15", &cfg);
+    let engine = common::bench_engine();
+    let (a, b) = fig15(&cfg, &engine);
+    a.print();
+    b.print();
+    let _ = a.save_csv("fig15a_speedup");
+    let _ = b.save_csv("fig15b_lite_scaling");
+}

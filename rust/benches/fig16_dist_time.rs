@@ -1,0 +1,14 @@
+//! Fig 16: tensor distribution time per scheme vs a single Lite HOOI
+//! invocation — the lightweight schemes are real-time, HyperG is offline.
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig16;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig16", &cfg);
+    let engine = common::bench_engine();
+    let t = fig16(&cfg, &engine);
+    t.print();
+    let _ = t.save_csv("fig16_dist_time");
+}

@@ -1,0 +1,14 @@
+//! Fig 17: average memory per rank with tensor/penultimate/factor
+//! breakdown — multi-policy schemes store N tensor copies but smaller
+//! penultimate matrices.
+#[path = "common.rs"]
+mod common;
+use tucker_lite::coordinator::experiments::fig17;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("fig17", &cfg);
+    let t = fig17(&cfg);
+    t.print();
+    let _ = t.save_csv("fig17_memory");
+}

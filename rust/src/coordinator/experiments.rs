@@ -1,0 +1,449 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§7) on the synthetic analogues + simulated cluster. Each
+//! `figNN` function prints the paper's rows/series; the bench binaries
+//! (rust/benches/figNN_*.rs) and the CLI (`tucker-lite exp --fig NN`) are
+//! thin wrappers around these.
+//!
+//! Scaling defaults (DESIGN.md §2): the paper's 32–512 ranks map to 8–64
+//! here (same tensors-per-rank regime after the nnz scale-down); the
+//! dataset scale multiplier trades fidelity for wallclock and is
+//! overridable everywhere (`--scale`).
+
+use super::leader::{run_scheme, Workload};
+use crate::dist::NetModel;
+use crate::hooi::{self, khat};
+use crate::runtime::Engine;
+use crate::sched::{self, Scheme, SchemeMetrics};
+use crate::tensor::datasets;
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_secs, fmt_si, Table};
+
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    pub p_lo: usize,
+    pub p_hi: usize,
+    pub k: usize,
+    pub k_big: usize,
+    pub scale: f64,
+    pub invocations: usize,
+    pub seed: u64,
+    pub net: NetModel,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            p_lo: 8,
+            p_hi: 64,
+            k: 10,
+            k_big: 20,
+            scale: 0.2,
+            invocations: 1,
+            seed: 0xE4A,
+            net: NetModel::default(),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Tiny configuration for tests / smoke runs.
+    pub fn quick() -> Self {
+        ExpConfig { p_lo: 2, p_hi: 4, scale: 0.02, k: 4, k_big: 4, ..Default::default() }
+    }
+}
+
+fn medium_workloads(cfg: &ExpConfig) -> Vec<Workload> {
+    datasets::medium()
+        .iter()
+        .map(|s| Workload::from_spec(s, cfg.scale))
+        .collect()
+}
+
+fn big_workloads(cfg: &ExpConfig) -> Vec<Workload> {
+    datasets::big()
+        .iter()
+        .map(|s| Workload::from_spec(s, cfg.scale))
+        .collect()
+}
+
+/// Fig 9: dataset table.
+pub fn fig9() -> Table {
+    datasets::fig9_table()
+}
+
+/// Fig 10: HOOI execution time, medium tensors, three configurations
+/// (P_lo/K, P_hi/K, P_hi/K_big) × four schemes.
+pub fn fig10(cfg: &ExpConfig, engine: &Engine) -> Vec<Table> {
+    let workloads = medium_workloads(cfg);
+    let configs = [
+        (cfg.p_lo, cfg.k, format!("ranks={} K={}", cfg.p_lo, cfg.k)),
+        (cfg.p_hi, cfg.k, format!("ranks={} K={}", cfg.p_hi, cfg.k)),
+        (cfg.p_hi, cfg.k_big, format!("ranks={} K={}", cfg.p_hi, cfg.k_big)),
+    ];
+    let mut tables = Vec::new();
+    for (p, k, label) in configs {
+        let mut t = Table::new(
+            &format!("Fig 10 — HOOI execution time, {label}"),
+            &["tensor", "CoarseG", "MediumG", "HyperG", "Lite", "best-prior/Lite"],
+        );
+        for w in &workloads {
+            let mut times = Vec::new();
+            for scheme in sched::all_schemes() {
+                let rec = run_scheme(
+                    w, scheme.as_ref(), p, k, cfg.invocations, engine, cfg.net, cfg.seed,
+                );
+                times.push(rec.hooi_secs);
+            }
+            let best_prior = times[..3].iter().cloned().fold(f64::INFINITY, f64::min);
+            t.row(vec![
+                w.name.clone(),
+                fmt_secs(times[0]),
+                fmt_secs(times[1]),
+                fmt_secs(times[2]),
+                fmt_secs(times[3]),
+                format!("{:.2}x", best_prior / times[3]),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig 11: HOOI time breakup (TTM / SVD compute / communication) on the
+/// first three tensors at (P_hi, K).
+pub fn fig11(cfg: &ExpConfig, engine: &Engine) -> Table {
+    let workloads: Vec<Workload> = medium_workloads(cfg).into_iter().take(3).collect();
+    let mut t = Table::new(
+        &format!("Fig 11 — time breakup, ranks={} K={}", cfg.p_hi, cfg.k),
+        &["tensor", "scheme", "TTM", "SVD", "comm", "total"],
+    );
+    for w in &workloads {
+        for scheme in sched::all_schemes() {
+            let rec = run_scheme(
+                w, scheme.as_ref(), cfg.p_hi, cfg.k, cfg.invocations, engine, cfg.net, cfg.seed,
+            );
+            t.row(vec![
+                w.name.clone(),
+                rec.scheme.clone(),
+                fmt_secs(rec.ttm_secs),
+                fmt_secs(rec.svd_secs),
+                fmt_secs(rec.comm_secs),
+                fmt_secs(rec.hooi_secs),
+            ]);
+        }
+    }
+    t
+}
+
+/// Distribution-only record (no HOOI run): the §4 metrics and volumes are
+/// fully determined by the distribution, so Figs 12/13/17 are cheap.
+pub struct DistRecord {
+    pub workload: String,
+    pub scheme: String,
+    pub metrics: SchemeMetrics,
+    pub svd_volume: f64,
+    pub fm_volume: f64,
+    pub mem_mb: f64,
+    pub mem_breakdown: (f64, f64, f64),
+    pub dist_secs: f64,
+}
+
+/// Distribute and compute metric/volume/memory records without timing HOOI.
+pub fn distribution_records(
+    w: &Workload,
+    schemes: &[Box<dyn Scheme>],
+    p: usize,
+    k: usize,
+    seed: u64,
+) -> Vec<DistRecord> {
+    let ndim = w.tensor.ndim();
+    let kh = khat(k, ndim);
+    schemes
+        .iter()
+        .map(|scheme| {
+            let mut rng = Rng::new(seed);
+            let dist = scheme.distribute(&w.tensor, &w.idx, p, &mut rng);
+            let metrics = SchemeMetrics::compute(&w.tensor, &w.idx, &dist);
+            // oracle volume: Q_n (R_sum − L_nonempty) per mode, Q_n = 4K
+            let q_n = 4 * k;
+            let svd_volume: f64 = metrics
+                .per_mode
+                .iter()
+                .map(|m| (q_n * m.oracle_volume_per_query()) as f64)
+                .sum();
+            // FM volume from the transfer patterns
+            let modes = hooi::prepare_modes(&w.tensor, &w.idx, &dist, k);
+            let fm_volume: f64 =
+                modes.iter().map(|st| st.fm.total_units as f64).sum();
+            let mem = hooi::driver::memory_model(&w.tensor, &dist, &modes, k, kh);
+            DistRecord {
+                workload: w.name.clone(),
+                scheme: dist.scheme.clone(),
+                metrics,
+                svd_volume,
+                fm_volume,
+                mem_mb: mem.avg_total_mb(),
+                mem_breakdown: mem.avg_component_mb(),
+                dist_secs: dist.time.simulated_secs,
+            }
+        })
+        .collect()
+}
+
+/// Fig 12: computation metrics at (P_hi, K) on the first three tensors —
+/// (a) TTM load balance, (b) normalized SVD load, (c) SVD load balance.
+pub fn fig12(cfg: &ExpConfig) -> Table {
+    let workloads: Vec<Workload> = medium_workloads(cfg).into_iter().take(3).collect();
+    let mut t = Table::new(
+        &format!("Fig 12 — computation metrics, ranks={} K={}", cfg.p_hi, cfg.k),
+        &["tensor", "scheme", "TTM balance", "SVD load (norm)", "SVD balance"],
+    );
+    for w in &workloads {
+        let khv: Vec<f64> = (0..w.tensor.ndim())
+            .map(|_| (cfg.k as f64).powi(w.tensor.ndim() as i32 - 1))
+            .collect();
+        for rec in
+            distribution_records(w, &sched::all_schemes(), cfg.p_hi, cfg.k, cfg.seed)
+        {
+            t.row(vec![
+                w.name.clone(),
+                rec.scheme.clone(),
+                format!("{:.2}", rec.metrics.ttm_balance()),
+                format!("{:.2}", rec.metrics.svd_load_normalized(&khv)),
+                format!("{:.2}", rec.metrics.svd_balance(&khv)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 13: communication volume breakup (SVD oracle vs factor-matrix).
+pub fn fig13(cfg: &ExpConfig) -> Table {
+    let workloads: Vec<Workload> = medium_workloads(cfg).into_iter().take(3).collect();
+    let mut t = Table::new(
+        &format!("Fig 13 — communication volume (units), ranks={} K={}", cfg.p_hi, cfg.k),
+        &["tensor", "scheme", "SVD", "FM", "total"],
+    );
+    for w in &workloads {
+        for rec in
+            distribution_records(w, &sched::all_schemes(), cfg.p_hi, cfg.k, cfg.seed)
+        {
+            t.row(vec![
+                w.name.clone(),
+                rec.scheme.clone(),
+                fmt_si(rec.svd_volume),
+                fmt_si(rec.fm_volume),
+                fmt_si(rec.svd_volume + rec.fm_volume),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 14: big tensors, lightweight schemes only (HyperG cannot partition
+/// them — same exclusion as the paper).
+pub fn fig14(cfg: &ExpConfig, engine: &Engine) -> Table {
+    let workloads = big_workloads(cfg);
+    let mut t = Table::new(
+        &format!("Fig 14 — big tensors HOOI time, ranks={} K={}", cfg.p_hi, cfg.k),
+        &["tensor", "CoarseG", "MediumG", "Lite", "MediumG/Lite"],
+    );
+    for w in &workloads {
+        let mut times = Vec::new();
+        for scheme in sched::lightweight_schemes() {
+            let rec = run_scheme(
+                w, scheme.as_ref(), cfg.p_hi, cfg.k, cfg.invocations, engine, cfg.net, cfg.seed,
+            );
+            times.push(rec.hooi_secs);
+        }
+        t.row(vec![
+            w.name.clone(),
+            fmt_secs(times[0]),
+            fmt_secs(times[1]),
+            fmt_secs(times[2]),
+            format!("{:.2}x", times[1] / times[2]),
+        ]);
+    }
+    t
+}
+
+/// Fig 15: strong scaling P_lo → P_hi. Returns (speedup table over all
+/// schemes and datasets, Lite scaling curve over the P sweep).
+pub fn fig15(cfg: &ExpConfig, engine: &Engine) -> (Table, Table) {
+    let mut all: Vec<Workload> = medium_workloads(cfg);
+    all.extend(big_workloads(cfg));
+    let ideal = cfg.p_hi as f64 / cfg.p_lo as f64;
+    let mut speedup = Table::new(
+        &format!(
+            "Fig 15a — speedup {}→{} ranks (ideal {:.0}x), K={}",
+            cfg.p_lo, cfg.p_hi, ideal, cfg.k
+        ),
+        &["tensor", "CoarseG", "MediumG", "HyperG", "Lite"],
+    );
+    for w in &all {
+        let big = datasets::by_name(&w.name).map(|d| d.big).unwrap_or(false);
+        let mut cells = vec![w.name.clone()];
+        for scheme in sched::all_schemes() {
+            if scheme.name() == "HyperG" && big {
+                cells.push("X".into());
+                continue;
+            }
+            let lo = run_scheme(
+                w, scheme.as_ref(), cfg.p_lo, cfg.k, cfg.invocations, engine, cfg.net, cfg.seed,
+            );
+            let hi = run_scheme(
+                w, scheme.as_ref(), cfg.p_hi, cfg.k, cfg.invocations, engine, cfg.net, cfg.seed,
+            );
+            cells.push(format!("{:.1}x", lo.hooi_secs / hi.hooi_secs));
+        }
+        speedup.row(cells);
+    }
+    // Lite strong-scaling curve over a P sweep
+    let mut sweep = Vec::new();
+    let mut p = cfg.p_lo;
+    while p <= cfg.p_hi {
+        sweep.push(p);
+        p *= 2;
+    }
+    let header: Vec<String> = std::iter::once("tensor".to_string())
+        .chain(sweep.iter().map(|p| format!("P={p}")))
+        .collect();
+    let mut curve = Table::new(
+        "Fig 15b — Lite strong scaling (simulated HOOI seconds)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for w in &all {
+        let mut cells = vec![w.name.clone()];
+        for &p in &sweep {
+            let rec = run_scheme(
+                w, &sched::Lite, p, cfg.k, cfg.invocations, engine, cfg.net, cfg.seed,
+            );
+            cells.push(fmt_secs(rec.hooi_secs));
+        }
+        curve.row(cells);
+    }
+    (speedup, curve)
+}
+
+/// Fig 16: distribution time of every scheme vs a single Lite HOOI
+/// invocation, all eight tensors at (P_hi, K).
+pub fn fig16(cfg: &ExpConfig, engine: &Engine) -> Table {
+    let mut all: Vec<Workload> = medium_workloads(cfg);
+    all.extend(big_workloads(cfg));
+    let mut t = Table::new(
+        &format!("Fig 16 — distribution time, ranks={} K={}", cfg.p_hi, cfg.k),
+        &["tensor", "CoarseG", "MediumG", "HyperG", "Lite", "HOOI(Lite)"],
+    );
+    for w in &all {
+        let big = datasets::by_name(&w.name).map(|d| d.big).unwrap_or(false);
+        let mut cells = vec![w.name.clone()];
+        for scheme in sched::all_schemes() {
+            if scheme.name() == "HyperG" && big {
+                cells.push("X".into());
+                continue;
+            }
+            let mut rng = Rng::new(cfg.seed);
+            let dist = scheme.distribute(&w.tensor, &w.idx, cfg.p_hi, &mut rng);
+            cells.push(fmt_secs(dist.time.simulated_secs));
+        }
+        let rec = run_scheme(
+            w, &sched::Lite, cfg.p_hi, cfg.k, 1, engine, cfg.net, cfg.seed,
+        );
+        cells.push(fmt_secs(rec.hooi_secs));
+        t.row(cells);
+    }
+    t
+}
+
+/// Fig 17: average memory per rank (MB) with tensor/penultimate/factor
+/// breakdown for the first three tensors.
+pub fn fig17(cfg: &ExpConfig) -> Table {
+    let mut all: Vec<Workload> = medium_workloads(cfg);
+    all.extend(big_workloads(cfg));
+    let mut t = Table::new(
+        &format!("Fig 17 — memory per rank (MB), ranks={} K={}", cfg.p_hi, cfg.k),
+        &["tensor", "scheme", "total", "tensor", "penult", "factors"],
+    );
+    for (wi, w) in all.iter().enumerate() {
+        let big = datasets::by_name(&w.name).map(|d| d.big).unwrap_or(false);
+        let schemes =
+            if big { sched::lightweight_schemes() } else { sched::all_schemes() };
+        for rec in distribution_records(w, &schemes, cfg.p_hi, cfg.k, cfg.seed) {
+            let (tm, zm, fm) = rec.mem_breakdown;
+            let detail = wi < 3;
+            t.row(vec![
+                w.name.clone(),
+                rec.scheme.clone(),
+                format!("{:.1}", rec.mem_mb),
+                if detail { format!("{tm:.1}") } else { "-".into() },
+                if detail { format!("{zm:.1}") } else { "-".into() },
+                if detail { format!("{fm:.1}") } else { "-".into() },
+            ]);
+        }
+    }
+    t
+}
+
+/// Dispatch by figure number (CLI `exp --fig N`). Returns rendered text.
+pub fn run_figure(fig: usize, cfg: &ExpConfig, engine: &Engine) -> String {
+    match fig {
+        9 => fig9().render(),
+        10 => fig10(cfg, engine)
+            .iter()
+            .map(|t| t.render())
+            .collect::<Vec<_>>()
+            .join("\n"),
+        11 => fig11(cfg, engine).render(),
+        12 => fig12(cfg).render(),
+        13 => fig13(cfg).render(),
+        14 => fig14(cfg, engine).render(),
+        15 => {
+            let (a, b) = fig15(cfg, engine);
+            format!("{}\n{}", a.render(), b.render())
+        }
+        16 => fig16(cfg, engine).render(),
+        17 => fig17(cfg).render(),
+        _ => format!("unknown figure {fig} (valid: 9..=17)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_always_available() {
+        let r = fig9().render();
+        assert!(r.contains("reddit"));
+    }
+
+    #[test]
+    fn fig12_13_17_distribution_only_paths() {
+        let cfg = ExpConfig::quick();
+        let r12 = fig12(&cfg).render();
+        assert!(r12.contains("Lite") && r12.contains("HyperG"));
+        let r13 = fig13(&cfg).render();
+        assert!(r13.contains("FM"));
+        let r17 = fig17(&cfg).render();
+        assert!(r17.contains("amazon"));
+    }
+
+    #[test]
+    fn fig10_quick_smoke() {
+        let cfg = ExpConfig::quick();
+        let tables = fig10(&cfg, &Engine::Native);
+        assert_eq!(tables.len(), 3);
+        for t in &tables {
+            let r = t.render();
+            assert!(r.contains("enron"));
+            assert!(r.contains("Lite"));
+        }
+    }
+
+    #[test]
+    fn run_figure_dispatch() {
+        let cfg = ExpConfig::quick();
+        assert!(run_figure(9, &cfg, &Engine::Native).contains("Fig 9"));
+        assert!(run_figure(99, &cfg, &Engine::Native).contains("unknown"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Job specification: everything a run needs, assembled from config file +
+//! CLI overrides (util::config / util::args). The config system is the
+//! paper's "experimental setup" made explicit and reproducible.
+
+use crate::dist::NetModel;
+use crate::util::args::Args;
+use crate::util::config::Config;
+
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Dataset name (tensor::datasets) or a path to a FROSTT .tns file.
+    pub dataset: String,
+    /// Dataset scale multiplier (synthetic analogues only).
+    pub scale: f64,
+    /// Scheme name (sched::by_name).
+    pub scheme: String,
+    /// Simulated MPI world size.
+    pub p: usize,
+    /// Core length K (uniform, as in the paper).
+    pub k: usize,
+    /// HOOI invocations.
+    pub invocations: usize,
+    /// Engine: "pjrt" or "native".
+    pub engine: String,
+    pub seed: u64,
+    pub net: NetModel,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            dataset: "enron".into(),
+            scale: 1.0,
+            scheme: "lite".into(),
+            p: 64,
+            k: 10,
+            invocations: 1,
+            // Default to the native engine for *timing* runs: on the CPU
+            // PJRT client a dispatch costs ~ms, which swamps the
+            // microsecond-scale per-rank work of the scaled-down
+            // simulation and would hide the schemes' FLOP differences
+            // (EXPERIMENTS.md §Perf quantifies this). The pjrt path is
+            // validated end-to-end by examples/e2e_decompose.rs and the
+            // roundtrip tests; opt in with --engine pjrt.
+            engine: "native".into(),
+            seed: 0xBEEF,
+            net: NetModel::default(),
+        }
+    }
+}
+
+impl JobSpec {
+    /// Layer config file under CLI args (args win).
+    pub fn from_sources(config: Option<&Config>, args: &Args) -> JobSpec {
+        let mut j = JobSpec::default();
+        if let Some(c) = config {
+            j.dataset = c.get("dataset").unwrap_or(&j.dataset).to_string();
+            j.scheme = c.get("scheme").unwrap_or(&j.scheme).to_string();
+            j.engine = c.get("engine").unwrap_or(&j.engine).to_string();
+            j.scale = c.parse_or("scale", j.scale);
+            j.p = c.parse_or("p", j.p);
+            j.k = c.parse_or("k", j.k);
+            j.invocations = c.parse_or("invocations", j.invocations);
+            j.seed = c.parse_or("seed", j.seed);
+            j.net.alpha = c.parse_or("net.alpha", j.net.alpha);
+            j.net.beta = c.parse_or("net.beta", j.net.beta);
+        }
+        j.dataset = args.str_or("dataset", &j.dataset).to_string();
+        j.scheme = args.str_or("scheme", &j.scheme).to_string();
+        j.engine = args.str_or("engine", &j.engine).to_string();
+        j.scale = args.parse_or("scale", j.scale);
+        j.p = args.parse_or("p", j.p);
+        j.k = args.parse_or("k", j.k);
+        j.invocations = args.parse_or("invocations", j.invocations);
+        j.seed = args.parse_or("seed", j.seed);
+        j.net.alpha = args.parse_or("alpha", j.net.alpha);
+        j.net.beta = args.parse_or("beta", j.net.beta);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_override_config() {
+        let cfg = Config::parse("p = 32\nscheme = coarseg\nk = 20").unwrap();
+        let argv: Vec<String> =
+            ["--p", "128"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv);
+        let j = JobSpec::from_sources(Some(&cfg), &args);
+        assert_eq!(j.p, 128); // CLI wins
+        assert_eq!(j.scheme, "coarseg"); // config survives
+        assert_eq!(j.k, 20);
+    }
+
+    #[test]
+    fn defaults_without_sources() {
+        let args = Args::parse(&[]);
+        let j = JobSpec::from_sources(None, &args);
+        assert_eq!(j.k, 10);
+        assert_eq!(j.scheme, "lite");
+    }
+
+    #[test]
+    fn net_model_knobs() {
+        let cfg = Config::parse("net.alpha = 5e-6\nnet.beta = 2e-9").unwrap();
+        let j = JobSpec::from_sources(Some(&cfg), &Args::parse(&[]));
+        assert!((j.net.alpha - 5e-6).abs() < 1e-18);
+        assert!((j.net.beta - 2e-9).abs() < 1e-18);
+    }
+}

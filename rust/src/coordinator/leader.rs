@@ -1,0 +1,198 @@
+//! The pipeline leader: dataset → distribution scheme → simulated cluster
+//! → HOOI → consolidated run record. Every experiment (benches, CLI,
+//! examples) goes through `run_scheme` so measurements are comparable.
+
+use super::job::JobSpec;
+use crate::dist::{cat, NetModel, SimCluster};
+use crate::hooi::{run_hooi, HooiConfig, HooiOutcome};
+use crate::runtime::Engine;
+use crate::sched::{Distribution, Scheme, SchemeMetrics};
+use crate::tensor::datasets::DatasetSpec;
+use crate::tensor::slices::build_all;
+use crate::tensor::{io, SliceIndex, SparseTensor};
+use crate::util::rng::Rng;
+
+/// A loaded workload: tensor + its per-mode slice indices.
+pub struct Workload {
+    pub name: String,
+    pub tensor: SparseTensor,
+    pub idx: Vec<SliceIndex>,
+}
+
+impl Workload {
+    pub fn from_spec(spec: &DatasetSpec, scale: f64) -> Workload {
+        let spec = if (scale - 1.0).abs() > 1e-9 { spec.scaled(scale) } else { spec.clone() };
+        let tensor = spec.generate();
+        let idx = build_all(&tensor);
+        Workload { name: spec.name.to_string(), tensor, idx }
+    }
+
+    pub fn from_tns(path: &std::path::Path) -> std::io::Result<Workload> {
+        let tensor = io::read_tns(path)?;
+        let idx = build_all(&tensor);
+        Ok(Workload {
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into(),
+            tensor,
+            idx,
+        })
+    }
+
+    /// Resolve a JobSpec dataset: a known synthetic name or a .tns path.
+    pub fn resolve(job: &JobSpec) -> Result<Workload, String> {
+        if let Some(spec) = crate::tensor::datasets::by_name(&job.dataset) {
+            Ok(Workload::from_spec(&spec, job.scale))
+        } else if job.dataset.ends_with(".tns") {
+            Workload::from_tns(std::path::Path::new(&job.dataset))
+                .map_err(|e| format!("{}: {e}", job.dataset))
+        } else {
+            Err(format!(
+                "unknown dataset {:?} (expected one of the Fig 9 names or a .tns path)",
+                job.dataset
+            ))
+        }
+    }
+}
+
+/// Consolidated measurements of one (workload, scheme, P, K) run.
+pub struct RunRecord {
+    pub workload: String,
+    pub scheme: String,
+    pub p: usize,
+    pub k: usize,
+    /// Simulated HOOI execution time (single/multiple invocations as run).
+    pub hooi_secs: f64,
+    /// Breakup (Fig 11): TTM compute, SVD compute, total communication.
+    pub ttm_secs: f64,
+    pub svd_secs: f64,
+    pub comm_secs: f64,
+    /// Distribution time (Fig 16): simulated parallel construction.
+    pub dist_secs: f64,
+    /// Communication volumes in units (Fig 13).
+    pub svd_volume: f64,
+    pub fm_volume: f64,
+    /// §4 metrics aggregates (Fig 12).
+    pub ttm_balance: f64,
+    pub svd_load_norm: f64,
+    pub svd_balance: f64,
+    /// Fig 17 memory (avg MB/rank + breakdown).
+    pub mem_mb: f64,
+    pub mem_breakdown_mb: (f64, f64, f64),
+    pub fit: f64,
+}
+
+/// Distribute + run HOOI, collecting every figure's quantities at once.
+pub fn run_scheme(
+    w: &Workload,
+    scheme: &dyn Scheme,
+    p: usize,
+    k: usize,
+    invocations: usize,
+    engine: &Engine,
+    net: NetModel,
+    seed: u64,
+) -> RunRecord {
+    let mut rng = Rng::new(seed);
+    let dist = scheme.distribute(&w.tensor, &w.idx, p, &mut rng);
+    run_distribution(w, &dist, k, invocations, engine, net, seed)
+}
+
+/// Run HOOI under an already-constructed distribution.
+pub fn run_distribution(
+    w: &Workload,
+    dist: &Distribution,
+    k: usize,
+    invocations: usize,
+    engine: &Engine,
+    net: NetModel,
+    seed: u64,
+) -> RunRecord {
+    let mut cluster = SimCluster::new(dist.p).with_net(net);
+    cluster.elapsed.add(cat::DIST, dist.time.simulated_secs);
+    let cfg = HooiConfig { k, invocations, seed };
+    let out: HooiOutcome =
+        run_hooi(&w.tensor, &w.idx, dist, engine, &mut cluster, &cfg);
+    let metrics = SchemeMetrics::compute(&w.tensor, &w.idx, dist);
+    let khat: Vec<f64> = (0..w.tensor.ndim())
+        .map(|_| (k as f64).powi(w.tensor.ndim() as i32 - 1))
+        .collect();
+    let comm_secs = cluster.elapsed.get(cat::COMM_SVD)
+        + cluster.elapsed.get(cat::COMM_FM)
+        + cluster.elapsed.get(cat::COMM_COMMON);
+    RunRecord {
+        workload: w.name.clone(),
+        scheme: dist.scheme.clone(),
+        p: dist.p,
+        k,
+        hooi_secs: cluster.elapsed.get(cat::TTM)
+            + cluster.elapsed.get(cat::SVD)
+            + comm_secs,
+        ttm_secs: cluster.elapsed.get(cat::TTM),
+        svd_secs: cluster.elapsed.get(cat::SVD),
+        comm_secs,
+        dist_secs: dist.time.simulated_secs,
+        svd_volume: cluster.volume.get(cat::COMM_SVD),
+        fm_volume: cluster.volume.get(cat::COMM_FM),
+        ttm_balance: metrics.ttm_balance(),
+        svd_load_norm: metrics.svd_load_normalized(&khat),
+        svd_balance: metrics.svd_balance(&khat),
+        mem_mb: out.memory.avg_total_mb(),
+        mem_breakdown_mb: out.memory.avg_component_mb(),
+        fit: out.fit,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CoarseG, Lite};
+    use crate::tensor::datasets::by_name;
+
+    fn tiny_workload() -> Workload {
+        let spec = by_name("enron").unwrap().scaled(0.02);
+        Workload::from_spec(&spec, 1.0)
+    }
+
+    #[test]
+    fn run_record_is_consistent() {
+        let w = tiny_workload();
+        let rec = run_scheme(
+            &w,
+            &Lite,
+            4,
+            4,
+            1,
+            &Engine::Native,
+            NetModel::default(),
+            1,
+        );
+        assert!(rec.hooi_secs > 0.0);
+        assert!((rec.ttm_secs + rec.svd_secs + rec.comm_secs - rec.hooi_secs).abs() < 1e-9);
+        assert!(rec.ttm_balance >= 1.0);
+        assert!(rec.svd_load_norm >= 1.0);
+        assert!(rec.mem_mb > 0.0);
+        assert_eq!(rec.scheme, "Lite");
+    }
+
+    #[test]
+    fn coarseg_optimal_redundancy_lite_near() {
+        let w = tiny_workload();
+        let rc = run_scheme(&w, &CoarseG::default(), 4, 4, 1, &Engine::Native, NetModel::default(), 1);
+        let rl = run_scheme(&w, &Lite, 4, 4, 1, &Engine::Native, NetModel::default(), 1);
+        assert!((rc.svd_load_norm - 1.0).abs() < 1e-9, "CoarseG redundancy 1.0");
+        assert!(rl.svd_load_norm < 1.5, "Lite near-optimal: {}", rl.svd_load_norm);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown() {
+        let job = JobSpec { dataset: "not-a-tensor".into(), ..Default::default() };
+        assert!(Workload::resolve(&job).is_err());
+    }
+
+    #[test]
+    fn workload_from_spec_scales() {
+        let spec = by_name("nell2").unwrap();
+        let w = Workload::from_spec(&spec, 0.01);
+        assert!(w.tensor.nnz() < spec.nnz);
+        assert_eq!(w.idx.len(), 3);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: job specs (config + CLI), the pipeline leader
+//! (dataset → scheme → simulated cluster → HOOI → record) and the
+//! experiment harness regenerating every table/figure of §7.
+
+pub mod experiments;
+pub mod job;
+pub mod leader;
+
+pub use experiments::{run_figure, ExpConfig};
+pub use job::JobSpec;
+pub use leader::{run_distribution, run_scheme, RunRecord, Workload};

@@ -1,0 +1,189 @@
+//! Factor-matrix transfer (paper §3/§4.2): after the SVD step, each new
+//! row F̃_n[l,:] lives at its owner σ_n(l) and must reach every rank that
+//! needs it for the next invocation's TTM.
+//!
+//! Who needs row l?
+//! - uni-policy: the ranks sharing Slice_n^l under the single policy π
+//!   (volume K_n · (R_n^sum − L_n), determined by the metric — §4.2);
+//! - multi-policy: the ranks owning an element of Slice_n^l under *any*
+//!   π_j with j ≠ n — not expressible through the metrics, so it is
+//!   measured empirically here, exactly as the paper does.
+
+use crate::sched::{Distribution, RowMap};
+use crate::tensor::SliceIndex;
+
+/// Query-invariant transfer pattern for one mode (precomputed once).
+#[derive(Debug, Clone)]
+pub struct FmPattern {
+    /// Per-rank sends: (messages, units) for the cluster's p2p accounting.
+    pub per_rank: Vec<(u64, u64)>,
+    /// Rows of F_n each rank must store (needers ∪ owners) — memory model.
+    pub stored_rows: Vec<u64>,
+    /// Total transfer volume in units (Σ (needers−1)·K_n).
+    pub total_units: u64,
+}
+
+/// Build the transfer pattern for mode `n`.
+pub fn fm_pattern(
+    idx_n: &SliceIndex,
+    dist: &Distribution,
+    n: usize,
+    rowmap: &RowMap,
+    k_n: usize,
+) -> FmPattern {
+    let p = dist.p;
+    let l_n = idx_n.num_slices();
+    let mut per_rank = vec![(0u64, 0u64); p];
+    let mut stored = vec![0u64; p];
+    let mut total = 0u64;
+    // stamp[r] = current slice marker, avoids per-slice clearing
+    let mut stamp = vec![u32::MAX; p];
+    for l in 0..l_n {
+        let owner = rowmap.of(l) as usize;
+        let marker = l as u32;
+        let mut needers = 0u64;
+        let mut owner_needs = false;
+        for &e in idx_n.slice(l) {
+            for (j, pol) in dist.policies.iter().enumerate() {
+                if j == n {
+                    continue;
+                }
+                let r = pol.assign[e as usize] as usize;
+                if stamp[r] != marker {
+                    stamp[r] = marker;
+                    needers += 1;
+                    stored[r] += 1;
+                    if r == owner {
+                        owner_needs = true;
+                    }
+                }
+                if dist.uni {
+                    break; // all policies identical: one pass suffices
+                }
+            }
+        }
+        if !owner_needs && needers > 0 {
+            stored[owner] += 1; // the owner also keeps its produced row
+        }
+        let sends = needers.saturating_sub(if owner_needs { 1 } else { 0 });
+        if sends > 0 {
+            per_rank[owner].0 += sends;
+            per_rank[owner].1 += sends * k_n as u64;
+            total += sends * k_n as u64;
+        }
+    }
+    FmPattern { per_rank, stored_rows: stored, total_units: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::metrics::{ModeMetrics, Sharers};
+    use crate::sched::policy::{DistTime, Distribution, ModePolicy};
+    use crate::tensor::slices::build_all;
+    use crate::tensor::SparseTensor;
+    use crate::util::rng::Rng;
+
+    fn random_setup(p: usize, seed: u64) -> (SparseTensor, Vec<SliceIndex>) {
+        let mut rng = Rng::new(seed);
+        let t = SparseTensor::random(vec![25, 15, 10], 800, &mut rng);
+        let _ = p;
+        let idx = build_all(&t);
+        (t, idx)
+    }
+
+    fn uni_dist(t: &SparseTensor, p: usize, seed: u64) -> Distribution {
+        let mut rng = Rng::new(seed);
+        let assign: Vec<u32> =
+            (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect();
+        Distribution {
+            scheme: "uni".into(),
+            p,
+            policies: vec![ModePolicy { p, assign }; t.ndim()],
+            uni: true,
+            time: DistTime::default(),
+        }
+    }
+
+    #[test]
+    fn uni_policy_volume_matches_metric_formula() {
+        // §4.2: uni-policy FM volume = K_n (R_n^sum − L_n), with owners
+        // chosen among sharers (σ_n construction guarantees it).
+        let p = 4;
+        let (t, idx) = random_setup(p, 1);
+        let dist = uni_dist(&t, p, 2);
+        let k_n = 5;
+        for n in 0..t.ndim() {
+            let sharers = Sharers::build(&idx[n], &dist.policies[n]);
+            let rowmap = RowMap::build(&sharers, p);
+            let m = ModeMetrics::from_sharers(&idx[n], &dist.policies[n], &sharers);
+            let pat = fm_pattern(&idx[n], &dist, n, &rowmap, k_n);
+            let want = (k_n * (m.r_sum - m.l_nonempty)) as u64;
+            assert_eq!(pat.total_units, want, "mode {n}");
+        }
+    }
+
+    #[test]
+    fn multi_policy_volume_counts_union_of_other_modes() {
+        // two ranks, multi-policy: mode-0 rows are needed wherever modes
+        // 1..N-1 placed the slice's elements.
+        let mut t = SparseTensor::new(vec![2, 2, 2]);
+        t.push(&[0, 0, 0], 1.0);
+        t.push(&[0, 1, 1], 1.0);
+        t.push(&[1, 0, 1], 1.0);
+        let idx = build_all(&t);
+        let p = 2;
+        // mode 0 policy: e0,e1 -> r0; e2 -> r1
+        // mode 1 policy: e0 -> r1, e1 -> r0, e2 -> r1
+        // mode 2 policy: e0 -> r0, e1 -> r1, e2 -> r0
+        let dist = Distribution {
+            scheme: "multi".into(),
+            p,
+            policies: vec![
+                ModePolicy { p, assign: vec![0, 0, 1] },
+                ModePolicy { p, assign: vec![1, 0, 1] },
+                ModePolicy { p, assign: vec![0, 1, 0] },
+            ],
+            uni: false,
+            time: DistTime::default(),
+        };
+        let sharers = Sharers::build(&idx[0], &dist.policies[0]);
+        let rowmap = RowMap::build(&sharers, p);
+        let k_n = 3;
+        let pat = fm_pattern(&idx[0], &dist, 0, &rowmap, k_n);
+        // slice 0 (e0,e1): needers via π_1 {r1, r0}, via π_2 {r0, r1} -> {0,1}
+        // slice 1 (e2): needers via π_1 {r1}, via π_2 {r0} -> {0,1}
+        // each slice sends to 1 non-owner -> total = 2 rows * k_n
+        assert_eq!(pat.total_units, (2 * k_n) as u64);
+        // both ranks store both rows
+        assert_eq!(pat.stored_rows, vec![2, 2]);
+    }
+
+    #[test]
+    fn empty_slices_send_nothing() {
+        let mut t = SparseTensor::new(vec![10, 3, 3]);
+        t.push(&[0, 0, 0], 1.0);
+        t.push(&[9, 2, 2], 1.0);
+        let idx = build_all(&t);
+        let dist = uni_dist(&t, 2, 3);
+        let sharers = Sharers::build(&idx[0], &dist.policies[0]);
+        let rowmap = RowMap::build(&sharers, 2);
+        let pat = fm_pattern(&idx[0], &dist, 0, &rowmap, 4);
+        // only 2 nonempty slices, each with exactly 1 sharer (single elem)
+        assert_eq!(pat.total_units, 0);
+    }
+
+    #[test]
+    fn stored_rows_at_least_owned() {
+        let p = 3;
+        let (t, idx) = random_setup(p, 4);
+        let dist = uni_dist(&t, p, 5);
+        let sharers = Sharers::build(&idx[0], &dist.policies[0]);
+        let rowmap = RowMap::build(&sharers, p);
+        let pat = fm_pattern(&idx[0], &dist, 0, &rowmap, 4);
+        let total_stored: u64 = pat.stored_rows.iter().sum();
+        // every nonempty slice is stored by each of its sharers exactly once
+        let m = ModeMetrics::from_sharers(&idx[0], &dist.policies[0], &sharers);
+        assert_eq!(total_stored, m.r_sum as u64);
+    }
+}

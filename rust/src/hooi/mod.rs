@@ -1,0 +1,14 @@
+//! The distributed HOOI procedure (paper Fig 2) on the Kaya–Uçar framework
+//! (§3): TTM via the Kronecker reformulation, matrix-free Lanczos SVD over
+//! the sum-distributed penultimate matrix, factor-matrix transfer, and the
+//! end-of-run core computation.
+
+pub mod driver;
+pub mod fm;
+pub mod lanczos;
+pub mod ttm;
+
+pub use driver::{prepare_modes, run_hooi, HooiConfig, HooiOutcome, MemoryReport, ModeState};
+pub use fm::{fm_pattern, FmPattern};
+pub use lanczos::{lanczos_svd, LanczosResult, Oracle};
+pub use ttm::{assemble_local_z, assemble_local_z_fused, dense_penultimate, khat, LocalZ};

@@ -1,0 +1,319 @@
+//! TTM component (paper §3): per-mode assembly of the *truncated local
+//! penultimate matrix* Z^p via the Kronecker-product reformulation (Eq. 1):
+//!
+//!   Z_(n)[l,:] = Σ_{e ∈ Slice_n^l} contr_n(e),
+//!   contr_n(e) = val(e) · ⊗_{j≠n} F_j[l_j,:]
+//!
+//! Each rank p materializes only the rows of slices it shares (R_n^p rows)
+//! — the truncation that makes the SVD oracle cheap. The contribution
+//! batches run through the compute engine (PJRT artifacts on the hot path,
+//! native reference otherwise); the gather of factor rows and the
+//! scatter-add into Z^p stay in rust.
+
+use crate::linalg::{axpy, Mat};
+use crate::runtime::Engine;
+use crate::tensor::SparseTensor;
+
+/// Truncated local penultimate matrix of one rank.
+#[derive(Debug, Clone)]
+pub struct LocalZ {
+    /// Global slice index of each local row, ascending.
+    pub rows: Vec<u32>,
+    /// R^p × K̂ dense local copy.
+    pub z: Mat,
+}
+
+impl LocalZ {
+    pub fn empty(khat: usize) -> LocalZ {
+        LocalZ { rows: Vec::new(), z: Mat::zeros(0, khat) }
+    }
+
+    /// Local row index of global slice l (binary search).
+    #[inline]
+    pub fn local_row(&self, l: u32) -> Option<usize> {
+        self.rows.binary_search(&l).ok()
+    }
+}
+
+/// Modes other than `n`, ascending — the Kronecker factor order
+/// (layout contract: earliest mode fastest; see python kernels/ref.py).
+pub fn other_modes(ndim: usize, n: usize) -> Vec<usize> {
+    (0..ndim).filter(|&m| m != n).collect()
+}
+
+/// K̂_n = Π_{j≠n} K_j for a uniform core length K.
+pub fn khat(k: usize, ndim: usize) -> usize {
+    k.pow(ndim as u32 - 1)
+}
+
+/// Assemble Z^p for `mode` from the rank's elements, batching the
+/// Kronecker contributions through `engine`.
+pub fn assemble_local_z(
+    t: &SparseTensor,
+    mode: usize,
+    elems: &[u32],
+    factors: &[Mat],
+    k: usize,
+    engine: &Engine,
+) -> LocalZ {
+    if engine.prefers_fused_ttm() {
+        // §Perf: the native engine skips the batch materialization the
+        // fixed-shape PJRT contract requires (ablate_runtime quantifies).
+        return assemble_local_z_fused(t, mode, elems, factors, k);
+    }
+    let ndim = t.ndim();
+    let kh = khat(k, ndim);
+    // local row mapping: sorted distinct slice coords of this rank
+    let mut rows: Vec<u32> = elems.iter().map(|&e| t.coord(mode, e as usize)).collect();
+    rows.sort_unstable();
+    rows.dedup();
+    let mut z = Mat::zeros(rows.len(), kh);
+    if elems.is_empty() {
+        return LocalZ { rows, z };
+    }
+    let others = other_modes(ndim, mode);
+    let bsz = engine.ttm_batch_size(ndim, k);
+    let mut rows_a = vec![0.0f32; bsz * k];
+    let mut rows_b = vec![0.0f32; bsz * k];
+    let mut rows_c = vec![0.0f32; bsz * k]; // 4-D only
+    let mut vals = vec![0.0f32; bsz];
+    let mut targets = vec![0u32; bsz];
+    let mut fill = 0usize;
+
+    let flush = |fill: usize,
+                     rows_a: &[f32],
+                     rows_b: &[f32],
+                     rows_c: &[f32],
+                     vals: &mut [f32],
+                     targets: &[u32],
+                     z: &mut Mat| {
+        if fill == 0 {
+            return;
+        }
+        // zero-val padding rows contribute nothing by construction
+        for v in vals[fill..].iter_mut() {
+            *v = 0.0;
+        }
+        let contribs = if ndim == 3 {
+            engine.kron3_batch(k, rows_a, rows_b, vals)
+        } else {
+            engine.kron4_batch(k, rows_a, rows_b, rows_c, vals)
+        };
+        for i in 0..fill {
+            let target = targets[i] as usize;
+            axpy(1.0, &contribs[i * kh..(i + 1) * kh], z.row_mut(target));
+        }
+    };
+
+    for &eu in elems {
+        let e = eu as usize;
+        let l = t.coord(mode, e);
+        let target = rows.binary_search(&l).expect("row mapping complete") as u32;
+        // gather factor rows in ascending other-mode order
+        for (slot, &m) in others.iter().enumerate() {
+            let frow = factors[m].row(t.coord(m, e) as usize);
+            let dst = match slot {
+                0 => &mut rows_a[fill * k..(fill + 1) * k],
+                1 => &mut rows_b[fill * k..(fill + 1) * k],
+                _ => &mut rows_c[fill * k..(fill + 1) * k],
+            };
+            dst.copy_from_slice(frow);
+        }
+        vals[fill] = t.vals[e];
+        targets[fill] = target;
+        fill += 1;
+        if fill == bsz {
+            flush(fill, &rows_a, &rows_b, &rows_c, &mut vals, &targets, &mut z);
+            fill = 0;
+        }
+    }
+    flush(fill, &rows_a, &rows_b, &rows_c, &mut vals, &targets, &mut z);
+    LocalZ { rows, z }
+}
+
+/// Fused native assembly: accumulates each element's outer product
+/// directly into its Z^p row without materializing the contribution batch.
+/// Baseline for the runtime ablation (benches/ablate_runtime.rs).
+pub fn assemble_local_z_fused(
+    t: &SparseTensor,
+    mode: usize,
+    elems: &[u32],
+    factors: &[Mat],
+    k: usize,
+) -> LocalZ {
+    let ndim = t.ndim();
+    let kh = khat(k, ndim);
+    let mut rows: Vec<u32> = elems.iter().map(|&e| t.coord(mode, e as usize)).collect();
+    rows.sort_unstable();
+    rows.dedup();
+    let mut z = Mat::zeros(rows.len(), kh);
+    let others = other_modes(ndim, mode);
+    for &eu in elems {
+        let e = eu as usize;
+        let l = t.coord(mode, e);
+        let target = rows.binary_search(&l).unwrap();
+        let v = t.vals[e];
+        let zrow = z.row_mut(target);
+        match others.len() {
+            2 => {
+                let ra = factors[others[0]].row(t.coord(others[0], e) as usize);
+                let rb = factors[others[1]].row(t.coord(others[1], e) as usize);
+                for (cb, &bv) in rb.iter().enumerate() {
+                    let w = v * bv;
+                    let seg = &mut zrow[cb * k..(cb + 1) * k];
+                    for (ca, &av) in ra.iter().enumerate() {
+                        seg[ca] += w * av;
+                    }
+                }
+            }
+            3 => {
+                let ra = factors[others[0]].row(t.coord(others[0], e) as usize);
+                let rb = factors[others[1]].row(t.coord(others[1], e) as usize);
+                let rc = factors[others[2]].row(t.coord(others[2], e) as usize);
+                for (cc, &cv) in rc.iter().enumerate() {
+                    let wv = v * cv;
+                    for (cb, &bv) in rb.iter().enumerate() {
+                        let w = wv * bv;
+                        let base = (cc * k + cb) * k;
+                        let seg = &mut zrow[base..base + k];
+                        for (ca, &av) in ra.iter().enumerate() {
+                            seg[ca] += w * av;
+                        }
+                    }
+                }
+            }
+            _ => panic!("HOOI supports 3-D and 4-D tensors"),
+        }
+    }
+    LocalZ { rows, z }
+}
+
+/// Dense reference: the full penultimate matrix Z_(n) (L_n × K̂), summing
+/// every element's contribution — the correctness oracle for the
+/// distributed assembly (global Z must equal the sum of local copies).
+pub fn dense_penultimate(t: &SparseTensor, mode: usize, factors: &[Mat], k: usize) -> Mat {
+    let all: Vec<u32> = (0..t.nnz() as u32).collect();
+    let local = assemble_local_z_fused(t, mode, &all, factors, k);
+    // scatter local rows into the full L_n × K̂ matrix
+    let mut full = Mat::zeros(t.dims[mode] as usize, khat(k, t.ndim()));
+    for (r, &l) in local.rows.iter().enumerate() {
+        full.row_mut(l as usize).copy_from_slice(local.z.row(r));
+    }
+    full
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormal_random;
+    use crate::util::rng::Rng;
+
+    fn setup(dims: Vec<u32>, nnz: usize, k: usize, seed: u64) -> (SparseTensor, Vec<Mat>) {
+        let mut rng = Rng::new(seed);
+        let t = SparseTensor::random(dims, nnz, &mut rng);
+        let factors = t
+            .dims
+            .iter()
+            .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+            .collect();
+        (t, factors)
+    }
+
+    #[test]
+    fn batched_matches_fused_3d() {
+        let (t, factors) = setup(vec![12, 9, 7], 400, 5, 1);
+        let elems: Vec<u32> = (0..400).collect();
+        for mode in 0..3 {
+            let a =
+                assemble_local_z(&t, mode, &elems, &factors, 5, &Engine::NativeBatched);
+            let b = assemble_local_z_fused(&t, mode, &elems, &factors, 5);
+            assert_eq!(a.rows, b.rows);
+            assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn batched_matches_fused_4d() {
+        let (t, factors) = setup(vec![8, 6, 5, 4], 300, 3, 2);
+        let elems: Vec<u32> = (0..300).collect();
+        for mode in 0..4 {
+            let a =
+                assemble_local_z(&t, mode, &elems, &factors, 3, &Engine::NativeBatched);
+            let b = assemble_local_z_fused(&t, mode, &elems, &factors, 3);
+            assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn local_copies_sum_to_global() {
+        // Eq. 1 / §3: the global penultimate matrix is the sum of the
+        // per-rank local copies, whatever the element partition.
+        let (t, factors) = setup(vec![10, 8, 6], 500, 4, 3);
+        let mut rng = Rng::new(9);
+        let p = 4;
+        let assign: Vec<u32> = (0..t.nnz()).map(|_| rng.below(p) as u32).collect();
+        let mode = 1;
+        let dense = dense_penultimate(&t, mode, &factors, 4);
+        let mut summed = Mat::zeros(dense.rows, dense.cols);
+        for rank in 0..p as u32 {
+            let elems: Vec<u32> = (0..t.nnz() as u32)
+                .filter(|&e| assign[e as usize] == rank)
+                .collect();
+            let local = assemble_local_z(&t, mode, &elems, &factors, 4, &Engine::Native);
+            for (r, &l) in local.rows.iter().enumerate() {
+                axpy(1.0, local.z.row(r), summed.row_mut(l as usize));
+            }
+        }
+        assert!(summed.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn truncation_only_stores_shared_slices() {
+        let (t, factors) = setup(vec![50, 8, 6], 60, 4, 4);
+        let elems: Vec<u32> = (0..10).collect();
+        let local = assemble_local_z(&t, 0, &elems, &factors, 4, &Engine::Native);
+        assert!(local.rows.len() <= 10);
+        assert_eq!(local.z.rows, local.rows.len());
+        // every stored row corresponds to a slice this rank touches
+        for &e in &elems {
+            assert!(local.local_row(t.coord(0, e as usize)).is_some());
+        }
+    }
+
+    #[test]
+    fn ttm_mode_unfolding_identity() {
+        // For a tensor with a single element of value v at (i, j, k),
+        // Z_(0)[i, :] = v * F1[j,:] ⊗ F2[k,:] with mode-1 fastest.
+        let mut t = SparseTensor::new(vec![3, 4, 5]);
+        t.push(&[2, 1, 3], 2.0);
+        let mut rng = Rng::new(5);
+        let k = 3;
+        let factors: Vec<Mat> = t
+            .dims
+            .iter()
+            .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+            .collect();
+        let dense = dense_penultimate(&t, 0, &factors, k);
+        let f1 = factors[1].row(1);
+        let f2 = factors[2].row(3);
+        for c2 in 0..k {
+            for c1 in 0..k {
+                let want = 2.0 * f1[c1] * f2[c2];
+                let got = dense.get(2, c1 + c2 * k);
+                assert!((got - want).abs() < 1e-5);
+            }
+        }
+        // all other rows zero
+        for l in [0usize, 1] {
+            assert!(dense.row(l).iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn empty_rank_is_empty_local() {
+        let (t, factors) = setup(vec![5, 5, 5], 50, 3, 6);
+        let local = assemble_local_z(&t, 0, &[], &factors, 3, &Engine::Native);
+        assert_eq!(local.rows.len(), 0);
+        assert_eq!(local.z.rows, 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! # tucker-lite
+//!
+//! Distributed Tucker decomposition (HOOI) for sparse tensors, reproducing
+//! *"On Optimizing Distributed Tucker Decomposition for Sparse Tensors"*
+//! (Chakaravarthy et al., cs.DC 2018): the lightweight, provably
+//! near-optimal **Lite** distribution scheme, the prior schemes it is
+//! evaluated against (CoarseG, MediumG, HyperG), the Kaya–Uçar distributed
+//! HOOI framework they all plug into, and the full experiment harness for
+//! the paper's evaluation section.
+//!
+//! Architecture (DESIGN.md): a rust L3 coordinator owns the distribution
+//! schemes, the simulated distributed runtime, and the HOOI driver; the
+//! compute hot spots (batched Kronecker contributions, Lanczos matvec
+//! tiles) are JAX/Pallas graphs AOT-lowered to HLO and executed through
+//! the PJRT CPU client (`runtime`) — Python never runs at decomposition
+//! time.
+//!
+//! Quick tour:
+//! - [`tensor`]: COO sparse tensors, slice indexing, FROSTT I/O, the Fig 9
+//!   synthetic dataset analogues.
+//! - [`sched`]: the distribution schemes + the paper's metrics
+//!   (E_max, R_sum, R_max) and the σ_n row-index mapping.
+//! - [`dist`]: the simulated P-rank cluster (makespan timing, α–β comms).
+//! - [`hooi`]: TTM via Eq. 1 contributions, Lanczos-bidiagonalization SVD,
+//!   factor-matrix transfer, the full HOOI driver.
+//! - [`runtime`]: PJRT artifact registry + padded-batch dispatch.
+//! - [`coordinator`]: job specs, the pipeline leader, experiment harness.
+
+pub mod coordinator;
+pub mod dist;
+pub mod hooi;
+pub mod linalg;
+pub mod runtime;
+pub mod sched;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,211 @@
+//! Dense row-major f32 matrices + the vector kernels HOOI needs.
+//!
+//! This replaces the paper's ATLAS dependency for everything outside the
+//! PJRT-compiled hot path: factor matrices, Lanczos state, small SVDs.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.row_mut(i).copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// C = A * B (naive triple loop with the k-loop innermost over rows of
+    /// B — row-major friendly; adequate for the small matrices on this
+    /// path, the big multiplies go through PJRT).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = c.row_mut(i);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    crow[j] += aik * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// y = A x
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|r| dot(self.row(r), x)).collect()
+    }
+
+    /// y = A^T x
+    pub fn tmatvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0f32; self.cols];
+        for (r, &xr) in x.iter().enumerate() {
+            if xr == 0.0 {
+                continue;
+            }
+            axpy(xr, self.row(r), &mut y);
+        }
+        y
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Column c as an owned vector.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Keep the first k columns.
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        Mat::from_fn(self.rows, k, |r, c| self.get(r, c))
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, b: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // accumulate in f64 for stable Lanczos coefficients
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum::<f64>() as f32
+}
+
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_and_tmatvec_agree_with_transpose() {
+        let a = Mat::from_fn(4, 3, |r, c| (r * 3 + c) as f32 * 0.5 - 1.0);
+        let x3 = vec![1.0, -2.0, 0.5];
+        let x4 = vec![0.25, 1.0, -1.0, 2.0];
+        assert_eq!(a.matvec(&x3), a.transpose().tmatvec(&x3));
+        assert_eq!(a.tmatvec(&x4), a.transpose().matvec(&x4));
+    }
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        let a = Mat::from_fn(3, 3, |r, c| (r + 2 * c) as f32);
+        let i = Mat::identity(3);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(5, 2, |r, c| (r * 7 + c * 3) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn dot_axpy_norm() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, -1.0], &mut y);
+        assert_eq!(y, vec![7.0, -1.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn take_cols_prefix() {
+        let a = Mat::from_fn(2, 4, |r, c| (10 * r + c) as f32);
+        let b = a.take_cols(2);
+        assert_eq!(b.data, vec![0.0, 1.0, 10.0, 11.0]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dense linear algebra substrate (the paper uses ATLAS; we build the
+//! pieces HOOI needs from scratch — see DESIGN.md §2).
+
+pub mod dense;
+pub mod qr;
+pub mod svd;
+
+pub use dense::{axpy, dot, norm2, scale, Mat};
+pub use qr::{orthonormal_random, qr_mgs};
+pub use svd::{svd, Svd};

@@ -1,0 +1,111 @@
+//! Thin QR via modified Gram-Schmidt with one reorthogonalization pass.
+//!
+//! Used to orthonormalize random initial factor matrices (HOOI bootstrap,
+//! paper §2.2: "a random set of factor matrices can also be used") and in
+//! tests as an orthogonality oracle.
+
+use super::dense::{axpy, dot, norm2, scale, Mat};
+
+/// Returns (Q, R) with A = Q R, Q: m×n column-orthonormal (requires m ≥ n).
+pub fn qr_mgs(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin QR needs rows >= cols");
+    // work on columns
+    let mut q: Vec<Vec<f32>> = (0..n).map(|j| a.col(j)).collect();
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        // two MGS passes for numerical robustness
+        for _pass in 0..2 {
+            for i in 0..j {
+                let rij = dot(&q[i], &q[j]);
+                r.set(i, j, r.get(i, j) + rij);
+                let qi = q[i].clone();
+                axpy(-rij, &qi, &mut q[j]);
+            }
+        }
+        let nrm = norm2(&q[j]) as f32;
+        r.set(j, j, nrm);
+        if nrm > 0.0 {
+            scale(1.0 / nrm, &mut q[j]);
+        }
+    }
+    let mut qm = Mat::zeros(m, n);
+    for (j, col) in q.iter().enumerate() {
+        for i in 0..m {
+            qm.set(i, j, col[i]);
+        }
+    }
+    (qm, r)
+}
+
+/// Column-orthonormalize a random matrix (bootstrap factor matrices).
+///
+/// When `rows < cols` (a scaled-down analogue can have L_n < K; the
+/// paper's tensors never do) only the first `rows` columns can be
+/// orthonormal — the remainder are zero, which keeps every downstream
+/// computation well-defined: zero factor columns contribute nothing to
+/// Kronecker rows, and the SVD step naturally reproduces rank ≤ L_n.
+pub fn orthonormal_random(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng) -> Mat {
+    let rank = cols.min(rows);
+    let a = Mat::from_fn(rows, rank, |_, _| rng.normal() as f32);
+    let q = qr_mgs(&a).0;
+    if rank == cols {
+        return q;
+    }
+    Mat::from_fn(rows, cols, |r, c| if c < rank { q.get(r, c) } else { 0.0 })
+}
+
+/// ||Q^T Q - I||_max — orthogonality defect, used by tests.
+pub fn ortho_defect(q: &Mat) -> f32 {
+    let qtq = q.transpose().matmul(q);
+    let mut worst = 0.0f32;
+    for i in 0..qtq.rows {
+        for j in 0..qtq.cols {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((qtq.get(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(5);
+        let a = Mat::from_fn(20, 6, |_, _| rng.normal() as f32);
+        let (q, r) = qr_mgs(&a);
+        let back = q.matmul(&r);
+        assert!(back.max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(6);
+        let a = Mat::from_fn(50, 10, |_, _| rng.normal() as f32);
+        let (q, _) = qr_mgs(&a);
+        assert!(ortho_defect(&q) < 1e-5);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(7);
+        let a = Mat::from_fn(12, 5, |_, _| rng.normal() as f32);
+        let (_, r) = qr_mgs(&a);
+        for i in 0..r.rows {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal_random_is_orthonormal() {
+        let mut rng = Rng::new(8);
+        let q = orthonormal_random(40, 8, &mut rng);
+        assert!(ortho_defect(&q) < 1e-5);
+    }
+}

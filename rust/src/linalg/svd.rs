@@ -1,0 +1,191 @@
+//! One-sided Jacobi SVD for small dense matrices.
+//!
+//! The HOOI SVD step runs Lanczos bidiagonalization over the distributed
+//! penultimate matrix (hooi::lanczos); what remains is the SVD of the tiny
+//! J×J projected matrix (J = 2K ≤ 40), which this module solves directly.
+//! One-sided Jacobi is simple, backward-stable and accurate for small
+//! matrices — the role SLEPc's dense kernels play in the paper's stack.
+
+use super::dense::{dot, norm2, scale, Mat};
+
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// Left singular vectors, m×r (columns).
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+    /// Right singular vectors, n×r (columns of V, not V^T).
+    pub v: Mat,
+}
+
+/// Compute the thin SVD of `a` (m×n, any shape) via one-sided Jacobi on the
+/// taller orientation. r = min(m, n).
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        // A = U S V^T  =>  A^T = V S U^T
+        let t = svd_tall(&a.transpose());
+        Svd { u: t.v, s: t.s, v: t.u }
+    }
+}
+
+fn svd_tall(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    debug_assert!(m >= n);
+    // Work columns of A; V accumulates the rotations.
+    let mut cols: Vec<Vec<f32>> = (0..n).map(|j| a.col(j)).collect();
+    let mut v = Mat::identity(n);
+    let eps = 1e-10f64;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let alpha = dot(&cols[p], &cols[p]) as f64;
+                let beta = dot(&cols[q], &cols[q]) as f64;
+                let gamma = dot(&cols[p], &cols[q]) as f64;
+                if alpha * beta == 0.0 {
+                    continue;
+                }
+                off = off.max(gamma.abs() / (alpha * beta).sqrt());
+                if gamma.abs() <= eps * (alpha * beta).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let (cp, cq) = (cols[p][i], cols[q][i]);
+                    cols[p][i] = cf * cp - sf * cq;
+                    cols[q][i] = sf * cp + cf * cq;
+                }
+                for i in 0..n {
+                    let (vp, vq) = (v.get(i, p), v.get(i, q));
+                    v.set(i, p, cf * vp - sf * vq);
+                    v.set(i, q, sf * vp + cf * vq);
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // singular values = column norms; U = normalized columns
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols.iter().map(|c| norm2(c)).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut vv = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (slot, &j) in order.iter().enumerate() {
+        let nrm = norms[j];
+        s.push(nrm as f32);
+        let mut col = cols[j].clone();
+        if nrm > 0.0 {
+            scale(1.0 / nrm as f32, &mut col);
+        }
+        for i in 0..m {
+            u.set(i, slot, col[i]);
+        }
+        for i in 0..n {
+            vv.set(i, slot, v.get(i, j));
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+impl Svd {
+    /// Reconstruct U diag(S) V^T.
+    pub fn reconstruct(&self) -> Mat {
+        let r = self.s.len();
+        let us = Mat::from_fn(self.u.rows, r, |i, j| self.u.get(i, j) * self.s[j]);
+        us.matmul(&self.v.transpose())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::ortho_defect;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_random_tall() {
+        let mut rng = Rng::new(31);
+        let a = Mat::from_fn(12, 5, |_, _| rng.normal() as f32);
+        let d = svd(&a);
+        assert!(d.reconstruct().max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn reconstructs_random_wide() {
+        let mut rng = Rng::new(32);
+        let a = Mat::from_fn(4, 9, |_, _| rng.normal() as f32);
+        let d = svd(&a);
+        assert!(d.reconstruct().max_abs_diff(&a) < 1e-4);
+        assert_eq!(d.s.len(), 4);
+    }
+
+    #[test]
+    fn singular_values_descend_and_factors_orthonormal() {
+        let mut rng = Rng::new(33);
+        let a = Mat::from_fn(20, 8, |_, _| rng.normal() as f32);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(ortho_defect(&d.u) < 1e-4);
+        assert!(ortho_defect(&d.v) < 1e-4);
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let a = Mat::from_fn(3, 3, |r, c| {
+            if r == c {
+                [3.0, 1.0, 2.0][r]
+            } else {
+                0.0
+            }
+        });
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-5);
+        assert!((d.s[1] - 2.0).abs() < 1e-5);
+        assert!((d.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rank_deficient_handled() {
+        // two identical columns -> one zero singular value
+        let a = Mat::from_rows(&[
+            vec![1.0, 1.0, 0.0],
+            vec![2.0, 2.0, 1.0],
+            vec![3.0, 3.0, 0.0],
+            vec![4.0, 4.0, 0.0],
+        ]);
+        let d = svd(&a);
+        assert!(d.s[2] < 1e-4, "smallest sv {}", d.s[2]);
+        assert!(d.reconstruct().max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn bidiagonal_case_matches_frobenius() {
+        // the shape hooi::lanczos feeds: upper bidiagonal J×J
+        let j = 8;
+        let mut rng = Rng::new(34);
+        let mut b = Mat::zeros(j, j);
+        for i in 0..j {
+            b.set(i, i, rng.f32() + 0.5);
+            if i + 1 < j {
+                b.set(i, i + 1, rng.f32());
+            }
+        }
+        let d = svd(&b);
+        let fro: f64 = b.frob_norm();
+        let sv_fro: f64 = d.s.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        assert!((fro - sv_fro).abs() < 1e-4);
+    }
+}

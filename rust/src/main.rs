@@ -1,0 +1,264 @@
+//! tucker-lite CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   decompose   run HOOI on a dataset under a scheme, print the record
+//!   distribute  construct a distribution and report the §4 metrics
+//!   datasets    the Fig 9 dataset table
+//!   exp         regenerate a paper figure: `exp --fig 10`
+//!   bench-kernel  micro-benchmark the TTM kernel paths (pjrt vs native)
+//!
+//! Common options: --dataset NAME|file.tns --scheme lite|coarseg|mediumg|
+//! hyperg --p N --k K --invocations I --scale S --engine pjrt|native
+//! --config FILE --alpha A --beta B --seed S
+
+use tucker_lite::coordinator::{experiments, JobSpec, RunRecord, Workload};
+use tucker_lite::runtime::Engine;
+use tucker_lite::sched;
+use tucker_lite::tensor::datasets;
+use tucker_lite::util::args::Args;
+use tucker_lite::util::config::Config;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::{fmt_secs, fmt_si, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let config = args.get("config").map(|path| {
+        Config::load(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+    });
+    let job = JobSpec::from_sources(config.as_ref(), &args);
+    match args.subcommand() {
+        Some("decompose") => decompose(&job, &args),
+        Some("distribute") => distribute(&job),
+        Some("datasets") => datasets::fig9_table().print(),
+        Some("exp") => exp(&job, &args),
+        Some("bench-kernel") => bench_kernel(&job, &args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "tucker-lite — distributed Tucker decomposition (HOOI) for sparse tensors\n\
+         \n\
+         USAGE: tucker-lite <decompose|distribute|datasets|exp|bench-kernel> [options]\n\
+         \n\
+         Options:\n\
+           --dataset NAME|file.tns   one of the Fig 9 analogues or a FROSTT file\n\
+           --scheme  lite|coarseg|coarseg-bpf|mediumg|hyperg\n\
+           --p N --k K --invocations I --scale S --seed S\n\
+           --engine pjrt|native      compute backend (default pjrt)\n\
+           --config FILE             key = value config (CLI overrides)\n\
+           --alpha A --beta B        network model parameters\n\
+           --fig N                   figure number for `exp` (9..17)\n\
+           --quick                   tiny configuration (smoke)\n"
+    );
+}
+
+fn make_engine(job: &JobSpec) -> Engine {
+    match job.engine.as_str() {
+        "native" => Engine::Native,
+        _ => {
+            let (e, label) = Engine::pjrt_or_native();
+            eprintln!("# engine: {label}");
+            e
+        }
+    }
+}
+
+fn decompose(job: &JobSpec, _args: &Args) {
+    let w = Workload::resolve(job).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let scheme = sched::by_name(&job.scheme).unwrap_or_else(|| {
+        eprintln!("unknown scheme {:?}", job.scheme);
+        std::process::exit(2);
+    });
+    eprintln!(
+        "# {} nnz={} dims={:?} scheme={} P={} K={} inv={}",
+        w.name,
+        w.tensor.nnz(),
+        w.tensor.dims,
+        scheme.name(),
+        job.p,
+        job.k,
+        job.invocations
+    );
+    let engine = make_engine(job);
+    let rec = tucker_lite::coordinator::run_scheme(
+        &w,
+        scheme.as_ref(),
+        job.p,
+        job.k,
+        job.invocations,
+        &engine,
+        job.net,
+        job.seed,
+    );
+    print_record(&rec);
+}
+
+fn print_record(rec: &RunRecord) {
+    let mut t = Table::new(
+        &format!("{} / {} (P={}, K={})", rec.workload, rec.scheme, rec.p, rec.k),
+        &["quantity", "value"],
+    );
+    t.row(vec!["HOOI time (simulated)".into(), fmt_secs(rec.hooi_secs)]);
+    t.row(vec!["  TTM compute".into(), fmt_secs(rec.ttm_secs)]);
+    t.row(vec!["  SVD compute".into(), fmt_secs(rec.svd_secs)]);
+    t.row(vec!["  communication".into(), fmt_secs(rec.comm_secs)]);
+    t.row(vec!["distribution time".into(), fmt_secs(rec.dist_secs)]);
+    t.row(vec!["SVD comm volume (units)".into(), fmt_si(rec.svd_volume)]);
+    t.row(vec!["FM comm volume (units)".into(), fmt_si(rec.fm_volume)]);
+    t.row(vec!["TTM balance (max/avg)".into(), format!("{:.2}", rec.ttm_balance)]);
+    t.row(vec!["SVD load (normalized)".into(), format!("{:.2}", rec.svd_load_norm)]);
+    t.row(vec!["SVD balance (max/avg)".into(), format!("{:.2}", rec.svd_balance)]);
+    t.row(vec!["memory MB/rank (avg)".into(), format!("{:.1}", rec.mem_mb)]);
+    t.row(vec!["fit".into(), format!("{:.4}", rec.fit)]);
+    t.print();
+}
+
+fn distribute(job: &JobSpec) {
+    let w = Workload::resolve(job).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let schemes: Vec<Box<dyn sched::Scheme>> = if job.scheme == "all" {
+        sched::all_schemes()
+    } else {
+        vec![sched::by_name(&job.scheme).unwrap_or_else(|| {
+            eprintln!("unknown scheme {:?}", job.scheme);
+            std::process::exit(2);
+        })]
+    };
+    let mut t = Table::new(
+        &format!("distribution metrics — {} P={} K={}", w.name, job.p, job.k),
+        &[
+            "scheme", "dist time", "TTM bal", "SVD load", "SVD bal", "SVD vol",
+            "FM vol", "mem MB",
+        ],
+    );
+    for rec in experiments::distribution_records(&w, &schemes, job.p, job.k, job.seed) {
+        let khv: Vec<f64> = (0..w.tensor.ndim())
+            .map(|_| (job.k as f64).powi(w.tensor.ndim() as i32 - 1))
+            .collect();
+        t.row(vec![
+            rec.scheme.clone(),
+            fmt_secs(rec.dist_secs),
+            format!("{:.2}", rec.metrics.ttm_balance()),
+            format!("{:.2}", rec.metrics.svd_load_normalized(&khv)),
+            format!("{:.2}", rec.metrics.svd_balance(&khv)),
+            fmt_si(rec.svd_volume),
+            fmt_si(rec.fm_volume),
+            format!("{:.1}", rec.mem_mb),
+        ]);
+    }
+    t.print();
+}
+
+fn exp(job: &JobSpec, args: &Args) {
+    let fig: usize = args.parse_or("fig", 0);
+    if fig == 0 {
+        eprintln!("exp requires --fig N (9..17)");
+        std::process::exit(2);
+    }
+    let mut cfg = if args.flag("quick") {
+        experiments::ExpConfig::quick()
+    } else {
+        experiments::ExpConfig::default()
+    };
+    cfg.scale = args.parse_or("scale", cfg.scale);
+    cfg.k = args.parse_or("k", cfg.k);
+    cfg.p_lo = args.parse_or("p-lo", cfg.p_lo);
+    cfg.p_hi = args.parse_or("p-hi", cfg.p_hi);
+    cfg.net = job.net;
+    let engine = make_engine(job);
+    println!("{}", experiments::run_figure(fig, &cfg, &engine));
+}
+
+/// Microbenchmark: PJRT vs native on the TTM contribution kernel + the
+/// matvec tiles (the two artifact families).
+fn bench_kernel(job: &JobSpec, args: &Args) {
+    let k = job.k;
+    let reps: usize = args.parse_or("reps", 20);
+    let (pjrt, label) = Engine::pjrt_or_native();
+    eprintln!("# engine under test: {label}");
+    let native = Engine::Native;
+    let b = pjrt.ttm_batch_size(3, k);
+    let mut rng = Rng::new(7);
+    let rows_a: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
+    let rows_b: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
+    let vals: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+    let mut t = Table::new(
+        &format!("kernel microbench (K={k}, B={b}, reps={reps})"),
+        &["kernel", "engine", "secs/call", "GFLOP/s"],
+    );
+    for (name, eng) in [("pjrt", &pjrt), ("native", &native)] {
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let out = eng.kron3_batch(k, &rows_a, &rows_b, &vals);
+            std::hint::black_box(out.len());
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let flops = (b * k * k) as f64; // one multiply per output element (+scale)
+        t.row(vec![
+            "kron3".into(),
+            name.into(),
+            fmt_secs(per),
+            format!("{:.2}", flops / per / 1e9),
+        ]);
+    }
+    // matvec tile
+    let khat = k * k;
+    let rt = match &pjrt {
+        Engine::Pjrt(r) => r.matvec_rtile(khat).unwrap_or(256),
+        _ => 256,
+    };
+    let z = tucker_lite::linalg::Mat::from_fn(rt, khat, |_, _| rng.normal() as f32);
+    let x: Vec<f32> = (0..khat).map(|_| rng.normal() as f32).collect();
+    for (name, eng) in [("pjrt", &pjrt), ("native", &native)] {
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let out = eng.local_matvec(&z, &x);
+            std::hint::black_box(out.len());
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let flops = (rt * khat * 2) as f64;
+        t.row(vec![
+            format!("matvec({rt}x{khat})"),
+            name.into(),
+            fmt_secs(per),
+            format!("{:.2}", flops / per / 1e9),
+        ]);
+    }
+    // device-resident Z variant (§Perf): upload once, execute_b per query
+    if let Engine::Pjrt(rtm) = &pjrt {
+        if let Ok(zdev) = rtm.upload_z(khat, rt, &z.data) {
+            let _ = rtm.matvec_dev(&zdev, &x); // warmup/compile
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                let out = rtm.matvec_dev(&zdev, &x).expect("matvec_dev");
+                std::hint::black_box(out.len());
+            }
+            let per = t0.elapsed().as_secs_f64() / reps as f64;
+            let flops = (rt * khat * 2) as f64;
+            t.row(vec![
+                format!("matvec({rt}x{khat})"),
+                "pjrt+zcache".into(),
+                fmt_secs(per),
+                format!("{:.2}", flops / per / 1e9),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,148 @@
+//! Artifact registry: parse `artifacts/manifest.txt` (written by
+//! python/compile/aot.py) and locate the HLO-text module for a requested
+//! kernel shape. Shapes are static in HLO — the registry is how the
+//! dynamic L3 hot loop maps onto the fixed-(B, K, R_TILE) artifact set.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: String,
+    /// Tensor arity for ttm kernels (3 or 4); 0 for matvec kernels.
+    pub n: usize,
+    /// Core length K (ttm kernels).
+    pub k: usize,
+    /// K̂ = K^{N-1} (ttm) or the tile's column count (matvec).
+    pub khat: usize,
+    /// Batch size B (ttm kernels).
+    pub b: usize,
+    /// Row tile R_TILE (matvec kernels).
+    pub rtile: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Parse `<dir>/manifest.txt`. Lines: `file k=v k=v ...`.
+    pub fn load(dir: &Path) -> Result<Registry, String> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", manifest.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let file = parts
+                .next()
+                .ok_or(format!("manifest line {}: empty", lineno + 1))?
+                .to_string();
+            let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+            for part in parts {
+                let (k, v) = part
+                    .split_once('=')
+                    .ok_or(format!("manifest line {}: bad field {part:?}", lineno + 1))?;
+                kv.insert(k, v);
+            }
+            let get = |key: &str| kv.get(key).and_then(|v| v.parse::<usize>().ok()).unwrap_or(0);
+            entries.push(ArtifactMeta {
+                file,
+                kind: kv.get("kind").unwrap_or(&"?").to_string(),
+                n: get("n"),
+                k: get("k"),
+                khat: get("khat"),
+                b: get("b"),
+                rtile: get("rtile"),
+            });
+        }
+        Ok(Registry { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default artifact location: `$TUCKER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TUCKER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// TTM contribution kernel for arity `n` and core length `k`.
+    pub fn find_ttm(&self, n: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|m| m.kind == "ttm" && m.n == n && m.k == k)
+    }
+
+    /// Matvec / rmatvec tile for a given K̂.
+    pub fn find_matvec(&self, kind: &str, khat: usize) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|m| m.kind == kind && m.khat == khat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tucker_lite_manifest_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest_lines() {
+        let dir = write_manifest(
+            "ttm3d_k10_b8192.hlo.txt kind=ttm n=3 k=10 khat=100 b=8192\n\
+             matvec_kh100_r512.hlo.txt kind=matvec khat=100 rtile=512\n",
+        );
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.entries.len(), 2);
+        let ttm = reg.find_ttm(3, 10).unwrap();
+        assert_eq!(ttm.b, 8192);
+        assert_eq!(ttm.khat, 100);
+        let mv = reg.find_matvec("matvec", 100).unwrap();
+        assert_eq!(mv.rtile, 512);
+        assert!(reg.find_ttm(4, 10).is_none());
+        assert!(reg.find_matvec("rmatvec", 100).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_error_with_hint() {
+        let err = Registry::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration: when `make artifacts` has run, the real manifest
+        // must expose the configurations the benches rely on.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = Registry::load(&dir).unwrap();
+        for (n, k) in [(3, 10), (3, 20), (4, 10)] {
+            assert!(reg.find_ttm(n, k).is_some(), "ttm n={n} k={k}");
+        }
+        for khat in [100, 400, 1000] {
+            assert!(reg.find_matvec("matvec", khat).is_some(), "matvec {khat}");
+            assert!(reg.find_matvec("rmatvec", khat).is_some(), "rmatvec {khat}");
+        }
+    }
+}

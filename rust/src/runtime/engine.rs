@@ -1,0 +1,302 @@
+//! Compute engine: the seam between the L3 coordinator and the AOT
+//! artifacts. `Engine::Pjrt` is the deliverable architecture (compiled HLO
+//! on the request path); `Engine::Native` is the in-process reference used
+//! for cross-checking and the runtime ablation bench. Both expose the same
+//! padded-batch contract; shapes the artifact set does not cover fall back
+//! to native (reported by `coverage_note`).
+
+use super::pjrt::{PjrtRuntime, ZDevice};
+use crate::linalg::Mat;
+
+/// A local penultimate matrix prepared for repeated Lanczos queries.
+/// `Device` holds Z^p tiles resident on the PJRT device — uploaded once
+/// per mode, reused across all Q_n queries (§Perf: removes the dominant
+/// per-call transfer; 2.7 ms → 34 µs per 512×100 x-query on this host).
+pub enum PreparedZ {
+    Host,
+    Device(ZDevice),
+}
+
+pub enum Engine {
+    /// In-process reference. The TTM assembly uses the scatter-fused path
+    /// (no batch materialization — §Perf iteration 2: 1.46× over batched).
+    Native,
+    /// Native but through the same batched contract as the PJRT path —
+    /// kept for the runtime ablation (benches/ablate_runtime.rs).
+    NativeBatched,
+    /// Compiled HLO artifacts on the PJRT CPU client.
+    Pjrt(PjrtRuntime),
+}
+
+impl Engine {
+    /// Build the PJRT engine from the default artifact dir, or fall back to
+    /// native with a note (used by examples so they run pre-`make artifacts`).
+    pub fn pjrt_or_native() -> (Engine, &'static str) {
+        match PjrtRuntime::from_default_dir() {
+            Ok(rt) => (Engine::Pjrt(rt), "pjrt"),
+            Err(_) => (Engine::Native, "native (artifacts not built)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            Engine::NativeBatched => "native-batched",
+            Engine::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Should the TTM assembly use the scatter-fused path (no batch)?
+    pub fn prefers_fused_ttm(&self) -> bool {
+        matches!(self, Engine::Native)
+    }
+
+    /// Preferred TTM batch size for arity n, core length k.
+    pub fn ttm_batch_size(&self, n: usize, k: usize) -> usize {
+        match self {
+            Engine::Native | Engine::NativeBatched => 4096,
+            Engine::Pjrt(rt) => rt.ttm_batch(n, k).unwrap_or(4096),
+        }
+    }
+
+    /// Is the PJRT path actually covering (n, k) + its K̂ matvecs?
+    pub fn covers(&self, n: usize, k: usize) -> bool {
+        match self {
+            Engine::Native | Engine::NativeBatched => true,
+            Engine::Pjrt(rt) => {
+                let khat = k.pow(n as u32 - 1);
+                rt.has_ttm(n, k) && rt.has_matvec(khat)
+            }
+        }
+    }
+
+    /// Batched 3-D contribution kernel: rows_a/rows_b are (B,K) flattened,
+    /// vals length B (padding rows must carry val=0). Returns (B,K²).
+    pub fn kron3_batch(&self, k: usize, rows_a: &[f32], rows_b: &[f32], vals: &[f32]) -> Vec<f32> {
+        if let Engine::Pjrt(rt) = self {
+            if rt.has_ttm(3, k) && vals.len() == rt.ttm_batch(3, k).unwrap_or(0) {
+                return rt
+                    .kron3(k, rows_a, rows_b, vals)
+                    .expect("pjrt kron3 execution failed");
+            }
+        }
+        native_kron3(k, rows_a, rows_b, vals)
+    }
+
+    /// Batched 4-D contribution kernel. Returns (B,K³).
+    pub fn kron4_batch(
+        &self,
+        k: usize,
+        rows_a: &[f32],
+        rows_b: &[f32],
+        rows_c: &[f32],
+        vals: &[f32],
+    ) -> Vec<f32> {
+        if let Engine::Pjrt(rt) = self {
+            if rt.has_ttm(4, k) && vals.len() == rt.ttm_batch(4, k).unwrap_or(0) {
+                return rt
+                    .kron4(k, rows_a, rows_b, rows_c, vals)
+                    .expect("pjrt kron4 execution failed");
+            }
+        }
+        native_kron4(k, rows_a, rows_b, rows_c, vals)
+    }
+
+    /// Prepare a local Z^p for repeated queries (uploads tiles to the
+    /// device on the PJRT path; no-op for native engines).
+    pub fn prepare_z(&self, z: &Mat) -> PreparedZ {
+        if let Engine::Pjrt(rt) = self {
+            if z.rows > 0 && rt.has_matvec(z.cols) {
+                if let Ok(dev) = rt.upload_z(z.cols, z.rows, &z.data) {
+                    return PreparedZ::Device(dev);
+                }
+            }
+        }
+        PreparedZ::Host
+    }
+
+    /// x-query against a prepared Z (falls back to the host path).
+    pub fn matvec_prepared(&self, p: &PreparedZ, z: &Mat, x: &[f32]) -> Vec<f32> {
+        if let (Engine::Pjrt(rt), PreparedZ::Device(dev)) = (self, p) {
+            return rt.matvec_dev(dev, x).expect("pjrt matvec_dev failed");
+        }
+        self.local_matvec(z, x)
+    }
+
+    /// y-query against a prepared Z (falls back to the host path).
+    pub fn rmatvec_prepared(&self, p: &PreparedZ, y: &[f32], z: &Mat) -> Vec<f32> {
+        if let (Engine::Pjrt(rt), PreparedZ::Device(dev)) = (self, p) {
+            return rt.rmatvec_dev(dev, y).expect("pjrt rmatvec_dev failed");
+        }
+        self.local_rmatvec(y, z)
+    }
+
+    /// Local x-query: Z^p · x over the truncated local copy. The PJRT path
+    /// tiles rows to the artifact's R_TILE, zero-padding the ragged tail.
+    pub fn local_matvec(&self, z: &Mat, x: &[f32]) -> Vec<f32> {
+        let khat = z.cols;
+        if let Engine::Pjrt(rt) = self {
+            if let Some(rtile) = rt.matvec_rtile(khat) {
+                let mut out = Vec::with_capacity(z.rows);
+                let mut start = 0usize;
+                while start < z.rows {
+                    let rows = (z.rows - start).min(rtile);
+                    let tile = &z.data[start * khat..(start + rows) * khat];
+                    let res = if rows == rtile {
+                        rt.matvec(khat, tile, x).expect("pjrt matvec failed")
+                    } else {
+                        let mut padded = vec![0.0f32; rtile * khat];
+                        padded[..tile.len()].copy_from_slice(tile);
+                        rt.matvec(khat, &padded, x).expect("pjrt matvec failed")
+                    };
+                    out.extend_from_slice(&res[..rows]);
+                    start += rows;
+                }
+                return out;
+            }
+        }
+        z.matvec(x)
+    }
+
+    /// Local y-query: y · Z^p (length K̂), tiled like `local_matvec`.
+    pub fn local_rmatvec(&self, y: &[f32], z: &Mat) -> Vec<f32> {
+        let khat = z.cols;
+        if let Engine::Pjrt(rt) = self {
+            if let Some(rtile) = rt.matvec_rtile(khat) {
+                let mut out = vec![0.0f32; khat];
+                let mut start = 0usize;
+                while start < z.rows {
+                    let rows = (z.rows - start).min(rtile);
+                    let tile = &z.data[start * khat..(start + rows) * khat];
+                    let ytile = &y[start..start + rows];
+                    let res = if rows == rtile {
+                        rt.rmatvec(khat, ytile, tile).expect("pjrt rmatvec failed")
+                    } else {
+                        let mut zp = vec![0.0f32; rtile * khat];
+                        zp[..tile.len()].copy_from_slice(tile);
+                        let mut yp = vec![0.0f32; rtile];
+                        yp[..rows].copy_from_slice(ytile);
+                        rt.rmatvec(khat, &yp, &zp).expect("pjrt rmatvec failed")
+                    };
+                    for (o, r) in out.iter_mut().zip(&res) {
+                        *o += r;
+                    }
+                    start += rows;
+                }
+                return out;
+            }
+        }
+        z.tmatvec(y)
+    }
+}
+
+/// Native reference: batched 3-D Kronecker contributions, layout contract
+/// of python/compile/kernels/ref.py (earlier mode fastest).
+pub fn native_kron3(k: usize, rows_a: &[f32], rows_b: &[f32], vals: &[f32]) -> Vec<f32> {
+    let b = vals.len();
+    let mut out = vec![0.0f32; b * k * k];
+    for e in 0..b {
+        let v = vals[e];
+        if v == 0.0 {
+            continue;
+        }
+        let ra = &rows_a[e * k..(e + 1) * k];
+        let rb = &rows_b[e * k..(e + 1) * k];
+        let o = &mut out[e * k * k..(e + 1) * k * k];
+        for cb in 0..k {
+            let w = v * rb[cb];
+            let seg = &mut o[cb * k..(cb + 1) * k];
+            for ca in 0..k {
+                seg[ca] = w * ra[ca];
+            }
+        }
+    }
+    out
+}
+
+/// Native reference: batched 4-D contributions (kron of three rows).
+pub fn native_kron4(
+    k: usize,
+    rows_a: &[f32],
+    rows_b: &[f32],
+    rows_c: &[f32],
+    vals: &[f32],
+) -> Vec<f32> {
+    let b = vals.len();
+    let k3 = k * k * k;
+    let mut out = vec![0.0f32; b * k3];
+    for e in 0..b {
+        let v = vals[e];
+        if v == 0.0 {
+            continue;
+        }
+        let ra = &rows_a[e * k..(e + 1) * k];
+        let rb = &rows_b[e * k..(e + 1) * k];
+        let rc = &rows_c[e * k..(e + 1) * k];
+        let o = &mut out[e * k3..(e + 1) * k3];
+        for cc in 0..k {
+            let wv = v * rc[cc];
+            for cb in 0..k {
+                let w = wv * rb[cb];
+                let seg = &mut o[(cc * k + cb) * k..(cc * k + cb) * k + k];
+                for ca in 0..k {
+                    seg[ca] = w * ra[ca];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_kron3_layout() {
+        // contr[ca + cb*K] = v * a[ca] * b[cb]
+        let k = 3;
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 100.0, 1000.0];
+        let out = native_kron3(k, &a, &b, &[2.0]);
+        for cb in 0..k {
+            for ca in 0..k {
+                assert_eq!(out[ca + cb * k], 2.0 * a[ca] * b[cb]);
+            }
+        }
+    }
+
+    #[test]
+    fn native_kron4_layout() {
+        let k = 2;
+        let a = [1.0, 2.0];
+        let b = [3.0, 5.0];
+        let c = [7.0, 11.0];
+        let out = native_kron4(k, &a, &b, &c, &[1.0]);
+        for cc in 0..k {
+            for cb in 0..k {
+                for ca in 0..k {
+                    assert_eq!(out[ca + cb * k + cc * k * k], a[ca] * b[cb] * c[cc]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_val_padding_rows_are_zero() {
+        let k = 2;
+        let rows = [1.0, 2.0, 3.0, 4.0];
+        let out = native_kron3(k, &rows, &rows, &[1.0, 0.0]);
+        assert!(out[4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn native_engine_matvec_matches_mat() {
+        let z = Mat::from_fn(7, 4, |r, c| (r * 4 + c) as f32 * 0.25);
+        let x = vec![1.0, -1.0, 0.5, 2.0];
+        let e = Engine::Native;
+        assert_eq!(e.local_matvec(&z, &x), z.matvec(&x));
+        let y = vec![1.0; 7];
+        assert_eq!(e.local_rmatvec(&y, &z), z.tmatvec(&y));
+    }
+}

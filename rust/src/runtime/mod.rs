@@ -1,0 +1,12 @@
+//! PJRT runtime (the request-path executor of the AOT artifacts) and the
+//! native reference engine. See DESIGN.md §1: rust loads HLO text once,
+//! compiles on the PJRT CPU client, and dispatches padded fixed-shape
+//! batches from the HOOI hot loop — Python never runs at request time.
+
+pub mod artifacts;
+pub mod engine;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, Registry};
+pub use engine::Engine;
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,197 @@
+//! **CoarseG** — coarse-grained multi-policy scheme (paper §5): along each
+//! mode, every slice is assigned *in its entirety* to one rank, so all
+//! slices are good and R_n^sum hits the optimum L_n; the price is TTM load
+//! imbalance whenever a slice is much larger than |E|/P.
+//!
+//! Slice-assignment strategy (Smith–Karypis [25], the paper's CoarseG):
+//! arrange slices in random order, allocate contiguous blocks to ranks,
+//! balancing element counts greedily. A best-processor-fit (BPF) variant —
+//! the classical 2-approximation for makespan the paper discusses in §6.1
+//! — is included for the ablation bench.
+
+use super::policy::{DistTime, Distribution, ModePolicy, Scheme};
+use crate::tensor::{SliceIndex, SparseTensor};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SliceAssign {
+    /// Random order + contiguous blocks (the paper's CoarseG).
+    RandomBlocks,
+    /// Best processor fit: each slice to the least-loaded rank.
+    BestFit,
+}
+
+pub struct CoarseG {
+    pub strategy: SliceAssign,
+}
+
+impl Default for CoarseG {
+    fn default() -> Self {
+        CoarseG { strategy: SliceAssign::RandomBlocks }
+    }
+}
+
+impl Scheme for CoarseG {
+    fn name(&self) -> &'static str {
+        match self.strategy {
+            SliceAssign::RandomBlocks => "CoarseG",
+            SliceAssign::BestFit => "CoarseG-BPF",
+        }
+    }
+
+    fn uni(&self) -> bool {
+        false
+    }
+
+    fn distribute(
+        &self,
+        t: &SparseTensor,
+        idx: &[SliceIndex],
+        p: usize,
+        rng: &mut Rng,
+    ) -> Distribution {
+        let t0 = Instant::now();
+        let policies: Vec<ModePolicy> = idx
+            .iter()
+            .map(|i| match self.strategy {
+                SliceAssign::RandomBlocks => random_blocks(t, i, p, rng),
+                SliceAssign::BestFit => best_fit(t, i, p),
+            })
+            .collect();
+        let serial = t0.elapsed().as_secs_f64();
+        Distribution {
+            scheme: self.name().into(),
+            p,
+            policies,
+            uni: false,
+            time: DistTime {
+                serial_secs: serial,
+                // lightweight scheme run in parallel in the paper (§7.3);
+                // the per-mode scans parallelize over slices
+                simulated_secs: serial / p as f64,
+            },
+        }
+    }
+}
+
+/// Random slice order, contiguous blocks targeting |E|/P elements per rank.
+fn random_blocks(t: &SparseTensor, idx: &SliceIndex, p: usize, rng: &mut Rng) -> ModePolicy {
+    let nnz = t.nnz();
+    let target = nnz.div_ceil(p);
+    let mut order: Vec<u32> = (0..idx.num_slices() as u32).collect();
+    rng.shuffle(&mut order);
+    let mut assign = vec![0u32; nnz];
+    let mut rank = 0usize;
+    let mut filled = 0usize;
+    for &lu in &order {
+        let l = lu as usize;
+        for &e in idx.slice(l) {
+            assign[e as usize] = rank as u32;
+        }
+        filled += idx.slice_len(l);
+        // advance once the current rank reached its quota (last rank
+        // absorbs the remainder)
+        if filled >= target && rank + 1 < p {
+            rank += 1;
+            filled = 0;
+        }
+    }
+    ModePolicy { p, assign }
+}
+
+/// Classical BPF: largest-first over slices, each to the least-loaded rank.
+fn best_fit(t: &SparseTensor, idx: &SliceIndex, p: usize) -> ModePolicy {
+    let mut order: Vec<u32> = (0..idx.num_slices() as u32).collect();
+    order.sort_by_key(|&l| std::cmp::Reverse(idx.slice_len(l as usize)));
+    let mut load = vec![0usize; p];
+    let mut assign = vec![0u32; t.nnz()];
+    for &lu in &order {
+        let l = lu as usize;
+        let rank = (0..p).min_by_key(|&r| load[r]).unwrap();
+        for &e in idx.slice(l) {
+            assign[e as usize] = rank as u32;
+        }
+        load[rank] += idx.slice_len(l);
+    }
+    ModePolicy { p, assign }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::metrics::{ModeMetrics, Sharers};
+    use crate::tensor::slices::build_all;
+
+    fn random_tensor(seed: u64) -> SparseTensor {
+        let mut rng = Rng::new(seed);
+        SparseTensor::random(vec![50, 30, 20], 4000, &mut rng)
+    }
+
+    #[test]
+    fn all_slices_good_both_strategies() {
+        // the defining property: R_n^sum == number of nonempty slices
+        let t = random_tensor(1);
+        let idx = build_all(&t);
+        for strategy in [SliceAssign::RandomBlocks, SliceAssign::BestFit] {
+            let d = CoarseG { strategy }.distribute(&t, &idx, 6, &mut Rng::new(2));
+            assert!(d.validate(&t).is_ok());
+            for (n, i) in idx.iter().enumerate() {
+                let sharers = Sharers::build(i, &d.policies[n]);
+                assert_eq!(sharers.bad_slices(), 0, "{strategy:?} mode {n}");
+                let m = ModeMetrics::from_sharers(i, &d.policies[n], &sharers);
+                assert_eq!(m.r_sum, i.nonempty());
+            }
+        }
+    }
+
+    #[test]
+    fn bpf_beats_random_blocks_on_makespan() {
+        // skewed slice sizes: BPF (2-approx) should not be worse
+        let mut t = SparseTensor::new(vec![20, 4]);
+        let mut rng = Rng::new(5);
+        for l in 0..20u32 {
+            let sz = if l == 0 { 500 } else { 20 + rng.below(30) as u32 };
+            for _ in 0..sz {
+                t.push(&[l, rng.below(4) as u32], 1.0);
+            }
+        }
+        let idx = build_all(&t);
+        let db = CoarseG { strategy: SliceAssign::BestFit }
+            .distribute(&t, &idx, 4, &mut Rng::new(1));
+        let dr = CoarseG { strategy: SliceAssign::RandomBlocks }
+            .distribute(&t, &idx, 4, &mut Rng::new(1));
+        let mb = ModeMetrics::compute(&idx[0], &db.policies[0]);
+        let mr = ModeMetrics::compute(&idx[0], &dr.policies[0]);
+        assert!(mb.e_max <= mr.e_max);
+    }
+
+    #[test]
+    fn giant_slice_causes_imbalance() {
+        // CoarseG's weakness (§7.2): a slice >> |E|/P pins E_max at its size
+        let mut t = SparseTensor::new(vec![10, 4]);
+        for i in 0..900 {
+            t.push(&[0, (i % 4) as u32], 1.0);
+        }
+        for l in 1..10u32 {
+            for i in 0..10 {
+                t.push(&[l, (i % 4) as u32], 1.0);
+            }
+        }
+        let idx = build_all(&t);
+        let d = CoarseG::default().distribute(&t, &idx, 5, &mut Rng::new(1));
+        let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
+        assert!(m.e_max >= 900, "giant slice stays whole");
+        assert!(m.ttm_imbalance() > 3.0);
+    }
+
+    #[test]
+    fn partitions_all_elements() {
+        let t = random_tensor(7);
+        let idx = build_all(&t);
+        let d = CoarseG::default().distribute(&t, &idx, 8, &mut Rng::new(3));
+        for pol in &d.policies {
+            assert_eq!(pol.rank_counts().iter().sum::<usize>(), t.nnz());
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! **Lite** — the paper's contribution (§6): a lightweight multi-policy
+//! distribution scheme, provably near-optimal on all three §4 metrics
+//! (Theorem 6.1):
+//!
+//!   1. E_n^max ≤ ⌈|E|/P⌉                 (perfect TTM balance)
+//!   2. R_n^sum ≤ L_n + P                 (near-optimal SVD load/volume)
+//!   3. R_n^max ≤ ⌈L_n/P⌉ + 2             (near-optimal SVD balance)
+//!
+//! Construction per mode (Fig 8): sort slices ascending by cardinality
+//! (parallel sample sort); **stage 1** assigns whole slices round-robin
+//! until the next assignment would push a bin over the hard limit
+//! ⌈|E|/P⌉; **stage 2** fills the bins to the limit in order, splitting
+//! the remaining (large) slices across contiguous ranks.
+
+use super::policy::{DistTime, Distribution, ModePolicy, Scheme};
+use super::samplesort::sample_sort;
+use crate::tensor::{SliceIndex, SparseTensor};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+pub struct Lite;
+
+impl Scheme for Lite {
+    fn name(&self) -> &'static str {
+        "Lite"
+    }
+
+    fn uni(&self) -> bool {
+        false
+    }
+
+    fn distribute(
+        &self,
+        t: &SparseTensor,
+        idx: &[SliceIndex],
+        p: usize,
+        rng: &mut Rng,
+    ) -> Distribution {
+        let t0 = Instant::now();
+        let mut simulated = 0.0f64;
+        let policies = idx
+            .iter()
+            .map(|i| {
+                let (pol, sim) = distribute_mode(t, i, p, rng);
+                simulated += sim;
+                pol
+            })
+            .collect();
+        Distribution {
+            scheme: self.name().into(),
+            p,
+            policies,
+            uni: false,
+            time: DistTime {
+                serial_secs: t0.elapsed().as_secs_f64(),
+                simulated_secs: simulated,
+            },
+        }
+    }
+}
+
+/// Fig 8 for a single mode. Returns the policy and the simulated parallel
+/// construction time: sample-sort critical path (prefix work split across
+/// ranks + slowest bucket) plus the assignment scan divided by P — the
+/// paper implements both stages in parallel (§6.1/§7.3).
+fn distribute_mode(
+    t: &SparseTensor,
+    idx: &SliceIndex,
+    p: usize,
+    rng: &mut Rng,
+) -> (ModePolicy, f64) {
+    let nnz = t.nnz();
+    let limit = nnz.div_ceil(p);
+    let sizes = idx.sizes();
+    let sort = sample_sort(&sizes, p, rng);
+    let t1 = Instant::now();
+
+    let mut assign = vec![0u32; nnz];
+    let mut load = vec![0usize; p];
+    let order = &sort.order;
+
+    // Stage 1: whole slices, round-robin over bins, ascending sizes.
+    let mut cur = 0usize; // next bin
+    let mut stage2_from = order.len(); // first slice index not placed in stage 1
+    for (pos, &lu) in order.iter().enumerate() {
+        let l = lu as usize;
+        let sz = idx.slice_len(l);
+        if load[cur] + sz > limit {
+            stage2_from = pos;
+            break;
+        }
+        for &e in idx.slice(l) {
+            assign[e as usize] = cur as u32;
+        }
+        load[cur] += sz;
+        cur = (cur + 1) % p;
+    }
+
+    // Stage 2: fill bins 0..P to the limit, splitting large slices across
+    // contiguous ranks.
+    let mut bin = 0usize;
+    let mut pos = stage2_from;
+    let mut offset = 0usize; // elements of the current slice already placed
+    while bin < p && pos < order.len() {
+        let l = order[pos] as usize;
+        let elems = idx.slice(l);
+        let gap = limit - load[bin];
+        let remaining = elems.len() - offset;
+        if remaining <= gap {
+            // whole (rest of the) slice fits: place and move to next slice
+            for &e in &elems[offset..] {
+                assign[e as usize] = bin as u32;
+            }
+            load[bin] += remaining;
+            pos += 1;
+            offset = 0;
+        } else {
+            // fill the bin to its limit, continue the slice on the next bin
+            for &e in &elems[offset..offset + gap] {
+                assign[e as usize] = bin as u32;
+            }
+            load[bin] += gap;
+            offset += gap;
+            bin += 1;
+        }
+    }
+    debug_assert!(
+        pos >= order.len(),
+        "stage 2 exhausted bins before slices: total capacity P*limit >= nnz"
+    );
+
+    let scan_secs = t1.elapsed().as_secs_f64();
+    let simulated =
+        sort.prefix_secs / p as f64 + sort.max_bucket_secs + scan_secs / p as f64;
+    (ModePolicy { p, assign }, simulated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::metrics::ModeMetrics;
+    use crate::tensor::slices::build_all;
+    use crate::util::check::Runner;
+
+    fn lite_dist(t: &SparseTensor, p: usize, seed: u64) -> Distribution {
+        let idx = build_all(t);
+        Lite.distribute(t, &idx, p, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn figure7_example_bounds() {
+        // Paper Fig 7: |E| = 100, P = 5, limit 20; slice sizes
+        // 5,5,5,5,5,5,5,18,22,25 along mode 0.
+        let sizes = [5u32, 5, 5, 5, 5, 5, 5, 18, 22, 25];
+        let mut t = SparseTensor::new(vec![10, 4]);
+        for (l, &sz) in sizes.iter().enumerate() {
+            for j in 0..sz {
+                t.push(&[l as u32, j % 4], 1.0);
+            }
+        }
+        let idx = build_all(&t);
+        let d = Lite.distribute(&t, &idx, 5, &mut Rng::new(1));
+        let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
+        assert_eq!(m.e_max, 20, "hard limit is exactly |E|/P");
+        assert!(m.r_sum <= 10 + 5);
+        assert!(m.r_max <= 2 + 2);
+        assert_eq!(m.e_counts.iter().sum::<usize>(), 100);
+        // every bin filled exactly to the limit (100 = 5*20)
+        assert_eq!(m.e_counts, vec![20; 5]);
+    }
+
+    #[test]
+    fn theorem_6_1_property() {
+        // The headline guarantee, property-tested over random tensors,
+        // world sizes and skews.
+        Runner::new(48, 120).run("theorem-6.1", |case, rng| {
+            let p = 1 + rng.usize_below(9);
+            let l0 = 1 + rng.usize_below(case.size.max(2));
+            let l1 = 1 + rng.usize_below(20);
+            let l2 = 1 + rng.usize_below(20);
+            let nnz = 1 + rng.usize_below(case.size * 10 + 10);
+            let t = SparseTensor::random(
+                vec![l0 as u32, l1 as u32, l2 as u32],
+                nnz,
+                rng,
+            );
+            let idx = build_all(&t);
+            let d = Lite.distribute(&t, &idx, p, rng);
+            d.validate(&t).map_err(|e| e)?;
+            let limit = nnz.div_ceil(p);
+            for (n, i) in idx.iter().enumerate() {
+                let m = ModeMetrics::compute(i, &d.policies[n]);
+                crate::prop_assert!(
+                    m.e_max <= limit,
+                    "mode {n}: E_max {} > limit {} (nnz={nnz} p={p})",
+                    m.e_max,
+                    limit
+                );
+                crate::prop_assert!(
+                    m.r_sum <= i.num_slices() + p,
+                    "mode {n}: R_sum {} > L+P {}",
+                    m.r_sum,
+                    i.num_slices() + p
+                );
+                crate::prop_assert!(
+                    m.r_max <= i.num_slices().div_ceil(p) + 2,
+                    "mode {n}: R_max {} > ceil(L/P)+2 {}",
+                    m.r_max,
+                    i.num_slices().div_ceil(p) + 2
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn huge_slice_gets_split_contiguously() {
+        // one slice holds everything: stage 2 must split it across ranks
+        let mut t = SparseTensor::new(vec![2, 3]);
+        for i in 0..90 {
+            t.push(&[0, (i % 3) as u32], 1.0);
+        }
+        for i in 0..10 {
+            t.push(&[1, (i % 3) as u32], 1.0);
+        }
+        let d = lite_dist(&t, 4, 3);
+        let m = ModeMetrics::compute(&build_all(&t)[0], &d.policies[0]);
+        assert!(m.e_max <= 25);
+        // the big slice is shared by several ranks, but contiguously:
+        let pol = &d.policies[0];
+        let mut ranks_of_big: Vec<u32> = (0..t.nnz())
+            .filter(|&e| t.coord(0, e) == 0)
+            .map(|e| pol.assign[e])
+            .collect();
+        ranks_of_big.sort_unstable();
+        ranks_of_big.dedup();
+        for w in ranks_of_big.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "contiguous rank range");
+        }
+    }
+
+    #[test]
+    fn all_elements_assigned_every_mode() {
+        let mut rng = Rng::new(8);
+        let t = SparseTensor::random(vec![30, 40, 20], 3000, &mut rng);
+        let d = lite_dist(&t, 7, 9);
+        assert!(d.validate(&t).is_ok());
+        for pol in &d.policies {
+            assert_eq!(pol.rank_counts().iter().sum::<usize>(), 3000);
+        }
+    }
+
+    #[test]
+    fn multi_policy_flags() {
+        let mut rng = Rng::new(8);
+        let t = SparseTensor::random(vec![10, 10, 10], 100, &mut rng);
+        let d = lite_dist(&t, 4, 1);
+        assert!(!d.uni);
+        assert_eq!(d.tensor_copies(), 3);
+        assert!(d.time.serial_secs > 0.0);
+        assert!(d.time.simulated_secs > 0.0);
+        assert!(d.time.simulated_secs < d.time.serial_secs);
+    }
+
+    #[test]
+    fn p_equals_one_trivial() {
+        let mut rng = Rng::new(8);
+        let t = SparseTensor::random(vec![10, 10], 50, &mut rng);
+        let d = lite_dist(&t, 1, 1);
+        for pol in &d.policies {
+            assert!(pol.assign.iter().all(|&r| r == 0));
+        }
+    }
+}

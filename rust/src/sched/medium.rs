@@ -1,0 +1,183 @@
+//! **MediumG** — the medium-grained uni-policy scheme of Smith–Karypis
+//! [25] (paper §5): factorize P = q_1 × ··· × q_N, overlay a processor
+//! grid on the tensor, assign each sub-tensor to a rank. Mode indices are
+//! randomly permuted to offset skew; q_n is chosen in proportion to L_n
+//! (each mode-n slice is then shared by at most P/q_n ranks).
+
+use super::policy::{DistTime, Distribution, ModePolicy, Scheme};
+use crate::tensor::{SliceIndex, SparseTensor};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+pub struct MediumG;
+
+impl Scheme for MediumG {
+    fn name(&self) -> &'static str {
+        "MediumG"
+    }
+
+    fn uni(&self) -> bool {
+        true
+    }
+
+    fn distribute(
+        &self,
+        t: &SparseTensor,
+        idx: &[SliceIndex],
+        p: usize,
+        rng: &mut Rng,
+    ) -> Distribution {
+        let _ = idx;
+        let t0 = Instant::now();
+        let n = t.ndim();
+        let grid = factorize_grid(p, &t.dims);
+        // random index permutation per mode (skew offset)
+        let perms: Vec<Vec<u32>> =
+            t.dims.iter().map(|&l| rng.permutation(l as usize)).collect();
+        // block boundaries: mode-n index i -> grid coord i*q_n/L_n
+        let mut assign = vec![0u32; t.nnz()];
+        for e in 0..t.nnz() {
+            let mut rank = 0usize;
+            for m in 0..n {
+                let l = perms[m][t.coord(m, e) as usize] as usize;
+                let q = grid[m];
+                let g = (l * q) / t.dims[m] as usize;
+                rank = rank * q + g.min(q - 1);
+            }
+            assign[e] = rank as u32;
+        }
+        let pol = ModePolicy { p, assign };
+        let serial = t0.elapsed().as_secs_f64();
+        Distribution {
+            scheme: self.name().into(),
+            p,
+            policies: vec![pol; n],
+            uni: true,
+            time: DistTime {
+                serial_secs: serial,
+                // the element scan parallelizes perfectly (each rank maps
+                // its own file chunk in the paper's implementation)
+                simulated_secs: serial / p as f64,
+            },
+        }
+    }
+}
+
+/// P = q_1 × ... × q_N with q_n proportional to L_n: distribute the prime
+/// factors of P (largest first) to the mode with the largest current
+/// "stretch" L_n / q_n.
+pub fn factorize_grid(p: usize, dims: &[u32]) -> Vec<usize> {
+    let n = dims.len();
+    let mut q = vec![1usize; n];
+    for f in prime_factors(p) {
+        let m = (0..n)
+            .max_by(|&a, &b| {
+                let sa = dims[a] as f64 / q[a] as f64;
+                let sb = dims[b] as f64 / q[b] as f64;
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .unwrap();
+        q[m] *= f;
+    }
+    q
+}
+
+/// Prime factorization, largest factors first.
+pub fn prime_factors(mut x: usize) -> Vec<usize> {
+    let mut fs = Vec::new();
+    let mut d = 2usize;
+    while d * d <= x {
+        while x % d == 0 {
+            fs.push(d);
+            x /= d;
+        }
+        d += 1;
+    }
+    if x > 1 {
+        fs.push(x);
+    }
+    fs.sort_unstable_by(|a, b| b.cmp(a));
+    fs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::metrics::ModeMetrics;
+    use crate::tensor::slices::build_all;
+
+    #[test]
+    fn grid_multiplies_to_p() {
+        for p in [1, 2, 6, 16, 60, 64, 128, 512] {
+            let q = factorize_grid(p, &[1000, 10, 100]);
+            assert_eq!(q.iter().product::<usize>(), p);
+        }
+    }
+
+    #[test]
+    fn grid_favors_long_modes() {
+        let q = factorize_grid(16, &[1_000_000, 100, 10]);
+        assert!(q[0] >= q[1] && q[1] >= q[2], "{q:?}");
+        assert!(q[0] >= 8);
+    }
+
+    #[test]
+    fn prime_factors_correct() {
+        assert_eq!(prime_factors(12), vec![3, 2, 2]);
+        assert_eq!(prime_factors(17), vec![17]);
+        assert_eq!(prime_factors(1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn slice_sharing_bounded_by_grid() {
+        // each mode-n slice can be shared by at most P/q_n ranks (§5)
+        let mut rng = Rng::new(4);
+        let t = SparseTensor::random(vec![64, 32, 16], 6000, &mut rng);
+        let idx = build_all(&t);
+        let p = 16;
+        let d = MediumG.distribute(&t, &idx, p, &mut Rng::new(5));
+        assert!(d.validate(&t).is_ok());
+        let grid = factorize_grid(p, &t.dims);
+        for (n, i) in idx.iter().enumerate() {
+            let m = ModeMetrics::compute(i, &d.policies[n]);
+            let bound = p / grid[n];
+            for l in 0..i.num_slices() {
+                let _ = l;
+            }
+            assert!(
+                m.r_max <= i.num_slices().div_ceil(grid[n]) * bound / 1.max(1),
+                "sanity"
+            );
+            // per-slice bound via r_sum: r_sum <= nonempty * P/q_n
+            assert!(m.r_sum <= i.nonempty() * bound.max(1));
+        }
+    }
+
+    #[test]
+    fn uni_policy_same_assignment_all_modes() {
+        let mut rng = Rng::new(6);
+        let t = SparseTensor::random(vec![20, 20, 20], 500, &mut rng);
+        let idx = build_all(&t);
+        let d = MediumG.distribute(&t, &idx, 8, &mut Rng::new(7));
+        assert!(d.uni);
+        assert_eq!(d.tensor_copies(), 1);
+        for n in 1..3 {
+            assert_eq!(d.policies[n].assign, d.policies[0].assign);
+        }
+    }
+
+    #[test]
+    fn sub_tensor_blocks_are_contiguous_in_permuted_space() {
+        // elements with equal permuted grid coordinates land on one rank
+        let mut rng = Rng::new(8);
+        let t = SparseTensor::random(vec![12, 12], 300, &mut rng);
+        let idx = build_all(&t);
+        let d = MediumG.distribute(&t, &idx, 4, &mut Rng::new(9));
+        // 4 ranks over 2 modes -> at most 4 distinct ranks, all used for a
+        // tensor this dense
+        let mut used: Vec<u32> = d.policies[0].assign.clone();
+        used.sort_unstable();
+        used.dedup();
+        assert_eq!(used.len(), 4);
+    }
+}

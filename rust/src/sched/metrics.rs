@@ -1,0 +1,312 @@
+//! The paper's fundamental metrics (§4): per mode n,
+//!
+//!   Metric 1  E_n^max = max_p |E_n^p|      (TTM load balance)
+//!   Metric 2  R_n^sum = Σ_p R_n^p          (SVD load + oracle comm volume)
+//!   Metric 3  R_n^max = max_p R_n^p        (SVD load balance)
+//!
+//! where R_n^p is the number of mode-n slices rank p shares. Optimal
+//! values: ⌈|E|/P⌉, L_n, ⌈L_n/P⌉ respectively.
+
+use super::policy::{Distribution, ModePolicy};
+use crate::tensor::{SliceIndex, SparseTensor};
+
+/// Sharer lists per slice, CSR layout: ranks sharing Slice_n^l are
+/// `ranks[offsets[l]..offsets[l+1]]`. Built once per (mode, policy) and
+/// reused by metrics, σ_n construction and FM-transfer accounting.
+#[derive(Debug, Clone)]
+pub struct Sharers {
+    pub offsets: Vec<u32>,
+    pub ranks: Vec<u32>,
+}
+
+impl Sharers {
+    /// O(nnz + L + R_sum) construction using a per-rank last-seen stamp.
+    pub fn build(idx: &SliceIndex, pol: &ModePolicy) -> Sharers {
+        let l_n = idx.num_slices();
+        let mut stamp = vec![u32::MAX; pol.p];
+        let mut offsets = Vec::with_capacity(l_n + 1);
+        let mut ranks = Vec::new();
+        offsets.push(0u32);
+        for l in 0..l_n {
+            for &e in idx.slice(l) {
+                let r = pol.assign[e as usize];
+                if stamp[r as usize] != l as u32 {
+                    stamp[r as usize] = l as u32;
+                    ranks.push(r);
+                }
+            }
+            offsets.push(ranks.len() as u32);
+        }
+        Sharers { offsets, ranks }
+    }
+
+    #[inline]
+    pub fn of(&self, l: usize) -> &[u32] {
+        &self.ranks[self.offsets[l] as usize..self.offsets[l + 1] as usize]
+    }
+
+    pub fn num_slices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// R_n^sum — total sharing count.
+    pub fn r_sum(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// R_n^p per rank.
+    pub fn r_counts(&self, p: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; p];
+        for &r in &self.ranks {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+
+    /// Number of bad slices (shared by ≥ 2 ranks; §4.1).
+    pub fn bad_slices(&self) -> usize {
+        (0..self.num_slices()).filter(|&l| self.of(l).len() > 1).count()
+    }
+}
+
+/// All the paper's §4 metrics for one mode.
+#[derive(Debug, Clone)]
+pub struct ModeMetrics {
+    pub mode: usize,
+    pub l_n: usize,
+    /// Non-empty slice count (empty slices share with nobody).
+    pub l_nonempty: usize,
+    pub e_counts: Vec<usize>,
+    pub e_max: usize,
+    pub r_counts: Vec<usize>,
+    pub r_sum: usize,
+    pub r_max: usize,
+}
+
+impl ModeMetrics {
+    pub fn compute(idx: &SliceIndex, pol: &ModePolicy) -> ModeMetrics {
+        let sharers = Sharers::build(idx, pol);
+        Self::from_sharers(idx, pol, &sharers)
+    }
+
+    pub fn from_sharers(idx: &SliceIndex, pol: &ModePolicy, sharers: &Sharers) -> ModeMetrics {
+        let e_counts = pol.rank_counts();
+        let e_max = e_counts.iter().copied().max().unwrap_or(0);
+        let r_counts = sharers.r_counts(pol.p);
+        let r_max = r_counts.iter().copied().max().unwrap_or(0);
+        ModeMetrics {
+            mode: idx.mode,
+            l_n: idx.num_slices(),
+            l_nonempty: idx.nonempty(),
+            e_counts,
+            e_max,
+            r_counts,
+            r_sum: sharers.r_sum(),
+            r_max,
+        }
+    }
+
+    /// TTM load balance = E_max / (|E|/P); 1.0 is perfect.
+    pub fn ttm_imbalance(&self) -> f64 {
+        let total: usize = self.e_counts.iter().sum();
+        let avg = total as f64 / self.e_counts.len() as f64;
+        if avg == 0.0 {
+            1.0
+        } else {
+            self.e_max as f64 / avg
+        }
+    }
+
+    /// SVD redundancy = R_sum / L_nonempty; 1.0 is optimal (all good slices).
+    pub fn svd_redundancy(&self) -> f64 {
+        if self.l_nonempty == 0 {
+            1.0
+        } else {
+            self.r_sum as f64 / self.l_nonempty as f64
+        }
+    }
+
+    /// SVD load balance = R_max / (R_sum/P); 1.0 is perfect.
+    pub fn svd_imbalance(&self) -> f64 {
+        let avg = self.r_sum as f64 / self.r_counts.len() as f64;
+        if avg == 0.0 {
+            1.0
+        } else {
+            self.r_max as f64 / avg
+        }
+    }
+
+    /// Oracle communication volume per matvec query: R_sum − L_nonempty
+    /// (§4.2; empty slices have no sharers and no owner traffic).
+    pub fn oracle_volume_per_query(&self) -> usize {
+        self.r_sum - self.l_nonempty
+    }
+}
+
+/// Metrics for every mode of a distribution + the paper's aggregates.
+#[derive(Debug, Clone)]
+pub struct SchemeMetrics {
+    pub per_mode: Vec<ModeMetrics>,
+}
+
+impl SchemeMetrics {
+    pub fn compute(t: &SparseTensor, idx: &[SliceIndex], dist: &Distribution) -> SchemeMetrics {
+        let per_mode = idx
+            .iter()
+            .zip(&dist.policies)
+            .map(|(i, pol)| ModeMetrics::compute(i, pol))
+            .collect();
+        let _ = t;
+        SchemeMetrics { per_mode }
+    }
+
+    /// Fig 12(a): aggregate TTM balance — max over ranks of total elements
+    /// across modes, over the average (each mode's TTM does |E| Kronecker
+    /// products, so aggregating element counts aggregates FLOPs).
+    pub fn ttm_balance(&self) -> f64 {
+        let p = self.per_mode[0].e_counts.len();
+        let mut per_rank = vec![0usize; p];
+        for m in &self.per_mode {
+            for (r, &c) in m.e_counts.iter().enumerate() {
+                per_rank[r] += c;
+            }
+        }
+        let total: usize = per_rank.iter().sum();
+        let avg = total as f64 / p as f64;
+        per_rank.iter().copied().max().unwrap_or(0) as f64 / avg.max(1e-12)
+    }
+
+    /// Fig 12(b): normalized SVD load — Σ_n R_n^sum·K̂_n over the optimal
+    /// Σ_n L_n·K̂_n. `khat[n]` = Π_{j≠n} K_j.
+    pub fn svd_load_normalized(&self, khat: &[f64]) -> f64 {
+        let load: f64 = self
+            .per_mode
+            .iter()
+            .zip(khat)
+            .map(|(m, &kh)| m.r_sum as f64 * kh)
+            .sum();
+        let opt: f64 = self
+            .per_mode
+            .iter()
+            .zip(khat)
+            .map(|(m, &kh)| m.l_nonempty as f64 * kh)
+            .sum();
+        load / opt.max(1e-12)
+    }
+
+    /// Fig 12(c): aggregate SVD balance — max over ranks of Σ_n R_n^p·K̂_n
+    /// over the average.
+    pub fn svd_balance(&self, khat: &[f64]) -> f64 {
+        let p = self.per_mode[0].r_counts.len();
+        let mut per_rank = vec![0.0f64; p];
+        for (m, &kh) in self.per_mode.iter().zip(khat) {
+            for (r, &c) in m.r_counts.iter().enumerate() {
+                per_rank[r] += c as f64 * kh;
+            }
+        }
+        let total: f64 = per_rank.iter().sum();
+        let avg = total / p as f64;
+        per_rank.iter().cloned().fold(0.0, f64::max) / avg.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::policy::DistTime;
+    use crate::util::rng::Rng;
+
+    fn tensor_and_index() -> (SparseTensor, Vec<SliceIndex>) {
+        let mut rng = Rng::new(17);
+        let t = SparseTensor::random(vec![10, 8, 6], 400, &mut rng);
+        let idx = crate::tensor::slices::build_all(&t);
+        (t, idx)
+    }
+
+    #[test]
+    fn figure4_example_r_sum() {
+        // Paper Fig 4: 8 elements over 3 ranks, every mode-1 slice shared by
+        // exactly two ranks -> R_sum = 6 with L_1 = 3.
+        let mut t = SparseTensor::new(vec![3, 4, 4]);
+        let mode0 = [0, 1, 0, 2, 2, 0, 1, 2];
+        for (i, &c0) in mode0.iter().enumerate() {
+            t.push(&[c0, (i % 4) as u32, ((i * 2) % 4) as u32], 1.0);
+        }
+        let idx = SliceIndex::build(&t, 0);
+        // lexicographic thirds: {e0,e1,e2}, {e3,e4,e5}, {e6,e7}
+        let pol = ModePolicy { p: 3, assign: vec![0, 0, 0, 1, 1, 1, 2, 2] };
+        let m = ModeMetrics::compute(&idx, &pol);
+        assert_eq!(m.r_sum, 6);
+        assert_eq!(m.l_n, 3);
+        assert!((m.svd_redundancy() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_rank_is_all_optimal() {
+        let (_, idx) = tensor_and_index();
+        let pol = ModePolicy { p: 1, assign: vec![0; 400] };
+        for i in &idx {
+            let m = ModeMetrics::compute(i, &pol);
+            assert_eq!(m.e_max, 400);
+            assert_eq!(m.r_sum, i.nonempty());
+            assert_eq!(m.r_max, i.nonempty());
+            assert!((m.svd_redundancy() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn slice_aligned_policy_has_no_bad_slices() {
+        let (t, idx) = tensor_and_index();
+        // assign whole slices of mode 0 by l % p — every slice good
+        let p = 4;
+        let assign: Vec<u32> = (0..t.nnz()).map(|e| t.coord(0, e) % p).collect();
+        let pol = ModePolicy { p: p as usize, assign };
+        let sharers = Sharers::build(&idx[0], &pol);
+        assert_eq!(sharers.bad_slices(), 0);
+        let m = ModeMetrics::from_sharers(&idx[0], &pol, &sharers);
+        assert_eq!(m.r_sum, idx[0].nonempty());
+    }
+
+    #[test]
+    fn random_policy_metrics_within_bounds() {
+        let (t, idx) = tensor_and_index();
+        let mut rng = Rng::new(3);
+        let p = 5usize;
+        let assign: Vec<u32> = (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect();
+        let pol = ModePolicy { p, assign };
+        for i in &idx {
+            let m = ModeMetrics::compute(i, &pol);
+            assert!(m.r_sum >= i.nonempty());
+            assert!(m.r_sum <= i.nonempty() * p);
+            assert!(m.r_max <= i.num_slices());
+            assert!(m.e_max <= t.nnz());
+            assert_eq!(m.e_counts.iter().sum::<usize>(), t.nnz());
+            assert_eq!(m.r_counts.iter().sum::<usize>(), m.r_sum);
+        }
+    }
+
+    #[test]
+    fn aggregates_compute() {
+        let (t, idx) = tensor_and_index();
+        let mut rng = Rng::new(4);
+        let p = 4usize;
+        let policies: Vec<ModePolicy> = (0..3)
+            .map(|_| ModePolicy {
+                p,
+                assign: (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect(),
+            })
+            .collect();
+        let dist = Distribution {
+            scheme: "rand".into(),
+            p,
+            policies,
+            uni: false,
+            time: DistTime::default(),
+        };
+        let sm = SchemeMetrics::compute(&t, &idx, &dist);
+        let khat = vec![100.0, 100.0, 100.0];
+        assert!(sm.ttm_balance() >= 1.0);
+        assert!(sm.svd_load_normalized(&khat) >= 1.0);
+        assert!(sm.svd_balance(&khat) >= 1.0);
+    }
+}

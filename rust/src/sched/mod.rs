@@ -1,0 +1,78 @@
+//! Distribution schemes (paper §5–§6) and the §4 performance metrics.
+//!
+//! - [`lite`]: the paper's contribution — lightweight, multi-policy,
+//!   provably near-optimal on E_max / R_sum / R_max (Theorem 6.1).
+//! - [`coarse`]: CoarseG — whole slices per rank (optimal R_sum, poor E_max).
+//! - [`medium`]: MediumG — processor-grid medium-grained scheme [25].
+//! - [`hypergraph`]: HyperG — fine-grained via multilevel hypergraph
+//!   partitioning (from-scratch Zoltan stand-in).
+//! - [`metrics`]: E_n^max, R_n^sum, R_n^max + Fig 12 aggregates.
+//! - [`rowmap`]: the σ_n row-index mapping.
+//! - [`samplesort`]: the parallel sample sort Lite's slice ordering uses.
+
+pub mod coarse;
+pub mod hypergraph;
+pub mod lite;
+pub mod medium;
+pub mod metrics;
+pub mod policy;
+pub mod rowmap;
+pub mod samplesort;
+
+pub use coarse::CoarseG;
+pub use hypergraph::HyperG;
+pub use lite::Lite;
+pub use medium::MediumG;
+pub use metrics::{ModeMetrics, SchemeMetrics, Sharers};
+pub use policy::{DistTime, Distribution, ModePolicy, Scheme};
+pub use rowmap::RowMap;
+
+/// Construct a scheme by name (CLI / config entry point).
+pub fn by_name(name: &str) -> Option<Box<dyn Scheme>> {
+    match name.to_ascii_lowercase().as_str() {
+        "lite" => Some(Box::new(Lite)),
+        "coarseg" | "coarse" => Some(Box::new(CoarseG::default())),
+        "coarseg-bpf" | "bpf" => Some(Box::new(CoarseG {
+            strategy: coarse::SliceAssign::BestFit,
+        })),
+        "mediumg" | "medium" => Some(Box::new(MediumG)),
+        "hyperg" | "hyper" => Some(Box::new(HyperG::default())),
+        _ => None,
+    }
+}
+
+/// The paper's four evaluated schemes, in presentation order.
+pub fn all_schemes() -> Vec<Box<dyn Scheme>> {
+    vec![
+        Box::new(CoarseG::default()),
+        Box::new(MediumG),
+        Box::new(HyperG::default()),
+        Box::new(Lite),
+    ]
+}
+
+/// The three lightweight schemes (big-tensor experiments exclude HyperG,
+/// as the paper could not partition the big tensors either).
+pub fn lightweight_schemes() -> Vec<Box<dyn Scheme>> {
+    vec![Box::new(CoarseG::default()), Box::new(MediumG), Box::new(Lite)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["lite", "CoarseG", "mediumg", "HyperG", "bpf"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scheme_lists() {
+        assert_eq!(all_schemes().len(), 4);
+        assert_eq!(lightweight_schemes().len(), 3);
+        assert_eq!(all_schemes()[3].name(), "Lite");
+    }
+}

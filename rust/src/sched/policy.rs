@@ -1,0 +1,179 @@
+//! Distribution policies and schemes (paper §3, "Distribution Schemes").
+//!
+//! A *policy* π_n maps each non-zero element to an owner rank for the
+//! computation along mode n. A *scheme* is the sequence (π_1..π_N);
+//! uni-policy schemes use one π for all modes (one stored tensor copy),
+//! multi-policy schemes customize per mode (N copies).
+
+use crate::tensor::{SliceIndex, SparseTensor};
+use crate::util::rng::Rng;
+
+/// Element → rank assignment along one mode.
+#[derive(Debug, Clone)]
+pub struct ModePolicy {
+    /// World size P.
+    pub p: usize,
+    /// assign[e] = owner rank of element e under this mode's policy.
+    pub assign: Vec<u32>,
+}
+
+impl ModePolicy {
+    /// Per-rank element counts |E_n^p| (the E metric's raw data).
+    pub fn rank_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.p];
+        for &r in &self.assign {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+
+    /// Per-rank element id lists, slice-grouped iteration order preserved
+    /// from the provided slice index (cache-friendly TTM walks).
+    pub fn rank_elements(&self, idx: &SliceIndex) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.p];
+        for l in 0..idx.num_slices() {
+            for &e in idx.slice(l) {
+                out[self.assign[e as usize] as usize].push(e);
+            }
+        }
+        out
+    }
+}
+
+/// Timing of the distribution step (Fig 16): the real measured
+/// construction cost and the simulated parallel cost charged to the
+/// cluster (lightweight schemes run in parallel in the paper; HyperG is
+/// offline-serial).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DistTime {
+    pub serial_secs: f64,
+    pub simulated_secs: f64,
+}
+
+/// A constructed distribution: one policy per mode.
+#[derive(Debug, Clone)]
+pub struct Distribution {
+    pub scheme: String,
+    pub p: usize,
+    /// policies[n] = π_n. Uni-policy schemes store N clones of the same
+    /// assignment (and set `uni` so memory/FM accounting knows).
+    pub policies: Vec<ModePolicy>,
+    pub uni: bool,
+    pub time: DistTime,
+}
+
+impl Distribution {
+    pub fn ndim(&self) -> usize {
+        self.policies.len()
+    }
+
+    /// Number of stored tensor copies (memory model, Fig 17).
+    pub fn tensor_copies(&self) -> usize {
+        if self.uni {
+            1
+        } else {
+            self.ndim()
+        }
+    }
+
+    /// Sanity: every element assigned a valid rank in every mode.
+    pub fn validate(&self, t: &SparseTensor) -> Result<(), String> {
+        if self.policies.len() != t.ndim() {
+            return Err(format!(
+                "{} policies for {}-mode tensor",
+                self.policies.len(),
+                t.ndim()
+            ));
+        }
+        for (n, pol) in self.policies.iter().enumerate() {
+            if pol.assign.len() != t.nnz() {
+                return Err(format!("mode {n}: {} assigns != nnz", pol.assign.len()));
+            }
+            if pol.p != self.p {
+                return Err(format!("mode {n}: policy P mismatch"));
+            }
+            if let Some(&bad) = pol.assign.iter().find(|&&r| r as usize >= self.p) {
+                return Err(format!("mode {n}: rank {bad} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A distribution scheme constructor.
+pub trait Scheme {
+    fn name(&self) -> &'static str;
+    fn uni(&self) -> bool;
+    /// Build the per-mode policies. `idx` holds the slice index of every
+    /// mode. Implementations must fill `Distribution::time.serial_secs`
+    /// (their own measured construction cost) and `simulated_secs` (the
+    /// parallel-execution model documented per scheme).
+    fn distribute(
+        &self,
+        t: &SparseTensor,
+        idx: &[SliceIndex],
+        p: usize,
+        rng: &mut Rng,
+    ) -> Distribution;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_counts_sum_to_nnz() {
+        let pol = ModePolicy { p: 3, assign: vec![0, 1, 1, 2, 0, 0] };
+        assert_eq!(pol.rank_counts(), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn rank_elements_partition() {
+        let mut t = SparseTensor::new(vec![3, 2]);
+        for i in 0..6 {
+            t.push(&[(i % 3) as u32, (i % 2) as u32], 1.0);
+        }
+        let idx = SliceIndex::build(&t, 0);
+        let pol = ModePolicy { p: 2, assign: vec![0, 1, 0, 1, 0, 1] };
+        let per_rank = pol.rank_elements(&idx);
+        let total: usize = per_rank.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 6);
+        for (r, elems) in per_rank.iter().enumerate() {
+            for &e in elems {
+                assert_eq!(pol.assign[e as usize] as usize, r);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_rank() {
+        let mut t = SparseTensor::new(vec![2, 2]);
+        t.push(&[0, 0], 1.0);
+        let d = Distribution {
+            scheme: "x".into(),
+            p: 2,
+            policies: vec![
+                ModePolicy { p: 2, assign: vec![5] },
+                ModePolicy { p: 2, assign: vec![0] },
+            ],
+            uni: false,
+            time: DistTime::default(),
+        };
+        assert!(d.validate(&t).is_err());
+    }
+
+    #[test]
+    fn copies_follow_uni_flag() {
+        let d = Distribution {
+            scheme: "x".into(),
+            p: 2,
+            policies: vec![ModePolicy { p: 2, assign: vec![] }; 3],
+            uni: true,
+            time: DistTime::default(),
+        };
+        assert_eq!(d.tensor_copies(), 1);
+        let mut d2 = d.clone();
+        d2.uni = false;
+        assert_eq!(d2.tensor_copies(), 3);
+    }
+}

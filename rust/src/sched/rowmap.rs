@@ -1,0 +1,140 @@
+//! The row-index mapping σ_n (paper §3/§5): assigns each row index
+//! l ∈ [1, L_n] of the penultimate matrix to an owner rank. The owner is
+//! chosen among the ranks *sharing* Slice_n^l (so the x-query reduction
+//! terminates at a rank that already holds a partial row), balancing the
+//! number of owned rows across ranks — the paper's stated policy
+//! ("taking into account communication load balance").
+
+use super::metrics::Sharers;
+
+#[derive(Debug, Clone)]
+pub struct RowMap {
+    /// owner[l] = σ_n(l).
+    pub owner: Vec<u32>,
+    pub p: usize,
+}
+
+impl RowMap {
+    /// Greedy min-load owner among sharers. Empty slices (no sharers) get
+    /// round-robin owners — their rows are identically zero but the
+    /// Lanczos vectors still need a home for every index.
+    pub fn build(sharers: &Sharers, p: usize) -> RowMap {
+        let l_n = sharers.num_slices();
+        let mut owned = vec![0u32; p];
+        let mut owner = vec![0u32; l_n];
+        // process most-constrained slices first (fewest sharers), so
+        // single-sharer slices don't get starved by flexible ones
+        let mut order: Vec<u32> = (0..l_n as u32).collect();
+        order.sort_by_key(|&l| sharers.of(l as usize).len());
+        let mut rr = 0u32;
+        for &lu in &order {
+            let l = lu as usize;
+            let cands = sharers.of(l);
+            let pick = if cands.is_empty() {
+                let r = rr % p as u32;
+                rr += 1;
+                r
+            } else {
+                *cands
+                    .iter()
+                    .min_by_key(|&&r| owned[r as usize])
+                    .expect("nonempty cands")
+            };
+            owner[l] = pick;
+            owned[pick as usize] += 1;
+        }
+        RowMap { owner, p }
+    }
+
+    #[inline]
+    pub fn of(&self, l: usize) -> u32 {
+        self.owner[l]
+    }
+
+    /// Rows owned per rank (communication balance diagnostic).
+    pub fn owned_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.p];
+        for &r in &self.owner {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+
+    /// Row indices owned by each rank.
+    pub fn rows_of_rank(&self) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.p];
+        for (l, &r) in self.owner.iter().enumerate() {
+            out[r as usize].push(l as u32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::policy::ModePolicy;
+    use crate::tensor::{SliceIndex, SparseTensor};
+    use crate::util::rng::Rng;
+
+    fn setup(p: usize, seed: u64) -> (SliceIndex, ModePolicy) {
+        let mut rng = Rng::new(seed);
+        let t = SparseTensor::random(vec![40, 6, 6], 600, &mut rng);
+        let idx = SliceIndex::build(&t, 0);
+        let assign: Vec<u32> =
+            (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect();
+        (idx, ModePolicy { p, assign })
+    }
+
+    #[test]
+    fn owner_is_a_sharer_for_nonempty_slices() {
+        let (idx, pol) = setup(4, 1);
+        let sharers = Sharers::build(&idx, &pol);
+        let map = RowMap::build(&sharers, 4);
+        for l in 0..sharers.num_slices() {
+            let s = sharers.of(l);
+            if !s.is_empty() {
+                assert!(s.contains(&map.of(l)), "slice {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_row_has_an_owner_in_range() {
+        let (idx, pol) = setup(3, 2);
+        let sharers = Sharers::build(&idx, &pol);
+        let map = RowMap::build(&sharers, 3);
+        assert_eq!(map.owner.len(), idx.num_slices());
+        assert!(map.owner.iter().all(|&r| (r as usize) < 3));
+        assert_eq!(map.owned_counts().iter().sum::<usize>(), idx.num_slices());
+    }
+
+    #[test]
+    fn balances_when_everyone_shares_everything() {
+        // all ranks share every slice -> owners should spread evenly
+        let mut t = SparseTensor::new(vec![12, 2, 2]);
+        for l in 0..12u32 {
+            for r in 0..4u32 {
+                t.push(&[l, 0, 0], (r + 1) as f32);
+            }
+        }
+        let idx = SliceIndex::build(&t, 0);
+        // element i belongs to rank i%4; each slice has one element per rank
+        let assign: Vec<u32> = (0..t.nnz()).map(|e| (e % 4) as u32).collect();
+        let pol = ModePolicy { p: 4, assign };
+        let sharers = Sharers::build(&idx, &pol);
+        let map = RowMap::build(&sharers, 4);
+        let counts = map.owned_counts();
+        assert_eq!(counts, vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn rows_of_rank_partitions() {
+        let (idx, pol) = setup(5, 3);
+        let sharers = Sharers::build(&idx, &pol);
+        let map = RowMap::build(&sharers, 5);
+        let by_rank = map.rows_of_rank();
+        let total: usize = by_rank.iter().map(|v| v.len()).sum();
+        assert_eq!(total, idx.num_slices());
+    }
+}

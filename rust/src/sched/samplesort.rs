@@ -1,0 +1,127 @@
+//! Parallel sample sort (Hightower–Prins–Reif, the algorithm the paper's
+//! Lite implementation uses to sort slices by cardinality in parallel,
+//! §6.1). Executed here on one host but structured exactly as the
+//! parallel algorithm — sample, splitter selection, bucket partition,
+//! independent per-bucket sorts — with each bucket's sort individually
+//! timed so the simulated cluster can charge the makespan.
+
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct SampleSortOutcome {
+    /// Indices of the input, sorted ascending by key.
+    pub order: Vec<u32>,
+    /// Measured seconds of the slowest bucket sort (the parallel critical
+    /// path), plus the serial sampling/partition prefix divided across
+    /// ranks by the caller.
+    pub max_bucket_secs: f64,
+    /// Measured seconds of the sampling + splitter + partition prefix.
+    pub prefix_secs: f64,
+}
+
+/// Sort `keys` (by value ascending, ties by index for determinism) with a
+/// `p`-bucket sample sort. Returns the permutation and the timing split.
+pub fn sample_sort(keys: &[u32], p: usize, rng: &mut Rng) -> SampleSortOutcome {
+    let n = keys.len();
+    let t0 = Instant::now();
+    if n == 0 {
+        return SampleSortOutcome {
+            order: Vec::new(),
+            max_bucket_secs: 0.0,
+            prefix_secs: t0.elapsed().as_secs_f64(),
+        };
+    }
+    let buckets = p.max(1).min(n);
+    // oversample: s·p samples, take every s-th as splitter
+    let oversample = 8usize;
+    let mut sample: Vec<u32> = (0..buckets * oversample)
+        .map(|_| keys[rng.usize_below(n)])
+        .collect();
+    sample.sort_unstable();
+    let splitters: Vec<u32> = (1..buckets)
+        .map(|i| sample[i * oversample])
+        .collect();
+    // partition into buckets
+    let mut bucket_of = vec![0u32; n];
+    let mut counts = vec![0usize; buckets];
+    for (i, &k) in keys.iter().enumerate() {
+        // first splitter > k  (upper_bound)
+        let b = splitters.partition_point(|&s| s <= k);
+        bucket_of[i] = b as u32;
+        counts[b] += 1;
+    }
+    let mut starts = vec![0usize; buckets + 1];
+    for b in 0..buckets {
+        starts[b + 1] = starts[b] + counts[b];
+    }
+    let mut bucketed = vec![0u32; n];
+    let mut cursor = starts.clone();
+    for (i, &b) in bucket_of.iter().enumerate() {
+        bucketed[cursor[b as usize]] = i as u32;
+        cursor[b as usize] += 1;
+    }
+    let prefix_secs = t0.elapsed().as_secs_f64();
+    // independent bucket sorts — the parallel part
+    let mut max_bucket_secs = 0.0f64;
+    for b in 0..buckets {
+        let tb = Instant::now();
+        let seg = &mut bucketed[starts[b]..starts[b + 1]];
+        seg.sort_unstable_by_key(|&i| (keys[i as usize], i));
+        max_bucket_secs = max_bucket_secs.max(tb.elapsed().as_secs_f64());
+    }
+    SampleSortOutcome { order: bucketed, max_bucket_secs, prefix_secs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorts_correctly_various_p() {
+        let mut rng = Rng::new(2);
+        let keys: Vec<u32> = (0..5000).map(|_| rng.below(1000) as u32).collect();
+        for p in [1, 2, 7, 16, 64] {
+            let mut r = Rng::new(99);
+            let out = sample_sort(&keys, p, &mut r);
+            assert_eq!(out.order.len(), keys.len());
+            for w in out.order.windows(2) {
+                assert!(keys[w[0] as usize] <= keys[w[1] as usize], "p={p}");
+            }
+            // permutation check
+            let mut seen = vec![false; keys.len()];
+            for &i in &out.order {
+                assert!(!seen[i as usize]);
+                seen[i as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let keys = vec![5u32; 100];
+        let mut rng = Rng::new(1);
+        let out = sample_sort(&keys, 4, &mut rng);
+        let expect: Vec<u32> = (0..100).collect();
+        assert_eq!(out.order, expect);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let mut rng = Rng::new(1);
+        assert!(sample_sort(&[], 4, &mut rng).order.is_empty());
+        assert_eq!(sample_sort(&[42], 4, &mut rng).order, vec![0]);
+    }
+
+    #[test]
+    fn handles_skewed_keys() {
+        // all-equal except a few: buckets degenerate but output must sort
+        let mut keys = vec![7u32; 2000];
+        keys[1999] = 1;
+        keys[0] = 9;
+        let mut rng = Rng::new(5);
+        let out = sample_sort(&keys, 8, &mut rng);
+        assert_eq!(keys[out.order[0] as usize], 1);
+        assert_eq!(keys[*out.order.last().unwrap() as usize], 9);
+    }
+}

@@ -1,0 +1,187 @@
+//! Sparse tensor in coordinate (COO) format, structure-of-arrays layout.
+//!
+//! This is the paper's input representation (§3): each non-zero element e
+//! has a coordinate vector (l_1..l_N), 0-based here, and a value val(e).
+//! SoA keeps per-mode coordinate streams contiguous — the TTM gather walks
+//! exactly two (3-D) or three (4-D) of them plus vals.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SparseTensor {
+    /// Mode lengths L_1..L_N.
+    pub dims: Vec<u32>,
+    /// coords[n][e] = n-th coordinate of element e (0-based).
+    pub coords: Vec<Vec<u32>>,
+    /// vals[e] = val(e).
+    pub vals: Vec<f32>,
+}
+
+impl SparseTensor {
+    pub fn new(dims: Vec<u32>) -> Self {
+        let n = dims.len();
+        SparseTensor { dims, coords: vec![Vec::new(); n], vals: Vec::new() }
+    }
+
+    pub fn with_capacity(dims: Vec<u32>, cap: usize) -> Self {
+        let n = dims.len();
+        SparseTensor {
+            dims,
+            coords: vec![Vec::with_capacity(cap); n],
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of modes N.
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Number of non-zero elements.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one element. Panics (debug) on out-of-range coordinates.
+    pub fn push(&mut self, coord: &[u32], val: f32) {
+        debug_assert_eq!(coord.len(), self.ndim());
+        for (n, &c) in coord.iter().enumerate() {
+            debug_assert!(c < self.dims[n], "coord {c} >= L_{n}={}", self.dims[n]);
+            self.coords[n].push(c);
+        }
+        self.vals.push(val);
+    }
+
+    /// Coordinate of element e along mode n.
+    #[inline]
+    pub fn coord(&self, n: usize, e: usize) -> u32 {
+        self.coords[n][e]
+    }
+
+    /// Total dense size Π L_n as f64 (overflows u64 for the paper's tensors).
+    pub fn dense_size(&self) -> f64 {
+        self.dims.iter().map(|&d| d as f64).product()
+    }
+
+    /// Sparsity = nnz / dense size (Fig 9 column).
+    pub fn sparsity(&self) -> f64 {
+        self.nnz() as f64 / self.dense_size()
+    }
+
+    /// Frobenius norm squared of the tensor (= Σ val²; used for fit).
+    pub fn norm_sq(&self) -> f64 {
+        self.vals.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Deduplicate repeated coordinates by summing values (generators and
+    /// file readers may produce duplicates). Sorts elements lexicographically.
+    pub fn coalesce(&mut self) {
+        let nnz = self.nnz();
+        let n = self.ndim();
+        let mut order: Vec<u32> = (0..nnz as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            for m in 0..n {
+                let (ca, cb) = (self.coords[m][a as usize], self.coords[m][b as usize]);
+                if ca != cb {
+                    return ca.cmp(&cb);
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        let mut out = SparseTensor::with_capacity(self.dims.clone(), nnz);
+        let mut coord = vec![0u32; n];
+        for &eu in &order {
+            let e = eu as usize;
+            for m in 0..n {
+                coord[m] = self.coords[m][e];
+            }
+            let same = out.nnz() > 0
+                && (0..n).all(|m| out.coords[m][out.nnz() - 1] == coord[m]);
+            if same {
+                let last = out.vals.len() - 1;
+                out.vals[last] += self.vals[e];
+            } else {
+                out.push(&coord, self.vals[e]);
+            }
+        }
+        *self = out;
+    }
+
+    /// Random tensor with i.i.d. uniform coordinates (test helper; the
+    /// calibrated generators live in tensor::synth).
+    pub fn random(dims: Vec<u32>, nnz: usize, rng: &mut Rng) -> Self {
+        let mut t = SparseTensor::with_capacity(dims.clone(), nnz);
+        let n = dims.len();
+        let mut coord = vec![0u32; n];
+        for _ in 0..nnz {
+            for m in 0..n {
+                coord[m] = rng.below(dims[m] as u64) as u32;
+            }
+            t.push(&coord, rng.f32() * 2.0 - 1.0);
+        }
+        t
+    }
+
+    /// Memory footprint of one stored copy in bytes (u32 per mode + f32).
+    pub fn bytes_per_element(&self) -> usize {
+        self.ndim() * 4 + 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read_back() {
+        let mut t = SparseTensor::new(vec![3, 4, 5]);
+        t.push(&[0, 1, 2], 1.5);
+        t.push(&[2, 3, 4], -2.0);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.coord(0, 1), 2);
+        assert_eq!(t.coord(2, 0), 2);
+        assert_eq!(t.ndim(), 3);
+    }
+
+    #[test]
+    fn sparsity_and_norm() {
+        let mut t = SparseTensor::new(vec![10, 10]);
+        t.push(&[0, 0], 3.0);
+        t.push(&[1, 1], 4.0);
+        assert!((t.sparsity() - 0.02).abs() < 1e-12);
+        assert!((t.norm_sq() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coalesce_merges_duplicates() {
+        let mut t = SparseTensor::new(vec![4, 4]);
+        t.push(&[1, 2], 1.0);
+        t.push(&[0, 0], 5.0);
+        t.push(&[1, 2], 2.5);
+        t.coalesce();
+        assert_eq!(t.nnz(), 2);
+        // sorted lexicographically: (0,0) then (1,2)
+        assert_eq!(t.coord(0, 0), 0);
+        assert!((t.vals[1] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_respects_dims() {
+        let mut rng = Rng::new(1);
+        let t = SparseTensor::random(vec![7, 3, 9], 500, &mut rng);
+        assert_eq!(t.nnz(), 500);
+        for n in 0..3 {
+            assert!(t.coords[n].iter().all(|&c| c < t.dims[n]));
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic]
+    fn out_of_range_coord_panics_in_debug() {
+        let mut t = SparseTensor::new(vec![2, 2]);
+        t.push(&[2, 0], 1.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! The eight benchmark tensors of Fig 9 as calibrated synthetic analogues.
+//!
+//! Scaling (DESIGN.md §2): medium tensors are scaled ~1/400 in nnz, big
+//! tensors ~1/1000, with mode lengths scaled to preserve the average slice
+//! size nnz/L_n wherever the dense size permits (patents and nell2 are
+//! near-dense; their dims shrink less so nnz ≤ dense size holds). Per-mode
+//! Zipf exponents reproduce the qualitative skew the paper reports: enron's
+//! giant slices (5M elements vs a 105K average at 512 ranks, §7.2), the
+//! very large slices of the big tensors, and the milder skew of nell2.
+
+use super::coo::SparseTensor;
+use super::synth::{generate, ModeDist};
+use crate::util::table::{fmt_si, Table};
+
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub dims: Vec<u32>,
+    pub nnz: usize,
+    pub zipf: Vec<f64>,
+    pub seed: u64,
+    pub big: bool,
+    /// Paper's figures for the table (Fig 9 parity check).
+    pub paper_nnz: f64,
+}
+
+impl DatasetSpec {
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn generate(&self) -> SparseTensor {
+        let modes: Vec<ModeDist> = self
+            .dims
+            .iter()
+            .zip(&self.zipf)
+            .map(|(&len, &zipf)| ModeDist { len, zipf })
+            .collect();
+        generate(&modes, self.nnz, self.seed)
+    }
+
+    /// Scale the spec (dims and nnz) by `f` — used by quick tests and the
+    /// smoke configurations so they stay O(seconds).
+    pub fn scaled(&self, f: f64) -> DatasetSpec {
+        let mut s = self.clone();
+        s.dims = s
+            .dims
+            .iter()
+            .map(|&d| ((d as f64 * f).round() as u32).max(4))
+            .collect();
+        s.nnz = ((s.nnz as f64 * f).round() as usize).max(64);
+        s
+    }
+}
+
+/// All eight analogues, in the paper's order (Fig 9).
+pub fn all() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "delicious",
+            dims: vec![1330, 43_000, 6000, 16],
+            nnz: 350_000,
+            zipf: vec![0.8, 1.0, 0.9, 0.6],
+            seed: 0xD311,
+            big: false,
+            paper_nnz: 140e6,
+        },
+        DatasetSpec {
+            name: "enron",
+            dims: vec![64, 48, 2440, 16],
+            nnz: 135_000,
+            zipf: vec![1.6, 1.1, 0.9, 0.7],
+            seed: 0xE4701,
+            big: false,
+            paper_nnz: 54e6,
+        },
+        DatasetSpec {
+            name: "flickr",
+            dims: vec![800, 70_000, 4000, 12],
+            nnz: 280_000,
+            zipf: vec![1.0, 1.1, 0.9, 0.5],
+            seed: 0xF11C4,
+            big: false,
+            paper_nnz: 112e6,
+        },
+        DatasetSpec {
+            name: "nell1",
+            dims: vec![7250, 5250, 63_500],
+            nnz: 357_000,
+            zipf: vec![1.0, 1.0, 1.1],
+            seed: 0x4E111,
+            big: false,
+            paper_nnz: 143e6,
+        },
+        DatasetSpec {
+            name: "nell2",
+            dims: vec![300, 225, 700],
+            nnz: 192_000,
+            zipf: vec![0.9, 0.9, 0.9],
+            seed: 0x4E112,
+            big: false,
+            paper_nnz: 77e6,
+        },
+        DatasetSpec {
+            name: "amazon",
+            dims: vec![4800, 1700, 1800],
+            nnz: 1_700_000,
+            zipf: vec![1.1, 1.0, 1.0],
+            seed: 0xA307,
+            big: true,
+            paper_nnz: 1.7e9,
+        },
+        DatasetSpec {
+            name: "patents",
+            dims: vec![46, 2390, 2390],
+            nnz: 3_500_000,
+            zipf: vec![0.5, 0.9, 0.5],
+            seed: 0x9A7E,
+            big: true,
+            paper_nnz: 3.5e9,
+        },
+        DatasetSpec {
+            name: "reddit",
+            dims: vec![8200, 176, 8100],
+            nnz: 4_600_000,
+            zipf: vec![1.2, 0.9, 1.2],
+            seed: 0x4EDD17,
+            big: true,
+            paper_nnz: 4.6e9,
+        },
+    ]
+}
+
+pub fn medium() -> Vec<DatasetSpec> {
+    all().into_iter().filter(|d| !d.big).collect()
+}
+
+pub fn big() -> Vec<DatasetSpec> {
+    all().into_iter().filter(|d| d.big).collect()
+}
+
+pub fn by_name(name: &str) -> Option<DatasetSpec> {
+    all().into_iter().find(|d| d.name == name)
+}
+
+/// Fig 9: the dataset table (synthetic analogue columns + paper nnz).
+pub fn fig9_table() -> Table {
+    let mut t = Table::new(
+        "Fig 9 — tensor datasets (synthetic analogues)",
+        &["tensor", "L1", "L2", "L3", "L4", "nnz", "sparsity", "paper nnz"],
+    );
+    for d in all() {
+        let dense: f64 = d.dims.iter().map(|&x| x as f64).product();
+        let l = |i: usize| {
+            d.dims
+                .get(i)
+                .map(|&x| fmt_si(x as f64))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![
+            d.name.to_string(),
+            l(0),
+            l(1),
+            l(2),
+            l(3),
+            fmt_si(d.nnz as f64),
+            format!("{:.1e}", d.nnz as f64 / dense),
+            fmt_si(d.paper_nnz),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::slices::SliceIndex;
+
+    #[test]
+    fn eight_datasets_in_paper_order() {
+        let ds = all();
+        assert_eq!(ds.len(), 8);
+        assert_eq!(ds[0].name, "delicious");
+        assert_eq!(ds[7].name, "reddit");
+        assert_eq!(medium().len(), 5);
+        assert_eq!(big().len(), 3);
+    }
+
+    #[test]
+    fn dims_match_paper_arity() {
+        for d in all() {
+            match d.name {
+                "delicious" | "enron" | "flickr" => assert_eq!(d.ndim(), 4),
+                _ => assert_eq!(d.ndim(), 3),
+            }
+            assert_eq!(d.zipf.len(), d.ndim());
+        }
+    }
+
+    #[test]
+    fn nnz_fits_dense_size() {
+        for d in all() {
+            let dense: f64 = d.dims.iter().map(|&x| x as f64).product();
+            assert!(
+                (d.nnz as f64) < dense,
+                "{}: nnz {} >= dense {}",
+                d.name,
+                d.nnz,
+                dense
+            );
+        }
+    }
+
+    #[test]
+    fn enron_has_giant_slices() {
+        // the paper's imbalance example (§7.2): enron's biggest slice is
+        // orders of magnitude above the average.
+        let d = by_name("enron").unwrap();
+        let t = d.generate();
+        let idx = SliceIndex::build(&t, 0);
+        let avg = t.nnz() as f64 / t.dims[0] as f64;
+        assert!(
+            idx.max_slice_len() as f64 / avg > 10.0,
+            "max/avg = {}",
+            idx.max_slice_len() as f64 / avg
+        );
+    }
+
+    #[test]
+    fn fig9_renders_all_rows() {
+        let t = fig9_table();
+        let r = t.render();
+        for d in all() {
+            assert!(r.contains(d.name));
+        }
+    }
+
+    #[test]
+    fn scaled_floor() {
+        let d = by_name("patents").unwrap().scaled(0.001);
+        assert!(d.dims.iter().all(|&x| x >= 4));
+        assert!(d.nnz >= 64);
+    }
+}

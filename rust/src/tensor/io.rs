@@ -1,0 +1,137 @@
+//! FROSTT `.tns` tensor I/O (http://frostt.io — the paper's benchmark
+//! repository). Format: whitespace-separated lines of N 1-based integer
+//! coordinates followed by a value; `#` comments.
+//!
+//! The synthetic analogues (tensor::synth) are the default workload on this
+//! testbed, but any real FROSTT download drops in through this reader.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::coo::SparseTensor;
+
+/// Read a `.tns` file. `ndim` is inferred from the first data line; mode
+/// lengths from the coordinate maxima.
+pub fn read_tns(path: &Path) -> std::io::Result<SparseTensor> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::with_capacity(1 << 20, f);
+    let mut coords: Vec<Vec<u32>> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    let mut dims: Vec<u32> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let body = line.split('#').next().unwrap_or("").trim();
+        if body.is_empty() {
+            continue;
+        }
+        let mut parts = body.split_whitespace();
+        let fields: Vec<&str> = parts.by_ref().collect();
+        if fields.len() < 2 {
+            return Err(bad(lineno, "need at least 1 coordinate and a value"));
+        }
+        let n = fields.len() - 1;
+        if coords.is_empty() {
+            coords = vec![Vec::new(); n];
+            dims = vec![0; n];
+        } else if coords.len() != n {
+            return Err(bad(lineno, "inconsistent arity"));
+        }
+        for (m, fld) in fields[..n].iter().enumerate() {
+            let c1: u64 = fld.parse().map_err(|_| bad(lineno, "bad coordinate"))?;
+            if c1 == 0 {
+                return Err(bad(lineno, "coordinates are 1-based"));
+            }
+            let c0 = (c1 - 1) as u32;
+            coords[m].push(c0);
+            if c0 + 1 > dims[m] {
+                dims[m] = c0 + 1;
+            }
+        }
+        let v: f32 = fields[n].parse().map_err(|_| bad(lineno, "bad value"))?;
+        vals.push(v);
+    }
+    if coords.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "empty tensor file",
+        ));
+    }
+    Ok(SparseTensor { dims, coords, vals })
+}
+
+/// Write a `.tns` file (1-based coordinates, one element per line).
+pub fn write_tns(t: &SparseTensor, path: &Path) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    for e in 0..t.nnz() {
+        for n in 0..t.ndim() {
+            write!(w, "{} ", t.coord(n, e) + 1)?;
+        }
+        writeln!(w, "{}", t.vals[e])?;
+    }
+    w.flush()
+}
+
+fn bad(lineno: usize, msg: &str) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("line {}: {msg}", lineno + 1),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(21);
+        let t = SparseTensor::random(vec![20, 10, 30], 200, &mut rng);
+        let dir = std::env::temp_dir().join("tucker_lite_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tns");
+        write_tns(&t, &path).unwrap();
+        let back = read_tns(&path).unwrap();
+        assert_eq!(back.nnz(), t.nnz());
+        for n in 0..3 {
+            assert_eq!(back.coords[n], t.coords[n]);
+            // dims inferred from maxima, so <= original
+            assert!(back.dims[n] <= t.dims[n]);
+        }
+        for (a, b) in back.vals.iter().zip(&t.vals) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parses_comments_and_blanks() {
+        let text = "# header\n\n1 2 3 1.5\n2 1 1 -2 # inline\n";
+        let dir = std::env::temp_dir().join("tucker_lite_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.tns");
+        std::fs::write(&path, text).unwrap();
+        let t = read_tns(&path).unwrap();
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.dims, vec![2, 2, 3]);
+        assert_eq!(t.coord(0, 0), 0); // 1-based -> 0-based
+    }
+
+    #[test]
+    fn rejects_zero_based_coords() {
+        let dir = std::env::temp_dir().join("tucker_lite_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("z.tns");
+        std::fs::write(&path, "0 1 1 3.0\n").unwrap();
+        assert!(read_tns(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_arity() {
+        let dir = std::env::temp_dir().join("tucker_lite_io_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.tns");
+        std::fs::write(&path, "1 1 1 3.0\n1 1 2.0\n").unwrap();
+        assert!(read_tns(&path).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Sparse tensor substrate: COO storage, slice indexing, FROSTT I/O and the
+//! calibrated synthetic benchmark datasets (Fig 9 analogues).
+
+pub mod coo;
+pub mod datasets;
+pub mod io;
+pub mod slices;
+pub mod synth;
+
+pub use coo::SparseTensor;
+pub use slices::SliceIndex;

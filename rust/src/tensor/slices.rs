@@ -1,0 +1,143 @@
+//! Slice structure of a sparse tensor (paper §3): for mode n, Slice_n^l is
+//! the set of elements whose n-th coordinate is l. Distribution schemes and
+//! the TTM reformulation (Eq. 1) are all slice-driven, so we precompute a
+//! CSR-like grouping per mode: element ids bucketed by slice index.
+
+use super::coo::SparseTensor;
+
+/// CSR-like grouping of elements by their mode-n coordinate.
+#[derive(Debug, Clone)]
+pub struct SliceIndex {
+    /// Mode this index is for.
+    pub mode: usize,
+    /// offsets[l]..offsets[l+1] delimit elems of Slice_n^l; len = L_n + 1.
+    pub offsets: Vec<u32>,
+    /// Element ids grouped by slice.
+    pub elems: Vec<u32>,
+}
+
+impl SliceIndex {
+    /// Build by counting sort over the mode-n coordinate stream — O(nnz + L_n).
+    pub fn build(t: &SparseTensor, mode: usize) -> Self {
+        let ln = t.dims[mode] as usize;
+        let coords = &t.coords[mode];
+        let mut counts = vec![0u32; ln + 1];
+        for &c in coords {
+            counts[c as usize + 1] += 1;
+        }
+        for l in 0..ln {
+            counts[l + 1] += counts[l];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut elems = vec![0u32; t.nnz()];
+        for (e, &c) in coords.iter().enumerate() {
+            let slot = cursor[c as usize];
+            elems[slot as usize] = e as u32;
+            cursor[c as usize] += 1;
+        }
+        SliceIndex { mode, offsets, elems }
+    }
+
+    /// Number of slices (= L_n).
+    #[inline]
+    pub fn num_slices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Elements of Slice_n^l.
+    #[inline]
+    pub fn slice(&self, l: usize) -> &[u32] {
+        let a = self.offsets[l] as usize;
+        let b = self.offsets[l + 1] as usize;
+        &self.elems[a..b]
+    }
+
+    /// |Slice_n^l|.
+    #[inline]
+    pub fn slice_len(&self, l: usize) -> usize {
+        (self.offsets[l + 1] - self.offsets[l]) as usize
+    }
+
+    /// Slice sizes as a vector (input to the schemes' sorting stages).
+    pub fn sizes(&self) -> Vec<u32> {
+        (0..self.num_slices())
+            .map(|l| self.offsets[l + 1] - self.offsets[l])
+            .collect()
+    }
+
+    /// Largest slice cardinality (drives CoarseG's imbalance, §7.2).
+    pub fn max_slice_len(&self) -> usize {
+        (0..self.num_slices()).map(|l| self.slice_len(l)).max().unwrap_or(0)
+    }
+
+    /// Number of non-empty slices.
+    pub fn nonempty(&self) -> usize {
+        (0..self.num_slices()).filter(|&l| self.slice_len(l) > 0).count()
+    }
+}
+
+/// Slice indices for all modes of a tensor.
+pub fn build_all(t: &SparseTensor) -> Vec<SliceIndex> {
+    (0..t.ndim()).map(|n| SliceIndex::build(t, n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fig3_tensor() -> SparseTensor {
+        // the paper's Figure 3 example: 8 elements, L_1 = 3,
+        // Slice_1^0 = {e1,e3,e6}, Slice_1^1 = {e2,e7}, Slice_1^2 = {e4,e5,e8}
+        // (1-based in the paper; 0-based ids/coords here)
+        let mut t = SparseTensor::new(vec![3, 4, 4]);
+        let mode0 = [0, 1, 0, 2, 2, 0, 1, 2];
+        for (i, &c0) in mode0.iter().enumerate() {
+            t.push(&[c0, (i % 4) as u32, ((i * 2) % 4) as u32], i as f32 + 1.0);
+        }
+        t
+    }
+
+    #[test]
+    fn groups_match_figure3() {
+        let t = fig3_tensor();
+        let idx = SliceIndex::build(&t, 0);
+        assert_eq!(idx.num_slices(), 3);
+        assert_eq!(idx.slice(0), &[0, 2, 5]);
+        assert_eq!(idx.slice(1), &[1, 6]);
+        assert_eq!(idx.slice(2), &[3, 4, 7]);
+        assert_eq!(idx.slice_len(0), 3);
+        assert_eq!(idx.max_slice_len(), 3);
+        assert_eq!(idx.nonempty(), 3);
+    }
+
+    #[test]
+    fn all_elements_appear_exactly_once() {
+        let mut rng = Rng::new(9);
+        let t = SparseTensor::random(vec![11, 7, 5], 300, &mut rng);
+        for n in 0..3 {
+            let idx = SliceIndex::build(&t, n);
+            let mut seen = vec![false; t.nnz()];
+            for l in 0..idx.num_slices() {
+                for &e in idx.slice(l) {
+                    assert!(!seen[e as usize]);
+                    seen[e as usize] = true;
+                    assert_eq!(t.coord(n, e as usize), l as u32);
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn empty_slices_allowed() {
+        let mut t = SparseTensor::new(vec![5, 2]);
+        t.push(&[4, 0], 1.0);
+        let idx = SliceIndex::build(&t, 0);
+        assert_eq!(idx.nonempty(), 1);
+        assert_eq!(idx.slice_len(0), 0);
+        assert_eq!(idx.slice_len(4), 1);
+        assert_eq!(idx.sizes(), vec![0, 0, 0, 0, 1]);
+    }
+}

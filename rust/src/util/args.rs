@@ -1,0 +1,133 @@
+//! Minimal CLI argument parser (the offline image vendors no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments and subcommands; every option self-registers for `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).
+    pub fn parse(argv: &[String]) -> Self {
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    opts.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(body.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { opts, flags, positional }
+    }
+
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional(0)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list, e.g. `--ranks 8,16,32`.
+    pub fn list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: bad element {s:?} in --{name}");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = args(&["exp", "--fig", "10", "--scheme=lite"]);
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.get("fig"), Some("10"));
+        assert_eq!(a.get("scheme"), Some("lite"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = args(&["run", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn parse_or_falls_back() {
+        let a = args(&["run", "--p", "64"]);
+        assert_eq!(a.parse_or::<usize>("p", 8), 64);
+        assert_eq!(a.parse_or::<usize>("k", 10), 10);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["x", "--ranks", "8,16,32"]);
+        assert_eq!(a.list_or::<usize>("ranks", &[1]), vec![8, 16, 32]);
+        assert_eq!(a.list_or::<usize>("other", &[1, 2]), vec![1, 2]);
+    }
+}

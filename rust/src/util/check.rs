@@ -1,0 +1,133 @@
+//! Mini property-testing framework (offline image vendors no proptest).
+//!
+//! `props::run` drives N randomized cases from a seeded RNG; on failure it
+//! re-runs with progressively simpler size hints to report a smaller
+//! counterexample (linear shrinking on the `size` parameter — not full
+//! structural shrinking, but enough to localize invariant violations).
+//!
+//! Used throughout the test suites, most importantly for the Theorem 6.1
+//! invariants of the Lite scheme (sched::lite tests).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Case {
+    /// Case index within the run.
+    pub index: usize,
+    /// Size hint in [min_size, max_size]; generators should scale with it.
+    pub size: usize,
+    /// Seed for this case's RNG.
+    pub seed: u64,
+}
+
+pub struct Runner {
+    pub cases: usize,
+    pub min_size: usize,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner { cases: 64, min_size: 1, max_size: 200, seed: 0xC0FFEE }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize, max_size: usize) -> Self {
+        Runner { cases, max_size, ..Default::default() }
+    }
+
+    /// Run `prop` on `cases` randomized cases; panic with a reproducible
+    /// counterexample description on the smallest failing size found.
+    pub fn run<F>(&self, name: &str, prop: F)
+    where
+        F: Fn(Case, &mut Rng) -> Result<(), String>,
+    {
+        let mut meta = Rng::new(self.seed);
+        let mut failure: Option<(Case, String)> = None;
+        for index in 0..self.cases {
+            let span = (self.max_size - self.min_size).max(1);
+            let size = self.min_size + (index * span) / self.cases.max(1)
+                + meta.usize_below(span / 4 + 1);
+            let seed = meta.next_u64();
+            let case = Case { index, size: size.min(self.max_size), seed };
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(case, &mut rng) {
+                failure = Some((case, msg));
+                break;
+            }
+        }
+        let Some((case, msg)) = failure else { return };
+        // shrink: binary-search the smallest failing size for this seed
+        // (exact under monotone failure, a good localizer otherwise)
+        let mut smallest = (case, msg);
+        let (mut lo, mut hi) = (self.min_size, case.size);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let c = Case { size: mid, ..case };
+            let mut rng = Rng::new(case.seed);
+            match prop(c, &mut rng) {
+                Err(m) => {
+                    smallest = (c, m);
+                    hi = mid;
+                }
+                Ok(()) => lo = mid + 1,
+            }
+        }
+        panic!(
+            "property '{}' failed: case #{} size={} seed={:#x}: {}",
+            name, smallest.0.index, smallest.0.size, smallest.0.seed, smallest.1
+        );
+    }
+}
+
+/// Convenience: assert with a formatted error for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        Runner::new(32, 50).run("sum-commutes", |case, rng| {
+            let a = rng.below(case.size as u64 + 1);
+            let b = rng.below(case.size as u64 + 1);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        Runner::new(8, 50).run("always-fails", |_case, _rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_reports_small_size() {
+        let result = std::panic::catch_unwind(|| {
+            Runner::new(16, 128).run("fails-when-big", |case, _rng| {
+                if case.size >= 2 {
+                    Err("too big".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrinking halves down to a failing size of 2
+        assert!(msg.contains("size=2"), "got: {msg}");
+    }
+}

@@ -1,0 +1,81 @@
+//! Key=value config files (offline image vendors no serde/toml).
+//!
+//! Format: one `key = value` per line, `#` comments, sections ignored.
+//! CLI options override file values; see coordinator::job for the schema.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    kv: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut kv = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { kv })
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn set(&mut self, key: &str, val: &str) {
+        self.kv.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.kv.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let c = Config::parse("p = 64\nscheme = lite\n# comment\n\nk=10").unwrap();
+        assert_eq!(c.get("p"), Some("64"));
+        assert_eq!(c.get("scheme"), Some("lite"));
+        assert_eq!(c.parse_or::<usize>("k", 0), 10);
+    }
+
+    #[test]
+    fn inline_comments_stripped() {
+        let c = Config::parse("alpha = 2e-6 # seconds").unwrap();
+        assert_eq!(c.parse_or::<f64>("alpha", 0.0), 2e-6);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(Config::parse("just-a-word").is_err());
+    }
+
+    #[test]
+    fn sections_ignored() {
+        let c = Config::parse("[cluster]\np = 8").unwrap();
+        assert_eq!(c.get("p"), Some("8"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Support substrates built from scratch for the offline image (no rand,
+//! clap, serde, proptest or criterion are vendored — DESIGN.md §3 item 11).
+
+pub mod args;
+pub mod check;
+pub mod config;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod timer;

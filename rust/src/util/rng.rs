@@ -1,0 +1,251 @@
+//! Deterministic PRNG + distributions, built from scratch (the offline
+//! image vendors no `rand`). SplitMix64 seeds a PCG-XSH-RR-like generator;
+//! Zipf sampling drives the synthetic slice-size skew (DESIGN.md §2).
+
+/// SplitMix64 — used for seeding and cheap stateless streams.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Main PRNG: xoshiro256** (public domain construction), seeded via
+/// SplitMix64 so any u64 seed yields a well-mixed state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-mode / per-rank reproducibility).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let res = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        res
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal via Box-Muller (cached second value omitted for
+    /// simplicity; callers are not throughput-bound on this).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n (used by MediumG index relabeling).
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut p);
+        p
+    }
+}
+
+/// Zipf sampler over ranks 1..=n with exponent `s`, via rejection-inversion
+/// (Hörmann-Derflinger). Drives the power-law slice-size skew that makes
+/// real FROSTT tensors hard for CoarseG (paper §7.2: enron's 5M-element
+/// slices vs a 105K average).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dd: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1);
+        let nf = n as f64;
+        let h_x1 = Self::h(1.5, s) - 1.0;
+        let h_n = Self::h(nf + 0.5, s);
+        let dd = 12.0 * (Self::h_integral_inv_guard(s));
+        Zipf { n: nf, s, h_x1, h_n, dd }
+    }
+
+    fn h(x: f64, s: f64) -> f64 {
+        // integral of x^-s: H(x) = (x^{1-s} - 1)/(1-s), with the s=1 limit ln x
+        if (s - 1.0).abs() < 1e-9 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+        }
+    }
+
+    fn h_inv(x: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-9 {
+            x.exp()
+        } else {
+            (1.0 + x * (1.0 - s)).powf(1.0 / (1.0 - s))
+        }
+    }
+
+    fn h_integral_inv_guard(_s: f64) -> f64 {
+        1.0
+    }
+
+    /// Sample a rank in [1, n].
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let _ = self.dd;
+        loop {
+            let u = self.h_n + rng.f64() * (self.h_x1 - self.h_n);
+            let x = Self::h_inv(u, self.s);
+            let k = x.round().clamp(1.0, self.n);
+            // acceptance test
+            let left = Self::h(k - 0.5, self.s);
+            let right = Self::h(k + 0.5, self.s);
+            let p = right - left; // mass proxy for rank k
+            if rng.f64() * (Self::h(x + 0.5, self.s) - Self::h(x - 0.5, self.s)) <= p {
+                return k as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_skews_small_ranks() {
+        let z = Zipf::new(1000, 1.2);
+        let mut rng = Rng::new(11);
+        let mut low = 0usize;
+        let mut n = 0usize;
+        for _ in 0..5000 {
+            let k = z.sample(&mut rng);
+            assert!((1..=1000).contains(&k));
+            if k <= 10 {
+                low += 1;
+            }
+            n += 1;
+        }
+        // with s=1.2, the top-10 ranks carry a large share of the mass
+        assert!(low as f64 / n as f64 > 0.3, "low share {}", low);
+    }
+
+    #[test]
+    fn normal_mean_near_zero() {
+        let mut rng = Rng::new(13);
+        let m: f64 = (0..20_000).map(|_| rng.normal()).sum::<f64>() / 20_000.0;
+        assert!(m.abs() < 0.05, "mean {}", m);
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut base = Rng::new(1);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Wallclock timing + a tiny scoped profiler used by the perf pass
+//! (EXPERIMENTS.md §Perf). Real measured seconds everywhere; the simulated
+//! cluster combines them into makespans (dist::cluster).
+
+use std::time::Instant;
+
+/// Measure a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Accumulating named timer buckets, e.g. ttm/svd/comm breakups.
+#[derive(Debug, Default, Clone)]
+pub struct Buckets {
+    entries: Vec<(String, f64)>,
+}
+
+impl Buckets {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.entries.iter().map(|(n, s)| (n.as_str(), *s))
+    }
+
+    pub fn merge(&mut self, other: &Buckets) {
+        for (n, s) in other.iter() {
+            self.add(n, s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_positive() {
+        let (v, s) = time(|| (0..10_000).sum::<u64>());
+        assert_eq!(v, 49_995_000);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn buckets_accumulate() {
+        let mut b = Buckets::new();
+        b.add("ttm", 1.0);
+        b.add("ttm", 0.5);
+        b.add("svd", 2.0);
+        assert!((b.get("ttm") - 1.5).abs() < 1e-12);
+        assert!((b.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Buckets::new();
+        a.add("x", 1.0);
+        let mut b = Buckets::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert!((a.get("x") - 3.0).abs() < 1e-12);
+        assert!((a.get("y") - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,193 @@
+//! Edge cases and failure injection across the stack: degenerate tensors,
+//! pathological distributions, tiny/extreme parameters — places where the
+//! paper's assumptions (K ≤ L_n, nnz ≫ P, no empty slices) break down and
+//! the implementation must stay well-defined.
+
+use tucker_lite::coordinator::{run_scheme, Workload};
+use tucker_lite::dist::NetModel;
+use tucker_lite::hooi::{assemble_local_z, dense_penultimate, HooiConfig};
+use tucker_lite::linalg::orthonormal_random;
+use tucker_lite::runtime::Engine;
+use tucker_lite::sched::{self, ModeMetrics, Scheme};
+use tucker_lite::tensor::slices::build_all;
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+
+fn run(w: &Workload, p: usize, k: usize) -> tucker_lite::coordinator::RunRecord {
+    run_scheme(w, &sched::Lite, p, k, 1, &Engine::Native, NetModel::default(), 3)
+}
+
+fn workload(t: SparseTensor) -> Workload {
+    let idx = build_all(&t);
+    Workload { name: "edge".into(), tensor: t, idx }
+}
+
+#[test]
+fn single_element_tensor() {
+    let mut t = SparseTensor::new(vec![5, 5, 5]);
+    t.push(&[2, 3, 4], 7.0);
+    let rec = run(&workload(t), 4, 2);
+    // a single element is exactly rank-1: perfect fit
+    assert!(rec.fit > 0.999, "fit {}", rec.fit);
+}
+
+#[test]
+fn more_ranks_than_elements() {
+    let mut rng = Rng::new(1);
+    let t = SparseTensor::random(vec![6, 6, 6], 5, &mut rng);
+    for scheme in sched::all_schemes() {
+        let idx = build_all(&t);
+        let d = scheme.distribute(&t, &idx, 16, &mut Rng::new(2));
+        assert!(d.validate(&t).is_ok(), "{}", scheme.name());
+    }
+    let rec = run(&workload(t), 16, 2);
+    assert!(rec.fit.is_finite());
+}
+
+#[test]
+fn all_zero_values() {
+    // Lanczos on the zero matrix must not NaN
+    let mut t = SparseTensor::new(vec![8, 8, 8]);
+    for i in 0..8u32 {
+        t.push(&[i, i, i], 0.0);
+    }
+    let rec = run(&workload(t), 2, 2);
+    assert!(rec.fit.is_finite());
+}
+
+#[test]
+fn duplicate_coordinates_are_additive() {
+    // Eq. 1 sums contributions; duplicates must behave like their sum
+    let mut a = SparseTensor::new(vec![4, 4, 4]);
+    a.push(&[1, 2, 3], 2.0);
+    a.push(&[1, 2, 3], 3.0);
+    let mut b = SparseTensor::new(vec![4, 4, 4]);
+    b.push(&[1, 2, 3], 5.0);
+    let k = 2;
+    let mut rng = Rng::new(5);
+    let factors: Vec<_> = a
+        .dims
+        .iter()
+        .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+        .collect();
+    let za = dense_penultimate(&a, 0, &factors, k);
+    let zb = dense_penultimate(&b, 0, &factors, k);
+    assert!(za.max_abs_diff(&zb) < 1e-5);
+}
+
+#[test]
+fn one_giant_slice_only() {
+    // every element in a single mode-0 slice: Lite must still balance
+    let mut t = SparseTensor::new(vec![3, 50, 50]);
+    let mut rng = Rng::new(7);
+    for _ in 0..1000 {
+        t.push(&[0, rng.below(50) as u32, rng.below(50) as u32], rng.f32());
+    }
+    let idx = build_all(&t);
+    let d = sched::Lite.distribute(&t, &idx, 8, &mut Rng::new(8));
+    let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
+    assert_eq!(m.e_max, 125, "perfect split of the giant slice");
+    // CoarseG cannot split it
+    let dc = sched::CoarseG::default().distribute(&t, &idx, 8, &mut Rng::new(9));
+    let mc = ModeMetrics::compute(&idx[0], &dc.policies[0]);
+    assert_eq!(mc.e_max, 1000);
+}
+
+#[test]
+fn k_larger_than_some_mode() {
+    // L = [3, 40, 40] with K = 8 > 3: zero-padded factor columns
+    let mut rng = Rng::new(11);
+    let t = SparseTensor::random(vec![3, 40, 40], 600, &mut rng);
+    let rec = run(&workload(t), 4, 8);
+    assert!(rec.fit.is_finite());
+    assert!((0.0..=1.0).contains(&rec.fit));
+}
+
+#[test]
+fn k_equals_one() {
+    let mut rng = Rng::new(12);
+    let t = SparseTensor::random(vec![20, 20, 20], 400, &mut rng);
+    let rec = run(&workload(t), 4, 1);
+    assert!(rec.fit.is_finite());
+}
+
+#[test]
+fn p_equals_one_degenerate_cluster() {
+    let mut rng = Rng::new(13);
+    let t = SparseTensor::random(vec![15, 15, 15], 500, &mut rng);
+    let rec = run(&workload(t), 1, 4);
+    // no communication on a single rank
+    assert_eq!(rec.svd_volume, 0.0);
+    assert_eq!(rec.fm_volume, 0.0);
+    assert!(rec.fit.is_finite());
+}
+
+#[test]
+fn empty_rank_in_ttm_assembly() {
+    let mut rng = Rng::new(14);
+    let t = SparseTensor::random(vec![10, 10, 10], 100, &mut rng);
+    let factors: Vec<_> = t
+        .dims
+        .iter()
+        .map(|&l| orthonormal_random(l as usize, 3, &mut rng))
+        .collect();
+    let z = assemble_local_z(&t, 0, &[], &factors, 3, &Engine::Native);
+    assert_eq!(z.rows.len(), 0);
+}
+
+#[test]
+fn hooi_config_defaults_sane() {
+    let cfg = HooiConfig::default();
+    assert_eq!(cfg.k, 10);
+    assert_eq!(cfg.invocations, 1);
+}
+
+#[test]
+fn mediumg_with_prime_p() {
+    // P = 13 (prime): the grid degenerates to one long axis — must work
+    let mut rng = Rng::new(15);
+    let t = SparseTensor::random(vec![40, 30, 20], 800, &mut rng);
+    let idx = build_all(&t);
+    let d = sched::MediumG.distribute(&t, &idx, 13, &mut Rng::new(16));
+    assert!(d.validate(&t).is_ok());
+    let grid = sched::medium::factorize_grid(13, &t.dims);
+    assert_eq!(grid.iter().product::<usize>(), 13);
+}
+
+#[test]
+fn hyperg_tiny_tensor_fewer_vertices_than_parts() {
+    let mut rng = Rng::new(17);
+    let t = SparseTensor::random(vec![4, 4, 4], 6, &mut rng);
+    let idx = build_all(&t);
+    let d = sched::HyperG::default().distribute(&t, &idx, 8, &mut Rng::new(18));
+    assert!(d.validate(&t).is_ok());
+}
+
+#[test]
+fn four_d_with_tiny_last_mode() {
+    // mirrors the scaled enron analogue: L4 = 4 << K
+    let mut rng = Rng::new(19);
+    let t = SparseTensor::random(vec![30, 25, 60, 4], 1500, &mut rng);
+    let rec = run(&workload(t), 8, 10);
+    assert!(rec.fit.is_finite());
+    assert!(rec.ttm_balance <= 1.01);
+}
+
+#[test]
+fn net_model_zero_cost_network() {
+    // α = β = 0: communication takes no time but volumes still count
+    let mut rng = Rng::new(20);
+    let t = SparseTensor::random(vec![20, 20, 20], 600, &mut rng);
+    let w = workload(t);
+    let rec = run_scheme(
+        &w,
+        &sched::Lite,
+        4,
+        4,
+        1,
+        &Engine::Native,
+        NetModel { alpha: 0.0, beta: 0.0 },
+        1,
+    );
+    assert!(rec.svd_volume > 0.0 || rec.fm_volume > 0.0);
+}

@@ -1,0 +1,138 @@
+//! Integration over the whole L3 stack: datasets → every scheme →
+//! simulated cluster → HOOI → records, checking the cross-cutting
+//! invariants the paper's evaluation relies on.
+
+use tucker_lite::coordinator::{run_scheme, Workload};
+use tucker_lite::dist::NetModel;
+use tucker_lite::runtime::Engine;
+use tucker_lite::sched::{self, Scheme};
+use tucker_lite::tensor::datasets;
+
+fn small(name: &str) -> Workload {
+    let spec = datasets::by_name(name).unwrap().scaled(0.04);
+    Workload::from_spec(&spec, 1.0)
+}
+
+fn run(w: &Workload, s: &dyn Scheme, p: usize, k: usize) -> tucker_lite::coordinator::RunRecord {
+    run_scheme(w, s, p, k, 1, &Engine::Native, NetModel::default(), 3)
+}
+
+#[test]
+fn all_schemes_complete_on_3d_and_4d() {
+    for name in ["nell2", "enron"] {
+        let w = small(name);
+        for scheme in sched::all_schemes() {
+            let rec = run(&w, scheme.as_ref(), 4, 4);
+            assert!(rec.hooi_secs > 0.0, "{name}/{}", rec.scheme);
+            assert!(rec.fit.is_finite());
+            assert!((0.0..=1.0).contains(&rec.fit), "{name}/{} fit {}", rec.scheme, rec.fit);
+        }
+    }
+}
+
+#[test]
+fn coarseg_has_optimal_svd_load_lite_near_optimal() {
+    // The structural claim behind Fig 12(b).
+    let w = small("nell1");
+    let rc = run(&w, &sched::CoarseG::default(), 6, 4);
+    let rl = run(&w, &sched::Lite, 6, 4);
+    assert!((rc.svd_load_norm - 1.0).abs() < 1e-9);
+    assert!(rl.svd_load_norm <= 1.25, "Lite redundancy {}", rl.svd_load_norm);
+}
+
+#[test]
+fn lite_ttm_balance_is_perfect_coarseg_poor_on_skewed() {
+    // The structural claim behind Fig 12(a): on a skewed tensor CoarseG's
+    // giant slices destroy TTM balance, Lite's hard limit preserves it.
+    let w = small("enron");
+    let rl = run(&w, &sched::Lite, 8, 4);
+    let rc = run(&w, &sched::CoarseG::default(), 8, 4);
+    assert!(rl.ttm_balance <= 1.01, "Lite balance {}", rl.ttm_balance);
+    assert!(
+        rc.ttm_balance > rl.ttm_balance,
+        "CoarseG {} should trail Lite {}",
+        rc.ttm_balance,
+        rl.ttm_balance
+    );
+}
+
+#[test]
+fn multi_policy_fm_volume_exceeds_uni_policy_svd_tradeoff() {
+    // Fig 13's shape: Lite/CoarseG (multi-policy) pay FM volume but save
+    // SVD volume; MediumG pays SVD volume.
+    let w = small("nell1");
+    let rl = run(&w, &sched::Lite, 8, 4);
+    let rm = run(&w, &sched::MediumG, 8, 4);
+    assert!(
+        rl.svd_volume < rm.svd_volume,
+        "Lite SVD vol {} should be < MediumG {}",
+        rl.svd_volume,
+        rm.svd_volume
+    );
+}
+
+#[test]
+fn same_seed_same_record() {
+    let w = small("flickr");
+    let a = run(&w, &sched::Lite, 4, 4);
+    let b = run(&w, &sched::Lite, 4, 4);
+    assert_eq!(a.svd_volume, b.svd_volume);
+    assert_eq!(a.fm_volume, b.fm_volume);
+    assert!((a.fit - b.fit).abs() < 1e-9);
+}
+
+#[test]
+fn more_ranks_do_not_increase_hooi_time_under_lite() {
+    // strong-scaling sanity on a medium analogue (Fig 15's premise);
+    // needs a compute-dominated size — K=10 and a quarter-scale tensor
+    let spec = datasets::by_name("nell1").unwrap().scaled(0.25);
+    let w = Workload::from_spec(&spec, 1.0);
+    let r8 = run(&w, &sched::Lite, 8, 10);
+    let r32 = run(&w, &sched::Lite, 32, 10);
+    assert!(
+        r32.hooi_secs < r8.hooi_secs,
+        "P=32 {} should beat P=8 {}",
+        r32.hooi_secs,
+        r8.hooi_secs
+    );
+}
+
+#[test]
+fn tns_file_pipeline() {
+    // write a .tns, load as workload, decompose
+    use tucker_lite::tensor::{io, SparseTensor};
+    use tucker_lite::util::rng::Rng;
+    let mut rng = Rng::new(11);
+    let t = SparseTensor::random(vec![20, 16, 12], 800, &mut rng);
+    let dir = std::env::temp_dir().join("tucker_lite_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pipe.tns");
+    io::write_tns(&t, &path).unwrap();
+    let w = Workload::from_tns(&path).unwrap();
+    assert_eq!(w.tensor.nnz(), 800);
+    let rec = run(&w, &sched::Lite, 4, 4);
+    assert!(rec.fit.is_finite());
+}
+
+#[test]
+fn distribution_time_lightweight_vs_hyperg_ordering() {
+    // Fig 16's headline: HyperG distribution is orders of magnitude
+    // slower than the lightweight schemes.
+    let w = small("nell2");
+    use tucker_lite::util::rng::Rng;
+    let mut lite_t = 0.0;
+    let mut hyper_t = 0.0;
+    for scheme in sched::all_schemes() {
+        let mut rng = Rng::new(5);
+        let d = scheme.distribute(&w.tensor, &w.idx, 8, &mut rng);
+        match scheme.name() {
+            "Lite" => lite_t = d.time.simulated_secs,
+            "HyperG" => hyper_t = d.time.simulated_secs,
+            _ => {}
+        }
+    }
+    assert!(
+        hyper_t > 5.0 * lite_t,
+        "HyperG {hyper_t} should be >> Lite {lite_t}"
+    );
+}

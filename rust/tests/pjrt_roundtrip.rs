@@ -1,0 +1,123 @@
+//! Integration: the AOT HLO artifacts round-trip through the PJRT CPU
+//! client and agree numerically with the native reference engine — the
+//! rust-side counterpart of python/tests/test_kernel.py.
+//!
+//! These tests skip (with a note) when `make artifacts` has not run.
+
+use tucker_lite::linalg::Mat;
+use tucker_lite::runtime::{Engine, PjrtRuntime, Registry};
+use tucker_lite::util::rng::Rng;
+
+fn pjrt() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let reg = Registry::load(&dir).expect("manifest parses");
+    Some(Engine::Pjrt(PjrtRuntime::new(reg).expect("pjrt client")))
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn kron3_pjrt_matches_native() {
+    let Some(engine) = pjrt() else { return };
+    let k = 10;
+    let b = engine.ttm_batch_size(3, k);
+    let mut rng = Rng::new(1);
+    let rows_a = rand_vec(&mut rng, b * k);
+    let rows_b = rand_vec(&mut rng, b * k);
+    let vals = rand_vec(&mut rng, b);
+    let got = engine.kron3_batch(k, &rows_a, &rows_b, &vals);
+    let want = Engine::Native.kron3_batch(k, &rows_a, &rows_b, &vals);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-4, "idx {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn kron3_k20_pjrt_matches_native() {
+    let Some(engine) = pjrt() else { return };
+    let k = 20;
+    let b = engine.ttm_batch_size(3, k);
+    let mut rng = Rng::new(2);
+    let rows_a = rand_vec(&mut rng, b * k);
+    let rows_b = rand_vec(&mut rng, b * k);
+    let vals = rand_vec(&mut rng, b);
+    let got = engine.kron3_batch(k, &rows_a, &rows_b, &vals);
+    let want = Engine::Native.kron3_batch(k, &rows_a, &rows_b, &vals);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 2e-4);
+    }
+}
+
+#[test]
+fn kron4_pjrt_matches_native() {
+    let Some(engine) = pjrt() else { return };
+    let k = 10;
+    let b = engine.ttm_batch_size(4, k);
+    let mut rng = Rng::new(3);
+    let rows_a = rand_vec(&mut rng, b * k);
+    let rows_b = rand_vec(&mut rng, b * k);
+    let rows_c = rand_vec(&mut rng, b * k);
+    let vals = rand_vec(&mut rng, b);
+    let got = engine.kron4_batch(k, &rows_a, &rows_b, &rows_c, &vals);
+    let want = Engine::Native.kron4_batch(k, &rows_a, &rows_b, &rows_c, &vals);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 2e-4);
+    }
+}
+
+#[test]
+fn matvec_tiles_match_native_with_ragged_rows() {
+    let Some(engine) = pjrt() else { return };
+    let khat = 100;
+    let mut rng = Rng::new(4);
+    // rows deliberately not a multiple of R_TILE: exercises tail padding
+    for rows in [1usize, 7, 511, 513, 1300] {
+        let z = Mat::from_fn(rows, khat, |_, _| rng.normal() as f32);
+        let x = rand_vec(&mut rng, khat);
+        let got = engine.local_matvec(&z, &x);
+        let want = z.matvec(&x);
+        assert_eq!(got.len(), rows);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "rows={rows}");
+        }
+        let y = rand_vec(&mut rng, rows);
+        let got = engine.local_rmatvec(&y, &z);
+        let want = z.tmatvec(&y);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "rows={rows}");
+        }
+    }
+}
+
+#[test]
+fn full_hooi_pjrt_matches_native_fit() {
+    // End-to-end: the same decomposition through both engines must agree
+    // on fit and factors (same seeds ⇒ same Lanczos trajectory up to
+    // engine numerics).
+    let Some(engine) = pjrt() else { return };
+    use tucker_lite::coordinator::{run_scheme, Workload};
+    use tucker_lite::dist::NetModel;
+    use tucker_lite::sched::Lite;
+    use tucker_lite::tensor::datasets;
+
+    let spec = datasets::by_name("nell2").unwrap().scaled(0.05);
+    let w = Workload::from_spec(&spec, 1.0);
+    let rec_p = run_scheme(&w, &Lite, 4, 10, 1, &engine, NetModel::default(), 7);
+    let rec_n = run_scheme(&w, &Lite, 4, 10, 1, &Engine::Native, NetModel::default(), 7);
+    assert!(
+        (rec_p.fit - rec_n.fit).abs() < 1e-3,
+        "fit mismatch: pjrt {} vs native {}",
+        rec_p.fit,
+        rec_n.fit
+    );
+    // identical distribution ⇒ identical volumes
+    assert_eq!(rec_p.svd_volume, rec_n.svd_volume);
+    assert_eq!(rec_p.fm_volume, rec_n.fm_volume);
+}

@@ -1,0 +1,160 @@
+//! Property suite for the paper's formal claims, run on adversarial
+//! randomized tensors through the in-tree mini property-testing framework
+//! (util::check). Complements the unit-level properties in sched::lite.
+
+use tucker_lite::prop_assert;
+use tucker_lite::sched::{self, ModeMetrics, Scheme, Sharers};
+use tucker_lite::tensor::slices::build_all;
+use tucker_lite::tensor::synth::{generate, ModeDist};
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::check::Runner;
+use tucker_lite::util::rng::Rng;
+
+/// Random tensor with occasional pathological skew (giant slices), the
+/// regime Theorem 6.1 is designed for.
+fn adversarial_tensor(size: usize, rng: &mut Rng) -> SparseTensor {
+    let ndim = if rng.below(2) == 0 { 3 } else { 4 };
+    let modes: Vec<ModeDist> = (0..ndim)
+        .map(|_| ModeDist {
+            len: 1 + rng.below(size as u64 * 2 + 2) as u32,
+            zipf: match rng.below(3) {
+                0 => 0.0,
+                1 => 0.9,
+                _ => 1.6, // heavy head: giant slices
+            },
+        })
+        .collect();
+    let nnz = 1 + rng.usize_below(size * 20 + 20);
+    generate(&modes, nnz, rng.next_u64())
+}
+
+#[test]
+fn theorem_6_1_holds_on_adversarial_tensors() {
+    Runner::new(40, 80).run("thm6.1-adversarial", |case, rng| {
+        let t = adversarial_tensor(case.size.max(2), rng);
+        let p = 1 + rng.usize_below(12);
+        let idx = build_all(&t);
+        let d = sched::Lite.distribute(&t, &idx, p, rng);
+        let limit = t.nnz().div_ceil(p);
+        for (n, i) in idx.iter().enumerate() {
+            let m = ModeMetrics::compute(i, &d.policies[n]);
+            prop_assert!(m.e_max <= limit, "E_max {} > {limit} (mode {n})", m.e_max);
+            prop_assert!(
+                m.r_sum <= i.num_slices() + p,
+                "R_sum {} > L+P (mode {n})",
+                m.r_sum
+            );
+            prop_assert!(
+                m.r_max <= i.num_slices().div_ceil(p) + 2,
+                "R_max {} > ceil(L/P)+2 (mode {n})",
+                m.r_max
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_scheme_partitions_every_element_exactly_once() {
+    Runner::new(24, 60).run("partition-completeness", |case, rng| {
+        let t = adversarial_tensor(case.size.max(2), rng);
+        let p = 1 + rng.usize_below(8);
+        let idx = build_all(&t);
+        for scheme in sched::all_schemes() {
+            let d = scheme.distribute(&t, &idx, p, rng);
+            d.validate(&t)?;
+            for (n, pol) in d.policies.iter().enumerate() {
+                let total: usize = pol.rank_counts().iter().sum();
+                prop_assert!(
+                    total == t.nnz(),
+                    "{}: mode {n} assigns {total} != nnz {}",
+                    scheme.name(),
+                    t.nnz()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn coarse_grained_slices_always_good() {
+    Runner::new(24, 60).run("coarseg-good-slices", |case, rng| {
+        let t = adversarial_tensor(case.size.max(2), rng);
+        let p = 1 + rng.usize_below(8);
+        let idx = build_all(&t);
+        let d = sched::CoarseG::default().distribute(&t, &idx, p, rng);
+        for (n, i) in idx.iter().enumerate() {
+            let sharers = Sharers::build(i, &d.policies[n]);
+            prop_assert!(
+                sharers.bad_slices() == 0,
+                "mode {n}: {} bad slices",
+                sharers.bad_slices()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn row_owner_is_always_a_sharer() {
+    Runner::new(24, 60).run("sigma-owner-shares", |case, rng| {
+        let t = adversarial_tensor(case.size.max(2), rng);
+        let p = 1 + rng.usize_below(8);
+        let idx = build_all(&t);
+        for scheme in sched::all_schemes() {
+            let d = scheme.distribute(&t, &idx, p, rng);
+            for (n, i) in idx.iter().enumerate() {
+                let sharers = Sharers::build(i, &d.policies[n]);
+                let map = sched::RowMap::build(&sharers, p);
+                for l in 0..i.num_slices() {
+                    let s = sharers.of(l);
+                    if !s.is_empty() {
+                        prop_assert!(
+                            s.contains(&map.of(l)),
+                            "{}: mode {n} slice {l} owner not a sharer",
+                            scheme.name()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hooi_fit_bounded_and_deterministic() {
+    use tucker_lite::coordinator::{run_scheme, Workload};
+    use tucker_lite::dist::NetModel;
+    use tucker_lite::runtime::Engine;
+    use tucker_lite::tensor::slices::build_all as _;
+
+    Runner::new(8, 30).run("hooi-fit", |case, rng| {
+        let t = adversarial_tensor(case.size.max(4), rng);
+        if t.nnz() < 8 {
+            return Ok(());
+        }
+        let idx = build_all(&t);
+        let w = Workload { name: "prop".into(), tensor: t, idx };
+        let p = 1 + rng.usize_below(4);
+        let k = 1 + rng.usize_below(4);
+        let rec = run_scheme(
+            &w,
+            &sched::Lite,
+            p,
+            k,
+            1,
+            &Engine::Native,
+            NetModel::default(),
+            case.seed,
+        );
+        prop_assert!(rec.fit.is_finite(), "fit NaN");
+        prop_assert!(
+            (-1e-6..=1.0 + 1e-6).contains(&rec.fit),
+            "fit out of range: {}",
+            rec.fit
+        );
+        Ok(())
+    });
+}
