@@ -1,0 +1,168 @@
+//! Ablation: the precompiled TTM plan layer + the parallel rank executor.
+//!
+//!   1. Plan vs naive assembly: `assemble_local_z_fused` pays a row
+//!      sort+dedup, one binary search per nonzero and a cold COO walk on
+//!      *every* invocation; a `TtmPlan` pays them once and additionally
+//!      hoists slow-Kronecker-factor products across equal-coordinate
+//!      runs. Measured across K ∈ {5, 10, 16} for 3-D and 4-D.
+//!   2. Executor scaling: the same 8-rank TTM phase through
+//!      `SimCluster::phase_tasks` with the serial vs the scoped-thread
+//!      parallel executor (wall-clock; the simulated makespan is
+//!      reported too and must agree between the two).
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+use tucker_lite::dist::{cat, SimCluster};
+use tucker_lite::hooi::{assemble_local_z_fused, PlanWorkspace, TtmPlan};
+use tucker_lite::linalg::{orthonormal_random, Mat};
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::{fmt_secs, Table};
+
+fn time_it(reps: usize, f: &mut dyn FnMut()) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn assembly_case(
+    table: &mut Table,
+    label: &str,
+    t: &SparseTensor,
+    k: usize,
+    reps: usize,
+) {
+    let mut rng = Rng::new(11);
+    let factors: Vec<Mat> = t
+        .dims
+        .iter()
+        .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+        .collect();
+    let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+
+    let naive = time_it(reps, &mut || {
+        let z = assemble_local_z_fused(t, 0, &elems, &factors, k);
+        std::hint::black_box(z.rows.len());
+    });
+
+    let t0 = Instant::now();
+    let plan = TtmPlan::build(t, 0, &elems, k);
+    let build = t0.elapsed().as_secs_f64();
+    let mut ws = PlanWorkspace::new();
+    let planned = time_it(reps, &mut || {
+        let z = plan.assemble_fused(&factors, &mut ws);
+        std::hint::black_box(z.rows.len());
+        ws.recycle(z.z);
+    });
+
+    table.row(vec![
+        label.into(),
+        fmt_secs(naive),
+        fmt_secs(planned),
+        fmt_secs(build),
+        format!("{:.2}x", naive / planned),
+    ]);
+}
+
+fn main() {
+    let quick = std::env::var("TUCKER_BENCH_QUICK").is_ok();
+    let reps = if quick { 2 } else { 5 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    eprintln!("# ablate_plan: reps={reps} host cores={cores}");
+
+    // --- 1. plan vs naive per-invocation assembly ---
+    let mut rng = Rng::new(3);
+    let nnz3 = if quick { 15_000 } else { 150_000 };
+    let nnz4 = if quick { 8_000 } else { 60_000 };
+    let t3 = SparseTensor::random(vec![400, 300, 60], nnz3, &mut rng);
+    let t4 = SparseTensor::random(vec![120, 80, 30, 12], nnz4, &mut rng);
+    let mut t1 = Table::new(
+        &format!(
+            "ablate_plan — Z assembly, one full mode (3-D nnz={nnz3}, 4-D nnz={nnz4})"
+        ),
+        &["config", "naive/invocation", "plan/invocation", "plan build (once)", "speedup"],
+    );
+    for k in [5usize, 10, 16] {
+        assembly_case(&mut t1, &format!("3-D K={k}"), &t3, k, reps);
+    }
+    for k in [5usize, 10, 16] {
+        assembly_case(&mut t1, &format!("4-D K={k}"), &t4, k, reps);
+    }
+    t1.print();
+    let _ = t1.save_csv("ablate_plan_assembly");
+
+    // --- 2. serial vs parallel rank executor on an 8-rank TTM phase ---
+    let p = 8;
+    let k = 10;
+    let nnz = if quick { 40_000 } else { 400_000 };
+    let t = SparseTensor::random(vec![600, 400, 80], nnz, &mut rng);
+    let factors: Vec<Mat> = t
+        .dims
+        .iter()
+        .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+        .collect();
+    let mut per_rank = vec![Vec::new(); p];
+    for e in 0..t.nnz() as u32 {
+        per_rank[rng.usize_below(p)].push(e);
+    }
+    let plans: Vec<TtmPlan> =
+        per_rank.iter().map(|es| TtmPlan::build(&t, 0, es, k)).collect();
+
+    let run_phase = |parallel: bool| -> (f64, f64) {
+        let mut cluster = SimCluster::new(p).with_parallel(parallel);
+        let mut workspaces: Vec<PlanWorkspace> =
+            (0..p).map(|_| PlanWorkspace::new()).collect();
+        let factors_ref = &factors;
+        let one_round = |cluster: &mut SimCluster,
+                         workspaces: &mut Vec<PlanWorkspace>| {
+            let tasks: Vec<_> = plans
+                .iter()
+                .zip(workspaces.iter_mut())
+                .map(|(plan, ws)| move || plan.assemble_fused(factors_ref, ws))
+                .collect();
+            let locals = cluster.phase_tasks(cat::TTM, tasks);
+            for (ws, local) in workspaces.iter_mut().zip(locals) {
+                ws.recycle(local.z);
+            }
+        };
+        one_round(&mut cluster, &mut workspaces); // warmup
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            one_round(&mut cluster, &mut workspaces);
+        }
+        let wall = t0.elapsed().as_secs_f64() / reps as f64;
+        // 1 warmup + reps rounds charged
+        let sim = cluster.elapsed.get(cat::TTM) / (reps + 1) as f64;
+        (wall, sim)
+    };
+
+    let (serial_wall, serial_sim) = run_phase(false);
+    let (par_wall, par_sim) = run_phase(true);
+    let mut t2 = Table::new(
+        &format!(
+            "ablate_plan — executor: P={p} rank TTM phase (nnz={nnz}, K={k}, {cores} cores)"
+        ),
+        &["executor", "wall/phase", "simulated makespan", "wall speedup"],
+    );
+    t2.row(vec![
+        "serial".into(),
+        fmt_secs(serial_wall),
+        fmt_secs(serial_sim),
+        "1.00x".into(),
+    ]);
+    t2.row(vec![
+        "parallel (scoped threads)".into(),
+        fmt_secs(par_wall),
+        fmt_secs(par_sim),
+        format!("{:.2}x", serial_wall / par_wall),
+    ]);
+    t2.print();
+    let _ = t2.save_csv("ablate_plan_executor");
+}

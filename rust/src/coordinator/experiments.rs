@@ -171,8 +171,9 @@ pub fn distribution_records(
                 .iter()
                 .map(|m| (q_n * m.oracle_volume_per_query()) as f64)
                 .sum();
-            // FM volume from the transfer patterns
-            let modes = hooi::prepare_modes(&w.tensor, &w.idx, &dist, k);
+            // FM volume from the transfer patterns (plan compilation
+            // skipped: these records never assemble a Z)
+            let modes = hooi::prepare_modes_unplanned(&w.tensor, &w.idx, &dist, k);
             let fm_volume: f64 =
                 modes.iter().map(|st| st.fm.total_units as f64).sum();
             let mem = hooi::driver::memory_model(&w.tensor, &dist, &modes, k, kh);

@@ -1,6 +1,11 @@
 //! The pipeline leader: dataset → distribution scheme → simulated cluster
 //! → HOOI → consolidated run record. Every experiment (benches, CLI,
 //! examples) goes through `run_scheme` so measurements are comparable.
+//!
+//! The cluster's parallel rank executor is on by default (per-rank TTM
+//! plans assemble concurrently; see `dist::cluster`); set
+//! `TUCKER_PHASE_EXECUTOR=serial` for the reference serial executor when
+//! a figure run needs minimal timing noise on a loaded host.
 
 use super::job::JobSpec;
 use crate::dist::{cat, NetModel, SimCluster};

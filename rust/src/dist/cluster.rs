@@ -1,0 +1,342 @@
+//! The simulated P-rank cluster. Compute phases really execute and are
+//! timed per rank; the phase charges the *makespan* (max per-rank time) to
+//! the elapsed bucket, so the totals behave like a synchronized SPMD run.
+//! Communication is charged to the α–β [`NetModel`] with exact unit
+//! volumes ([`SimCluster::p2p`], [`SimCluster::allreduce`]).
+//!
+//! Execution model: per-rank closures run on a scoped-thread worker pool
+//! capped at the host's available parallelism (never oversubscribed, so
+//! the per-rank wall-times that feed the simulation stay honest — a rank
+//! timed while descheduled would inflate the simulated makespan). Results
+//! are always collected in rank order, so any reduction the caller does
+//! over them is bit-identical to serial execution. Set
+//! `TUCKER_PHASE_EXECUTOR=serial` (or use [`SimCluster::serial`] /
+//! [`SimCluster::with_parallel`]) to force the serial executor, e.g. for
+//! timing-sensitive figure runs on a busy host.
+
+use super::net::NetModel;
+use crate::util::timer::Buckets;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Phase / volume category names, shared by the HOOI driver, the oracle
+/// and the experiment harness (Fig 11 breakup keys off these).
+pub mod cat {
+    /// TTM assembly compute.
+    pub const TTM: &str = "ttm";
+    /// SVD (Lanczos) compute.
+    pub const SVD: &str = "svd";
+    /// Distribution construction (Fig 16).
+    pub const DIST: &str = "dist";
+    /// Oracle query communication (x/y reductions).
+    pub const COMM_SVD: &str = "comm-svd";
+    /// Factor-matrix transfer communication.
+    pub const COMM_FM: &str = "comm-fm";
+    /// Common collectives (dots, norms, core allreduce).
+    pub const COMM_COMMON: &str = "comm-common";
+}
+
+/// Simulated cluster of `p` ranks accumulating elapsed time and
+/// communication volume per category.
+#[derive(Debug)]
+pub struct SimCluster {
+    /// World size P.
+    pub p: usize,
+    /// Network model for communication charging.
+    pub net: NetModel,
+    /// Simulated seconds per category (makespans + comm charges).
+    pub elapsed: Buckets,
+    /// Communication volume per category, in units (one f32 = one unit).
+    pub volume: Buckets,
+    /// Per-rank busy seconds of the most recent phase (diagnostics).
+    pub last_phase: Vec<f64>,
+    parallel: bool,
+}
+
+impl SimCluster {
+    /// New cluster; the parallel rank executor is enabled when the host
+    /// has more than one core and `TUCKER_PHASE_EXECUTOR` is not `serial`.
+    pub fn new(p: usize) -> SimCluster {
+        let host_cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let serial_env = std::env::var("TUCKER_PHASE_EXECUTOR")
+            .map(|v| v.eq_ignore_ascii_case("serial"))
+            .unwrap_or(false);
+        SimCluster {
+            p,
+            net: NetModel::default(),
+            elapsed: Buckets::new(),
+            volume: Buckets::new(),
+            last_phase: Vec::new(),
+            parallel: host_cores > 1 && !serial_env,
+        }
+    }
+
+    /// New cluster with the serial executor (reference semantics).
+    pub fn serial(p: usize) -> SimCluster {
+        SimCluster::new(p).with_parallel(false)
+    }
+
+    pub fn with_net(mut self, net: NetModel) -> SimCluster {
+        self.net = net;
+        self
+    }
+
+    /// Force the executor on or off (overrides the host/env default).
+    pub fn with_parallel(mut self, on: bool) -> SimCluster {
+        self.parallel = on;
+        self
+    }
+
+    /// Is the parallel rank executor active?
+    pub fn is_parallel(&self) -> bool {
+        self.parallel
+    }
+
+    /// Execute one closure per rank, record per-rank wall-times, charge
+    /// the makespan to `cat`, and return the results in rank order.
+    fn run_tasks<T, F>(&mut self, cat: &str, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let timed = run_scoped(tasks, self.parallel);
+        let mut times = Vec::with_capacity(timed.len());
+        let mut results = Vec::with_capacity(timed.len());
+        for (r, secs) in timed {
+            results.push(r);
+            times.push(secs);
+        }
+        let makespan = times.iter().copied().fold(0.0, f64::max);
+        self.elapsed.add(cat, makespan);
+        self.last_phase = times;
+        results
+    }
+
+    /// Serial phase (legacy / order-dependent callers): run `f(rank)` for
+    /// every rank in order, charging the makespan. Use [`phase_map`] or
+    /// [`phase_tasks`] for the parallel executor.
+    ///
+    /// [`phase_map`]: SimCluster::phase_map
+    /// [`phase_tasks`]: SimCluster::phase_tasks
+    pub fn phase(&mut self, cat: &str, mut f: impl FnMut(usize)) {
+        let mut times = vec![0.0f64; self.p];
+        for (rank, slot) in times.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            f(rank);
+            *slot = t0.elapsed().as_secs_f64();
+        }
+        let makespan = times.iter().copied().fold(0.0, f64::max);
+        self.elapsed.add(cat, makespan);
+        self.last_phase = times;
+    }
+
+    /// Parallel phase over a shared closure: results come back in rank
+    /// order, so rank-ordered reductions are bit-identical to serial.
+    pub fn phase_map<T, F>(&mut self, cat: &str, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let fr = &f;
+        let tasks: Vec<_> = (0..self.p).map(|rank| move || fr(rank)).collect();
+        self.run_tasks(cat, tasks)
+    }
+
+    /// Parallel phase over per-rank closures (one per rank, in rank
+    /// order) — the form that lets each rank own `&mut` state such as its
+    /// TTM plan workspace.
+    pub fn phase_tasks<T, F>(&mut self, cat: &str, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        self.run_tasks(cat, tasks)
+    }
+
+    /// Point-to-point round: `per_rank[r] = (messages, units)` sent by
+    /// rank r. Time = max over ranks of α·msgs + β·units (rounds overlap
+    /// across ranks); volume = Σ units.
+    pub fn p2p(&mut self, cat: &str, per_rank: &[(u64, u64)]) {
+        let mut worst = 0.0f64;
+        let mut total_units = 0u64;
+        for &(msgs, units) in per_rank {
+            worst = worst.max(self.net.xfer(msgs, units));
+            total_units += units;
+        }
+        self.elapsed.add(cat, worst);
+        self.volume.add(cat, total_units as f64);
+    }
+
+    /// Allreduce of `units` units across all ranks.
+    pub fn allreduce(&mut self, cat: &str, units: u64) {
+        self.elapsed.add(cat, self.net.allreduce(self.p, units));
+        self.volume.add(cat, self.net.allreduce_volume(self.p, units));
+    }
+
+    /// Charge measured serial seconds of perfectly-distributable work:
+    /// every rank does 1/P of it.
+    pub fn charge_balanced(&mut self, cat: &str, secs: f64) {
+        self.elapsed.add(cat, secs / self.p.max(1) as f64);
+    }
+}
+
+/// Execute independent tasks on a scoped worker pool of
+/// `min(tasks, host cores)` threads (serial when `parallel` is false),
+/// returning `(result, busy seconds)` per task in input order.
+///
+/// Workers claim tasks off a shared counter — never oversubscribed, so
+/// each measured time is an honest busy time for that task (a task timed
+/// while descheduled would inflate any makespan derived from it). Also
+/// used outside the cluster for independent per-rank setup work (e.g.
+/// TTM plan compilation in `hooi::prepare_modes`).
+pub fn run_scoped<T, F>(tasks: Vec<F>, parallel: bool) -> Vec<(T, f64)>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = tasks.len();
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    let workers = if parallel { n.min(cores) } else { 1 };
+    if workers <= 1 || n <= 1 {
+        return tasks
+            .into_iter()
+            .map(|task| {
+                let t0 = Instant::now();
+                let r = task();
+                (r, t0.elapsed().as_secs_f64())
+            })
+            .collect();
+    }
+    let slots: Vec<Mutex<Option<F>>> =
+        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let done: Vec<Mutex<Option<(T, f64)>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = slots[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("each task is claimed exactly once");
+                let t0 = Instant::now();
+                let r = task();
+                *done[i].lock().unwrap() = Some((r, t0.elapsed().as_secs_f64()));
+            });
+        }
+    });
+    done.into_iter()
+        .map(|cell| {
+            cell.into_inner()
+                .unwrap()
+                .expect("worker completed every claimed task")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_scoped_preserves_order_and_times() {
+        let tasks: Vec<_> = (0..6u64)
+            .map(|i| move || (0..2_000).map(|j| i * j).sum::<u64>())
+            .collect();
+        let par = run_scoped(tasks, true);
+        let tasks: Vec<_> = (0..6u64)
+            .map(|i| move || (0..2_000).map(|j| i * j).sum::<u64>())
+            .collect();
+        let ser = run_scoped(tasks, false);
+        let pv: Vec<u64> = par.iter().map(|(r, _)| *r).collect();
+        let sv: Vec<u64> = ser.iter().map(|(r, _)| *r).collect();
+        assert_eq!(pv, sv);
+        assert!(par.iter().all(|&(_, s)| s >= 0.0));
+    }
+
+    #[test]
+    fn phase_charges_makespan_not_sum() {
+        let mut c = SimCluster::serial(3);
+        c.phase("work", |rank| {
+            // rank 2 does ~10x the work of rank 0
+            let n = 10_000 * (rank + 1) * (rank + 1);
+            std::hint::black_box((0..n).sum::<usize>());
+        });
+        let max = c.last_phase.iter().copied().fold(0.0, f64::max);
+        assert_eq!(c.last_phase.len(), 3);
+        assert!((c.elapsed.get("work") - max).abs() < 1e-12);
+        assert!(c.elapsed.get("work") < c.last_phase.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn phase_map_results_in_rank_order_parallel_and_serial() {
+        let mut par = SimCluster::new(8).with_parallel(true);
+        let mut ser = SimCluster::serial(8);
+        let f = |rank: usize| (0..1000u64).map(|i| i * rank as u64).sum::<u64>();
+        let a = par.phase_map("w", f);
+        let b = ser.phase_map("w", f);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert_eq!(par.last_phase.len(), 8);
+    }
+
+    #[test]
+    fn phase_tasks_allows_mutable_per_rank_state() {
+        let mut c = SimCluster::new(4);
+        let mut scratch: Vec<Vec<u64>> = vec![Vec::new(); 4];
+        let tasks: Vec<_> = scratch
+            .iter_mut()
+            .enumerate()
+            .map(|(rank, buf)| {
+                move || {
+                    buf.push(rank as u64 + 1);
+                    buf.iter().sum::<u64>()
+                }
+            })
+            .collect();
+        let out = c.phase_tasks("w", tasks);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert_eq!(scratch[3], vec![4]);
+    }
+
+    #[test]
+    fn p2p_charges_worst_rank_and_total_volume() {
+        let mut c = SimCluster::serial(3).with_net(NetModel { alpha: 1.0, beta: 0.1 });
+        c.p2p("comm", &[(1, 10), (2, 5), (0, 0)]);
+        // worst = max(1 + 1.0, 2 + 0.5, 0) = 2.5
+        assert!((c.elapsed.get("comm") - 2.5).abs() < 1e-12);
+        assert_eq!(c.volume.get("comm"), 15.0);
+    }
+
+    #[test]
+    fn allreduce_single_rank_is_free() {
+        let mut c = SimCluster::serial(1);
+        c.allreduce("comm", 1_000);
+        assert_eq!(c.elapsed.get("comm"), 0.0);
+        assert_eq!(c.volume.get("comm"), 0.0);
+    }
+
+    #[test]
+    fn charge_balanced_divides_by_p() {
+        let mut c = SimCluster::serial(4);
+        c.charge_balanced("svd", 2.0);
+        assert!((c.elapsed.get("svd") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn executor_defaults_respect_override() {
+        let c = SimCluster::new(4).with_parallel(false);
+        assert!(!c.is_parallel());
+        let c = SimCluster::new(4).with_parallel(true);
+        assert!(c.is_parallel());
+    }
+}

@@ -1,0 +1,16 @@
+//! Simulated distributed runtime (paper §7 methodology): a P-rank cluster
+//! where compute really executes (and is timed per rank) while
+//! communication is charged to an α–β network model with byte-exact
+//! volumes.
+//!
+//! - [`net`]: the α–β [`NetModel`] and its collective-cost formulas.
+//! - [`cluster`]: [`SimCluster`] — phase execution (makespan timing),
+//!   point-to-point and allreduce charging, and the scoped-thread
+//!   parallel rank executor that makes multi-rank experiments wall-clock
+//!   scale with host cores while keeping per-rank timings honest.
+
+pub mod cluster;
+pub mod net;
+
+pub use cluster::{cat, run_scoped, SimCluster};
+pub use net::NetModel;

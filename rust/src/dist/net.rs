@@ -1,0 +1,83 @@
+//! The α–β communication model (paper §7): a message of `u` units between
+//! two ranks costs α + β·u seconds; collectives compose from it with the
+//! usual logarithmic-tree formulas. A *unit* is one transferred scalar
+//! (f32) — the paper reports volumes in units, so we charge β per unit.
+
+/// Network parameters. Defaults approximate the paper's cluster
+/// (InfiniBand-class: ~2 µs latency, ~1 GB/s effective per-rank f32
+/// bandwidth ⇒ ~4 ns per 4-byte unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetModel {
+    /// Per-message latency in seconds.
+    pub alpha: f64,
+    /// Per-unit (one f32) transfer time in seconds.
+    pub beta: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel { alpha: 2e-6, beta: 4e-9 }
+    }
+}
+
+impl NetModel {
+    /// Cost of one rank sending `msgs` messages totalling `units` units.
+    #[inline]
+    pub fn xfer(&self, msgs: u64, units: u64) -> f64 {
+        msgs as f64 * self.alpha + units as f64 * self.beta
+    }
+
+    /// Allreduce of `units` units over `p` ranks (recursive doubling /
+    /// ring hybrid): ⌈log₂ P⌉ latency terms + 2·(P−1)/P·units bandwidth.
+    pub fn allreduce(&self, p: usize, units: u64) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let log_p = (usize::BITS - (p - 1).leading_zeros()) as f64;
+        let bw_units = 2.0 * (p as f64 - 1.0) / p as f64 * units as f64;
+        log_p * self.alpha + bw_units * self.beta
+    }
+
+    /// Per-rank units actually moved by an allreduce (volume accounting).
+    pub fn allreduce_volume(&self, p: usize, units: u64) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        2.0 * (p as f64 - 1.0) / p as f64 * units as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xfer_is_alpha_beta_affine() {
+        let n = NetModel { alpha: 1.0, beta: 0.5 };
+        assert_eq!(n.xfer(2, 10), 2.0 + 5.0);
+        assert_eq!(n.xfer(0, 0), 0.0);
+    }
+
+    #[test]
+    fn allreduce_zero_on_single_rank() {
+        let n = NetModel::default();
+        assert_eq!(n.allreduce(1, 1_000), 0.0);
+        assert_eq!(n.allreduce_volume(1, 1_000), 0.0);
+    }
+
+    #[test]
+    fn allreduce_latency_grows_logarithmically() {
+        let n = NetModel { alpha: 1.0, beta: 0.0 };
+        assert_eq!(n.allreduce(2, 100), 1.0);
+        assert_eq!(n.allreduce(4, 100), 2.0);
+        assert_eq!(n.allreduce(8, 100), 3.0);
+        assert_eq!(n.allreduce(5, 100), 3.0); // ⌈log₂ 5⌉
+    }
+
+    #[test]
+    fn zero_cost_network_charges_nothing() {
+        let n = NetModel { alpha: 0.0, beta: 0.0 };
+        assert_eq!(n.xfer(5, 500), 0.0);
+        assert_eq!(n.allreduce(8, 500), 0.0);
+    }
+}

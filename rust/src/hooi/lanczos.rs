@@ -29,7 +29,15 @@ pub struct Oracle<'a> {
     /// Per-rank prepared Z (device-resident tiles on the PJRT path; the
     /// upload happens once per mode and amortizes over Q_n queries).
     prepared: Vec<crate::runtime::engine::PreparedZ>,
+    /// Run queries on the parallel executor only when each rank's share
+    /// of the query is big enough to amortize a thread dispatch.
+    parallel_worth: bool,
 }
+
+/// Average Z elements per rank below which an oracle query runs serially:
+/// a ~64k-element matvec is ~50–100 µs of work, the break-even point
+/// against spawning and joining a scoped worker per query.
+const PAR_QUERY_MIN_ELEMS_PER_RANK: usize = 1 << 16;
 
 impl<'a> Oracle<'a> {
     pub fn new(
@@ -88,20 +96,30 @@ impl<'a> Oracle<'a> {
                 .map(|_| crate::runtime::engine::PreparedZ::Host)
                 .collect(),
         };
-        Oracle { locals, rowmap, l_n, khat, x_comm, y_comm, prepared }
+        let total_z: usize = locals.iter().map(|l| l.z.rows * l.z.cols).sum();
+        let parallel_worth = total_z / p.max(1) >= PAR_QUERY_MIN_ELEMS_PER_RANK;
+        Oracle { locals, rowmap, l_n, khat, x_comm, y_comm, prepared, parallel_worth }
     }
 
     /// x-query: global Z_(n) · x, answered distributed (accounting) but
-    /// returned assembled. Compute is really executed per rank and timed.
+    /// returned assembled. Compute really executes per rank — concurrently
+    /// on the scoped-thread executor — and is timed; the reduction below
+    /// runs in rank order, so the result is bit-identical to serial.
     pub fn matvec(&self, x: &[f32], engine: &Engine, cluster: &mut SimCluster) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.khat);
         let mut out = vec![0.0f32; self.l_n];
-        let p = self.locals.len();
-        let mut partials: Vec<Vec<f32>> = Vec::with_capacity(p);
-        cluster.phase(cat::SVD, |rank| {
+        let query = |rank: usize| {
             let local = &self.locals[rank];
-            partials.push(engine.matvec_prepared(&self.prepared[rank], &local.z, x));
-        });
+            engine.matvec_prepared(&self.prepared[rank], &local.z, x)
+        };
+        let partials: Vec<Vec<f32>> = if self.parallel_worth {
+            cluster.phase_map(cat::SVD, query)
+        } else {
+            // tiny query: a thread dispatch would cost more than the work
+            let mut ps = Vec::with_capacity(self.locals.len());
+            cluster.phase(cat::SVD, |rank| ps.push(query(rank)));
+            ps
+        };
         for (local, partial) in self.locals.iter().zip(&partials) {
             for (r, &l) in local.rows.iter().enumerate() {
                 out[l as usize] += partial[r];
@@ -117,19 +135,20 @@ impl<'a> Oracle<'a> {
         debug_assert_eq!(y.len(), self.l_n);
         cluster.p2p(cat::COMM_SVD, &self.y_comm);
         let mut out = vec![0.0f32; self.khat];
-        let p = self.locals.len();
-        let mut partials: Vec<Vec<f32>> = Vec::with_capacity(p);
-        cluster.phase(cat::SVD, |rank| {
+        let query = |rank: usize| {
             let local = &self.locals[rank];
             // assemble the rank's partial y over its local rows
             let y_local: Vec<f32> =
                 local.rows.iter().map(|&l| y[l as usize]).collect();
-            partials.push(engine.rmatvec_prepared(
-                &self.prepared[rank],
-                &y_local,
-                &local.z,
-            ));
-        });
+            engine.rmatvec_prepared(&self.prepared[rank], &y_local, &local.z)
+        };
+        let partials: Vec<Vec<f32>> = if self.parallel_worth {
+            cluster.phase_map(cat::SVD, query)
+        } else {
+            let mut ps = Vec::with_capacity(self.locals.len());
+            cluster.phase(cat::SVD, |rank| ps.push(query(rank)));
+            ps
+        };
         for partial in &partials {
             axpy(1.0, partial, &mut out);
         }

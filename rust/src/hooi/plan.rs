@@ -1,0 +1,413 @@
+//! Precompiled per-(mode, rank) TTM plans — the HOOI hot-path layer.
+//!
+//! `assemble_local_z` pays three per-invocation costs that are invariant
+//! across HOOI sweeps: (1) sorting + deduplicating the rank's slice rows,
+//! (2) one binary search per nonzero to find its local Z row, and (3) a
+//! cold walk of the COO coordinate streams. The paper's central
+//! observation (§7.2) is that this per-rank TTM assembly *dominates* HOOI
+//! execution, so anything invariant must be hoisted out of the sweep loop
+//! — the same build-once/execute-many structure the dense companion work
+//! (arXiv:1707.05594) uses for its data layouts.
+//!
+//! A [`TtmPlan`] is built once per (mode, rank) in `prepare_modes` and
+//! holds:
+//! - the rank's distinct slice rows (ascending — the `LocalZ` contract),
+//! - a CSR `row_ptr` over the rank's elements grouped by local row, so
+//!   assembly streams contributions row by row with zero searches,
+//! - per-element factor-row indices and values flattened in plan order
+//!   (no COO indirection on the hot path),
+//! - and, within each row, elements sorted by the slowest-varying
+//!   other-mode coordinate(s). Equal-coordinate runs then share their
+//!   slow Kronecker factor row, so the fused kernel accumulates the
+//!   value-weighted fast-factor sum once per run (K flops/element) and
+//!   expands it by the shared slow row(s) once per run (K²/K³ flops/run)
+//!   — hoisting the `v·b[cb]` (3-D) / `v·c[cc]` (4-D) partial products
+//!   out of the per-element loop entirely.
+//!
+//! [`PlanWorkspace`] gives each rank reusable batch buffers and a Z
+//! arena, replacing the fresh allocations the legacy path makes per mode
+//! per sweep. `benches/ablate_plan.rs` quantifies plan vs. naive
+//! assembly; `tests/plan_equivalence.rs` pins the equivalence with the
+//! element-order oracle (`assemble_local_z_fused`).
+
+use super::ttm::{flush_contrib_batch, khat, other_modes, LocalZ};
+use crate::linalg::{axpy, Mat};
+use crate::runtime::Engine;
+use crate::tensor::SparseTensor;
+
+/// Reusable per-rank scratch: fused-kernel accumulators, batched-path
+/// buffers, and the Z arena (flat buffers recycled across modes/sweeps).
+#[derive(Debug, Default)]
+pub struct PlanWorkspace {
+    /// Fast-factor accumulator (K).
+    acc: Vec<f32>,
+    /// 4-D middle accumulator (K²).
+    acc2: Vec<f32>,
+    rows_a: Vec<f32>,
+    rows_b: Vec<f32>,
+    rows_c: Vec<f32>,
+    bvals: Vec<f32>,
+    targets: Vec<u32>,
+    z_pool: Vec<Vec<f32>>,
+}
+
+impl PlanWorkspace {
+    pub fn new() -> PlanWorkspace {
+        PlanWorkspace::default()
+    }
+
+    /// Pop a zeroed buffer of exactly `len` floats from the Z arena.
+    fn take_z(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.z_pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a finished `LocalZ` buffer to the arena so the next
+    /// assembly (any mode, any sweep) reuses the allocation.
+    pub fn recycle(&mut self, z: Mat) {
+        self.z_pool.push(z.data);
+    }
+
+    fn ensure_batch(&mut self, bsz: usize, k: usize) {
+        self.rows_a.resize(bsz * k, 0.0);
+        self.rows_b.resize(bsz * k, 0.0);
+        self.rows_c.resize(bsz * k, 0.0);
+        self.bvals.resize(bsz, 0.0);
+        self.targets.resize(bsz, 0);
+    }
+}
+
+/// Precompiled assembly plan for one (mode, rank): CSR-grouped, run-sorted
+/// element streams (layout documented in the module docs).
+#[derive(Debug, Clone)]
+pub struct TtmPlan {
+    pub mode: usize,
+    pub k: usize,
+    /// K̂ = K^{N−1}.
+    pub khat: usize,
+    /// Modes other than `mode`, ascending (Kronecker factor order).
+    pub others: Vec<usize>,
+    /// Global slice index of each local row, ascending.
+    pub rows: Vec<u32>,
+    /// CSR: plan slots of local row r are `row_ptr[r]..row_ptr[r+1]`.
+    pub row_ptr: Vec<u32>,
+    /// Factor-row index stream per other mode (plan order; `fidx[0]` is
+    /// the fastest-varying Kronecker factor, matching `other_modes`).
+    pub fidx: Vec<Vec<u32>>,
+    /// Element values in plan order.
+    pub vals: Vec<f32>,
+}
+
+impl TtmPlan {
+    /// Build the plan for `mode` over this rank's `elems`. O(|E| log s)
+    /// where s is the largest per-row segment — paid once, amortized over
+    /// every sweep and invocation.
+    pub fn build(t: &SparseTensor, mode: usize, elems: &[u32], k: usize) -> TtmPlan {
+        let ndim = t.ndim();
+        assert!(
+            ndim == 3 || ndim == 4,
+            "HOOI supports 3-D and 4-D tensors"
+        );
+        let others = other_modes(ndim, mode);
+        let kh = khat(k, ndim);
+        let mut rows: Vec<u32> =
+            elems.iter().map(|&e| t.coord(mode, e as usize)).collect();
+        rows.sort_unstable();
+        rows.dedup();
+        // dense global→local row map (L_n is always addressable)
+        let mut local_of = vec![u32::MAX; t.dims[mode] as usize];
+        for (i, &l) in rows.iter().enumerate() {
+            local_of[l as usize] = i as u32;
+        }
+        // counting sort of elements into their local rows
+        let mut row_ptr = vec![0u32; rows.len() + 1];
+        for &e in elems {
+            let r = local_of[t.coord(mode, e as usize) as usize] as usize;
+            row_ptr[r + 1] += 1;
+        }
+        for r in 0..rows.len() {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        let mut cursor: Vec<u32> = row_ptr[..rows.len()].to_vec();
+        let mut order = vec![0u32; elems.len()];
+        for &e in elems {
+            let r = local_of[t.coord(mode, e as usize) as usize] as usize;
+            order[cursor[r] as usize] = e;
+            cursor[r] += 1;
+        }
+        // within each row: sort by the slowest-varying other-mode
+        // coordinate(s) so equal-coordinate runs share slow factor rows
+        for r in 0..rows.len() {
+            let seg = &mut order[row_ptr[r] as usize..row_ptr[r + 1] as usize];
+            if others.len() == 2 {
+                seg.sort_unstable_by_key(|&e| t.coord(others[1], e as usize));
+            } else {
+                seg.sort_unstable_by_key(|&e| {
+                    (t.coord(others[2], e as usize), t.coord(others[1], e as usize))
+                });
+            }
+        }
+        let fidx: Vec<Vec<u32>> = others
+            .iter()
+            .map(|&m| order.iter().map(|&e| t.coord(m, e as usize)).collect())
+            .collect();
+        let vals: Vec<f32> = order.iter().map(|&e| t.vals[e as usize]).collect();
+        // element ids themselves are not retained: the streams above are
+        // all the hot path needs, and dropping them saves nnz·4 bytes
+        // per (mode, rank) for the lifetime of the run
+        TtmPlan { mode, k, khat: kh, others, rows, row_ptr, fidx, vals }
+    }
+
+    /// Elements covered by this plan.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Assemble Z^p, dispatching on the engine like `assemble_local_z`
+    /// (fused native kernel vs. the padded-batch engine contract).
+    pub fn assemble(
+        &self,
+        factors: &[Mat],
+        engine: &Engine,
+        ws: &mut PlanWorkspace,
+    ) -> LocalZ {
+        if engine.prefers_fused_ttm() {
+            self.assemble_fused(factors, ws)
+        } else {
+            self.assemble_batched(factors, engine, ws)
+        }
+    }
+
+    /// Fused plan kernel: stream rows via CSR, hoist slow-factor products
+    /// across equal-coordinate runs (see module docs for the count).
+    pub fn assemble_fused(&self, factors: &[Mat], ws: &mut PlanWorkspace) -> LocalZ {
+        let k = self.k;
+        let kh = self.khat;
+        let nrows = self.rows.len();
+        let data = ws.take_z(nrows * kh);
+        let mut z = Mat { rows: nrows, cols: kh, data };
+        ws.acc.clear();
+        ws.acc.resize(k, 0.0);
+        if self.others.len() == 2 {
+            let (oa, ob) = (self.others[0], self.others[1]);
+            let (fa, fb) = (&self.fidx[0], &self.fidx[1]);
+            let acc = &mut ws.acc;
+            for r in 0..nrows {
+                let (lo, hi) =
+                    (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+                let zrow = z.row_mut(r);
+                let mut i = lo;
+                while i < hi {
+                    let bi = fb[i];
+                    acc.fill(0.0);
+                    while i < hi && fb[i] == bi {
+                        axpy(self.vals[i], factors[oa].row(fa[i] as usize), acc);
+                        i += 1;
+                    }
+                    let rb = factors[ob].row(bi as usize);
+                    for (cb, &bv) in rb.iter().enumerate() {
+                        axpy(bv, acc, &mut zrow[cb * k..(cb + 1) * k]);
+                    }
+                }
+            }
+        } else {
+            let (oa, ob, oc) = (self.others[0], self.others[1], self.others[2]);
+            let (fa, fb, fc) = (&self.fidx[0], &self.fidx[1], &self.fidx[2]);
+            let kk = k * k;
+            ws.acc2.clear();
+            ws.acc2.resize(kk, 0.0);
+            let PlanWorkspace { acc, acc2, .. } = ws;
+            for r in 0..nrows {
+                let (lo, hi) =
+                    (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+                let zrow = z.row_mut(r);
+                let mut i = lo;
+                while i < hi {
+                    let ci = fc[i];
+                    acc2.fill(0.0);
+                    while i < hi && fc[i] == ci {
+                        let bi = fb[i];
+                        acc.fill(0.0);
+                        while i < hi && fc[i] == ci && fb[i] == bi {
+                            axpy(self.vals[i], factors[oa].row(fa[i] as usize), acc);
+                            i += 1;
+                        }
+                        let rb = factors[ob].row(bi as usize);
+                        for (cb, &bv) in rb.iter().enumerate() {
+                            axpy(bv, acc, &mut acc2[cb * k..(cb + 1) * k]);
+                        }
+                    }
+                    let rc = factors[oc].row(ci as usize);
+                    for (cc, &cv) in rc.iter().enumerate() {
+                        axpy(cv, acc2, &mut zrow[cc * kk..(cc + 1) * kk]);
+                    }
+                }
+            }
+        }
+        LocalZ { rows: self.rows.clone(), z }
+    }
+
+    /// Batched plan path: same padded fixed-shape engine contract as
+    /// `assemble_local_z`, but fed from the precompiled streams (no
+    /// searches, targets come straight from the CSR walk).
+    pub fn assemble_batched(
+        &self,
+        factors: &[Mat],
+        engine: &Engine,
+        ws: &mut PlanWorkspace,
+    ) -> LocalZ {
+        let k = self.k;
+        let kh = self.khat;
+        let ndim = self.others.len() + 1;
+        let nrows = self.rows.len();
+        let data = ws.take_z(nrows * kh);
+        let mut z = Mat { rows: nrows, cols: kh, data };
+        if self.vals.is_empty() {
+            return LocalZ { rows: self.rows.clone(), z };
+        }
+        let bsz = engine.ttm_batch_size(ndim, k);
+        ws.ensure_batch(bsz, k);
+        let PlanWorkspace { rows_a, rows_b, rows_c, bvals, targets, .. } = ws;
+        let mut fill = 0usize;
+        for r in 0..nrows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                for (slot, stream) in self.fidx.iter().enumerate() {
+                    let frow = factors[self.others[slot]].row(stream[i] as usize);
+                    let dst = match slot {
+                        0 => &mut rows_a[fill * k..(fill + 1) * k],
+                        1 => &mut rows_b[fill * k..(fill + 1) * k],
+                        _ => &mut rows_c[fill * k..(fill + 1) * k],
+                    };
+                    dst.copy_from_slice(frow);
+                }
+                bvals[fill] = self.vals[i];
+                targets[fill] = r as u32;
+                fill += 1;
+                if fill == bsz {
+                    flush_contrib_batch(
+                        engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals,
+                        targets, &mut z,
+                    );
+                    fill = 0;
+                }
+            }
+        }
+        flush_contrib_batch(
+            engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals, targets,
+            &mut z,
+        );
+        LocalZ { rows: self.rows.clone(), z }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormal_random;
+    use crate::util::rng::Rng;
+
+    fn setup(dims: Vec<u32>, nnz: usize, k: usize, seed: u64) -> (SparseTensor, Vec<Mat>) {
+        let mut rng = Rng::new(seed);
+        let t = SparseTensor::random(dims, nnz, &mut rng);
+        let factors = t
+            .dims
+            .iter()
+            .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+            .collect();
+        (t, factors)
+    }
+
+    #[test]
+    fn plan_layout_invariants_3d() {
+        let (t, _) = setup(vec![15, 11, 7], 500, 4, 1);
+        let elems: Vec<u32> = (0..500).collect();
+        for mode in 0..3 {
+            let plan = TtmPlan::build(&t, mode, &elems, 4);
+            assert_eq!(plan.nnz(), 500);
+            assert_eq!(*plan.row_ptr.last().unwrap() as usize, 500);
+            // rows ascending & distinct
+            assert!(plan.rows.windows(2).all(|w| w[0] < w[1]));
+            for r in 0..plan.rows.len() {
+                let (lo, hi) = (plan.row_ptr[r] as usize, plan.row_ptr[r + 1] as usize);
+                assert!(lo < hi, "every stored row has elements");
+                // the row's plan slots carry exactly the slice's elements:
+                // multiset of (other-mode coords, value bits) must match
+                let mut got: Vec<(u32, u32, u32)> = (lo..hi)
+                    .map(|i| (plan.fidx[0][i], plan.fidx[1][i], plan.vals[i].to_bits()))
+                    .collect();
+                let mut want: Vec<(u32, u32, u32)> = (0..t.nnz())
+                    .filter(|&e| t.coord(mode, e) == plan.rows[r])
+                    .map(|e| {
+                        (
+                            t.coord(plan.others[0], e),
+                            t.coord(plan.others[1], e),
+                            t.vals[e].to_bits(),
+                        )
+                    })
+                    .collect();
+                got.sort_unstable();
+                want.sort_unstable();
+                assert_eq!(got, want, "mode {mode} row {r}");
+                // slow coordinate non-decreasing within the row
+                let slow = plan.fidx.last().unwrap();
+                assert!(slow[lo..hi].windows(2).all(|w| w[0] <= w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_plan_matches_element_order_oracle() {
+        let (t, factors) = setup(vec![12, 9, 7], 400, 5, 2);
+        let elems: Vec<u32> = (0..400).collect();
+        let mut ws = PlanWorkspace::new();
+        for mode in 0..3 {
+            let plan = TtmPlan::build(&t, mode, &elems, 5);
+            let a = plan.assemble_fused(&factors, &mut ws);
+            let b = crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 5);
+            assert_eq!(a.rows, b.rows);
+            assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn fused_plan_matches_oracle_4d() {
+        let (t, factors) = setup(vec![8, 6, 5, 4], 300, 3, 3);
+        let elems: Vec<u32> = (0..300).collect();
+        let mut ws = PlanWorkspace::new();
+        for mode in 0..4 {
+            let plan = TtmPlan::build(&t, mode, &elems, 3);
+            let a = plan.assemble_fused(&factors, &mut ws);
+            let b = crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 3);
+            assert_eq!(a.rows, b.rows);
+            assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn empty_plan_yields_empty_local() {
+        let (t, factors) = setup(vec![5, 5, 5], 50, 3, 4);
+        let plan = TtmPlan::build(&t, 0, &[], 3);
+        let mut ws = PlanWorkspace::new();
+        let local = plan.assemble(&factors, &Engine::Native, &mut ws);
+        assert!(local.rows.is_empty());
+        assert_eq!(local.z.rows, 0);
+        assert_eq!(local.z.cols, 9);
+    }
+
+    #[test]
+    fn z_arena_reuses_buffers_across_assemblies() {
+        let (t, factors) = setup(vec![10, 8, 6], 300, 4, 5);
+        let elems: Vec<u32> = (0..300).collect();
+        let plan = TtmPlan::build(&t, 0, &elems, 4);
+        let mut ws = PlanWorkspace::new();
+        let first = plan.assemble_fused(&factors, &mut ws);
+        let ptr = first.z.data.as_ptr();
+        let want = first.z.clone();
+        ws.recycle(first.z);
+        let second = plan.assemble_fused(&factors, &mut ws);
+        assert_eq!(second.z.data.as_ptr(), ptr, "arena buffer reused");
+        assert_eq!(second.z.data, want.data, "recycled buffer fully re-zeroed");
+    }
+}

@@ -9,6 +9,27 @@
 //! batches run through the compute engine (PJRT artifacts on the hot path,
 //! native reference otherwise); the gather of factor rows and the
 //! scatter-add into Z^p stay in rust.
+//!
+//! ## Layout contracts
+//!
+//! - **Z layout**: `LocalZ.rows` is ascending and distinct; row r of `z`
+//!   is the K̂-long slice of global row `rows[r]`, with the Kronecker
+//!   factors ordered earliest-other-mode fastest (3-D: column
+//!   `ca + cb·K`; 4-D: `ca + cb·K + cc·K²` — see python kernels/ref.py).
+//! - **Batch padding**: the fixed-shape engine contract requires full
+//!   batches; the tail slots past `fill` are neutralized *only* by their
+//!   `vals` entry being zeroed — the row buffers beyond `fill`
+//!   deliberately carry stale data from earlier batches.
+//!   [`flush_contrib_batch`] makes that contract explicit with a debug
+//!   assertion on the padded outputs.
+//! - **Plan layer** ([`super::plan`]): a `TtmPlan` precompiles, per
+//!   (mode, rank), the same assembly as [`assemble_local_z`] — rows
+//!   sorted/deduped once, elements CSR-grouped by local row, and within
+//!   each row sorted by the slowest-varying other-mode coordinate(s) so
+//!   equal-coordinate runs share their slow factor rows. Plan-based
+//!   assembly must produce the same `rows` and (up to f32 reassociation)
+//!   the same `z` as this module's element-order path, which therefore
+//!   stays as the correctness oracle (tests/plan_equivalence.rs).
 
 use crate::linalg::{axpy, Mat};
 use crate::runtime::Engine;
@@ -80,31 +101,6 @@ pub fn assemble_local_z(
     let mut targets = vec![0u32; bsz];
     let mut fill = 0usize;
 
-    let flush = |fill: usize,
-                     rows_a: &[f32],
-                     rows_b: &[f32],
-                     rows_c: &[f32],
-                     vals: &mut [f32],
-                     targets: &[u32],
-                     z: &mut Mat| {
-        if fill == 0 {
-            return;
-        }
-        // zero-val padding rows contribute nothing by construction
-        for v in vals[fill..].iter_mut() {
-            *v = 0.0;
-        }
-        let contribs = if ndim == 3 {
-            engine.kron3_batch(k, rows_a, rows_b, vals)
-        } else {
-            engine.kron4_batch(k, rows_a, rows_b, rows_c, vals)
-        };
-        for i in 0..fill {
-            let target = targets[i] as usize;
-            axpy(1.0, &contribs[i * kh..(i + 1) * kh], z.row_mut(target));
-        }
-    };
-
     for &eu in elems {
         let e = eu as usize;
         let l = t.coord(mode, e);
@@ -123,12 +119,65 @@ pub fn assemble_local_z(
         targets[fill] = target;
         fill += 1;
         if fill == bsz {
-            flush(fill, &rows_a, &rows_b, &rows_c, &mut vals, &targets, &mut z);
+            flush_contrib_batch(
+                engine, ndim, k, kh, fill, &rows_a, &rows_b, &rows_c, &mut vals,
+                &targets, &mut z,
+            );
             fill = 0;
         }
     }
-    flush(fill, &rows_a, &rows_b, &rows_c, &mut vals, &targets, &mut z);
+    flush_contrib_batch(
+        engine, ndim, k, kh, fill, &rows_a, &rows_b, &rows_c, &mut vals,
+        &targets, &mut z,
+    );
     LocalZ { rows, z }
+}
+
+/// Run one padded contribution batch through the engine and scatter-add
+/// the first `fill` results into their target Z rows.
+///
+/// Padding contract: slots `fill..` are neutralized *only* by zeroing
+/// their `vals` entry here — `rows_a`/`rows_b`/`rows_c` beyond `fill`
+/// deliberately keep stale data from earlier batches (the fixed-shape
+/// PJRT artifacts require full batches and multiply every row by its
+/// val). The debug assertion verifies the padded outputs really are
+/// zero, so an engine that mishandles val==0 (or stale non-finite row
+/// data that turns 0·x into NaN) fails loudly in debug builds.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn flush_contrib_batch(
+    engine: &Engine,
+    ndim: usize,
+    k: usize,
+    kh: usize,
+    fill: usize,
+    rows_a: &[f32],
+    rows_b: &[f32],
+    rows_c: &[f32],
+    vals: &mut [f32],
+    targets: &[u32],
+    z: &mut Mat,
+) {
+    if fill == 0 {
+        return;
+    }
+    // zero-val padding rows contribute nothing by construction
+    for v in vals[fill..].iter_mut() {
+        *v = 0.0;
+    }
+    let contribs = if ndim == 3 {
+        engine.kron3_batch(k, rows_a, rows_b, vals)
+    } else {
+        engine.kron4_batch(k, rows_a, rows_b, rows_c, vals)
+    };
+    debug_assert!(
+        contribs[fill * kh..].iter().all(|&x| x == 0.0),
+        "stale-buffer hazard: padding slots {fill}.. produced nonzero \
+         contributions (val==0 padding contract violated)"
+    );
+    for i in 0..fill {
+        let target = targets[i] as usize;
+        axpy(1.0, &contribs[i * kh..(i + 1) * kh], z.row_mut(target));
+    }
 }
 
 /// Fused native assembly: accumulates each element's outer product
@@ -307,6 +356,36 @@ mod tests {
         for l in [0usize, 1] {
             assert!(dense.row(l).iter().all(|&x| x == 0.0));
         }
+    }
+
+    #[test]
+    fn partial_final_batch_reuses_stale_buffers_safely() {
+        // PJRT-shaped path: batch size 4096, 5000 elements ⇒ one full
+        // flush, then a partial final flush whose row buffers beyond
+        // `fill` still hold the previous batch's data. The val==0
+        // padding contract (asserted in flush_contrib_batch) must keep
+        // those stale rows from contributing.
+        let (t, factors) = setup(vec![40, 30, 20], 5000, 4, 7);
+        let bsz = Engine::NativeBatched.ttm_batch_size(3, 4);
+        assert!(t.nnz() > bsz && t.nnz() % bsz != 0, "partial final batch");
+        let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+        for mode in 0..3 {
+            let a = assemble_local_z(&t, mode, &elems, &factors, 4, &Engine::NativeBatched);
+            let b = assemble_local_z_fused(&t, mode, &elems, &factors, 4);
+            assert_eq!(a.rows, b.rows);
+            assert!(a.z.max_abs_diff(&b.z) < 1e-3, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn partial_final_batch_4d() {
+        let (t, factors) = setup(vec![12, 10, 8, 6], 4500, 3, 8);
+        assert!(t.nnz() > Engine::NativeBatched.ttm_batch_size(4, 3));
+        let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+        let a = assemble_local_z(&t, 1, &elems, &factors, 3, &Engine::NativeBatched);
+        let b = assemble_local_z_fused(&t, 1, &elems, &factors, 3);
+        assert_eq!(a.rows, b.rows);
+        assert!(a.z.max_abs_diff(&b.z) < 1e-3);
     }
 
     #[test]

@@ -20,8 +20,10 @@
 //!   synthetic dataset analogues.
 //! - [`sched`]: the distribution schemes + the paper's metrics
 //!   (E_max, R_sum, R_max) and the σ_n row-index mapping.
-//! - [`dist`]: the simulated P-rank cluster (makespan timing, α–β comms).
-//! - [`hooi`]: TTM via Eq. 1 contributions, Lanczos-bidiagonalization SVD,
+//! - [`dist`]: the simulated P-rank cluster (makespan timing, α–β comms)
+//!   with a scoped-thread parallel rank executor.
+//! - [`hooi`]: TTM via Eq. 1 contributions — precompiled per-rank plans
+//!   on the hot path (`hooi::plan`) — Lanczos-bidiagonalization SVD,
 //!   factor-matrix transfer, the full HOOI driver.
 //! - [`runtime`]: PJRT artifact registry + padded-batch dispatch.
 //! - [`coordinator`]: job specs, the pipeline leader, experiment harness.

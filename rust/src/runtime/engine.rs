@@ -47,6 +47,8 @@ impl Engine {
     }
 
     /// Should the TTM assembly use the scatter-fused path (no batch)?
+    /// Both the legacy `assemble_local_z` and the precompiled
+    /// `hooi::plan::TtmPlan::assemble` dispatch on this.
     pub fn prefers_fused_ttm(&self) -> bool {
         matches!(self, Engine::Native)
     }
@@ -189,6 +191,15 @@ impl Engine {
         z.tmatvec(y)
     }
 }
+
+// The dist::SimCluster scoped-thread rank executor shares `&Engine` (and
+// oracle-prepared Z handles) across rank threads — keep that a
+// compile-time invariant so a non-thread-safe backend cannot sneak in.
+const _: () = {
+    const fn assert_sync<T: Sync>() {}
+    assert_sync::<Engine>();
+    assert_sync::<PreparedZ>();
+};
 
 /// Native reference: batched 3-D Kronecker contributions, layout contract
 /// of python/compile/kernels/ref.py (earlier mode fastest).

@@ -5,6 +5,13 @@
 
 pub mod artifacts;
 pub mod engine;
+// The real PJRT backend needs the `xla`/`anyhow` crates, which the
+// offline image does not vendor; the default build uses a std-only stub
+// with the same API so every caller falls back to the native engine.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{ArtifactMeta, Registry};

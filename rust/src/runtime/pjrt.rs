@@ -10,8 +10,8 @@
 
 use super::artifacts::{ArtifactMeta, Registry};
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// One compiled executable + its static shape metadata.
 struct Loaded {
@@ -20,17 +20,32 @@ struct Loaded {
 }
 
 /// PJRT runtime: compile-once execute-many artifact cache.
+///
+/// The cache is a `Mutex` (not `RefCell`) so the runtime can be shared
+/// across the `dist::SimCluster` scoped-thread rank executor; the PJRT
+/// C API client and loaded executables are documented thread-safe, which
+/// the `unsafe impl`s below assert for the wrapper types.
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     registry: Registry,
-    /// (kind, n, k|khat) -> compiled executable, compiled lazily.
-    cache: RefCell<HashMap<(String, usize, usize), Loaded>>,
+    /// (kind, n, k|khat) -> compiled executable, compiled lazily. The
+    /// lock guards only lookup/compile-insert; executions run on a
+    /// cloned `Arc` with the lock released, so concurrent ranks never
+    /// serialize on the hot path.
+    cache: Mutex<HashMap<(String, usize, usize), Arc<Loaded>>>,
 }
+
+// SAFETY: the PJRT CPU client, compiled executables and device buffers
+// are thread-safe per the PJRT C API contract (concurrent Execute calls
+// are supported); all interior mutability on the rust side goes through
+// the Mutex above.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
     pub fn new(registry: Registry) -> Result<PjrtRuntime> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime { client, registry, cache: RefCell::new(HashMap::new()) })
+        Ok(PjrtRuntime { client, registry, cache: Mutex::new(HashMap::new()) })
     }
 
     pub fn from_default_dir() -> Result<PjrtRuntime> {
@@ -57,14 +72,23 @@ impl PjrtRuntime {
         find: impl Fn(&Registry) -> Option<ArtifactMeta>,
         f: impl FnOnce(&Loaded) -> Result<R>,
     ) -> Result<R> {
-        let mut cache = self.cache.borrow_mut();
-        if !cache.contains_key(&key) {
-            let meta = find(&self.registry)
-                .ok_or_else(|| anyhow!("no artifact for {key:?} (rebuild with `make artifacts`)"))?;
-            let exe = self.compile(&meta)?;
-            cache.insert(key.clone(), Loaded { exe, meta });
-        }
-        f(cache.get(&key).unwrap())
+        let loaded = {
+            let mut cache = self.cache.lock().expect("pjrt cache poisoned");
+            match cache.get(&key) {
+                Some(l) => l.clone(),
+                None => {
+                    let meta = find(&self.registry).ok_or_else(|| {
+                        anyhow!("no artifact for {key:?} (rebuild with `make artifacts`)")
+                    })?;
+                    let exe = self.compile(&meta)?;
+                    let l = Arc::new(Loaded { exe, meta });
+                    cache.insert(key, l.clone());
+                    l
+                }
+            }
+            // lock dropped here: the execute below must not serialize ranks
+        };
+        f(&loaded)
     }
 
     /// Does the artifact set cover a TTM kernel for (n, k)?
@@ -184,6 +208,12 @@ pub struct ZDevice {
     pub khat: usize,
     pub rtile: usize,
 }
+
+// SAFETY: device buffers are immutable after upload and the PJRT C API
+// permits concurrent executions referencing them (see the PjrtRuntime
+// thread-safety note above).
+unsafe impl Send for ZDevice {}
+unsafe impl Sync for ZDevice {}
 
 impl PjrtRuntime {
     /// Upload a local Z^p (rows × K̂ flattened) as padded R_TILE tiles.

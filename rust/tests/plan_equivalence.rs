@@ -1,0 +1,154 @@
+//! Plan-layer equivalence properties: precompiled TTM plans must
+//! reproduce the element-order oracle (`assemble_local_z_fused`) for
+//! random tensors, random partitions and degenerate ranks — and the
+//! parallel rank executor must be bit-identical to serial execution.
+
+use tucker_lite::dist::{cat, SimCluster};
+use tucker_lite::hooi::{assemble_local_z_fused, run_hooi, HooiConfig, LocalZ, PlanWorkspace, TtmPlan};
+use tucker_lite::linalg::{orthonormal_random, Mat};
+use tucker_lite::runtime::Engine;
+use tucker_lite::sched::{Lite, Scheme};
+use tucker_lite::tensor::slices::build_all;
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+
+fn random_factors(t: &SparseTensor, k: usize, rng: &mut Rng) -> Vec<Mat> {
+    t.dims
+        .iter()
+        .map(|&l| orthonormal_random(l as usize, k, rng))
+        .collect()
+}
+
+fn random_partition(nnz: usize, p: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut out = vec![Vec::new(); p];
+    for e in 0..nnz as u32 {
+        out[rng.usize_below(p)].push(e);
+    }
+    out
+}
+
+/// One randomized case: every (mode, rank) plan assembly must match the
+/// element-order oracle in rows exactly and values up to f32
+/// reassociation.
+fn check_case(dims: Vec<u32>, nnz: usize, k: usize, p: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let t = SparseTensor::random(dims, nnz, &mut rng);
+    let factors = random_factors(&t, k, &mut rng);
+    let per_rank = random_partition(t.nnz(), p, &mut rng);
+    let mut ws = PlanWorkspace::new();
+    for mode in 0..t.ndim() {
+        for elems in &per_rank {
+            let plan = TtmPlan::build(&t, mode, elems, k);
+            let want = assemble_local_z_fused(&t, mode, elems, &factors, k);
+            let fused = plan.assemble_fused(&factors, &mut ws);
+            assert_eq!(fused.rows, want.rows, "mode {mode} rows");
+            assert!(
+                fused.z.max_abs_diff(&want.z) < 1e-4,
+                "mode {mode} fused diff {}",
+                fused.z.max_abs_diff(&want.z)
+            );
+            ws.recycle(fused.z);
+            let batched = plan.assemble(&factors, &Engine::NativeBatched, &mut ws);
+            assert_eq!(batched.rows, want.rows, "mode {mode} batched rows");
+            assert!(
+                batched.z.max_abs_diff(&want.z) < 1e-4,
+                "mode {mode} batched diff {}",
+                batched.z.max_abs_diff(&want.z)
+            );
+            ws.recycle(batched.z);
+        }
+    }
+}
+
+#[test]
+fn plan_matches_oracle_on_random_3d_tensors() {
+    for (seed, (nnz, p, k)) in
+        [(900, 4, 5), (300, 7, 3), (1200, 2, 6)].into_iter().enumerate()
+    {
+        check_case(vec![20, 14, 9], nnz, k, p, seed as u64 + 1);
+    }
+}
+
+#[test]
+fn plan_matches_oracle_on_random_4d_tensors() {
+    for (seed, (nnz, p, k)) in [(700, 3, 3), (250, 5, 4)].into_iter().enumerate() {
+        check_case(vec![10, 8, 6, 5], nnz, k, p, seed as u64 + 10);
+    }
+}
+
+#[test]
+fn plan_matches_oracle_with_many_empty_ranks() {
+    // P far exceeds nnz: most ranks get no elements at all
+    check_case(vec![12, 12, 12], 6, 3, 16, 77);
+}
+
+#[test]
+fn explicitly_empty_rank_matches_oracle() {
+    let mut rng = Rng::new(5);
+    let t = SparseTensor::random(vec![9, 9, 9], 200, &mut rng);
+    let factors = random_factors(&t, 4, &mut rng);
+    let plan = TtmPlan::build(&t, 1, &[], 4);
+    let mut ws = PlanWorkspace::new();
+    let local = plan.assemble(&factors, &Engine::Native, &mut ws);
+    let want = assemble_local_z_fused(&t, 1, &[], &factors, 4);
+    assert_eq!(local.rows, want.rows);
+    assert!(local.rows.is_empty());
+    assert_eq!(local.z.rows, 0);
+}
+
+#[test]
+fn concurrent_phase_is_bit_identical_to_serial() {
+    let p = 6;
+    let k = 5;
+    let mut rng = Rng::new(42);
+    let t = SparseTensor::random(vec![40, 25, 15], 4000, &mut rng);
+    let factors = random_factors(&t, k, &mut rng);
+    let per_rank = random_partition(t.nnz(), p, &mut rng);
+    let plans: Vec<TtmPlan> =
+        per_rank.iter().map(|es| TtmPlan::build(&t, 0, es, k)).collect();
+
+    let assemble_all = |parallel: bool| -> Vec<LocalZ> {
+        let mut cluster = SimCluster::new(p).with_parallel(parallel);
+        let mut workspaces: Vec<PlanWorkspace> =
+            (0..p).map(|_| PlanWorkspace::new()).collect();
+        let factors_ref = &factors;
+        let tasks: Vec<_> = plans
+            .iter()
+            .zip(workspaces.iter_mut())
+            .map(|(plan, ws)| {
+                move || plan.assemble(factors_ref, &Engine::Native, ws)
+            })
+            .collect();
+        let out = cluster.phase_tasks(cat::TTM, tasks);
+        assert!(cluster.elapsed.get(cat::TTM) >= 0.0);
+        assert_eq!(cluster.last_phase.len(), p);
+        out
+    };
+
+    let serial = assemble_all(false);
+    let concurrent = assemble_all(true);
+    assert_eq!(serial.len(), concurrent.len());
+    for (rank, (a, b)) in serial.iter().zip(&concurrent).enumerate() {
+        assert_eq!(a.rows, b.rows, "rank {rank} rows");
+        // bit-identical: same kernel, same rank-local arithmetic order
+        assert_eq!(a.z.data, b.z.data, "rank {rank} Z bits");
+    }
+}
+
+#[test]
+fn hooi_end_to_end_identical_under_both_executors() {
+    let mut rng = Rng::new(9);
+    let t = SparseTensor::random(vec![18, 14, 10], 700, &mut rng);
+    let idx = build_all(&t);
+    let dist = Lite.distribute(&t, &idx, 4, &mut Rng::new(3));
+    let cfg = HooiConfig { k: 4, invocations: 2, seed: 11 };
+    let mut serial = SimCluster::serial(4);
+    let out_s = run_hooi(&t, &idx, &dist, &Engine::Native, &mut serial, &cfg);
+    let mut parallel = SimCluster::new(4).with_parallel(true);
+    let out_p = run_hooi(&t, &idx, &dist, &Engine::Native, &mut parallel, &cfg);
+    assert_eq!(out_s.fit.to_bits(), out_p.fit.to_bits(), "fit identical");
+    for (n, (a, b)) in out_s.factors.iter().zip(&out_p.factors).enumerate() {
+        assert_eq!(a.data, b.data, "mode {n} factor bits");
+    }
+    assert_eq!(out_s.core.data, out_p.core.data, "core bits");
+}
