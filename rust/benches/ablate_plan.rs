@@ -1,10 +1,16 @@
-//! Ablation: the precompiled TTM plan layer + the parallel rank executor.
+//! Ablation: the precompiled TTM plan layer, its lane-blocked SIMD
+//! microkernels, and the parallel rank executor.
 //!
-//!   1. Plan vs naive assembly: `assemble_local_z_fused` pays a row
-//!      sort+dedup, one binary search per nonzero and a cold COO walk on
-//!      *every* invocation; a `TtmPlan` pays them once and additionally
-//!      hoists slow-Kronecker-factor products across equal-coordinate
-//!      runs. Measured across K ∈ {5, 10, 16} for 3-D and 4-D.
+//!   1. Plan + kernel ablation across K ∈ {5, 10, 16} for 3-D and 4-D:
+//!      - naive: `assemble_local_z_fused` pays a row sort+dedup, one
+//!        binary search per nonzero and a cold COO walk every invocation;
+//!      - plan scalar: the PR 1 run-hoisted plan loops (`TUCKER_KERNEL=
+//!        scalar`), the kernel-equivalence oracle;
+//!      - plan tiled: the lane-blocked layout through the detected
+//!        8-wide microkernel (avx2 / neon / portable — the column shows
+//!        which one ran).
+//!      The acceptance bar for the kernel layer is the `tiled vs scalar`
+//!      column at K=16 (target ≥ 1.5x on the 3-D bench tensor).
 //!   2. Executor scaling: the same 8-rank TTM phase through
 //!      `SimCluster::phase_tasks` with the serial vs the scoped-thread
 //!      parallel executor (wall-clock; the simulated makespan is
@@ -15,7 +21,7 @@ mod common;
 
 use std::time::Instant;
 use tucker_lite::dist::{cat, SimCluster};
-use tucker_lite::hooi::{assemble_local_z_fused, PlanWorkspace, TtmPlan};
+use tucker_lite::hooi::{assemble_local_z_fused, Kernel, PlanWorkspace, TtmPlan};
 use tucker_lite::linalg::{orthonormal_random, Mat};
 use tucker_lite::tensor::SparseTensor;
 use tucker_lite::util::rng::Rng;
@@ -35,6 +41,7 @@ fn assembly_case(
     label: &str,
     t: &SparseTensor,
     k: usize,
+    tiled_kernel: Kernel,
     reps: usize,
 ) {
     let mut rng = Rng::new(11);
@@ -53,19 +60,37 @@ fn assembly_case(
     let t0 = Instant::now();
     let plan = TtmPlan::build(t, 0, &elems, k);
     let build = t0.elapsed().as_secs_f64();
-    let mut ws = PlanWorkspace::new();
-    let planned = time_it(reps, &mut || {
-        let z = plan.assemble_fused(&factors, &mut ws);
+
+    let mut ws_scalar = PlanWorkspace::with_kernel(Kernel::Scalar);
+    let scalar = time_it(reps, &mut || {
+        let z = plan.assemble_fused(&factors, &mut ws_scalar);
         std::hint::black_box(z.rows.len());
-        ws.recycle(z.z);
+        ws_scalar.recycle(z.z);
     });
+
+    let mut ws_tiled = PlanWorkspace::with_kernel(tiled_kernel);
+    let tiled = time_it(reps, &mut || {
+        let z = plan.assemble_fused(&factors, &mut ws_tiled);
+        std::hint::black_box(z.rows.len());
+        ws_tiled.recycle(z.z);
+    });
+
+    // smoke equivalence so a broken dispatch arm fails the bench run too
+    let zs = plan.assemble_fused(&factors, &mut ws_scalar);
+    let zt = plan.assemble_fused(&factors, &mut ws_tiled);
+    assert!(
+        zs.z.max_abs_diff(&zt.z) < 1e-3,
+        "{label}: tiled kernel diverged from the scalar oracle"
+    );
 
     table.row(vec![
         label.into(),
         fmt_secs(naive),
-        fmt_secs(planned),
+        fmt_secs(scalar),
+        fmt_secs(tiled),
         fmt_secs(build),
-        format!("{:.2}x", naive / planned),
+        format!("{:.2}x", scalar / tiled),
+        format!("{:.2}x", naive / tiled),
     ]);
 }
 
@@ -75,9 +100,13 @@ fn main() {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    eprintln!("# ablate_plan: reps={reps} host cores={cores}");
+    let tiled_kernel = Kernel::from_env().resolve();
+    eprintln!(
+        "# ablate_plan: reps={reps} host cores={cores} tiled kernel={}",
+        tiled_kernel.name()
+    );
 
-    // --- 1. plan vs naive per-invocation assembly ---
+    // --- 1. plan vs naive assembly, scalar vs tiled kernel ---
     let mut rng = Rng::new(3);
     let nnz3 = if quick { 15_000 } else { 150_000 };
     let nnz4 = if quick { 8_000 } else { 60_000 };
@@ -85,15 +114,25 @@ fn main() {
     let t4 = SparseTensor::random(vec![120, 80, 30, 12], nnz4, &mut rng);
     let mut t1 = Table::new(
         &format!(
-            "ablate_plan — Z assembly, one full mode (3-D nnz={nnz3}, 4-D nnz={nnz4})"
+            "ablate_plan — Z assembly, one full mode (3-D nnz={nnz3}, 4-D nnz={nnz4}, \
+             tiled kernel={})",
+            tiled_kernel.name()
         ),
-        &["config", "naive/invocation", "plan/invocation", "plan build (once)", "speedup"],
+        &[
+            "config",
+            "naive/inv",
+            "plan scalar/inv",
+            "plan tiled/inv",
+            "plan build (once)",
+            "tiled vs scalar",
+            "tiled vs naive",
+        ],
     );
     for k in [5usize, 10, 16] {
-        assembly_case(&mut t1, &format!("3-D K={k}"), &t3, k, reps);
+        assembly_case(&mut t1, &format!("3-D K={k}"), &t3, k, tiled_kernel, reps);
     }
     for k in [5usize, 10, 16] {
-        assembly_case(&mut t1, &format!("4-D K={k}"), &t4, k, reps);
+        assembly_case(&mut t1, &format!("4-D K={k}"), &t4, k, tiled_kernel, reps);
     }
     t1.print();
     let _ = t1.save_csv("ablate_plan_assembly");

@@ -115,7 +115,7 @@ pub fn fig11(cfg: &ExpConfig, engine: &Engine) -> Table {
     let workloads: Vec<Workload> = medium_workloads(cfg).into_iter().take(3).collect();
     let mut t = Table::new(
         &format!("Fig 11 — time breakup, ranks={} K={}", cfg.p_hi, cfg.k),
-        &["tensor", "scheme", "TTM", "SVD", "comm", "total"],
+        &["tensor", "scheme", "TTM", "SVD", "comm", "total", "produced-by"],
     );
     for w in &workloads {
         for scheme in sched::all_schemes() {
@@ -129,6 +129,12 @@ pub fn fig11(cfg: &ExpConfig, engine: &Engine) -> Table {
                 fmt_secs(rec.svd_secs),
                 fmt_secs(rec.comm_secs),
                 fmt_secs(rec.hooi_secs),
+                // concurrency provenance: executor × workers, kernel,
+                // measured executor speedup
+                format!(
+                    "{}x{} {} {:.2}x",
+                    rec.executor, rec.workers, rec.kernel, rec.ttm_speedup
+                ),
             ]);
         }
     }

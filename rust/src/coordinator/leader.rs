@@ -83,6 +83,15 @@ pub struct RunRecord {
     pub mem_mb: f64,
     pub mem_breakdown_mb: (f64, f64, f64),
     pub fit: f64,
+    /// Per-phase concurrency provenance (how the TTM numbers were
+    /// produced): rank executor (`parallel`/`serial`), its worker
+    /// count, the microkernel the ranks ran, and the measured executor
+    /// speedup (Σ busy / wall) — recorded so figure CSVs carry their
+    /// own execution conditions.
+    pub executor: String,
+    pub workers: usize,
+    pub kernel: String,
+    pub ttm_speedup: f64,
 }
 
 /// Distribute + run HOOI, collecting every figure's quantities at once.
@@ -123,6 +132,7 @@ pub fn run_distribution(
     let comm_secs = cluster.elapsed.get(cat::COMM_SVD)
         + cluster.elapsed.get(cat::COMM_FM)
         + cluster.elapsed.get(cat::COMM_COMMON);
+    let conc = cluster.concurrency_report(cat::TTM);
     RunRecord {
         workload: w.name.clone(),
         scheme: dist.scheme.clone(),
@@ -143,6 +153,10 @@ pub fn run_distribution(
         mem_mb: out.memory.avg_total_mb(),
         mem_breakdown_mb: out.memory.avg_component_mb(),
         fit: out.fit,
+        executor: conc.executor.to_string(),
+        workers: conc.workers,
+        kernel: conc.kernel.to_string(),
+        ttm_speedup: conc.speedup,
     }
 }
 
@@ -176,6 +190,12 @@ mod tests {
         assert!(rec.svd_load_norm >= 1.0);
         assert!(rec.mem_mb > 0.0);
         assert_eq!(rec.scheme, "Lite");
+        // concurrency provenance: Native prefers the fused path, so the
+        // recorded kernel is a real microkernel name
+        assert!(rec.executor == "parallel" || rec.executor == "serial");
+        assert!(rec.workers >= 1);
+        assert!(["scalar", "portable", "avx2", "neon"].contains(&rec.kernel.as_str()));
+        assert!(rec.ttm_speedup > 0.0);
     }
 
     #[test]

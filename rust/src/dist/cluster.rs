@@ -37,6 +37,23 @@ pub mod cat {
     pub const COMM_COMMON: &str = "comm-common";
 }
 
+/// Per-phase concurrency provenance: how a category's compute phases
+/// were actually produced. Recorded into `RunRecord` so figure CSVs
+/// carry their own execution conditions.
+#[derive(Debug, Clone)]
+pub struct ConcurrencyReport {
+    /// `"parallel"` (scoped-thread executor) or `"serial"`.
+    pub executor: &'static str,
+    /// Worker threads the executor can use (1 when serial).
+    pub workers: usize,
+    /// Microkernel the ranks recorded (`"mixed"` if they disagree,
+    /// `"unrecorded"` if the phase never reported one).
+    pub kernel: &'static str,
+    /// Measured speedup: Σ per-rank busy seconds / wall seconds of the
+    /// category's compute phases (≈1.0 under the serial executor).
+    pub speedup: f64,
+}
+
 /// Simulated cluster of `p` ranks accumulating elapsed time and
 /// communication volume per category.
 #[derive(Debug)]
@@ -49,8 +66,17 @@ pub struct SimCluster {
     pub elapsed: Buckets,
     /// Communication volume per category, in units (one f32 = one unit).
     pub volume: Buckets,
+    /// Σ per-rank busy seconds per compute category (elapsed holds the
+    /// makespans; busy/wall is the measured executor speedup).
+    pub busy: Buckets,
+    /// Host wall seconds per compute category (what the phases really
+    /// cost this process, executor overhead included).
+    pub wall: Buckets,
     /// Per-rank busy seconds of the most recent phase (diagnostics).
     pub last_phase: Vec<f64>,
+    /// Kernel names the most recent compute phase's ranks reported
+    /// (rank order; see [`SimCluster::record_kernels`]).
+    pub last_kernels: Vec<&'static str>,
     parallel: bool,
 }
 
@@ -69,7 +95,10 @@ impl SimCluster {
             net: NetModel::default(),
             elapsed: Buckets::new(),
             volume: Buckets::new(),
+            busy: Buckets::new(),
+            wall: Buckets::new(),
             last_phase: Vec::new(),
+            last_kernels: Vec::new(),
             parallel: host_cores > 1 && !serial_env,
         }
     }
@@ -95,6 +124,42 @@ impl SimCluster {
         self.parallel
     }
 
+    /// Worker threads the rank executor can use (1 when serial).
+    pub fn workers(&self) -> usize {
+        if self.parallel {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            self.p.min(cores).max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Record which microkernel each rank of the most recent compute
+    /// phase executed (the HOOI driver reports its TTM workspaces here).
+    pub fn record_kernels(&mut self, names: Vec<&'static str>) {
+        self.last_kernels = names;
+    }
+
+    /// Concurrency provenance for one compute category — see
+    /// [`ConcurrencyReport`].
+    pub fn concurrency_report(&self, cat: &str) -> ConcurrencyReport {
+        let busy = self.busy.get(cat);
+        let wall = self.wall.get(cat);
+        let kernel = match self.last_kernels.first() {
+            Some(&k) if self.last_kernels.iter().all(|&n| n == k) => k,
+            Some(_) => "mixed",
+            None => "unrecorded",
+        };
+        ConcurrencyReport {
+            executor: if self.parallel { "parallel" } else { "serial" },
+            workers: self.workers(),
+            kernel,
+            speedup: if wall > 0.0 { busy / wall } else { 1.0 },
+        }
+    }
+
     /// Execute one closure per rank, record per-rank wall-times, charge
     /// the makespan to `cat`, and return the results in rank order.
     fn run_tasks<T, F>(&mut self, cat: &str, tasks: Vec<F>) -> Vec<T>
@@ -102,7 +167,9 @@ impl SimCluster {
         T: Send,
         F: FnOnce() -> T + Send,
     {
+        let t0 = Instant::now();
         let timed = run_scoped(tasks, self.parallel);
+        let wall = t0.elapsed().as_secs_f64();
         let mut times = Vec::with_capacity(timed.len());
         let mut results = Vec::with_capacity(timed.len());
         for (r, secs) in timed {
@@ -111,6 +178,8 @@ impl SimCluster {
         }
         let makespan = times.iter().copied().fold(0.0, f64::max);
         self.elapsed.add(cat, makespan);
+        self.busy.add(cat, times.iter().sum::<f64>());
+        self.wall.add(cat, wall);
         self.last_phase = times;
         results
     }
@@ -130,6 +199,9 @@ impl SimCluster {
         }
         let makespan = times.iter().copied().fold(0.0, f64::max);
         self.elapsed.add(cat, makespan);
+        let total: f64 = times.iter().sum();
+        self.busy.add(cat, total);
+        self.wall.add(cat, total);
         self.last_phase = times;
     }
 
@@ -338,5 +410,43 @@ mod tests {
         assert!(!c.is_parallel());
         let c = SimCluster::new(4).with_parallel(true);
         assert!(c.is_parallel());
+    }
+
+    #[test]
+    fn busy_and_wall_track_compute_phases() {
+        let mut c = SimCluster::new(4).with_parallel(true);
+        c.phase_map("w", |rank| {
+            std::hint::black_box((0..20_000 * (rank + 1)).sum::<usize>())
+        });
+        let busy = c.busy.get("w");
+        let wall = c.wall.get("w");
+        assert!(busy > 0.0 && wall > 0.0);
+        // busy sums per-rank times; the makespan never exceeds it
+        assert!(c.elapsed.get("w") <= busy + 1e-12);
+        assert!((busy - c.last_phase.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrency_report_provenance() {
+        let mut c = SimCluster::serial(3);
+        let rep = c.concurrency_report("w");
+        assert_eq!(rep.executor, "serial");
+        assert_eq!(rep.workers, 1);
+        assert_eq!(rep.kernel, "unrecorded");
+        assert_eq!(rep.speedup, 1.0, "no phases yet");
+        c.phase("w", |_| {
+            std::hint::black_box((0..10_000).sum::<usize>());
+        });
+        c.record_kernels(vec!["portable"; 3]);
+        let rep = c.concurrency_report("w");
+        assert_eq!(rep.kernel, "portable");
+        // serial executor: wall == busy, so the measured speedup is ~1
+        assert!((rep.speedup - 1.0).abs() < 1e-9);
+        c.record_kernels(vec!["portable", "avx2", "portable"]);
+        assert_eq!(c.concurrency_report("w").kernel, "mixed");
+        let par = SimCluster::new(8).with_parallel(true);
+        let rep = par.concurrency_report("w");
+        assert_eq!(rep.executor, "parallel");
+        assert!(rep.workers >= 1 && rep.workers <= 8);
     }
 }

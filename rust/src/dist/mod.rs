@@ -12,5 +12,5 @@
 pub mod cluster;
 pub mod net;
 
-pub use cluster::{cat, run_scoped, SimCluster};
+pub use cluster::{cat, run_scoped, ConcurrencyReport, SimCluster};
 pub use net::NetModel;

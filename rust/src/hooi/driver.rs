@@ -183,6 +183,23 @@ pub fn run_hooi(
     let mut workspaces: Vec<PlanWorkspace> =
         (0..dist.p).map(|_| PlanWorkspace::new()).collect();
 
+    // kernel provenance for the concurrency report: selection is fixed
+    // for the whole run (the fused path dispatches each workspace's
+    // kernel; other engines run the padded-batch contract), so record it
+    // once rather than per phase
+    cluster.record_kernels(
+        workspaces
+            .iter()
+            .map(|ws| {
+                if engine.prefers_fused_ttm() {
+                    ws.kernel().resolve().name()
+                } else {
+                    "engine-batched"
+                }
+            })
+            .collect(),
+    );
+
     let mut last_locals: Vec<LocalZ> = Vec::new();
     let mut last_sigma: Vec<f32> = Vec::new();
     for _inv in 0..cfg.invocations {
@@ -265,17 +282,54 @@ pub fn run_hooi(
     HooiOutcome { factors, core, fit, memory, sigma: last_sigma }
 }
 
-/// Fig 17 memory model: tensor copies + largest local penultimate +
-/// stored factor rows, per rank. Usable without running HOOI
-/// ([`prepare_modes_unplanned`] + this — the planned variant compiles
-/// TTM plans this model never reads) — the distribution fully
+/// How the per-rank tensor working copy is charged by [`memory_model`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorAccounting {
+    /// Charge the actual TTM plan streams — run tables, slot pointers
+    /// and the lane-padded `fa`/`vals` blocks of every (mode, rank)
+    /// plan. This is what a plan-layer rank really holds: even
+    /// single-policy (uni) distributions store one stream encoding *per
+    /// mode*. Requires planned mode states; metrics-only states built
+    /// with [`prepare_modes_unplanned`] fall back to the COO accounting
+    /// (they never materialize streams).
+    PlanStreams,
+    /// The paper's COO accounting ((N+1)·4 bytes per stored element,
+    /// one copy per policy) — kept behind this flag so Fig 17 stays
+    /// comparable to the published numbers.
+    PaperCoo,
+}
+
+impl TensorAccounting {
+    /// Default accounting, with the `TUCKER_MEM_ACCOUNTING` override
+    /// (`coo` forces the paper model, `plan` forces stream charging).
+    /// Unrecognized values are flagged on stderr rather than silently
+    /// changing Fig 17 numbers.
+    pub fn from_env() -> TensorAccounting {
+        match std::env::var("TUCKER_MEM_ACCOUNTING") {
+            Ok(s) if s.eq_ignore_ascii_case("coo") => TensorAccounting::PaperCoo,
+            Ok(s) if s.eq_ignore_ascii_case("plan") => TensorAccounting::PlanStreams,
+            Ok(s) => {
+                eprintln!(
+                    "TUCKER_MEM_ACCOUNTING={s:?} not recognized (expected \
+                     \"coo\" or \"plan\"); using plan-stream accounting"
+                );
+                TensorAccounting::PlanStreams
+            }
+            Err(_) => TensorAccounting::PlanStreams,
+        }
+    }
+}
+
+/// Fig 17 memory model: tensor working copies + largest local
+/// penultimate + stored factor rows, per rank. Usable without running
+/// HOOI ([`prepare_modes_unplanned`] + this) — the distribution fully
 /// determines it.
 ///
-/// Modeling note: this deliberately mirrors the paper's COO-based
-/// accounting so Fig 17 stays comparable. The plan layer re-encodes
-/// each rank's working copy as CSR streams of near-identical size
-/// (N·4 bytes/element vs the counted (N+1)·4); charging plan streams
-/// explicitly is an open item (ROADMAP).
+/// The tensor component follows [`TensorAccounting::from_env`]: planned
+/// states charge the real plan streams (lane padding included), closing
+/// the ROADMAP item on the COO/plan accounting mismatch; unplanned
+/// states and the `TUCKER_MEM_ACCOUNTING=coo` flag keep the paper's
+/// COO model for Fig 17 comparability.
 pub fn memory_model(
     t: &SparseTensor,
     dist: &Distribution,
@@ -283,10 +337,31 @@ pub fn memory_model(
     k: usize,
     kh: usize,
 ) -> MemoryReport {
+    memory_model_with(t, dist, modes, k, kh, TensorAccounting::from_env())
+}
+
+/// [`memory_model`] with an explicit [`TensorAccounting`] choice.
+pub fn memory_model_with(
+    t: &SparseTensor,
+    dist: &Distribution,
+    modes: &[ModeState],
+    k: usize,
+    kh: usize,
+    acct: TensorAccounting,
+) -> MemoryReport {
     let p = dist.p;
     let bytes_elem = t.bytes_per_element() as u64;
+    let planned = modes.iter().all(|st| st.plans.len() == p);
     let mut tensor = vec![0u64; p];
-    if dist.uni {
+    if acct == TensorAccounting::PlanStreams && planned {
+        // the rank's working copy is its per-mode plan streams — charged
+        // exactly, lane padding and run tables included
+        for st in modes {
+            for (rank, b) in tensor.iter_mut().enumerate() {
+                *b += st.plans[rank].stream_bytes();
+            }
+        }
+    } else if dist.uni {
         for (rank, b) in tensor.iter_mut().enumerate() {
             *b = modes[0].elems[rank].len() as u64 * bytes_elem;
         }
@@ -408,16 +483,42 @@ mod tests {
     }
 
     #[test]
-    fn memory_report_positive_and_multi_policy_counts_n_copies() {
+    fn memory_model_charges_plan_streams_with_coo_behind_flag() {
         let (t, idx) = small_tensor(4);
-        let (out, _) = run(&t, &idx, 4, 4, 1);
-        let total_tensor: u64 = out.memory.tensor_bytes.iter().sum();
-        // Lite is multi-policy: 3 copies of every element
+        let dist = Lite.distribute(&t, &idx, 4, &mut Rng::new(5));
+        let kh = khat(4, t.ndim());
+        let modes = prepare_modes(&t, &idx, &dist, 4);
+        // plan-stream accounting: exactly the bytes the per-(mode, rank)
+        // streams occupy, lane padding included
+        let plan_rep =
+            memory_model_with(&t, &dist, &modes, 4, kh, TensorAccounting::PlanStreams);
+        let want: u64 = modes
+            .iter()
+            .map(|st| st.plans.iter().map(|p| p.stream_bytes()).sum::<u64>())
+            .sum();
+        assert_eq!(plan_rep.tensor_bytes.iter().sum::<u64>(), want);
+        // fa+vals alone are 8 bytes per real element across 3 per-mode
+        // plans; padding and run tables only add to that
+        assert!(want >= 3 * 8 * t.nnz() as u64);
+        assert!(plan_rep.avg_total_mb() > 0.0);
+        // the paper's COO accounting stays available behind the flag:
+        // Lite is multi-policy, 3 copies of every element
+        let coo_rep =
+            memory_model_with(&t, &dist, &modes, 4, kh, TensorAccounting::PaperCoo);
         assert_eq!(
-            total_tensor,
+            coo_rep.tensor_bytes.iter().sum::<u64>(),
             3 * t.nnz() as u64 * t.bytes_per_element() as u64
         );
-        assert!(out.memory.avg_total_mb() > 0.0);
+        // unplanned (metrics-only) states never materialize streams and
+        // fall back to COO under either accounting
+        let unplanned = prepare_modes_unplanned(&t, &idx, &dist, 4);
+        let fallback = memory_model_with(
+            &t, &dist, &unplanned, 4, kh, TensorAccounting::PlanStreams,
+        );
+        assert_eq!(fallback.tensor_bytes, coo_rep.tensor_bytes);
+        // both accountings share penultimate/factor components
+        assert_eq!(plan_rep.penultimate_bytes, coo_rep.penultimate_bytes);
+        assert_eq!(plan_rep.factor_bytes, coo_rep.factor_bytes);
     }
 
     #[test]

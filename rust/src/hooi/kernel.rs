@@ -1,0 +1,450 @@
+//! Lane-blocked SIMD microkernels for the fused TTM plan streams.
+//!
+//! The plan layer ([`super::plan`]) lays every hot array out in dense
+//! 8-wide tiles: factor rows are padded to `kp = ⌈K/LANES⌉·LANES`
+//! columns, each equal-coordinate element run is padded to a multiple of
+//! [`LANES`] slots (padding slots carry `val == 0.0`, extending the
+//! batch path's val==0 padding contract), and Z rows are assembled in a
+//! `kp`-stride tile buffer before being compacted to the `LocalZ`
+//! layout. With that layout the three microkernels below never see a
+//! scalar tail — every call is a whole number of 8-lane tiles:
+//!
+//! - [`Tile::axpy`] — `y += a·x` (the run accumulation, K flops/element),
+//! - [`Tile::scale`] — `y = a·x` (the scale-accumulate form that opens a
+//!   run or tile, replacing a zero-fill + axpy pair),
+//! - [`Tile::expand`] / [`Tile::expand_store`] — the fused slow-factor ×
+//!   fast-factor product `out[c·|acc|..] (+)= coeffs[c]·acc`, expanding
+//!   one accumulated fast-factor tile by a shared slow Kronecker row.
+//!
+//! Three implementations share the trait: [`PortableTile`] uses
+//! `chunks_exact(LANES)` loops that lower to SIMD on stable Rust on any
+//! target; `Avx2Tile` (x86_64) and `NeonTile` (aarch64) are explicit
+//! intrinsic paths compiled behind the `simd` cargo feature and selected
+//! at *runtime* via [`Kernel::detect`] (`is_x86_feature_detected!` on
+//! x86), with the portable tile as the universal fallback. The `scalar`
+//! kernel is the PR 1 per-element reference path kept as the
+//! equivalence oracle (`tests/kernel_equivalence.rs`) and the baseline
+//! of the `benches/ablate_plan.rs` scalar-vs-tiled ablation.
+//!
+//! Selection is threaded through [`super::plan::PlanWorkspace`], so each
+//! simulated rank records which kernel it executed (surfaced in
+//! `dist::SimCluster::concurrency_report` and the `RunRecord`).
+//! `TUCKER_KERNEL=scalar|portable|avx2|neon` overrides detection;
+//! unavailable requests fall back to detection.
+
+/// SIMD lane width every tiled array is padded to (f32 lanes of one
+/// AVX2 register; two NEON registers).
+pub const LANES: usize = 8;
+
+/// Round `n` up to a whole number of lanes.
+#[inline]
+pub fn pad_to_lanes(n: usize) -> usize {
+    n.div_ceil(LANES) * LANES
+}
+
+/// A TTM microkernel implementation, selected once per run and carried
+/// by every `PlanWorkspace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Plain per-element loops over unpadded K-length rows — the PR 1
+    /// reference arithmetic, kept as the equivalence oracle and the
+    /// ablation baseline.
+    Scalar,
+    /// `chunks_exact(LANES)` tiles; auto-vectorizes on stable Rust and
+    /// compiles on every target (the `--no-default-features` CI arm).
+    Portable,
+    /// AVX2+FMA intrinsics (x86_64 only, runtime-detected, behind the
+    /// `simd` feature).
+    Avx2,
+    /// NEON intrinsics (aarch64 only, behind the `simd` feature; NEON is
+    /// baseline on aarch64 so no runtime probe is needed).
+    Neon,
+}
+
+impl Kernel {
+    /// Every kernel, for test/bench sweeps.
+    pub const ALL: [Kernel; 4] =
+        [Kernel::Scalar, Kernel::Portable, Kernel::Avx2, Kernel::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Portable => "portable",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Kernel> {
+        Kernel::ALL.into_iter().find(|k| k.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Can this kernel execute on the running host (compile target,
+    /// `simd` feature, and CPU feature detection all permitting)?
+    pub fn available(self) -> bool {
+        match self {
+            Kernel::Scalar | Kernel::Portable => true,
+            Kernel::Avx2 => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                {
+                    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+                {
+                    false
+                }
+            }
+            Kernel::Neon => cfg!(all(feature = "simd", target_arch = "aarch64")),
+        }
+    }
+
+    /// Best available tiled kernel: AVX2 → NEON → portable.
+    pub fn detect() -> Kernel {
+        if Kernel::Avx2.available() {
+            Kernel::Avx2
+        } else if Kernel::Neon.available() {
+            Kernel::Neon
+        } else {
+            Kernel::Portable
+        }
+    }
+
+    /// Detection with the `TUCKER_KERNEL` override. Unknown names and
+    /// kernels the host cannot run fall back to [`Kernel::detect`]
+    /// (`scalar` and `portable` are always honored).
+    pub fn from_env() -> Kernel {
+        match std::env::var("TUCKER_KERNEL") {
+            Ok(s) => Kernel::by_name(&s)
+                .filter(|k| k.available())
+                .unwrap_or_else(Kernel::detect),
+            Err(_) => Kernel::detect(),
+        }
+    }
+
+    /// Map to a kernel that can actually run here (unavailable SIMD
+    /// requests degrade to the portable tile, never to scalar).
+    pub fn resolve(self) -> Kernel {
+        if self.available() {
+            self
+        } else {
+            Kernel::Portable
+        }
+    }
+}
+
+/// The microkernel contract. Every slice is a whole number of
+/// [`LANES`]-wide tiles: `x.len() == y.len()`, `acc.len()` and
+/// `out.len() == coeffs.len() · acc.len()` are all multiples of `LANES`
+/// (the plan layout guarantees this; `debug_assert`ed here).
+pub(crate) trait Tile {
+    /// y += a·x over whole tiles.
+    fn axpy(a: f32, x: &[f32], y: &mut [f32]);
+
+    /// y = a·x over whole tiles — the scale(-accumulate) opener that
+    /// replaces `fill(0.0)` + `axpy` for the first element of a run.
+    fn scale(a: f32, x: &[f32], y: &mut [f32]);
+
+    /// Fused slow×fast product: `out[c·|acc|..][..|acc|] += coeffs[c]·acc`
+    /// for every slow-factor coefficient.
+    #[inline]
+    fn expand(coeffs: &[f32], acc: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), coeffs.len() * acc.len());
+        for (&c, seg) in coeffs.iter().zip(out.chunks_exact_mut(acc.len())) {
+            Self::axpy(c, acc, seg);
+        }
+    }
+
+    /// Storing variant of [`Tile::expand`] (`=` instead of `+=`) — opens
+    /// a fresh output tile without zero-filling it first.
+    #[inline]
+    fn expand_store(coeffs: &[f32], acc: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), coeffs.len() * acc.len());
+        for (&c, seg) in coeffs.iter().zip(out.chunks_exact_mut(acc.len())) {
+            Self::scale(c, acc, seg);
+        }
+    }
+}
+
+/// Portable 8-lane tiles: fixed-width inner loops over
+/// `chunks_exact(LANES)` that LLVM lowers to SIMD with no scalar tail.
+pub(crate) struct PortableTile;
+
+impl Tile for PortableTile {
+    #[inline]
+    fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len() % LANES, 0);
+        for (xc, yc) in x.chunks_exact(LANES).zip(y.chunks_exact_mut(LANES)) {
+            for l in 0..LANES {
+                yc[l] += a * xc[l];
+            }
+        }
+    }
+
+    #[inline]
+    fn scale(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len() % LANES, 0);
+        for (xc, yc) in x.chunks_exact(LANES).zip(y.chunks_exact_mut(LANES)) {
+            for l in 0..LANES {
+                yc[l] = a * xc[l];
+            }
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::LANES;
+    use std::arch::x86_64::*;
+
+    // Safety contract for this module: callers must have verified
+    // avx2+fma via Kernel::Avx2.available() (runtime detection), and
+    // x.len() == y.len() must be a multiple of LANES.
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let va = _mm256_set1_ps(a);
+        for i in 0..x.len() / LANES {
+            let px = x.as_ptr().add(i * LANES);
+            let py = y.as_mut_ptr().add(i * LANES);
+            let fma = _mm256_fmadd_ps(va, _mm256_loadu_ps(px), _mm256_loadu_ps(py));
+            _mm256_storeu_ps(py, fma);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn scale(a: f32, x: &[f32], y: &mut [f32]) {
+        let va = _mm256_set1_ps(a);
+        for i in 0..x.len() / LANES {
+            let px = x.as_ptr().add(i * LANES);
+            let py = y.as_mut_ptr().add(i * LANES);
+            _mm256_storeu_ps(py, _mm256_mul_ps(va, _mm256_loadu_ps(px)));
+        }
+    }
+}
+
+/// AVX2+FMA tiles. Only dispatched after [`Kernel::Avx2`]`.available()`
+/// confirmed the CPU features at runtime (the kernel-selection contract
+/// that makes the `unsafe` sound).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) struct Avx2Tile;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+impl Tile for Avx2Tile {
+    #[inline]
+    fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len() % LANES, 0);
+        // Safety: dispatch guarantees avx2+fma (see Avx2Tile docs); the
+        // length asserts uphold the whole-tile contract.
+        unsafe { avx2::axpy(a, x, y) }
+    }
+
+    #[inline]
+    fn scale(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len() % LANES, 0);
+        // Safety: as for axpy above.
+        unsafe { avx2::scale(a, x, y) }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use super::LANES;
+    use std::arch::aarch64::*;
+
+    // Safety contract: NEON is baseline on aarch64; x.len() == y.len()
+    // must be a multiple of LANES (two q-registers per tile).
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let va = vdupq_n_f32(a);
+        for i in 0..x.len() / LANES {
+            let px = x.as_ptr().add(i * LANES);
+            let py = y.as_mut_ptr().add(i * LANES);
+            vst1q_f32(py, vfmaq_f32(vld1q_f32(py), va, vld1q_f32(px)));
+            vst1q_f32(
+                py.add(4),
+                vfmaq_f32(vld1q_f32(py.add(4)), va, vld1q_f32(px.add(4))),
+            );
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn scale(a: f32, x: &[f32], y: &mut [f32]) {
+        let va = vdupq_n_f32(a);
+        for i in 0..x.len() / LANES {
+            let px = x.as_ptr().add(i * LANES);
+            let py = y.as_mut_ptr().add(i * LANES);
+            vst1q_f32(py, vmulq_f32(va, vld1q_f32(px)));
+            vst1q_f32(py.add(4), vmulq_f32(va, vld1q_f32(px.add(4))));
+        }
+    }
+}
+
+/// NEON tiles (aarch64; NEON is architecturally guaranteed there).
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+pub(crate) struct NeonTile;
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+impl Tile for NeonTile {
+    #[inline]
+    fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len() % LANES, 0);
+        // Safety: NEON is baseline on aarch64; lengths asserted above.
+        unsafe { neon::axpy(a, x, y) }
+    }
+
+    #[inline]
+    fn scale(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len() % LANES, 0);
+        // Safety: as for axpy above.
+        unsafe { neon::scale(a, x, y) }
+    }
+}
+
+/// Non-generic microkernel dispatchers (tests, benches and one-off
+/// callers; the plan assembly monomorphizes over [`Tile`] instead).
+/// Tile contract as in [`Tile`]: equal lengths, whole [`LANES`] tiles
+/// (the scalar arm alone accepts any equal lengths).
+pub fn axpy_tile(k: Kernel, a: f32, x: &[f32], y: &mut [f32]) {
+    match k.resolve() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Kernel::Avx2 => Avx2Tile::axpy(a, x, y),
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Kernel::Neon => NeonTile::axpy(a, x, y),
+        Kernel::Scalar => {
+            for (yi, &xi) in y.iter_mut().zip(x) {
+                *yi += a * xi;
+            }
+        }
+        _ => PortableTile::axpy(a, x, y),
+    }
+}
+
+/// See [`axpy_tile`].
+pub fn scale_tile(k: Kernel, a: f32, x: &[f32], y: &mut [f32]) {
+    match k.resolve() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Kernel::Avx2 => Avx2Tile::scale(a, x, y),
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Kernel::Neon => NeonTile::scale(a, x, y),
+        Kernel::Scalar => {
+            for (yi, &xi) in y.iter_mut().zip(x) {
+                *yi = a * xi;
+            }
+        }
+        _ => PortableTile::scale(a, x, y),
+    }
+}
+
+/// See [`axpy_tile`].
+pub fn expand_tile(k: Kernel, coeffs: &[f32], acc: &[f32], out: &mut [f32]) {
+    match k.resolve() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Kernel::Avx2 => Avx2Tile::expand(coeffs, acc, out),
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Kernel::Neon => NeonTile::expand(coeffs, acc, out),
+        Kernel::Scalar => {
+            for (&c, seg) in coeffs.iter().zip(out.chunks_exact_mut(acc.len())) {
+                for (s, &a) in seg.iter_mut().zip(acc) {
+                    *s += c * a;
+                }
+            }
+        }
+        _ => PortableTile::expand(coeffs, acc, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tile_inputs(n: usize, seed: u32) -> (Vec<f32>, Vec<f32>) {
+        // deterministic, sign-mixed values without pulling in Rng
+        let x: Vec<f32> =
+            (0..n).map(|i| ((i as f32 + seed as f32) * 0.37).sin()).collect();
+        let y: Vec<f32> =
+            (0..n).map(|i| ((i as f32 * 1.3 - seed as f32) * 0.21).cos()).collect();
+        (x, y)
+    }
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&u, &v)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (u - v).abs() <= 1e-5 * (1.0 + u.abs().max(v.abs())),
+                "lane {i}: {u} vs {v}"
+            );
+        }
+    }
+
+    fn check_kernel_ops(k: Kernel) {
+        for n in [LANES, 2 * LANES, 5 * LANES] {
+            let (x, y0) = tile_inputs(n, 3);
+            // axpy vs scalar reference
+            let mut want = y0.clone();
+            axpy_tile(Kernel::Scalar, 0.75, &x, &mut want);
+            let mut got = y0.clone();
+            axpy_tile(k, 0.75, &x, &mut got);
+            assert_close(&got, &want);
+            // scale vs scalar reference
+            let mut want = y0.clone();
+            scale_tile(Kernel::Scalar, -1.25, &x, &mut want);
+            let mut got = y0;
+            scale_tile(k, -1.25, &x, &mut got);
+            assert_close(&got, &want);
+            // expand vs scalar reference (3 coefficients)
+            let coeffs = [0.5f32, -2.0, 3.0];
+            let mut want = vec![0.25f32; 3 * n];
+            expand_tile(Kernel::Scalar, &coeffs, &x, &mut want);
+            let mut got = vec![0.25f32; 3 * n];
+            expand_tile(k, &coeffs, &x, &mut got);
+            assert_close(&got, &want);
+        }
+    }
+
+    #[test]
+    fn portable_tile_matches_scalar_reference() {
+        check_kernel_ops(Kernel::Portable);
+    }
+
+    #[test]
+    fn detected_kernel_matches_scalar_reference() {
+        // exercises the intrinsic path whenever the host supports one
+        check_kernel_ops(Kernel::detect());
+    }
+
+    #[test]
+    fn detection_and_resolution_are_sane() {
+        let d = Kernel::detect();
+        assert!(d.available());
+        assert_ne!(d, Kernel::Scalar, "detection never picks the oracle");
+        for k in Kernel::ALL {
+            assert!(k.resolve().available());
+            assert_eq!(Kernel::by_name(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::by_name("AVX2"), Some(Kernel::Avx2));
+        assert_eq!(Kernel::by_name("nope"), None);
+        // unavailable kernels degrade to the portable tile, not scalar
+        for k in [Kernel::Avx2, Kernel::Neon] {
+            if !k.available() {
+                assert_eq!(k.resolve(), Kernel::Portable);
+            }
+        }
+        assert!(Kernel::from_env().available());
+    }
+
+    #[test]
+    fn pad_to_lanes_rounds_up() {
+        assert_eq!(pad_to_lanes(0), 0);
+        assert_eq!(pad_to_lanes(1), LANES);
+        assert_eq!(pad_to_lanes(LANES), LANES);
+        assert_eq!(pad_to_lanes(LANES + 1), 2 * LANES);
+        assert_eq!(pad_to_lanes(16), 16);
+    }
+}

@@ -5,15 +5,17 @@
 
 pub mod driver;
 pub mod fm;
+pub mod kernel;
 pub mod lanczos;
 pub mod plan;
 pub mod ttm;
 
 pub use driver::{
-    prepare_modes, prepare_modes_unplanned, run_hooi, HooiConfig, HooiOutcome, MemoryReport,
-    ModeState,
+    memory_model_with, prepare_modes, prepare_modes_unplanned, run_hooi, HooiConfig,
+    HooiOutcome, MemoryReport, ModeState, TensorAccounting,
 };
 pub use fm::{fm_pattern, FmPattern};
+pub use kernel::{pad_to_lanes, Kernel, LANES};
 pub use lanczos::{lanczos_svd, LanczosResult, Oracle};
 pub use plan::{PlanWorkspace, TtmPlan};
 pub use ttm::{assemble_local_z, assemble_local_z_fused, dense_penultimate, khat, LocalZ};

@@ -9,40 +9,72 @@
 //! — the same build-once/execute-many structure the dense companion work
 //! (arXiv:1707.05594) uses for its data layouts.
 //!
-//! A [`TtmPlan`] is built once per (mode, rank) in `prepare_modes` and
-//! holds:
-//! - the rank's distinct slice rows (ascending — the `LocalZ` contract),
-//! - a CSR `row_ptr` over the rank's elements grouped by local row, so
-//!   assembly streams contributions row by row with zero searches,
-//! - per-element factor-row indices and values flattened in plan order
-//!   (no COO indirection on the hot path),
-//! - and, within each row, elements sorted by the slowest-varying
-//!   other-mode coordinate(s). Equal-coordinate runs then share their
-//!   slow Kronecker factor row, so the fused kernel accumulates the
-//!   value-weighted fast-factor sum once per run (K flops/element) and
-//!   expands it by the shared slow row(s) once per run (K²/K³ flops/run)
-//!   — hoisting the `v·b[cb]` (3-D) / `v·c[cc]` (4-D) partial products
-//!   out of the per-element loop entirely.
+//! ## Lane-blocked plan layout
 //!
-//! [`PlanWorkspace`] gives each rank reusable batch buffers and a Z
+//! A [`TtmPlan`] is built once per (mode, rank) in `prepare_modes` and
+//! stores the rank's elements in a layout shaped for the 8-lane
+//! microkernels of [`super::kernel`]:
+//!
+//! - `rows` — the rank's distinct slice rows, ascending (the `LocalZ`
+//!   contract);
+//! - elements are grouped by local row and, within each row, sorted by
+//!   the slowest-varying other-mode coordinate(s). Maximal
+//!   equal-coordinate stretches become **runs** that share their slow
+//!   Kronecker factor row(s), so the fused kernel accumulates the
+//!   value-weighted fast-factor sum once per run (K flops/element) and
+//!   expands it by the shared slow row(s) once per run (K²/K³ flops/run);
+//! - per run, the fast-factor index stream `fa` and value stream `vals`
+//!   are padded to a whole number of [`LANES`]-wide slots. Padding slots
+//!   carry `val == 0.0` (extending the batch path's val==0 padding
+//!   contract) and repeat the run's last real factor index, so they
+//!   contribute exactly nothing while letting the accumulation loop run
+//!   `chunks_exact(LANES)` with no per-element scalar tail;
+//! - for 3-D, `row_runs` maps each local row to its run range; for 4-D
+//!   an extra level (`outer_c`/`outer_ptr`) groups runs by the
+//!   slowest-varying coordinate so its factor row is hoisted too.
+//!
+//! At assembly time the fast-mode factor is copied into a `kp`-stride
+//! table (`kp = ⌈K/LANES⌉·LANES` — the K̂ column tile width) and each Z
+//! row is accumulated in a `kp`-stride tile buffer, then compacted into
+//! the dense K̂ layout. Every microkernel call is therefore a whole
+//! number of 8-wide tiles. Kernel selection (scalar oracle / portable /
+//! AVX2 / NEON) lives on the [`PlanWorkspace`] — see [`super::kernel`]
+//! for dispatch rules.
+//!
+//! [`PlanWorkspace`] also gives each rank reusable batch buffers and a Z
 //! arena, replacing the fresh allocations the legacy path makes per mode
-//! per sweep. `benches/ablate_plan.rs` quantifies plan vs. naive
-//! assembly; `tests/plan_equivalence.rs` pins the equivalence with the
+//! per sweep. `benches/ablate_plan.rs` quantifies plan vs. naive assembly
+//! and scalar vs. tiled kernels; `tests/plan_equivalence.rs` and
+//! `tests/kernel_equivalence.rs` pin the equivalences against the
 //! element-order oracle (`assemble_local_z_fused`).
 
+use super::kernel::{pad_to_lanes, Kernel, PortableTile, Tile, LANES};
 use super::ttm::{flush_contrib_batch, khat, other_modes, LocalZ};
 use crate::linalg::{axpy, Mat};
 use crate::runtime::Engine;
 use crate::tensor::SparseTensor;
 
-/// Reusable per-rank scratch: fused-kernel accumulators, batched-path
-/// buffers, and the Z arena (flat buffers recycled across modes/sweeps).
-#[derive(Debug, Default)]
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use super::kernel::Avx2Tile;
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+use super::kernel::NeonTile;
+
+/// Reusable per-rank scratch: the selected microkernel, fused-kernel
+/// accumulators and tile buffers, batched-path buffers, and the Z arena
+/// (flat buffers recycled across modes/sweeps).
+#[derive(Debug)]
 pub struct PlanWorkspace {
-    /// Fast-factor accumulator (K).
+    /// Microkernel this rank executes (threaded into every assembly;
+    /// recorded by the cluster's concurrency report).
+    kernel: Kernel,
+    /// Fast-factor accumulator (kp tiled / K scalar).
     acc: Vec<f32>,
-    /// 4-D middle accumulator (K²).
+    /// 4-D middle accumulator (K·kp tiled / K² scalar).
     acc2: Vec<f32>,
+    /// kp-stride padded copy of the fast-mode factor (tiled path).
+    apad: Vec<f32>,
+    /// kp-stride Z row tile, compacted into the K̂ layout per row.
+    ztile: Vec<f32>,
     rows_a: Vec<f32>,
     rows_b: Vec<f32>,
     rows_c: Vec<f32>,
@@ -51,9 +83,39 @@ pub struct PlanWorkspace {
     z_pool: Vec<Vec<f32>>,
 }
 
+impl Default for PlanWorkspace {
+    fn default() -> Self {
+        PlanWorkspace::new()
+    }
+}
+
 impl PlanWorkspace {
+    /// Workspace with the host-selected kernel ([`Kernel::from_env`]:
+    /// best detected SIMD tier, `TUCKER_KERNEL` override honored).
     pub fn new() -> PlanWorkspace {
-        PlanWorkspace::default()
+        PlanWorkspace::with_kernel(Kernel::from_env())
+    }
+
+    /// Workspace pinned to a specific kernel (ablations, oracles).
+    pub fn with_kernel(kernel: Kernel) -> PlanWorkspace {
+        PlanWorkspace {
+            kernel,
+            acc: Vec::new(),
+            acc2: Vec::new(),
+            apad: Vec::new(),
+            ztile: Vec::new(),
+            rows_a: Vec::new(),
+            rows_b: Vec::new(),
+            rows_c: Vec::new(),
+            bvals: Vec::new(),
+            targets: Vec::new(),
+            z_pool: Vec::new(),
+        }
+    }
+
+    /// The kernel this workspace dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Pop a zeroed buffer of exactly `len` floats from the Z arena.
@@ -77,27 +139,55 @@ impl PlanWorkspace {
         self.bvals.resize(bsz, 0.0);
         self.targets.resize(bsz, 0);
     }
+
+    /// Copy factor `f` into the kp-stride padded table (tail columns
+    /// zeroed so padded lanes multiply to exact zeros).
+    fn prepare_apad(&mut self, f: &Mat, kp: usize) {
+        self.apad.clear();
+        self.apad.resize(f.rows * kp, 0.0);
+        for r in 0..f.rows {
+            self.apad[r * kp..r * kp + f.cols].copy_from_slice(f.row(r));
+        }
+    }
 }
 
-/// Precompiled assembly plan for one (mode, rank): CSR-grouped, run-sorted
-/// element streams (layout documented in the module docs).
+/// Precompiled assembly plan for one (mode, rank): lane-blocked,
+/// run-sorted element streams (layout documented in the module docs).
 #[derive(Debug, Clone)]
 pub struct TtmPlan {
     pub mode: usize,
     pub k: usize,
     /// K̂ = K^{N−1}.
     pub khat: usize,
+    /// K rounded up to a whole number of [`LANES`] — the column tile
+    /// width of the padded factor table, accumulators and Z row tiles.
+    pub kp: usize,
     /// Modes other than `mode`, ascending (Kronecker factor order).
     pub others: Vec<usize>,
     /// Global slice index of each local row, ascending.
     pub rows: Vec<u32>,
-    /// CSR: plan slots of local row r are `row_ptr[r]..row_ptr[r+1]`.
-    pub row_ptr: Vec<u32>,
-    /// Factor-row index stream per other mode (plan order; `fidx[0]` is
-    /// the fastest-varying Kronecker factor, matching `other_modes`).
-    pub fidx: Vec<Vec<u32>>,
-    /// Element values in plan order.
+    /// 3-D: run range of local row r is `row_runs[r]..row_runs[r+1]`.
+    /// 4-D: *outer*-run range of local row r.
+    pub row_runs: Vec<u32>,
+    /// 4-D only: slowest-mode factor row per outer run (empty for 3-D).
+    pub outer_c: Vec<u32>,
+    /// 4-D only: run range per outer run (empty for 3-D).
+    pub outer_ptr: Vec<u32>,
+    /// Slow-mode factor row per run.
+    pub run_b: Vec<u32>,
+    /// Real (unpadded) element count per run.
+    pub run_len: Vec<u32>,
+    /// Slot range of run j is `slot_ptr[j]..slot_ptr[j+1]`; every range
+    /// length is a multiple of [`LANES`].
+    pub slot_ptr: Vec<u32>,
+    /// Fast-mode factor row per slot (padding slots repeat the run's
+    /// last real index).
+    pub fa: Vec<u32>,
+    /// Element value per slot (padding slots are exactly 0.0 — the lane
+    /// extension of the val==0 padding contract).
     pub vals: Vec<f32>,
+    /// Total real elements (Σ `run_len`).
+    nnz: usize,
 }
 
 impl TtmPlan {
@@ -112,6 +202,7 @@ impl TtmPlan {
         );
         let others = other_modes(ndim, mode);
         let kh = khat(k, ndim);
+        let kp = pad_to_lanes(k);
         let mut rows: Vec<u32> =
             elems.iter().map(|&e| t.coord(mode, e as usize)).collect();
         rows.sort_unstable();
@@ -149,20 +240,156 @@ impl TtmPlan {
                 });
             }
         }
-        let fidx: Vec<Vec<u32>> = others
-            .iter()
-            .map(|&m| order.iter().map(|&e| t.coord(m, e as usize)).collect())
-            .collect();
-        let vals: Vec<f32> = order.iter().map(|&e| t.vals[e as usize]).collect();
-        // element ids themselves are not retained: the streams above are
-        // all the hot path needs, and dropping them saves nnz·4 bytes
-        // per (mode, rank) for the lifetime of the run
-        TtmPlan { mode, k, khat: kh, others, rows, row_ptr, fidx, vals }
+
+        // --- lane-blocked encoding of the ordered streams ---
+        // Pad every run's fa/vals block to a whole number of LANES slots
+        // (val==0, index repeated) so the tiled kernels never see a
+        // scalar tail. Element ids are not retained: the streams below
+        // are all the hot path needs.
+        fn pad_run(fa: &mut Vec<u32>, vals: &mut Vec<f32>, len: usize) {
+            let rem = len % LANES;
+            if rem != 0 {
+                let last = *fa.last().expect("padding a non-empty run");
+                for _ in rem..LANES {
+                    fa.push(last);
+                    vals.push(0.0);
+                }
+            }
+        }
+        let fast = others[0];
+        let slow = others[1];
+        let mut row_runs = Vec::with_capacity(rows.len() + 1);
+        row_runs.push(0u32);
+        let mut outer_c: Vec<u32> = Vec::new();
+        let mut outer_ptr: Vec<u32> = Vec::new();
+        let mut run_b: Vec<u32> = Vec::new();
+        let mut run_len: Vec<u32> = Vec::new();
+        let mut slot_ptr = vec![0u32];
+        let mut fa: Vec<u32> = Vec::with_capacity(elems.len());
+        let mut vals: Vec<f32> = Vec::with_capacity(elems.len());
+        if ndim == 3 {
+            for r in 0..rows.len() {
+                let seg = &order[row_ptr[r] as usize..row_ptr[r + 1] as usize];
+                let mut i = 0usize;
+                while i < seg.len() {
+                    let b = t.coord(slow, seg[i] as usize);
+                    let start = i;
+                    while i < seg.len() && t.coord(slow, seg[i] as usize) == b {
+                        let e = seg[i] as usize;
+                        fa.push(t.coord(fast, e));
+                        vals.push(t.vals[e]);
+                        i += 1;
+                    }
+                    pad_run(&mut fa, &mut vals, i - start);
+                    run_b.push(b);
+                    run_len.push((i - start) as u32);
+                    slot_ptr.push(fa.len() as u32);
+                }
+                row_runs.push(run_b.len() as u32);
+            }
+        } else {
+            let slowest = others[2];
+            outer_ptr.push(0);
+            for r in 0..rows.len() {
+                let seg = &order[row_ptr[r] as usize..row_ptr[r + 1] as usize];
+                let mut i = 0usize;
+                while i < seg.len() {
+                    let c = t.coord(slowest, seg[i] as usize);
+                    while i < seg.len() && t.coord(slowest, seg[i] as usize) == c {
+                        let b = t.coord(slow, seg[i] as usize);
+                        let start = i;
+                        while i < seg.len()
+                            && t.coord(slowest, seg[i] as usize) == c
+                            && t.coord(slow, seg[i] as usize) == b
+                        {
+                            let e = seg[i] as usize;
+                            fa.push(t.coord(fast, e));
+                            vals.push(t.vals[e]);
+                            i += 1;
+                        }
+                        pad_run(&mut fa, &mut vals, i - start);
+                        run_b.push(b);
+                        run_len.push((i - start) as u32);
+                        slot_ptr.push(fa.len() as u32);
+                    }
+                    outer_c.push(c);
+                    outer_ptr.push(run_b.len() as u32);
+                }
+                row_runs.push(outer_c.len() as u32);
+            }
+        }
+        TtmPlan {
+            mode,
+            k,
+            khat: kh,
+            kp,
+            others,
+            rows,
+            row_runs,
+            outer_c,
+            outer_ptr,
+            run_b,
+            run_len,
+            slot_ptr,
+            fa,
+            vals,
+            nnz: elems.len(),
+        }
     }
 
-    /// Elements covered by this plan.
+    /// Real elements covered by this plan (padding slots excluded).
     pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Total stream slots including lane padding.
+    pub fn padded_slots(&self) -> usize {
         self.vals.len()
+    }
+
+    /// Bytes this plan's streams occupy (every entry is a 4-byte index
+    /// or value), lane padding included — what `memory_model` charges
+    /// per (mode, rank) under plan-stream accounting.
+    pub fn stream_bytes(&self) -> u64 {
+        4 * (self.rows.len()
+            + self.row_runs.len()
+            + self.outer_c.len()
+            + self.outer_ptr.len()
+            + self.run_b.len()
+            + self.run_len.len()
+            + self.slot_ptr.len()
+            + self.fa.len()
+            + self.vals.len()) as u64
+    }
+
+    /// Visit every *real* element in plan order as
+    /// `(local_row, fa, fb, fc, val)` — `fc` is 0 for 3-D plans. Padding
+    /// slots are skipped via `run_len`, not by value, so explicit zeros
+    /// in the tensor are still visited.
+    pub fn for_each_element(&self, mut f: impl FnMut(usize, u32, u32, u32, f32)) {
+        let four = self.others.len() == 3;
+        for r in 0..self.rows.len() {
+            let (lo, hi) = (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+            if four {
+                for oj in lo..hi {
+                    let (jlo, jhi) =
+                        (self.outer_ptr[oj] as usize, self.outer_ptr[oj + 1] as usize);
+                    for j in jlo..jhi {
+                        let s0 = self.slot_ptr[j] as usize;
+                        for s in s0..s0 + self.run_len[j] as usize {
+                            f(r, self.fa[s], self.run_b[j], self.outer_c[oj], self.vals[s]);
+                        }
+                    }
+                }
+            } else {
+                for j in lo..hi {
+                    let s0 = self.slot_ptr[j] as usize;
+                    for s in s0..s0 + self.run_len[j] as usize {
+                        f(r, self.fa[s], self.run_b[j], 0, self.vals[s]);
+                    }
+                }
+            }
+        }
     }
 
     /// Assemble Z^p, dispatching on the engine like `assemble_local_z`
@@ -180,66 +407,104 @@ impl TtmPlan {
         }
     }
 
-    /// Fused plan kernel: stream rows via CSR, hoist slow-factor products
-    /// across equal-coordinate runs (see module docs for the count).
+    /// Fused plan kernel, dispatched on the workspace's [`Kernel`]:
+    /// the scalar oracle replays the PR 1 per-element arithmetic; the
+    /// tiled kernels run the lane-blocked layout through the 8-wide
+    /// microkernels (monomorphized per instruction set).
     pub fn assemble_fused(&self, factors: &[Mat], ws: &mut PlanWorkspace) -> LocalZ {
+        match ws.kernel.resolve() {
+            Kernel::Scalar => self.assemble_fused_scalar(factors, ws),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // Safety: the dispatch contract — Kernel::resolve only yields
+            // Avx2 after runtime detection of avx2+fma succeeded.
+            Kernel::Avx2 => unsafe { self.assemble_fused_avx2(factors, ws) },
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            // Safety: NEON is architecturally guaranteed on aarch64.
+            Kernel::Neon => unsafe { self.assemble_fused_neon(factors, ws) },
+            _ => self.assemble_fused_tiled::<PortableTile>(factors, ws),
+        }
+    }
+
+    /// AVX2 entry point: `target_feature` on the *whole* assembly so the
+    /// intrinsic microkernels inline into the run/row loops (a
+    /// `target_feature` fn cannot inline into a plain caller — wrapping
+    /// only the 8-float microkernel would pay a call per 2 FMAs).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn assemble_fused_avx2(
+        &self,
+        factors: &[Mat],
+        ws: &mut PlanWorkspace,
+    ) -> LocalZ {
+        self.assemble_fused_tiled::<Avx2Tile>(factors, ws)
+    }
+
+    /// NEON entry point (see `assemble_fused_avx2` for why the feature
+    /// is enabled on the whole assembly).
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    #[target_feature(enable = "neon")]
+    unsafe fn assemble_fused_neon(
+        &self,
+        factors: &[Mat],
+        ws: &mut PlanWorkspace,
+    ) -> LocalZ {
+        self.assemble_fused_tiled::<NeonTile>(factors, ws)
+    }
+
+    /// Scalar reference path: the PR 1 run-hoisted loops over unpadded
+    /// K-length rows (padding slots skipped via `run_len`). Kept as the
+    /// equivalence oracle and the ablation baseline.
+    fn assemble_fused_scalar(&self, factors: &[Mat], ws: &mut PlanWorkspace) -> LocalZ {
         let k = self.k;
-        let kh = self.khat;
         let nrows = self.rows.len();
-        let data = ws.take_z(nrows * kh);
-        let mut z = Mat { rows: nrows, cols: kh, data };
+        let data = ws.take_z(nrows * self.khat);
+        let mut z = Mat { rows: nrows, cols: self.khat, data };
+        if self.nnz == 0 {
+            return LocalZ { rows: self.rows.clone(), z };
+        }
+        let fm_a = &factors[self.others[0]];
+        let fm_b = &factors[self.others[1]];
         ws.acc.clear();
         ws.acc.resize(k, 0.0);
         if self.others.len() == 2 {
-            let (oa, ob) = (self.others[0], self.others[1]);
-            let (fa, fb) = (&self.fidx[0], &self.fidx[1]);
             let acc = &mut ws.acc;
             for r in 0..nrows {
-                let (lo, hi) =
-                    (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
                 let zrow = z.row_mut(r);
-                let mut i = lo;
-                while i < hi {
-                    let bi = fb[i];
+                for j in self.row_runs[r] as usize..self.row_runs[r + 1] as usize {
                     acc.fill(0.0);
-                    while i < hi && fb[i] == bi {
-                        axpy(self.vals[i], factors[oa].row(fa[i] as usize), acc);
-                        i += 1;
+                    let s0 = self.slot_ptr[j] as usize;
+                    for s in s0..s0 + self.run_len[j] as usize {
+                        axpy(self.vals[s], fm_a.row(self.fa[s] as usize), acc);
                     }
-                    let rb = factors[ob].row(bi as usize);
+                    let rb = fm_b.row(self.run_b[j] as usize);
                     for (cb, &bv) in rb.iter().enumerate() {
                         axpy(bv, acc, &mut zrow[cb * k..(cb + 1) * k]);
                     }
                 }
             }
         } else {
-            let (oa, ob, oc) = (self.others[0], self.others[1], self.others[2]);
-            let (fa, fb, fc) = (&self.fidx[0], &self.fidx[1], &self.fidx[2]);
+            let fm_c = &factors[self.others[2]];
             let kk = k * k;
             ws.acc2.clear();
             ws.acc2.resize(kk, 0.0);
             let PlanWorkspace { acc, acc2, .. } = ws;
             for r in 0..nrows {
-                let (lo, hi) =
-                    (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
                 let zrow = z.row_mut(r);
-                let mut i = lo;
-                while i < hi {
-                    let ci = fc[i];
+                for oj in self.row_runs[r] as usize..self.row_runs[r + 1] as usize {
                     acc2.fill(0.0);
-                    while i < hi && fc[i] == ci {
-                        let bi = fb[i];
+                    for j in self.outer_ptr[oj] as usize..self.outer_ptr[oj + 1] as usize
+                    {
                         acc.fill(0.0);
-                        while i < hi && fc[i] == ci && fb[i] == bi {
-                            axpy(self.vals[i], factors[oa].row(fa[i] as usize), acc);
-                            i += 1;
+                        let s0 = self.slot_ptr[j] as usize;
+                        for s in s0..s0 + self.run_len[j] as usize {
+                            axpy(self.vals[s], fm_a.row(self.fa[s] as usize), acc);
                         }
-                        let rb = factors[ob].row(bi as usize);
+                        let rb = fm_b.row(self.run_b[j] as usize);
                         for (cb, &bv) in rb.iter().enumerate() {
                             axpy(bv, acc, &mut acc2[cb * k..(cb + 1) * k]);
                         }
                     }
-                    let rc = factors[oc].row(ci as usize);
+                    let rc = fm_c.row(self.outer_c[oj] as usize);
                     for (cc, &cv) in rc.iter().enumerate() {
                         axpy(cv, acc2, &mut zrow[cc * kk..(cc + 1) * kk]);
                     }
@@ -249,9 +514,111 @@ impl TtmPlan {
         LocalZ { rows: self.rows.clone(), z }
     }
 
+    /// Tiled fused path: every inner loop is whole 8-lane tiles — run
+    /// accumulation over the padded fa/vals blocks against the kp-stride
+    /// factor table, fused slow×fast expansion into kp-stride tiles,
+    /// then one compaction copy per row into the K̂ layout.
+    fn assemble_fused_tiled<MK: Tile>(
+        &self,
+        factors: &[Mat],
+        ws: &mut PlanWorkspace,
+    ) -> LocalZ {
+        let (k, kp) = (self.k, self.kp);
+        let nrows = self.rows.len();
+        let data = ws.take_z(nrows * self.khat);
+        let mut z = Mat { rows: nrows, cols: self.khat, data };
+        if self.nnz == 0 {
+            return LocalZ { rows: self.rows.clone(), z };
+        }
+        ws.prepare_apad(&factors[self.others[0]], kp);
+        ws.acc.clear();
+        ws.acc.resize(kp, 0.0);
+        if self.others.len() == 2 {
+            let fm_b = &factors[self.others[1]];
+            ws.ztile.clear();
+            ws.ztile.resize(k * kp, 0.0);
+            let PlanWorkspace { apad, acc, ztile, .. } = ws;
+            for r in 0..nrows {
+                let (jlo, jhi) =
+                    (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+                for j in jlo..jhi {
+                    let (slo, shi) =
+                        (self.slot_ptr[j] as usize, self.slot_ptr[j + 1] as usize);
+                    accumulate_run::<MK>(
+                        &self.fa[slo..shi],
+                        &self.vals[slo..shi],
+                        apad,
+                        kp,
+                        acc,
+                    );
+                    let rb = fm_b.row(self.run_b[j] as usize);
+                    if j == jlo {
+                        MK::expand_store(rb, acc, ztile);
+                    } else {
+                        MK::expand(rb, acc, ztile);
+                    }
+                }
+                // compact the kp-stride tile into the dense K̂ row
+                let zrow = z.row_mut(r);
+                for cb in 0..k {
+                    zrow[cb * k..(cb + 1) * k]
+                        .copy_from_slice(&ztile[cb * kp..cb * kp + k]);
+                }
+            }
+        } else {
+            let fm_b = &factors[self.others[1]];
+            let fm_c = &factors[self.others[2]];
+            ws.acc2.clear();
+            ws.acc2.resize(k * kp, 0.0);
+            ws.ztile.clear();
+            ws.ztile.resize(k * k * kp, 0.0);
+            let PlanWorkspace { apad, acc, acc2, ztile, .. } = ws;
+            for r in 0..nrows {
+                let (olo, ohi) =
+                    (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+                for oj in olo..ohi {
+                    let (jlo, jhi) =
+                        (self.outer_ptr[oj] as usize, self.outer_ptr[oj + 1] as usize);
+                    for j in jlo..jhi {
+                        let (slo, shi) =
+                            (self.slot_ptr[j] as usize, self.slot_ptr[j + 1] as usize);
+                        accumulate_run::<MK>(
+                            &self.fa[slo..shi],
+                            &self.vals[slo..shi],
+                            apad,
+                            kp,
+                            acc,
+                        );
+                        let rb = fm_b.row(self.run_b[j] as usize);
+                        if j == jlo {
+                            MK::expand_store(rb, acc, acc2);
+                        } else {
+                            MK::expand(rb, acc, acc2);
+                        }
+                    }
+                    let rc = fm_c.row(self.outer_c[oj] as usize);
+                    if oj == olo {
+                        MK::expand_store(rc, acc2, ztile);
+                    } else {
+                        MK::expand(rc, acc2, ztile);
+                    }
+                }
+                let zrow = z.row_mut(r);
+                for seg in 0..k * k {
+                    zrow[seg * k..(seg + 1) * k]
+                        .copy_from_slice(&ztile[seg * kp..seg * kp + k]);
+                }
+            }
+        }
+        LocalZ { rows: self.rows.clone(), z }
+    }
+
     /// Batched plan path: same padded fixed-shape engine contract as
-    /// `assemble_local_z`, but fed from the precompiled streams (no
-    /// searches, targets come straight from the CSR walk).
+    /// `assemble_local_z`, but fed from the lane-blocked streams (no
+    /// searches, targets come straight from the run walk). Runs the
+    /// padding check in `flush_contrib_batch` strictly: with the
+    /// lane-blocked layout a violated val==0 contract is a data-layout
+    /// bug, not a debug-only hazard.
     pub fn assemble_batched(
         &self,
         factors: &[Mat],
@@ -264,41 +631,69 @@ impl TtmPlan {
         let nrows = self.rows.len();
         let data = ws.take_z(nrows * kh);
         let mut z = Mat { rows: nrows, cols: kh, data };
-        if self.vals.is_empty() {
+        if self.nnz == 0 {
             return LocalZ { rows: self.rows.clone(), z };
         }
         let bsz = engine.ttm_batch_size(ndim, k);
         ws.ensure_batch(bsz, k);
         let PlanWorkspace { rows_a, rows_b, rows_c, bvals, targets, .. } = ws;
+        let (oa, ob) = (self.others[0], self.others[1]);
+        let oc = if ndim == 4 { self.others[2] } else { 0 };
         let mut fill = 0usize;
-        for r in 0..nrows {
-            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
-                for (slot, stream) in self.fidx.iter().enumerate() {
-                    let frow = factors[self.others[slot]].row(stream[i] as usize);
-                    let dst = match slot {
-                        0 => &mut rows_a[fill * k..(fill + 1) * k],
-                        1 => &mut rows_b[fill * k..(fill + 1) * k],
-                        _ => &mut rows_c[fill * k..(fill + 1) * k],
-                    };
-                    dst.copy_from_slice(frow);
-                }
-                bvals[fill] = self.vals[i];
-                targets[fill] = r as u32;
-                fill += 1;
-                if fill == bsz {
-                    flush_contrib_batch(
-                        engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals,
-                        targets, &mut z,
-                    );
-                    fill = 0;
-                }
+        self.for_each_element(|r, ia, ib, ic, v| {
+            rows_a[fill * k..(fill + 1) * k]
+                .copy_from_slice(factors[oa].row(ia as usize));
+            rows_b[fill * k..(fill + 1) * k]
+                .copy_from_slice(factors[ob].row(ib as usize));
+            if ndim == 4 {
+                rows_c[fill * k..(fill + 1) * k]
+                    .copy_from_slice(factors[oc].row(ic as usize));
             }
-        }
+            bvals[fill] = v;
+            targets[fill] = r as u32;
+            fill += 1;
+            if fill == bsz {
+                flush_contrib_batch(
+                    engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals,
+                    targets, &mut z, true,
+                );
+                fill = 0;
+            }
+        });
         flush_contrib_batch(
             engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals, targets,
-            &mut z,
+            &mut z, true,
         );
         LocalZ { rows: self.rows.clone(), z }
+    }
+}
+
+/// Accumulate one padded run into `acc`: `acc = Σ_s vals[s]·apad[fa[s]]`
+/// over whole [`LANES`]-wide element blocks. The first element opens the
+/// accumulator with the scale(-accumulate) microkernel — no zero-fill —
+/// and the padded tail (val==0) contributes exact zeros.
+#[inline]
+fn accumulate_run<MK: Tile>(
+    fa: &[u32],
+    vals: &[f32],
+    apad: &[f32],
+    kp: usize,
+    acc: &mut [f32],
+) {
+    debug_assert!(!fa.is_empty());
+    debug_assert_eq!(fa.len() % LANES, 0);
+    debug_assert_eq!(fa.len(), vals.len());
+    let row = |f: u32| &apad[f as usize * kp..f as usize * kp + kp];
+    MK::scale(vals[0], row(fa[0]), acc);
+    for l in 1..LANES {
+        MK::axpy(vals[l], row(fa[l]), acc);
+    }
+    for (f8, v8) in
+        fa[LANES..].chunks_exact(LANES).zip(vals[LANES..].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            MK::axpy(v8[l], row(f8[l]), acc);
+        }
     }
 }
 
@@ -319,6 +714,56 @@ mod tests {
         (t, factors)
     }
 
+    /// Shared invariants of the lane-blocked layout for one plan.
+    fn check_lane_invariants(t: &SparseTensor, plan: &TtmPlan) {
+        let mode = plan.mode;
+        assert!(plan.rows.windows(2).all(|w| w[0] < w[1]), "rows ascending");
+        assert_eq!(plan.kp % LANES, 0);
+        assert!(plan.kp >= plan.k);
+        assert_eq!(*plan.slot_ptr.last().unwrap() as usize, plan.fa.len());
+        assert_eq!(plan.fa.len(), plan.vals.len());
+        let mut real = 0usize;
+        for j in 0..plan.run_b.len() {
+            let (lo, hi) = (plan.slot_ptr[j] as usize, plan.slot_ptr[j + 1] as usize);
+            let len = plan.run_len[j] as usize;
+            assert!(len >= 1, "runs are non-empty");
+            assert_eq!(hi - lo, crate::hooi::kernel::pad_to_lanes(len), "run {j} aligned");
+            // padded slots: val exactly 0.0, index repeats a real slot
+            for s in lo + len..hi {
+                assert_eq!(plan.vals[s].to_bits(), 0.0f32.to_bits(), "pad val run {j}");
+                assert_eq!(plan.fa[s], plan.fa[lo + len - 1], "pad idx run {j}");
+            }
+            real += len;
+        }
+        assert_eq!(real, plan.nnz(), "run_len sums to nnz");
+        // multiset of real elements matches the tensor's slices
+        let mut got: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
+        plan.for_each_element(|r, ia, ib, ic, v| {
+            got.push((plan.rows[r], ia, ib, ic, v.to_bits()));
+        });
+        let mut want: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
+        for e in 0..t.nnz() {
+            let l = t.coord(mode, e);
+            if plan.rows.binary_search(&l).is_ok() {
+                let ic = if plan.others.len() == 3 {
+                    t.coord(plan.others[2], e)
+                } else {
+                    0
+                };
+                want.push((
+                    l,
+                    t.coord(plan.others[0], e),
+                    t.coord(plan.others[1], e),
+                    ic,
+                    t.vals[e].to_bits(),
+                ));
+            }
+        }
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "mode {mode} element multiset");
+    }
+
     #[test]
     fn plan_layout_invariants_3d() {
         let (t, _) = setup(vec![15, 11, 7], 500, 4, 1);
@@ -326,33 +771,41 @@ mod tests {
         for mode in 0..3 {
             let plan = TtmPlan::build(&t, mode, &elems, 4);
             assert_eq!(plan.nnz(), 500);
-            assert_eq!(*plan.row_ptr.last().unwrap() as usize, 500);
-            // rows ascending & distinct
-            assert!(plan.rows.windows(2).all(|w| w[0] < w[1]));
+            assert!(plan.outer_c.is_empty() && plan.outer_ptr.is_empty());
+            assert_eq!(plan.row_runs.len(), plan.rows.len() + 1);
+            check_lane_invariants(&t, &plan);
             for r in 0..plan.rows.len() {
-                let (lo, hi) = (plan.row_ptr[r] as usize, plan.row_ptr[r + 1] as usize);
-                assert!(lo < hi, "every stored row has elements");
-                // the row's plan slots carry exactly the slice's elements:
-                // multiset of (other-mode coords, value bits) must match
-                let mut got: Vec<(u32, u32, u32)> = (lo..hi)
-                    .map(|i| (plan.fidx[0][i], plan.fidx[1][i], plan.vals[i].to_bits()))
-                    .collect();
-                let mut want: Vec<(u32, u32, u32)> = (0..t.nnz())
-                    .filter(|&e| t.coord(mode, e) == plan.rows[r])
-                    .map(|e| {
-                        (
-                            t.coord(plan.others[0], e),
-                            t.coord(plan.others[1], e),
-                            t.vals[e].to_bits(),
-                        )
-                    })
-                    .collect();
-                got.sort_unstable();
-                want.sort_unstable();
-                assert_eq!(got, want, "mode {mode} row {r}");
-                // slow coordinate non-decreasing within the row
-                let slow = plan.fidx.last().unwrap();
-                assert!(slow[lo..hi].windows(2).all(|w| w[0] <= w[1]));
+                let (lo, hi) =
+                    (plan.row_runs[r] as usize, plan.row_runs[r + 1] as usize);
+                assert!(lo < hi, "every stored row has runs");
+                // slow factor row strictly increasing across a row's runs
+                assert!(plan.run_b[lo..hi].windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn plan_layout_invariants_4d() {
+        let (t, _) = setup(vec![10, 8, 6, 5], 400, 3, 2);
+        let elems: Vec<u32> = (0..400).collect();
+        for mode in 0..4 {
+            let plan = TtmPlan::build(&t, mode, &elems, 3);
+            assert_eq!(plan.nnz(), 400);
+            assert_eq!(plan.row_runs.len(), plan.rows.len() + 1);
+            assert_eq!(plan.outer_ptr.len(), plan.outer_c.len() + 1);
+            check_lane_invariants(&t, &plan);
+            for r in 0..plan.rows.len() {
+                let (lo, hi) =
+                    (plan.row_runs[r] as usize, plan.row_runs[r + 1] as usize);
+                assert!(lo < hi, "every stored row has outer runs");
+                // slowest coordinate strictly increasing across outer runs
+                assert!(plan.outer_c[lo..hi].windows(2).all(|w| w[0] < w[1]));
+                for oj in lo..hi {
+                    let (jlo, jhi) =
+                        (plan.outer_ptr[oj] as usize, plan.outer_ptr[oj + 1] as usize);
+                    assert!(jlo < jhi, "outer runs are non-empty");
+                    assert!(plan.run_b[jlo..jhi].windows(2).all(|w| w[0] < w[1]));
+                }
             }
         }
     }
@@ -362,12 +815,19 @@ mod tests {
         let (t, factors) = setup(vec![12, 9, 7], 400, 5, 2);
         let elems: Vec<u32> = (0..400).collect();
         let mut ws = PlanWorkspace::new();
+        let mut ws_scalar = PlanWorkspace::with_kernel(Kernel::Scalar);
         for mode in 0..3 {
             let plan = TtmPlan::build(&t, mode, &elems, 5);
-            let a = plan.assemble_fused(&factors, &mut ws);
-            let b = crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 5);
-            assert_eq!(a.rows, b.rows);
-            assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
+            let want =
+                crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 5);
+            let tiled = plan.assemble_fused(&factors, &mut ws);
+            assert_eq!(tiled.rows, want.rows);
+            assert!(tiled.z.max_abs_diff(&want.z) < 1e-4, "tiled mode {mode}");
+            ws.recycle(tiled.z);
+            let scalar = plan.assemble_fused(&factors, &mut ws_scalar);
+            assert_eq!(scalar.rows, want.rows);
+            assert!(scalar.z.max_abs_diff(&want.z) < 1e-4, "scalar mode {mode}");
+            ws_scalar.recycle(scalar.z);
         }
     }
 
@@ -376,12 +836,18 @@ mod tests {
         let (t, factors) = setup(vec![8, 6, 5, 4], 300, 3, 3);
         let elems: Vec<u32> = (0..300).collect();
         let mut ws = PlanWorkspace::new();
+        let mut ws_scalar = PlanWorkspace::with_kernel(Kernel::Scalar);
         for mode in 0..4 {
             let plan = TtmPlan::build(&t, mode, &elems, 3);
-            let a = plan.assemble_fused(&factors, &mut ws);
-            let b = crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 3);
-            assert_eq!(a.rows, b.rows);
-            assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
+            let want =
+                crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 3);
+            let tiled = plan.assemble_fused(&factors, &mut ws);
+            assert_eq!(tiled.rows, want.rows);
+            assert!(tiled.z.max_abs_diff(&want.z) < 1e-4, "tiled mode {mode}");
+            ws.recycle(tiled.z);
+            let scalar = plan.assemble_fused(&factors, &mut ws_scalar);
+            assert!(scalar.z.max_abs_diff(&want.z) < 1e-4, "scalar mode {mode}");
+            ws_scalar.recycle(scalar.z);
         }
     }
 
@@ -409,5 +875,17 @@ mod tests {
         let second = plan.assemble_fused(&factors, &mut ws);
         assert_eq!(second.z.data.as_ptr(), ptr, "arena buffer reused");
         assert_eq!(second.z.data, want.data, "recycled buffer fully re-zeroed");
+    }
+
+    #[test]
+    fn stream_bytes_counts_lane_padding() {
+        let (t, _) = setup(vec![30, 10, 4], 200, 5, 6);
+        let elems: Vec<u32> = (0..200).collect();
+        let plan = TtmPlan::build(&t, 0, &elems, 5);
+        assert!(plan.padded_slots() >= plan.nnz());
+        assert!(plan.padded_slots() % LANES == 0);
+        // fa + vals alone are 8 bytes per padded slot; the run/row tables
+        // only add to that
+        assert!(plan.stream_bytes() >= 8 * plan.padded_slots() as u64);
     }
 }

@@ -20,8 +20,10 @@
 //!   batches; the tail slots past `fill` are neutralized *only* by their
 //!   `vals` entry being zeroed — the row buffers beyond `fill`
 //!   deliberately carry stale data from earlier batches.
-//!   [`flush_contrib_batch`] makes that contract explicit with a debug
-//!   assertion on the padded outputs.
+//!   [`flush_contrib_batch`] makes that contract explicit by checking
+//!   the padded outputs — a debug assertion on the legacy path, a hard
+//!   error when fed from the lane-blocked plan streams (whose own
+//!   val==0 lane padding extends the same contract).
 //! - **Plan layer** ([`super::plan`]): a `TtmPlan` precompiles, per
 //!   (mode, rank), the same assembly as [`assemble_local_z`] — rows
 //!   sorted/deduped once, elements CSR-grouped by local row, and within
@@ -121,14 +123,14 @@ pub fn assemble_local_z(
         if fill == bsz {
             flush_contrib_batch(
                 engine, ndim, k, kh, fill, &rows_a, &rows_b, &rows_c, &mut vals,
-                &targets, &mut z,
+                &targets, &mut z, false,
             );
             fill = 0;
         }
     }
     flush_contrib_batch(
         engine, ndim, k, kh, fill, &rows_a, &rows_b, &rows_c, &mut vals,
-        &targets, &mut z,
+        &targets, &mut z, false,
     );
     LocalZ { rows, z }
 }
@@ -140,9 +142,14 @@ pub fn assemble_local_z(
 /// their `vals` entry here — `rows_a`/`rows_b`/`rows_c` beyond `fill`
 /// deliberately keep stale data from earlier batches (the fixed-shape
 /// PJRT artifacts require full batches and multiply every row by its
-/// val). The debug assertion verifies the padded outputs really are
-/// zero, so an engine that mishandles val==0 (or stale non-finite row
-/// data that turns 0·x into NaN) fails loudly in debug builds.
+/// val). The padded outputs are verified to really be zero, so an engine
+/// that mishandles val==0 (or stale non-finite row data that turns 0·x
+/// into NaN) fails loudly: in debug builds always, and in *all* builds
+/// when `strict` is set — the lane-blocked plan layer passes `strict`
+/// because its own streams extend the same val==0 contract to lane
+/// padding, and a violation there is a data-layout bug, not a
+/// debug-only hazard. (Full batches have no padded slots, so the strict
+/// check only ever scans the final partial batch.)
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn flush_contrib_batch(
     engine: &Engine,
@@ -156,6 +163,7 @@ pub(crate) fn flush_contrib_batch(
     vals: &mut [f32],
     targets: &[u32],
     z: &mut Mat,
+    strict: bool,
 ) {
     if fill == 0 {
         return;
@@ -169,11 +177,20 @@ pub(crate) fn flush_contrib_batch(
     } else {
         engine.kron4_batch(k, rows_a, rows_b, rows_c, vals)
     };
-    debug_assert!(
-        contribs[fill * kh..].iter().all(|&x| x == 0.0),
-        "stale-buffer hazard: padding slots {fill}.. produced nonzero \
-         contributions (val==0 padding contract violated)"
-    );
+    let padding_clean = || contribs[fill * kh..].iter().all(|&x| x == 0.0);
+    if strict {
+        assert!(
+            padding_clean(),
+            "stale-buffer hazard: padding slots {fill}.. produced nonzero \
+             contributions (val==0 padding contract violated)"
+        );
+    } else {
+        debug_assert!(
+            padding_clean(),
+            "stale-buffer hazard: padding slots {fill}.. produced nonzero \
+             contributions (val==0 padding contract violated)"
+        );
+    }
     for i in 0..fill {
         let target = targets[i] as usize;
         axpy(1.0, &contribs[i * kh..(i + 1) * kh], z.row_mut(target));

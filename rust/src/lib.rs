@@ -23,8 +23,10 @@
 //! - [`dist`]: the simulated P-rank cluster (makespan timing, α–β comms)
 //!   with a scoped-thread parallel rank executor.
 //! - [`hooi`]: TTM via Eq. 1 contributions — precompiled per-rank plans
-//!   on the hot path (`hooi::plan`) — Lanczos-bidiagonalization SVD,
-//!   factor-matrix transfer, the full HOOI driver.
+//!   on the hot path (`hooi::plan`), lane-blocked 8-wide SIMD
+//!   microkernels with runtime AVX2/NEON dispatch (`hooi::kernel`) —
+//!   Lanczos-bidiagonalization SVD, factor-matrix transfer, the full
+//!   HOOI driver.
 //! - [`runtime`]: PJRT artifact registry + padded-batch dispatch.
 //! - [`coordinator`]: job specs, the pipeline leader, experiment harness.
 

@@ -125,6 +125,14 @@ fn print_record(rec: &RunRecord) {
     t.row(vec!["SVD balance (max/avg)".into(), format!("{:.2}", rec.svd_balance)]);
     t.row(vec!["memory MB/rank (avg)".into(), format!("{:.1}", rec.mem_mb)]);
     t.row(vec!["fit".into(), format!("{:.4}", rec.fit)]);
+    t.row(vec![
+        "executor / kernel".into(),
+        format!("{} x{} / {}", rec.executor, rec.workers, rec.kernel),
+    ]);
+    t.row(vec![
+        "TTM executor speedup".into(),
+        format!("{:.2}x", rec.ttm_speedup),
+    ]);
     t.print();
 }
 

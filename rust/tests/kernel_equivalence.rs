@@ -1,0 +1,183 @@
+//! Kernel-layer equivalence properties: every tiled microkernel
+//! (portable, and AVX2/NEON where the host supports them) must match the
+//! scalar oracle within 1e-5 *relative* error on random 3-D/4-D plans —
+//! including rows shorter than one lane, ranks with no elements at all,
+//! and lane-padded runs, whose padding slots must never contribute to Z.
+
+use tucker_lite::hooi::{
+    assemble_local_z_fused, pad_to_lanes, Kernel, PlanWorkspace, TtmPlan, LANES,
+};
+use tucker_lite::linalg::{orthonormal_random, Mat};
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+
+fn random_factors(t: &SparseTensor, k: usize, rng: &mut Rng) -> Vec<Mat> {
+    t.dims
+        .iter()
+        .map(|&l| orthonormal_random(l as usize, k, rng))
+        .collect()
+}
+
+fn random_partition(nnz: usize, p: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut out = vec![Vec::new(); p];
+    for e in 0..nnz as u32 {
+        out[rng.usize_below(p)].push(e);
+    }
+    out
+}
+
+/// Per-element relative comparison: |a−b| ≤ tol·(1 + max(|a|, |b|)).
+fn assert_rel_close(a: &Mat, b: &Mat, tol: f32, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (&x, &y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{ctx}: entry {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// Every (mode, rank) plan: tiled assembly under `kernel` must match the
+/// scalar oracle (and the element-order oracle) on the same plan.
+fn check_kernel_case(
+    kernel: Kernel,
+    dims: Vec<u32>,
+    nnz: usize,
+    k: usize,
+    p: usize,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let t = SparseTensor::random(dims, nnz, &mut rng);
+    let factors = random_factors(&t, k, &mut rng);
+    let per_rank = random_partition(t.nnz(), p, &mut rng);
+    let mut ws_scalar = PlanWorkspace::with_kernel(Kernel::Scalar);
+    let mut ws_tiled = PlanWorkspace::with_kernel(kernel);
+    for mode in 0..t.ndim() {
+        for elems in &per_rank {
+            let plan = TtmPlan::build(&t, mode, elems, k);
+            let want = plan.assemble_fused(&factors, &mut ws_scalar);
+            let got = plan.assemble_fused(&factors, &mut ws_tiled);
+            assert_eq!(got.rows, want.rows, "mode {mode} rows");
+            assert_rel_close(
+                &got.z,
+                &want.z,
+                1e-5,
+                &format!("kernel {} mode {mode}", kernel.name()),
+            );
+            // and both agree with the element-order oracle (coarser
+            // tolerance: different summation order)
+            let oracle = assemble_local_z_fused(&t, mode, elems, &factors, k);
+            assert_eq!(got.rows, oracle.rows);
+            assert!(got.z.max_abs_diff(&oracle.z) < 1e-4, "mode {mode} vs oracle");
+            ws_scalar.recycle(want.z);
+            ws_tiled.recycle(got.z);
+        }
+    }
+}
+
+/// The tiled kernels the host can actually run (portable always; AVX2 /
+/// NEON only where detection succeeds).
+fn tiled_kernels() -> Vec<Kernel> {
+    [Kernel::Portable, Kernel::Avx2, Kernel::Neon]
+        .into_iter()
+        .filter(|k| k.available())
+        .collect()
+}
+
+#[test]
+fn tiled_kernels_match_scalar_on_random_3d_plans() {
+    for kernel in tiled_kernels() {
+        for (seed, (nnz, p, k)) in
+            [(900, 4, 5), (350, 7, 3), (1200, 2, 16)].into_iter().enumerate()
+        {
+            check_kernel_case(kernel, vec![20, 14, 9], nnz, k, p, seed as u64 + 1);
+        }
+    }
+}
+
+#[test]
+fn tiled_kernels_match_scalar_on_random_4d_plans() {
+    for kernel in tiled_kernels() {
+        for (seed, (nnz, p, k)) in [(700, 3, 3), (250, 5, 10)].into_iter().enumerate() {
+            check_kernel_case(kernel, vec![10, 8, 6, 5], nnz, k, p, seed as u64 + 10);
+        }
+    }
+}
+
+#[test]
+fn rows_shorter_than_one_lane() {
+    // nnz ≪ rows·cols: almost every run is a single element, so every
+    // run is pure padding beyond slot 0 — K both below and above LANES
+    for kernel in tiled_kernels() {
+        check_kernel_case(kernel, vec![40, 6, 5], 25, 3, 2, 77);
+        check_kernel_case(kernel, vec![40, 6, 5], 25, 16, 2, 78);
+        check_kernel_case(kernel, vec![12, 5, 4, 3], 15, 4, 2, 79);
+    }
+}
+
+#[test]
+fn empty_ranks_yield_empty_locals_under_every_kernel() {
+    let mut rng = Rng::new(5);
+    let t = SparseTensor::random(vec![9, 9, 9], 120, &mut rng);
+    let factors = random_factors(&t, 4, &mut rng);
+    for kernel in [Kernel::Scalar, Kernel::Portable, Kernel::Avx2, Kernel::Neon] {
+        let mut ws = PlanWorkspace::with_kernel(kernel);
+        let plan = TtmPlan::build(&t, 1, &[], 4);
+        let local = plan.assemble_fused(&factors, &mut ws);
+        assert!(local.rows.is_empty());
+        assert_eq!(local.z.rows, 0);
+        assert_eq!(local.z.cols, 16);
+    }
+}
+
+#[test]
+fn padded_lanes_never_contribute_to_z() {
+    let mut rng = Rng::new(42);
+    let t = SparseTensor::random(vec![25, 10, 6], 300, &mut rng);
+    let factors = random_factors(&t, 5, &mut rng);
+    let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+    for mode in 0..3 {
+        let plan = TtmPlan::build(&t, mode, &elems, 5);
+        // short slow dimensions force plenty of sub-lane runs
+        assert!(
+            plan.padded_slots() > plan.nnz(),
+            "mode {mode}: case must actually exercise lane padding"
+        );
+        // builder invariant: every padded slot is exactly val == 0.0 and
+        // repeats an in-bounds factor row
+        let nfast = factors[plan.others[0]].rows as u32;
+        for j in 0..plan.run_b.len() {
+            let (lo, hi) = (plan.slot_ptr[j] as usize, plan.slot_ptr[j + 1] as usize);
+            let len = plan.run_len[j] as usize;
+            assert_eq!(hi - lo, pad_to_lanes(len));
+            for s in lo + len..hi {
+                assert_eq!(plan.vals[s].to_bits(), 0.0f32.to_bits());
+                assert!(plan.fa[s] < nfast);
+            }
+        }
+        assert_eq!(plan.padded_slots() % LANES, 0);
+        // and the assembled Z equals the element-order oracle, which
+        // never saw the padding at all
+        for kernel in tiled_kernels() {
+            let mut ws = PlanWorkspace::with_kernel(kernel);
+            let got = plan.assemble_fused(&factors, &mut ws);
+            let oracle = assemble_local_z_fused(&t, mode, &elems, &factors, 5);
+            assert_eq!(got.rows, oracle.rows);
+            assert!(
+                got.z.max_abs_diff(&oracle.z) < 1e-4,
+                "mode {mode} kernel {}",
+                kernel.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn workspace_carries_its_pinned_kernel() {
+    // (detection/resolution rules themselves are covered by the kernel
+    // module's unit tests)
+    let ws = PlanWorkspace::with_kernel(Kernel::Scalar);
+    assert_eq!(ws.kernel(), Kernel::Scalar);
+    assert!(PlanWorkspace::new().kernel().available());
+}
