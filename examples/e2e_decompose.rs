@@ -8,17 +8,18 @@
 //!   L1/L2  AOT Pallas/JAX artifacts (HLO text)  →  compiled on PJRT CPU
 //!   L3     Lite + prior schemes distribute the tensor over the simulated
 //!          cluster; HOOI (TTM → Lanczos SVD → FM transfer) runs on the
-//!          compiled kernels; fit/metrics/volumes measured
+//!          compiled kernels; fit/metrics/volumes measured — all through
+//!          the `TuckerSession` front door
 //!
 //! Output: per-scheme HOOI time table on the flickr analogue (4-D) and the
 //! reddit analogue (3-D big), plus a convergence trace (fit per
 //! invocation) under Lite — the end-to-end evidence that all layers
 //! compose. Results are recorded in EXPERIMENTS.md §End-to-end.
 
-use tucker_lite::coordinator::{run_scheme, Workload};
-use tucker_lite::dist::NetModel;
+use std::sync::Arc;
+use tucker_lite::coordinator::{EngineChoice, SchemeChoice, TuckerSession, Workload};
 use tucker_lite::runtime::Engine;
-use tucker_lite::sched::{self, Lite};
+use tucker_lite::sched;
 use tucker_lite::tensor::datasets;
 use tucker_lite::util::args::Args;
 use tucker_lite::util::table::{fmt_secs, Table};
@@ -29,7 +30,10 @@ fn main() {
     let p: usize = args.parse_or("p", 16);
     let k: usize = args.parse_or("k", 10);
 
+    // one engine for every session below: artifacts load once, and the
+    // label tells the truth when the pjrt path fell back to native
     let (engine, label) = Engine::pjrt_or_native();
+    let engine = Arc::new(engine);
     println!("# engine: {label} (the e2e driver exercises the pjrt path)");
 
     // --- part 1: all four schemes through the compiled artifacts on a
@@ -39,7 +43,7 @@ fn main() {
     // every scheme must complete and converge to the same fit — the
     // decomposition is distribution-invariant.
     let spec = datasets::by_name("flickr").unwrap();
-    let w = Workload::from_spec(&spec, scale);
+    let w = Arc::new(Workload::from_spec(&spec, scale));
     println!(
         "\nflickr analogue: dims={:?} nnz={} P={p} K={k}",
         w.tensor.dims,
@@ -51,15 +55,24 @@ fn main() {
     );
     let mut fits1 = Vec::new();
     for scheme in sched::all_schemes() {
-        let rec = run_scheme(&w, scheme.as_ref(), p, k, 1, &engine, NetModel::default(), 4);
-        fits1.push(rec.fit);
+        let mut session = TuckerSession::builder(w.clone())
+            .scheme(SchemeChoice::custom(scheme))
+            .ranks(p)
+            .core(k)
+            .engine(EngineChoice::Shared(engine.clone()))
+            .seed(4)
+            .build()
+            .expect("valid e2e configuration");
+        let d = session.decompose();
+        let rec = &d.record;
+        fits1.push(d.fit());
         t1.row(vec![
             rec.scheme.clone(),
             fmt_secs(rec.hooi_secs),
             fmt_secs(rec.ttm_secs),
             fmt_secs(rec.svd_secs),
             fmt_secs(rec.comm_secs),
-            format!("{:.4}", rec.fit),
+            format!("{:.4}", d.fit()),
         ]);
     }
     t1.print();
@@ -69,29 +82,45 @@ fn main() {
     assert!(spread < 1e-3, "schemes must agree on the decomposition");
 
     // --- part 2: convergence trace under Lite on a 3-D big-tensor
-    // analogue (scaled), still through the compiled artifacts.
+    // analogue (scaled), still through the compiled artifacts. One
+    // session: the first invocation decomposes, the later ones refine
+    // over the cached TTM plans (prepare_modes runs exactly once).
     let spec = datasets::by_name("reddit").unwrap();
     let wb = Workload::from_spec(&spec, scale * 0.2);
+    // (single session: the workload moves in, no Arc needed)
     println!(
         "\nreddit analogue: dims={:?} nnz={}",
         wb.tensor.dims,
         wb.tensor.nnz()
     );
+    let mut session = TuckerSession::builder(wb)
+        .scheme(SchemeChoice::Lite)
+        .ranks(p)
+        .core(k)
+        .engine(EngineChoice::Shared(engine.clone()))
+        .seed(4)
+        .build()
+        .expect("valid e2e configuration");
+    // per-row times are *incremental*: row 1 is the bootstrap run
+    // (including the one-off plan-compilation charge), rows 2-3 are one
+    // cached-plan refinement sweep each — exactly the cost profile a
+    // long-running service pays
     let mut t2 = Table::new(
-        "e2e — fit per HOOI invocation (reddit, Lite)",
-        &["invocations", "fit", "HOOI time (simulated)"],
+        "e2e — fit per HOOI invocation (reddit, Lite, one session)",
+        &["invocations", "fit", "this increment (simulated)"],
     );
     let mut fits = Vec::new();
     for inv in 1..=3usize {
-        let rec = run_scheme(&wb, &Lite, p, k, inv, &engine, NetModel::default(), 4);
-        fits.push(rec.fit);
+        let d = if inv == 1 { session.decompose() } else { session.decompose_more(1) };
+        fits.push(d.fit());
         t2.row(vec![
-            inv.to_string(),
-            format!("{:.4}", rec.fit),
-            fmt_secs(rec.hooi_secs),
+            if inv == 1 { "1 (bootstrap + plans)".into() } else { format!("+1 → {inv}") },
+            format!("{:.4}", d.fit()),
+            fmt_secs(d.record.hooi_secs),
         ]);
     }
     t2.print();
+    assert_eq!(session.plan_builds(), 1, "refinement reuses the compiled plans");
 
     // e2e assertions: all layers composed, ALS did not diverge
     assert!(fits.iter().all(|f| f.is_finite()));

@@ -8,14 +8,13 @@
 //! community in a time window, with separable intensities), adds sparse
 //! background noise, decomposes with Tucker/HOOI under Lite, and checks
 //! recovery: the tensor has multilinear rank exactly (4,4,4) up to noise,
-//! so a K=6 core must capture nearly all the energy (fit ≈ 1), while a
-//! K=1 decomposition cannot — both are asserted.
+//! so a 6×6×5 per-mode core (`CoreRanks::PerMode` — the time mode is
+//! short, no need to spend a full K on it) must capture nearly all the
+//! energy (fit ≈ 1), while a K=1 decomposition cannot — both asserted.
 
-use tucker_lite::coordinator::{run_scheme, Workload};
-use tucker_lite::dist::NetModel;
-use tucker_lite::runtime::Engine;
-use tucker_lite::sched::Lite;
-use tucker_lite::tensor::slices::build_all;
+use std::sync::Arc;
+use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
+use tucker_lite::hooi::CoreRanks;
 use tucker_lite::tensor::SparseTensor;
 use tucker_lite::util::rng::Rng;
 
@@ -63,33 +62,43 @@ fn main() {
     }
     t.coalesce();
     println!("doc×term×time tensor: dims={:?} nnz={}", t.dims, t.nnz());
+    let w = Arc::new(Workload::from_tensor("nlp_topics", t));
 
-    let idx = build_all(&t);
-    let w = Workload { name: "nlp_topics".into(), tensor: t, idx };
-    let engine = Engine::Native; // timing-faithful path for the demo
-    println!("engine: {}", engine.name());
-
-    // K=6 > 4 topics: room to isolate them; 2 sweeps for ALS to settle
-    let rec6 = run_scheme(&w, &Lite, 16, 6, 2, &engine, NetModel::default(), 9);
+    // 6×6×5 core: room above the 4 planted topics on every mode, with a
+    // narrower time rank (the new per-mode capability) — the default
+    // Native engine is the timing-faithful path for the demo
+    let session = |core: CoreRanks| {
+        TuckerSession::builder(w.clone())
+            .scheme(SchemeChoice::Lite)
+            .ranks(16)
+            .core(core)
+            .invocations(2) // 2 sweeps for ALS to settle
+            .seed(9)
+            .build()
+            .expect("valid topic-recovery configuration")
+    };
+    let d6 = session(CoreRanks::PerMode(vec![6, 6, 5])).decompose();
     // K=1 control: a single component cannot span 4 disjoint topics
-    let rec1 = run_scheme(&w, &Lite, 16, 1, 2, &engine, NetModel::default(), 9);
+    let d1 = session(CoreRanks::Uniform(1)).decompose();
     println!(
-        "fit(K=6)={:.4}  fit(K=1)={:.4}  (HOOI {:.1}ms simulated, P=16)",
-        rec6.fit,
-        rec1.fit,
-        rec6.hooi_secs * 1e3
+        "fit(6x6x5)={:.4}  fit(K=1)={:.4}  (HOOI {:.1}ms simulated, P=16)",
+        d6.fit(),
+        d1.fit(),
+        d6.record.hooi_secs * 1e3
     );
+    assert_eq!(d6.core_dims(), &[6, 6, 5]);
+    assert_eq!(d6.factors[2].cols, 5, "time factor is L2 x 5");
 
     assert!(
-        rec6.fit > 0.85,
-        "rank-(4,4,4) structure must be captured at K=6, fit={}",
-        rec6.fit
+        d6.fit() > 0.85,
+        "rank-(4,4,4) structure must be captured at 6x6x5, fit={}",
+        d6.fit()
     );
     assert!(
-        rec6.fit > rec1.fit + 0.3,
-        "K=6 must far exceed the K=1 control: {} vs {}",
-        rec6.fit,
-        rec1.fit
+        d6.fit() > d1.fit() + 0.3,
+        "6x6x5 must far exceed the K=1 control: {} vs {}",
+        d6.fit(),
+        d1.fit()
     );
     println!("nlp_topics OK — planted topic structure recovered");
 }

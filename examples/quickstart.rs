@@ -1,17 +1,13 @@
-//! Quickstart: decompose a small sparse tensor with the Lite scheme.
+//! Quickstart: decompose a small sparse tensor through `TuckerSession`.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Builds a synthetic 3-D tensor, distributes it over 8 simulated ranks
-//! with Lite, runs two HOOI invocations through the PJRT engine (native
-//! fallback if artifacts are missing) and prints the decomposition
-//! summary — the 60-second tour of the public API.
+//! Builds a synthetic 3-D tensor, configures a session (Lite scheme, 8
+//! simulated ranks, 10×10×10 core, PJRT engine with native fallback),
+//! runs two HOOI invocations, then refines with one more sweep over the
+//! *cached* TTM plans — the 60-second tour of the public API.
 
-use tucker_lite::coordinator::{run_scheme, Workload};
-use tucker_lite::dist::NetModel;
-use tucker_lite::runtime::Engine;
-use tucker_lite::sched::Lite;
-use tucker_lite::tensor::slices::build_all;
+use tucker_lite::coordinator::{EngineChoice, SchemeChoice, TuckerSession, Workload};
 use tucker_lite::tensor::synth::{generate, ModeDist};
 use tucker_lite::util::table::{fmt_secs, fmt_si, Table};
 
@@ -30,27 +26,57 @@ fn main() {
         tensor.nnz(),
         tensor.sparsity()
     );
-    let idx = build_all(&tensor);
-    let w = Workload { name: "quickstart".into(), tensor, idx };
+    let w = Workload::from_tensor("quickstart", tensor);
 
-    // 2. engine: compiled HLO artifacts over PJRT when built
-    let (engine, label) = Engine::pjrt_or_native();
-    println!("engine: {label}");
+    // 2. a session: every choice is a typed option (scheme registry,
+    //    ranks, core, engine); unset options fall back to env, then
+    //    defaults. The build compiles the distribution and the per-rank
+    //    TTM plans once.
+    let mut session = TuckerSession::builder(w)
+        .scheme(SchemeChoice::Lite)
+        .ranks(8)
+        .core(10usize) // uniform 10×10×10; try CoreRanks::PerMode(vec![...])
+        .invocations(2)
+        .engine(EngineChoice::PjrtOrNative)
+        .seed(7)
+        .build()
+        .expect("valid session configuration");
 
-    // 3. decompose: Lite scheme, 8 simulated ranks, core 10×10×10,
-    //    two HOOI invocations
-    let rec = run_scheme(&w, &Lite, 8, 10, 2, &engine, NetModel::default(), 7);
-
+    // 3. decompose: two HOOI invocations
+    let d = session.decompose();
+    let rec = &d.record;
     let mut t = Table::new("quickstart result", &["quantity", "value"]);
-    t.row(vec!["fit".into(), format!("{:.4}", rec.fit)]);
+    t.row(vec!["fit".into(), format!("{:.4}", d.fit())]);
+    t.row(vec!["core dims".into(), format!("{:?}", d.core_dims())]);
     t.row(vec!["HOOI time (simulated)".into(), fmt_secs(rec.hooi_secs)]);
     t.row(vec!["TTM balance".into(), format!("{:.2}", rec.ttm_balance)]);
     t.row(vec!["SVD redundancy".into(), format!("{:.2}", rec.svd_load_norm)]);
     t.row(vec!["comm volume (units)".into(), fmt_si(rec.svd_volume + rec.fm_volume)]);
     t.print();
 
+    // 4. refine: one more sweep over the cached plans — no second
+    //    prepare_modes, the session state (factors, RNG) carries over
+    let refined = session.decompose_more(1);
+    println!(
+        "refined fit after one more sweep: {:.4} (plan builds: {})",
+        refined.fit(),
+        session.plan_builds()
+    );
+    assert_eq!(session.plan_builds(), 1, "TTM plans compiled exactly once");
+    assert!(refined.fit() >= d.fit() - 0.02, "ALS must not diverge");
+
     // Theorem 6.1 in action: near-perfect balance, near-1 redundancy.
     assert!(rec.ttm_balance < 1.01);
     assert!(rec.svd_load_norm < 1.2);
+
+    // 5. the decomposition is a handle, not just numbers: spot-check the
+    //    reconstruction against a stored element
+    let (coords, val) = {
+        let t = &session.workload().tensor;
+        let idx: Vec<usize> = (0..t.ndim()).map(|m| t.coord(m, 0) as usize).collect();
+        (idx, t.vals[0])
+    };
+    let approx = refined.reconstruct_at(&coords);
+    println!("reconstruct{coords:?} = {approx:.3} (stored {val:.3})");
     println!("quickstart OK");
 }

@@ -2,15 +2,15 @@
 //!
 //!     cargo run --release --example scheme_comparison [-- --dataset enron --p 32]
 //!
-//! Distributes the same workload under all four schemes and prints the
-//! §4 metrics, communication volumes, memory and the simulated HOOI time —
-//! a single-table view of why Lite wins: near-perfect TTM balance at
-//! near-optimal SVD redundancy, while CoarseG sacrifices balance and
-//! MediumG/HyperG sacrifice redundancy.
+//! Distributes the same workload under all four schemes (one
+//! `TuckerSession` per scheme) and prints the §4 metrics, communication
+//! volumes, memory and the simulated HOOI time — a single-table view of
+//! why Lite wins: near-perfect TTM balance at near-optimal SVD
+//! redundancy, while CoarseG sacrifices balance and MediumG/HyperG
+//! sacrifice redundancy.
 
-use tucker_lite::coordinator::{run_scheme, Workload};
-use tucker_lite::dist::NetModel;
-use tucker_lite::runtime::Engine;
+use std::sync::Arc;
+use tucker_lite::coordinator::{EngineChoice, SchemeChoice, TuckerSession, Workload};
 use tucker_lite::sched;
 use tucker_lite::tensor::datasets;
 use tucker_lite::util::args::Args;
@@ -27,7 +27,7 @@ fn main() {
         eprintln!("unknown dataset {name}; see `tucker-lite datasets`");
         std::process::exit(2);
     });
-    let w = Workload::from_spec(&spec, scale);
+    let w = Arc::new(Workload::from_spec(&spec, scale));
     println!(
         "{name}: dims={:?} nnz={} | P={p} K={k}",
         w.tensor.dims,
@@ -35,11 +35,10 @@ fn main() {
     );
     // native = timing-faithful at simulation scale (see DESIGN.md §Perf);
     // pass --engine pjrt to run on the compiled artifacts instead.
-    let engine = match args.get("engine") {
-        Some("pjrt") => Engine::pjrt_or_native().0,
-        _ => Engine::Native,
+    let engine_choice = || match args.get("engine") {
+        Some("pjrt") => EngineChoice::PjrtOrNative,
+        _ => EngineChoice::Native,
     };
-    println!("engine: {}", engine.name());
 
     let mut t = Table::new(
         "scheme comparison",
@@ -49,7 +48,16 @@ fn main() {
         ],
     );
     for scheme in sched::all_schemes() {
-        let rec = run_scheme(&w, scheme.as_ref(), p, k, 1, &engine, NetModel::default(), 1);
+        let mut session = TuckerSession::builder(w.clone())
+            .scheme(SchemeChoice::custom(scheme))
+            .ranks(p)
+            .core(k)
+            .engine(engine_choice())
+            .seed(1)
+            .build()
+            .expect("valid comparison configuration");
+        let d = session.decompose();
+        let rec = &d.record;
         t.row(vec![
             rec.scheme.clone(),
             fmt_secs(rec.hooi_secs),

@@ -20,6 +20,7 @@
 mod common;
 
 use std::time::Instant;
+use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
 use tucker_lite::dist::{cat, SimCluster};
 use tucker_lite::hooi::{assemble_local_z_fused, Kernel, PlanWorkspace, TtmPlan};
 use tucker_lite::linalg::{orthonormal_random, Mat};
@@ -53,7 +54,7 @@ fn assembly_case(
     let elems: Vec<u32> = (0..t.nnz() as u32).collect();
 
     let naive = time_it(reps, &mut || {
-        let z = assemble_local_z_fused(t, 0, &elems, &factors, k);
+        let z = assemble_local_z_fused(t, 0, &elems, &factors);
         std::hint::black_box(z.rows.len());
     });
 
@@ -95,7 +96,7 @@ fn assembly_case(
 }
 
 fn main() {
-    let quick = std::env::var("TUCKER_BENCH_QUICK").is_ok();
+    let quick = common::bench_quick();
     let reps = if quick { 2 } else { 5 };
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -204,4 +205,70 @@ fn main() {
     ]);
     t2.print();
     let _ = t2.save_csv("ablate_plan_executor");
+
+    // --- 3. session plan reuse: producing a fit-per-invocation trace
+    // (1..=sweeps invocations). Without a session each point is a fresh
+    // run (distribution + prepare_modes + all sweeps from scratch); one
+    // TuckerSession pays prepare_modes once and rides the cached plans
+    // through `decompose_more`, with bit-identical fits. ---
+    let sweeps = if quick { 2 } else { 4 };
+    let nnz = if quick { 30_000 } else { 200_000 };
+    let t = SparseTensor::random(vec![500, 300, 70], nnz, &mut rng);
+    let w = std::sync::Arc::new(Workload::from_tensor("ablate_session", t));
+    let build_session = |w: std::sync::Arc<Workload>, invocations: usize| {
+        TuckerSession::builder(w)
+            .scheme(SchemeChoice::Lite)
+            .ranks(p)
+            .core(k)
+            .invocations(invocations)
+            .seed(5)
+            .build()
+            .expect("valid ablation session")
+    };
+
+    // fresh: one full run per trace point — the pre-session pattern
+    let t0 = Instant::now();
+    let mut fresh_fit = 0.0;
+    for inv in 1..=sweeps {
+        fresh_fit = build_session(w.clone(), inv).decompose().fit();
+    }
+    let fresh_wall = t0.elapsed().as_secs_f64();
+
+    // reused: one session, one plan compilation, incremental refinement
+    let t0 = Instant::now();
+    let mut session = build_session(w.clone(), 1);
+    let mut d = session.decompose();
+    for _ in 1..sweeps {
+        d = session.decompose_more(1);
+    }
+    let reused_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(session.plan_builds(), 1, "one compilation for all sweeps");
+    assert!(
+        (d.fit() - fresh_fit).abs() < 1e-6,
+        "cached-plan refinement must match the fresh run: {} vs {}",
+        d.fit(),
+        fresh_fit
+    );
+
+    let mut t3 = Table::new(
+        &format!(
+            "ablate_plan — session plan reuse, fit trace over 1..={sweeps} \
+             invocations (nnz={nnz}, P={p}, K={k})"
+        ),
+        &["strategy", "wall total", "prepare_modes runs", "speedup"],
+    );
+    t3.row(vec![
+        "fresh run per trace point".into(),
+        fmt_secs(fresh_wall),
+        sweeps.to_string(),
+        "1.00x".into(),
+    ]);
+    t3.row(vec![
+        "one session + decompose_more".into(),
+        fmt_secs(reused_wall),
+        "1".into(),
+        format!("{:.2}x", fresh_wall / reused_wall),
+    ]);
+    t3.print();
+    let _ = t3.save_csv("ablate_plan_session");
 }

@@ -20,7 +20,7 @@ use tucker_lite::util::rng::Rng;
 use tucker_lite::util::table::{fmt_secs, Table};
 
 fn main() {
-    let quick = std::env::var("TUCKER_BENCH_QUICK").is_ok();
+    let quick = common::bench_quick();
     let nnz = if quick { 20_000 } else { 400_000 };
     let reps = if quick { 2 } else { 5 };
     let k = 10;
@@ -62,7 +62,7 @@ fn main() {
         std::hint::black_box(z.rows.len());
     });
     run("native (fused)", &mut || {
-        let z = assemble_local_z_fused(&t, 0, &elems, &factors, k);
+        let z = assemble_local_z_fused(&t, 0, &elems, &factors);
         std::hint::black_box(z.rows.len());
     });
     table.print();

@@ -19,7 +19,7 @@ use tucker_lite::util::rng::Rng;
 use tucker_lite::util::table::{fmt_secs, Table};
 
 fn main() {
-    let quick = std::env::var("TUCKER_BENCH_QUICK").is_ok();
+    let quick = common::bench_quick();
     let scale = if quick { 0.02 } else { 0.2 };
     let p = if quick { 4 } else { 64 };
 

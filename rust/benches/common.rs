@@ -11,24 +11,24 @@
 
 use tucker_lite::coordinator::ExpConfig;
 use tucker_lite::runtime::Engine;
+use tucker_lite::util::env;
+
+/// Is the tiny smoke configuration requested? (presence-only flag)
+pub fn bench_quick() -> bool {
+    env::is_set(env::BENCH_QUICK)
+}
 
 pub fn bench_config() -> ExpConfig {
-    let mut cfg = if std::env::var("TUCKER_BENCH_QUICK").is_ok() {
-        ExpConfig::quick()
-    } else {
-        ExpConfig::default()
-    };
-    if let Ok(s) = std::env::var("TUCKER_BENCH_SCALE") {
-        if let Ok(v) = s.parse() {
-            cfg.scale = v;
-        }
-    }
+    let mut cfg = if bench_quick() { ExpConfig::quick() } else { ExpConfig::default() };
+    let default_scale = cfg.scale;
+    cfg.scale =
+        env::resolve(None, env::BENCH_SCALE, |s| s.parse().ok(), || default_scale);
     cfg
 }
 
 pub fn bench_engine() -> Engine {
-    match std::env::var("TUCKER_BENCH_ENGINE").as_deref() {
-        Ok("pjrt") => {
+    match env::raw(env::BENCH_ENGINE).as_deref() {
+        Some("pjrt") => {
             let (e, label) = Engine::pjrt_or_native();
             eprintln!("# engine: {label} (TUCKER_BENCH_ENGINE)");
             e

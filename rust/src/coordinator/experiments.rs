@@ -11,7 +11,7 @@
 
 use super::leader::{run_scheme, Workload};
 use crate::dist::NetModel;
-use crate::hooi::{self, khat};
+use crate::hooi::{self, CoreRanks};
 use crate::runtime::Engine;
 use crate::sched::{self, Scheme, SchemeMetrics};
 use crate::tensor::datasets;
@@ -154,35 +154,36 @@ pub struct DistRecord {
     pub dist_secs: f64,
 }
 
-/// Distribute and compute metric/volume/memory records without timing HOOI.
+/// Distribute and compute metric/volume/memory records without timing
+/// HOOI. `core` may be uniform (the paper's figures) or per-mode — the
+/// oracle volume uses each mode's own Q_n = 4·K_n.
 pub fn distribution_records(
     w: &Workload,
     schemes: &[Box<dyn Scheme>],
     p: usize,
-    k: usize,
+    core: &CoreRanks,
     seed: u64,
 ) -> Vec<DistRecord> {
-    let ndim = w.tensor.ndim();
-    let kh = khat(k, ndim);
+    let ks = core.resolve(w.tensor.ndim());
     schemes
         .iter()
         .map(|scheme| {
             let mut rng = Rng::new(seed);
             let dist = scheme.distribute(&w.tensor, &w.idx, p, &mut rng);
             let metrics = SchemeMetrics::compute(&w.tensor, &w.idx, &dist);
-            // oracle volume: Q_n (R_sum − L_nonempty) per mode, Q_n = 4K
-            let q_n = 4 * k;
+            // oracle volume: Q_n (R_sum − L_nonempty) per mode, Q_n = 4K_n
             let svd_volume: f64 = metrics
                 .per_mode
                 .iter()
-                .map(|m| (q_n * m.oracle_volume_per_query()) as f64)
+                .zip(&ks)
+                .map(|(m, &k_n)| (4 * k_n * m.oracle_volume_per_query()) as f64)
                 .sum();
             // FM volume from the transfer patterns (plan compilation
             // skipped: these records never assemble a Z)
-            let modes = hooi::prepare_modes_unplanned(&w.tensor, &w.idx, &dist, k);
+            let modes = hooi::prepare_modes_unplanned(&w.tensor, &w.idx, &dist, core);
             let fm_volume: f64 =
                 modes.iter().map(|st| st.fm.total_units as f64).sum();
-            let mem = hooi::driver::memory_model(&w.tensor, &dist, &modes, k, kh);
+            let mem = hooi::memory_model(&w.tensor, &dist, &modes);
             DistRecord {
                 workload: w.name.clone(),
                 scheme: dist.scheme.clone(),
@@ -210,7 +211,13 @@ pub fn fig12(cfg: &ExpConfig) -> Table {
             .map(|_| (cfg.k as f64).powi(w.tensor.ndim() as i32 - 1))
             .collect();
         for rec in
-            distribution_records(w, &sched::all_schemes(), cfg.p_hi, cfg.k, cfg.seed)
+            distribution_records(
+                w,
+                &sched::all_schemes(),
+                cfg.p_hi,
+                &CoreRanks::Uniform(cfg.k),
+                cfg.seed,
+            )
         {
             t.row(vec![
                 w.name.clone(),
@@ -233,7 +240,13 @@ pub fn fig13(cfg: &ExpConfig) -> Table {
     );
     for w in &workloads {
         for rec in
-            distribution_records(w, &sched::all_schemes(), cfg.p_hi, cfg.k, cfg.seed)
+            distribution_records(
+                w,
+                &sched::all_schemes(),
+                cfg.p_hi,
+                &CoreRanks::Uniform(cfg.k),
+                cfg.seed,
+            )
         {
             t.row(vec![
                 w.name.clone(),
@@ -375,7 +388,9 @@ pub fn fig17(cfg: &ExpConfig) -> Table {
         let big = datasets::by_name(&w.name).map(|d| d.big).unwrap_or(false);
         let schemes =
             if big { sched::lightweight_schemes() } else { sched::all_schemes() };
-        for rec in distribution_records(w, &schemes, cfg.p_hi, cfg.k, cfg.seed) {
+        for rec in
+            distribution_records(w, &schemes, cfg.p_hi, &CoreRanks::Uniform(cfg.k), cfg.seed)
+        {
             let (tm, zm, fm) = rec.mem_breakdown;
             let detail = wi < 3;
             t.row(vec![

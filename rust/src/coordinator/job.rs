@@ -3,12 +3,13 @@
 //! paper's "experimental setup" made explicit and reproducible.
 
 use crate::dist::NetModel;
+use crate::hooi::CoreRanks;
 use crate::util::args::Args;
 use crate::util::config::Config;
 
 #[derive(Debug, Clone)]
 pub struct JobSpec {
-    /// Dataset name (tensor::datasets) or a path to a FROSTT .tns file.
+    /// Dataset name (tensor::datasets) or a path to a FROSTT tensor file.
     pub dataset: String,
     /// Dataset scale multiplier (synthetic analogues only).
     pub scale: f64,
@@ -16,8 +17,12 @@ pub struct JobSpec {
     pub scheme: String,
     /// Simulated MPI world size.
     pub p: usize,
-    /// Core length K (uniform, as in the paper).
+    /// Core length K (uniform, as in the paper). Overridden by `core`
+    /// when per-mode ranks are given.
     pub k: usize,
+    /// Per-mode core ranks (`--core K0,K1,K2` / `core = K0,K1,K2`);
+    /// `None` means uniform `k`.
+    pub core: Option<Vec<usize>>,
     /// HOOI invocations.
     pub invocations: usize,
     /// Engine: "pjrt" or "native".
@@ -34,6 +39,7 @@ impl Default for JobSpec {
             scheme: "lite".into(),
             p: 64,
             k: 10,
+            core: None,
             invocations: 1,
             // Default to the native engine for *timing* runs: on the CPU
             // PJRT client a dispatch costs ~ms, which swamps the
@@ -50,8 +56,10 @@ impl Default for JobSpec {
 }
 
 impl JobSpec {
-    /// Layer config file under CLI args (args win).
-    pub fn from_sources(config: Option<&Config>, args: &Args) -> JobSpec {
+    /// Layer config file under CLI args (args win). Errs on a malformed
+    /// `core` list (an invalid override must never silently change
+    /// results — callers decide whether that exits the process).
+    pub fn from_sources(config: Option<&Config>, args: &Args) -> Result<JobSpec, String> {
         let mut j = JobSpec::default();
         if let Some(c) = config {
             j.dataset = c.get("dataset").unwrap_or(&j.dataset).to_string();
@@ -60,6 +68,14 @@ impl JobSpec {
             j.scale = c.parse_or("scale", j.scale);
             j.p = c.parse_or("p", j.p);
             j.k = c.parse_or("k", j.k);
+            if let Some(core) = c.get("core") {
+                j.core = Some(parse_core_list(core).ok_or_else(|| {
+                    format!(
+                        "config `core = {core}` is not a comma-separated rank \
+                         list, e.g. core = 10,10,4"
+                    )
+                })?);
+            }
             j.invocations = c.parse_or("invocations", j.invocations);
             j.seed = c.parse_or("seed", j.seed);
             j.net.alpha = c.parse_or("net.alpha", j.net.alpha);
@@ -71,12 +87,41 @@ impl JobSpec {
         j.scale = args.parse_or("scale", j.scale);
         j.p = args.parse_or("p", j.p);
         j.k = args.parse_or("k", j.k);
+        if let Some(core) = args.get("core") {
+            j.core = Some(parse_core_list(core).ok_or_else(|| {
+                format!(
+                    "--core expects a comma-separated rank list, e.g. 10,10,4, \
+                     got {core:?}"
+                )
+            })?);
+        }
         j.invocations = args.parse_or("invocations", j.invocations);
         j.seed = args.parse_or("seed", j.seed);
         j.net.alpha = args.parse_or("alpha", j.net.alpha);
         j.net.beta = args.parse_or("beta", j.net.beta);
-        j
+        Ok(j)
     }
+
+    /// The typed core choice this job asks for: per-mode ranks when
+    /// `--core`/`core =` was given, otherwise uniform `k`.
+    pub fn core_ranks(&self) -> CoreRanks {
+        match &self.core {
+            Some(v) => CoreRanks::PerMode(v.clone()),
+            None => CoreRanks::Uniform(self.k),
+        }
+    }
+}
+
+/// Parse `"10,10,4"`. Strict: every comma-separated segment must be a
+/// number — empty segments (`"10,,4"`) and stray commas are rejected,
+/// not skipped. (A single value is a 1-element list and therefore a
+/// length-mismatch error later — use `k` for uniform cores.)
+fn parse_core_list(s: &str) -> Option<Vec<usize>> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    if parts.is_empty() || parts.iter().any(|p| p.is_empty()) {
+        return None;
+    }
+    parts.iter().map(|p| p.parse().ok()).collect()
 }
 
 #[cfg(test)]
@@ -89,7 +134,7 @@ mod tests {
         let argv: Vec<String> =
             ["--p", "128"].iter().map(|s| s.to_string()).collect();
         let args = Args::parse(&argv);
-        let j = JobSpec::from_sources(Some(&cfg), &args);
+        let j = JobSpec::from_sources(Some(&cfg), &args).unwrap();
         assert_eq!(j.p, 128); // CLI wins
         assert_eq!(j.scheme, "coarseg"); // config survives
         assert_eq!(j.k, 20);
@@ -98,7 +143,7 @@ mod tests {
     #[test]
     fn defaults_without_sources() {
         let args = Args::parse(&[]);
-        let j = JobSpec::from_sources(None, &args);
+        let j = JobSpec::from_sources(None, &args).unwrap();
         assert_eq!(j.k, 10);
         assert_eq!(j.scheme, "lite");
     }
@@ -106,8 +151,36 @@ mod tests {
     #[test]
     fn net_model_knobs() {
         let cfg = Config::parse("net.alpha = 5e-6\nnet.beta = 2e-9").unwrap();
-        let j = JobSpec::from_sources(Some(&cfg), &Args::parse(&[]));
+        let j = JobSpec::from_sources(Some(&cfg), &Args::parse(&[])).unwrap();
         assert!((j.net.alpha - 5e-6).abs() < 1e-18);
         assert!((j.net.beta - 2e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn per_mode_core_parses_from_cli_and_config() {
+        let argv: Vec<String> =
+            ["--core", "10,10,4"].iter().map(|s| s.to_string()).collect();
+        let j = JobSpec::from_sources(None, &Args::parse(&argv)).unwrap();
+        assert_eq!(j.core, Some(vec![10, 10, 4]));
+        assert_eq!(j.core_ranks(), CoreRanks::PerMode(vec![10, 10, 4]));
+
+        let cfg = Config::parse("core = 3, 4, 5").unwrap();
+        let j = JobSpec::from_sources(Some(&cfg), &Args::parse(&[])).unwrap();
+        assert_eq!(j.core, Some(vec![3, 4, 5]));
+
+        // no core option: uniform k
+        let j = JobSpec::from_sources(None, &Args::parse(&[])).unwrap();
+        assert_eq!(j.core_ranks(), CoreRanks::Uniform(10));
+
+        assert_eq!(parse_core_list("bad,list"), None);
+        assert_eq!(parse_core_list("10,,4"), None, "typos are rejected, not skipped");
+        assert_eq!(parse_core_list(""), None);
+
+        // invalid values surface as errors, not process exits
+        let cfg = Config::parse("core = garbage").unwrap();
+        assert!(JobSpec::from_sources(Some(&cfg), &Args::parse(&[])).is_err());
+        let argv: Vec<String> =
+            ["--core", "10,,4"].iter().map(|s| s.to_string()).collect();
+        assert!(JobSpec::from_sources(None, &Args::parse(&argv)).is_err());
     }
 }

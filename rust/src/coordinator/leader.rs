@@ -1,15 +1,23 @@
 //! The pipeline leader: dataset → distribution scheme → simulated cluster
-//! → HOOI → consolidated run record. Every experiment (benches, CLI,
-//! examples) goes through `run_scheme` so measurements are comparable.
+//! → HOOI → consolidated run record.
+//!
+//! The typed front door is [`super::session::TuckerSession`]; the
+//! free functions here ([`run_scheme`], [`run_distribution`]) are kept as
+//! thin shims over the same machinery so the paper-figure harness and
+//! pre-session callers stay reproducible. Prefer the session for new
+//! code — it validates its inputs, replaces the `TUCKER_*` env knobs
+//! with typed options, and retains the compiled TTM plans across
+//! repeated decompositions.
 //!
 //! The cluster's parallel rank executor is on by default (per-rank TTM
 //! plans assemble concurrently; see `dist::cluster`); set
-//! `TUCKER_PHASE_EXECUTOR=serial` for the reference serial executor when
-//! a figure run needs minimal timing noise on a loaded host.
+//! `TUCKER_PHASE_EXECUTOR=serial` (or `.executor(ExecutorChoice::Serial)`
+//! on the session builder) for the reference serial executor when a
+//! figure run needs minimal timing noise on a loaded host.
 
 use super::job::JobSpec;
 use crate::dist::{cat, NetModel, SimCluster};
-use crate::hooi::{run_hooi, HooiConfig, HooiOutcome};
+use crate::hooi::{run_hooi, CoreRanks, HooiConfig, HooiOutcome};
 use crate::runtime::Engine;
 use crate::sched::{Distribution, Scheme, SchemeMetrics};
 use crate::tensor::datasets::DatasetSpec;
@@ -18,10 +26,44 @@ use crate::tensor::{io, SliceIndex, SparseTensor};
 use crate::util::rng::Rng;
 
 /// A loaded workload: tensor + its per-mode slice indices.
+#[derive(Debug, Clone)]
 pub struct Workload {
     pub name: String,
     pub tensor: SparseTensor,
     pub idx: Vec<SliceIndex>,
+}
+
+/// Why a [`JobSpec`] dataset could not be turned into a [`Workload`].
+#[derive(Debug)]
+pub enum WorkloadError {
+    /// Not a known synthetic analogue and not an existing file.
+    UnknownDataset { name: String },
+    /// The dataset named an existing path that failed to load/parse.
+    Io { path: std::path::PathBuf, source: std::io::Error },
+}
+
+impl std::fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkloadError::UnknownDataset { name } => write!(
+                f,
+                "unknown dataset {name:?} (expected one of the Fig 9 names or a \
+                 path to a FROSTT tensor file)"
+            ),
+            WorkloadError::Io { path, source } => {
+                write!(f, "{}: {source}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for WorkloadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WorkloadError::UnknownDataset { .. } => None,
+            WorkloadError::Io { source, .. } => Some(source),
+        }
+    }
 }
 
 impl Workload {
@@ -42,28 +84,43 @@ impl Workload {
         })
     }
 
-    /// Resolve a JobSpec dataset: a known synthetic name or a .tns path.
-    pub fn resolve(job: &JobSpec) -> Result<Workload, String> {
+    /// Build a workload from an in-memory tensor (slice indices built
+    /// here) — the entry point for programmatic/streaming callers.
+    pub fn from_tensor(name: impl Into<String>, tensor: SparseTensor) -> Workload {
+        let idx = build_all(&tensor);
+        Workload { name: name.into(), tensor, idx }
+    }
+
+    /// Resolve a JobSpec dataset: a known synthetic name, or any path to
+    /// an existing FROSTT-format tensor file (the extension does not
+    /// matter; a `.tns` suffix is also accepted for not-yet-existing
+    /// paths so the error names the file instead of "unknown dataset").
+    pub fn resolve(job: &JobSpec) -> Result<Workload, WorkloadError> {
         if let Some(spec) = crate::tensor::datasets::by_name(&job.dataset) {
-            Ok(Workload::from_spec(&spec, job.scale))
-        } else if job.dataset.ends_with(".tns") {
-            Workload::from_tns(std::path::Path::new(&job.dataset))
-                .map_err(|e| format!("{}: {e}", job.dataset))
+            return Ok(Workload::from_spec(&spec, job.scale));
+        }
+        let path = std::path::Path::new(&job.dataset);
+        if path.is_file() || job.dataset.ends_with(".tns") {
+            Workload::from_tns(path).map_err(|source| WorkloadError::Io {
+                path: path.to_path_buf(),
+                source,
+            })
         } else {
-            Err(format!(
-                "unknown dataset {:?} (expected one of the Fig 9 names or a .tns path)",
-                job.dataset
-            ))
+            Err(WorkloadError::UnknownDataset { name: job.dataset.clone() })
         }
     }
 }
 
-/// Consolidated measurements of one (workload, scheme, P, K) run.
+/// Consolidated measurements of one (workload, scheme, P, core) run.
 pub struct RunRecord {
     pub workload: String,
     pub scheme: String,
     pub p: usize,
+    /// Largest core rank max_n K_n (equals K for uniform cores — the
+    /// paper's configuration and what the figure tables print).
     pub k: usize,
+    /// Per-mode core ranks `[K_0, …, K_{N−1}]`.
+    pub core: Vec<usize>,
     /// Simulated HOOI execution time (single/multiple invocations as run).
     pub hooi_secs: f64,
     /// Breakup (Fig 11): TTM compute, SVD compute, total communication.
@@ -94,7 +151,56 @@ pub struct RunRecord {
     pub ttm_speedup: f64,
 }
 
+/// Assemble a [`RunRecord`] from a finished HOOI run — shared by the
+/// legacy shims and the session layer so every path reports identically.
+pub(crate) fn collect_record(
+    w: &Workload,
+    dist: &Distribution,
+    ks: &[usize],
+    cluster: &SimCluster,
+    out: &HooiOutcome,
+) -> RunRecord {
+    let metrics = SchemeMetrics::compute(&w.tensor, &w.idx, dist);
+    let khv: Vec<f64> = (0..w.tensor.ndim())
+        .map(|n| crate::hooi::khat_of(ks, n) as f64)
+        .collect();
+    let comm_secs = cluster.elapsed.get(cat::COMM_SVD)
+        + cluster.elapsed.get(cat::COMM_FM)
+        + cluster.elapsed.get(cat::COMM_COMMON);
+    let conc = cluster.concurrency_report(cat::TTM);
+    RunRecord {
+        workload: w.name.clone(),
+        scheme: dist.scheme.clone(),
+        p: dist.p,
+        k: ks.iter().copied().max().unwrap_or(0),
+        core: ks.to_vec(),
+        hooi_secs: cluster.elapsed.get(cat::TTM)
+            + cluster.elapsed.get(cat::SVD)
+            + comm_secs,
+        ttm_secs: cluster.elapsed.get(cat::TTM),
+        svd_secs: cluster.elapsed.get(cat::SVD),
+        comm_secs,
+        dist_secs: dist.time.simulated_secs,
+        svd_volume: cluster.volume.get(cat::COMM_SVD),
+        fm_volume: cluster.volume.get(cat::COMM_FM),
+        ttm_balance: metrics.ttm_balance(),
+        svd_load_norm: metrics.svd_load_normalized(&khv),
+        svd_balance: metrics.svd_balance(&khv),
+        mem_mb: out.memory.avg_total_mb(),
+        mem_breakdown_mb: out.memory.avg_component_mb(),
+        fit: out.fit,
+        executor: conc.executor.to_string(),
+        workers: conc.workers,
+        kernel: conc.kernel.to_string(),
+        ttm_speedup: conc.speedup,
+    }
+}
+
 /// Distribute + run HOOI, collecting every figure's quantities at once.
+///
+/// Legacy shim (uniform core length, positional arguments, env-driven
+/// kernel/executor/accounting): prefer
+/// [`TuckerSession`](super::session::TuckerSession) for new code.
 pub fn run_scheme(
     w: &Workload,
     scheme: &dyn Scheme,
@@ -110,7 +216,8 @@ pub fn run_scheme(
     run_distribution(w, &dist, k, invocations, engine, net, seed)
 }
 
-/// Run HOOI under an already-constructed distribution.
+/// Run HOOI under an already-constructed distribution. Legacy shim —
+/// see [`run_scheme`].
 pub fn run_distribution(
     w: &Workload,
     dist: &Distribution,
@@ -122,42 +229,12 @@ pub fn run_distribution(
 ) -> RunRecord {
     let mut cluster = SimCluster::new(dist.p).with_net(net);
     cluster.elapsed.add(cat::DIST, dist.time.simulated_secs);
-    let cfg = HooiConfig { k, invocations, seed };
+    let core = CoreRanks::Uniform(k);
+    let cfg = HooiConfig { core: core.clone(), invocations, seed, ..HooiConfig::default() };
     let out: HooiOutcome =
         run_hooi(&w.tensor, &w.idx, dist, engine, &mut cluster, &cfg);
-    let metrics = SchemeMetrics::compute(&w.tensor, &w.idx, dist);
-    let khat: Vec<f64> = (0..w.tensor.ndim())
-        .map(|_| (k as f64).powi(w.tensor.ndim() as i32 - 1))
-        .collect();
-    let comm_secs = cluster.elapsed.get(cat::COMM_SVD)
-        + cluster.elapsed.get(cat::COMM_FM)
-        + cluster.elapsed.get(cat::COMM_COMMON);
-    let conc = cluster.concurrency_report(cat::TTM);
-    RunRecord {
-        workload: w.name.clone(),
-        scheme: dist.scheme.clone(),
-        p: dist.p,
-        k,
-        hooi_secs: cluster.elapsed.get(cat::TTM)
-            + cluster.elapsed.get(cat::SVD)
-            + comm_secs,
-        ttm_secs: cluster.elapsed.get(cat::TTM),
-        svd_secs: cluster.elapsed.get(cat::SVD),
-        comm_secs,
-        dist_secs: dist.time.simulated_secs,
-        svd_volume: cluster.volume.get(cat::COMM_SVD),
-        fm_volume: cluster.volume.get(cat::COMM_FM),
-        ttm_balance: metrics.ttm_balance(),
-        svd_load_norm: metrics.svd_load_normalized(&khat),
-        svd_balance: metrics.svd_balance(&khat),
-        mem_mb: out.memory.avg_total_mb(),
-        mem_breakdown_mb: out.memory.avg_component_mb(),
-        fit: out.fit,
-        executor: conc.executor.to_string(),
-        workers: conc.workers,
-        kernel: conc.kernel.to_string(),
-        ttm_speedup: conc.speedup,
-    }
+    let ks = core.resolve(w.tensor.ndim());
+    collect_record(w, dist, &ks, &cluster, &out)
 }
 
 #[cfg(test)]
@@ -190,6 +267,8 @@ mod tests {
         assert!(rec.svd_load_norm >= 1.0);
         assert!(rec.mem_mb > 0.0);
         assert_eq!(rec.scheme, "Lite");
+        assert_eq!(rec.core, vec![4, 4, 4]);
+        assert_eq!(rec.k, 4);
         // concurrency provenance: Native prefers the fused path, so the
         // recorded kernel is a real microkernel name
         assert!(rec.executor == "parallel" || rec.executor == "serial");
@@ -201,7 +280,16 @@ mod tests {
     #[test]
     fn coarseg_optimal_redundancy_lite_near() {
         let w = tiny_workload();
-        let rc = run_scheme(&w, &CoarseG::default(), 4, 4, 1, &Engine::Native, NetModel::default(), 1);
+        let rc = run_scheme(
+            &w,
+            &CoarseG::default(),
+            4,
+            4,
+            1,
+            &Engine::Native,
+            NetModel::default(),
+            1,
+        );
         let rl = run_scheme(&w, &Lite, 4, 4, 1, &Engine::Native, NetModel::default(), 1);
         assert!((rc.svd_load_norm - 1.0).abs() < 1e-9, "CoarseG redundancy 1.0");
         assert!(rl.svd_load_norm < 1.5, "Lite near-optimal: {}", rl.svd_load_norm);
@@ -210,7 +298,44 @@ mod tests {
     #[test]
     fn resolve_rejects_unknown() {
         let job = JobSpec { dataset: "not-a-tensor".into(), ..Default::default() };
-        assert!(Workload::resolve(&job).is_err());
+        match Workload::resolve(&job) {
+            Err(WorkloadError::UnknownDataset { name }) => {
+                assert_eq!(name, "not-a-tensor")
+            }
+            other => panic!("expected UnknownDataset, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_missing_tns_path_reports_io_error() {
+        let job = JobSpec {
+            dataset: "/nonexistent/dir/tensor.tns".into(),
+            ..Default::default()
+        };
+        match Workload::resolve(&job) {
+            Err(WorkloadError::Io { path, .. }) => {
+                assert_eq!(path, std::path::Path::new("/nonexistent/dir/tensor.tns"))
+            }
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_accepts_any_existing_file_path() {
+        // a FROSTT file without the .tns suffix must load fine
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let t = SparseTensor::random(vec![8, 7, 6], 60, &mut rng);
+        let dir = std::env::temp_dir().join("tucker_lite_resolve");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tensor.frostt.txt");
+        io::write_tns(&t, &path).unwrap();
+        let job = JobSpec {
+            dataset: path.to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        let w = Workload::resolve(&job).expect("existing non-.tns path resolves");
+        assert_eq!(w.tensor.nnz(), 60);
     }
 
     #[test]

@@ -1,11 +1,17 @@
-//! L3 coordinator: job specs (config + CLI), the pipeline leader
-//! (dataset → scheme → simulated cluster → HOOI → record) and the
-//! experiment harness regenerating every table/figure of §7.
+//! L3 coordinator: the [`TuckerSession`] typed front door, job specs
+//! (config + CLI), the pipeline leader (dataset → scheme → simulated
+//! cluster → HOOI → record) and the experiment harness regenerating
+//! every table/figure of §7.
 
 pub mod experiments;
 pub mod job;
 pub mod leader;
+pub mod session;
 
 pub use experiments::{run_figure, ExpConfig};
 pub use job::JobSpec;
-pub use leader::{run_distribution, run_scheme, RunRecord, Workload};
+pub use leader::{run_distribution, run_scheme, RunRecord, Workload, WorkloadError};
+pub use session::{
+    Decomposition, EngineChoice, ExecutorChoice, KernelChoice, SchemeChoice,
+    SessionError, TuckerSession, TuckerSessionBuilder,
+};

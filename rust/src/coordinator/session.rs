@@ -1,0 +1,633 @@
+//! `TuckerSession` — the typed front door to the whole stack.
+//!
+//! The paper's pitch is that the Lite scheme makes distribution cheap
+//! enough to choose *at run time*; the session API makes that choice a
+//! one-liner instead of an eight-positional-argument call threaded
+//! through five `TUCKER_*` env vars:
+//!
+//! ```no_run
+//! use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
+//! use tucker_lite::hooi::CoreRanks;
+//!
+//! # let workload: Workload = unimplemented!();
+//! let mut session = TuckerSession::builder(workload)
+//!     .scheme(SchemeChoice::Lite)
+//!     .ranks(16)
+//!     .core(CoreRanks::PerMode(vec![12, 12, 4]))
+//!     .invocations(2)
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! let d = session.decompose();
+//! println!("fit {:.4}, core {:?}", d.fit(), d.core_dims());
+//! let refined = session.decompose_more(1); // plans reused, no re-prepare
+//! assert!(session.plan_builds() == 1);
+//! # let _ = refined;
+//! ```
+//!
+//! Every typed option replaces — but still env-falls-back to — the old
+//! knobs (precedence: typed option > env var > default, see
+//! `util::env`):
+//!
+//! | builder option        | env fallback             |
+//! |-----------------------|--------------------------|
+//! | `.kernel(..)`         | `TUCKER_KERNEL`          |
+//! | `.executor(..)`       | `TUCKER_PHASE_EXECUTOR`  |
+//! | `.memory_accounting(..)` | `TUCKER_MEM_ACCOUNTING` |
+//!
+//! The session owns the compiled distribution and the per-rank TTM
+//! plans; [`TuckerSession::decompose_more`] continues the decomposition
+//! (factors, RNG stream, rank workspaces all carry over bit-exactly)
+//! without re-running `prepare_modes` — the groundwork for the
+//! ROADMAP's plan-invalidation/streaming item.
+
+use super::leader::{collect_record, RunRecord, Workload};
+use crate::dist::{cat, NetModel, SimCluster};
+use crate::hooi::{
+    charge_plan_compilation, prepare_modes, CoreRanks, HooiState, Kernel, ModeState,
+    TensorAccounting,
+};
+use crate::linalg::Mat;
+use crate::runtime::Engine;
+use crate::sched::{self, Distribution, Scheme};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Typed distribution-scheme selection: the paper's four registry
+/// entries plus an escape hatch for user-provided schemes.
+pub enum SchemeChoice {
+    /// The paper's lightweight multi-policy scheme (default).
+    Lite,
+    /// CoarseG — whole slices per rank (first-fit).
+    CoarseG,
+    /// CoarseG with best-fit slice packing.
+    CoarseGBestFit,
+    /// MediumG — processor-grid medium-grained scheme.
+    MediumG,
+    /// HyperG — fine-grained hypergraph partitioning.
+    HyperG,
+    /// Any user-provided [`Scheme`] implementation.
+    Custom(Box<dyn Scheme>),
+}
+
+impl SchemeChoice {
+    /// Registry lookup by the CLI/config names (`lite`, `coarseg`,
+    /// `coarseg-bpf`, `mediumg`, `hyperg`, plus the aliases
+    /// `sched::by_name` accepts).
+    pub fn by_name(name: &str) -> Option<SchemeChoice> {
+        sched::by_name(name).map(SchemeChoice::Custom)
+    }
+
+    /// Wrap a user-provided scheme.
+    pub fn custom(scheme: Box<dyn Scheme>) -> SchemeChoice {
+        SchemeChoice::Custom(scheme)
+    }
+
+    fn into_scheme(self) -> Box<dyn Scheme> {
+        match self {
+            SchemeChoice::Lite => Box::new(sched::Lite),
+            SchemeChoice::CoarseG => Box::new(sched::CoarseG::default()),
+            SchemeChoice::CoarseGBestFit => Box::new(sched::CoarseG {
+                strategy: sched::coarse::SliceAssign::BestFit,
+            }),
+            SchemeChoice::MediumG => Box::new(sched::MediumG),
+            SchemeChoice::HyperG => Box::new(sched::HyperG::default()),
+            SchemeChoice::Custom(s) => s,
+        }
+    }
+}
+
+/// Typed compute-engine selection.
+pub enum EngineChoice {
+    /// In-process reference, fused TTM path (timing-faithful default).
+    Native,
+    /// Native through the batched fixed-shape contract (ablations).
+    NativeBatched,
+    /// Compiled PJRT artifacts when built, native fallback otherwise.
+    PjrtOrNative,
+    /// A fully constructed engine (e.g. a specific `PjrtRuntime`).
+    Custom(Engine),
+    /// An engine shared across several sessions (e.g. one PJRT runtime
+    /// driving a multi-scheme comparison — artifacts load once).
+    Shared(Arc<Engine>),
+}
+
+impl EngineChoice {
+    fn into_engine(self) -> Arc<Engine> {
+        match self {
+            EngineChoice::Native => Arc::new(Engine::Native),
+            EngineChoice::NativeBatched => Arc::new(Engine::NativeBatched),
+            EngineChoice::PjrtOrNative => Arc::new(Engine::pjrt_or_native().0),
+            EngineChoice::Custom(e) => Arc::new(e),
+            EngineChoice::Shared(e) => e,
+        }
+    }
+}
+
+/// Typed microkernel selection (replaces `TUCKER_KERNEL`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// `TUCKER_KERNEL` if set, else best detected SIMD tier.
+    #[default]
+    Auto,
+    /// Pin a specific microkernel (degrades to portable if the host
+    /// cannot run it — same rule as the env override).
+    Fixed(Kernel),
+}
+
+impl KernelChoice {
+    fn as_option(self) -> Option<Kernel> {
+        match self {
+            KernelChoice::Auto => None,
+            KernelChoice::Fixed(k) => Some(k),
+        }
+    }
+}
+
+/// Typed rank-executor selection (replaces `TUCKER_PHASE_EXECUTOR`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorChoice {
+    /// `TUCKER_PHASE_EXECUTOR` if set, else parallel on multi-core hosts.
+    #[default]
+    Auto,
+    /// Scoped-thread parallel rank executor.
+    Parallel,
+    /// Reference serial executor (minimal timing noise).
+    Serial,
+}
+
+impl ExecutorChoice {
+    fn as_option(self) -> Option<bool> {
+        match self {
+            ExecutorChoice::Auto => None,
+            ExecutorChoice::Parallel => Some(true),
+            ExecutorChoice::Serial => Some(false),
+        }
+    }
+}
+
+/// Why a session could not be built.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// `CoreRanks` does not apply to this tensor (length mismatch or a
+    /// zero rank) — the message is the `CoreRanks::validate` detail.
+    InvalidCore(String),
+    /// World size P must be at least 1.
+    ZeroRanks,
+    /// HOOI supports 3-D and 4-D tensors.
+    UnsupportedOrder(usize),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::InvalidCore(msg) => write!(f, "invalid core ranks: {msg}"),
+            SessionError::ZeroRanks => write!(f, "world size P must be at least 1"),
+            SessionError::UnsupportedOrder(n) => {
+                write!(f, "HOOI supports 3-D and 4-D tensors, got {n}-D")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Fluent, typed configuration for a [`TuckerSession`] — see the module
+/// docs for the full option/env table.
+pub struct TuckerSessionBuilder {
+    workload: Arc<Workload>,
+    scheme: SchemeChoice,
+    p: usize,
+    core: CoreRanks,
+    invocations: usize,
+    engine: EngineChoice,
+    kernel: KernelChoice,
+    executor: ExecutorChoice,
+    net: NetModel,
+    accounting: Option<TensorAccounting>,
+    seed: u64,
+}
+
+impl TuckerSessionBuilder {
+    fn new(workload: Arc<Workload>) -> TuckerSessionBuilder {
+        TuckerSessionBuilder {
+            workload,
+            scheme: SchemeChoice::Lite,
+            p: 8,
+            core: CoreRanks::Uniform(10),
+            invocations: 1,
+            engine: EngineChoice::Native,
+            kernel: KernelChoice::Auto,
+            executor: ExecutorChoice::Auto,
+            net: NetModel::default(),
+            accounting: None,
+            seed: 0xBEEF,
+        }
+    }
+
+    /// Distribution scheme (default: [`SchemeChoice::Lite`]).
+    pub fn scheme(mut self, scheme: SchemeChoice) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Simulated MPI world size P (default 8).
+    pub fn ranks(mut self, p: usize) -> Self {
+        self.p = p;
+        self
+    }
+
+    /// Core ranks — uniform K or per-mode K_n (default: uniform 10).
+    ///
+    /// `build()` rejects length mismatches and zero ranks. A K_n larger
+    /// than what the data supports (K_n > L_n, or K_n > K̂_n) is *not* an
+    /// error — degenerate modes are a supported regime (e.g. the scaled
+    /// enron analogue has L_3 = 4 « K): Lanczos caps its iteration count
+    /// at min(2K_n, L_n, K̂_n) and the surplus factor columns come back
+    /// zero, so the effective rank is the data's, not the request's.
+    pub fn core(mut self, core: impl Into<CoreRanks>) -> Self {
+        self.core = core.into();
+        self
+    }
+
+    /// HOOI invocations per [`TuckerSession::decompose`] call (default 1).
+    pub fn invocations(mut self, invocations: usize) -> Self {
+        self.invocations = invocations;
+        self
+    }
+
+    /// Compute engine (default: [`EngineChoice::Native`], the
+    /// timing-faithful path at simulation scale).
+    pub fn engine(mut self, engine: EngineChoice) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// TTM microkernel (default: [`KernelChoice::Auto`] —
+    /// `TUCKER_KERNEL`, then detection).
+    pub fn kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Rank executor (default: [`ExecutorChoice::Auto`] —
+    /// `TUCKER_PHASE_EXECUTOR`, then parallel on multi-core hosts).
+    pub fn executor(mut self, executor: ExecutorChoice) -> Self {
+        self.executor = executor;
+        self
+    }
+
+    /// α–β network model for communication charging.
+    pub fn net(mut self, net: NetModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Fig 17 tensor accounting (default: `TUCKER_MEM_ACCOUNTING`, then
+    /// plan-stream accounting).
+    pub fn memory_accounting(mut self, accounting: TensorAccounting) -> Self {
+        self.accounting = Some(accounting);
+        self
+    }
+
+    /// Seed for the distribution construction and the HOOI bootstrap.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate the configuration (tensor order, P ≥ 1, core-rank shape
+    /// — see [`core`](TuckerSessionBuilder::core) for the K_n > L_n
+    /// degenerate regime, which is allowed), construct the distribution,
+    /// and compile the per-rank TTM plans — everything sweep-invariant
+    /// is paid here, once, and reused by every decompose call.
+    pub fn build(self) -> Result<TuckerSession, SessionError> {
+        let ndim = self.workload.tensor.ndim();
+        if !(ndim == 3 || ndim == 4) {
+            return Err(SessionError::UnsupportedOrder(ndim));
+        }
+        if self.p == 0 {
+            return Err(SessionError::ZeroRanks);
+        }
+        let ks = self.core.validate(ndim).map_err(SessionError::InvalidCore)?;
+        let scheme = self.scheme.into_scheme();
+        let mut rng = Rng::new(self.seed);
+        let dist =
+            scheme.distribute(&self.workload.tensor, &self.workload.idx, self.p, &mut rng);
+        let modes =
+            prepare_modes(&self.workload.tensor, &self.workload.idx, &dist, &self.core);
+        Ok(TuckerSession {
+            workload: self.workload,
+            dist,
+            core: self.core,
+            ks,
+            invocations: self.invocations,
+            engine: self.engine.into_engine(),
+            kernel: self.kernel.as_option(),
+            executor: self.executor,
+            net: self.net,
+            accounting: self.accounting,
+            seed: self.seed,
+            modes,
+            plan_builds: 1,
+            plan_charge_pending: true,
+            state: None,
+        })
+    }
+}
+
+/// A reusable decomposition session: one workload, one compiled
+/// distribution, one set of per-rank TTM plans — any number of
+/// decompositions and refinements over them.
+pub struct TuckerSession {
+    workload: Arc<Workload>,
+    dist: Distribution,
+    core: CoreRanks,
+    ks: Vec<usize>,
+    invocations: usize,
+    engine: Arc<Engine>,
+    kernel: Option<Kernel>,
+    executor: ExecutorChoice,
+    net: NetModel,
+    accounting: Option<TensorAccounting>,
+    seed: u64,
+    modes: Vec<ModeState>,
+    plan_builds: usize,
+    plan_charge_pending: bool,
+    state: Option<HooiState>,
+}
+
+impl TuckerSession {
+    /// Start configuring a session over a workload. Accepts an owned
+    /// [`Workload`] or an `Arc<Workload>` — pass a shared `Arc` to run
+    /// several sessions (e.g. a scheme comparison) over one tensor
+    /// without deep-copying it.
+    pub fn builder(workload: impl Into<Arc<Workload>>) -> TuckerSessionBuilder {
+        TuckerSessionBuilder::new(workload.into())
+    }
+
+    /// The workload this session decomposes.
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    /// The compiled distribution (retained across decompose calls).
+    pub fn distribution(&self) -> &Distribution {
+        &self.dist
+    }
+
+    /// The resolved per-mode core ranks `[K_0, …, K_{N−1}]`.
+    pub fn core_ranks(&self) -> &[usize] {
+        &self.ks
+    }
+
+    /// How many times this session has compiled its TTM plans
+    /// (`prepare_modes`). Stays 1 across any number of
+    /// [`decompose`](TuckerSession::decompose) /
+    /// [`decompose_more`](TuckerSession::decompose_more) calls — the
+    /// observable form of the plan-reuse contract.
+    pub fn plan_builds(&self) -> usize {
+        self.plan_builds
+    }
+
+    fn new_cluster(&self) -> SimCluster {
+        let mut cluster = SimCluster::new(self.dist.p).with_net(self.net);
+        if let Some(parallel) = self.executor.as_option() {
+            cluster = cluster.with_parallel(parallel);
+        }
+        cluster
+    }
+
+    /// Fresh-run prelude: new cluster (dist time + one-off plan
+    /// compilation charge) and a bootstrapped [`HooiState`].
+    fn start(&mut self) -> (SimCluster, HooiState) {
+        let mut cluster = self.new_cluster();
+        cluster.elapsed.add(cat::DIST, self.dist.time.simulated_secs);
+        if self.plan_charge_pending {
+            // plan compilation is paid exactly once per session — charge
+            // it to the first run's TTM bucket, amortized thereafter
+            charge_plan_compilation(&self.modes, &mut cluster);
+            self.plan_charge_pending = false;
+        }
+        let state = HooiState::init(
+            &self.workload.tensor,
+            self.dist.p,
+            &self.core,
+            self.seed,
+            self.kernel,
+        );
+        state.record_kernels(&self.engine, &mut cluster);
+        (cluster, state)
+    }
+
+    /// Run the configured number of HOOI invocations from a fresh
+    /// bootstrap (any previous refinement state is discarded; the
+    /// compiled plans are reused).
+    pub fn decompose(&mut self) -> Decomposition {
+        let (mut cluster, mut state) = self.start();
+        state.sweeps(
+            &self.workload.tensor,
+            &self.modes,
+            &self.engine,
+            &mut cluster,
+            self.invocations,
+        );
+        self.state = Some(state);
+        self.finish(cluster)
+    }
+
+    /// Continue the decomposition with `invocations` further HOOI sweeps
+    /// over the *cached* plans — no `prepare_modes`, no re-bootstrap:
+    /// running `decompose()` then `decompose_more(m)` is bit-identical
+    /// to a single run configured with `invocations + m`. With no
+    /// decomposition in flight, bootstraps and runs the configured
+    /// invocations plus `invocations` in one pass.
+    pub fn decompose_more(&mut self, invocations: usize) -> Decomposition {
+        let mut cluster;
+        let sweeps;
+        if self.state.is_none() {
+            // start() already records kernel provenance on the cluster
+            let (c, state) = self.start();
+            cluster = c;
+            self.state = Some(state);
+            sweeps = self.invocations + invocations;
+        } else {
+            cluster = self.new_cluster();
+            sweeps = invocations;
+            let state = self.state.as_ref().expect("decomposition state in flight");
+            state.record_kernels(&self.engine, &mut cluster);
+        }
+        let state = self.state.as_mut().expect("decomposition state in flight");
+        state.sweeps(
+            &self.workload.tensor,
+            &self.modes,
+            &self.engine,
+            &mut cluster,
+            sweeps,
+        );
+        self.finish(cluster)
+    }
+
+    fn finish(&mut self, mut cluster: SimCluster) -> Decomposition {
+        let state = self.state.as_ref().expect("decomposition state in flight");
+        let out = state.outcome(
+            &self.workload.tensor,
+            &self.dist,
+            &self.modes,
+            &mut cluster,
+            self.accounting,
+        );
+        let record =
+            collect_record(&self.workload, &self.dist, &self.ks, &cluster, &out);
+        Decomposition {
+            factors: out.factors,
+            core: out.core,
+            sigma: out.sigma,
+            record,
+        }
+    }
+}
+
+/// A finished (possibly still refinable) Tucker decomposition: the
+/// factor matrices, the core tensor, and the consolidated
+/// [`RunRecord`] (fit, timings, metrics) of the run that produced it.
+pub struct Decomposition {
+    /// Factor matrices F_n (L_n × K_n), orthonormal columns (surplus
+    /// columns are zero in the K_n > L_n degenerate regime — see
+    /// [`TuckerSessionBuilder::core`]).
+    pub factors: Vec<Mat>,
+    /// Core tensor flattened as G_(N−1): K_{N−1} × K̂_{N−1} row-major
+    /// (earliest mode fastest along the columns).
+    pub core: Mat,
+    /// Leading singular values of the last mode (diagnostics).
+    pub sigma: Vec<f32>,
+    /// Consolidated measurements of the run that produced this
+    /// (`record.core` holds the per-mode core dims, `record.fit` the
+    /// fit — accessors below).
+    pub record: RunRecord,
+}
+
+impl Decomposition {
+    /// Fit = 1 − ‖T − X‖ / ‖T‖ (X the reconstruction).
+    pub fn fit(&self) -> f64 {
+        self.record.fit
+    }
+
+    /// Core tensor dimensions `[K_0, …, K_{N−1}]`.
+    pub fn core_dims(&self) -> &[usize] {
+        &self.record.core
+    }
+
+    /// Core entry G[j_0, …, j_{N−1}] (decodes the flattened G_(N−1)
+    /// layout). Panics on a wrong arity or an out-of-range index — a
+    /// bad index must never silently alias another core entry.
+    pub fn core_at(&self, j: &[usize]) -> f32 {
+        let dims = self.core_dims();
+        let n = dims.len();
+        assert_eq!(j.len(), n, "core index arity");
+        let mut col = 0usize;
+        let mut stride = 1usize;
+        for m in 0..n - 1 {
+            assert!(j[m] < dims[m], "core index {} out of range for K_{m}", j[m]);
+            col += j[m] * stride;
+            stride *= dims[m];
+        }
+        assert!(j[n - 1] < dims[n - 1], "core index out of range for the last mode");
+        self.core.get(j[n - 1], col)
+    }
+
+    /// Reconstruct one tensor entry:
+    /// X[i] = Σ_{j} G[j] · Π_n F_n[i_n, j_n]. A point query costs
+    /// O(Π K_n) — intended for spot checks and residual sampling, not
+    /// densification.
+    pub fn reconstruct_at(&self, idx: &[usize]) -> f32 {
+        let dims = self.core_dims();
+        let n = dims.len();
+        assert_eq!(idx.len(), n, "tensor index arity");
+        let kh: usize = dims[..n - 1].iter().product();
+        let f_last = self.factors[n - 1].row(idx[n - 1]);
+        let mut acc = 0.0f32;
+        for col in 0..kh {
+            // decode col into (j_0, …, j_{N−2}), earliest mode fastest
+            let mut rest = col;
+            let mut w = 1.0f32;
+            for m in 0..n - 1 {
+                let jm = rest % dims[m];
+                rest /= dims[m];
+                w *= self.factors[m].row(idx[m])[jm];
+            }
+            if w != 0.0 {
+                for (j_last, &fl) in f_last.iter().enumerate() {
+                    acc += self.core.get(j_last, col) * w * fl;
+                }
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::datasets::by_name;
+
+    fn tiny_workload() -> Workload {
+        let spec = by_name("enron").unwrap().scaled(0.02);
+        Workload::from_spec(&spec, 1.0)
+    }
+
+    #[test]
+    fn builder_validates_core_and_ranks() {
+        let w = tiny_workload();
+        let err = TuckerSession::builder(w.clone())
+            .core(CoreRanks::PerMode(vec![4, 4]))
+            .build()
+            .err()
+            .expect("length mismatch rejected");
+        assert!(matches!(err, SessionError::InvalidCore(_)), "{err}");
+        let err = TuckerSession::builder(w.clone()).ranks(0).build().err().unwrap();
+        assert_eq!(err, SessionError::ZeroRanks);
+        let err =
+            TuckerSession::builder(w).core(CoreRanks::Uniform(0)).build().err().unwrap();
+        assert!(matches!(err, SessionError::InvalidCore(_)));
+    }
+
+    #[test]
+    fn scheme_choice_registry_matches_sched_names() {
+        for name in ["lite", "coarseg", "coarseg-bpf", "mediumg", "hyperg"] {
+            assert!(SchemeChoice::by_name(name).is_some(), "{name}");
+        }
+        assert!(SchemeChoice::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn session_decomposes_and_reports() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w)
+            .ranks(4)
+            .core(CoreRanks::Uniform(4))
+            .seed(1)
+            .build()
+            .unwrap();
+        let d = s.decompose();
+        assert!(d.fit().is_finite());
+        assert_eq!(d.core_dims(), &[4, 4, 4]);
+        assert_eq!(d.record.scheme, "Lite");
+        assert!(d.record.hooi_secs > 0.0);
+        assert_eq!(s.plan_builds(), 1);
+    }
+
+    #[test]
+    fn decompose_more_without_decompose_bootstraps() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w)
+            .ranks(3)
+            .core(CoreRanks::Uniform(3))
+            .build()
+            .unwrap();
+        let d = s.decompose_more(1);
+        // 1 configured invocation + 1 more
+        assert!(d.fit().is_finite());
+        assert_eq!(s.plan_builds(), 1);
+    }
+}

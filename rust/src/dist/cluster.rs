@@ -82,14 +82,11 @@ pub struct SimCluster {
 
 impl SimCluster {
     /// New cluster; the parallel rank executor is enabled when the host
-    /// has more than one core and `TUCKER_PHASE_EXECUTOR` is not `serial`.
+    /// has more than one core and `TUCKER_PHASE_EXECUTOR` is not `serial`
+    /// (the env read is centralized in `util::env`; typed callers pass
+    /// their choice through [`SimCluster::with_parallel`]).
     pub fn new(p: usize) -> SimCluster {
-        let host_cores = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        let serial_env = std::env::var("TUCKER_PHASE_EXECUTOR")
-            .map(|v| v.eq_ignore_ascii_case("serial"))
-            .unwrap_or(false);
+        let parallel = crate::util::env::phase_executor_parallel(None);
         SimCluster {
             p,
             net: NetModel::default(),
@@ -99,7 +96,7 @@ impl SimCluster {
             wall: Buckets::new(),
             last_phase: Vec::new(),
             last_kernels: Vec::new(),
-            parallel: host_cores > 1 && !serial_env,
+            parallel,
         }
     }
 

@@ -6,11 +6,23 @@
 //! oracle matvecs really execute (through the engine — PJRT artifacts on
 //! the hot path) and are timed per rank; communication is charged to the
 //! α–β model with byte-exact volumes.
+//!
+//! The driver is split into session-friendly pieces: [`prepare_modes`]
+//! compiles the sweep-invariant distribution state (sharers, σ_n, FM
+//! patterns, per-rank TTM plans), [`HooiState`] owns everything that
+//! evolves across sweeps (factors, RNG, rank workspaces, the final
+//! mode's locals), and [`run_hooi`] is the one-shot composition of the
+//! two that the legacy `run_scheme` shim and the tests use.
+//! `coordinator::TuckerSession` keeps the prepared modes and the state
+//! alive between calls, so `decompose_more` re-sweeps without paying
+//! `prepare_modes` again.
 
 use super::fm::{fm_pattern, FmPattern};
+use super::kernel::Kernel;
 use super::lanczos::{lanczos_svd, Oracle};
 use super::plan::{PlanWorkspace, TtmPlan};
-use super::ttm::{khat, LocalZ};
+use super::ranks::{khat_of, CoreRanks};
+use super::ttm::LocalZ;
 use crate::dist::{cat, SimCluster};
 use crate::linalg::{orthonormal_random, Mat};
 use crate::runtime::Engine;
@@ -20,16 +32,35 @@ use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
 pub struct HooiConfig {
-    /// Uniform core length K (the paper uses K_n = K, default 10).
-    pub k: usize,
+    /// Core ranks K_n — uniform (the paper's setup) or per mode.
+    pub core: CoreRanks,
     /// Number of HOOI invocations (refinement sweeps).
     pub invocations: usize,
     pub seed: u64,
+    /// Microkernel the rank workspaces dispatch to; `None` falls back to
+    /// the `TUCKER_KERNEL` env override, then host detection.
+    pub kernel: Option<Kernel>,
+    /// Fig 17 tensor accounting; `None` falls back to
+    /// `TUCKER_MEM_ACCOUNTING`, then plan-stream accounting.
+    pub accounting: Option<TensorAccounting>,
 }
 
 impl Default for HooiConfig {
     fn default() -> Self {
-        HooiConfig { k: 10, invocations: 1, seed: 0x70C4E4 }
+        HooiConfig {
+            core: CoreRanks::Uniform(10),
+            invocations: 1,
+            seed: 0x70C4E4,
+            kernel: None,
+            accounting: None,
+        }
+    }
+}
+
+impl HooiConfig {
+    /// The paper's configuration: uniform core length K, one invocation.
+    pub fn uniform(k: usize) -> HooiConfig {
+        HooiConfig { core: CoreRanks::Uniform(k), ..HooiConfig::default() }
     }
 }
 
@@ -72,7 +103,7 @@ impl MemoryReport {
 pub struct HooiOutcome {
     pub factors: Vec<Mat>,
     /// Core tensor, flattened in the K̂-layout of the last mode
-    /// (G_(N-1): K × K̂_{N-1} row-major).
+    /// (G_(N-1): K_{N-1} × K̂_{N-1} row-major).
     pub core: Mat,
     /// Fit = 1 − ‖T − X‖ / ‖T‖ (X the reconstructed tensor).
     pub fit: f64,
@@ -87,6 +118,10 @@ pub struct ModeState {
     pub sharers: Sharers,
     pub rowmap: RowMap,
     pub fm: FmPattern,
+    /// This mode's core rank K_n.
+    pub k_n: usize,
+    /// This mode's penultimate width K̂_n = Π_{j≠n} K_j.
+    pub khat_n: usize,
     /// Precompiled per-rank TTM plans (sweep-invariant assembly layout).
     /// Empty when built with [`prepare_modes_unplanned`].
     pub plans: Vec<TtmPlan>,
@@ -103,9 +138,9 @@ pub fn prepare_modes(
     t: &SparseTensor,
     idx: &[SliceIndex],
     dist: &Distribution,
-    k: usize,
+    core: &CoreRanks,
 ) -> Vec<ModeState> {
-    prepare_modes_impl(t, idx, dist, k, true)
+    prepare_modes_impl(t, idx, dist, core, true)
 }
 
 /// Metrics/memory-only variant: skips TTM plan compilation. For
@@ -115,42 +150,254 @@ pub fn prepare_modes_unplanned(
     t: &SparseTensor,
     idx: &[SliceIndex],
     dist: &Distribution,
-    k: usize,
+    core: &CoreRanks,
 ) -> Vec<ModeState> {
-    prepare_modes_impl(t, idx, dist, k, false)
+    prepare_modes_impl(t, idx, dist, core, false)
 }
 
 fn prepare_modes_impl(
     t: &SparseTensor,
     idx: &[SliceIndex],
     dist: &Distribution,
-    k: usize,
+    core: &CoreRanks,
     build_plans: bool,
 ) -> Vec<ModeState> {
+    let ks = core.resolve(t.ndim());
     (0..t.ndim())
         .map(|n| {
             let sharers = Sharers::build(&idx[n], &dist.policies[n]);
             let rowmap = RowMap::build(&sharers, dist.p);
-            let fm = fm_pattern(&idx[n], dist, n, &rowmap, k);
+            let fm = fm_pattern(&idx[n], dist, n, &rowmap, ks[n]);
             let elems = dist.policies[n].rank_elements(&idx[n]);
             let (plans, plan_secs): (Vec<TtmPlan>, Vec<f64>) = if build_plans {
                 // per-rank plans are independent: compile them on the
                 // scoped worker pool, keeping per-rank build times honest
                 let tasks: Vec<_> = elems
                     .iter()
-                    .map(|es| move || TtmPlan::build(t, n, es, k))
+                    .map(|es| move || TtmPlan::build_with(t, n, es, core))
                     .collect();
                 crate::dist::run_scoped(tasks, true).into_iter().unzip()
             } else {
                 (Vec::new(), vec![0.0; dist.p])
             };
-            ModeState { elems, sharers, rowmap, fm, plans, plan_secs }
+            ModeState {
+                elems,
+                sharers,
+                rowmap,
+                fm,
+                k_n: ks[n],
+                khat_n: khat_of(&ks, n),
+                plans,
+                plan_secs,
+            }
         })
         .collect()
 }
 
+/// Everything a HOOI run mutates across sweeps: the factor matrices,
+/// the RNG stream (bootstrap + Lanczos restarts), the per-rank plan
+/// workspaces (kernel selection + Z arena), and the final mode's local
+/// penultimate copies (needed for the core computation).
+///
+/// Splitting this out of [`run_hooi`] is what lets
+/// `coordinator::TuckerSession` continue a decomposition: running
+/// `invocations = a` sweeps, taking an outcome, then `b` more sweeps is
+/// bit-identical to a single `a + b`-invocation run, because the state
+/// (including the RNG position) carries over exactly.
+pub struct HooiState {
+    pub factors: Vec<Mat>,
+    ks: Vec<usize>,
+    rng: Rng,
+    workspaces: Vec<PlanWorkspace>,
+    last_locals: Vec<LocalZ>,
+    last_sigma: Vec<f32>,
+}
+
+impl HooiState {
+    /// Bootstrap: random orthonormal factor matrices (§2.2) and one
+    /// fresh workspace per rank, with the kernel override applied.
+    pub fn init(
+        t: &SparseTensor,
+        p: usize,
+        core: &CoreRanks,
+        seed: u64,
+        kernel: Option<Kernel>,
+    ) -> HooiState {
+        let ks = core.resolve(t.ndim());
+        let mut rng = Rng::new(seed);
+        let factors: Vec<Mat> = t
+            .dims
+            .iter()
+            .zip(&ks)
+            .map(|(&l, &k)| orthonormal_random(l as usize, k, &mut rng))
+            .collect();
+        let workspaces: Vec<PlanWorkspace> = (0..p)
+            .map(|_| match kernel {
+                Some(k) => PlanWorkspace::with_kernel(k),
+                None => PlanWorkspace::new(),
+            })
+            .collect();
+        HooiState {
+            factors,
+            ks,
+            rng,
+            workspaces,
+            last_locals: Vec::new(),
+            last_sigma: Vec::new(),
+        }
+    }
+
+    /// Record kernel provenance for the cluster's concurrency report:
+    /// selection is fixed for the whole run (the fused path dispatches
+    /// each workspace's kernel; other engines run the padded-batch
+    /// contract), so it is recorded once rather than per phase.
+    pub fn record_kernels(&self, engine: &Engine, cluster: &mut SimCluster) {
+        cluster.record_kernels(
+            self.workspaces
+                .iter()
+                .map(|ws| {
+                    if engine.prefers_fused_ttm() {
+                        ws.kernel().resolve().name()
+                    } else {
+                        "engine-batched"
+                    }
+                })
+                .collect(),
+        );
+    }
+
+    /// Run `invocations` HOOI sweeps over the prepared modes, charging
+    /// all compute/comm to `cluster`. May be called repeatedly; each
+    /// call continues exactly where the previous one stopped.
+    pub fn sweeps(
+        &mut self,
+        t: &SparseTensor,
+        modes: &[ModeState],
+        engine: &Engine,
+        cluster: &mut SimCluster,
+        invocations: usize,
+    ) {
+        let ndim = t.ndim();
+        for _inv in 0..invocations {
+            for (n, st) in modes.iter().enumerate() {
+                // --- TTM: assemble truncated local penultimate matrices
+                // from the precompiled plans; ranks execute concurrently
+                // on the scoped-thread executor, results in rank order ---
+                let locals: Vec<LocalZ> = {
+                    let factors_ref = &self.factors;
+                    let tasks: Vec<_> = st
+                        .plans
+                        .iter()
+                        .zip(self.workspaces.iter_mut())
+                        .map(|(plan, ws)| move || plan.assemble(factors_ref, engine, ws))
+                        .collect();
+                    cluster.phase_tasks(cat::TTM, tasks)
+                };
+                // --- SVD: Lanczos bidiagonalization over the oracle ---
+                let l_n = t.dims[n] as usize;
+                let res = {
+                    let oracle = Oracle::with_engine(
+                        &locals,
+                        &st.rowmap,
+                        &st.sharers,
+                        l_n,
+                        st.khat_n,
+                        Some(engine),
+                    );
+                    lanczos_svd(&oracle, st.k_n, engine, cluster, &mut self.rng)
+                };
+                // --- factor-matrix transfer for the next TTM ---
+                cluster.p2p(cat::COMM_FM, &st.fm.per_rank);
+                self.factors[n] = res.factor;
+                self.last_sigma = res.sigma;
+                if n == ndim - 1 {
+                    // keep the final mode's locals for the core
+                    // computation; recycle the previous sweep's copies
+                    for (ws, old) in
+                        self.workspaces.iter_mut().zip(self.last_locals.drain(..))
+                    {
+                        ws.recycle(old.z);
+                    }
+                    self.last_locals = locals;
+                } else {
+                    // Z arena: hand each rank's buffer back for the next
+                    // mode
+                    for (ws, local) in self.workspaces.iter_mut().zip(locals) {
+                        ws.recycle(local.z);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Compute the core, fit and memory report from the current state —
+    /// non-destructive, so a session can take an outcome, sweep further,
+    /// and take another.
+    ///
+    /// Core, once, from the final mode's penultimate matrices:
+    /// G_(N-1) = F̃_{N-1}^T · Z_(N-1); Z was built with the final factors
+    /// of all other modes, F̃_{N-1} is this sweep's SVD output. Each rank
+    /// contributes F̃[rows_p,:]^T Z^p; partials allreduce (charged common).
+    pub fn outcome(
+        &self,
+        t: &SparseTensor,
+        dist: &Distribution,
+        modes: &[ModeState],
+        cluster: &mut SimCluster,
+        accounting: Option<TensorAccounting>,
+    ) -> HooiOutcome {
+        let ndim = t.ndim();
+        let n_last = ndim - 1;
+        let (k_last, kh_last) = (self.ks[n_last], modes[n_last].khat_n);
+        let mut core = Mat::zeros(k_last, kh_last);
+        if !self.last_locals.is_empty() {
+            let f_last = &self.factors[n_last];
+            let last_locals = &self.last_locals;
+            cluster.phase("core", |rank| {
+                let local = &last_locals[rank];
+                for (r, &l) in local.rows.iter().enumerate() {
+                    let zrow = local.z.row(r);
+                    let frow = f_last.row(l as usize);
+                    for kk in 0..k_last {
+                        let w = frow[kk];
+                        if w != 0.0 {
+                            crate::linalg::axpy(w, zrow, core.row_mut(kk));
+                        }
+                    }
+                }
+            });
+            cluster.allreduce(cat::COMM_COMMON, (k_last * kh_last) as u64);
+        }
+
+        // fit via ‖T‖² − ‖G‖² (orthonormal factors)
+        let tnorm_sq = t.norm_sq();
+        let gnorm_sq = core.frob_norm().powi(2);
+        let fit =
+            1.0 - ((tnorm_sq - gnorm_sq).max(0.0)).sqrt() / tnorm_sq.sqrt().max(1e-30);
+
+        let memory = memory_model_with(
+            t,
+            dist,
+            modes,
+            TensorAccounting::resolve(accounting),
+        );
+        HooiOutcome {
+            factors: self.factors.clone(),
+            core,
+            fit,
+            memory,
+            sigma: self.last_sigma.clone(),
+        }
+    }
+}
+
 /// Run `cfg.invocations` HOOI sweeps of the distributed framework over the
 /// given distribution, charging all compute/comm to `cluster`.
+///
+/// One-shot composition of [`prepare_modes`] + [`HooiState`]; callers
+/// that decompose the same distribution repeatedly should hold a
+/// `coordinator::TuckerSession` instead, which keeps the prepared modes
+/// (and the TTM plans inside them) alive across calls.
 pub fn run_hooi(
     t: &SparseTensor,
     idx: &[SliceIndex],
@@ -159,127 +406,23 @@ pub fn run_hooi(
     cluster: &mut SimCluster,
     cfg: &HooiConfig,
 ) -> HooiOutcome {
-    let ndim = t.ndim();
-    let k = cfg.k;
-    let kh = khat(k, ndim);
-    let mut rng = Rng::new(cfg.seed);
-    // bootstrap: random orthonormal factor matrices (§2.2)
-    let mut factors: Vec<Mat> = t
-        .dims
-        .iter()
-        .map(|&l| orthonormal_random(l as usize, k, &mut rng))
-        .collect();
-    let modes = prepare_modes(t, idx, dist, k);
+    let modes = prepare_modes(t, idx, dist, &cfg.core);
     // plan compilation is per-rank work a real implementation pays once;
     // charge its per-mode makespan to the TTM bucket so simulated totals
     // keep accounting for all per-rank compute
-    for st in &modes {
+    charge_plan_compilation(&modes, cluster);
+    let mut state = HooiState::init(t, dist.p, &cfg.core, cfg.seed, cfg.kernel);
+    state.record_kernels(engine, cluster);
+    state.sweeps(t, &modes, engine, cluster, cfg.invocations);
+    state.outcome(t, dist, &modes, cluster, cfg.accounting)
+}
+
+/// Charge each mode's plan-compilation makespan to the TTM bucket.
+pub fn charge_plan_compilation(modes: &[ModeState], cluster: &mut SimCluster) {
+    for st in modes {
         let worst = st.plan_secs.iter().copied().fold(0.0, f64::max);
         cluster.elapsed.add(cat::TTM, worst);
     }
-    // per-rank workspaces shared across modes and sweeps: the Z arena
-    // recycles each mode's buffers into the next, keeping peak memory at
-    // one concurrent Z per rank (plus the final mode's copy for the core)
-    let mut workspaces: Vec<PlanWorkspace> =
-        (0..dist.p).map(|_| PlanWorkspace::new()).collect();
-
-    // kernel provenance for the concurrency report: selection is fixed
-    // for the whole run (the fused path dispatches each workspace's
-    // kernel; other engines run the padded-batch contract), so record it
-    // once rather than per phase
-    cluster.record_kernels(
-        workspaces
-            .iter()
-            .map(|ws| {
-                if engine.prefers_fused_ttm() {
-                    ws.kernel().resolve().name()
-                } else {
-                    "engine-batched"
-                }
-            })
-            .collect(),
-    );
-
-    let mut last_locals: Vec<LocalZ> = Vec::new();
-    let mut last_sigma: Vec<f32> = Vec::new();
-    for _inv in 0..cfg.invocations {
-        for n in 0..ndim {
-            let st = &modes[n];
-            // --- TTM: assemble truncated local penultimate matrices from
-            // the precompiled plans; ranks execute concurrently on the
-            // scoped-thread executor, results arrive in rank order ---
-            let locals: Vec<LocalZ> = {
-                let factors_ref = &factors;
-                let tasks: Vec<_> = st
-                    .plans
-                    .iter()
-                    .zip(workspaces.iter_mut())
-                    .map(|(plan, ws)| move || plan.assemble(factors_ref, engine, ws))
-                    .collect();
-                cluster.phase_tasks(cat::TTM, tasks)
-            };
-            // --- SVD: Lanczos bidiagonalization over the oracle ---
-            let l_n = t.dims[n] as usize;
-            let res = {
-                let oracle = Oracle::with_engine(
-                    &locals,
-                    &st.rowmap,
-                    &st.sharers,
-                    l_n,
-                    kh,
-                    Some(engine),
-                );
-                lanczos_svd(&oracle, k, engine, cluster, &mut rng)
-            };
-            // --- factor-matrix transfer for the next TTM ---
-            cluster.p2p(cat::COMM_FM, &st.fm.per_rank);
-            factors[n] = res.factor;
-            last_sigma = res.sigma;
-            if n == ndim - 1 {
-                // keep the final mode's locals for the core computation;
-                // recycle the previous sweep's copies before replacing them
-                for (ws, old) in workspaces.iter_mut().zip(last_locals.drain(..)) {
-                    ws.recycle(old.z);
-                }
-                last_locals = locals;
-            } else {
-                // Z arena: hand each rank's buffer back for the next mode
-                for (ws, local) in workspaces.iter_mut().zip(locals) {
-                    ws.recycle(local.z);
-                }
-            }
-        }
-    }
-
-    // --- core, once, from the final mode's penultimate matrices:
-    // G_(N-1) = F̃_{N-1}^T · Z_(N-1); Z was built with the final factors of
-    // all other modes, F̃_{N-1} is this sweep's SVD output. Each rank
-    // contributes F̃[rows_p,:]^T Z^p; partials allreduce (charged common).
-    let n_last = ndim - 1;
-    let mut core = Mat::zeros(k, kh);
-    let f_last = &factors[n_last];
-    cluster.phase("core", |rank| {
-        let local = &last_locals[rank];
-        for (r, &l) in local.rows.iter().enumerate() {
-            let zrow = local.z.row(r);
-            let frow = f_last.row(l as usize);
-            for kk in 0..k {
-                let w = frow[kk];
-                if w != 0.0 {
-                    crate::linalg::axpy(w, zrow, core.row_mut(kk));
-                }
-            }
-        }
-    });
-    cluster.allreduce(cat::COMM_COMMON, (k * kh) as u64);
-
-    // fit via ‖T‖² − ‖G‖² (orthonormal factors)
-    let tnorm_sq = t.norm_sq();
-    let gnorm_sq = core.frob_norm().powi(2);
-    let fit = 1.0 - ((tnorm_sq - gnorm_sq).max(0.0)).sqrt() / tnorm_sq.sqrt().max(1e-30);
-
-    let memory = memory_model(t, dist, &modes, k, kh);
-    HooiOutcome { factors, core, fit, memory, sigma: last_sigma }
 }
 
 /// How the per-rank tensor working copy is charged by [`memory_model`].
@@ -300,30 +443,40 @@ pub enum TensorAccounting {
 }
 
 impl TensorAccounting {
-    /// Default accounting, with the `TUCKER_MEM_ACCOUNTING` override
-    /// (`coo` forces the paper model, `plan` forces stream charging).
-    /// Unrecognized values are flagged on stderr rather than silently
-    /// changing Fig 17 numbers.
-    pub fn from_env() -> TensorAccounting {
-        match std::env::var("TUCKER_MEM_ACCOUNTING") {
-            Ok(s) if s.eq_ignore_ascii_case("coo") => TensorAccounting::PaperCoo,
-            Ok(s) if s.eq_ignore_ascii_case("plan") => TensorAccounting::PlanStreams,
-            Ok(s) => {
-                eprintln!(
-                    "TUCKER_MEM_ACCOUNTING={s:?} not recognized (expected \
-                     \"coo\" or \"plan\"); using plan-stream accounting"
-                );
-                TensorAccounting::PlanStreams
-            }
-            Err(_) => TensorAccounting::PlanStreams,
+    pub fn by_name(s: &str) -> Option<TensorAccounting> {
+        if s.eq_ignore_ascii_case("coo") {
+            Some(TensorAccounting::PaperCoo)
+        } else if s.eq_ignore_ascii_case("plan") {
+            Some(TensorAccounting::PlanStreams)
+        } else {
+            None
         }
+    }
+
+    /// Precedence: typed choice > `TUCKER_MEM_ACCOUNTING` env override
+    /// (`coo` / `plan`) > plan-stream default. Unrecognized env values
+    /// are flagged on stderr rather than silently changing Fig 17
+    /// numbers (see `util::env`).
+    pub fn resolve(option: Option<TensorAccounting>) -> TensorAccounting {
+        crate::util::env::resolve(
+            option,
+            crate::util::env::MEM_ACCOUNTING,
+            TensorAccounting::by_name,
+            || TensorAccounting::PlanStreams,
+        )
+    }
+
+    /// Default accounting with only the env override applied.
+    pub fn from_env() -> TensorAccounting {
+        TensorAccounting::resolve(None)
     }
 }
 
 /// Fig 17 memory model: tensor working copies + largest local
 /// penultimate + stored factor rows, per rank. Usable without running
 /// HOOI ([`prepare_modes_unplanned`] + this) — the distribution fully
-/// determines it.
+/// determines it. Per-mode core ranks are read off the mode states
+/// (K_n, K̂_n), so ragged cores are charged exactly.
 ///
 /// The tensor component follows [`TensorAccounting::from_env`]: planned
 /// states charge the real plan streams (lane padding included), closing
@@ -334,10 +487,8 @@ pub fn memory_model(
     t: &SparseTensor,
     dist: &Distribution,
     modes: &[ModeState],
-    k: usize,
-    kh: usize,
 ) -> MemoryReport {
-    memory_model_with(t, dist, modes, k, kh, TensorAccounting::from_env())
+    memory_model_with(t, dist, modes, TensorAccounting::from_env())
 }
 
 /// [`memory_model`] with an explicit [`TensorAccounting`] choice.
@@ -345,8 +496,6 @@ pub fn memory_model_with(
     t: &SparseTensor,
     dist: &Distribution,
     modes: &[ModeState],
-    k: usize,
-    kh: usize,
     acct: TensorAccounting,
 ) -> MemoryReport {
     let p = dist.p;
@@ -372,19 +521,20 @@ pub fn memory_model_with(
             }
         }
     }
-    // penultimate: max over modes of R_n^p · K̂ · 4 (Z freed between modes)
+    // penultimate: max over modes of R_n^p · K̂_n · 4 (Z freed between
+    // modes)
     let mut penult = vec![0u64; p];
     for st in modes {
         let r_counts = st.sharers.r_counts(p);
         for (rank, b) in penult.iter_mut().enumerate() {
-            *b = (*b).max(r_counts[rank] as u64 * kh as u64 * 4);
+            *b = (*b).max(r_counts[rank] as u64 * st.khat_n as u64 * 4);
         }
     }
-    // factors: stored rows per mode × K × 4
+    // factors: stored rows per mode × K_n × 4
     let mut fact = vec![0u64; p];
     for st in modes {
         for (rank, b) in fact.iter_mut().enumerate() {
-            *b += st.fm.stored_rows[rank] * k as u64 * 4;
+            *b += st.fm.stored_rows[rank] * st.k_n as u64 * 4;
         }
     }
     MemoryReport {
@@ -417,7 +567,12 @@ mod tests {
     ) -> (HooiOutcome, SimCluster) {
         let dist = Lite.distribute(t, idx, p, &mut Rng::new(5));
         let mut cluster = SimCluster::new(p);
-        let cfg = HooiConfig { k, invocations, seed: 42 };
+        let cfg = HooiConfig {
+            core: CoreRanks::Uniform(k),
+            invocations,
+            seed: 42,
+            ..HooiConfig::default()
+        };
         let out = run_hooi(t, idx, &dist, &Engine::Native, &mut cluster, &cfg);
         (out, cluster)
     }
@@ -486,12 +641,12 @@ mod tests {
     fn memory_model_charges_plan_streams_with_coo_behind_flag() {
         let (t, idx) = small_tensor(4);
         let dist = Lite.distribute(&t, &idx, 4, &mut Rng::new(5));
-        let kh = khat(4, t.ndim());
-        let modes = prepare_modes(&t, &idx, &dist, 4);
+        let core = CoreRanks::Uniform(4);
+        let modes = prepare_modes(&t, &idx, &dist, &core);
         // plan-stream accounting: exactly the bytes the per-(mode, rank)
         // streams occupy, lane padding included
         let plan_rep =
-            memory_model_with(&t, &dist, &modes, 4, kh, TensorAccounting::PlanStreams);
+            memory_model_with(&t, &dist, &modes, TensorAccounting::PlanStreams);
         let want: u64 = modes
             .iter()
             .map(|st| st.plans.iter().map(|p| p.stream_bytes()).sum::<u64>())
@@ -503,18 +658,16 @@ mod tests {
         assert!(plan_rep.avg_total_mb() > 0.0);
         // the paper's COO accounting stays available behind the flag:
         // Lite is multi-policy, 3 copies of every element
-        let coo_rep =
-            memory_model_with(&t, &dist, &modes, 4, kh, TensorAccounting::PaperCoo);
+        let coo_rep = memory_model_with(&t, &dist, &modes, TensorAccounting::PaperCoo);
         assert_eq!(
             coo_rep.tensor_bytes.iter().sum::<u64>(),
             3 * t.nnz() as u64 * t.bytes_per_element() as u64
         );
         // unplanned (metrics-only) states never materialize streams and
         // fall back to COO under either accounting
-        let unplanned = prepare_modes_unplanned(&t, &idx, &dist, 4);
-        let fallback = memory_model_with(
-            &t, &dist, &unplanned, 4, kh, TensorAccounting::PlanStreams,
-        );
+        let unplanned = prepare_modes_unplanned(&t, &idx, &dist, &core);
+        let fallback =
+            memory_model_with(&t, &dist, &unplanned, TensorAccounting::PlanStreams);
         assert_eq!(fallback.tensor_bytes, coo_rep.tensor_bytes);
         // both accountings share penultimate/factor components
         assert_eq!(plan_rep.penultimate_bytes, coo_rep.penultimate_bytes);
@@ -529,7 +682,12 @@ mod tests {
         let (out, _) = {
             let dist = Lite.distribute(&t, &idx, 3, &mut Rng::new(7));
             let mut cluster = SimCluster::new(3);
-            let cfg = HooiConfig { k: 3, invocations: 1, seed: 1 };
+            let cfg = HooiConfig {
+                core: CoreRanks::Uniform(3),
+                invocations: 1,
+                seed: 1,
+                ..HooiConfig::default()
+            };
             (
                 run_hooi(&t, &idx, &dist, &Engine::Native, &mut cluster, &cfg),
                 cluster,
@@ -539,5 +697,56 @@ mod tests {
         assert_eq!(out.core.rows, 3);
         assert_eq!(out.core.cols, 27);
         assert!(out.fit.is_finite());
+    }
+
+    #[test]
+    fn per_mode_core_shapes_flow_through_the_driver() {
+        let (t, idx) = small_tensor(7);
+        let dist = Lite.distribute(&t, &idx, 3, &mut Rng::new(8));
+        let mut cluster = SimCluster::new(3);
+        let cfg = HooiConfig {
+            core: CoreRanks::PerMode(vec![3, 4, 5]),
+            invocations: 1,
+            seed: 2,
+            ..HooiConfig::default()
+        };
+        let out = run_hooi(&t, &idx, &dist, &Engine::Native, &mut cluster, &cfg);
+        for (n, want) in [3usize, 4, 5].iter().enumerate() {
+            assert_eq!(out.factors[n].cols, *want, "mode {n} factor width");
+            assert_eq!(out.factors[n].rows, t.dims[n] as usize);
+        }
+        // core is G_(N-1): K_2 × K_0·K_1
+        assert_eq!(out.core.rows, 5);
+        assert_eq!(out.core.cols, 12);
+        assert!(out.fit.is_finite() && (0.0..=1.0).contains(&out.fit));
+    }
+
+    #[test]
+    fn split_sweeps_match_one_shot_run_exactly() {
+        // the HooiState contract behind TuckerSession::decompose_more:
+        // 2 sweeps + outcome + 1 sweep must equal a 3-sweep run
+        let (t, idx) = small_tensor(8);
+        let dist = Lite.distribute(&t, &idx, 3, &mut Rng::new(9));
+        let core = CoreRanks::Uniform(4);
+        let modes = prepare_modes(&t, &idx, &dist, &core);
+
+        let mut c1 = SimCluster::new(3);
+        let mut s1 = HooiState::init(&t, 3, &core, 21, None);
+        s1.sweeps(&t, &modes, &Engine::Native, &mut c1, 3);
+        let one_shot = s1.outcome(&t, &dist, &modes, &mut c1, None);
+
+        let mut c2 = SimCluster::new(3);
+        let mut s2 = HooiState::init(&t, 3, &core, 21, None);
+        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 2);
+        let mid = s2.outcome(&t, &dist, &modes, &mut c2, None);
+        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 1);
+        let resumed = s2.outcome(&t, &dist, &modes, &mut c2, None);
+
+        assert!(mid.fit.is_finite());
+        assert_eq!(one_shot.fit, resumed.fit, "continuation is bit-identical");
+        for (a, b) in one_shot.factors.iter().zip(&resumed.factors) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(one_shot.core.data, resumed.core.data);
     }
 }

@@ -109,16 +109,17 @@ impl Kernel {
         }
     }
 
-    /// Detection with the `TUCKER_KERNEL` override. Unknown names and
+    /// Detection with the `TUCKER_KERNEL` override (read through
+    /// `util::env` — typed option > env > detection). Unknown names and
     /// kernels the host cannot run fall back to [`Kernel::detect`]
     /// (`scalar` and `portable` are always honored).
     pub fn from_env() -> Kernel {
-        match std::env::var("TUCKER_KERNEL") {
-            Ok(s) => Kernel::by_name(&s)
-                .filter(|k| k.available())
-                .unwrap_or_else(Kernel::detect),
-            Err(_) => Kernel::detect(),
-        }
+        crate::util::env::resolve(
+            None,
+            crate::util::env::KERNEL,
+            |s| Kernel::by_name(s).filter(|k| k.available()),
+            Kernel::detect,
+        )
     }
 
     /// Map to a kernel that can actually run here (unavailable SIMD

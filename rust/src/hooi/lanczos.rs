@@ -322,7 +322,7 @@ mod tests {
     #[test]
     fn oracle_matvec_matches_dense() {
         let fx = fixture(4, 4, 1);
-        let dense = dense_penultimate(&fx.t, 0, &fx.factors, fx.k);
+        let dense = dense_penultimate(&fx.t, 0, &fx.factors);
         let oracle =
             Oracle::new(&fx.locals, &fx.rowmap, &fx.sharers, dense.rows, dense.cols);
         let mut cluster = SimCluster::new(4);
@@ -340,7 +340,7 @@ mod tests {
     #[test]
     fn oracle_rmatvec_matches_dense() {
         let fx = fixture(3, 4, 2);
-        let dense = dense_penultimate(&fx.t, 0, &fx.factors, fx.k);
+        let dense = dense_penultimate(&fx.t, 0, &fx.factors);
         let oracle =
             Oracle::new(&fx.locals, &fx.rowmap, &fx.sharers, dense.rows, dense.cols);
         let mut cluster = SimCluster::new(3);
@@ -376,7 +376,7 @@ mod tests {
         // leading singular values from the distributed Lanczos must match
         // a dense Jacobi SVD of the assembled penultimate matrix
         let fx = fixture(4, 5, 4);
-        let dense = dense_penultimate(&fx.t, 0, &fx.factors, fx.k);
+        let dense = dense_penultimate(&fx.t, 0, &fx.factors);
         let oracle =
             Oracle::new(&fx.locals, &fx.rowmap, &fx.sharers, dense.rows, dense.cols);
         let mut cluster = SimCluster::new(4);

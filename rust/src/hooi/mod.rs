@@ -8,14 +8,17 @@ pub mod fm;
 pub mod kernel;
 pub mod lanczos;
 pub mod plan;
+pub mod ranks;
 pub mod ttm;
 
 pub use driver::{
-    memory_model_with, prepare_modes, prepare_modes_unplanned, run_hooi, HooiConfig,
-    HooiOutcome, MemoryReport, ModeState, TensorAccounting,
+    charge_plan_compilation, memory_model, memory_model_with, prepare_modes,
+    prepare_modes_unplanned, run_hooi, HooiConfig, HooiOutcome, HooiState, MemoryReport,
+    ModeState, TensorAccounting,
 };
 pub use fm::{fm_pattern, FmPattern};
 pub use kernel::{pad_to_lanes, Kernel, LANES};
 pub use lanczos::{lanczos_svd, LanczosResult, Oracle};
 pub use plan::{PlanWorkspace, TtmPlan};
+pub use ranks::{khat_of, CoreRanks};
 pub use ttm::{assemble_local_z, assemble_local_z_fused, dense_penultimate, khat, LocalZ};

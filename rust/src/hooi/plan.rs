@@ -49,7 +49,8 @@
 //! element-order oracle (`assemble_local_z_fused`).
 
 use super::kernel::{pad_to_lanes, Kernel, PortableTile, Tile, LANES};
-use super::ttm::{flush_contrib_batch, khat, other_modes, LocalZ};
+use super::ranks::CoreRanks;
+use super::ttm::{flush_contrib_batch, other_modes, LocalZ};
 use crate::linalg::{axpy, Mat};
 use crate::runtime::Engine;
 use crate::tensor::SparseTensor;
@@ -156,11 +157,15 @@ impl PlanWorkspace {
 #[derive(Debug, Clone)]
 pub struct TtmPlan {
     pub mode: usize,
-    pub k: usize,
-    /// K̂ = K^{N−1}.
+    /// Core rank K_j of each *other* mode, in [`TtmPlan::others`] order
+    /// (fast Kronecker factor first). Uniform cores have all entries
+    /// equal; `CoreRanks::PerMode` makes them ragged.
+    pub oks: Vec<usize>,
+    /// K̂_n = Π_{j≠n} K_j.
     pub khat: usize,
-    /// K rounded up to a whole number of [`LANES`] — the column tile
-    /// width of the padded factor table, accumulators and Z row tiles.
+    /// The fast-mode rank `oks[0]` rounded up to a whole number of
+    /// [`LANES`] — the column tile width of the padded factor table,
+    /// accumulators and Z row tiles.
     pub kp: usize,
     /// Modes other than `mode`, ascending (Kronecker factor order).
     pub others: Vec<usize>,
@@ -191,18 +196,34 @@ pub struct TtmPlan {
 }
 
 impl TtmPlan {
-    /// Build the plan for `mode` over this rank's `elems`. O(|E| log s)
-    /// where s is the largest per-row segment — paid once, amortized over
-    /// every sweep and invocation.
+    /// Build the plan for `mode` over this rank's `elems` with a uniform
+    /// core length K — see [`TtmPlan::build_with`] for per-mode ranks.
     pub fn build(t: &SparseTensor, mode: usize, elems: &[u32], k: usize) -> TtmPlan {
+        TtmPlan::build_with(t, mode, elems, &CoreRanks::Uniform(k))
+    }
+
+    /// Build the plan for `mode` over this rank's `elems` under the
+    /// given per-mode core ranks. O(|E| log s) where s is the largest
+    /// per-row segment — paid once, amortized over every sweep and
+    /// invocation. The element stream layout is rank-independent; only
+    /// the kp column tiling (`kp = ⌈K_fast/LANES⌉·LANES`) and the K̂
+    /// width depend on the core choice.
+    pub fn build_with(
+        t: &SparseTensor,
+        mode: usize,
+        elems: &[u32],
+        core: &CoreRanks,
+    ) -> TtmPlan {
         let ndim = t.ndim();
         assert!(
             ndim == 3 || ndim == 4,
             "HOOI supports 3-D and 4-D tensors"
         );
+        let ks = core.resolve(ndim);
         let others = other_modes(ndim, mode);
-        let kh = khat(k, ndim);
-        let kp = pad_to_lanes(k);
+        let oks: Vec<usize> = others.iter().map(|&m| ks[m]).collect();
+        let kh: usize = oks.iter().product();
+        let kp = pad_to_lanes(oks[0]);
         let mut rows: Vec<u32> =
             elems.iter().map(|&e| t.coord(mode, e as usize)).collect();
         rows.sort_unstable();
@@ -320,7 +341,7 @@ impl TtmPlan {
         }
         TtmPlan {
             mode,
-            k,
+            oks,
             khat: kh,
             kp,
             others,
@@ -392,15 +413,24 @@ impl TtmPlan {
         }
     }
 
+    /// Are all other-mode ranks equal? The fixed-shape engine batch
+    /// contract ((B, K) row blocks with one shared K) only exists for
+    /// uniform cores; ragged cores always take the fused path.
+    pub fn uniform_core(&self) -> bool {
+        self.oks.windows(2).all(|w| w[0] == w[1])
+    }
+
     /// Assemble Z^p, dispatching on the engine like `assemble_local_z`
     /// (fused native kernel vs. the padded-batch engine contract).
+    /// Ragged `CoreRanks::PerMode` plans always run fused — the batched
+    /// engine contract requires one shared K.
     pub fn assemble(
         &self,
         factors: &[Mat],
         engine: &Engine,
         ws: &mut PlanWorkspace,
     ) -> LocalZ {
-        if engine.prefers_fused_ttm() {
+        if engine.prefers_fused_ttm() || !self.uniform_core() {
             self.assemble_fused(factors, ws)
         } else {
             self.assemble_batched(factors, engine, ws)
@@ -455,7 +485,7 @@ impl TtmPlan {
     /// K-length rows (padding slots skipped via `run_len`). Kept as the
     /// equivalence oracle and the ablation baseline.
     fn assemble_fused_scalar(&self, factors: &[Mat], ws: &mut PlanWorkspace) -> LocalZ {
-        let k = self.k;
+        let ka = self.oks[0];
         let nrows = self.rows.len();
         let data = ws.take_z(nrows * self.khat);
         let mut z = Mat { rows: nrows, cols: self.khat, data };
@@ -465,7 +495,7 @@ impl TtmPlan {
         let fm_a = &factors[self.others[0]];
         let fm_b = &factors[self.others[1]];
         ws.acc.clear();
-        ws.acc.resize(k, 0.0);
+        ws.acc.resize(ka, 0.0);
         if self.others.len() == 2 {
             let acc = &mut ws.acc;
             for r in 0..nrows {
@@ -478,13 +508,13 @@ impl TtmPlan {
                     }
                     let rb = fm_b.row(self.run_b[j] as usize);
                     for (cb, &bv) in rb.iter().enumerate() {
-                        axpy(bv, acc, &mut zrow[cb * k..(cb + 1) * k]);
+                        axpy(bv, acc, &mut zrow[cb * ka..(cb + 1) * ka]);
                     }
                 }
             }
         } else {
             let fm_c = &factors[self.others[2]];
-            let kk = k * k;
+            let kk = ka * self.oks[1];
             ws.acc2.clear();
             ws.acc2.resize(kk, 0.0);
             let PlanWorkspace { acc, acc2, .. } = ws;
@@ -501,7 +531,7 @@ impl TtmPlan {
                         }
                         let rb = fm_b.row(self.run_b[j] as usize);
                         for (cb, &bv) in rb.iter().enumerate() {
-                            axpy(bv, acc, &mut acc2[cb * k..(cb + 1) * k]);
+                            axpy(bv, acc, &mut acc2[cb * ka..(cb + 1) * ka]);
                         }
                     }
                     let rc = fm_c.row(self.outer_c[oj] as usize);
@@ -523,7 +553,7 @@ impl TtmPlan {
         factors: &[Mat],
         ws: &mut PlanWorkspace,
     ) -> LocalZ {
-        let (k, kp) = (self.k, self.kp);
+        let (ka, kp) = (self.oks[0], self.kp);
         let nrows = self.rows.len();
         let data = ws.take_z(nrows * self.khat);
         let mut z = Mat { rows: nrows, cols: self.khat, data };
@@ -534,9 +564,10 @@ impl TtmPlan {
         ws.acc.clear();
         ws.acc.resize(kp, 0.0);
         if self.others.len() == 2 {
+            let kb = self.oks[1];
             let fm_b = &factors[self.others[1]];
             ws.ztile.clear();
-            ws.ztile.resize(k * kp, 0.0);
+            ws.ztile.resize(kb * kp, 0.0);
             let PlanWorkspace { apad, acc, ztile, .. } = ws;
             for r in 0..nrows {
                 let (jlo, jhi) =
@@ -560,18 +591,19 @@ impl TtmPlan {
                 }
                 // compact the kp-stride tile into the dense K̂ row
                 let zrow = z.row_mut(r);
-                for cb in 0..k {
-                    zrow[cb * k..(cb + 1) * k]
-                        .copy_from_slice(&ztile[cb * kp..cb * kp + k]);
+                for cb in 0..kb {
+                    zrow[cb * ka..(cb + 1) * ka]
+                        .copy_from_slice(&ztile[cb * kp..cb * kp + ka]);
                 }
             }
         } else {
+            let (kb, kc) = (self.oks[1], self.oks[2]);
             let fm_b = &factors[self.others[1]];
             let fm_c = &factors[self.others[2]];
             ws.acc2.clear();
-            ws.acc2.resize(k * kp, 0.0);
+            ws.acc2.resize(kb * kp, 0.0);
             ws.ztile.clear();
-            ws.ztile.resize(k * k * kp, 0.0);
+            ws.ztile.resize(kc * kb * kp, 0.0);
             let PlanWorkspace { apad, acc, acc2, ztile, .. } = ws;
             for r in 0..nrows {
                 let (olo, ohi) =
@@ -604,9 +636,9 @@ impl TtmPlan {
                     }
                 }
                 let zrow = z.row_mut(r);
-                for seg in 0..k * k {
-                    zrow[seg * k..(seg + 1) * k]
-                        .copy_from_slice(&ztile[seg * kp..seg * kp + k]);
+                for seg in 0..kc * kb {
+                    zrow[seg * ka..(seg + 1) * ka]
+                        .copy_from_slice(&ztile[seg * kp..seg * kp + ka]);
                 }
             }
         }
@@ -625,7 +657,13 @@ impl TtmPlan {
         engine: &Engine,
         ws: &mut PlanWorkspace,
     ) -> LocalZ {
-        let k = self.k;
+        assert!(
+            self.uniform_core(),
+            "the batched engine contract requires a uniform core \
+             (ragged ranks {:?} must use the fused path)",
+            self.oks
+        );
+        let k = self.oks[0];
         let kh = self.khat;
         let ndim = self.others.len() + 1;
         let nrows = self.rows.len();
@@ -719,7 +757,7 @@ mod tests {
         let mode = plan.mode;
         assert!(plan.rows.windows(2).all(|w| w[0] < w[1]), "rows ascending");
         assert_eq!(plan.kp % LANES, 0);
-        assert!(plan.kp >= plan.k);
+        assert!(plan.kp >= plan.oks[0]);
         assert_eq!(*plan.slot_ptr.last().unwrap() as usize, plan.fa.len());
         assert_eq!(plan.fa.len(), plan.vals.len());
         let mut real = 0usize;
@@ -819,7 +857,7 @@ mod tests {
         for mode in 0..3 {
             let plan = TtmPlan::build(&t, mode, &elems, 5);
             let want =
-                crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 5);
+                crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors);
             let tiled = plan.assemble_fused(&factors, &mut ws);
             assert_eq!(tiled.rows, want.rows);
             assert!(tiled.z.max_abs_diff(&want.z) < 1e-4, "tiled mode {mode}");
@@ -840,7 +878,7 @@ mod tests {
         for mode in 0..4 {
             let plan = TtmPlan::build(&t, mode, &elems, 3);
             let want =
-                crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors, 3);
+                crate::hooi::ttm::assemble_local_z_fused(&t, mode, &elems, &factors);
             let tiled = plan.assemble_fused(&factors, &mut ws);
             assert_eq!(tiled.rows, want.rows);
             assert!(tiled.z.max_abs_diff(&want.z) < 1e-4, "tiled mode {mode}");

@@ -1,0 +1,133 @@
+//! Per-mode core ranks K_n (paper §2, Eq. 1).
+//!
+//! The paper's experiments fix K_n = K, but its formulation is stated
+//! for general per-mode ranks — a (doc × term × time) tensor may well
+//! want a wide doc/term core and a narrow time core. [`CoreRanks`] is
+//! the typed choice threaded through the whole stack: `HooiConfig`, the
+//! kp-tiled TTM plans (`hooi::plan`), the per-mode Lanczos truncation,
+//! the factor-matrix transfer patterns, and the Fig 17 memory model.
+
+use std::fmt;
+
+/// Core tensor shape choice: one K for every mode, or one K_n per mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoreRanks {
+    /// K_n = K for all modes (the paper's configuration).
+    Uniform(usize),
+    /// Explicit per-mode ranks `[K_0, …, K_{N−1}]`; the length must
+    /// match the tensor order.
+    PerMode(Vec<usize>),
+}
+
+impl CoreRanks {
+    /// Per-mode ranks for an order-`ndim` tensor, or an error message
+    /// when the choice cannot apply (length mismatch, zero rank).
+    pub fn validate(&self, ndim: usize) -> Result<Vec<usize>, String> {
+        let ks = match self {
+            CoreRanks::Uniform(k) => vec![*k; ndim],
+            CoreRanks::PerMode(v) => {
+                if v.len() != ndim {
+                    return Err(format!(
+                        "core ranks {v:?} name {} modes but the tensor has {ndim}",
+                        v.len()
+                    ));
+                }
+                v.clone()
+            }
+        };
+        if let Some(n) = ks.iter().position(|&k| k == 0) {
+            return Err(format!("core rank K_{n} must be at least 1"));
+        }
+        Ok(ks)
+    }
+
+    /// [`validate`](CoreRanks::validate) that panics on misuse — for
+    /// internal callers past the session/CLI validation boundary.
+    pub fn resolve(&self, ndim: usize) -> Vec<usize> {
+        self.validate(ndim).expect("core ranks match the tensor order")
+    }
+
+    /// All modes share one K?
+    pub fn is_uniform(&self) -> bool {
+        match self {
+            CoreRanks::Uniform(_) => true,
+            CoreRanks::PerMode(v) => v.windows(2).all(|w| w[0] == w[1]),
+        }
+    }
+
+    /// The largest K_n (bounds Lanczos iteration counts, RunRecord `k`).
+    pub fn max_rank(&self) -> usize {
+        match self {
+            CoreRanks::Uniform(k) => *k,
+            CoreRanks::PerMode(v) => v.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+impl From<usize> for CoreRanks {
+    fn from(k: usize) -> CoreRanks {
+        CoreRanks::Uniform(k)
+    }
+}
+
+impl From<Vec<usize>> for CoreRanks {
+    fn from(v: Vec<usize>) -> CoreRanks {
+        CoreRanks::PerMode(v)
+    }
+}
+
+impl fmt::Display for CoreRanks {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoreRanks::Uniform(k) => write!(f, "{k}"),
+            CoreRanks::PerMode(v) => {
+                let parts: Vec<String> = v.iter().map(|k| k.to_string()).collect();
+                write!(f, "{}", parts.join("x"))
+            }
+        }
+    }
+}
+
+/// K̂_n = Π_{j≠n} K_j — the penultimate-matrix width of mode `n`.
+pub fn khat_of(ks: &[usize], n: usize) -> usize {
+    ks.iter()
+        .enumerate()
+        .filter(|&(j, _)| j != n)
+        .map(|(_, &k)| k)
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_resolves_to_equal_ranks() {
+        assert_eq!(CoreRanks::Uniform(5).resolve(3), vec![5, 5, 5]);
+        assert!(CoreRanks::Uniform(5).is_uniform());
+        assert_eq!(CoreRanks::Uniform(5).to_string(), "5");
+    }
+
+    #[test]
+    fn per_mode_validates_length_and_zero() {
+        let c = CoreRanks::PerMode(vec![3, 4, 5]);
+        assert_eq!(c.resolve(3), vec![3, 4, 5]);
+        assert!(c.validate(4).is_err(), "length mismatch");
+        assert!(CoreRanks::PerMode(vec![3, 0, 5]).validate(3).is_err());
+        assert!(CoreRanks::Uniform(0).validate(3).is_err());
+        assert!(!c.is_uniform());
+        assert!(CoreRanks::PerMode(vec![4, 4, 4]).is_uniform());
+        assert_eq!(c.to_string(), "3x4x5");
+        assert_eq!(c.max_rank(), 5);
+    }
+
+    #[test]
+    fn khat_is_product_of_other_ranks() {
+        let ks = [3, 4, 5];
+        assert_eq!(khat_of(&ks, 0), 20);
+        assert_eq!(khat_of(&ks, 1), 15);
+        assert_eq!(khat_of(&ks, 2), 12);
+        let ks4 = [2, 3, 4, 5];
+        assert_eq!(khat_of(&ks4, 1), 40);
+    }
+}

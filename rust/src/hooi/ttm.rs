@@ -64,7 +64,8 @@ pub fn other_modes(ndim: usize, n: usize) -> Vec<usize> {
     (0..ndim).filter(|&m| m != n).collect()
 }
 
-/// K̂_n = Π_{j≠n} K_j for a uniform core length K.
+/// K̂_n = Π_{j≠n} K_j for a uniform core length K. See
+/// [`crate::hooi::ranks::khat_of`] for the per-mode general form.
 pub fn khat(k: usize, ndim: usize) -> usize {
     k.pow(ndim as u32 - 1)
 }
@@ -82,7 +83,7 @@ pub fn assemble_local_z(
     if engine.prefers_fused_ttm() {
         // §Perf: the native engine skips the batch materialization the
         // fixed-shape PJRT contract requires (ablate_runtime quantifies).
-        return assemble_local_z_fused(t, mode, elems, factors, k);
+        return assemble_local_z_fused(t, mode, elems, factors);
     }
     let ndim = t.ndim();
     let kh = khat(k, ndim);
@@ -200,20 +201,25 @@ pub(crate) fn flush_contrib_batch(
 /// Fused native assembly: accumulates each element's outer product
 /// directly into its Z^p row without materializing the contribution batch.
 /// Baseline for the runtime ablation (benches/ablate_runtime.rs).
+///
+/// The per-mode ranks are read off the factor matrices themselves
+/// (`factors[j].cols = K_j`), so this path is the correctness oracle for
+/// ragged `CoreRanks::PerMode` cores as well as the uniform case. The
+/// generalized K̂ layout keeps the earliest other mode fastest:
+/// 3-D column `ca + cb·K_fast`, 4-D `ca + cb·K_fast + cc·K_fast·K_slow`.
 pub fn assemble_local_z_fused(
     t: &SparseTensor,
     mode: usize,
     elems: &[u32],
     factors: &[Mat],
-    k: usize,
 ) -> LocalZ {
     let ndim = t.ndim();
-    let kh = khat(k, ndim);
+    let others = other_modes(ndim, mode);
+    let kh: usize = others.iter().map(|&m| factors[m].cols).product();
     let mut rows: Vec<u32> = elems.iter().map(|&e| t.coord(mode, e as usize)).collect();
     rows.sort_unstable();
     rows.dedup();
     let mut z = Mat::zeros(rows.len(), kh);
-    let others = other_modes(ndim, mode);
     for &eu in elems {
         let e = eu as usize;
         let l = t.coord(mode, e);
@@ -224,9 +230,10 @@ pub fn assemble_local_z_fused(
             2 => {
                 let ra = factors[others[0]].row(t.coord(others[0], e) as usize);
                 let rb = factors[others[1]].row(t.coord(others[1], e) as usize);
+                let ka = ra.len();
                 for (cb, &bv) in rb.iter().enumerate() {
                     let w = v * bv;
-                    let seg = &mut zrow[cb * k..(cb + 1) * k];
+                    let seg = &mut zrow[cb * ka..(cb + 1) * ka];
                     for (ca, &av) in ra.iter().enumerate() {
                         seg[ca] += w * av;
                     }
@@ -236,12 +243,13 @@ pub fn assemble_local_z_fused(
                 let ra = factors[others[0]].row(t.coord(others[0], e) as usize);
                 let rb = factors[others[1]].row(t.coord(others[1], e) as usize);
                 let rc = factors[others[2]].row(t.coord(others[2], e) as usize);
+                let (ka, kb) = (ra.len(), rb.len());
                 for (cc, &cv) in rc.iter().enumerate() {
                     let wv = v * cv;
                     for (cb, &bv) in rb.iter().enumerate() {
                         let w = wv * bv;
-                        let base = (cc * k + cb) * k;
-                        let seg = &mut zrow[base..base + k];
+                        let base = (cc * kb + cb) * ka;
+                        let seg = &mut zrow[base..base + ka];
                         for (ca, &av) in ra.iter().enumerate() {
                             seg[ca] += w * av;
                         }
@@ -257,11 +265,13 @@ pub fn assemble_local_z_fused(
 /// Dense reference: the full penultimate matrix Z_(n) (L_n × K̂), summing
 /// every element's contribution — the correctness oracle for the
 /// distributed assembly (global Z must equal the sum of local copies).
-pub fn dense_penultimate(t: &SparseTensor, mode: usize, factors: &[Mat], k: usize) -> Mat {
+/// Ranks are inferred from the factor widths like
+/// [`assemble_local_z_fused`].
+pub fn dense_penultimate(t: &SparseTensor, mode: usize, factors: &[Mat]) -> Mat {
     let all: Vec<u32> = (0..t.nnz() as u32).collect();
-    let local = assemble_local_z_fused(t, mode, &all, factors, k);
+    let local = assemble_local_z_fused(t, mode, &all, factors);
     // scatter local rows into the full L_n × K̂ matrix
-    let mut full = Mat::zeros(t.dims[mode] as usize, khat(k, t.ndim()));
+    let mut full = Mat::zeros(t.dims[mode] as usize, local.z.cols);
     for (r, &l) in local.rows.iter().enumerate() {
         full.row_mut(l as usize).copy_from_slice(local.z.row(r));
     }
@@ -292,7 +302,7 @@ mod tests {
         for mode in 0..3 {
             let a =
                 assemble_local_z(&t, mode, &elems, &factors, 5, &Engine::NativeBatched);
-            let b = assemble_local_z_fused(&t, mode, &elems, &factors, 5);
+            let b = assemble_local_z_fused(&t, mode, &elems, &factors);
             assert_eq!(a.rows, b.rows);
             assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
         }
@@ -305,7 +315,7 @@ mod tests {
         for mode in 0..4 {
             let a =
                 assemble_local_z(&t, mode, &elems, &factors, 3, &Engine::NativeBatched);
-            let b = assemble_local_z_fused(&t, mode, &elems, &factors, 3);
+            let b = assemble_local_z_fused(&t, mode, &elems, &factors);
             assert!(a.z.max_abs_diff(&b.z) < 1e-4, "mode {mode}");
         }
     }
@@ -319,7 +329,7 @@ mod tests {
         let p = 4;
         let assign: Vec<u32> = (0..t.nnz()).map(|_| rng.below(p) as u32).collect();
         let mode = 1;
-        let dense = dense_penultimate(&t, mode, &factors, 4);
+        let dense = dense_penultimate(&t, mode, &factors);
         let mut summed = Mat::zeros(dense.rows, dense.cols);
         for rank in 0..p as u32 {
             let elems: Vec<u32> = (0..t.nnz() as u32)
@@ -359,7 +369,7 @@ mod tests {
             .iter()
             .map(|&l| orthonormal_random(l as usize, k, &mut rng))
             .collect();
-        let dense = dense_penultimate(&t, 0, &factors, k);
+        let dense = dense_penultimate(&t, 0, &factors);
         let f1 = factors[1].row(1);
         let f2 = factors[2].row(3);
         for c2 in 0..k {
@@ -388,7 +398,7 @@ mod tests {
         let elems: Vec<u32> = (0..t.nnz() as u32).collect();
         for mode in 0..3 {
             let a = assemble_local_z(&t, mode, &elems, &factors, 4, &Engine::NativeBatched);
-            let b = assemble_local_z_fused(&t, mode, &elems, &factors, 4);
+            let b = assemble_local_z_fused(&t, mode, &elems, &factors);
             assert_eq!(a.rows, b.rows);
             assert!(a.z.max_abs_diff(&b.z) < 1e-3, "mode {mode}");
         }
@@ -400,7 +410,7 @@ mod tests {
         assert!(t.nnz() > Engine::NativeBatched.ttm_batch_size(4, 3));
         let elems: Vec<u32> = (0..t.nnz() as u32).collect();
         let a = assemble_local_z(&t, 1, &elems, &factors, 3, &Engine::NativeBatched);
-        let b = assemble_local_z_fused(&t, 1, &elems, &factors, 3);
+        let b = assemble_local_z_fused(&t, 1, &elems, &factors);
         assert_eq!(a.rows, b.rows);
         assert!(a.z.max_abs_diff(&b.z) < 1e-3);
     }

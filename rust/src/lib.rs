@@ -15,7 +15,35 @@
 //! the PJRT CPU client (`runtime`) — Python never runs at decomposition
 //! time.
 //!
-//! Quick tour:
+//! # Quick tour
+//!
+//! The public entry point is [`coordinator::TuckerSession`] — one typed
+//! builder for workloads, schemes, engines, kernels, executors and
+//! per-mode core ranks, returning a reusable decomposition handle:
+//!
+//! ```no_run
+//! use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
+//! use tucker_lite::hooi::CoreRanks;
+//!
+//! let workload = Workload::from_tns("tensor.tns".as_ref()).unwrap();
+//! let mut session = TuckerSession::builder(workload)
+//!     .scheme(SchemeChoice::Lite)
+//!     .ranks(16)
+//!     .core(CoreRanks::PerMode(vec![12, 12, 4])) // or .core(10) for uniform K
+//!     .build()
+//!     .unwrap();
+//! let d = session.decompose();
+//! println!("fit {:.4}, core {:?}", d.fit(), d.core_dims());
+//! let refined = session.decompose_more(1); // cached TTM plans, no re-prepare
+//! # let _ = refined;
+//! ```
+//!
+//! Typed options replace the `TUCKER_*` env vars (which remain as
+//! fallbacks — precedence table in [`util::env`]). Layer by layer:
+//!
+//! - [`coordinator`]: the [`coordinator::TuckerSession`] front door,
+//!   job specs, the pipeline leader (the legacy `run_scheme` shim), the
+//!   experiment harness for Figs 9–17.
 //! - [`tensor`]: COO sparse tensors, slice indexing, FROSTT I/O, the Fig 9
 //!   synthetic dataset analogues.
 //! - [`sched`]: the distribution schemes + the paper's metrics
@@ -24,11 +52,13 @@
 //!   with a scoped-thread parallel rank executor.
 //! - [`hooi`]: TTM via Eq. 1 contributions — precompiled per-rank plans
 //!   on the hot path (`hooi::plan`), lane-blocked 8-wide SIMD
-//!   microkernels with runtime AVX2/NEON dispatch (`hooi::kernel`) —
-//!   Lanczos-bidiagonalization SVD, factor-matrix transfer, the full
-//!   HOOI driver.
+//!   microkernels with runtime AVX2/NEON dispatch (`hooi::kernel`),
+//!   per-mode core ranks (`hooi::ranks`) — Lanczos-bidiagonalization
+//!   SVD, factor-matrix transfer, the split driver
+//!   (`prepare_modes` + `HooiState`) the session builds on.
 //! - [`runtime`]: PJRT artifact registry + padded-batch dispatch.
-//! - [`coordinator`]: job specs, the pipeline leader, experiment harness.
+//! - [`util`]: from-scratch substrates (args, config, rng, tables) and
+//!   the one [`util::env`] front door for every `TUCKER_*` variable.
 
 pub mod coordinator;
 pub mod dist;

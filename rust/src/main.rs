@@ -11,7 +11,9 @@
 //! hyperg --p N --k K --invocations I --scale S --engine pjrt|native
 //! --config FILE --alpha A --beta B --seed S
 
-use tucker_lite::coordinator::{experiments, JobSpec, RunRecord, Workload};
+use tucker_lite::coordinator::{
+    experiments, EngineChoice, JobSpec, RunRecord, SchemeChoice, TuckerSession, Workload,
+};
 use tucker_lite::runtime::Engine;
 use tucker_lite::sched;
 use tucker_lite::tensor::datasets;
@@ -28,7 +30,10 @@ fn main() {
             std::process::exit(2);
         })
     });
-    let job = JobSpec::from_sources(config.as_ref(), &args);
+    let job = JobSpec::from_sources(config.as_ref(), &args).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     match args.subcommand() {
         Some("decompose") => decompose(&job, &args),
         Some("distribute") => distribute(&job),
@@ -53,9 +58,10 @@ fn usage() {
          USAGE: tucker-lite <decompose|distribute|datasets|exp|bench-kernel> [options]\n\
          \n\
          Options:\n\
-           --dataset NAME|file.tns   one of the Fig 9 analogues or a FROSTT file\n\
+           --dataset NAME|FILE       one of the Fig 9 analogues or a FROSTT file\n\
            --scheme  lite|coarseg|coarseg-bpf|mediumg|hyperg\n\
            --p N --k K --invocations I --scale S --seed S\n\
+           --core K0,K1,K2           per-mode core ranks (overrides --k)\n\
            --engine pjrt|native      compute backend (default pjrt)\n\
            --config FILE             key = value config (CLI overrides)\n\
            --alpha A --beta B        network model parameters\n\
@@ -80,37 +86,50 @@ fn decompose(job: &JobSpec, _args: &Args) {
         eprintln!("{e}");
         std::process::exit(2);
     });
-    let scheme = sched::by_name(&job.scheme).unwrap_or_else(|| {
+    let scheme = SchemeChoice::by_name(&job.scheme).unwrap_or_else(|| {
         eprintln!("unknown scheme {:?}", job.scheme);
         std::process::exit(2);
     });
+    let core = job.core_ranks();
     eprintln!(
         "# {} nnz={} dims={:?} scheme={} P={} K={} inv={}",
         w.name,
         w.tensor.nnz(),
         w.tensor.dims,
-        scheme.name(),
+        job.scheme,
         job.p,
-        job.k,
+        core,
         job.invocations
     );
-    let engine = make_engine(job);
-    let rec = tucker_lite::coordinator::run_scheme(
-        &w,
-        scheme.as_ref(),
-        job.p,
-        job.k,
-        job.invocations,
-        &engine,
-        job.net,
-        job.seed,
-    );
-    print_record(&rec);
+    // make_engine keeps the fallback diagnostic (`# engine: ...`) on the
+    // session path too
+    let mut session = TuckerSession::builder(w)
+        .scheme(scheme)
+        .ranks(job.p)
+        .core(core)
+        .invocations(job.invocations)
+        .engine(EngineChoice::Custom(make_engine(job)))
+        .net(job.net)
+        .seed(job.seed)
+        .build()
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    let d = session.decompose();
+    print_record(&d.record);
 }
 
 fn print_record(rec: &RunRecord) {
+    let core: Vec<String> = rec.core.iter().map(|k| k.to_string()).collect();
     let mut t = Table::new(
-        &format!("{} / {} (P={}, K={})", rec.workload, rec.scheme, rec.p, rec.k),
+        &format!(
+            "{} / {} (P={}, core={})",
+            rec.workload,
+            rec.scheme,
+            rec.p,
+            core.join("x")
+        ),
         &["quantity", "value"],
     );
     t.row(vec!["HOOI time (simulated)".into(), fmt_secs(rec.hooi_secs)]);
@@ -149,17 +168,22 @@ fn distribute(job: &JobSpec) {
             std::process::exit(2);
         })]
     };
+    let core = job.core_ranks();
+    let ks = core.validate(w.tensor.ndim()).unwrap_or_else(|e| {
+        eprintln!("invalid core ranks: {e}");
+        std::process::exit(2);
+    });
+    let khv: Vec<f64> = (0..w.tensor.ndim())
+        .map(|n| tucker_lite::hooi::khat_of(&ks, n) as f64)
+        .collect();
     let mut t = Table::new(
-        &format!("distribution metrics — {} P={} K={}", w.name, job.p, job.k),
+        &format!("distribution metrics — {} P={} K={}", w.name, job.p, core),
         &[
             "scheme", "dist time", "TTM bal", "SVD load", "SVD bal", "SVD vol",
             "FM vol", "mem MB",
         ],
     );
-    for rec in experiments::distribution_records(&w, &schemes, job.p, job.k, job.seed) {
-        let khv: Vec<f64> = (0..w.tensor.ndim())
-            .map(|_| (job.k as f64).powi(w.tensor.ndim() as i32 - 1))
-            .collect();
+    for rec in experiments::distribution_records(&w, &schemes, job.p, &core, job.seed) {
         t.row(vec![
             rec.scheme.clone(),
             fmt_secs(rec.dist_secs),
@@ -180,6 +204,13 @@ fn exp(job: &JobSpec, args: &Args) {
         eprintln!("exp requires --fig N (9..17)");
         std::process::exit(2);
     }
+    if job.core.is_some() {
+        eprintln!(
+            "error: the figure harness reproduces the paper's uniform-K runs; \
+             use --k (per-mode --core applies to decompose/distribute)"
+        );
+        std::process::exit(2);
+    }
     let mut cfg = if args.flag("quick") {
         experiments::ExpConfig::quick()
     } else {
@@ -197,6 +228,13 @@ fn exp(job: &JobSpec, args: &Args) {
 /// Microbenchmark: PJRT vs native on the TTM contribution kernel + the
 /// matvec tiles (the two artifact families).
 fn bench_kernel(job: &JobSpec, args: &Args) {
+    if job.core.is_some() {
+        eprintln!(
+            "error: bench-kernel measures the uniform-K engine kernels; \
+             use --k (per-mode --core applies to decompose/distribute)"
+        );
+        std::process::exit(2);
+    }
     let k = job.k;
     let reps: usize = args.parse_or("reps", 20);
     let (pjrt, label) = Engine::pjrt_or_native();

@@ -66,11 +66,12 @@ impl Registry {
         Ok(Registry { dir: dir.to_path_buf(), entries })
     }
 
-    /// Default artifact location: `$TUCKER_ARTIFACTS` or `./artifacts`.
+    /// Default artifact location: `$TUCKER_ARTIFACTS` or `./artifacts`
+    /// (env read centralized in `util::env`).
     pub fn default_dir() -> PathBuf {
-        std::env::var("TUCKER_ARTIFACTS")
+        crate::util::env::raw(crate::util::env::ARTIFACTS)
             .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
     pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {

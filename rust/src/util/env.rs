@@ -1,0 +1,180 @@
+//! One front door for every `TUCKER_*` environment variable.
+//!
+//! Before the session API existed, the env reads were scattered across
+//! five modules (`hooi::kernel`, `dist::cluster`, `hooi::driver`,
+//! `runtime::artifacts`, the bench harness), each with its own parsing
+//! and fallback behavior. They are centralized here so the precedence
+//! contract is stated — and tested — exactly once:
+//!
+//! | source                     | wins over |
+//! |----------------------------|-----------|
+//! | typed builder option       | env var   |
+//! | env var (valid value)      | default   |
+//! | env var (invalid value)    | nothing — warns on stderr, default used |
+//!
+//! [`resolve`] implements that table; the typed accessors below it are
+//! the per-variable entry points the rest of the crate uses.
+
+/// Microkernel override: `scalar|portable|avx2|neon` (`hooi::Kernel`).
+pub const KERNEL: &str = "TUCKER_KERNEL";
+/// Rank executor override: `serial|parallel` (`dist::SimCluster`).
+pub const PHASE_EXECUTOR: &str = "TUCKER_PHASE_EXECUTOR";
+/// Fig 17 accounting override: `coo|plan` (`hooi::TensorAccounting`).
+pub const MEM_ACCOUNTING: &str = "TUCKER_MEM_ACCOUNTING";
+/// PJRT artifact directory (`runtime::artifacts`).
+pub const ARTIFACTS: &str = "TUCKER_ARTIFACTS";
+/// Bench harness: any value selects the tiny smoke configuration.
+pub const BENCH_QUICK: &str = "TUCKER_BENCH_QUICK";
+/// Bench harness: dataset scale multiplier.
+pub const BENCH_SCALE: &str = "TUCKER_BENCH_SCALE";
+/// Bench harness: `pjrt|native` engine selection.
+pub const BENCH_ENGINE: &str = "TUCKER_BENCH_ENGINE";
+
+/// Raw trimmed value of an environment variable; `None` when unset,
+/// empty, or not valid UTF-8.
+pub fn raw(name: &str) -> Option<String> {
+    match std::env::var(name) {
+        Ok(s) => {
+            let t = s.trim();
+            if t.is_empty() {
+                None
+            } else {
+                Some(t.to_string())
+            }
+        }
+        Err(_) => None,
+    }
+}
+
+/// Is the variable set at all (any value, including empty)? Used by the
+/// bench harness's presence-only flags ([`BENCH_QUICK`]).
+pub fn is_set(name: &str) -> bool {
+    std::env::var_os(name).is_some()
+}
+
+/// The precedence contract: typed option > env var > default. An env
+/// value `parse` rejects is reported on stderr (naming the variable and
+/// the value) and the default is used — an invalid override must never
+/// silently change results.
+pub fn resolve<T>(
+    option: Option<T>,
+    name: &str,
+    parse: impl Fn(&str) -> Option<T>,
+    default: impl FnOnce() -> T,
+) -> T {
+    resolve_with(option, name, raw(name), parse, default)
+}
+
+/// [`resolve`] with the env value passed in — the testable seam (unit
+/// tests exercise the precedence table without mutating the process
+/// environment, which is unsound under the parallel test harness).
+fn resolve_with<T>(
+    option: Option<T>,
+    name: &str,
+    env_value: Option<String>,
+    parse: impl Fn(&str) -> Option<T>,
+    default: impl FnOnce() -> T,
+) -> T {
+    if let Some(v) = option {
+        return v;
+    }
+    match env_value {
+        Some(s) => parse(&s).unwrap_or_else(|| {
+            eprintln!("{name}={s:?} not recognized; using the default");
+            default()
+        }),
+        None => default(),
+    }
+}
+
+/// [`PHASE_EXECUTOR`] as "should the parallel rank executor be used"
+/// (`option` from a typed executor choice; env accepts `serial` /
+/// `parallel`; default: parallel when the host has more than one core).
+pub fn phase_executor_parallel(option: Option<bool>) -> bool {
+    resolve(option, PHASE_EXECUTOR, parse_executor, || {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1
+    })
+}
+
+fn parse_executor(s: &str) -> Option<bool> {
+    if s.eq_ignore_ascii_case("serial") {
+        Some(false)
+    } else if s.eq_ignore_ascii_case("parallel") {
+        Some(true)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The tests go through `resolve_with` — never `std::env::set_var`,
+    // which is a getenv/setenv data race under the parallel test
+    // harness (other tests read the environment concurrently).
+
+    fn parse_u32(s: &str) -> Option<u32> {
+        s.parse().ok()
+    }
+
+    #[test]
+    fn typed_option_beats_env() {
+        let got = resolve_with(
+            Some(1u32),
+            "TUCKER_TEST",
+            Some("2".to_string()),
+            parse_u32,
+            || 3,
+        );
+        assert_eq!(got, 1);
+    }
+
+    #[test]
+    fn env_beats_default_when_valid() {
+        let got =
+            resolve_with(None, "TUCKER_TEST", Some("7".to_string()), parse_u32, || 3);
+        assert_eq!(got, 7);
+    }
+
+    #[test]
+    fn invalid_env_falls_back_to_default() {
+        let got = resolve_with(
+            None,
+            "TUCKER_TEST",
+            Some("not-a-number".to_string()),
+            parse_u32,
+            || 3,
+        );
+        assert_eq!(got, 3);
+    }
+
+    #[test]
+    fn unset_env_uses_default() {
+        let got = resolve_with(None, "TUCKER_TEST", None, parse_u32, || 42);
+        assert_eq!(got, 42);
+        // reading a variable that was never set is race-free and must
+        // come back as None/default through the public entry points too
+        assert_eq!(raw("TUCKER_TEST_NEVER_SET_ANYWHERE"), None);
+        assert!(!is_set("TUCKER_TEST_NEVER_SET_ANYWHERE"));
+        let got =
+            resolve(None, "TUCKER_TEST_NEVER_SET_ANYWHERE", parse_u32, || 42u32);
+        assert_eq!(got, 42);
+    }
+
+    #[test]
+    fn executor_parse_accepts_both_names_case_insensitively() {
+        assert_eq!(parse_executor("serial"), Some(false));
+        assert_eq!(parse_executor("SERIAL"), Some(false));
+        assert_eq!(parse_executor("parallel"), Some(true));
+        assert_eq!(parse_executor("threads"), None);
+    }
+
+    #[test]
+    fn executor_typed_choice_beats_env() {
+        // phase_executor_parallel reads the real PHASE_EXECUTOR variable;
+        // only exercise the Some(..) arm, which never touches it.
+        assert!(phase_executor_parallel(Some(true)));
+        assert!(!phase_executor_parallel(Some(false)));
+    }
+}

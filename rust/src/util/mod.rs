@@ -4,6 +4,7 @@
 pub mod args;
 pub mod check;
 pub mod config;
+pub mod env;
 pub mod json;
 pub mod rng;
 pub mod table;

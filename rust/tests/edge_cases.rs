@@ -70,8 +70,8 @@ fn duplicate_coordinates_are_additive() {
         .iter()
         .map(|&l| orthonormal_random(l as usize, k, &mut rng))
         .collect();
-    let za = dense_penultimate(&a, 0, &factors, k);
-    let zb = dense_penultimate(&b, 0, &factors, k);
+    let za = dense_penultimate(&a, 0, &factors);
+    let zb = dense_penultimate(&b, 0, &factors);
     assert!(za.max_abs_diff(&zb) < 1e-5);
 }
 
@@ -138,8 +138,9 @@ fn empty_rank_in_ttm_assembly() {
 #[test]
 fn hooi_config_defaults_sane() {
     let cfg = HooiConfig::default();
-    assert_eq!(cfg.k, 10);
+    assert_eq!(cfg.core, tucker_lite::hooi::CoreRanks::Uniform(10));
     assert_eq!(cfg.invocations, 1);
+    assert!(cfg.kernel.is_none() && cfg.accounting.is_none());
 }
 
 #[test]

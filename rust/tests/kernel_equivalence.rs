@@ -67,7 +67,7 @@ fn check_kernel_case(
             );
             // and both agree with the element-order oracle (coarser
             // tolerance: different summation order)
-            let oracle = assemble_local_z_fused(&t, mode, elems, &factors, k);
+            let oracle = assemble_local_z_fused(&t, mode, elems, &factors);
             assert_eq!(got.rows, oracle.rows);
             assert!(got.z.max_abs_diff(&oracle.z) < 1e-4, "mode {mode} vs oracle");
             ws_scalar.recycle(want.z);
@@ -162,7 +162,7 @@ fn padded_lanes_never_contribute_to_z() {
         for kernel in tiled_kernels() {
             let mut ws = PlanWorkspace::with_kernel(kernel);
             let got = plan.assemble_fused(&factors, &mut ws);
-            let oracle = assemble_local_z_fused(&t, mode, &elems, &factors, 5);
+            let oracle = assemble_local_z_fused(&t, mode, &elems, &factors);
             assert_eq!(got.rows, oracle.rows);
             assert!(
                 got.z.max_abs_diff(&oracle.z) < 1e-4,

@@ -4,7 +4,9 @@
 //! parallel rank executor must be bit-identical to serial execution.
 
 use tucker_lite::dist::{cat, SimCluster};
-use tucker_lite::hooi::{assemble_local_z_fused, run_hooi, HooiConfig, LocalZ, PlanWorkspace, TtmPlan};
+use tucker_lite::hooi::{
+    assemble_local_z_fused, run_hooi, CoreRanks, HooiConfig, LocalZ, PlanWorkspace, TtmPlan,
+};
 use tucker_lite::linalg::{orthonormal_random, Mat};
 use tucker_lite::runtime::Engine;
 use tucker_lite::sched::{Lite, Scheme};
@@ -39,7 +41,7 @@ fn check_case(dims: Vec<u32>, nnz: usize, k: usize, p: usize, seed: u64) {
     for mode in 0..t.ndim() {
         for elems in &per_rank {
             let plan = TtmPlan::build(&t, mode, elems, k);
-            let want = assemble_local_z_fused(&t, mode, elems, &factors, k);
+            let want = assemble_local_z_fused(&t, mode, elems, &factors);
             let fused = plan.assemble_fused(&factors, &mut ws);
             assert_eq!(fused.rows, want.rows, "mode {mode} rows");
             assert!(
@@ -90,7 +92,7 @@ fn explicitly_empty_rank_matches_oracle() {
     let plan = TtmPlan::build(&t, 1, &[], 4);
     let mut ws = PlanWorkspace::new();
     let local = plan.assemble(&factors, &Engine::Native, &mut ws);
-    let want = assemble_local_z_fused(&t, 1, &[], &factors, 4);
+    let want = assemble_local_z_fused(&t, 1, &[], &factors);
     assert_eq!(local.rows, want.rows);
     assert!(local.rows.is_empty());
     assert_eq!(local.z.rows, 0);
@@ -141,7 +143,12 @@ fn hooi_end_to_end_identical_under_both_executors() {
     let t = SparseTensor::random(vec![18, 14, 10], 700, &mut rng);
     let idx = build_all(&t);
     let dist = Lite.distribute(&t, &idx, 4, &mut Rng::new(3));
-    let cfg = HooiConfig { k: 4, invocations: 2, seed: 11 };
+    let cfg = HooiConfig {
+        core: CoreRanks::Uniform(4),
+        invocations: 2,
+        seed: 11,
+        ..HooiConfig::default()
+    };
     let mut serial = SimCluster::serial(4);
     let out_s = run_hooi(&t, &idx, &dist, &Engine::Native, &mut serial, &cfg);
     let mut parallel = SimCluster::new(4).with_parallel(true);

@@ -1,0 +1,261 @@
+//! `TuckerSession` integration: the builder → decompose → decompose_more
+//! round trip (plan reuse, bit-exact continuation) and the per-mode core
+//! rank capability end-to-end (factor/core shapes, uniform equivalence,
+//! fit monotonicity, ragged kp-tile plan shapes).
+
+use tucker_lite::coordinator::{
+    EngineChoice, ExecutorChoice, KernelChoice, SchemeChoice, TuckerSession, Workload,
+};
+use tucker_lite::hooi::{
+    assemble_local_z_fused, pad_to_lanes, CoreRanks, Kernel, PlanWorkspace, TtmPlan,
+};
+use tucker_lite::linalg::{orthonormal_random, Mat};
+use tucker_lite::runtime::Engine;
+use tucker_lite::tensor::datasets;
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+
+fn tiny_workload() -> Workload {
+    let spec = datasets::by_name("enron").unwrap().scaled(0.02);
+    Workload::from_spec(&spec, 1.0)
+}
+
+/// A dense multilinear-rank-(2,2,2) tensor: fits exactly at K_n ≥ 2.
+fn planted_rank2() -> Workload {
+    let (lu, lv, lw) = (10usize, 9, 8);
+    let mut rng = Rng::new(31);
+    let mut t = SparseTensor::new(vec![lu as u32, lv as u32, lw as u32]);
+    let comp: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..2)
+        .map(|_| {
+            (
+                (0..lu).map(|_| rng.normal() as f32).collect(),
+                (0..lv).map(|_| rng.normal() as f32).collect(),
+                (0..lw).map(|_| rng.normal() as f32).collect(),
+            )
+        })
+        .collect();
+    for i in 0..lu {
+        for j in 0..lv {
+            for l in 0..lw {
+                let v: f32 =
+                    comp.iter().map(|(u, w, s)| u[i] * w[j] * s[l]).sum();
+                t.push(&[i as u32, j as u32, l as u32], v);
+            }
+        }
+    }
+    Workload::from_tensor("planted_rank2", t)
+}
+
+#[test]
+fn round_trip_reuses_plans_and_matches_fresh_run() {
+    // builder → decompose() (2 invocations) → decompose_more(1): plans
+    // compiled exactly once, and the result matches a fresh 3-invocation
+    // session's fit within 1e-6 (the continuation is bit-exact, so the
+    // tolerance is slack).
+    let w = tiny_workload();
+    let build = |invocations: usize| {
+        TuckerSession::builder(w.clone())
+            .scheme(SchemeChoice::Lite)
+            .ranks(4)
+            .core(CoreRanks::Uniform(4))
+            .invocations(invocations)
+            .seed(17)
+            .build()
+            .expect("valid round-trip configuration")
+    };
+
+    let mut incremental = build(2);
+    let d2 = incremental.decompose();
+    let d3 = incremental.decompose_more(1);
+    assert_eq!(
+        incremental.plan_builds(),
+        1,
+        "decompose_more must not re-run prepare_modes"
+    );
+
+    let mut fresh = build(3);
+    let d_fresh = fresh.decompose();
+    assert!(
+        (d3.fit() - d_fresh.fit()).abs() < 1e-6,
+        "continued {} vs fresh {}",
+        d3.fit(),
+        d_fresh.fit()
+    );
+    // factor matrices agree exactly, not just the scalar fit
+    for (a, b) in d3.factors.iter().zip(&d_fresh.factors) {
+        assert_eq!(a.data, b.data);
+    }
+    assert_eq!(d3.core.data, d_fresh.core.data);
+    // the intermediate result is a genuine 2-invocation decomposition
+    assert!(d2.fit().is_finite());
+}
+
+#[test]
+fn per_mode_core_produces_correct_dimensions_end_to_end() {
+    let w = tiny_workload();
+    let mut s = TuckerSession::builder(w.clone())
+        .ranks(4)
+        .core(CoreRanks::PerMode(vec![3, 5, 4]))
+        .seed(2)
+        .build()
+        .unwrap();
+    let d = s.decompose();
+    assert_eq!(d.core_dims(), &[3, 5, 4]);
+    for (n, f) in d.factors.iter().enumerate() {
+        assert_eq!(f.rows, w.tensor.dims[n] as usize, "mode {n} rows");
+        assert_eq!(f.cols, [3, 5, 4][n], "mode {n} cols");
+    }
+    // core flattened as G_(2): K_2 × K_0·K_1
+    assert_eq!(d.core.rows, 4);
+    assert_eq!(d.core.cols, 15);
+    assert_eq!(d.record.core, vec![3, 5, 4]);
+    assert_eq!(d.record.k, 5, "record.k is the largest rank");
+    assert!(d.fit().is_finite() && (0.0..=1.0).contains(&d.fit()));
+    // core_at decodes the flattened layout consistently
+    let mut sum_sq = 0.0f64;
+    for j0 in 0..3 {
+        for j1 in 0..5 {
+            for j2 in 0..4 {
+                sum_sq += (d.core_at(&[j0, j1, j2]) as f64).powi(2);
+            }
+        }
+    }
+    assert!((sum_sq - d.core.frob_norm().powi(2)).abs() < sum_sq.max(1.0) * 1e-4);
+}
+
+#[test]
+fn per_mode_equal_ranks_match_uniform_exactly() {
+    let w = tiny_workload();
+    let run = |core: CoreRanks| {
+        TuckerSession::builder(w.clone())
+            .ranks(3)
+            .core(core)
+            .seed(11)
+            .build()
+            .unwrap()
+            .decompose()
+    };
+    let uni = run(CoreRanks::Uniform(4));
+    let per = run(CoreRanks::PerMode(vec![4, 4, 4]));
+    assert_eq!(uni.fit(), per.fit(), "PerMode([K;N]) ≡ Uniform(K)");
+    for (a, b) in uni.factors.iter().zip(&per.factors) {
+        assert_eq!(a.data, b.data);
+    }
+    assert_eq!(uni.core.data, per.core.data);
+}
+
+#[test]
+fn fit_grows_as_one_mode_rank_grows() {
+    // planted multilinear rank (2,2,2): K = (2,2,1) cannot capture both
+    // components, (2,2,2) captures everything (fit ≈ 1)
+    let w = planted_rank2();
+    let run = |core: Vec<usize>| {
+        TuckerSession::builder(w.clone())
+            .ranks(2)
+            .core(CoreRanks::PerMode(core))
+            .invocations(2)
+            .seed(3)
+            .build()
+            .unwrap()
+            .decompose()
+            .fit()
+    };
+    let low = run(vec![2, 2, 1]);
+    let high = run(vec![2, 2, 2]);
+    assert!(high > 0.99, "full rank captures everything: {high}");
+    assert!(
+        high >= low - 1e-6,
+        "fit must not shrink as K_2 grows: {low} -> {high}"
+    );
+    assert!(low < 0.99, "rank-deficient core cannot be exact: {low}");
+}
+
+#[test]
+fn reconstruct_at_recovers_planted_tensor() {
+    let w = planted_rank2();
+    let mut s = TuckerSession::builder(w.clone())
+        .ranks(2)
+        .core(CoreRanks::Uniform(2))
+        .invocations(2)
+        .seed(5)
+        .build()
+        .unwrap();
+    let d = s.decompose();
+    assert!(d.fit() > 0.995, "exact multilinear rank: {}", d.fit());
+    let t = &w.tensor;
+    let scale = t.vals.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    for e in (0..t.nnz()).step_by(97) {
+        let idx: Vec<usize> = (0..t.ndim()).map(|m| t.coord(m, e) as usize).collect();
+        let got = d.reconstruct_at(&idx);
+        assert!(
+            (got - t.vals[e]).abs() < 5e-2 * scale.max(1.0),
+            "entry {idx:?}: {got} vs {}",
+            t.vals[e]
+        );
+    }
+}
+
+#[test]
+fn ragged_core_plan_kp_tile_shapes() {
+    // plan kp-tiling under a ragged core: kp tracks the *fast* other
+    // mode's rank, K̂ the product of the others
+    let mut rng = Rng::new(7);
+    let t = SparseTensor::random(vec![20, 15, 10], 500, &mut rng);
+    let core = CoreRanks::PerMode(vec![3, 9, 5]);
+    let elems: Vec<u32> = (0..500).collect();
+    let want = [
+        // (mode, oks, khat)
+        (0usize, vec![9usize, 5], 45usize),
+        (1, vec![3, 5], 15),
+        (2, vec![3, 9], 27),
+    ];
+    let factors: Vec<Mat> = t
+        .dims
+        .iter()
+        .zip([3usize, 9, 5])
+        .map(|(&l, k)| orthonormal_random(l as usize, k, &mut rng))
+        .collect();
+    let mut ws = PlanWorkspace::new();
+    let mut ws_scalar = PlanWorkspace::with_kernel(Kernel::Scalar);
+    for (mode, oks, kh) in want {
+        let plan = TtmPlan::build_with(&t, mode, &elems, &core);
+        assert_eq!(plan.oks, oks, "mode {mode} other-mode ranks");
+        assert_eq!(plan.khat, kh, "mode {mode} khat");
+        assert_eq!(plan.kp, pad_to_lanes(oks[0]), "mode {mode} kp tile");
+        assert!(!plan.uniform_core());
+        // ragged assembly matches the generalized element-order oracle,
+        // on both the tiled and the scalar kernel
+        let oracle = assemble_local_z_fused(&t, mode, &elems, &factors);
+        let tiled = plan.assemble_fused(&factors, &mut ws);
+        assert_eq!(tiled.rows, oracle.rows);
+        assert_eq!(tiled.z.cols, kh);
+        assert!(tiled.z.max_abs_diff(&oracle.z) < 1e-4, "tiled mode {mode}");
+        ws.recycle(tiled.z);
+        let scalar = plan.assemble_fused(&factors, &mut ws_scalar);
+        assert!(scalar.z.max_abs_diff(&oracle.z) < 1e-4, "scalar mode {mode}");
+        ws_scalar.recycle(scalar.z);
+        // engine dispatch: ragged plans route around the batched
+        // contract instead of violating it
+        let via_engine = plan.assemble(&factors, &Engine::NativeBatched, &mut ws);
+        assert!(via_engine.z.max_abs_diff(&oracle.z) < 1e-4);
+        ws.recycle(via_engine.z);
+    }
+}
+
+#[test]
+fn typed_executor_and_kernel_choices_apply() {
+    let w = tiny_workload();
+    let mut s = TuckerSession::builder(w)
+        .ranks(3)
+        .core(4usize)
+        .engine(EngineChoice::Native)
+        .executor(ExecutorChoice::Serial)
+        .kernel(KernelChoice::Fixed(Kernel::Scalar))
+        .seed(1)
+        .build()
+        .unwrap();
+    let d = s.decompose();
+    assert_eq!(d.record.executor, "serial");
+    assert_eq!(d.record.workers, 1);
+    assert_eq!(d.record.kernel, "scalar");
+}
