@@ -51,7 +51,7 @@ fn main() {
     );
     let mut t1 = Table::new(
         "e2e — all schemes through PJRT (flickr, 4-D)",
-        &["scheme", "HOOI(sim)", "TTM", "SVD", "comm", "fit"],
+        &["scheme", "HOOI(sim)", "TTM", "SVD", "core", "comm", "fit"],
     );
     let mut fits1 = Vec::new();
     for scheme in sched::all_schemes() {
@@ -71,6 +71,7 @@ fn main() {
             fmt_secs(rec.hooi_secs),
             fmt_secs(rec.ttm_secs),
             fmt_secs(rec.svd_secs),
+            fmt_secs(rec.core_secs),
             fmt_secs(rec.comm_secs),
             format!("{:.4}", d.fit()),
         ]);

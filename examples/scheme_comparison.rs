@@ -43,7 +43,7 @@ fn main() {
     let mut t = Table::new(
         "scheme comparison",
         &[
-            "scheme", "HOOI", "TTM", "SVD", "comm", "TTM bal", "SVD load",
+            "scheme", "HOOI", "TTM", "SVD", "core", "comm", "TTM bal", "SVD load",
             "vol(SVD)", "vol(FM)", "mem MB", "dist time",
         ],
     );
@@ -63,6 +63,7 @@ fn main() {
             fmt_secs(rec.hooi_secs),
             fmt_secs(rec.ttm_secs),
             fmt_secs(rec.svd_secs),
+            fmt_secs(rec.core_secs),
             fmt_secs(rec.comm_secs),
             format!("{:.2}", rec.ttm_balance),
             format!("{:.2}", rec.svd_load_norm),

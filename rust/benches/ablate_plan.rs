@@ -22,9 +22,11 @@ mod common;
 use std::time::Instant;
 use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
 use tucker_lite::dist::{cat, SimCluster};
-use tucker_lite::hooi::{assemble_local_z_fused, Kernel, PlanWorkspace, TtmPlan};
+use tucker_lite::hooi::{
+    assemble_local_z_fused, prepare_modes, CoreRanks, Kernel, PlanWorkspace, TtmPlan,
+};
 use tucker_lite::linalg::{orthonormal_random, Mat};
-use tucker_lite::tensor::SparseTensor;
+use tucker_lite::tensor::{SparseTensor, TensorDelta};
 use tucker_lite::util::rng::Rng;
 use tucker_lite::util::table::{fmt_secs, Table};
 
@@ -271,4 +273,69 @@ fn main() {
     ]);
     t3.print();
     let _ = t3.save_csv("ablate_plan_session");
+
+    // --- 4. streaming ingest: incremental plan invalidation vs a full
+    // re-prepare on the mutated tensor. The incremental path splices or
+    // rebuilds only the dirty (mode, rank) plans; the baseline is what a
+    // session without `ingest` would pay — `prepare_modes` over
+    // everything, every delta. ---
+    let nnz = if quick { 30_000 } else { 200_000 };
+    let t = SparseTensor::random(vec![500, 300, 70], nnz, &mut rng);
+    let mut session = TuckerSession::builder(Workload::from_tensor("ablate_ingest", t))
+        .scheme(SchemeChoice::Lite)
+        .ranks(p)
+        .core(k)
+        .seed(9)
+        .build()
+        .expect("valid ingest ablation session");
+    let _ = session.decompose();
+    let mut t4 = Table::new(
+        &format!(
+            "ablate_plan — streaming ingest: incremental invalidation vs full \
+             re-prepare (nnz={nnz}, P={p}, K={k})"
+        ),
+        &[
+            "appends/batch",
+            "ingest (incremental)",
+            "plans touched",
+            "full prepare_modes",
+            "speedup",
+        ],
+    );
+    for batch in [16usize, 256, 4096] {
+        let dims = session.workload().tensor.dims.clone();
+        let mut delta = TensorDelta::new();
+        for _ in 0..batch {
+            let coord: Vec<u32> =
+                dims.iter().map(|&l| rng.below(l as u64) as u32).collect();
+            delta = delta.append(&coord, rng.f32() * 2.0 - 1.0);
+        }
+        let t0 = Instant::now();
+        let rep = session.ingest(&delta).expect("valid ablation delta");
+        let ingest_secs = t0.elapsed().as_secs_f64();
+        // the full-rebuild baseline compiles every (mode, rank) plan of
+        // the mutated tensor under the now-extended placement
+        let w2 = Workload::from_tensor(
+            "ablate_ingest_full",
+            session.workload().tensor.clone(),
+        );
+        let t0 = Instant::now();
+        let modes = prepare_modes(
+            &w2.tensor,
+            &w2.idx,
+            session.distribution(),
+            &CoreRanks::Uniform(k),
+        );
+        let full_secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(modes.len());
+        t4.row(vec![
+            batch.to_string(),
+            fmt_secs(ingest_secs),
+            format!("{}/{}", rep.plans_touched(), rep.plan_count),
+            fmt_secs(full_secs),
+            format!("{:.2}x", full_secs / ingest_secs),
+        ]);
+    }
+    t4.print();
+    let _ = t4.save_csv("ablate_plan_ingest");
 }

@@ -109,13 +109,13 @@ pub fn fig10(cfg: &ExpConfig, engine: &Engine) -> Vec<Table> {
     tables
 }
 
-/// Fig 11: HOOI time breakup (TTM / SVD compute / communication) on the
-/// first three tensors at (P_hi, K).
+/// Fig 11: HOOI time breakup (TTM / SVD / core compute / communication)
+/// on the first three tensors at (P_hi, K).
 pub fn fig11(cfg: &ExpConfig, engine: &Engine) -> Table {
     let workloads: Vec<Workload> = medium_workloads(cfg).into_iter().take(3).collect();
     let mut t = Table::new(
         &format!("Fig 11 — time breakup, ranks={} K={}", cfg.p_hi, cfg.k),
-        &["tensor", "scheme", "TTM", "SVD", "comm", "total", "produced-by"],
+        &["tensor", "scheme", "TTM", "SVD", "core", "comm", "total", "produced-by"],
     );
     for w in &workloads {
         for scheme in sched::all_schemes() {
@@ -127,6 +127,7 @@ pub fn fig11(cfg: &ExpConfig, engine: &Engine) -> Table {
                 rec.scheme.clone(),
                 fmt_secs(rec.ttm_secs),
                 fmt_secs(rec.svd_secs),
+                fmt_secs(rec.core_secs),
                 fmt_secs(rec.comm_secs),
                 fmt_secs(rec.hooi_secs),
                 // concurrency provenance: executor × workers, kernel,

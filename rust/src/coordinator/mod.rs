@@ -12,6 +12,6 @@ pub use experiments::{run_figure, ExpConfig};
 pub use job::JobSpec;
 pub use leader::{run_distribution, run_scheme, RunRecord, Workload, WorkloadError};
 pub use session::{
-    Decomposition, EngineChoice, ExecutorChoice, KernelChoice, SchemeChoice,
-    SessionError, TuckerSession, TuckerSessionBuilder,
+    Decomposition, EngineChoice, ExecutorChoice, IngestReport, KernelChoice,
+    SchemeChoice, SessionError, TuckerSession, TuckerSessionBuilder,
 };

@@ -38,18 +38,32 @@
 //! The session owns the compiled distribution and the per-rank TTM
 //! plans; [`TuckerSession::decompose_more`] continues the decomposition
 //! (factors, RNG stream, rank workspaces all carry over bit-exactly)
-//! without re-running `prepare_modes` — the groundwork for the
-//! ROADMAP's plan-invalidation/streaming item.
+//! without re-running `prepare_modes`.
+//!
+//! ## Streaming updates
+//!
+//! A long-running session ingests nonzero deltas without rebuilding its
+//! world: [`TuckerSession::ingest`] applies a
+//! [`TensorDelta`](crate::tensor::TensorDelta) to the held tensor,
+//! extends each mode's placement with Lite's per-bin load discipline
+//! (`sched::incremental`), and splices or rebuilds *only* the
+//! (mode, rank) plans the delta touches — never a full `prepare_modes`.
+//! [`TuckerSession::plan_rebuilds`] counts the touched plans, mirroring
+//! [`TuckerSession::plan_builds`]. Ingesting then decomposing is
+//! bit-identical to building a fresh session on the mutated tensor
+//! under the same placement (`tests/ingest.rs` pins this).
 
 use super::leader::{collect_record, RunRecord, Workload};
 use crate::dist::{cat, NetModel, SimCluster};
 use crate::hooi::{
-    charge_plan_compilation, prepare_modes, CoreRanks, HooiState, Kernel, ModeState,
-    TensorAccounting,
+    charge_plan_compilation, prepare_modes_with_executor, CoreRanks, HooiState, Kernel,
+    ModeDelta, ModeState, TensorAccounting,
 };
 use crate::linalg::Mat;
 use crate::runtime::Engine;
 use crate::sched::{self, Distribution, Scheme};
+use crate::tensor::slices::build_all;
+use crate::tensor::{DeltaError, TensorDelta};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -314,8 +328,17 @@ impl TuckerSessionBuilder {
         let mut rng = Rng::new(self.seed);
         let dist =
             scheme.distribute(&self.workload.tensor, &self.workload.idx, self.p, &mut rng);
-        let modes =
-            prepare_modes(&self.workload.tensor, &self.workload.idx, &dist, &self.core);
+        // plan compilation honors the executor choice (serial stays
+        // serial end to end — the timing-noise contract)
+        let parallel =
+            crate::util::env::phase_executor_parallel(self.executor.as_option());
+        let modes = prepare_modes_with_executor(
+            &self.workload.tensor,
+            &self.workload.idx,
+            &dist,
+            &self.core,
+            parallel,
+        );
         Ok(TuckerSession {
             workload: self.workload,
             dist,
@@ -330,7 +353,9 @@ impl TuckerSessionBuilder {
             seed: self.seed,
             modes,
             plan_builds: 1,
+            plan_rebuilds: 0,
             plan_charge_pending: true,
+            pending_ingest_secs: 0.0,
             state: None,
         })
     }
@@ -353,7 +378,9 @@ pub struct TuckerSession {
     seed: u64,
     modes: Vec<ModeState>,
     plan_builds: usize,
+    plan_rebuilds: usize,
     plan_charge_pending: bool,
+    pending_ingest_secs: f64,
     state: Option<HooiState>,
 }
 
@@ -390,10 +417,32 @@ impl TuckerSession {
         self.plan_builds
     }
 
-    fn new_cluster(&self) -> SimCluster {
+    /// How many (mode, rank) plans [`ingest`](TuckerSession::ingest)
+    /// has spliced or rebuilt over the session's lifetime — the
+    /// observable form of the incremental-invalidation contract: a
+    /// localized delta keeps this far below
+    /// `ndim × P × ingest_count`, where a full re-prepare would not.
+    pub fn plan_rebuilds(&self) -> usize {
+        self.plan_rebuilds
+    }
+
+    /// The prepared per-mode states (sharers, σ_n, FM pattern, rank
+    /// element lists and compiled TTM plans) — read-only introspection
+    /// for tests, benches and memory tooling.
+    pub fn mode_states(&self) -> &[ModeState] {
+        &self.modes
+    }
+
+    fn new_cluster(&mut self) -> SimCluster {
         let mut cluster = SimCluster::new(self.dist.p).with_net(self.net);
         if let Some(parallel) = self.executor.as_option() {
             cluster = cluster.with_parallel(parallel);
+        }
+        if self.pending_ingest_secs > 0.0 {
+            // partial-rebuild work from ingest is real per-rank compute:
+            // charge it (once) to the next run, like plan compilation
+            cluster.elapsed.add(cat::TTM, self.pending_ingest_secs);
+            self.pending_ingest_secs = 0.0;
         }
         cluster
     }
@@ -468,6 +517,143 @@ impl TuckerSession {
         self.finish(cluster)
     }
 
+    /// Apply a streaming [`TensorDelta`] to the held tensor and
+    /// incrementally revalidate the session around it:
+    ///
+    /// 1. the delta is applied atomically to the workload's tensor
+    ///    (copy-on-write if the `Arc<Workload>` is shared) and, on
+    ///    appends, its slice indices are refreshed;
+    /// 2. each mode's placement is extended over the appended elements
+    ///    with Lite's per-bin load discipline
+    ///    ([`crate::sched::incremental::extend_policy`]) — the ⌈|E′|/P⌉ limit
+    ///    is preserved unconditionally, and the Theorem 6.1 sharing
+    ///    bounds are revalidated (violations come back in
+    ///    [`IngestReport::rebalance_modes`]: the signal to schedule a
+    ///    full, cheap, Lite redistribution);
+    /// 3. only the *dirty* (mode, rank) plans — those owning a touched
+    ///    element under that mode's policy — are spliced in place or
+    ///    recompiled ([`ModeState::apply_delta`]); clean plans are not
+    ///    touched and `prepare_modes` never reruns.
+    ///
+    /// Ingesting into a fresh session and then decomposing is
+    /// bit-identical to building a new session on the mutated tensor
+    /// under the same placement. With a decomposition in flight the
+    /// factors are kept as a warm start; the first sweep after ingest
+    /// runs over the updated plans (take outcomes only after that
+    /// sweep). On error the session — tensor included — is unchanged.
+    pub fn ingest(&mut self, delta: &TensorDelta) -> Result<IngestReport, DeltaError> {
+        let ndim = self.workload.tensor.ndim();
+        let plan_count = ndim * self.dist.p;
+        let (n_appended, n_changed, n_removed) = delta.counts();
+        let mut report = IngestReport {
+            appended: n_appended,
+            changed: n_changed,
+            removed: n_removed,
+            plans_spliced: 0,
+            plans_rebuilt: 0,
+            plan_count,
+            rebalance_modes: Vec::new(),
+            rebuild_secs: 0.0,
+        };
+        if delta.is_empty() {
+            return Ok(report);
+        }
+        // 1. mutate the tensor; refresh the slice indices on appends.
+        // The CSR slice layout keeps every slice's ids contiguous, so
+        // folding a batch in is an O(nnz) merge either way — the rebuild
+        // is the same asymptotic cost as any in-place splice of the
+        // offsets/elems arrays and stays bit-identical to a fresh build.
+        let applied = {
+            let w = Arc::make_mut(&mut self.workload);
+            let applied = delta.apply(&mut w.tensor, &w.idx)?;
+            if !applied.appended.is_empty() {
+                w.idx = build_all(&w.tensor);
+            }
+            applied
+        };
+        let structural = !applied.appended.is_empty();
+        // 2. placement + bounds revalidation
+        if structural {
+            let nnz_after = self.workload.tensor.nnz();
+            let t = &self.workload.tensor;
+            if self.dist.uni {
+                // uni-policy schemes store N clones of one assignment:
+                // extend once and share the tail so the single-copy
+                // invariant (and Fig 17 accounting) stays true
+                let coords: Vec<u32> = applied
+                    .appended
+                    .iter()
+                    .map(|&e| t.coord(0, e as usize))
+                    .collect();
+                sched::incremental::extend_policy(
+                    &mut self.dist.policies[0],
+                    &self.modes[0].sharers,
+                    &coords,
+                    nnz_after,
+                );
+                let from = self.dist.policies[0].assign.len() - coords.len();
+                let tail = self.dist.policies[0].assign[from..].to_vec();
+                for pol in self.dist.policies[1..].iter_mut() {
+                    pol.assign.extend_from_slice(&tail);
+                }
+            } else {
+                for n in 0..ndim {
+                    let coords: Vec<u32> = applied
+                        .appended
+                        .iter()
+                        .map(|&e| t.coord(n, e as usize))
+                        .collect();
+                    sched::incremental::extend_policy(
+                        &mut self.dist.policies[n],
+                        &self.modes[n].sharers,
+                        &coords,
+                        nnz_after,
+                    );
+                }
+            }
+            for n in 0..ndim {
+                let bounds = sched::incremental::theorem_bounds(
+                    &self.workload.idx[n],
+                    &self.dist.policies[n],
+                );
+                if !bounds.all_ok() {
+                    report.rebalance_modes.push(n);
+                }
+            }
+        }
+        // 3. bucket the touched ids by (mode, rank); splice/rebuild
+        // exactly those plans
+        let parallel =
+            crate::util::env::phase_executor_parallel(self.executor.as_option());
+        for n in 0..ndim {
+            let mut md = ModeDelta::empty(self.dist.p);
+            {
+                let assign = &self.dist.policies[n].assign;
+                for &e in &applied.changed {
+                    md.changed[assign[e as usize] as usize].push(e);
+                }
+                for &e in &applied.appended {
+                    md.appended[assign[e as usize] as usize].push(e);
+                }
+            }
+            let stats = self.modes[n].apply_delta(
+                &self.workload.tensor,
+                &self.workload.idx[n],
+                &self.dist,
+                n,
+                &self.core,
+                &md,
+                parallel,
+            );
+            report.plans_spliced += stats.spliced;
+            report.plans_rebuilt += stats.rebuilt;
+            report.rebuild_secs += stats.rebuild_secs;
+        }
+        self.plan_rebuilds += report.plans_spliced + report.plans_rebuilt;
+        self.pending_ingest_secs += report.rebuild_secs;
+        Ok(report)
+    }
+
     fn finish(&mut self, mut cluster: SimCluster) -> Decomposition {
         let state = self.state.as_ref().expect("decomposition state in flight");
         let out = state.outcome(
@@ -485,6 +671,40 @@ impl TuckerSession {
             sigma: out.sigma,
             record,
         }
+    }
+}
+
+/// What one [`TuckerSession::ingest`] call did — the observability
+/// record of the incremental invalidation subsystem.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Nonzeros appended.
+    pub appended: usize,
+    /// Values changed (removals not included).
+    pub changed: usize,
+    /// Nonzeros removed (kept as explicit zeros — see
+    /// [`TensorDelta`](crate::tensor::TensorDelta)).
+    pub removed: usize,
+    /// Dirty plans updated in place (value/run splice).
+    pub plans_spliced: usize,
+    /// Dirty plans recompiled from their element list.
+    pub plans_rebuilt: usize,
+    /// Total (mode, rank) plans held by the session — the denominator
+    /// for "how localized was this delta".
+    pub plan_count: usize,
+    /// Modes whose Theorem 6.1 sharing bounds no longer hold after
+    /// placement: the signal to schedule a full (cheap, Lite)
+    /// redistribution. Empty while streaming stays within bounds.
+    pub rebalance_modes: Vec<usize>,
+    /// Sum over modes of the splice/rebuild makespans (charged to the
+    /// next run's TTM bucket, like plan compilation).
+    pub rebuild_secs: f64,
+}
+
+impl IngestReport {
+    /// Plans this ingest touched (spliced + rebuilt).
+    pub fn plans_touched(&self) -> usize {
+        self.plans_spliced + self.plans_rebuilt
     }
 }
 
@@ -615,6 +835,51 @@ mod tests {
         assert_eq!(d.record.scheme, "Lite");
         assert!(d.record.hooi_secs > 0.0);
         assert_eq!(s.plan_builds(), 1);
+    }
+
+    #[test]
+    fn ingest_localized_delta_touches_one_plan_per_mode() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w)
+            .ranks(4)
+            .core(CoreRanks::Uniform(3))
+            .seed(9)
+            .build()
+            .unwrap();
+        assert_eq!(s.plan_rebuilds(), 0);
+        let rep = s.ingest(&TensorDelta::new().append(&[0, 0, 0], 0.5)).unwrap();
+        assert_eq!(rep.plan_count, 12, "3 modes x 4 ranks");
+        // one appended element dirties exactly one rank per mode
+        assert_eq!(rep.plans_touched(), 3);
+        assert!(rep.plans_touched() < rep.plan_count, "localized delta");
+        assert_eq!(s.plan_rebuilds(), 3);
+        assert_eq!(s.plan_builds(), 1, "never a full re-prepare");
+        let d = s.decompose();
+        assert!(d.fit().is_finite());
+    }
+
+    #[test]
+    fn ingest_rejects_bad_deltas_atomically() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w)
+            .ranks(3)
+            .core(CoreRanks::Uniform(3))
+            .build()
+            .unwrap();
+        let nnz = s.workload().tensor.nnz();
+        let dim0 = s.workload().tensor.dims[0];
+        // out-of-range append plus a valid one: neither applies
+        let err = s
+            .ingest(&TensorDelta::new().append(&[0, 0, 0], 1.0).append(&[dim0, 0, 0], 1.0))
+            .unwrap_err();
+        assert!(matches!(err, crate::tensor::DeltaError::CoordOutOfRange { .. }));
+        assert_eq!(s.workload().tensor.nnz(), nnz, "tensor untouched");
+        assert_eq!(s.plan_rebuilds(), 0);
+        // the session still decomposes
+        assert!(s.decompose().fit().is_finite());
+        // an empty delta is a no-op
+        let rep = s.ingest(&TensorDelta::new()).unwrap();
+        assert_eq!(rep.plans_touched(), 0);
     }
 
     #[test]

@@ -27,6 +27,8 @@ pub mod cat {
     pub const TTM: &str = "ttm";
     /// SVD (Lanczos) compute.
     pub const SVD: &str = "svd";
+    /// End-of-run core computation (G = F̃^T·Z partials).
+    pub const CORE: &str = "core";
     /// Distribution construction (Fig 16).
     pub const DIST: &str = "dist";
     /// Oracle query communication (x/y reductions).
@@ -74,9 +76,11 @@ pub struct SimCluster {
     pub wall: Buckets,
     /// Per-rank busy seconds of the most recent phase (diagnostics).
     pub last_phase: Vec<f64>,
-    /// Kernel names the most recent compute phase's ranks reported
-    /// (rank order; see [`SimCluster::record_kernels`]).
-    pub last_kernels: Vec<&'static str>,
+    /// Kernel names the ranks reported, keyed by compute category (rank
+    /// order within each entry; see [`SimCluster::record_kernels`]).
+    /// Keyed so one category's provenance (e.g. SVD) never reports
+    /// another's kernels (e.g. the TTM microkernel names).
+    kernels: Vec<(String, Vec<&'static str>)>,
     parallel: bool,
 }
 
@@ -95,7 +99,7 @@ impl SimCluster {
             busy: Buckets::new(),
             wall: Buckets::new(),
             last_phase: Vec::new(),
-            last_kernels: Vec::new(),
+            kernels: Vec::new(),
             parallel,
         }
     }
@@ -133,10 +137,25 @@ impl SimCluster {
         }
     }
 
-    /// Record which microkernel each rank of the most recent compute
-    /// phase executed (the HOOI driver reports its TTM workspaces here).
-    pub fn record_kernels(&mut self, names: Vec<&'static str>) {
-        self.last_kernels = names;
+    /// Record which microkernel each rank executes for one compute
+    /// category (the HOOI driver reports its TTM workspaces under
+    /// [`cat::TTM`]). Later records for the same category replace
+    /// earlier ones; categories that never report stay `"unrecorded"`.
+    pub fn record_kernels(&mut self, cat: &str, names: Vec<&'static str>) {
+        if let Some(e) = self.kernels.iter_mut().find(|(c, _)| c == cat) {
+            e.1 = names;
+        } else {
+            self.kernels.push((cat.to_string(), names));
+        }
+    }
+
+    /// Kernel names recorded for one category (empty if never reported).
+    fn kernels_of(&self, cat: &str) -> &[&'static str] {
+        self.kernels
+            .iter()
+            .find(|(c, _)| c == cat)
+            .map(|(_, names)| names.as_slice())
+            .unwrap_or(&[])
     }
 
     /// Concurrency provenance for one compute category — see
@@ -144,8 +163,9 @@ impl SimCluster {
     pub fn concurrency_report(&self, cat: &str) -> ConcurrencyReport {
         let busy = self.busy.get(cat);
         let wall = self.wall.get(cat);
-        let kernel = match self.last_kernels.first() {
-            Some(&k) if self.last_kernels.iter().all(|&n| n == k) => k,
+        let recorded = self.kernels_of(cat);
+        let kernel = match recorded.first() {
+            Some(&k) if recorded.iter().all(|&n| n == k) => k,
             Some(_) => "mixed",
             None => "unrecorded",
         };
@@ -434,16 +454,31 @@ mod tests {
         c.phase("w", |_| {
             std::hint::black_box((0..10_000).sum::<usize>());
         });
-        c.record_kernels(vec!["portable"; 3]);
+        c.record_kernels("w", vec!["portable"; 3]);
         let rep = c.concurrency_report("w");
         assert_eq!(rep.kernel, "portable");
         // serial executor: wall == busy, so the measured speedup is ~1
         assert!((rep.speedup - 1.0).abs() < 1e-9);
-        c.record_kernels(vec!["portable", "avx2", "portable"]);
+        c.record_kernels("w", vec!["portable", "avx2", "portable"]);
         assert_eq!(c.concurrency_report("w").kernel, "mixed");
         let par = SimCluster::new(8).with_parallel(true);
         let rep = par.concurrency_report("w");
         assert_eq!(rep.executor, "parallel");
         assert!(rep.workers >= 1 && rep.workers <= 8);
+    }
+
+    #[test]
+    fn kernel_provenance_is_keyed_by_category() {
+        // regression: SVD provenance must never report TTM kernel names
+        let mut c = SimCluster::serial(2);
+        c.record_kernels(cat::TTM, vec!["avx2"; 2]);
+        assert_eq!(c.concurrency_report(cat::TTM).kernel, "avx2");
+        assert_eq!(c.concurrency_report(cat::SVD).kernel, "unrecorded");
+        c.record_kernels(cat::SVD, vec!["engine-batched"; 2]);
+        assert_eq!(c.concurrency_report(cat::SVD).kernel, "engine-batched");
+        assert_eq!(c.concurrency_report(cat::TTM).kernel, "avx2");
+        // re-recording a category replaces its entry
+        c.record_kernels(cat::TTM, vec!["scalar"; 2]);
+        assert_eq!(c.concurrency_report(cat::TTM).kernel, "scalar");
     }
 }

@@ -133,14 +133,32 @@ pub struct ModeState {
 
 /// Build the per-mode state (sharers, σ_n, FM pattern, rank elements,
 /// and the precompiled TTM plans — the sweep-invariant part of the TTM
-/// hot path, paid once here and amortized over every invocation).
+/// hot path, paid once here and amortized over every invocation). Plan
+/// compilation runs on the executor the environment selects
+/// (`TUCKER_PHASE_EXECUTOR`); typed callers use
+/// [`prepare_modes_with_executor`].
 pub fn prepare_modes(
     t: &SparseTensor,
     idx: &[SliceIndex],
     dist: &Distribution,
     core: &CoreRanks,
 ) -> Vec<ModeState> {
-    prepare_modes_impl(t, idx, dist, core, true)
+    let parallel = crate::util::env::phase_executor_parallel(None);
+    prepare_modes_impl(t, idx, dist, core, true, parallel)
+}
+
+/// [`prepare_modes`] with an explicit executor choice for the per-rank
+/// plan compilation (`true` = scoped-thread pool, `false` = serial).
+/// The session threads its `ExecutorChoice` through here so plan_secs
+/// timings honor the serial-executor contract on busy hosts.
+pub fn prepare_modes_with_executor(
+    t: &SparseTensor,
+    idx: &[SliceIndex],
+    dist: &Distribution,
+    core: &CoreRanks,
+    parallel: bool,
+) -> Vec<ModeState> {
+    prepare_modes_impl(t, idx, dist, core, true, parallel)
 }
 
 /// Metrics/memory-only variant: skips TTM plan compilation. For
@@ -152,7 +170,7 @@ pub fn prepare_modes_unplanned(
     dist: &Distribution,
     core: &CoreRanks,
 ) -> Vec<ModeState> {
-    prepare_modes_impl(t, idx, dist, core, false)
+    prepare_modes_impl(t, idx, dist, core, false, false)
 }
 
 fn prepare_modes_impl(
@@ -161,6 +179,7 @@ fn prepare_modes_impl(
     dist: &Distribution,
     core: &CoreRanks,
     build_plans: bool,
+    parallel: bool,
 ) -> Vec<ModeState> {
     let ks = core.resolve(t.ndim());
     (0..t.ndim())
@@ -171,12 +190,13 @@ fn prepare_modes_impl(
             let elems = dist.policies[n].rank_elements(&idx[n]);
             let (plans, plan_secs): (Vec<TtmPlan>, Vec<f64>) = if build_plans {
                 // per-rank plans are independent: compile them on the
-                // scoped worker pool, keeping per-rank build times honest
+                // scoped worker pool (honoring the executor choice),
+                // keeping per-rank build times honest
                 let tasks: Vec<_> = elems
                     .iter()
                     .map(|es| move || TtmPlan::build_with(t, n, es, core))
                     .collect();
-                crate::dist::run_scoped(tasks, true).into_iter().unzip()
+                crate::dist::run_scoped(tasks, parallel).into_iter().unzip()
             } else {
                 (Vec::new(), vec![0.0; dist.p])
             };
@@ -192,6 +212,185 @@ fn prepare_modes_impl(
             }
         })
         .collect()
+}
+
+/// One mode's share of an applied [`TensorDelta`]: the touched element
+/// ids bucketed by the rank that owns them under this mode's policy.
+/// Built by `TuckerSession::ingest`; the (mode, rank) pairs with a
+/// non-empty bucket are exactly the *dirty* plans.
+///
+/// [`TensorDelta`]: crate::tensor::TensorDelta
+#[derive(Debug, Clone)]
+pub struct ModeDelta {
+    /// Appended element ids per rank, ascending (id order).
+    pub appended: Vec<Vec<u32>>,
+    /// Value-changed element ids per rank (removals included), ascending.
+    pub changed: Vec<Vec<u32>>,
+}
+
+impl ModeDelta {
+    /// An empty delta over `p` ranks.
+    pub fn empty(p: usize) -> ModeDelta {
+        ModeDelta { appended: vec![Vec::new(); p], changed: vec![Vec::new(); p] }
+    }
+
+    /// Any structural (appended) updates?
+    pub fn structural(&self) -> bool {
+        self.appended.iter().any(|v| !v.is_empty())
+    }
+
+    /// Ranks whose plan this delta touches.
+    pub fn dirty_ranks(&self) -> usize {
+        self.appended
+            .iter()
+            .zip(&self.changed)
+            .filter(|(a, c)| !a.is_empty() || !c.is_empty())
+            .count()
+    }
+}
+
+/// What [`ModeState::apply_delta`] did to one mode's plans.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaStats {
+    /// Plans updated in place (value splice / run splice).
+    pub spliced: usize,
+    /// Plans recompiled from their element list.
+    pub rebuilt: usize,
+    /// Makespan (max per-rank seconds) of this mode's splice/rebuild
+    /// work — the partial-rebuild analogue of `plan_secs`, charged by
+    /// the session to the next run's TTM bucket.
+    pub rebuild_secs: f64,
+}
+
+/// `(row, a, b, c)` of element `e` in `plan`'s coordinate roles (`c` is
+/// 0 for 3-D plans).
+fn plan_coords(t: &SparseTensor, plan: &TtmPlan, e: usize) -> (u32, u32, u32, u32) {
+    let c = if plan.others.len() == 3 {
+        t.coord(plan.others[2], e)
+    } else {
+        0
+    };
+    (
+        t.coord(plan.mode, e),
+        t.coord(plan.others[0], e),
+        t.coord(plan.others[1], e),
+        c,
+    )
+}
+
+/// Apply one rank's share of a delta to its plan: splice when the batch
+/// is small relative to the plan (changes update slots in place, appends
+/// re-pad their runs), recompile from the element list otherwise.
+/// Returns whether the plan was rebuilt (vs spliced).
+fn apply_rank_delta(
+    plan: &mut TtmPlan,
+    t: &SparseTensor,
+    mode: usize,
+    core: &CoreRanks,
+    elems: &[u32],
+    appended: &[u32],
+    changed: &[u32],
+) -> bool {
+    let updates = appended.len() + changed.len();
+    // splice only genuinely small batches: every structural splice that
+    // opens a run or grows a lane block shifts the stream tail
+    // (O(plan) per append), so an absolute cap — not just a fraction of
+    // the plan — keeps the worst case at ~64·O(plan), well under the
+    // O(|E| log |E|) recompile. Either path yields the identical
+    // stream; this is purely a performance choice.
+    if updates <= 64 && updates * 4 <= plan.nnz().max(1) {
+        let mut ok = true;
+        for &e in changed {
+            let (row, a, b, c) = plan_coords(t, plan, e as usize);
+            if !plan.splice_value(row, a, b, c, t.vals[e as usize]) {
+                // a changed element missing from its plan means the
+                // plan drifted from the tensor — recompiling from the
+                // element list restores consistency either way
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            for &e in appended {
+                let (row, a, b, c) = plan_coords(t, plan, e as usize);
+                plan.splice_append(row, a, b, c, t.vals[e as usize]);
+            }
+            return false;
+        }
+    }
+    *plan = TtmPlan::build_with(t, mode, elems, core);
+    true
+}
+
+impl ModeState {
+    /// Apply one mode's share of an ingested delta: refresh the
+    /// structural state (sharers, σ_n, FM pattern, rank element lists)
+    /// when elements were appended, then splice or rebuild exactly the
+    /// dirty ranks' plans — never the clean ones, never a full
+    /// `prepare_modes`. Dirty ranks run on the scoped worker pool
+    /// (`parallel` follows the session's executor choice) and their
+    /// per-rank seconds are reported as [`DeltaStats::rebuild_secs`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_delta(
+        &mut self,
+        t: &SparseTensor,
+        idx_n: &SliceIndex,
+        dist: &Distribution,
+        n: usize,
+        core: &CoreRanks,
+        md: &ModeDelta,
+        parallel: bool,
+    ) -> DeltaStats {
+        if md.structural() {
+            // appends can open new (slice, rank) sharer pairs and move
+            // row ownership/transfer patterns; these rebuilds are
+            // O(nnz + L_n) — cheap next to plan compilation — and
+            // deterministic, so they match a fresh prepare exactly
+            self.sharers = Sharers::build(idx_n, &dist.policies[n]);
+            self.rowmap = RowMap::build(&self.sharers, dist.p);
+            self.fm = fm_pattern(idx_n, dist, n, &self.rowmap, self.k_n);
+            for (rank, ids) in md.appended.iter().enumerate() {
+                for &e in ids {
+                    // keep the rank list in slice-grouped order: the new
+                    // id goes after every element of its slice (they all
+                    // have smaller ids) and before the next slice
+                    let l = t.coord(n, e as usize);
+                    let list = &mut self.elems[rank];
+                    let pos =
+                        list.partition_point(|&x| t.coord(n, x as usize) <= l);
+                    list.insert(pos, e);
+                }
+            }
+        }
+        if self.plans.is_empty() {
+            // metrics-only states ([`prepare_modes_unplanned`]) hold no
+            // plans to invalidate
+            return DeltaStats::default();
+        }
+        let ModeState { plans, elems, .. } = self;
+        let mut tasks = Vec::new();
+        for ((plan, es), (app, chg)) in plans
+            .iter_mut()
+            .zip(elems.iter())
+            .zip(md.appended.iter().zip(md.changed.iter()))
+        {
+            if app.is_empty() && chg.is_empty() {
+                continue;
+            }
+            tasks.push(move || apply_rank_delta(plan, t, n, core, es, app, chg));
+        }
+        let timed = crate::dist::run_scoped(tasks, parallel);
+        let mut stats = DeltaStats::default();
+        for (was_rebuilt, secs) in timed {
+            if was_rebuilt {
+                stats.rebuilt += 1;
+            } else {
+                stats.spliced += 1;
+            }
+            stats.rebuild_secs = stats.rebuild_secs.max(secs);
+        }
+        stats
+    }
 }
 
 /// Everything a HOOI run mutates across sweeps: the factor matrices,
@@ -253,6 +452,7 @@ impl HooiState {
     /// contract), so it is recorded once rather than per phase.
     pub fn record_kernels(&self, engine: &Engine, cluster: &mut SimCluster) {
         cluster.record_kernels(
+            cat::TTM,
             self.workspaces
                 .iter()
                 .map(|ws| {
@@ -353,7 +553,7 @@ impl HooiState {
         if !self.last_locals.is_empty() {
             let f_last = &self.factors[n_last];
             let last_locals = &self.last_locals;
-            cluster.phase("core", |rank| {
+            cluster.phase(cat::CORE, |rank| {
                 let local = &last_locals[rank];
                 for (r, &l) in local.rows.iter().enumerate() {
                     let zrow = local.z.row(r);
@@ -406,7 +606,10 @@ pub fn run_hooi(
     cluster: &mut SimCluster,
     cfg: &HooiConfig,
 ) -> HooiOutcome {
-    let modes = prepare_modes(t, idx, dist, &cfg.core);
+    // plan compilation follows the cluster's executor so serial runs
+    // stay serial end to end (timing-noise contract)
+    let modes =
+        prepare_modes_with_executor(t, idx, dist, &cfg.core, cluster.is_parallel());
     // plan compilation is per-rank work a real implementation pays once;
     // charge its per-mode makespan to the TTM bucket so simulated totals
     // keep accounting for all per-rank compute
@@ -632,6 +835,9 @@ mod tests {
         let (_, cluster) = run(&t, &idx, 4, 4, 1);
         assert!(cluster.elapsed.get(cat::TTM) > 0.0);
         assert!(cluster.elapsed.get(cat::SVD) > 0.0);
+        // the core phase charges its own category (folded into the
+        // leader's hooi_secs — it used to be dropped from every total)
+        assert!(cluster.elapsed.get(cat::CORE) > 0.0);
         assert!(cluster.volume.get(cat::COMM_FM) >= 0.0);
         // oracle volume present when slices are shared (random tensor: yes)
         assert!(cluster.volume.get(cat::COMM_SVD) > 0.0);

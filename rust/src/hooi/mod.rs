@@ -13,12 +13,13 @@ pub mod ttm;
 
 pub use driver::{
     charge_plan_compilation, memory_model, memory_model_with, prepare_modes,
-    prepare_modes_unplanned, run_hooi, HooiConfig, HooiOutcome, HooiState, MemoryReport,
-    ModeState, TensorAccounting,
+    prepare_modes_unplanned, prepare_modes_with_executor, run_hooi, DeltaStats,
+    HooiConfig, HooiOutcome, HooiState, MemoryReport, ModeDelta, ModeState,
+    TensorAccounting,
 };
 pub use fm::{fm_pattern, FmPattern};
 pub use kernel::{pad_to_lanes, Kernel, LANES};
 pub use lanczos::{lanczos_svd, LanczosResult, Oracle};
-pub use plan::{PlanWorkspace, TtmPlan};
+pub use plan::{check_lane_invariants, check_lane_invariants_for, PlanWorkspace, TtmPlan};
 pub use ranks::{khat_of, CoreRanks};
 pub use ttm::{assemble_local_z, assemble_local_z_fused, dense_penultimate, khat, LocalZ};

@@ -154,7 +154,11 @@ impl PlanWorkspace {
 
 /// Precompiled assembly plan for one (mode, rank): lane-blocked,
 /// run-sorted element streams (layout documented in the module docs).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares the full stream encoding — the form the
+/// incremental-invalidation tests use to pin "spliced plan ≡ freshly
+/// built plan" bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TtmPlan {
     pub mode: usize,
     /// Core rank K_j of each *other* mode, in [`TtmPlan::others`] order
@@ -250,13 +254,17 @@ impl TtmPlan {
             cursor[r] += 1;
         }
         // within each row: sort by the slowest-varying other-mode
-        // coordinate(s) so equal-coordinate runs share slow factor rows
+        // coordinate(s) so equal-coordinate runs share slow factor rows.
+        // The sort must be *stable*: equal-key elements keep element-id
+        // order (the per-rank lists are id-ordered within a slice), which
+        // is what lets `splice_append` place a streamed element at its
+        // run's tail and produce the exact stream a fresh build would.
         for r in 0..rows.len() {
             let seg = &mut order[row_ptr[r] as usize..row_ptr[r + 1] as usize];
             if others.len() == 2 {
-                seg.sort_unstable_by_key(|&e| t.coord(others[1], e as usize));
+                seg.sort_by_key(|&e| t.coord(others[1], e as usize));
             } else {
-                seg.sort_unstable_by_key(|&e| {
+                seg.sort_by_key(|&e| {
                     (t.coord(others[2], e as usize), t.coord(others[1], e as usize))
                 });
             }
@@ -381,6 +389,193 @@ impl TtmPlan {
             + self.slot_ptr.len()
             + self.fa.len()
             + self.vals.len()) as u64
+    }
+
+    /// Update the stored value of the element at
+    /// `(row, a, b, c)` in place — the value-splice path of the
+    /// incremental invalidation subsystem (`c` is ignored for 3-D
+    /// plans; pass 0). Returns `false` when the coordinate is not in
+    /// this plan.
+    ///
+    /// With duplicate coordinates the *first* matching slot is updated;
+    /// run slots are in element-id order (stable build sort), so this
+    /// is exactly the element `TensorDelta`'s first-match change
+    /// semantics names — the spliced stream equals a fresh build on the
+    /// mutated tensor bit-for-bit. Setting a value to `0.0` (removal)
+    /// keeps the slot: an explicit zero contributes nothing to any
+    /// accumulation.
+    pub fn splice_value(&mut self, row: u32, a: u32, b: u32, c: u32, new_val: f32) -> bool {
+        let j = match self.find_run(row, b, c) {
+            Some(j) => j,
+            None => return false,
+        };
+        let slo = self.slot_ptr[j] as usize;
+        for s in slo..slo + self.run_len[j] as usize {
+            if self.fa[s] == a {
+                self.vals[s] = new_val;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Structurally insert one *appended* element into the plan — the
+    /// run-splice path of the incremental invalidation subsystem (`c` is
+    /// ignored for 3-D plans; pass 0). The element joins the tail of its
+    /// `(row, c, b)` run, re-padding the run's lane block (a spare
+    /// padding slot absorbs it in place; a full block grows by one
+    /// [`LANES`] block); missing runs/outer-runs/rows are created at
+    /// their sorted positions.
+    ///
+    /// Appended elements have ids past every existing one, and the
+    /// build sort is stable, so splicing a batch in id order yields the
+    /// exact stream `build_with` would produce on the grown element
+    /// list — the bit-identity contract `TuckerSession::ingest` pins.
+    pub fn splice_append(&mut self, row: u32, a: u32, b: u32, c: u32, val: f32) {
+        let four = self.others.len() == 3;
+        match self.rows.binary_search(&row) {
+            Ok(r) => {
+                if four {
+                    self.splice_append_4d_row(r, a, b, c, val);
+                } else {
+                    let (jlo, jhi) =
+                        (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+                    match self.run_b[jlo..jhi].binary_search(&b) {
+                        Ok(off) => self.append_to_run(jlo + off, a, val),
+                        Err(off) => {
+                            self.insert_run_at(jlo + off, b, a, val);
+                            for x in &mut self.row_runs[r + 1..] {
+                                *x += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            Err(r) => {
+                // brand-new local row with a single new run (and, for
+                // 4-D, a single new outer run)
+                self.rows.insert(r, row);
+                if four {
+                    let oj = self.row_runs[r] as usize;
+                    let j = self.outer_ptr[oj] as usize;
+                    self.insert_run_at(j, b, a, val);
+                    self.insert_outer_at(oj, c);
+                } else {
+                    let j = self.row_runs[r] as usize;
+                    self.insert_run_at(j, b, a, val);
+                }
+                let boundary = self.row_runs[r] + 1;
+                self.row_runs.insert(r + 1, boundary);
+                for x in &mut self.row_runs[r + 2..] {
+                    *x += 1;
+                }
+            }
+        }
+        self.nnz += 1;
+    }
+
+    /// 4-D splice into an existing local row `r`.
+    fn splice_append_4d_row(&mut self, r: usize, a: u32, b: u32, c: u32, val: f32) {
+        let (olo, ohi) = (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+        match self.outer_c[olo..ohi].binary_search(&c) {
+            Ok(coff) => {
+                let oj = olo + coff;
+                let (jlo, jhi) =
+                    (self.outer_ptr[oj] as usize, self.outer_ptr[oj + 1] as usize);
+                match self.run_b[jlo..jhi].binary_search(&b) {
+                    Ok(boff) => self.append_to_run(jlo + boff, a, val),
+                    Err(boff) => {
+                        self.insert_run_at(jlo + boff, b, a, val);
+                        for x in &mut self.outer_ptr[oj + 1..] {
+                            *x += 1;
+                        }
+                    }
+                }
+            }
+            Err(coff) => {
+                let oj = olo + coff;
+                let j = self.outer_ptr[oj] as usize;
+                self.insert_run_at(j, b, a, val);
+                self.insert_outer_at(oj, c);
+                for x in &mut self.row_runs[r + 1..] {
+                    *x += 1;
+                }
+            }
+        }
+    }
+
+    /// Locate the run holding `(row, c, b)`; `None` if absent. Rows are
+    /// ascending, outer runs ascending in `c` per row, runs ascending in
+    /// `b` per (outer) run — all binary searches.
+    fn find_run(&self, row: u32, b: u32, c: u32) -> Option<usize> {
+        let r = self.rows.binary_search(&row).ok()?;
+        if self.others.len() == 3 {
+            let (olo, ohi) = (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+            let oj = olo + self.outer_c[olo..ohi].binary_search(&c).ok()?;
+            let (jlo, jhi) =
+                (self.outer_ptr[oj] as usize, self.outer_ptr[oj + 1] as usize);
+            Some(jlo + self.run_b[jlo..jhi].binary_search(&b).ok()?)
+        } else {
+            let (jlo, jhi) = (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+            Some(jlo + self.run_b[jlo..jhi].binary_search(&b).ok()?)
+        }
+    }
+
+    /// Insert a brand-new run (one real element + lane padding) at run
+    /// index `j`. Callers fix up the level above (`row_runs` for 3-D,
+    /// `outer_ptr` for 4-D).
+    fn insert_run_at(&mut self, j: usize, b: u32, a: u32, val: f32) {
+        let s = self.slot_ptr[j] as usize;
+        self.run_b.insert(j, b);
+        self.run_len.insert(j, 1);
+        let boundary = self.slot_ptr[j] + LANES as u32;
+        self.slot_ptr.insert(j + 1, boundary);
+        for x in &mut self.slot_ptr[j + 2..] {
+            *x += LANES as u32;
+        }
+        // one real slot + LANES-1 padding slots (val 0, index repeated)
+        let pad_fa = vec![a; LANES];
+        let mut pad_vals = vec![0.0f32; LANES];
+        pad_vals[0] = val;
+        self.fa.splice(s..s, pad_fa);
+        self.vals.splice(s..s, pad_vals);
+    }
+
+    /// Insert a new outer run covering exactly the (just-inserted) run
+    /// at `outer_ptr[oj]`.
+    fn insert_outer_at(&mut self, oj: usize, c: u32) {
+        self.outer_c.insert(oj, c);
+        let boundary = self.outer_ptr[oj] + 1;
+        self.outer_ptr.insert(oj + 1, boundary);
+        for x in &mut self.outer_ptr[oj + 2..] {
+            *x += 1;
+        }
+    }
+
+    /// Append one real element to existing run `j`, re-padding its lane
+    /// block: a spare padding slot absorbs the element in place (the
+    /// remaining pads re-point at the new last real index); a full block
+    /// grows by one [`LANES`] block.
+    fn append_to_run(&mut self, j: usize, a: u32, val: f32) {
+        let len = self.run_len[j] as usize;
+        let (slo, shi) = (self.slot_ptr[j] as usize, self.slot_ptr[j + 1] as usize);
+        if len < shi - slo {
+            self.fa[slo + len] = a;
+            self.vals[slo + len] = val;
+            for f in &mut self.fa[slo + len + 1..shi] {
+                *f = a;
+            }
+        } else {
+            let pad_fa = vec![a; LANES];
+            let mut pad_vals = vec![0.0f32; LANES];
+            pad_vals[0] = val;
+            self.fa.splice(shi..shi, pad_fa);
+            self.vals.splice(shi..shi, pad_vals);
+            for x in &mut self.slot_ptr[j + 1..] {
+                *x += LANES as u32;
+            }
+        }
+        self.run_len[j] += 1;
     }
 
     /// Visit every *real* element in plan order as
@@ -735,6 +930,75 @@ fn accumulate_run<MK: Tile>(
     }
 }
 
+/// Assert the shared invariants of the lane-blocked layout for a plan
+/// that covers every tensor element whose `mode` coordinate is one of
+/// the plan's rows (true for whole-tensor plans and slice-aligned rank
+/// plans). Rank plans over split slices should use
+/// [`check_lane_invariants_for`] with the rank's element list.
+pub fn check_lane_invariants(t: &SparseTensor, plan: &TtmPlan) {
+    let elems: Vec<u32> = (0..t.nnz() as u32)
+        .filter(|&e| {
+            plan.rows.binary_search(&t.coord(plan.mode, e as usize)).is_ok()
+        })
+        .collect();
+    check_lane_invariants_for(t, plan, &elems);
+}
+
+/// Assert the lane-blocked layout invariants of one plan against the
+/// element ids it is supposed to encode: ascending rows, lane-aligned
+/// run blocks, the val==0/repeated-index padding contract, `run_len`
+/// summing to `nnz`, and the real-element multiset matching `elems`.
+///
+/// Validation/debug helper (O(|E| log |E|), panics on violation) — used
+/// by the plan unit tests and by the streaming-ingest tests to pin that
+/// incrementally spliced/rebuilt plans stay well-formed.
+pub fn check_lane_invariants_for(t: &SparseTensor, plan: &TtmPlan, elems: &[u32]) {
+    let mode = plan.mode;
+    assert!(plan.rows.windows(2).all(|w| w[0] < w[1]), "rows ascending");
+    assert_eq!(plan.kp % LANES, 0);
+    assert!(plan.kp >= plan.oks[0]);
+    assert_eq!(*plan.slot_ptr.last().unwrap() as usize, plan.fa.len());
+    assert_eq!(plan.fa.len(), plan.vals.len());
+    let mut real = 0usize;
+    for j in 0..plan.run_b.len() {
+        let (lo, hi) = (plan.slot_ptr[j] as usize, plan.slot_ptr[j + 1] as usize);
+        let len = plan.run_len[j] as usize;
+        assert!(len >= 1, "runs are non-empty");
+        assert_eq!(hi - lo, pad_to_lanes(len), "run {j} aligned");
+        // padded slots: val exactly 0.0, index repeats a real slot
+        for s in lo + len..hi {
+            assert_eq!(plan.vals[s].to_bits(), 0.0f32.to_bits(), "pad val run {j}");
+            assert_eq!(plan.fa[s], plan.fa[lo + len - 1], "pad idx run {j}");
+        }
+        real += len;
+    }
+    assert_eq!(real, plan.nnz(), "run_len sums to nnz");
+    // multiset of real elements matches the given element list
+    let mut got: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
+    plan.for_each_element(|r, ia, ib, ic, v| {
+        got.push((plan.rows[r], ia, ib, ic, v.to_bits()));
+    });
+    let mut want: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
+    for &eu in elems {
+        let e = eu as usize;
+        let ic = if plan.others.len() == 3 {
+            t.coord(plan.others[2], e)
+        } else {
+            0
+        };
+        want.push((
+            t.coord(mode, e),
+            t.coord(plan.others[0], e),
+            t.coord(plan.others[1], e),
+            ic,
+            t.vals[e].to_bits(),
+        ));
+    }
+    got.sort_unstable();
+    want.sort_unstable();
+    assert_eq!(got, want, "mode {mode} element multiset");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -750,56 +1014,6 @@ mod tests {
             .map(|&l| orthonormal_random(l as usize, k, &mut rng))
             .collect();
         (t, factors)
-    }
-
-    /// Shared invariants of the lane-blocked layout for one plan.
-    fn check_lane_invariants(t: &SparseTensor, plan: &TtmPlan) {
-        let mode = plan.mode;
-        assert!(plan.rows.windows(2).all(|w| w[0] < w[1]), "rows ascending");
-        assert_eq!(plan.kp % LANES, 0);
-        assert!(plan.kp >= plan.oks[0]);
-        assert_eq!(*plan.slot_ptr.last().unwrap() as usize, plan.fa.len());
-        assert_eq!(plan.fa.len(), plan.vals.len());
-        let mut real = 0usize;
-        for j in 0..plan.run_b.len() {
-            let (lo, hi) = (plan.slot_ptr[j] as usize, plan.slot_ptr[j + 1] as usize);
-            let len = plan.run_len[j] as usize;
-            assert!(len >= 1, "runs are non-empty");
-            assert_eq!(hi - lo, crate::hooi::kernel::pad_to_lanes(len), "run {j} aligned");
-            // padded slots: val exactly 0.0, index repeats a real slot
-            for s in lo + len..hi {
-                assert_eq!(plan.vals[s].to_bits(), 0.0f32.to_bits(), "pad val run {j}");
-                assert_eq!(plan.fa[s], plan.fa[lo + len - 1], "pad idx run {j}");
-            }
-            real += len;
-        }
-        assert_eq!(real, plan.nnz(), "run_len sums to nnz");
-        // multiset of real elements matches the tensor's slices
-        let mut got: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
-        plan.for_each_element(|r, ia, ib, ic, v| {
-            got.push((plan.rows[r], ia, ib, ic, v.to_bits()));
-        });
-        let mut want: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
-        for e in 0..t.nnz() {
-            let l = t.coord(mode, e);
-            if plan.rows.binary_search(&l).is_ok() {
-                let ic = if plan.others.len() == 3 {
-                    t.coord(plan.others[2], e)
-                } else {
-                    0
-                };
-                want.push((
-                    l,
-                    t.coord(plan.others[0], e),
-                    t.coord(plan.others[1], e),
-                    ic,
-                    t.vals[e].to_bits(),
-                ));
-            }
-        }
-        got.sort_unstable();
-        want.sort_unstable();
-        assert_eq!(got, want, "mode {mode} element multiset");
     }
 
     #[test]
@@ -913,6 +1127,90 @@ mod tests {
         let second = plan.assemble_fused(&factors, &mut ws);
         assert_eq!(second.z.data.as_ptr(), ptr, "arena buffer reused");
         assert_eq!(second.z.data, want.data, "recycled buffer fully re-zeroed");
+    }
+
+    /// `(row, a, b, c)` of element `e` in `plan`'s coordinate roles.
+    fn coords_for(t: &SparseTensor, plan: &TtmPlan, e: usize) -> (u32, u32, u32, u32) {
+        let c = if plan.others.len() == 3 {
+            t.coord(plan.others[2], e)
+        } else {
+            0
+        };
+        (
+            t.coord(plan.mode, e),
+            t.coord(plan.others[0], e),
+            t.coord(plan.others[1], e),
+            c,
+        )
+    }
+
+    #[test]
+    fn splice_append_matches_fresh_build() {
+        // streaming appends spliced in id order must reproduce the fresh
+        // build bit-for-bit (rows/runs/outer levels, lane re-padding and
+        // all) — 3-D and 4-D, every mode
+        for (dims, seed) in [(vec![12u32, 9, 7], 11u64), (vec![8, 6, 5, 4], 12)] {
+            let ndim = dims.len();
+            for mode in 0..ndim {
+                let mut rng = Rng::new(seed + mode as u64);
+                let mut t = SparseTensor::random(dims.clone(), 200, &mut rng);
+                let elems0: Vec<u32> = (0..200).collect();
+                let mut plan = TtmPlan::build(&t, mode, &elems0, 4);
+                for _ in 0..60 {
+                    let coord: Vec<u32> = t
+                        .dims
+                        .iter()
+                        .map(|&d| rng.below(d as u64) as u32)
+                        .collect();
+                    let val = rng.f32() * 2.0 - 1.0;
+                    t.push(&coord, val);
+                    let e = t.nnz() - 1;
+                    let (row, a, b, c) = coords_for(&t, &plan, e);
+                    plan.splice_append(row, a, b, c, val);
+                }
+                let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+                let fresh = TtmPlan::build(&t, mode, &elems, 4);
+                assert_eq!(plan, fresh, "mode {mode}: spliced ≡ fresh build");
+                check_lane_invariants(&t, &plan);
+            }
+        }
+    }
+
+    #[test]
+    fn splice_append_grows_an_empty_plan() {
+        let (t, _) = setup(vec![6, 5, 4, 3], 80, 3, 14);
+        let mut plan = TtmPlan::build(&t, 2, &[], 3);
+        for e in 0..t.nnz() {
+            let (row, a, b, c) = coords_for(&t, &plan, e);
+            plan.splice_append(row, a, b, c, t.vals[e]);
+        }
+        let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+        assert_eq!(plan, TtmPlan::build(&t, 2, &elems, 3));
+    }
+
+    #[test]
+    fn splice_value_matches_fresh_build_and_targets_first_duplicate() {
+        let mut rng = Rng::new(13);
+        let mut t = SparseTensor::random(vec![10, 8, 6], 250, &mut rng);
+        // force a duplicate coordinate: copy element 5's coords to the end
+        let coord: Vec<u32> = (0..3).map(|m| t.coord(m, 5)).collect();
+        t.push(&coord, 9.0);
+        let elems: Vec<u32> = (0..t.nnz() as u32).collect();
+        let mut plan = TtmPlan::build(&t, 1, &elems, 3);
+        // change the first duplicate (element 5) — TensorDelta semantics
+        t.vals[5] = -4.5;
+        let (row, a, b, c) = coords_for(&t, &plan, 5);
+        assert!(plan.splice_value(row, a, b, c, -4.5));
+        assert_eq!(plan, TtmPlan::build(&t, 1, &elems, 3));
+        // removal keeps the slot as an explicit zero
+        t.vals[7] = 0.0;
+        let (row, a, b, c) = coords_for(&t, &plan, 7);
+        assert!(plan.splice_value(row, a, b, c, 0.0));
+        assert_eq!(plan, TtmPlan::build(&t, 1, &elems, 3));
+        check_lane_invariants(&t, &plan);
+        // an absent coordinate reports not-found instead of corrupting
+        let mut empty = TtmPlan::build(&t, 1, &[], 3);
+        assert!(!empty.splice_value(0, 0, 0, 0, 1.0));
     }
 
     #[test]

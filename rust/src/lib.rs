@@ -38,16 +38,24 @@
 //! # let _ = refined;
 //! ```
 //!
+//! Long-running sessions stream: [`tensor::TensorDelta`] batches
+//! appended/changed/removed nonzeros, `TuckerSession::ingest` applies
+//! them atomically, extends the placement with Lite's per-bin load
+//! discipline ([`sched::incremental`]) and splices/rebuilds only the
+//! dirty (mode, rank) TTM plans — bit-identical to a fresh build on the
+//! mutated tensor, never a full re-prepare.
+//!
 //! Typed options replace the `TUCKER_*` env vars (which remain as
 //! fallbacks — precedence table in [`util::env`]). Layer by layer:
 //!
 //! - [`coordinator`]: the [`coordinator::TuckerSession`] front door,
 //!   job specs, the pipeline leader (the legacy `run_scheme` shim), the
 //!   experiment harness for Figs 9–17.
-//! - [`tensor`]: COO sparse tensors, slice indexing, FROSTT I/O, the Fig 9
-//!   synthetic dataset analogues.
+//! - [`tensor`]: COO sparse tensors, slice indexing, streaming deltas,
+//!   FROSTT I/O, the Fig 9 synthetic dataset analogues.
 //! - [`sched`]: the distribution schemes + the paper's metrics
-//!   (E_max, R_sum, R_max) and the σ_n row-index mapping.
+//!   (E_max, R_sum, R_max), the σ_n row-index mapping, and the
+//!   incremental policy extension for streamed appends.
 //! - [`dist`]: the simulated P-rank cluster (makespan timing, α–β comms)
 //!   with a scoped-thread parallel rank executor.
 //! - [`hooi`]: TTM via Eq. 1 contributions — precompiled per-rank plans

@@ -135,6 +135,7 @@ fn print_record(rec: &RunRecord) {
     t.row(vec!["HOOI time (simulated)".into(), fmt_secs(rec.hooi_secs)]);
     t.row(vec!["  TTM compute".into(), fmt_secs(rec.ttm_secs)]);
     t.row(vec!["  SVD compute".into(), fmt_secs(rec.svd_secs)]);
+    t.row(vec!["  core compute".into(), fmt_secs(rec.core_secs)]);
     t.row(vec!["  communication".into(), fmt_secs(rec.comm_secs)]);
     t.row(vec!["distribution time".into(), fmt_secs(rec.dist_secs)]);
     t.row(vec!["SVD comm volume (units)".into(), fmt_si(rec.svd_volume)]);

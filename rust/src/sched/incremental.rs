@@ -1,0 +1,223 @@
+//! Incremental policy extension for streaming nonzero appends (the
+//! distribution side of the plan-invalidation subsystem).
+//!
+//! A [`super::policy::ModePolicy`] maps element ids to ranks; appended
+//! elements get ids past the current end, so extending a policy is an
+//! append to its `assign` vector. [`extend_policy`] places each new
+//! element with Lite's stage-2 discipline (§6, Fig 8): per-bin load
+//! counters against the hard limit ⌈|E′|/P⌉, preferring ranks that
+//! *already share* the element's slice so the Theorem 6.1 sharing
+//! bounds (R_n^sum ≤ L_n + P, R_n^max ≤ ⌈L_n/P⌉ + 2) degrade as little
+//! as possible.
+//!
+//! Guarantees:
+//! - Metric 1 (E_n^max ≤ ⌈|E′|/P⌉) is preserved *unconditionally*: a
+//!   bin at the limit is never picked, and a bin under the limit always
+//!   exists while elements remain (P·⌈|E′|/P⌉ ≥ |E′|). This is a hard
+//!   assert, mirroring Lite's stage-2 capacity check.
+//! - Metrics 2/3 are best-effort under streaming: an append into a
+//!   slice none of whose sharers has capacity must open a new
+//!   (slice, rank) pair. [`theorem_bounds`] revalidates the bounds
+//!   after a batch; a violated bound means the caller should schedule a
+//!   full redistribution (which Lite makes cheap — the paper's point).
+//!
+//! Placement is deterministic (min-load, then lowest rank), so an
+//! extended policy is reproducible from the same inputs — the property
+//! the session's fresh-rebuild equivalence tests pin.
+
+use super::metrics::{ModeMetrics, Sharers};
+use super::policy::ModePolicy;
+use crate::tensor::SliceIndex;
+
+/// Outcome of one [`extend_policy`] batch.
+#[derive(Debug, Clone)]
+pub struct PlacementReport {
+    /// The hard per-bin limit ⌈|E′|/P⌉ the placement enforced.
+    pub limit: usize,
+    /// New (slice, rank) sharer pairs the batch had to open — each one
+    /// adds 1 to this mode's R_n^sum.
+    pub new_sharer_pairs: usize,
+}
+
+/// Extend `pol` over a batch of appended elements (their mode-`n`
+/// coordinates in id order). `sharers` is the mode's pre-delta sharer
+/// index; `nnz_after` the element count after the batch. Appends one
+/// rank per element to `pol.assign`.
+pub fn extend_policy(
+    pol: &mut ModePolicy,
+    sharers: &Sharers,
+    slice_coords: &[u32],
+    nnz_after: usize,
+) -> PlacementReport {
+    let p = pol.p;
+    let limit = nnz_after.div_ceil(p);
+    let mut load = pol.rank_counts();
+    let mut new_pairs = 0usize;
+    // (slice, rank) pairs opened within this batch: later appends to the
+    // same slice treat them as sharers (batches are small; linear scan)
+    let mut opened: Vec<(u32, u32)> = Vec::new();
+    for &l in slice_coords {
+        let batch_ranks = opened
+            .iter()
+            .filter(|&&(sl, _)| sl == l)
+            .map(|&(_, r)| r);
+        let pick = sharers
+            .of(l as usize)
+            .iter()
+            .copied()
+            .chain(batch_ranks)
+            .filter(|&r| load[r as usize] < limit)
+            .min_by_key(|&r| (load[r as usize], r));
+        let r = match pick {
+            Some(r) => r,
+            None => {
+                // no sharer has capacity: open a new pair on the least
+                // loaded rank (always under the limit — see module docs)
+                let r = (0..p as u32)
+                    .min_by_key(|&r| (load[r as usize], r))
+                    .expect("P >= 1");
+                opened.push((l, r));
+                new_pairs += 1;
+                r
+            }
+        };
+        assert!(
+            load[r as usize] < limit,
+            "incremental placement: bin {r} already at ⌈|E|/P⌉ = {limit}"
+        );
+        pol.assign.push(r);
+        load[r as usize] += 1;
+    }
+    PlacementReport { limit, new_sharer_pairs: new_pairs }
+}
+
+/// Theorem 6.1's three bounds for one (mode, policy) pair — the
+/// revalidation a streaming caller runs after extending a policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoundsCheck {
+    /// E_n^max ≤ ⌈|E|/P⌉.
+    pub e_max_ok: bool,
+    /// R_n^sum ≤ L_n + P.
+    pub r_sum_ok: bool,
+    /// R_n^max ≤ ⌈L_n/P⌉ + 2.
+    pub r_max_ok: bool,
+}
+
+impl BoundsCheck {
+    /// All three bounds hold?
+    pub fn all_ok(&self) -> bool {
+        self.e_max_ok && self.r_sum_ok && self.r_max_ok
+    }
+}
+
+/// Recompute the §4 metrics and check them against the Theorem 6.1
+/// bounds. (The bounds are Lite's guarantee; for other schemes the
+/// result is informational.)
+pub fn theorem_bounds(idx: &SliceIndex, pol: &ModePolicy) -> BoundsCheck {
+    let nnz = idx.elems.len();
+    let m = ModeMetrics::compute(idx, pol);
+    let l_n = idx.num_slices();
+    BoundsCheck {
+        e_max_ok: m.e_max <= nnz.div_ceil(pol.p),
+        r_sum_ok: m.r_sum <= l_n + pol.p,
+        r_max_ok: m.r_max <= l_n.div_ceil(pol.p) + 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Lite, Scheme};
+    use crate::tensor::slices::build_all;
+    use crate::tensor::SparseTensor;
+    use crate::util::rng::Rng;
+
+    fn lite_mode0(t: &SparseTensor, p: usize) -> (SliceIndex, ModePolicy, Sharers) {
+        let idx = build_all(t);
+        let d = Lite.distribute(t, &idx, p, &mut Rng::new(3));
+        let pol = d.policies[0].clone();
+        let sharers = Sharers::build(&idx[0], &pol);
+        (idx.into_iter().next().unwrap(), pol, sharers)
+    }
+
+    #[test]
+    fn extension_preserves_the_load_limit() {
+        let mut rng = Rng::new(1);
+        let t = SparseTensor::random(vec![30, 20, 10], 2000, &mut rng);
+        let p = 7;
+        let (_, mut pol, sharers) = lite_mode0(&t, p);
+        // a skewed batch: half the appends hit one slice
+        let coords: Vec<u32> =
+            (0..300).map(|i| if i % 2 == 0 { 5 } else { (i % 30) as u32 }).collect();
+        let nnz_after = t.nnz() + coords.len();
+        let rep = extend_policy(&mut pol, &sharers, &coords, nnz_after);
+        assert_eq!(pol.assign.len(), nnz_after);
+        let counts = pol.rank_counts();
+        assert!(
+            counts.iter().all(|&c| c <= rep.limit),
+            "limit {} violated: {counts:?}",
+            rep.limit
+        );
+        assert_eq!(counts.iter().sum::<usize>(), nnz_after);
+    }
+
+    #[test]
+    fn placement_prefers_existing_sharers() {
+        // a policy with spare capacity everywhere: appends to slice l
+        // must land on a rank already sharing l (no new pairs)
+        let mut rng = Rng::new(2);
+        let t = SparseTensor::random(vec![10, 8, 6], 200, &mut rng);
+        let (_, mut pol, sharers) = lite_mode0(&t, 4);
+        let l = (0..10u32)
+            .find(|&l| !sharers.of(l as usize).is_empty())
+            .expect("some nonempty slice");
+        let before = pol.assign.len();
+        let rep = extend_policy(&mut pol, &sharers, &[l, l], t.nnz() + 2);
+        assert_eq!(rep.new_sharer_pairs, 0, "sharers had capacity");
+        for &r in &pol.assign[before..] {
+            assert!(sharers.of(l as usize).contains(&r));
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let mut rng = Rng::new(4);
+        let t = SparseTensor::random(vec![20, 10, 5], 800, &mut rng);
+        let (_, pol0, sharers) = lite_mode0(&t, 5);
+        let coords: Vec<u32> = (0..100).map(|i| (i * 7 % 20) as u32).collect();
+        let mut a = pol0.clone();
+        let mut b = pol0.clone();
+        extend_policy(&mut a, &sharers, &coords, t.nnz() + 100);
+        extend_policy(&mut b, &sharers, &coords, t.nnz() + 100);
+        assert_eq!(a.assign, b.assign);
+    }
+
+    #[test]
+    fn bounds_check_matches_theorem_on_fresh_lite() {
+        let mut rng = Rng::new(5);
+        let t = SparseTensor::random(vec![25, 15, 10], 1500, &mut rng);
+        let idx = build_all(&t);
+        let d = Lite.distribute(&t, &idx, 6, &mut Rng::new(6));
+        for (i, pol) in idx.iter().zip(&d.policies) {
+            let b = theorem_bounds(i, pol);
+            assert!(b.all_ok(), "fresh Lite satisfies Theorem 6.1: {b:?}");
+        }
+    }
+
+    #[test]
+    fn e_max_bound_always_revalidates_after_extension() {
+        let mut rng = Rng::new(7);
+        let t = SparseTensor::random(vec![12, 9, 7], 400, &mut rng);
+        let (_, mut pol, sharers) = lite_mode0(&t, 3);
+        let coords: Vec<u32> = (0..50).map(|_| rng.below(12) as u32).collect();
+        extend_policy(&mut pol, &sharers, &coords, t.nnz() + 50);
+        // rebuild the tensor+index the appends describe and revalidate
+        let mut t2 = t.clone();
+        for &l in &coords {
+            t2.push(&[l, 0, 0], 1.0);
+        }
+        let idx2 = crate::tensor::SliceIndex::build(&t2, 0);
+        let b = theorem_bounds(&idx2, &pol);
+        assert!(b.e_max_ok, "metric 1 is preserved unconditionally");
+    }
+}

@@ -124,9 +124,17 @@ fn distribute_mode(
             bin += 1;
         }
     }
-    debug_assert!(
+    // Hard capacity check (release builds included): if stage 2 ran out
+    // of bins with slices left over, the leftover elements would keep
+    // their zero-initialized `assign` entries and silently pile onto
+    // rank 0 — an invariant violation that must never ship a corrupt
+    // distribution. Mathematically P·⌈|E|/P⌉ ≥ |E|, so this only fires
+    // on a construction bug.
+    assert!(
         pos >= order.len(),
-        "stage 2 exhausted bins before slices: total capacity P*limit >= nnz"
+        "Lite stage 2 exhausted bins before slices: {} slice(s) unplaced \
+         (nnz={nnz}, P={p}, limit={limit}) — capacity P·⌈|E|/P⌉ ≥ |E| violated",
+        order.len() - pos
     );
 
     let scan_secs = t1.elapsed().as_secs_f64();
@@ -260,6 +268,40 @@ mod tests {
         assert!(d.time.serial_secs > 0.0);
         assert!(d.time.simulated_secs > 0.0);
         assert!(d.time.simulated_secs < d.time.serial_secs);
+    }
+
+    #[test]
+    fn stage2_capacity_check_holds_on_exact_and_skewed_fills() {
+        // regression for the silently-overloaded-rank-0 hazard: the
+        // stage-2 capacity check is now a hard assert, so these runs
+        // double as its exercise. Exact fills (nnz = P·limit) and heavy
+        // skew push stage 2 hardest.
+        for (p, sizes) in [
+            (5usize, vec![20u32; 5]),            // exact fill, equal slices
+            (4, vec![97, 1, 1, 1]),              // one dominant slice
+            (3, vec![50, 49, 1]),                // two near-limit slices
+            (7, vec![13, 11, 7, 5, 3, 2, 1, 1]), // ragged, nnz % P != 0
+        ] {
+            let nnz: u32 = sizes.iter().sum();
+            let mut t = SparseTensor::new(vec![sizes.len() as u32, 4]);
+            for (l, &sz) in sizes.iter().enumerate() {
+                for j in 0..sz {
+                    t.push(&[l as u32, j % 4], 1.0);
+                }
+            }
+            let idx = build_all(&t);
+            let d = Lite.distribute(&t, &idx, p, &mut Rng::new(7));
+            d.validate(&t).unwrap();
+            let limit = (nnz as usize).div_ceil(p);
+            for (n, pol) in d.policies.iter().enumerate() {
+                let counts = pol.rank_counts();
+                assert_eq!(counts.iter().sum::<usize>(), nnz as usize);
+                assert!(
+                    counts.iter().all(|&c| c <= limit),
+                    "mode {n}: a bin exceeds ⌈|E|/P⌉={limit}: {counts:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -9,9 +9,12 @@
 //! - [`metrics`]: E_n^max, R_n^sum, R_n^max + Fig 12 aggregates.
 //! - [`rowmap`]: the σ_n row-index mapping.
 //! - [`samplesort`]: the parallel sample sort Lite's slice ordering uses.
+//! - [`incremental`]: streaming policy extension + Theorem 6.1
+//!   revalidation for appended nonzeros.
 
 pub mod coarse;
 pub mod hypergraph;
+pub mod incremental;
 pub mod lite;
 pub mod medium;
 pub mod metrics;
@@ -21,6 +24,7 @@ pub mod samplesort;
 
 pub use coarse::CoarseG;
 pub use hypergraph::HyperG;
+pub use incremental::{extend_policy, theorem_bounds, BoundsCheck, PlacementReport};
 pub use lite::Lite;
 pub use medium::MediumG;
 pub use metrics::{ModeMetrics, SchemeMetrics, Sharers};

@@ -17,10 +17,25 @@ pub struct SparseTensor {
     pub vals: Vec<f32>,
 }
 
+/// Largest storable element count: ids are `u32` across the slice
+/// indices, distribution policies and TTM plan streams, so a tensor may
+/// hold at most 2³² elements. The paper's 4-billion-element tensors sit
+/// right at this boundary — exceeding it must be a hard error, not a
+/// silent id wraparound.
+pub const MAX_NNZ: u64 = 1 << 32;
+
 impl SparseTensor {
     pub fn new(dims: Vec<u32>) -> Self {
         let n = dims.len();
         SparseTensor { dims, coords: vec![Vec::new(); n], vals: Vec::new() }
+    }
+
+    /// Would a tensor of `nnz` elements keep every element id within
+    /// `u32`? (`nnz` counts elements; ids run `0..nnz`, so the last id
+    /// after one more [`push`](SparseTensor::push) is `nnz` itself.)
+    #[inline]
+    pub fn ids_fit(nnz: usize) -> bool {
+        (nnz as u64) < MAX_NNZ
     }
 
     pub fn with_capacity(dims: Vec<u32>, cap: usize) -> Self {
@@ -44,8 +59,14 @@ impl SparseTensor {
         self.vals.len()
     }
 
-    /// Append one element. Panics (debug) on out-of-range coordinates.
+    /// Append one element. Panics (debug) on out-of-range coordinates
+    /// and (all builds) when the new element's id would overflow `u32`.
     pub fn push(&mut self, coord: &[u32], val: f32) {
+        assert!(
+            Self::ids_fit(self.nnz()),
+            "SparseTensor: element id would overflow u32 (nnz = {}, max = {MAX_NNZ})",
+            self.nnz()
+        );
         debug_assert_eq!(coord.len(), self.ndim());
         for (n, &c) in coord.iter().enumerate() {
             debug_assert!(c < self.dims[n], "coord {c} >= L_{n}={}", self.dims[n]);
@@ -183,5 +204,16 @@ mod tests {
     fn out_of_range_coord_panics_in_debug() {
         let mut t = SparseTensor::new(vec![2, 2]);
         t.push(&[2, 0], 1.0);
+    }
+
+    #[test]
+    fn id_capacity_boundary() {
+        // ids run 0..nnz: nnz = 2³² means the last id is u32::MAX — ok;
+        // one more would wrap. (Checked arithmetically — 2³² elements
+        // cannot be allocated in a test.)
+        assert!(SparseTensor::ids_fit(0));
+        assert!(SparseTensor::ids_fit(u32::MAX as usize));
+        assert!(!SparseTensor::ids_fit((MAX_NNZ) as usize));
+        assert!(!SparseTensor::ids_fit((MAX_NNZ + 1) as usize));
     }
 }

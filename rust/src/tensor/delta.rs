@@ -1,0 +1,299 @@
+//! Streaming nonzero updates: [`TensorDelta`] describes a batch of
+//! appended / changed / removed elements, applied atomically to a
+//! [`SparseTensor`].
+//!
+//! Delta semantics (the contract `coordinator::TuckerSession::ingest`
+//! and the incremental plan invalidation build on):
+//!
+//! - **append** — a new nonzero at a coordinate within the existing mode
+//!   lengths. It gets the next element id (ids are append-only and
+//!   stable: no existing id ever moves).
+//! - **change** — a new value for the *first* (lowest-id) existing
+//!   element at the coordinate. Changes and removals address the tensor
+//!   as it was *before* this delta's appends.
+//! - **remove** — shorthand for a change to `0.0`. The element stays in
+//!   the COO structure as an explicit zero, so every downstream id,
+//!   slice index, policy assignment and plan stream stays valid; the
+//!   element contributes exactly nothing to any TTM. (Compacting
+//!   explicit zeros away is a rebuild-the-world operation by design —
+//!   it would invalidate every id.)
+//!
+//! [`TensorDelta::apply`] is atomic: the whole batch is validated
+//! against the tensor first, and the tensor is only mutated once no
+//! operation can fail. A rejected delta leaves the tensor untouched.
+
+use super::coo::{SparseTensor, MAX_NNZ};
+use super::slices::SliceIndex;
+
+/// A batch of streaming updates to a sparse tensor.
+///
+/// Value operations (changes and removals) keep their queue order: a
+/// `remove` followed by a `change` of the same coordinate re-sets the
+/// value, while the reverse order removes it — the last queued
+/// operation on a coordinate wins, exactly as if applied one by one.
+#[derive(Debug, Clone, Default)]
+pub struct TensorDelta {
+    appended: Vec<(Vec<u32>, f32)>,
+    /// Changes and removals interleaved in queue order; removals carry
+    /// value 0.0 and the flag.
+    updates: Vec<(Vec<u32>, f32, bool)>,
+}
+
+impl TensorDelta {
+    pub fn new() -> TensorDelta {
+        TensorDelta::default()
+    }
+
+    /// Queue a new nonzero (builder style).
+    pub fn append(mut self, coord: &[u32], val: f32) -> Self {
+        self.appended.push((coord.to_vec(), val));
+        self
+    }
+
+    /// Queue a value change for the first existing element at `coord`.
+    pub fn change(mut self, coord: &[u32], val: f32) -> Self {
+        self.updates.push((coord.to_vec(), val, false));
+        self
+    }
+
+    /// Queue a removal (change to an explicit zero — see module docs).
+    pub fn remove(mut self, coord: &[u32]) -> Self {
+        self.updates.push((coord.to_vec(), 0.0, true));
+        self
+    }
+
+    /// No queued operations?
+    pub fn is_empty(&self) -> bool {
+        self.appended.is_empty() && self.updates.is_empty()
+    }
+
+    /// Queued (appends, changes, removals) counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let removals = self.updates.iter().filter(|&&(_, _, rem)| rem).count();
+        (self.appended.len(), self.updates.len() - removals, removals)
+    }
+
+    /// Validate the whole batch against `t` (using mode 0's slice index
+    /// to locate changed/removed coordinates), then apply it. Returns
+    /// the touched element ids; on any error the tensor is unchanged.
+    pub fn apply(
+        &self,
+        t: &mut SparseTensor,
+        idx: &[SliceIndex],
+    ) -> Result<AppliedDelta, DeltaError> {
+        let ndim = t.ndim();
+        let check_coord = |coord: &[u32]| -> Result<(), DeltaError> {
+            if coord.len() != ndim {
+                return Err(DeltaError::ArityMismatch {
+                    coord: coord.to_vec(),
+                    ndim,
+                });
+            }
+            for (n, &c) in coord.iter().enumerate() {
+                if c >= t.dims[n] {
+                    return Err(DeltaError::CoordOutOfRange {
+                        coord: coord.to_vec(),
+                        mode: n,
+                        dim: t.dims[n],
+                    });
+                }
+            }
+            Ok(())
+        };
+        // --- validation pass: nothing is mutated until it succeeds ---
+        if (t.nnz() as u64) + (self.appended.len() as u64) > MAX_NNZ {
+            return Err(DeltaError::CapacityExceeded {
+                nnz: t.nnz(),
+                appends: self.appended.len(),
+            });
+        }
+        for (coord, _) in &self.appended {
+            check_coord(coord)?;
+        }
+        // locate changed/removed ids against the pre-append tensor: the
+        // mode-0 slice holds candidate ids in ascending order, so the
+        // first full-coordinate match is the lowest id
+        let locate = |coord: &[u32]| -> Result<u32, DeltaError> {
+            check_coord(coord)?;
+            for &e in idx[0].slice(coord[0] as usize) {
+                if (1..ndim).all(|n| t.coord(n, e as usize) == coord[n]) {
+                    return Ok(e);
+                }
+            }
+            Err(DeltaError::UnknownCoordinate { coord: coord.to_vec() })
+        };
+        // value ops resolve in queue order (last op on a coordinate
+        // wins — a change queued after a removal re-sets the value)
+        let mut changed: Vec<(u32, f32)> = Vec::with_capacity(self.updates.len());
+        let mut removed_count = 0usize;
+        for (coord, val, is_removal) in &self.updates {
+            changed.push((locate(coord)?, *val));
+            if *is_removal {
+                removed_count += 1;
+            }
+        }
+        // --- mutation pass (infallible) ---
+        for &(e, val) in &changed {
+            t.vals[e as usize] = val;
+        }
+        let first_new = t.nnz() as u32;
+        for (coord, val) in &self.appended {
+            t.push(coord, *val);
+        }
+        let mut changed_ids: Vec<u32> = changed.iter().map(|&(e, _)| e).collect();
+        changed_ids.sort_unstable();
+        changed_ids.dedup();
+        Ok(AppliedDelta {
+            appended: (first_new..t.nnz() as u32).collect(),
+            changed: changed_ids,
+            removed_count,
+        })
+    }
+}
+
+/// The element ids a successfully applied delta touched.
+#[derive(Debug, Clone)]
+pub struct AppliedDelta {
+    /// Ids of the appended elements, ascending (they are the tail of the
+    /// id space).
+    pub appended: Vec<u32>,
+    /// Ids whose value changed (removals included), ascending, deduped.
+    pub changed: Vec<u32>,
+    /// How many of the changes were removals (explicit zeros).
+    pub removed_count: usize,
+}
+
+/// Why a [`TensorDelta`] could not be applied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeltaError {
+    /// A coordinate names the wrong number of modes.
+    ArityMismatch { coord: Vec<u32>, ndim: usize },
+    /// A coordinate exceeds a mode length (deltas never grow the dims).
+    CoordOutOfRange { coord: Vec<u32>, mode: usize, dim: u32 },
+    /// A change/removal names a coordinate with no stored element.
+    UnknownCoordinate { coord: Vec<u32> },
+    /// The appends would push an element id past `u32` (see
+    /// [`MAX_NNZ`]).
+    CapacityExceeded { nnz: usize, appends: usize },
+}
+
+impl std::fmt::Display for DeltaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeltaError::ArityMismatch { coord, ndim } => {
+                write!(f, "coordinate {coord:?} names {} modes, tensor has {ndim}", coord.len())
+            }
+            DeltaError::CoordOutOfRange { coord, mode, dim } => {
+                write!(f, "coordinate {coord:?}: mode {mode} exceeds L_{mode}={dim}")
+            }
+            DeltaError::UnknownCoordinate { coord } => {
+                write!(f, "no stored element at {coord:?} to change/remove")
+            }
+            DeltaError::CapacityExceeded { nnz, appends } => {
+                write!(f, "{nnz} + {appends} elements would overflow u32 element ids")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DeltaError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::slices::build_all;
+
+    fn small() -> (SparseTensor, Vec<SliceIndex>) {
+        let mut t = SparseTensor::new(vec![4, 3, 2]);
+        t.push(&[0, 0, 0], 1.0);
+        t.push(&[1, 2, 1], 2.0);
+        t.push(&[3, 1, 0], 3.0);
+        let idx = build_all(&t);
+        (t, idx)
+    }
+
+    #[test]
+    fn apply_appends_changes_and_removes() {
+        let (mut t, idx) = small();
+        let delta = TensorDelta::new()
+            .append(&[2, 2, 1], 4.0)
+            .change(&[1, 2, 1], -2.0)
+            .remove(&[0, 0, 0]);
+        let applied = delta.apply(&mut t, &idx).unwrap();
+        assert_eq!(applied.appended, vec![3]);
+        assert_eq!(applied.changed, vec![0, 1]);
+        assert_eq!(applied.removed_count, 1);
+        assert_eq!(t.nnz(), 4, "removal keeps the explicit zero");
+        assert_eq!(t.vals[0], 0.0);
+        assert_eq!(t.vals[1], -2.0);
+        assert_eq!(t.vals[3], 4.0);
+        assert_eq!(t.coord(0, 3), 2);
+    }
+
+    #[test]
+    fn change_targets_the_first_duplicate() {
+        let mut t = SparseTensor::new(vec![2, 2]);
+        t.push(&[1, 1], 5.0);
+        t.push(&[1, 1], 7.0); // duplicate coordinate, higher id
+        let idx = build_all(&t);
+        let applied =
+            TensorDelta::new().change(&[1, 1], 9.0).apply(&mut t, &idx).unwrap();
+        assert_eq!(applied.changed, vec![0]);
+        assert_eq!(t.vals, vec![9.0, 7.0]);
+    }
+
+    #[test]
+    fn value_ops_resolve_in_queue_order() {
+        // remove then re-set: the later change wins
+        let (mut t, idx) = small();
+        let applied = TensorDelta::new()
+            .remove(&[1, 2, 1])
+            .change(&[1, 2, 1], 6.0)
+            .apply(&mut t, &idx)
+            .unwrap();
+        assert_eq!(t.vals[1], 6.0);
+        assert_eq!(applied.removed_count, 1);
+        assert_eq!(applied.changed, vec![1]);
+        // change then remove: the removal wins
+        let (mut t, idx) = small();
+        TensorDelta::new()
+            .change(&[1, 2, 1], 6.0)
+            .remove(&[1, 2, 1])
+            .apply(&mut t, &idx)
+            .unwrap();
+        assert_eq!(t.vals[1], 0.0);
+    }
+
+    #[test]
+    fn rejected_delta_leaves_the_tensor_untouched() {
+        let (mut t, idx) = small();
+        let before = t.clone();
+        // a valid change queued before an invalid one: atomicity means
+        // neither applies
+        let err = TensorDelta::new()
+            .change(&[1, 2, 1], 10.0)
+            .change(&[2, 0, 0], 1.0)
+            .apply(&mut t, &idx)
+            .unwrap_err();
+        assert_eq!(err, DeltaError::UnknownCoordinate { coord: vec![2, 0, 0] });
+        assert_eq!(t.vals, before.vals);
+        let err = TensorDelta::new()
+            .append(&[0, 0, 5], 1.0)
+            .apply(&mut t, &idx)
+            .unwrap_err();
+        assert!(matches!(err, DeltaError::CoordOutOfRange { mode: 2, .. }));
+        let err =
+            TensorDelta::new().append(&[0, 0], 1.0).apply(&mut t, &idx).unwrap_err();
+        assert!(matches!(err, DeltaError::ArityMismatch { .. }));
+        assert_eq!(t.nnz(), before.nnz());
+    }
+
+    #[test]
+    fn empty_delta_is_a_noop() {
+        let (mut t, idx) = small();
+        let delta = TensorDelta::new();
+        assert!(delta.is_empty());
+        let applied = delta.apply(&mut t, &idx).unwrap();
+        assert!(applied.appended.is_empty() && applied.changed.is_empty());
+    }
+}

@@ -1,11 +1,14 @@
-//! Sparse tensor substrate: COO storage, slice indexing, FROSTT I/O and the
-//! calibrated synthetic benchmark datasets (Fig 9 analogues).
+//! Sparse tensor substrate: COO storage, slice indexing, streaming
+//! deltas, FROSTT I/O and the calibrated synthetic benchmark datasets
+//! (Fig 9 analogues).
 
 pub mod coo;
 pub mod datasets;
+pub mod delta;
 pub mod io;
 pub mod slices;
 pub mod synth;
 
 pub use coo::SparseTensor;
+pub use delta::{AppliedDelta, DeltaError, TensorDelta};
 pub use slices::SliceIndex;

@@ -1,0 +1,290 @@
+//! Streaming-ingest integration: `TuckerSession::ingest` +
+//! `decompose` must be **bit-identical** to a fresh session built on
+//! the mutated tensor under the same placement (factors and core
+//! compared element-for-element); incrementally spliced/rebuilt plans
+//! keep the lane-blocked layout invariants; the Lite load limit
+//! (Theorem 6.1 Metric 1) revalidates unconditionally after placement.
+
+use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
+use tucker_lite::hooi::{check_lane_invariants_for, CoreRanks};
+use tucker_lite::prop_assert;
+use tucker_lite::sched::{incremental, Distribution, Scheme};
+use tucker_lite::tensor::{SliceIndex, SparseTensor, TensorDelta};
+use tucker_lite::util::check::Runner;
+use tucker_lite::util::rng::Rng;
+
+/// A scheme that replays a fixed distribution — how "the same
+/// placement" is pinned when comparing a streamed session against a
+/// fresh build on the mutated tensor.
+struct Fixed(Distribution);
+
+impl Scheme for Fixed {
+    fn name(&self) -> &'static str {
+        "Fixed"
+    }
+
+    fn uni(&self) -> bool {
+        self.0.uni
+    }
+
+    fn distribute(
+        &self,
+        _t: &SparseTensor,
+        _idx: &[SliceIndex],
+        _p: usize,
+        _rng: &mut Rng,
+    ) -> Distribution {
+        self.0.clone()
+    }
+}
+
+/// A random delta: `n_app` appends at uniform coordinates, `n_chg`
+/// value changes and `n_rem` removals at coordinates of existing
+/// elements.
+fn random_delta(
+    t: &SparseTensor,
+    rng: &mut Rng,
+    n_app: usize,
+    n_chg: usize,
+    n_rem: usize,
+) -> TensorDelta {
+    let mut d = TensorDelta::new();
+    for _ in 0..n_app {
+        let coord: Vec<u32> =
+            t.dims.iter().map(|&l| rng.below(l as u64) as u32).collect();
+        d = d.append(&coord, rng.f32() * 2.0 - 1.0);
+    }
+    let existing = |rng: &mut Rng| -> Vec<u32> {
+        let e = rng.usize_below(t.nnz());
+        (0..t.ndim()).map(|m| t.coord(m, e)).collect()
+    };
+    for _ in 0..n_chg {
+        let coord = existing(rng);
+        d = d.change(&coord, rng.f32() * 2.0 - 1.0);
+    }
+    for _ in 0..n_rem {
+        let coord = existing(rng);
+        d = d.remove(&coord);
+    }
+    d
+}
+
+fn build_streamed(
+    w: &Workload,
+    p: usize,
+    k: usize,
+    invocations: usize,
+) -> TuckerSession {
+    TuckerSession::builder(w.clone())
+        .scheme(SchemeChoice::Lite)
+        .ranks(p)
+        .core(CoreRanks::Uniform(k))
+        .invocations(invocations)
+        .seed(31)
+        .build()
+        .expect("valid streamed session")
+}
+
+/// Fresh session on the streamed session's (mutated) tensor under its
+/// (extended) placement.
+fn build_fresh(streamed: &TuckerSession, p: usize, k: usize, invocations: usize) -> TuckerSession {
+    let w2 = Workload::from_tensor("fresh", streamed.workload().tensor.clone());
+    TuckerSession::builder(w2)
+        .scheme(SchemeChoice::custom(Box::new(Fixed(
+            streamed.distribution().clone(),
+        ))))
+        .ranks(p)
+        .core(CoreRanks::Uniform(k))
+        .invocations(invocations)
+        .seed(31)
+        .build()
+        .expect("valid fresh session")
+}
+
+#[test]
+fn ingest_then_decompose_is_bit_identical_to_fresh_session() {
+    Runner::new(10, 30).run("ingest-fresh-equivalence", |case, rng| {
+        let p = 2 + rng.usize_below(4);
+        let k = 2 + rng.usize_below(3);
+        let dims = vec![
+            (8 + rng.usize_below(case.size + 8)) as u32,
+            (6 + rng.usize_below(12)) as u32,
+            (4 + rng.usize_below(8)) as u32,
+        ];
+        let nnz = 150 + rng.usize_below(case.size * 10 + 50);
+        let t = SparseTensor::random(dims, nnz, rng);
+        let w = Workload::from_tensor("stream", t);
+        let mut streamed = build_streamed(&w, p, k, 2);
+        let n_app = 1 + rng.usize_below(30);
+        let n_chg = rng.usize_below(10);
+        let n_rem = rng.usize_below(5);
+        let delta =
+            random_delta(&streamed.workload().tensor, rng, n_app, n_chg, n_rem);
+        let rep = streamed.ingest(&delta).map_err(|e| e.to_string())?;
+        prop_assert!(
+            rep.plans_touched() <= rep.plan_count,
+            "touched {} of {} plans",
+            rep.plans_touched(),
+            rep.plan_count
+        );
+        // Metric 1 revalidates unconditionally after placement
+        let t2 = &streamed.workload().tensor;
+        let limit = t2.nnz().div_ceil(p);
+        for (n, pol) in streamed.distribution().policies.iter().enumerate() {
+            let e_max = pol.rank_counts().into_iter().max().unwrap_or(0);
+            prop_assert!(
+                e_max <= limit,
+                "mode {n}: E_max {e_max} > ⌈|E′|/P⌉ {limit}"
+            );
+        }
+        // the headline contract: ingest + decompose_more is bit-identical
+        // to a fresh build on the mutated tensor under the same placement
+        // (a virgin session's decompose_more(1) bootstraps and runs the
+        // configured 2 invocations + 1; the fresh session runs 3)
+        let mut fresh = build_fresh(&streamed, p, k, 3);
+        let d_inc = streamed.decompose_more(1);
+        let d_fresh = fresh.decompose();
+        prop_assert!(
+            d_inc.fit() == d_fresh.fit(),
+            "fit {} vs fresh {}",
+            d_inc.fit(),
+            d_fresh.fit()
+        );
+        for (n, (a, b)) in d_inc.factors.iter().zip(&d_fresh.factors).enumerate() {
+            prop_assert!(a.data == b.data, "mode {n} factors diverge");
+        }
+        prop_assert!(d_inc.core.data == d_fresh.core.data, "cores diverge");
+        Ok(())
+    });
+}
+
+#[test]
+fn incrementally_maintained_plans_keep_lane_invariants() {
+    Runner::new(8, 25).run("ingest-lane-invariants", |case, rng| {
+        let p = 2 + rng.usize_below(3);
+        let dims = vec![
+            (6 + rng.usize_below(case.size + 6)) as u32,
+            (5 + rng.usize_below(10)) as u32,
+            (4 + rng.usize_below(6)) as u32,
+        ];
+        let nnz = 120 + rng.usize_below(case.size * 8 + 40);
+        let t = SparseTensor::random(dims, nnz, rng);
+        let w = Workload::from_tensor("lanes", t);
+        let mut s = build_streamed(&w, p, 3, 1);
+        // several consecutive ingests stress splice-on-spliced plans
+        for round in 0..3 {
+            let n_app = 1 + rng.usize_below(12);
+            let n_chg = rng.usize_below(6);
+            let n_rem = rng.usize_below(3);
+            let delta =
+                random_delta(&s.workload().tensor, rng, n_app, n_chg, n_rem);
+            s.ingest(&delta).map_err(|e| format!("round {round}: {e}"))?;
+        }
+        let t = &s.workload().tensor;
+        for st in s.mode_states() {
+            for (rank, plan) in st.plans.iter().enumerate() {
+                check_lane_invariants_for(t, plan, &st.elems[rank]);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn four_dimensional_ingest_matches_fresh_session() {
+    let mut rng = Rng::new(17);
+    let t = SparseTensor::random(vec![10, 8, 6, 5], 400, &mut rng);
+    let w = Workload::from_tensor("stream4d", t);
+    let mut streamed = build_streamed(&w, 3, 3, 1);
+    let delta = random_delta(&streamed.workload().tensor, &mut rng, 25, 6, 3);
+    let rep = streamed.ingest(&delta).unwrap();
+    assert!(rep.plans_touched() >= 4, "every mode has a dirty rank");
+    let mut fresh = build_fresh(&streamed, 3, 3, 1);
+    let d_inc = streamed.decompose();
+    let d_fresh = fresh.decompose();
+    assert_eq!(d_inc.fit(), d_fresh.fit());
+    for (a, b) in d_inc.factors.iter().zip(&d_fresh.factors) {
+        assert_eq!(a.data, b.data);
+    }
+    assert_eq!(d_inc.core.data, d_fresh.core.data);
+    // lane invariants on the 4-D spliced plans too
+    let t = &streamed.workload().tensor;
+    for st in streamed.mode_states() {
+        for (rank, plan) in st.plans.iter().enumerate() {
+            check_lane_invariants_for(t, plan, &st.elems[rank]);
+        }
+    }
+}
+
+#[test]
+fn value_only_delta_splices_without_structural_rebuild() {
+    let mut rng = Rng::new(23);
+    let t = SparseTensor::random(vec![20, 15, 10], 900, &mut rng);
+    let w = Workload::from_tensor("values", t);
+    let mut s = build_streamed(&w, 4, 4, 1);
+    let before: Vec<usize> = s
+        .mode_states()
+        .iter()
+        .map(|st| st.sharers.r_sum())
+        .collect();
+    let delta = random_delta(&s.workload().tensor, &mut rng, 0, 5, 2);
+    let rep = s.ingest(&delta).unwrap();
+    assert_eq!(rep.appended, 0);
+    assert!(rep.plans_rebuilt == 0, "small value batches splice in place");
+    assert!(rep.plans_spliced >= 1);
+    assert!(rep.rebalance_modes.is_empty(), "no structural change");
+    // sharing structure untouched by value-only deltas
+    let after: Vec<usize> =
+        s.mode_states().iter().map(|st| st.sharers.r_sum()).collect();
+    assert_eq!(before, after);
+    // and the decomposition still matches a fresh build exactly
+    let mut fresh = build_fresh(&s, 4, 4, 1);
+    let d_inc = s.decompose();
+    let d_fresh = fresh.decompose();
+    assert_eq!(d_inc.fit(), d_fresh.fit());
+    for (a, b) in d_inc.factors.iter().zip(&d_fresh.factors) {
+        assert_eq!(a.data, b.data);
+    }
+}
+
+#[test]
+fn warm_start_refinement_continues_after_ingest() {
+    // the long-running-service flow: decompose, stream a delta, refine —
+    // the factors carry over as a warm start and refinement proceeds
+    // over the updated plans
+    let mut rng = Rng::new(29);
+    let t = SparseTensor::random(vec![18, 14, 9], 700, &mut rng);
+    let w = Workload::from_tensor("service", t);
+    let mut s = build_streamed(&w, 4, 4, 1);
+    let d0 = s.decompose();
+    assert!(d0.fit().is_finite());
+    let delta = random_delta(&s.workload().tensor, &mut rng, 20, 4, 2);
+    s.ingest(&delta).unwrap();
+    let d1 = s.decompose_more(2);
+    assert!(d1.fit().is_finite() && (0.0..=1.0).contains(&d1.fit()));
+    assert_eq!(s.plan_builds(), 1, "ingest never re-runs prepare_modes");
+    assert!(s.plan_rebuilds() > 0);
+}
+
+#[test]
+fn theorem_bounds_revalidation_reports_per_mode() {
+    let mut rng = Rng::new(41);
+    let t = SparseTensor::random(vec![15, 12, 8], 600, &mut rng);
+    let w = Workload::from_tensor("bounds", t);
+    let mut s = build_streamed(&w, 3, 3, 1);
+    let delta = random_delta(&s.workload().tensor, &mut rng, 30, 0, 0);
+    let rep = s.ingest(&delta).unwrap();
+    // whatever the report says must agree with a direct recomputation
+    for n in 0..3 {
+        let ok = incremental::theorem_bounds(
+            &s.workload().idx[n],
+            &s.distribution().policies[n],
+        )
+        .all_ok();
+        assert_eq!(
+            !rep.rebalance_modes.contains(&n),
+            ok,
+            "mode {n} rebalance flag disagrees with the bounds"
+        );
+    }
+}
