@@ -1,0 +1,110 @@
+//! Streaming rebalance: a long-lived session absorbing data drift.
+//!
+//!     cargo run --release --example streaming_rebalance
+//!
+//! Builds a session with `RebalancePolicy::Auto`, streams skewed delta
+//! batches into it, and shows the full rebalance lifecycle: ingest
+//! revalidates the Theorem 6.1 sharing bounds, the §4 cost model
+//! compares the live `PlacementPlan` against a Lite re-plan, and a
+//! migration (applied through `PlacementPlan::diff`) touches only the
+//! diffed (mode, rank) TTM plans — never a full re-prepare.
+
+use tucker_lite::coordinator::{
+    RebalancePolicy, SchemeChoice, TuckerSession, Workload,
+};
+use tucker_lite::tensor::synth::{generate, ModeDist};
+use tucker_lite::tensor::TensorDelta;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::{fmt_secs, Table};
+
+fn main() {
+    // 1. a modest workload so three ingest rounds stay snappy
+    let modes = vec![
+        ModeDist { len: 600, zipf: 1.0 },
+        ModeDist { len: 400, zipf: 0.0 },
+        ModeDist { len: 200, zipf: 0.6 },
+    ];
+    let tensor = generate(&modes, 40_000, 17);
+    println!("tensor: dims={:?} nnz={}", tensor.dims, tensor.nnz());
+
+    // 2. an auto-rebalancing session: when streaming drift breaks the
+    //    sharing bounds, migrate iff the predicted per-sweep savings
+    //    amortize the re-plan + migration within 4 further sweeps
+    let mut session = TuckerSession::builder(Workload::from_tensor("drift", tensor))
+        .scheme(SchemeChoice::Lite)
+        .ranks(8)
+        .core(8usize)
+        .rebalance_policy(RebalancePolicy::Auto { hooi_iters_amortization: 4 })
+        .seed(3)
+        .build()
+        .expect("valid session configuration");
+    let d0 = session.decompose();
+    println!("initial fit {:.4}", d0.fit());
+
+    // 3. stream drift: each round piles appends onto a few hot slices —
+    //    exactly the skew that erodes Lite's Theorem 6.1 guarantees
+    let mut rng = Rng::new(99);
+    let mut t = Table::new(
+        "streaming rounds",
+        &["round", "appends", "plans touched", "flagged modes", "auto decision"],
+    );
+    for round in 0..3 {
+        let dims = session.workload().tensor.dims.clone();
+        let mut delta = TensorDelta::new();
+        let appends = 4_000 * (round + 1);
+        for i in 0..appends {
+            let hot = (i % 4) as u32;
+            let coord: Vec<u32> = dims
+                .iter()
+                .enumerate()
+                .map(|(m, &l)| if m == 0 { hot } else { rng.below(l as u64) as u32 })
+                .collect();
+            delta = delta.append(&coord, rng.f32());
+        }
+        let rep = session.ingest(&delta).expect("valid drift delta");
+        let decision = match &rep.rebalance {
+            None => "bounds hold".to_string(),
+            Some(rb) if rb.migrated => format!(
+                "migrated {} elems ({} B), saves {}/sweep",
+                rb.moved_elements,
+                rb.migration_bytes,
+                fmt_secs(rb.decision.savings_per_sweep)
+            ),
+            Some(rb) => format!(
+                "skipped: {}/sweep saved < {} migration",
+                fmt_secs(rb.decision.savings_per_sweep),
+                fmt_secs(rb.decision.replan_secs + rb.decision.migration_secs)
+            ),
+        };
+        t.row(vec![
+            round.to_string(),
+            rep.appended.to_string(),
+            format!("{}/{}", rep.plans_touched(), rep.plan_count),
+            format!("{:?}", rep.rebalance_modes),
+            decision,
+        ]);
+    }
+    t.print();
+
+    // 4. refine on the (possibly migrated) plans and read the record:
+    //    the decision trail and redistribution time travel with it
+    let d = session.decompose_more(2);
+    let rec = &d.record;
+    println!(
+        "refined fit {:.4} | rebalances {} (skipped {}) | redist {} | dist {}",
+        d.fit(),
+        rec.rebalances,
+        rec.rebalance_skips,
+        fmt_secs(rec.redist_secs),
+        fmt_secs(rec.dist_secs),
+    );
+    println!(
+        "pending rebalance: {:?} | plan builds {} | plan rebuilds {}",
+        session.pending_rebalance(),
+        session.plan_builds(),
+        session.plan_rebuilds(),
+    );
+    assert_eq!(session.plan_builds(), 1, "prepare_modes ran exactly once");
+    assert!(d.fit().is_finite());
+    println!("streaming_rebalance OK");
+}

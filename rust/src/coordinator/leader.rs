@@ -130,7 +130,17 @@ pub struct RunRecord {
     pub core_secs: f64,
     pub comm_secs: f64,
     /// Distribution time (Fig 16): simulated parallel construction.
+    /// For streaming sessions this grows when a rebalance lands (the
+    /// re-plan + migration are redistribution work — Fig 16's column).
     pub dist_secs: f64,
+    /// Streaming rebalance provenance (sessions only; zero on the
+    /// legacy paths): migrations applied over the session's lifetime,
+    /// cost-model decisions that declined to migrate, and the
+    /// cumulative simulated redistribution seconds (Lite re-plan +
+    /// element migration under the α–β model).
+    pub rebalances: usize,
+    pub rebalance_skips: usize,
+    pub redist_secs: f64,
     /// Communication volumes in units (Fig 13).
     pub svd_volume: f64,
     pub fm_volume: f64,
@@ -187,6 +197,9 @@ pub(crate) fn collect_record(
         core_secs: cluster.elapsed.get(cat::CORE),
         comm_secs,
         dist_secs: dist.time.simulated_secs,
+        rebalances: 0,
+        rebalance_skips: 0,
+        redist_secs: cluster.elapsed.get(cat::REDIST),
         svd_volume: cluster.volume.get(cat::COMM_SVD),
         fm_volume: cluster.volume.get(cat::COMM_FM),
         ttm_balance: metrics.ttm_balance(),

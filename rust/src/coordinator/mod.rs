@@ -13,5 +13,6 @@ pub use job::JobSpec;
 pub use leader::{run_distribution, run_scheme, RunRecord, Workload, WorkloadError};
 pub use session::{
     Decomposition, EngineChoice, ExecutorChoice, IngestReport, KernelChoice,
-    SchemeChoice, SessionError, TuckerSession, TuckerSessionBuilder,
+    RebalanceDecision, RebalancePolicy, RebalanceReport, SchemeChoice, SessionError,
+    TuckerSession, TuckerSessionBuilder,
 };

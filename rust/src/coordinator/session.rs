@@ -52,20 +52,48 @@
 //! [`TuckerSession::plan_builds`]. Ingesting then decomposing is
 //! bit-identical to building a fresh session on the mutated tensor
 //! under the same placement (`tests/ingest.rs` pins this).
+//!
+//! ## Rebalancing
+//!
+//! The session holds a first-class [`PlacementPlan`](crate::sched::PlacementPlan)
+//! — policies plus the §4 metrics and cost estimate they induce. When
+//! streaming drift breaks a mode's Theorem 6.1 sharing bounds
+//! ([`IngestReport::rebalance_modes`]), the configured
+//! [`RebalancePolicy`] closes the loop:
+//!
+//! - [`RebalancePolicy::Auto`] re-plans the flagged modes with Lite,
+//!   diffs the candidate against the live plan
+//!   ([`PlacementPlan::diff`](crate::sched::PlacementPlan::diff) →
+//!   [`MigrationPlan`](crate::sched::MigrationPlan)), and migrates only
+//!   if the §4 cost model says the per-sweep savings amortize the
+//!   re-plan + migration time within the configured horizon;
+//! - `Manual` records the flags ([`TuckerSession::pending_rebalance`])
+//!   and waits for an explicit [`TuckerSession::rebalance`], which
+//!   migrates unconditionally;
+//! - `Never` only warns.
+//!
+//! A migration touches exactly the diffed (mode, rank) TTM plans
+//! through the same splice/rebuild machinery `ingest` uses — never a
+//! full `prepare_modes` — and is bit-identical to a fresh session on
+//! the re-planned placement (`tests/rebalance.rs` pins this). The
+//! decision and redistribution time surface in `RunRecord`
+//! (`rebalances`, `rebalance_skips`, `redist_secs`, and `dist_secs`
+//! growing by the redistribution — the Fig 16 quantity).
 
 use super::leader::{collect_record, RunRecord, Workload};
 use crate::dist::{cat, NetModel, SimCluster};
 use crate::hooi::{
-    charge_plan_compilation, prepare_modes_with_executor, CoreRanks, HooiState, Kernel,
+    charge_plan_compilation, prepare_modes_with_sharers, CoreRanks, HooiState, Kernel,
     ModeDelta, ModeState, TensorAccounting,
 };
 use crate::linalg::Mat;
 use crate::runtime::Engine;
-use crate::sched::{self, Distribution, Scheme};
+use crate::sched::{self, CostModel, DistTime, Distribution, PlacementPlan, Scheme};
 use crate::tensor::slices::build_all;
 use crate::tensor::{DeltaError, TensorDelta};
 use crate::util::rng::Rng;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Typed distribution-scheme selection: the paper's four registry
 /// entries plus an escape hatch for user-provided schemes.
@@ -180,6 +208,75 @@ impl ExecutorChoice {
     }
 }
 
+/// What a streaming session does when ingest detects that a mode's
+/// Theorem 6.1 sharing bounds no longer hold (see the module docs'
+/// *Rebalancing* section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RebalancePolicy {
+    /// No automation: the session keeps decomposing on the stale
+    /// placement. Flagged modes are still recorded
+    /// ([`TuckerSession::pending_rebalance`]) and warned about once, and
+    /// an explicit [`TuckerSession::rebalance`] still works — it
+    /// re-plans the flagged modes, or every mode when none is flagged.
+    Never,
+    /// Record the flagged modes ([`TuckerSession::pending_rebalance`])
+    /// and warn on the next decompose; the caller decides when to pay
+    /// for [`TuckerSession::rebalance`]. The default.
+    #[default]
+    Manual,
+    /// Decide on every flagged ingest from the §4 cost model: re-plan
+    /// the flagged modes with Lite, diff, and migrate iff
+    /// `savings_per_sweep × hooi_iters_amortization ≥ replan + migration`
+    /// seconds — i.e. the caller expects at least this many further
+    /// HOOI sweeps, over which the redistribution must pay for itself.
+    Auto {
+        /// Amortization horizon in HOOI sweeps.
+        hooi_iters_amortization: usize,
+    },
+}
+
+/// The cost-model verdict behind one rebalance attempt.
+#[derive(Debug, Clone)]
+pub struct RebalanceDecision {
+    /// Predicted seconds per sweep under the live placement.
+    pub current_secs_per_sweep: f64,
+    /// Predicted seconds per sweep under the Lite re-plan.
+    pub candidate_secs_per_sweep: f64,
+    /// `current − candidate` (negative when the re-plan is worse).
+    pub savings_per_sweep: f64,
+    /// Simulated Lite re-plan seconds (paid either way).
+    pub replan_secs: f64,
+    /// Simulated migration seconds under the session's α–β model.
+    pub migration_secs: f64,
+    /// The amortization horizon the decision used; `None` for an
+    /// explicit [`TuckerSession::rebalance`] (which migrates
+    /// unconditionally).
+    pub horizon: Option<usize>,
+    /// The verdict: apply the migration?
+    pub migrate: bool,
+}
+
+/// What one rebalance attempt (explicit or auto) did.
+#[derive(Debug, Clone)]
+pub struct RebalanceReport {
+    /// Modes that were re-planned with Lite.
+    pub modes: Vec<usize>,
+    /// Whether the migration was applied (false: cost model declined,
+    /// or the diff was empty).
+    pub migrated: bool,
+    /// Moved element copies (uni-pair placements count their single
+    /// stored copy once).
+    pub moved_elements: usize,
+    /// Migration byte volume ((N+1)·4 bytes per moved copy).
+    pub migration_bytes: u64,
+    /// Dirty plans updated in place (run splice).
+    pub plans_spliced: usize,
+    /// Dirty plans recompiled from their element list.
+    pub plans_rebuilt: usize,
+    /// The cost-model verdict and its inputs.
+    pub decision: RebalanceDecision,
+}
+
 /// Why a session could not be built.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SessionError {
@@ -219,6 +316,7 @@ pub struct TuckerSessionBuilder {
     executor: ExecutorChoice,
     net: NetModel,
     accounting: Option<TensorAccounting>,
+    rebalance: RebalancePolicy,
     seed: u64,
 }
 
@@ -235,6 +333,7 @@ impl TuckerSessionBuilder {
             executor: ExecutorChoice::Auto,
             net: NetModel::default(),
             accounting: None,
+            rebalance: RebalancePolicy::default(),
             seed: 0xBEEF,
         }
     }
@@ -304,6 +403,14 @@ impl TuckerSessionBuilder {
         self
     }
 
+    /// What the session does when ingest flags broken Theorem 6.1
+    /// bounds (default: [`RebalancePolicy::Manual`] — record and warn,
+    /// migrate on explicit [`TuckerSession::rebalance`]).
+    pub fn rebalance_policy(mut self, policy: RebalancePolicy) -> Self {
+        self.rebalance = policy;
+        self
+    }
+
     /// Seed for the distribution construction and the HOOI bootstrap.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
@@ -326,22 +433,32 @@ impl TuckerSessionBuilder {
         let ks = self.core.validate(ndim).map_err(SessionError::InvalidCore)?;
         let scheme = self.scheme.into_scheme();
         let mut rng = Rng::new(self.seed);
-        let dist =
-            scheme.distribute(&self.workload.tensor, &self.workload.idx, self.p, &mut rng);
-        // plan compilation honors the executor choice (serial stays
-        // serial end to end — the timing-noise contract)
-        let parallel =
-            crate::util::env::phase_executor_parallel(self.executor.as_option());
-        let modes = prepare_modes_with_executor(
+        let model = CostModel::default().with_net(self.net);
+        let plan = scheme.plan(
             &self.workload.tensor,
             &self.workload.idx,
-            &dist,
+            self.p,
+            &mut rng,
+            &ks,
+            &model,
+        );
+        // plan compilation honors the executor choice (serial stays
+        // serial end to end — the timing-noise contract); the plan's
+        // sharer indices are reused (cheap O(L_n) clones) so the build
+        // pays one Sharers pass per mode, not two
+        let parallel =
+            crate::util::env::phase_executor_parallel(self.executor.as_option());
+        let modes = prepare_modes_with_sharers(
+            &self.workload.tensor,
+            &self.workload.idx,
+            &plan.dist,
             &self.core,
             parallel,
+            plan.modes.iter().map(|m| m.sharers.clone()).collect(),
         );
         Ok(TuckerSession {
             workload: self.workload,
-            dist,
+            plan,
             core: self.core,
             ks,
             invocations: self.invocations,
@@ -350,12 +467,19 @@ impl TuckerSessionBuilder {
             executor: self.executor,
             net: self.net,
             accounting: self.accounting,
+            rebalance_policy: self.rebalance,
             seed: self.seed,
             modes,
             plan_builds: 1,
             plan_rebuilds: 0,
             plan_charge_pending: true,
             pending_ingest_secs: 0.0,
+            pending_redist_secs: 0.0,
+            pending_rebalance: Vec::new(),
+            pending_warned: false,
+            rebalances: 0,
+            rebalance_skips: 0,
+            redist_secs_total: 0.0,
             state: None,
         })
     }
@@ -366,7 +490,7 @@ impl TuckerSessionBuilder {
 /// decompositions and refinements over them.
 pub struct TuckerSession {
     workload: Arc<Workload>,
-    dist: Distribution,
+    plan: PlacementPlan,
     core: CoreRanks,
     ks: Vec<usize>,
     invocations: usize,
@@ -375,12 +499,23 @@ pub struct TuckerSession {
     executor: ExecutorChoice,
     net: NetModel,
     accounting: Option<TensorAccounting>,
+    rebalance_policy: RebalancePolicy,
     seed: u64,
     modes: Vec<ModeState>,
     plan_builds: usize,
     plan_rebuilds: usize,
     plan_charge_pending: bool,
     pending_ingest_secs: f64,
+    /// Simulated redistribution seconds not yet charged to a cluster
+    /// (`cat::REDIST` on the next run).
+    pending_redist_secs: f64,
+    /// Modes whose Theorem 6.1 bounds were violated by the last
+    /// structural ingest and have not been rebalanced since.
+    pending_rebalance: Vec<usize>,
+    pending_warned: bool,
+    rebalances: usize,
+    rebalance_skips: usize,
+    redist_secs_total: f64,
     state: Option<HooiState>,
 }
 
@@ -398,9 +533,24 @@ impl TuckerSession {
         &self.workload
     }
 
-    /// The compiled distribution (retained across decompose calls).
+    /// The raw compiled distribution (retained across decompose calls).
     pub fn distribution(&self) -> &Distribution {
-        &self.dist
+        &self.plan.dist
+    }
+
+    /// The live [`PlacementPlan`] — the distribution plus the per-mode
+    /// §4 metrics/sharers and the cost estimate it was priced at.
+    /// Refreshed by every structural ingest and every rebalance.
+    pub fn placement(&self) -> &PlacementPlan {
+        &self.plan
+    }
+
+    /// Modes whose Theorem 6.1 sharing bounds were violated by
+    /// streaming and have not been rebalanced since — non-empty means
+    /// the session is decomposing on a stale placement (under
+    /// `Never`/`Manual`; `Auto` clears it when a migration lands).
+    pub fn pending_rebalance(&self) -> &[usize] {
+        &self.pending_rebalance
     }
 
     /// The resolved per-mode core ranks `[K_0, …, K_{N−1}]`.
@@ -434,7 +584,7 @@ impl TuckerSession {
     }
 
     fn new_cluster(&mut self) -> SimCluster {
-        let mut cluster = SimCluster::new(self.dist.p).with_net(self.net);
+        let mut cluster = SimCluster::new(self.plan.dist.p).with_net(self.net);
         if let Some(parallel) = self.executor.as_option() {
             cluster = cluster.with_parallel(parallel);
         }
@@ -444,6 +594,12 @@ impl TuckerSession {
             cluster.elapsed.add(cat::TTM, self.pending_ingest_secs);
             self.pending_ingest_secs = 0.0;
         }
+        if self.pending_redist_secs > 0.0 {
+            // rebalance work (Lite re-plan + migration) is
+            // redistribution time, charged once to its own bucket
+            cluster.elapsed.add(cat::REDIST, self.pending_redist_secs);
+            self.pending_redist_secs = 0.0;
+        }
         cluster
     }
 
@@ -451,7 +607,7 @@ impl TuckerSession {
     /// compilation charge) and a bootstrapped [`HooiState`].
     fn start(&mut self) -> (SimCluster, HooiState) {
         let mut cluster = self.new_cluster();
-        cluster.elapsed.add(cat::DIST, self.dist.time.simulated_secs);
+        cluster.elapsed.add(cat::DIST, self.plan.dist.time.simulated_secs);
         if self.plan_charge_pending {
             // plan compilation is paid exactly once per session — charge
             // it to the first run's TTM bucket, amortized thereafter
@@ -460,7 +616,7 @@ impl TuckerSession {
         }
         let state = HooiState::init(
             &self.workload.tensor,
-            self.dist.p,
+            self.plan.dist.p,
             &self.core,
             self.seed,
             self.kernel,
@@ -469,10 +625,30 @@ impl TuckerSession {
         (cluster, state)
     }
 
+    /// Satellite of the rebalance loop: decomposing on a placement the
+    /// bounds revalidation flagged is legal but usually unintended —
+    /// say so once per flag event (Auto handles it itself).
+    fn warn_if_pending(&mut self) {
+        if self.pending_warned || self.pending_rebalance.is_empty() {
+            return;
+        }
+        if matches!(self.rebalance_policy, RebalancePolicy::Auto { .. }) {
+            return;
+        }
+        eprintln!(
+            "tucker-lite: warning: decomposing on a placement whose Theorem 6.1 \
+             bounds no longer hold (modes {:?}); call TuckerSession::rebalance() \
+             or configure RebalancePolicy::Auto",
+            self.pending_rebalance
+        );
+        self.pending_warned = true;
+    }
+
     /// Run the configured number of HOOI invocations from a fresh
     /// bootstrap (any previous refinement state is discarded; the
     /// compiled plans are reused).
     pub fn decompose(&mut self) -> Decomposition {
+        self.warn_if_pending();
         let (mut cluster, mut state) = self.start();
         state.sweeps(
             &self.workload.tensor,
@@ -492,6 +668,7 @@ impl TuckerSession {
     /// decomposition in flight, bootstraps and runs the configured
     /// invocations plus `invocations` in one pass.
     pub fn decompose_more(&mut self, invocations: usize) -> Decomposition {
+        self.warn_if_pending();
         let mut cluster;
         let sweeps;
         if self.state.is_none() {
@@ -543,7 +720,7 @@ impl TuckerSession {
     /// sweep). On error the session — tensor included — is unchanged.
     pub fn ingest(&mut self, delta: &TensorDelta) -> Result<IngestReport, DeltaError> {
         let ndim = self.workload.tensor.ndim();
-        let plan_count = ndim * self.dist.p;
+        let plan_count = ndim * self.plan.dist.p;
         let (n_appended, n_changed, n_removed) = delta.counts();
         let mut report = IngestReport {
             appended: n_appended,
@@ -554,6 +731,7 @@ impl TuckerSession {
             plan_count,
             rebalance_modes: Vec::new(),
             rebuild_secs: 0.0,
+            rebalance: None,
         };
         if delta.is_empty() {
             return Ok(report);
@@ -576,25 +754,32 @@ impl TuckerSession {
         if structural {
             let nnz_after = self.workload.tensor.nnz();
             let t = &self.workload.tensor;
-            if self.dist.uni {
-                // uni-policy schemes store N clones of one assignment:
-                // extend once and share the tail so the single-copy
-                // invariant (and Fig 17 accounting) stays true
+            if self.plan.dist.uni {
+                // uni-policy schemes alias one Arc'd assignment across
+                // all modes: detach the aliases, extend the single
+                // buffer in place (make_mut sees it unshared — no O(nnz)
+                // copy), then re-share, keeping the single-copy
+                // invariant (and Fig 17 accounting) true
                 let coords: Vec<u32> = applied
                     .appended
                     .iter()
                     .map(|&e| t.coord(0, e as usize))
                     .collect();
-                sched::incremental::extend_policy(
-                    &mut self.dist.policies[0],
-                    &self.modes[0].sharers,
-                    &coords,
-                    nnz_after,
-                );
-                let from = self.dist.policies[0].assign.len() - coords.len();
-                let tail = self.dist.policies[0].assign[from..].to_vec();
-                for pol in self.dist.policies[1..].iter_mut() {
-                    pol.assign.extend_from_slice(&tail);
+                {
+                    let (head, tail) = self.plan.dist.policies.split_at_mut(1);
+                    for pol in tail.iter_mut() {
+                        pol.assign = Arc::new(Vec::new());
+                    }
+                    sched::incremental::extend_policy(
+                        &mut head[0],
+                        &self.modes[0].sharers,
+                        &coords,
+                        nnz_after,
+                    );
+                }
+                let shared = self.plan.dist.policies[0].assign.clone();
+                for pol in self.plan.dist.policies[1..].iter_mut() {
+                    pol.assign = shared.clone();
                 }
             } else {
                 for n in 0..ndim {
@@ -604,7 +789,7 @@ impl TuckerSession {
                         .map(|&e| t.coord(n, e as usize))
                         .collect();
                     sched::incremental::extend_policy(
-                        &mut self.dist.policies[n],
+                        &mut self.plan.dist.policies[n],
                         &self.modes[n].sharers,
                         &coords,
                         nnz_after,
@@ -614,7 +799,7 @@ impl TuckerSession {
             for n in 0..ndim {
                 let bounds = sched::incremental::theorem_bounds(
                     &self.workload.idx[n],
-                    &self.dist.policies[n],
+                    &self.plan.dist.policies[n],
                 );
                 if !bounds.all_ok() {
                     report.rebalance_modes.push(n);
@@ -626,9 +811,9 @@ impl TuckerSession {
         let parallel =
             crate::util::env::phase_executor_parallel(self.executor.as_option());
         for n in 0..ndim {
-            let mut md = ModeDelta::empty(self.dist.p);
+            let mut md = ModeDelta::empty(self.plan.dist.p);
             {
-                let assign = &self.dist.policies[n].assign;
+                let assign = &self.plan.dist.policies[n].assign;
                 for &e in &applied.changed {
                     md.changed[assign[e as usize] as usize].push(e);
                 }
@@ -639,7 +824,7 @@ impl TuckerSession {
             let stats = self.modes[n].apply_delta(
                 &self.workload.tensor,
                 &self.workload.idx[n],
-                &self.dist,
+                &self.plan.dist,
                 n,
                 &self.core,
                 &md,
@@ -651,20 +836,224 @@ impl TuckerSession {
         }
         self.plan_rebuilds += report.plans_spliced + report.plans_rebuilt;
         self.pending_ingest_secs += report.rebuild_secs;
+        // 4. keep the plan's §4 provenance (metrics, cost) tracking the
+        // live placement, then close the rebalance loop per policy
+        if structural {
+            let model = self.cost_model();
+            // apply_delta just rebuilt every mode's sharers against the
+            // extended policies — hand them over instead of paying a
+            // second O(nnz) Sharers::build pass per mode
+            let sharers: Vec<&sched::Sharers> =
+                self.modes.iter().map(|st| &st.sharers).collect();
+            self.plan.refresh_from(&self.workload.idx, &sharers, &model);
+            if report.rebalance_modes.is_empty() {
+                self.pending_rebalance.clear();
+            } else {
+                // record first: a declined Auto migration must leave the
+                // flags visible (a landed one recomputes/clears them)
+                self.pending_rebalance = report.rebalance_modes.clone();
+                self.pending_warned = false;
+                if let RebalancePolicy::Auto { hooi_iters_amortization } =
+                    self.rebalance_policy
+                {
+                    let rb = self.rebalance_with(
+                        report.rebalance_modes.clone(),
+                        Some(hooi_iters_amortization),
+                    );
+                    report.rebalance = Some(rb);
+                }
+            }
+        }
         Ok(report)
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::default().with_net(self.net)
+    }
+
+    /// Re-plan the pending modes with Lite and migrate to the
+    /// re-planned placement — the explicit arm of the rebalance loop
+    /// (see the module docs). With nothing pending, every mode is
+    /// re-planned. The migration is applied *unconditionally* when the
+    /// diff is non-empty (the caller already decided); the returned
+    /// report still carries the cost-model verdict for inspection. An
+    /// empty diff is a no-op: no plan is touched.
+    ///
+    /// Only the diffed (mode, rank) TTM plans are spliced or rebuilt —
+    /// [`plan_rebuilds`](TuckerSession::plan_rebuilds) grows by exactly
+    /// the migration's dirty-plan count, never by a full re-prepare.
+    /// With a decomposition in flight the factors carry over as a warm
+    /// start, exactly as with [`ingest`](TuckerSession::ingest).
+    pub fn rebalance(&mut self) -> RebalanceReport {
+        let modes: Vec<usize> = if self.pending_rebalance.is_empty() {
+            (0..self.workload.tensor.ndim()).collect()
+        } else {
+            self.pending_rebalance.clone()
+        };
+        self.rebalance_with(modes, None)
+    }
+
+    /// Shared rebalance engine: re-plan `modes` with Lite, diff, decide
+    /// (`horizon`: `Some(h)` = §4 cost-model amortization over `h`
+    /// sweeps, `None` = explicit call, migrate on any non-empty diff),
+    /// and apply the migration through the HOOI layer when the verdict
+    /// says so.
+    fn rebalance_with(
+        &mut self,
+        modes: Vec<usize>,
+        horizon: Option<usize>,
+    ) -> RebalanceReport {
+        let t0 = Instant::now();
+        let model = self.cost_model();
+        let w = self.workload.clone();
+        let t = &w.tensor;
+        let idx = &w.idx;
+        let p = self.plan.dist.p;
+        let mut candidate = self.plan.dist.clone();
+        let mut replan_sim = 0.0f64;
+        for &n in &modes {
+            // deterministic per (seed, mode): a mode's re-plan does not
+            // depend on which other modes are in the set, so re-planning
+            // an already-rebalanced mode on an unchanged tensor
+            // reproduces its policy exactly (repeat rebalances over the
+            // same or smaller mode sets diff empty)
+            let mut rng = Rng::new(self.seed ^ 0x5EBA_1A5E ^ ((n as u64) << 32));
+            let (pol, sim) = sched::lite::plan_mode(t, &idx[n], p, &mut rng);
+            candidate.policies[n] = pol;
+            replan_sim += sim;
+        }
+        if candidate.uni && !modes.is_empty() {
+            // per-mode Lite policies break the single-assignment
+            // invariant; the candidate is multi-policy from here on
+            candidate.uni = false;
+        }
+        if candidate.scheme != "Lite" && !candidate.scheme.ends_with("+Lite-rebal") {
+            // provenance must say the placement is no longer purely the
+            // original scheme's: post-migration records (RunRecord
+            // scheme column, placement().scheme()) report the hybrid
+            candidate.scheme.push_str("+Lite-rebal");
+        }
+        let candidate_plan = PlacementPlan::compile(candidate, idx, &self.ks, &model);
+        let migration = self.plan.diff(&candidate_plan);
+        let migration_sim = migration.simulated_secs(&self.net);
+        let savings =
+            self.plan.cost.secs_per_sweep - candidate_plan.cost.secs_per_sweep;
+        let migrate = match horizon {
+            None => !migration.is_empty(),
+            Some(h) => {
+                !migration.is_empty()
+                    && savings > 0.0
+                    && savings * h as f64 >= replan_sim + migration_sim
+            }
+        };
+        let decision = RebalanceDecision {
+            current_secs_per_sweep: self.plan.cost.secs_per_sweep,
+            candidate_secs_per_sweep: candidate_plan.cost.secs_per_sweep,
+            savings_per_sweep: savings,
+            replan_secs: replan_sim,
+            migration_secs: migration_sim,
+            horizon,
+            migrate,
+        };
+        let mut report = RebalanceReport {
+            modes,
+            migrated: false,
+            moved_elements: migration.moved_elements,
+            migration_bytes: migration.bytes,
+            plans_spliced: 0,
+            plans_rebuilt: 0,
+            decision,
+        };
+        // the re-plan really ran either way: account for it
+        self.pending_redist_secs += replan_sim;
+        self.redist_secs_total += replan_sim;
+        if !migrate {
+            if horizon.is_some() {
+                // only a cost-model decline counts as a skip; an
+                // explicit rebalance whose diff came back empty is a
+                // no-op, not a decision
+                self.rebalance_skips += 1;
+            }
+            return report;
+        }
+        // apply: exactly the diffed (mode, rank) plans, via the same
+        // splice/rebuild machinery ingest uses
+        let parallel =
+            crate::util::env::phase_executor_parallel(self.executor.as_option());
+        let mut rebuild_secs = 0.0f64;
+        for mm in &migration.per_mode {
+            if mm.is_empty() {
+                // π_n unchanged: sharers/plans stay valid, but the FM
+                // transfer pattern depends on the *other* modes'
+                // (migrated) policies — refresh it so memory/volume
+                // accounting matches a fresh prepare
+                self.modes[mm.mode].refresh_fm(
+                    &idx[mm.mode],
+                    &candidate_plan.dist,
+                    mm.mode,
+                );
+                continue;
+            }
+            let stats = self.modes[mm.mode].apply_migration(
+                t,
+                &idx[mm.mode],
+                &candidate_plan.dist,
+                mm.mode,
+                &self.core,
+                &mm.outgoing,
+                &mm.incoming,
+                parallel,
+            );
+            report.plans_spliced += stats.spliced;
+            report.plans_rebuilt += stats.rebuilt;
+            rebuild_secs += stats.rebuild_secs;
+        }
+        self.plan_rebuilds += report.plans_spliced + report.plans_rebuilt;
+        self.pending_ingest_secs += rebuild_secs;
+        self.pending_redist_secs += migration_sim;
+        self.redist_secs_total += migration_sim;
+        // swap the plan in, folding the redistribution into the
+        // distribution time (Fig 16's quantity keeps growing with the
+        // session's total distribution investment)
+        let old_time = self.plan.dist.time;
+        self.plan = candidate_plan;
+        self.plan.dist.time = DistTime {
+            serial_secs: old_time.serial_secs + t0.elapsed().as_secs_f64(),
+            simulated_secs: old_time.simulated_secs + replan_sim + migration_sim,
+        };
+        self.rebalances += 1;
+        report.migrated = true;
+        // revalidate: a fresh Lite mode satisfies Theorem 6.1, so this
+        // normally clears; a mode left un-replanned keeps its flag
+        self.pending_rebalance = (0..t.ndim())
+            .filter(|&n| {
+                !sched::incremental::theorem_bounds(
+                    &idx[n],
+                    &self.plan.dist.policies[n],
+                )
+                .all_ok()
+            })
+            .collect();
+        self.pending_warned = false;
+        report
     }
 
     fn finish(&mut self, mut cluster: SimCluster) -> Decomposition {
         let state = self.state.as_ref().expect("decomposition state in flight");
         let out = state.outcome(
             &self.workload.tensor,
-            &self.dist,
+            &self.plan.dist,
             &self.modes,
             &mut cluster,
             self.accounting,
         );
-        let record =
-            collect_record(&self.workload, &self.dist, &self.ks, &cluster, &out);
+        let mut record =
+            collect_record(&self.workload, &self.plan.dist, &self.ks, &cluster, &out);
+        // rebalance provenance: session-lifetime counters (the cluster
+        // bucket only sees the charge of the run after a rebalance)
+        record.rebalances = self.rebalances;
+        record.rebalance_skips = self.rebalance_skips;
+        record.redist_secs = self.redist_secs_total;
         Decomposition {
             factors: out.factors,
             core: out.core,
@@ -699,6 +1088,11 @@ pub struct IngestReport {
     /// Sum over modes of the splice/rebuild makespans (charged to the
     /// next run's TTM bucket, like plan compilation).
     pub rebuild_secs: f64,
+    /// Under [`RebalancePolicy::Auto`], the rebalance attempt this
+    /// ingest triggered (cost-model verdict included); `None` when no
+    /// mode was flagged or the policy leaves the decision to the
+    /// caller.
+    pub rebalance: Option<RebalanceReport>,
 }
 
 impl IngestReport {
@@ -880,6 +1274,52 @@ mod tests {
         // an empty delta is a no-op
         let rep = s.ingest(&TensorDelta::new()).unwrap();
         assert_eq!(rep.plans_touched(), 0);
+    }
+
+    #[test]
+    fn placement_plan_is_exposed_and_refreshed() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w)
+            .ranks(4)
+            .core(CoreRanks::Uniform(3))
+            .seed(2)
+            .build()
+            .unwrap();
+        assert_eq!(s.placement().scheme(), "Lite");
+        assert_eq!(s.placement().p(), 4);
+        let cost0 = s.placement().cost.secs_per_sweep;
+        assert!(cost0 > 0.0);
+        assert!(s.pending_rebalance().is_empty());
+        s.ingest(&TensorDelta::new().append(&[0, 0, 0], 0.5)).unwrap();
+        // the plan's metrics track the live (extended) placement
+        let total: usize = s.placement().modes[0].metrics.e_counts.iter().sum();
+        assert_eq!(total, s.workload().tensor.nnz());
+    }
+
+    #[test]
+    fn explicit_rebalance_is_idempotent_on_an_unchanged_tensor() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w)
+            .ranks(3)
+            .core(CoreRanks::Uniform(3))
+            .seed(5)
+            .build()
+            .unwrap();
+        // nothing pending → every mode is re-planned; the first call may
+        // migrate (the re-plan RNG differs from the build RNG) …
+        let rb1 = s.rebalance();
+        assert_eq!(rb1.modes, vec![0, 1, 2]);
+        assert!(rb1.decision.horizon.is_none());
+        // … but the re-plan is deterministic, so an immediate second
+        // call reproduces the placement exactly: empty diff, no plan
+        // touched — the no-op contract
+        let n = s.plan_rebuilds();
+        let rb2 = s.rebalance();
+        assert!(!rb2.migrated, "identical re-plan must not migrate");
+        assert_eq!(rb2.moved_elements, 0);
+        assert_eq!(rb2.plans_spliced + rb2.plans_rebuilt, 0);
+        assert_eq!(s.plan_rebuilds(), n, "empty diff ⇒ no plan rebuilds");
+        assert!(s.decompose().fit().is_finite());
     }
 
     #[test]

@@ -31,6 +31,11 @@ pub mod cat {
     pub const CORE: &str = "core";
     /// Distribution construction (Fig 16).
     pub const DIST: &str = "dist";
+    /// Streaming rebalance redistribution: Lite re-plan of the flagged
+    /// modes plus the element migration a `MigrationPlan` puts on the
+    /// wire. Charged by the session when a rebalance lands, reported as
+    /// `RunRecord::redist_secs` alongside the Fig 16 distribution time.
+    pub const REDIST: &str = "redist";
     /// Oracle query communication (x/y reductions).
     pub const COMM_SVD: &str = "comm-svd";
     /// Factor-matrix transfer communication.

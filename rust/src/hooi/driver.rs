@@ -144,7 +144,7 @@ pub fn prepare_modes(
     core: &CoreRanks,
 ) -> Vec<ModeState> {
     let parallel = crate::util::env::phase_executor_parallel(None);
-    prepare_modes_impl(t, idx, dist, core, true, parallel)
+    prepare_modes_impl(t, idx, dist, core, true, parallel, None)
 }
 
 /// [`prepare_modes`] with an explicit executor choice for the per-rank
@@ -158,7 +158,23 @@ pub fn prepare_modes_with_executor(
     core: &CoreRanks,
     parallel: bool,
 ) -> Vec<ModeState> {
-    prepare_modes_impl(t, idx, dist, core, true, parallel)
+    prepare_modes_impl(t, idx, dist, core, true, parallel, None)
+}
+
+/// [`prepare_modes_with_executor`] reusing per-mode sharer indices the
+/// caller already built against `dist` (e.g. a `PlacementPlan`'s —
+/// the session hands them over so building a session does not pay the
+/// O(nnz) `Sharers::build` pass twice per mode).
+pub fn prepare_modes_with_sharers(
+    t: &SparseTensor,
+    idx: &[SliceIndex],
+    dist: &Distribution,
+    core: &CoreRanks,
+    parallel: bool,
+    sharers: Vec<Sharers>,
+) -> Vec<ModeState> {
+    assert_eq!(sharers.len(), t.ndim(), "one sharer index per mode");
+    prepare_modes_impl(t, idx, dist, core, true, parallel, Some(sharers))
 }
 
 /// Metrics/memory-only variant: skips TTM plan compilation. For
@@ -170,7 +186,7 @@ pub fn prepare_modes_unplanned(
     dist: &Distribution,
     core: &CoreRanks,
 ) -> Vec<ModeState> {
-    prepare_modes_impl(t, idx, dist, core, false, false)
+    prepare_modes_impl(t, idx, dist, core, false, false, None)
 }
 
 fn prepare_modes_impl(
@@ -180,11 +196,18 @@ fn prepare_modes_impl(
     core: &CoreRanks,
     build_plans: bool,
     parallel: bool,
+    precomputed: Option<Vec<Sharers>>,
 ) -> Vec<ModeState> {
     let ks = core.resolve(t.ndim());
+    let mut pre: Vec<Option<Sharers>> = match precomputed {
+        Some(v) => v.into_iter().map(Some).collect(),
+        None => (0..t.ndim()).map(|_| None).collect(),
+    };
     (0..t.ndim())
         .map(|n| {
-            let sharers = Sharers::build(&idx[n], &dist.policies[n]);
+            let sharers = pre[n]
+                .take()
+                .unwrap_or_else(|| Sharers::build(&idx[n], &dist.policies[n]));
             let rowmap = RowMap::build(&sharers, dist.p);
             let fm = fm_pattern(&idx[n], dist, n, &rowmap, ks[n]);
             let elems = dist.policies[n].rank_elements(&idx[n]);
@@ -389,6 +412,115 @@ impl ModeState {
             }
             stats.rebuild_secs = stats.rebuild_secs.max(secs);
         }
+        stats
+    }
+
+    /// Recompute only the factor-matrix transfer pattern against a new
+    /// distribution. A migration that left this mode's own policy π_n
+    /// untouched keeps its sharers, σ_n and plans valid, but the FM
+    /// pattern is a function of the *other* modes' policies and must
+    /// track them.
+    pub fn refresh_fm(&mut self, idx_n: &SliceIndex, dist: &Distribution, n: usize) {
+        self.fm = fm_pattern(idx_n, dist, n, &self.rowmap, self.k_n);
+    }
+
+    /// Apply one mode's share of a placement migration (a
+    /// `MigrationPlan` produced by diffing two placements): refresh the
+    /// structural state (sharers, σ_n, FM pattern, rank element lists)
+    /// under the *new* distribution, then update exactly the dirty
+    /// ranks' plans — a rank gaining only a small batch of
+    /// strictly-newer elements splices them into its runs
+    /// (`TtmPlan::splice_append`); any rank losing elements, or gaining
+    /// a large or older batch, recompiles its plan from the new element
+    /// list. Clean ranks keep their plans untouched and `prepare_modes`
+    /// never reruns.
+    ///
+    /// Either path yields the exact stream a fresh
+    /// `prepare_modes` on the new distribution would compile (the
+    /// splice guard only fires when each incoming id exceeds every id
+    /// the rank held, which pins the element to its run's tail — the
+    /// same position the stable build sort produces), so migrating and
+    /// rebuilding from scratch are bit-identical.
+    ///
+    /// `dist` must already hold the migrated policies for mode `n`;
+    /// `outgoing`/`incoming` are that mode's per-rank moved-element
+    /// sets, ascending by id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_migration(
+        &mut self,
+        t: &SparseTensor,
+        idx_n: &SliceIndex,
+        dist: &Distribution,
+        n: usize,
+        core: &CoreRanks,
+        outgoing: &[Vec<u32>],
+        incoming: &[Vec<u32>],
+        parallel: bool,
+    ) -> DeltaStats {
+        // ownership moved: the sharing structure, row ownership and
+        // transfer patterns are all stale — rebuild them (O(nnz + L_n),
+        // cheap next to plan compilation, deterministic ⇒ identical to
+        // a fresh prepare)
+        self.sharers = Sharers::build(idx_n, &dist.policies[n]);
+        self.rowmap = RowMap::build(&self.sharers, dist.p);
+        self.fm = fm_pattern(idx_n, dist, n, &self.rowmap, self.k_n);
+        let new_elems = dist.policies[n].rank_elements(idx_n);
+        if self.plans.is_empty() {
+            // metrics-only states hold no plans to migrate
+            self.elems = new_elems;
+            return DeltaStats::default();
+        }
+        // the splice guard needs each rank's pre-migration id ceiling
+        let old_max: Vec<Option<u32>> =
+            self.elems.iter().map(|es| es.iter().copied().max()).collect();
+        let mut stats = DeltaStats::default();
+        {
+            let plans = &mut self.plans;
+            let mut tasks = Vec::new();
+            for (rank, (((plan, es), inc), out)) in plans
+                .iter_mut()
+                .zip(new_elems.iter())
+                .zip(incoming.iter())
+                .zip(outgoing.iter())
+                .enumerate()
+            {
+                if inc.is_empty() && out.is_empty() {
+                    continue;
+                }
+                // splice only incoming-only batches of strictly-newer
+                // elements, under the same size cap as streaming
+                // appends; everything else recompiles this rank's plan
+                let can_splice = out.is_empty()
+                    && inc.len() <= 64
+                    && inc.len() * 4 <= plan.nnz().max(1)
+                    && match old_max[rank] {
+                        None => true,
+                        Some(m) => inc.iter().all(|&e| e > m),
+                    };
+                tasks.push(move || {
+                    if can_splice {
+                        for &e in inc {
+                            let (row, a, b, c) = plan_coords(t, plan, e as usize);
+                            plan.splice_append(row, a, b, c, t.vals[e as usize]);
+                        }
+                        false
+                    } else {
+                        *plan = TtmPlan::build_with(t, n, es, core);
+                        true
+                    }
+                });
+            }
+            let timed = crate::dist::run_scoped(tasks, parallel);
+            for (was_rebuilt, secs) in timed {
+                if was_rebuilt {
+                    stats.rebuilt += 1;
+                } else {
+                    stats.spliced += 1;
+                }
+                stats.rebuild_secs = stats.rebuild_secs.max(secs);
+            }
+        }
+        self.elems = new_elems;
         stats
     }
 }

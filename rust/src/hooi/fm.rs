@@ -99,7 +99,7 @@ mod tests {
         Distribution {
             scheme: "uni".into(),
             p,
-            policies: vec![ModePolicy { p, assign }; t.ndim()],
+            policies: vec![ModePolicy::new(p, assign); t.ndim()],
             uni: true,
             time: DistTime::default(),
         }
@@ -140,9 +140,9 @@ mod tests {
             scheme: "multi".into(),
             p,
             policies: vec![
-                ModePolicy { p, assign: vec![0, 0, 1] },
-                ModePolicy { p, assign: vec![1, 0, 1] },
-                ModePolicy { p, assign: vec![0, 1, 0] },
+                ModePolicy::new(p, vec![0, 0, 1]),
+                ModePolicy::new(p, vec![1, 0, 1]),
+                ModePolicy::new(p, vec![0, 1, 0]),
             ],
             uni: false,
             time: DistTime::default(),

@@ -307,7 +307,7 @@ mod tests {
             .collect();
         let assign: Vec<u32> =
             (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect();
-        let pol = ModePolicy { p, assign };
+        let pol = ModePolicy::new(p, assign);
         let idx = SliceIndex::build(&t, 0);
         let sharers = Sharers::build(&idx, &pol);
         let rowmap = RowMap::build(&sharers, p);

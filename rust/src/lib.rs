@@ -43,7 +43,13 @@
 //! them atomically, extends the placement with Lite's per-bin load
 //! discipline ([`sched::incremental`]) and splices/rebuilds only the
 //! dirty (mode, rank) TTM plans — bit-identical to a fresh build on the
-//! mutated tensor, never a full re-prepare.
+//! mutated tensor, never a full re-prepare. When drift breaks a mode's
+//! Theorem 6.1 bounds, the rebalance loop closes it: the session's
+//! [`sched::PlacementPlan`] (policies + §4 metrics + cost estimate)
+//! diffs against a Lite re-plan into a [`sched::MigrationPlan`] — the
+//! exact per-(mode, rank) moved-element sets — and a
+//! `RebalancePolicy::Auto` session migrates only when the cost model
+//! says the per-sweep savings amortize the migration.
 //!
 //! Typed options replace the `TUCKER_*` env vars (which remain as
 //! fallbacks — precedence table in [`util::env`]). Layer by layer:
@@ -53,7 +59,9 @@
 //!   experiment harness for Figs 9–17.
 //! - [`tensor`]: COO sparse tensors, slice indexing, streaming deltas,
 //!   FROSTT I/O, the Fig 9 synthetic dataset analogues.
-//! - [`sched`]: the distribution schemes + the paper's metrics
+//! - [`sched`]: the distribution schemes, the first-class
+//!   [`sched::PlacementPlan`] (policies + §4 metrics + cost model) with
+//!   [`sched::MigrationPlan`] diffs, the paper's metrics
 //!   (E_max, R_sum, R_max), the σ_n row-index mapping, and the
 //!   incremental policy extension for streamed appends.
 //! - [`dist`]: the simulated P-rank cluster (makespan timing, α–β comms)

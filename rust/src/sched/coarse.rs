@@ -44,7 +44,7 @@ impl Scheme for CoarseG {
         false
     }
 
-    fn distribute(
+    fn policies(
         &self,
         t: &SparseTensor,
         idx: &[SliceIndex],
@@ -97,7 +97,7 @@ fn random_blocks(t: &SparseTensor, idx: &SliceIndex, p: usize, rng: &mut Rng) ->
             filled = 0;
         }
     }
-    ModePolicy { p, assign }
+    ModePolicy::new(p, assign)
 }
 
 /// Classical BPF: largest-first over slices, each to the least-loaded rank.
@@ -114,7 +114,7 @@ fn best_fit(t: &SparseTensor, idx: &SliceIndex, p: usize) -> ModePolicy {
         }
         load[rank] += idx.slice_len(l);
     }
-    ModePolicy { p, assign }
+    ModePolicy::new(p, assign)
 }
 
 #[cfg(test)]

@@ -1,0 +1,196 @@
+//! The §4 cost model: price one HOOI sweep directly from a placement's
+//! fundamental metrics (E_n^max, R_n^sum, R_n^max), so two candidate
+//! placements can be compared — and a migration amortized — *without*
+//! running either one.
+//!
+//! Per mode n with core rank K_n and K̂_n = Π_{j≠n} K_j:
+//!
+//! - **TTM compute** — the bottleneck rank assembles E_n^max fused
+//!   Kronecker contributions of width K̂_n: `2·E_max·K̂` flops.
+//! - **SVD compute** — the Lanczos oracle issues Q_n = 4·K_n matvec
+//!   queries (the same query-count convention Fig 13 uses); the
+//!   bottleneck rank touches its R_n^max shared slices at width K̂_n
+//!   per query: `2·Q·R_max·K̂` flops.
+//! - **Oracle communication** — Q_n·(R_n^sum − L_n^nonempty) units
+//!   (§4.2: each query moves one unit per redundant sharer).
+//! - **FM communication** — K_n·(R_n^sum − L_n^nonempty) units (the
+//!   §4.2 uni-policy transfer identity, used as the model for every
+//!   scheme; the multi-policy exact pattern is measured, not modeled).
+//!
+//! Seconds combine the flop terms at [`CostModel::flops_per_sec`] and
+//! the unit terms under the α–β [`NetModel`] — the same network model
+//! the simulated cluster charges, so predicted and simulated costs are
+//! commensurable.
+
+use super::metrics::ModeMetrics;
+use crate::dist::NetModel;
+
+/// How metric counts translate into seconds: an effective per-rank flop
+/// rate plus the cluster's α–β network model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// α–β parameters for the communication terms.
+    pub net: NetModel,
+    /// Effective per-rank compute rate for the flop terms. The default
+    /// (2 GFLOP/s) is deliberately conservative — what matters for the
+    /// rebalance decision is the *ratio* of sweep savings to migration
+    /// time, and both sides use the same constants.
+    pub flops_per_sec: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { net: NetModel::default(), flops_per_sec: 2e9 }
+    }
+}
+
+impl CostModel {
+    /// Same flop rate, explicit network parameters (sessions pass their
+    /// configured [`NetModel`] so predictions match their cluster).
+    pub fn with_net(mut self, net: NetModel) -> CostModel {
+        self.net = net;
+        self
+    }
+}
+
+/// One mode's share of a [`CostEstimate`].
+#[derive(Debug, Clone, Default)]
+pub struct ModeCost {
+    pub mode: usize,
+    /// Bottleneck-rank TTM flops per sweep: 2·E_n^max·K̂_n.
+    pub ttm_flops: f64,
+    /// Bottleneck-rank SVD flops per sweep: 2·Q_n·R_n^max·K̂_n.
+    pub svd_flops: f64,
+    /// Oracle query volume per sweep in units: Q_n·(R_n^sum − L_n).
+    pub oracle_units: f64,
+    /// Factor-matrix transfer volume per sweep in units: K_n·(R_n^sum − L_n).
+    pub fm_units: f64,
+    /// This mode's modeled seconds per sweep.
+    pub secs: f64,
+}
+
+/// Predicted cost of one HOOI sweep under a placement — the quantity
+/// `TuckerSession`'s auto-rebalance compares between the live plan and
+/// a Lite re-plan.
+#[derive(Debug, Clone, Default)]
+pub struct CostEstimate {
+    pub per_mode: Vec<ModeCost>,
+    /// Σ over modes of the flop terms.
+    pub flops_per_sweep: f64,
+    /// Σ over modes of the communication terms, in units (one f32).
+    pub comm_units_per_sweep: f64,
+    /// Σ over modes of the modeled seconds.
+    pub secs_per_sweep: f64,
+}
+
+impl CostEstimate {
+    /// Price a sweep from per-mode metrics and core ranks. `metrics`
+    /// and `ks` are in mode order and must have equal length.
+    pub fn from_metrics(
+        metrics: &[&ModeMetrics],
+        ks: &[usize],
+        model: &CostModel,
+    ) -> CostEstimate {
+        assert_eq!(metrics.len(), ks.len(), "one core rank per mode");
+        let mut per_mode = Vec::with_capacity(ks.len());
+        let (mut flops, mut units, mut secs) = (0.0f64, 0.0f64, 0.0f64);
+        for (n, (m, &k_n)) in metrics.iter().zip(ks.iter()).enumerate() {
+            let khat: f64 = ks
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != n)
+                .map(|(_, &k)| k as f64)
+                .product();
+            let q_n = 4.0 * k_n as f64;
+            let redundant = m.r_sum.saturating_sub(m.l_nonempty) as f64;
+            let ttm_flops = 2.0 * m.e_max as f64 * khat;
+            let svd_flops = 2.0 * q_n * m.r_max as f64 * khat;
+            let oracle_units = q_n * redundant;
+            let fm_units = k_n as f64 * redundant;
+            let mode_secs = (ttm_flops + svd_flops) / model.flops_per_sec
+                + model.net.alpha * (q_n + 1.0)
+                + model.net.beta * (oracle_units + fm_units);
+            flops += ttm_flops + svd_flops;
+            units += oracle_units + fm_units;
+            secs += mode_secs;
+            per_mode.push(ModeCost {
+                mode: n,
+                ttm_flops,
+                svd_flops,
+                oracle_units,
+                fm_units,
+                secs: mode_secs,
+            });
+        }
+        CostEstimate {
+            per_mode,
+            flops_per_sweep: flops,
+            comm_units_per_sweep: units,
+            secs_per_sweep: secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::policy::ModePolicy;
+    use crate::tensor::slices::build_all;
+    use crate::tensor::SparseTensor;
+    use crate::util::rng::Rng;
+
+    fn metrics_for(assigns: &[Vec<u32>], p: usize, t: &SparseTensor) -> Vec<ModeMetrics> {
+        let idx = build_all(t);
+        idx.iter()
+            .zip(assigns)
+            .map(|(i, a)| ModeMetrics::compute(i, &ModePolicy::new(p, a.clone())))
+            .collect()
+    }
+
+    #[test]
+    fn worse_balance_costs_more() {
+        let mut rng = Rng::new(5);
+        let t = SparseTensor::random(vec![20, 15, 10], 900, &mut rng);
+        let p = 3usize;
+        // balanced round-robin vs everything-on-rank-0
+        let balanced: Vec<Vec<u32>> =
+            (0..3).map(|_| (0..t.nnz()).map(|e| (e % p) as u32).collect()).collect();
+        let skewed: Vec<Vec<u32>> = (0..3).map(|_| vec![0u32; t.nnz()]).collect();
+        let model = CostModel::default();
+        let mb = metrics_for(&balanced, p, &t);
+        let ms = metrics_for(&skewed, p, &t);
+        let ks = [4usize, 4, 4];
+        let cb = CostEstimate::from_metrics(&mb.iter().collect::<Vec<_>>(), &ks, &model);
+        let cs = CostEstimate::from_metrics(&ms.iter().collect::<Vec<_>>(), &ks, &model);
+        // skewed E_max = nnz (3x the balanced one) dominates the TTM term
+        assert!(cs.flops_per_sweep > cb.flops_per_sweep);
+        // but round-robin scattering shares every slice everywhere:
+        // its redundancy (comm units) exceeds the single-rank layout's
+        assert!(cb.comm_units_per_sweep > cs.comm_units_per_sweep);
+        assert!(cb.secs_per_sweep > 0.0 && cs.secs_per_sweep > 0.0);
+    }
+
+    #[test]
+    fn estimate_shapes_and_sums() {
+        let mut rng = Rng::new(6);
+        let t = SparseTensor::random(vec![10, 8, 6, 4], 400, &mut rng);
+        let p = 4usize;
+        let assigns: Vec<Vec<u32>> = (0..4)
+            .map(|_| (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect())
+            .collect();
+        let ms = metrics_for(&assigns, p, &t);
+        let ks = [3usize, 3, 2, 2];
+        let est = CostEstimate::from_metrics(
+            &ms.iter().collect::<Vec<_>>(),
+            &ks,
+            &CostModel::default(),
+        );
+        assert_eq!(est.per_mode.len(), 4);
+        let flops: f64 = est.per_mode.iter().map(|m| m.ttm_flops + m.svd_flops).sum();
+        let units: f64 = est.per_mode.iter().map(|m| m.oracle_units + m.fm_units).sum();
+        let secs: f64 = est.per_mode.iter().map(|m| m.secs).sum();
+        assert!((flops - est.flops_per_sweep).abs() < 1e-6);
+        assert!((units - est.comm_units_per_sweep).abs() < 1e-6);
+        assert!((secs - est.secs_per_sweep).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Placement diffing: turn two distributions over the *same* tensor
+//! into the exact element movements separating them — the object
+//! `TuckerSession::rebalance` applies through the HOOI layer's
+//! splice/rebuild machinery instead of re-running `prepare_modes`.
+//!
+//! A [`MigrationPlan`] is exact, not approximate: per (mode, rank) it
+//! lists precisely the element ids leaving and arriving, so the HOOI
+//! layer can touch exactly the dirty (mode, rank) TTM plans and the
+//! byte volume below is what a real redistribution would put on the
+//! wire ((N+1)·4 bytes per moved element copy; a uni→uni pair moves its
+//! single stored copy once).
+
+use super::policy::Distribution;
+use crate::dist::NetModel;
+
+/// One mode's share of a [`MigrationPlan`].
+#[derive(Debug, Clone)]
+pub struct ModeMigration {
+    pub mode: usize,
+    /// Per source rank: element ids leaving it, ascending.
+    pub outgoing: Vec<Vec<u32>>,
+    /// Per destination rank: element ids arriving, ascending.
+    pub incoming: Vec<Vec<u32>>,
+    /// Per source rank `(messages, units)` — one message per distinct
+    /// destination, (N+1) units per moved element — in the shape
+    /// `SimCluster::p2p` charges.
+    pub per_rank_sends: Vec<(u64, u64)>,
+}
+
+impl ModeMigration {
+    /// Elements changing owner along this mode.
+    pub fn moved(&self) -> usize {
+        self.incoming.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.moved() == 0
+    }
+
+    /// (mode, rank) pairs this migration dirties: ranks gaining *or*
+    /// losing elements (either invalidates the rank's TTM plan).
+    pub fn dirty_ranks(&self) -> usize {
+        self.incoming
+            .iter()
+            .zip(&self.outgoing)
+            .filter(|(inc, out)| !inc.is_empty() || !out.is_empty())
+            .count()
+    }
+}
+
+/// The exact movements turning one placement into another: per-(mode,
+/// rank) moved-element sets plus the migration byte volume.
+#[derive(Debug, Clone)]
+pub struct MigrationPlan {
+    /// Per-mode movements, in mode order.
+    pub per_mode: Vec<ModeMigration>,
+    /// Both endpoints are uni-policy: one stored copy moves (volume
+    /// accounting charges mode 0 only; the per-mode TTM plans are still
+    /// all dirtied).
+    pub uni_pair: bool,
+    /// Moved element copies summed over the *stored* copies (mode 0
+    /// only for a uni pair) — `bytes = moved_elements ·
+    /// bytes_per_element` by construction.
+    pub moved_elements: usize,
+    /// Bytes per moved element copy: (N+1)·4 (coordinates + value).
+    pub bytes_per_element: u64,
+    /// Total migration byte volume.
+    pub bytes: u64,
+}
+
+impl MigrationPlan {
+    /// Diff two distributions over the same tensor (equal nnz, equal P,
+    /// equal order — asserted).
+    pub fn compute(from: &Distribution, to: &Distribution) -> MigrationPlan {
+        assert_eq!(from.p, to.p, "diff requires equal world size");
+        assert_eq!(from.ndim(), to.ndim(), "diff requires equal order");
+        let ndim = from.ndim();
+        let p = from.p;
+        let bpe = (ndim as u64 + 1) * 4;
+        let mut per_mode = Vec::with_capacity(ndim);
+        for n in 0..ndim {
+            let a = &from.policies[n].assign;
+            let b = &to.policies[n].assign;
+            assert_eq!(a.len(), b.len(), "diff requires the same tensor (nnz)");
+            let mut outgoing = vec![Vec::new(); p];
+            let mut incoming = vec![Vec::new(); p];
+            let mut pairs = vec![false; p * p];
+            for (e, (&src, &dst)) in a.iter().zip(b.iter()).enumerate() {
+                if src != dst {
+                    outgoing[src as usize].push(e as u32);
+                    incoming[dst as usize].push(e as u32);
+                    pairs[src as usize * p + dst as usize] = true;
+                }
+            }
+            let per_rank_sends = (0..p)
+                .map(|r| {
+                    let msgs = (0..p).filter(|&d| pairs[r * p + d]).count() as u64;
+                    let units = outgoing[r].len() as u64 * (ndim as u64 + 1);
+                    (msgs, units)
+                })
+                .collect();
+            per_mode.push(ModeMigration { mode: n, outgoing, incoming, per_rank_sends });
+        }
+        let uni_pair = from.uni && to.uni;
+        let moved_elements: usize = if uni_pair {
+            per_mode[0].moved()
+        } else {
+            per_mode.iter().map(ModeMigration::moved).sum()
+        };
+        MigrationPlan {
+            per_mode,
+            uni_pair,
+            moved_elements,
+            bytes_per_element: bpe,
+            bytes: moved_elements as u64 * bpe,
+        }
+    }
+
+    /// No element changes owner along any mode.
+    pub fn is_empty(&self) -> bool {
+        self.per_mode.iter().all(ModeMigration::is_empty)
+    }
+
+    /// Total dirty (mode, rank) pairs — exactly the TTM plans
+    /// `ModeState::apply_migration` will splice or rebuild.
+    pub fn dirty_plans(&self) -> usize {
+        self.per_mode.iter().map(ModeMigration::dirty_ranks).sum()
+    }
+
+    /// Simulated migration time under an α–β model: per stored copy a
+    /// p2p round (rounds overlap across ranks, so each mode charges its
+    /// worst sender — the same semantics as `SimCluster::p2p`); a uni
+    /// pair moves one copy.
+    pub fn simulated_secs(&self, net: &NetModel) -> f64 {
+        let copies: &[ModeMigration] = if self.uni_pair {
+            &self.per_mode[..1]
+        } else {
+            &self.per_mode
+        };
+        copies
+            .iter()
+            .map(|m| {
+                m.per_rank_sends
+                    .iter()
+                    .map(|&(msgs, units)| net.xfer(msgs, units))
+                    .fold(0.0, f64::max)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::policy::{DistTime, ModePolicy};
+
+    fn dist(p: usize, assigns: Vec<Vec<u32>>, uni: bool) -> Distribution {
+        Distribution {
+            scheme: "test".into(),
+            p,
+            policies: assigns.into_iter().map(|a| ModePolicy::new(p, a)).collect(),
+            uni,
+            time: DistTime::default(),
+        }
+    }
+
+    #[test]
+    fn diff_with_self_is_empty() {
+        let d = dist(3, vec![vec![0, 1, 2, 0], vec![1, 1, 0, 2]], false);
+        let m = MigrationPlan::compute(&d, &d);
+        assert!(m.is_empty());
+        assert_eq!(m.moved_elements, 0);
+        assert_eq!(m.bytes, 0);
+        assert_eq!(m.dirty_plans(), 0);
+        assert_eq!(m.simulated_secs(&NetModel::default()), 0.0);
+    }
+
+    #[test]
+    fn moved_sets_are_exact_and_disjoint() {
+        let a = dist(3, vec![vec![0, 0, 1, 2, 1], vec![0, 1, 1, 2, 2]], false);
+        let b = dist(3, vec![vec![0, 1, 1, 0, 2], vec![0, 1, 2, 2, 2]], false);
+        let m = MigrationPlan::compute(&a, &b);
+        // mode 0: e1 0→1, e3 2→0, e4 1→2; mode 1: e2 1→2
+        let m0 = &m.per_mode[0];
+        assert_eq!(m0.moved(), 3);
+        assert_eq!(m0.outgoing[0], vec![1]);
+        assert_eq!(m0.incoming[1], vec![1]);
+        assert_eq!(m0.outgoing[2], vec![3]);
+        assert_eq!(m0.incoming[0], vec![3]);
+        assert_eq!(m0.outgoing[1], vec![4]);
+        assert_eq!(m0.incoming[2], vec![4]);
+        assert_eq!(m.per_mode[1].moved(), 1);
+        // every rank both sends and receives in mode 0 → 3 dirty there
+        assert_eq!(m0.dirty_ranks(), 3);
+        assert_eq!(m.per_mode[1].dirty_ranks(), 2);
+        assert_eq!(m.dirty_plans(), 5);
+        // volumes match the byte accounting: 4 copies moved, (2+1)·4 each
+        assert_eq!(m.moved_elements, 4);
+        assert_eq!(m.bytes_per_element, 12);
+        assert_eq!(m.bytes, 48);
+        // per-rank sends: mode 0 rank 0 sends 1 element to 1 destination
+        assert_eq!(m0.per_rank_sends[0], (1, 3));
+    }
+
+    #[test]
+    fn uni_pair_charges_one_copy() {
+        let a_assign = vec![0u32, 0, 1, 1];
+        let b_assign = vec![0u32, 1, 1, 0];
+        let a = dist(2, vec![a_assign.clone(); 3], true);
+        let b = dist(2, vec![b_assign.clone(); 3], true);
+        let m = MigrationPlan::compute(&a, &b);
+        assert!(m.uni_pair);
+        // two elements move per mode, but one stored copy is charged
+        assert_eq!(m.per_mode[0].moved(), 2);
+        assert_eq!(m.moved_elements, 2);
+        assert_eq!(m.bytes, 2 * 16);
+        // plans are per (mode, rank) regardless of storage sharing
+        assert_eq!(m.dirty_plans(), 3 * 2);
+        // simulated time covers one copy's p2p round
+        let net = NetModel { alpha: 1.0, beta: 0.5 };
+        // each rank sends 1 message of 4 units → max(1+2, 1+2) = 3
+        assert_eq!(m.simulated_secs(&net), 1.0 + 4.0 * 0.5);
+    }
+}

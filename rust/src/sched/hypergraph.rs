@@ -458,7 +458,7 @@ impl Scheme for HyperG {
         true
     }
 
-    fn distribute(
+    fn policies(
         &self,
         t: &SparseTensor,
         idx: &[SliceIndex],
@@ -468,7 +468,8 @@ impl Scheme for HyperG {
         let t0 = Instant::now();
         let hg = Hypergraph::from_tensor(t, idx);
         let part = partition(&hg, p, self.params, rng);
-        let pol = ModePolicy { p, assign: part };
+        // one Arc'd buffer aliased by all N policy slots (uni-policy)
+        let pol = ModePolicy::new(p, part);
         let serial = t0.elapsed().as_secs_f64();
         Distribution {
             scheme: self.name().into(),

@@ -28,6 +28,7 @@
 use super::metrics::{ModeMetrics, Sharers};
 use super::policy::ModePolicy;
 use crate::tensor::SliceIndex;
+use std::sync::Arc;
 
 /// Outcome of one [`extend_policy`] batch.
 #[derive(Debug, Clone)]
@@ -52,6 +53,9 @@ pub fn extend_policy(
     let p = pol.p;
     let limit = nnz_after.div_ceil(p);
     let mut load = pol.rank_counts();
+    // copy-on-write: an assignment buffer shared with another policy
+    // slot (or a cloned plan) is split before the in-place appends
+    let assign = Arc::make_mut(&mut pol.assign);
     let mut new_pairs = 0usize;
     // (slice, rank) pairs opened within this batch: later appends to the
     // same slice treat them as sharers (batches are small; linear scan)
@@ -85,7 +89,7 @@ pub fn extend_policy(
             load[r as usize] < limit,
             "incremental placement: bin {r} already at ⌈|E|/P⌉ = {limit}"
         );
-        pol.assign.push(r);
+        assign.push(r);
         load[r as usize] += 1;
     }
     PlacementReport { limit, new_sharer_pairs: new_pairs }

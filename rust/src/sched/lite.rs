@@ -29,7 +29,7 @@ impl Scheme for Lite {
         false
     }
 
-    fn distribute(
+    fn policies(
         &self,
         t: &SparseTensor,
         idx: &[SliceIndex],
@@ -57,6 +57,21 @@ impl Scheme for Lite {
             },
         }
     }
+}
+
+/// Re-plan a *single* mode with Lite's Fig 8 construction — the
+/// building block `TuckerSession::rebalance` uses to redistribute only
+/// the modes whose Theorem 6.1 bounds broke under streaming, leaving
+/// the other modes' policies (and TTM plans) untouched. Returns the
+/// policy and the simulated parallel construction time, same model as
+/// the full [`Lite`] path.
+pub fn plan_mode(
+    t: &SparseTensor,
+    idx_n: &SliceIndex,
+    p: usize,
+    rng: &mut Rng,
+) -> (ModePolicy, f64) {
+    distribute_mode(t, idx_n, p, rng)
 }
 
 /// Fig 8 for a single mode. Returns the policy and the simulated parallel
@@ -140,7 +155,7 @@ fn distribute_mode(
     let scan_secs = t1.elapsed().as_secs_f64();
     let simulated =
         sort.prefix_secs / p as f64 + sort.max_bucket_secs + scan_secs / p as f64;
-    (ModePolicy { p, assign }, simulated)
+    (ModePolicy::new(p, assign), simulated)
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@ impl Scheme for MediumG {
         true
     }
 
-    fn distribute(
+    fn policies(
         &self,
         t: &SparseTensor,
         idx: &[SliceIndex],
@@ -46,7 +46,9 @@ impl Scheme for MediumG {
             }
             assign[e] = rank as u32;
         }
-        let pol = ModePolicy { p, assign };
+        // one Arc'd buffer aliased by all N policy slots — uni-policy
+        // schemes store a single assignment copy
+        let pol = ModePolicy::new(p, assign);
         let serial = t0.elapsed().as_secs_f64();
         Distribution {
             scheme: self.name().into(),
@@ -163,7 +165,13 @@ mod tests {
         assert_eq!(d.tensor_copies(), 1);
         for n in 1..3 {
             assert_eq!(d.policies[n].assign, d.policies[0].assign);
+            // not just equal: the same Arc'd buffer (one stored copy)
+            assert!(std::sync::Arc::ptr_eq(
+                &d.policies[n].assign,
+                &d.policies[0].assign
+            ));
         }
+        assert_eq!(d.assignment_bytes(), 4 * t.nnz() as u64);
     }
 
     #[test]
@@ -175,7 +183,7 @@ mod tests {
         let d = MediumG.distribute(&t, &idx, 4, &mut Rng::new(9));
         // 4 ranks over 2 modes -> at most 4 distinct ranks, all used for a
         // tensor this dense
-        let mut used: Vec<u32> = d.policies[0].assign.clone();
+        let mut used: Vec<u32> = d.policies[0].assign.to_vec();
         used.sort_unstable();
         used.dedup();
         assert_eq!(used.len(), 4);

@@ -234,7 +234,7 @@ mod tests {
         }
         let idx = SliceIndex::build(&t, 0);
         // lexicographic thirds: {e0,e1,e2}, {e3,e4,e5}, {e6,e7}
-        let pol = ModePolicy { p: 3, assign: vec![0, 0, 0, 1, 1, 1, 2, 2] };
+        let pol = ModePolicy::new(3, vec![0, 0, 0, 1, 1, 1, 2, 2]);
         let m = ModeMetrics::compute(&idx, &pol);
         assert_eq!(m.r_sum, 6);
         assert_eq!(m.l_n, 3);
@@ -244,7 +244,7 @@ mod tests {
     #[test]
     fn single_rank_is_all_optimal() {
         let (_, idx) = tensor_and_index();
-        let pol = ModePolicy { p: 1, assign: vec![0; 400] };
+        let pol = ModePolicy::new(1, vec![0; 400]);
         for i in &idx {
             let m = ModeMetrics::compute(i, &pol);
             assert_eq!(m.e_max, 400);
@@ -260,7 +260,7 @@ mod tests {
         // assign whole slices of mode 0 by l % p — every slice good
         let p = 4;
         let assign: Vec<u32> = (0..t.nnz()).map(|e| t.coord(0, e) % p).collect();
-        let pol = ModePolicy { p: p as usize, assign };
+        let pol = ModePolicy::new(p as usize, assign);
         let sharers = Sharers::build(&idx[0], &pol);
         assert_eq!(sharers.bad_slices(), 0);
         let m = ModeMetrics::from_sharers(&idx[0], &pol, &sharers);
@@ -273,7 +273,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let p = 5usize;
         let assign: Vec<u32> = (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect();
-        let pol = ModePolicy { p, assign };
+        let pol = ModePolicy::new(p, assign);
         for i in &idx {
             let m = ModeMetrics::compute(i, &pol);
             assert!(m.r_sum >= i.nonempty());
@@ -291,9 +291,11 @@ mod tests {
         let mut rng = Rng::new(4);
         let p = 4usize;
         let policies: Vec<ModePolicy> = (0..3)
-            .map(|_| ModePolicy {
-                p,
-                assign: (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect(),
+            .map(|_| {
+                ModePolicy::new(
+                    p,
+                    (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect(),
+                )
             })
             .collect();
         let dist = Distribution {

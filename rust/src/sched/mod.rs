@@ -11,8 +11,15 @@
 //! - [`samplesort`]: the parallel sample sort Lite's slice ordering uses.
 //! - [`incremental`]: streaming policy extension + Theorem 6.1
 //!   revalidation for appended nonzeros.
+//! - [`policy`]: the [`Scheme`] trait and the first-class
+//!   [`PlacementPlan`] (policies + provenance + metrics + cost).
+//! - [`cost`]: the §4 cost model pricing a HOOI sweep from the metrics.
+//! - [`diff`]: [`MigrationPlan`] — exact per-(mode, rank) element
+//!   movements between two placements, with byte volumes.
 
 pub mod coarse;
+pub mod cost;
+pub mod diff;
 pub mod hypergraph;
 pub mod incremental;
 pub mod lite;
@@ -23,12 +30,14 @@ pub mod rowmap;
 pub mod samplesort;
 
 pub use coarse::CoarseG;
+pub use cost::{CostEstimate, CostModel, ModeCost};
+pub use diff::{MigrationPlan, ModeMigration};
 pub use hypergraph::HyperG;
 pub use incremental::{extend_policy, theorem_bounds, BoundsCheck, PlacementReport};
 pub use lite::Lite;
 pub use medium::MediumG;
 pub use metrics::{ModeMetrics, SchemeMetrics, Sharers};
-pub use policy::{DistTime, Distribution, ModePolicy, Scheme};
+pub use policy::{DistTime, Distribution, ModePolicy, PlacementPlan, PlanMode, Scheme};
 pub use rowmap::RowMap;
 
 /// Construct a scheme by name (CLI / config entry point).

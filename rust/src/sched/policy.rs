@@ -1,12 +1,25 @@
-//! Distribution policies and schemes (paper §3, "Distribution Schemes").
+//! Distribution policies, schemes, and the first-class placement plan
+//! (paper §3, "Distribution Schemes"; §4, the metrics the plan carries).
 //!
 //! A *policy* π_n maps each non-zero element to an owner rank for the
 //! computation along mode n. A *scheme* is the sequence (π_1..π_N);
 //! uni-policy schemes use one π for all modes (one stored tensor copy),
 //! multi-policy schemes customize per mode (N copies).
+//!
+//! [`Distribution`] is the raw object — policies plus provenance.
+//! [`PlacementPlan`] promotes it to the API's first-class citizen: the
+//! same policies *plus* the per-mode §4 metrics/sharer indices they
+//! induce and a cost estimate under a [`CostModel`], which is what lets
+//! two plans be [`diff`](PlacementPlan::diff)-ed into a
+//! [`MigrationPlan`] and compared by predicted per-sweep cost — the
+//! machinery behind `TuckerSession`'s streaming rebalance loop.
 
+use super::cost::{CostEstimate, CostModel};
+use super::diff::MigrationPlan;
+use super::metrics::{ModeMetrics, Sharers};
 use crate::tensor::{SliceIndex, SparseTensor};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Element → rank assignment along one mode.
 #[derive(Debug, Clone)]
@@ -14,14 +27,24 @@ pub struct ModePolicy {
     /// World size P.
     pub p: usize,
     /// assign[e] = owner rank of element e under this mode's policy.
-    pub assign: Vec<u32>,
+    ///
+    /// Shared (`Arc`) so uni-policy schemes alias *one* buffer across
+    /// all N modes instead of storing N identical clones; mutate
+    /// through [`Arc::make_mut`] (copy-on-write keeps shared plans of
+    /// other sessions intact).
+    pub assign: Arc<Vec<u32>>,
 }
 
 impl ModePolicy {
+    /// Wrap a freshly built assignment vector.
+    pub fn new(p: usize, assign: Vec<u32>) -> ModePolicy {
+        ModePolicy { p, assign: Arc::new(assign) }
+    }
+
     /// Per-rank element counts |E_n^p| (the E metric's raw data).
     pub fn rank_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.p];
-        for &r in &self.assign {
+        for &r in self.assign.iter() {
             counts[r as usize] += 1;
         }
         counts
@@ -55,8 +78,9 @@ pub struct DistTime {
 pub struct Distribution {
     pub scheme: String,
     pub p: usize,
-    /// policies[n] = π_n. Uni-policy schemes store N clones of the same
-    /// assignment (and set `uni` so memory/FM accounting knows).
+    /// policies[n] = π_n. Uni-policy schemes share one `Arc`'d
+    /// assignment buffer across all N entries (and set `uni` so
+    /// memory/FM accounting knows).
     pub policies: Vec<ModePolicy>,
     pub uni: bool,
     pub time: DistTime,
@@ -74,6 +98,22 @@ impl Distribution {
         } else {
             self.ndim()
         }
+    }
+
+    /// Bytes the stored assignment vectors occupy, counting each
+    /// `Arc`-aliased buffer exactly once — uni-policy schemes pay one
+    /// copy, not N.
+    pub fn assignment_bytes(&self) -> u64 {
+        let mut seen: Vec<*const Vec<u32>> = Vec::new();
+        let mut bytes = 0u64;
+        for pol in &self.policies {
+            let ptr = Arc::as_ptr(&pol.assign);
+            if !seen.contains(&ptr) {
+                seen.push(ptr);
+                bytes += 4 * pol.assign.len() as u64;
+            }
+        }
+        bytes
     }
 
     /// Sanity: every element assigned a valid rank in every mode.
@@ -100,30 +140,205 @@ impl Distribution {
     }
 }
 
+/// One mode's slot in a [`PlacementPlan`]: the §4 metrics the policy
+/// induces and the sharer index they were computed from.
+#[derive(Debug, Clone)]
+pub struct PlanMode {
+    /// E_n^max / R_n^sum / R_n^max and their per-rank raw data.
+    pub metrics: ModeMetrics,
+    /// Ranks sharing each mode-n slice (CSR) — reused by diff apply and
+    /// introspection; `hooi::prepare_modes` builds its own copy for the
+    /// TTM state.
+    pub sharers: Sharers,
+}
+
+/// A distribution promoted to a first-class plan: the policies, their
+/// scheme provenance and [`DistTime`], the per-mode
+/// [`ModeMetrics`]/[`Sharers`] they induce, and a §4 cost estimate
+/// ([`CostEstimate`]) under the model the plan was compiled with.
+///
+/// Two plans over the same tensor diff into a [`MigrationPlan`] — the
+/// exact per-(mode, rank) moved-element sets plus migration byte volume
+/// — which is what `TuckerSession::rebalance` applies through the HOOI
+/// layer's splice/rebuild machinery instead of re-running
+/// `prepare_modes` wholesale.
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    /// The raw policies + provenance (scheme name, P, uni flag, timing).
+    pub dist: Distribution,
+    /// Per-mode metrics and sharer indices, in mode order.
+    pub modes: Vec<PlanMode>,
+    /// The per-mode core ranks `[K_0, …, K_{N−1}]` the cost estimate
+    /// was computed for.
+    pub ks: Vec<usize>,
+    /// Predicted per-sweep cost under the compile-time [`CostModel`].
+    pub cost: CostEstimate,
+}
+
+impl PlacementPlan {
+    /// Compile a raw [`Distribution`] into a plan: build each mode's
+    /// sharer index and §4 metrics, then price a HOOI sweep under
+    /// `model`. `ks` are the resolved per-mode core ranks (they set
+    /// K̂_n and the oracle query counts in the estimate).
+    pub fn compile(
+        dist: Distribution,
+        idx: &[SliceIndex],
+        ks: &[usize],
+        model: &CostModel,
+    ) -> PlacementPlan {
+        assert_eq!(idx.len(), dist.ndim(), "one slice index per mode");
+        assert_eq!(ks.len(), dist.ndim(), "one core rank per mode");
+        let modes: Vec<PlanMode> = idx
+            .iter()
+            .zip(dist.policies.iter())
+            .map(|(i, pol)| {
+                let sharers = Sharers::build(i, pol);
+                let metrics = ModeMetrics::from_sharers(i, pol, &sharers);
+                PlanMode { metrics, sharers }
+            })
+            .collect();
+        let mrefs: Vec<&ModeMetrics> = modes.iter().map(|m| &m.metrics).collect();
+        let cost = CostEstimate::from_metrics(&mrefs, ks, model);
+        PlacementPlan { dist, modes, ks: ks.to_vec(), cost }
+    }
+
+    /// Recompute the metrics and cost estimate after the policies were
+    /// mutated in place (streaming placement extension) — the plan's
+    /// provenance tracks the live assignment. Callers that already hold
+    /// freshly rebuilt sharer indices should prefer
+    /// [`refresh_from`](PlacementPlan::refresh_from), which skips the
+    /// O(nnz) per-mode `Sharers::build`.
+    pub fn refresh(&mut self, idx: &[SliceIndex], model: &CostModel) {
+        self.modes = idx
+            .iter()
+            .zip(self.dist.policies.iter())
+            .map(|(i, pol)| {
+                let sharers = Sharers::build(i, pol);
+                let metrics = ModeMetrics::from_sharers(i, pol, &sharers);
+                PlanMode { metrics, sharers }
+            })
+            .collect();
+        let mrefs: Vec<&ModeMetrics> = self.modes.iter().map(|m| &m.metrics).collect();
+        self.cost = CostEstimate::from_metrics(&mrefs, &self.ks, model);
+    }
+
+    /// [`refresh`](PlacementPlan::refresh) reusing sharer indices the
+    /// caller already rebuilt against the current policies (one per
+    /// mode) — the streaming ingest path hands over the `ModeState`
+    /// sharers `apply_delta` just recomputed instead of paying a second
+    /// full `Sharers::build` pass per mode.
+    pub fn refresh_from(
+        &mut self,
+        idx: &[SliceIndex],
+        sharers: &[&Sharers],
+        model: &CostModel,
+    ) {
+        assert_eq!(sharers.len(), self.dist.ndim(), "one sharer index per mode");
+        self.modes = idx
+            .iter()
+            .zip(self.dist.policies.iter())
+            .zip(sharers.iter())
+            .map(|((i, pol), sh)| PlanMode {
+                metrics: ModeMetrics::from_sharers(i, pol, sh),
+                sharers: (*sh).clone(),
+            })
+            .collect();
+        let mrefs: Vec<&ModeMetrics> = self.modes.iter().map(|m| &m.metrics).collect();
+        self.cost = CostEstimate::from_metrics(&mrefs, &self.ks, model);
+    }
+
+    /// Exact per-(mode, rank) element movements turning this placement
+    /// into `other` (same tensor, same P) — see [`MigrationPlan`].
+    pub fn diff(&self, other: &PlacementPlan) -> MigrationPlan {
+        MigrationPlan::compute(&self.dist, &other.dist)
+    }
+
+    /// World size P.
+    pub fn p(&self) -> usize {
+        self.dist.p
+    }
+
+    /// Tensor order N.
+    pub fn ndim(&self) -> usize {
+        self.dist.ndim()
+    }
+
+    /// Scheme provenance (registry name of the constructor).
+    pub fn scheme(&self) -> &str {
+        &self.dist.scheme
+    }
+
+    /// Drop the metrics/cost envelope, keeping the raw distribution.
+    pub fn into_distribution(self) -> Distribution {
+        self.dist
+    }
+}
+
 /// A distribution scheme constructor.
+///
+/// Implementations override [`policies`](Scheme::policies) — the raw
+/// per-mode assignment construction. Callers should use
+/// [`plan`](Scheme::plan), which wraps the policies into a cost-modeled
+/// [`PlacementPlan`]; [`distribute`](Scheme::distribute) survives as a
+/// thin shim over `policies` for the pre-plan call sites (the figure
+/// harness, the legacy `run_scheme` path) and is deprecated in favor of
+/// `plan` — see the README's deprecation path.
 pub trait Scheme {
     fn name(&self) -> &'static str;
     fn uni(&self) -> bool;
-    /// Build the per-mode policies. `idx` holds the slice index of every
-    /// mode. Implementations must fill `Distribution::time.serial_secs`
-    /// (their own measured construction cost) and `simulated_secs` (the
-    /// parallel-execution model documented per scheme).
-    fn distribute(
+
+    /// Build the raw per-mode policies. `idx` holds the slice index of
+    /// every mode. Implementations must fill `Distribution::time`'s
+    /// `serial_secs` (their own measured construction cost) and
+    /// `simulated_secs` (the parallel-execution model documented per
+    /// scheme).
+    fn policies(
         &self,
         t: &SparseTensor,
         idx: &[SliceIndex],
         p: usize,
         rng: &mut Rng,
     ) -> Distribution;
+
+    /// The primary constructor: build the policies and compile them
+    /// into a [`PlacementPlan`] carrying scheme provenance, per-mode
+    /// metrics/sharers and the §4 cost estimate for the given core
+    /// ranks under `model`.
+    fn plan(
+        &self,
+        t: &SparseTensor,
+        idx: &[SliceIndex],
+        p: usize,
+        rng: &mut Rng,
+        ks: &[usize],
+        model: &CostModel,
+    ) -> PlacementPlan {
+        PlacementPlan::compile(self.policies(t, idx, p, rng), idx, ks, model)
+    }
+
+    /// Deprecated shim over [`Scheme::policies`] — kept so the figure
+    /// harness and other pre-plan callers stay source-compatible. New
+    /// code should call [`Scheme::plan`].
+    fn distribute(
+        &self,
+        t: &SparseTensor,
+        idx: &[SliceIndex],
+        p: usize,
+        rng: &mut Rng,
+    ) -> Distribution {
+        self.policies(t, idx, p, rng)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::Lite;
+    use crate::tensor::slices::build_all;
 
     #[test]
     fn rank_counts_sum_to_nnz() {
-        let pol = ModePolicy { p: 3, assign: vec![0, 1, 1, 2, 0, 0] };
+        let pol = ModePolicy::new(3, vec![0, 1, 1, 2, 0, 0]);
         assert_eq!(pol.rank_counts(), vec![3, 2, 1]);
     }
 
@@ -134,7 +349,7 @@ mod tests {
             t.push(&[(i % 3) as u32, (i % 2) as u32], 1.0);
         }
         let idx = SliceIndex::build(&t, 0);
-        let pol = ModePolicy { p: 2, assign: vec![0, 1, 0, 1, 0, 1] };
+        let pol = ModePolicy::new(2, vec![0, 1, 0, 1, 0, 1]);
         let per_rank = pol.rank_elements(&idx);
         let total: usize = per_rank.iter().map(|v| v.len()).sum();
         assert_eq!(total, 6);
@@ -152,10 +367,7 @@ mod tests {
         let d = Distribution {
             scheme: "x".into(),
             p: 2,
-            policies: vec![
-                ModePolicy { p: 2, assign: vec![5] },
-                ModePolicy { p: 2, assign: vec![0] },
-            ],
+            policies: vec![ModePolicy::new(2, vec![5]), ModePolicy::new(2, vec![0])],
             uni: false,
             time: DistTime::default(),
         };
@@ -167,7 +379,7 @@ mod tests {
         let d = Distribution {
             scheme: "x".into(),
             p: 2,
-            policies: vec![ModePolicy { p: 2, assign: vec![] }; 3],
+            policies: vec![ModePolicy::new(2, vec![]); 3],
             uni: true,
             time: DistTime::default(),
         };
@@ -175,5 +387,76 @@ mod tests {
         let mut d2 = d.clone();
         d2.uni = false;
         assert_eq!(d2.tensor_copies(), 3);
+    }
+
+    #[test]
+    fn shared_assignments_are_accounted_once() {
+        // uni-style sharing: cloning a ModePolicy clones the Arc, so N
+        // policy slots alias one buffer and assignment_bytes charges it
+        // once; distinct buffers are charged each.
+        let pol = ModePolicy::new(2, vec![0, 1, 0, 1]);
+        let shared = Distribution {
+            scheme: "uni".into(),
+            p: 2,
+            policies: vec![pol.clone(); 3],
+            uni: true,
+            time: DistTime::default(),
+        };
+        assert!(Arc::ptr_eq(
+            &shared.policies[0].assign,
+            &shared.policies[2].assign
+        ));
+        assert_eq!(shared.assignment_bytes(), 4 * 4);
+        let multi = Distribution {
+            scheme: "multi".into(),
+            p: 2,
+            policies: (0..3).map(|_| ModePolicy::new(2, vec![0, 1, 0, 1])).collect(),
+            uni: false,
+            time: DistTime::default(),
+        };
+        assert_eq!(multi.assignment_bytes(), 3 * 4 * 4);
+    }
+
+    #[test]
+    fn plan_carries_metrics_and_cost() {
+        let mut rng = Rng::new(11);
+        let t = SparseTensor::random(vec![20, 15, 10], 600, &mut rng);
+        let idx = build_all(&t);
+        let model = CostModel::default();
+        let plan = Lite.plan(&t, &idx, 4, &mut rng, &[4, 4, 4], &model);
+        assert_eq!(plan.scheme(), "Lite");
+        assert_eq!(plan.p(), 4);
+        assert_eq!(plan.ndim(), 3);
+        assert_eq!(plan.modes.len(), 3);
+        for (n, pm) in plan.modes.iter().enumerate() {
+            assert_eq!(pm.metrics.mode, n);
+            assert_eq!(pm.metrics.e_counts.iter().sum::<usize>(), t.nnz());
+            assert_eq!(pm.sharers.r_sum(), pm.metrics.r_sum);
+        }
+        assert!(plan.cost.secs_per_sweep > 0.0);
+        assert_eq!(plan.cost.per_mode.len(), 3);
+        // the shim and the plan build the same policies from the same rng
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = Rng::new(7);
+        let d = Lite.distribute(&t, &idx, 4, &mut rng_a);
+        let p2 = Lite.plan(&t, &idx, 4, &mut rng_b, &[4, 4, 4], &model);
+        for (a, b) in d.policies.iter().zip(&p2.dist.policies) {
+            assert_eq!(a.assign, b.assign);
+        }
+    }
+
+    #[test]
+    fn refresh_tracks_policy_mutation() {
+        let mut rng = Rng::new(13);
+        let t = SparseTensor::random(vec![12, 10, 8], 300, &mut rng);
+        let idx = build_all(&t);
+        let model = CostModel::default();
+        let mut plan = Lite.plan(&t, &idx, 3, &mut rng, &[3, 3, 3], &model);
+        let e_max_before = plan.modes[0].metrics.e_max;
+        // pile every element of mode 0 onto rank 0 and refresh
+        plan.dist.policies[0] = ModePolicy::new(3, vec![0; t.nnz()]);
+        plan.refresh(&idx, &model);
+        assert_eq!(plan.modes[0].metrics.e_max, t.nnz());
+        assert!(plan.modes[0].metrics.e_max >= e_max_before);
     }
 }

@@ -83,7 +83,7 @@ mod tests {
         let idx = SliceIndex::build(&t, 0);
         let assign: Vec<u32> =
             (0..t.nnz()).map(|_| rng.below(p as u64) as u32).collect();
-        (idx, ModePolicy { p, assign })
+        (idx, ModePolicy::new(p, assign))
     }
 
     #[test]
@@ -121,7 +121,7 @@ mod tests {
         let idx = SliceIndex::build(&t, 0);
         // element i belongs to rank i%4; each slice has one element per rank
         let assign: Vec<u32> = (0..t.nnz()).map(|e| (e % 4) as u32).collect();
-        let pol = ModePolicy { p: 4, assign };
+        let pol = ModePolicy::new(4, assign);
         let sharers = Sharers::build(&idx, &pol);
         let map = RowMap::build(&sharers, 4);
         let counts = map.owned_counts();

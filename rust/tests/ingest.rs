@@ -27,7 +27,7 @@ impl Scheme for Fixed {
         self.0.uni
     }
 
-    fn distribute(
+    fn policies(
         &self,
         _t: &SparseTensor,
         _idx: &[SliceIndex],

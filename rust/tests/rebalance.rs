@@ -1,0 +1,349 @@
+//! Rebalance end-to-end: `MigrationPlan` sanity (moved sets exact and
+//! disjoint, volumes matching the byte accounting, empty diff ⇒ no
+//! plan rebuilds), the `plan_rebuilds()` contract (a rebalance touches
+//! exactly the diffed (mode, rank) plans), the `RebalancePolicy::Auto`
+//! cost-model decision surfacing in `RunRecord`, and the headline
+//! equivalence: `ingest` + `rebalance()` + `decompose_more` is
+//! **bit-identical** to a fresh session on the mutated tensor under the
+//! re-planned placement (3-D property-tested, 4-D pinned).
+
+use tucker_lite::coordinator::{
+    RebalancePolicy, SchemeChoice, TuckerSession, Workload,
+};
+use tucker_lite::hooi::CoreRanks;
+use tucker_lite::prop_assert;
+use tucker_lite::sched::{DistTime, Distribution, MigrationPlan, ModePolicy, Scheme};
+use tucker_lite::tensor::{SliceIndex, SparseTensor, TensorDelta};
+use tucker_lite::util::check::Runner;
+use tucker_lite::util::rng::Rng;
+
+/// A scheme that replays a fixed distribution — pins "the same
+/// placement" when comparing a rebalanced session against a fresh
+/// build.
+struct Fixed(Distribution);
+
+impl Scheme for Fixed {
+    fn name(&self) -> &'static str {
+        "Fixed"
+    }
+
+    fn uni(&self) -> bool {
+        self.0.uni
+    }
+
+    fn policies(
+        &self,
+        _t: &SparseTensor,
+        _idx: &[SliceIndex],
+        _p: usize,
+        _rng: &mut Rng,
+    ) -> Distribution {
+        self.0.clone()
+    }
+}
+
+/// A deliberately scattered placement: element e → rank e mod P along
+/// every mode. Every populated slice is shared by (almost) every rank,
+/// so the Theorem 6.1 sharing bounds are violated from the start and
+/// any structural ingest flags every mode.
+fn scattered(t: &SparseTensor, p: usize) -> Distribution {
+    let assign: Vec<u32> = (0..t.nnz()).map(|e| (e % p) as u32).collect();
+    Distribution {
+        scheme: "Scatter".into(),
+        p,
+        policies: (0..t.ndim()).map(|_| ModePolicy::new(p, assign.clone())).collect(),
+        uni: false,
+        time: DistTime::default(),
+    }
+}
+
+fn scattered_session(
+    t: SparseTensor,
+    p: usize,
+    k: usize,
+    policy: RebalancePolicy,
+) -> TuckerSession {
+    let dist = scattered(&t, p);
+    TuckerSession::builder(Workload::from_tensor("scatter", t))
+        .scheme(SchemeChoice::custom(Box::new(Fixed(dist))))
+        .ranks(p)
+        .core(CoreRanks::Uniform(k))
+        .rebalance_policy(policy)
+        .seed(7)
+        .build()
+        .expect("valid scattered session")
+}
+
+fn random_delta(t: &SparseTensor, rng: &mut Rng, n_app: usize) -> TensorDelta {
+    let mut d = TensorDelta::new();
+    for _ in 0..n_app {
+        let coord: Vec<u32> =
+            t.dims.iter().map(|&l| rng.below(l as u64) as u32).collect();
+        d = d.append(&coord, rng.f32() * 2.0 - 1.0);
+    }
+    d
+}
+
+#[test]
+fn rebalance_rebuilds_only_the_diffed_plans() {
+    let mut rng = Rng::new(3);
+    let t = SparseTensor::random(vec![24, 16, 12], 1200, &mut rng);
+    let p = 4;
+    let mut s = scattered_session(t, p, 3, RebalancePolicy::Manual);
+    // the scattered placement breaks the R bounds; the first structural
+    // ingest revalidates and flags every mode
+    let rep = s.ingest(&TensorDelta::new().append(&[0, 0, 0], 0.5)).unwrap();
+    assert!(!rep.rebalance_modes.is_empty(), "scattered placement must flag");
+    assert!(rep.rebalance.is_none(), "Manual leaves the decision to the caller");
+    assert_eq!(s.pending_rebalance(), &rep.rebalance_modes[..]);
+
+    let before = s.distribution().clone();
+    let rebuilds_before = s.plan_rebuilds();
+    let rb = s.rebalance();
+    assert!(rb.migrated);
+    assert_eq!(rb.modes, rep.rebalance_modes);
+    // the migration plan recomputed from the before/after snapshots
+    // must agree with what the session applied: exactly the diffed
+    // (mode, rank) plans were touched, never a full re-prepare
+    let mig = MigrationPlan::compute(&before, s.distribution());
+    assert!(!mig.is_empty());
+    assert_eq!(rb.moved_elements, mig.moved_elements);
+    assert_eq!(rb.migration_bytes, mig.bytes);
+    assert_eq!(
+        s.plan_rebuilds() - rebuilds_before,
+        mig.dirty_plans(),
+        "rebalance touches exactly the diffed (mode, rank) plans"
+    );
+    assert_eq!(rb.plans_spliced + rb.plans_rebuilt, mig.dirty_plans());
+    assert_eq!(s.plan_builds(), 1, "never a full re-prepare");
+    assert!(s.pending_rebalance().is_empty(), "fresh Lite satisfies the bounds");
+    assert!(s.decompose().fit().is_finite());
+}
+
+#[test]
+fn auto_policy_migrates_when_the_cost_model_amortizes() {
+    let mut rng = Rng::new(5);
+    let t = SparseTensor::random(vec![24, 16, 12], 1200, &mut rng);
+    let mut s = scattered_session(
+        t,
+        4,
+        3,
+        RebalancePolicy::Auto { hooi_iters_amortization: 1_000_000 },
+    );
+    let rep = s.ingest(&TensorDelta::new().append(&[1, 1, 1], 0.5)).unwrap();
+    let rb = rep.rebalance.expect("auto policy decides on every flagged ingest");
+    // scattered → Lite slashes the R metrics: the model must see
+    // savings, and a huge horizon amortizes any migration
+    assert!(
+        rb.decision.savings_per_sweep > 0.0,
+        "Lite re-plan must be cheaper than scatter: {:?}",
+        rb.decision
+    );
+    assert!(rb.decision.migrate && rb.migrated);
+    assert!(rb.moved_elements > 0);
+    assert!(rb.migration_bytes > 0);
+    assert!(s.pending_rebalance().is_empty());
+    // the outcome is visible in the run record (Fig 16 side)
+    let d = s.decompose();
+    assert_eq!(d.record.rebalances, 1);
+    assert_eq!(d.record.rebalance_skips, 0);
+    assert!(d.record.redist_secs > 0.0);
+    assert!(d.record.dist_secs > 0.0);
+}
+
+#[test]
+fn auto_policy_zero_horizon_skips_and_keeps_the_flags() {
+    let mut rng = Rng::new(7);
+    let t = SparseTensor::random(vec![24, 16, 12], 1200, &mut rng);
+    let mut s = scattered_session(
+        t,
+        4,
+        3,
+        RebalancePolicy::Auto { hooi_iters_amortization: 0 },
+    );
+    let rebuilds_after_build = s.plan_rebuilds();
+    let rep = s.ingest(&TensorDelta::new().append(&[2, 2, 2], 0.5)).unwrap();
+    let rb = rep.rebalance.expect("auto policy still evaluates");
+    assert!(
+        !rb.migrated,
+        "zero amortization sweeps can never pay for a migration"
+    );
+    assert_eq!(rb.plans_spliced + rb.plans_rebuilt, 0);
+    // only the ingest's own dirty plans were touched, not a migration
+    assert_eq!(s.plan_rebuilds() - rebuilds_after_build, rep.plans_touched());
+    assert!(!s.pending_rebalance().is_empty(), "flags stay until a migration lands");
+    let d = s.decompose();
+    assert_eq!(d.record.rebalances, 0);
+    assert!(d.record.rebalance_skips >= 1);
+}
+
+#[test]
+fn migration_plan_sanity_properties() {
+    Runner::new(12, 40).run("migration-plan-sanity", |case, rng| {
+        let p = 2 + rng.usize_below(5);
+        let ndim = if case.index % 2 == 0 { 3 } else { 4 };
+        let dims: Vec<u32> = (0..ndim)
+            .map(|m| (4 + rng.usize_below(case.size + 10 - m)) as u32)
+            .collect();
+        let nnz = 50 + rng.usize_below(case.size * 8 + 50);
+        let t = SparseTensor::random(dims, nnz, rng);
+        let mk = |rng: &mut Rng| -> Distribution {
+            Distribution {
+                scheme: "rand".into(),
+                p,
+                policies: (0..t.ndim())
+                    .map(|_| {
+                        ModePolicy::new(
+                            p,
+                            (0..t.nnz())
+                                .map(|_| rng.below(p as u64) as u32)
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+                uni: false,
+                time: DistTime::default(),
+            }
+        };
+        let a = mk(rng);
+        let b = mk(rng);
+        let m = MigrationPlan::compute(&a, &b);
+        prop_assert!(m.bytes_per_element == (t.ndim() as u64 + 1) * 4, "bpe");
+        prop_assert!(
+            m.bytes == m.moved_elements as u64 * m.bytes_per_element,
+            "volumes match the byte accounting"
+        );
+        for (n, mm) in m.per_mode.iter().enumerate() {
+            let moved_direct = a.policies[n]
+                .assign
+                .iter()
+                .zip(b.policies[n].assign.iter())
+                .filter(|(x, y)| x != y)
+                .count();
+            prop_assert!(mm.moved() == moved_direct, "mode {n} moved count");
+            let out_total: usize = mm.outgoing.iter().map(Vec::len).sum();
+            prop_assert!(out_total == moved_direct, "outgoing mirrors incoming");
+            for r in 0..p {
+                for &e in &mm.incoming[r] {
+                    prop_assert!(
+                        b.policies[n].assign[e as usize] as usize == r,
+                        "incoming element owned by its destination"
+                    );
+                    prop_assert!(
+                        a.policies[n].assign[e as usize] as usize != r,
+                        "incoming element really moved"
+                    );
+                    prop_assert!(
+                        !mm.outgoing[r].contains(&e),
+                        "moved sets disjoint per rank"
+                    );
+                }
+            }
+            // each element appears in exactly one rank's incoming list
+            let mut all_in: Vec<u32> =
+                mm.incoming.iter().flatten().copied().collect();
+            all_in.sort_unstable();
+            let len = all_in.len();
+            all_in.dedup();
+            prop_assert!(all_in.len() == len, "incoming sets disjoint across ranks");
+        }
+        // self-diff is empty
+        let empty = MigrationPlan::compute(&a, &a);
+        prop_assert!(empty.is_empty() && empty.dirty_plans() == 0, "self-diff");
+        Ok(())
+    });
+}
+
+#[test]
+fn ingest_rebalance_decompose_matches_fresh_session_3d() {
+    Runner::new(8, 25).run("rebalance-fresh-equivalence", |case, rng| {
+        let p = 2 + rng.usize_below(4);
+        let k = 2 + rng.usize_below(3);
+        let dims = vec![
+            (8 + rng.usize_below(case.size + 8)) as u32,
+            (6 + rng.usize_below(12)) as u32,
+            (4 + rng.usize_below(8)) as u32,
+        ];
+        let nnz = 150 + rng.usize_below(case.size * 10 + 50);
+        let t = SparseTensor::random(dims, nnz, rng);
+        let w = Workload::from_tensor("stream", t);
+        let mut streamed = TuckerSession::builder(w)
+            .scheme(SchemeChoice::Lite)
+            .ranks(p)
+            .core(CoreRanks::Uniform(k))
+            .invocations(1)
+            .seed(31)
+            .build()
+            .expect("valid streamed session");
+        let delta =
+            random_delta(&streamed.workload().tensor, rng, 5 + rng.usize_below(40));
+        streamed.ingest(&delta).map_err(|e| e.to_string())?;
+        let rb = streamed.rebalance();
+        // migrated or not (empty diffs are legal), the live placement
+        // must now behave exactly like a fresh build under it
+        let w2 =
+            Workload::from_tensor("fresh", streamed.workload().tensor.clone());
+        let mut fresh = TuckerSession::builder(w2)
+            .scheme(SchemeChoice::custom(Box::new(Fixed(
+                streamed.distribution().clone(),
+            ))))
+            .ranks(p)
+            .core(CoreRanks::Uniform(k))
+            .invocations(2)
+            .seed(31)
+            .build()
+            .expect("valid fresh session");
+        let d_inc = streamed.decompose_more(1); // virgin: 1 configured + 1
+        let d_fresh = fresh.decompose();
+        prop_assert!(
+            d_inc.fit() == d_fresh.fit(),
+            "fit {} vs fresh {} (migrated: {})",
+            d_inc.fit(),
+            d_fresh.fit(),
+            rb.migrated
+        );
+        for (n, (x, y)) in d_inc.factors.iter().zip(&d_fresh.factors).enumerate() {
+            prop_assert!(x.data == y.data, "mode {n} factors diverge");
+        }
+        prop_assert!(d_inc.core.data == d_fresh.core.data, "cores diverge");
+        Ok(())
+    });
+}
+
+#[test]
+fn ingest_rebalance_decompose_matches_fresh_session_4d() {
+    let mut rng = Rng::new(19);
+    let t = SparseTensor::random(vec![10, 8, 6, 5], 500, &mut rng);
+    let w = Workload::from_tensor("stream4d", t);
+    let mut streamed = TuckerSession::builder(w)
+        .scheme(SchemeChoice::Lite)
+        .ranks(3)
+        .core(CoreRanks::Uniform(3))
+        .invocations(1)
+        .seed(23)
+        .build()
+        .unwrap();
+    let delta = random_delta(&streamed.workload().tensor, &mut rng, 30);
+    streamed.ingest(&delta).unwrap();
+    let rb = streamed.rebalance();
+    assert!(rb.migrated, "a fresh Lite re-plan of a grown tensor moves elements");
+    let w2 = Workload::from_tensor("fresh4d", streamed.workload().tensor.clone());
+    let mut fresh = TuckerSession::builder(w2)
+        .scheme(SchemeChoice::custom(Box::new(Fixed(
+            streamed.distribution().clone(),
+        ))))
+        .ranks(3)
+        .core(CoreRanks::Uniform(3))
+        .invocations(1)
+        .seed(23)
+        .build()
+        .unwrap();
+    let d_inc = streamed.decompose();
+    let d_fresh = fresh.decompose();
+    assert_eq!(d_inc.fit(), d_fresh.fit());
+    for (x, y) in d_inc.factors.iter().zip(&d_fresh.factors) {
+        assert_eq!(x.data, y.data);
+    }
+    assert_eq!(d_inc.core.data, d_fresh.core.data);
+    assert_eq!(streamed.plan_builds(), 1, "migration never re-runs prepare_modes");
+}
