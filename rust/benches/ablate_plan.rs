@@ -169,7 +169,9 @@ fn main() {
                 .zip(workspaces.iter_mut())
                 .map(|(plan, ws)| move || plan.assemble_fused(factors_ref, ws))
                 .collect();
-            let locals = cluster.phase_tasks(cat::TTM, tasks);
+            let locals = cluster
+                .phase_tasks(cat::TTM, tasks)
+                .expect("no fault injector armed in this bench");
             for (ws, local) in workspaces.iter_mut().zip(locals) {
                 ws.recycle(local.z);
             }

@@ -34,7 +34,7 @@ fn main() {
     );
     for name in ["coarseg", "coarseg-bpf", "lite"] {
         let scheme = sched::by_name(name).unwrap();
-        let d = scheme.distribute(&t, &idx, p, &mut Rng::new(1));
+        let d = scheme.policies(&t, &idx, p, &mut Rng::new(1));
         let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
         t1.row(vec![
             scheme.name().into(),

@@ -1,0 +1,324 @@
+//! Sweep-boundary checkpoints for fault-tolerant HOOI sessions.
+//!
+//! A [`SessionCheckpoint`] captures everything a [`crate::hooi::HooiState`]
+//! needs to resume bit-exactly: the sweep counter, every factor matrix,
+//! the last Lanczos sigma vector, and the RNG cursor. Serialization uses
+//! the in-tree [`crate::util::json`] writer; `f32` payloads round-trip
+//! through `to_bits`/`from_bits` so NaN payloads and signed zeros survive
+//! unchanged, and the four `u64` RNG words travel as hex strings because
+//! an `f64` mantissa cannot hold them exactly.
+#![warn(clippy::unwrap_used)]
+
+use crate::hooi::HooiSnapshot;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+
+/// When a [`crate::coordinator::TuckerSession`] snapshots its HOOI state.
+///
+/// Checkpoints are only ever taken at sweep boundaries (the paper's Fig 2
+/// loop has no cheaper consistent cut), and never after the *final* sweep
+/// of a `decompose` call: a failure in the trailing core phase must roll
+/// back far enough to re-run at least one sweep, because the per-rank TTM
+/// locals the core computation consumes are rebuilt by sweeps, not stored
+/// in the checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointPolicy {
+    /// Only the bootstrap snapshot (taken before sweep 0) is kept; any
+    /// recovery restarts the whole invocation.
+    Never,
+    /// Snapshot after every `k`-th completed sweep (`k >= 1`).
+    EverySweeps(usize),
+}
+
+impl CheckpointPolicy {
+    /// Should a checkpoint be taken after `done` sweeps have completed?
+    /// `done` counts completed sweeps, so it is never 0 here; the caller
+    /// additionally skips `done == total` (see type-level docs).
+    pub fn due(&self, done: usize) -> bool {
+        match *self {
+            CheckpointPolicy::Never => false,
+            CheckpointPolicy::EverySweeps(k) => k != 0 && done % k == 0,
+        }
+    }
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> Self {
+        CheckpointPolicy::EverySweeps(1)
+    }
+}
+
+/// Bounds on how hard a session tries to survive injected or organic
+/// failures before giving up and surfacing the error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts per recovery scope (first try included). 1 means
+    /// "no retries"; the default 3 tolerates a crash plus a transient.
+    pub max_attempts: usize,
+    /// Simulated-seconds budget per phase before a straggling rank is
+    /// escalated to a failure (`None` disables straggler detection).
+    pub straggler_timeout: Option<f64>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, straggler_timeout: None }
+    }
+}
+
+/// A serializable snapshot of a session's HOOI state at a sweep boundary.
+///
+/// The factor/sigma payloads are bit-exact copies, so `restore` followed
+/// by re-running the remaining sweeps reproduces the uninterrupted run to
+/// the last ULP (pinned by `tests/fault_tolerance.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionCheckpoint {
+    /// Format version for forward compatibility (currently 1).
+    pub version: u32,
+    /// Completed sweeps at capture time.
+    pub sweep: usize,
+    /// Cluster size the checkpoint was taken under (validation only —
+    /// recovery may resume on fewer live ranks than `p`).
+    pub p: usize,
+    /// Per-mode core ranks (validation).
+    pub ks: Vec<usize>,
+    /// Factor matrices, one per mode.
+    pub factors: Vec<Mat>,
+    /// Last Lanczos singular values (empty before the first sweep).
+    pub sigma: Vec<f32>,
+    /// xoshiro256** cursor of the driver RNG.
+    pub rng_state: [u64; 4],
+}
+
+impl SessionCheckpoint {
+    /// Wrap a driver snapshot with session context.
+    pub fn from_snapshot(snap: &HooiSnapshot, p: usize, ks: &[usize]) -> Self {
+        SessionCheckpoint {
+            version: 1,
+            sweep: snap.sweep,
+            p,
+            ks: ks.to_vec(),
+            factors: snap.factors.clone(),
+            sigma: snap.last_sigma.clone(),
+            rng_state: snap.rng_state,
+        }
+    }
+
+    /// Back to the driver-level snapshot `HooiState::restore` consumes.
+    pub fn to_snapshot(&self) -> HooiSnapshot {
+        HooiSnapshot {
+            sweep: self.sweep,
+            factors: self.factors.clone(),
+            rng_state: self.rng_state,
+            last_sigma: self.sigma.clone(),
+        }
+    }
+
+    /// Serialized size in bytes (what `RunRecord::checkpoint_bytes` sums).
+    pub fn bytes(&self) -> usize {
+        self.serialize().len()
+    }
+
+    /// Render to the tiny in-tree JSON dialect. Stable across runs: the
+    /// object writer sorts keys (BTreeMap) and floats travel as bits.
+    pub fn serialize(&self) -> String {
+        let mut j = Json::obj();
+        j.set("version", Json::Num(self.version as f64))
+            .set("sweep", Json::Num(self.sweep as f64))
+            .set("p", Json::Num(self.p as f64))
+            .set(
+                "ks",
+                Json::Arr(self.ks.iter().map(|&k| Json::Num(k as f64)).collect()),
+            )
+            .set("sigma", bits_arr(&self.sigma))
+            .set(
+                "rng",
+                Json::Arr(
+                    self.rng_state
+                        .iter()
+                        .map(|w| Json::Str(format!("{w:016x}")))
+                        .collect(),
+                ),
+            )
+            .set(
+                "factors",
+                Json::Arr(
+                    self.factors
+                        .iter()
+                        .map(|m| {
+                            let mut f = Json::obj();
+                            f.set("rows", Json::Num(m.rows as f64))
+                                .set("cols", Json::Num(m.cols as f64))
+                                .set("data", bits_arr(&m.data));
+                            f
+                        })
+                        .collect(),
+                ),
+            );
+        j.render()
+    }
+
+    /// Parse a serialized checkpoint. Errors are human-readable strings
+    /// (this is an operator-facing recovery path, not a hot loop).
+    pub fn parse(text: &str) -> Result<SessionCheckpoint, String> {
+        let j = Json::parse(text)?;
+        let version = get_usize(&j, "version")? as u32;
+        if version != 1 {
+            return Err(format!("unsupported checkpoint version {version}"));
+        }
+        let sweep = get_usize(&j, "sweep")?;
+        let p = get_usize(&j, "p")?;
+        let ks = match j.get("ks") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|v| v as usize)
+                        .ok_or_else(|| "non-numeric entry in 'ks'".to_string())
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            _ => return Err("missing array field 'ks'".into()),
+        };
+        let sigma = parse_bits_arr(j.get("sigma").ok_or("missing field 'sigma'")?)?;
+        let rng_words = match j.get("rng") {
+            Some(Json::Arr(xs)) if xs.len() == 4 => xs,
+            _ => return Err("field 'rng' must be an array of 4 hex words".into()),
+        };
+        let mut rng_state = [0u64; 4];
+        for (slot, w) in rng_state.iter_mut().zip(rng_words.iter()) {
+            let s = w.as_str().ok_or("non-string entry in 'rng'")?;
+            *slot = u64::from_str_radix(s, 16)
+                .map_err(|e| format!("bad rng word {s:?}: {e}"))?;
+        }
+        let factors = match j.get("factors") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|f| {
+                    let rows = get_usize(f, "rows")?;
+                    let cols = get_usize(f, "cols")?;
+                    let data =
+                        parse_bits_arr(f.get("data").ok_or("factor missing 'data'")?)?;
+                    if data.len() != rows * cols {
+                        return Err(format!(
+                            "factor data length {} != {rows}x{cols}",
+                            data.len()
+                        ));
+                    }
+                    Ok(Mat { rows, cols, data })
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => return Err("missing array field 'factors'".into()),
+        };
+        Ok(SessionCheckpoint { version, sweep, p, ks, factors, sigma, rng_state })
+    }
+}
+
+/// f32 slice → JSON array of bit patterns. A u32 fits an f64 mantissa
+/// exactly, so `Num(bits as f64)` is lossless and renders as an integer.
+fn bits_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Num(x.to_bits() as f64)).collect())
+}
+
+fn parse_bits_arr(j: &Json) -> Result<Vec<f32>, String> {
+    match j {
+        Json::Arr(xs) => xs
+            .iter()
+            .map(|x| {
+                let v = x.as_f64().ok_or("non-numeric bit pattern")?;
+                if v < 0.0 || v > u32::MAX as f64 || v.fract() != 0.0 {
+                    return Err(format!("value {v} is not a valid f32 bit pattern"));
+                }
+                Ok(f32::from_bits(v as u32))
+            })
+            .collect(),
+        _ => Err("expected a bit-pattern array".into()),
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .map(|v| v as usize)
+        .ok_or_else(|| format!("missing numeric field '{key}'"))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SessionCheckpoint {
+        SessionCheckpoint {
+            version: 1,
+            sweep: 3,
+            p: 8,
+            ks: vec![4, 3, 2],
+            factors: vec![
+                Mat { rows: 2, cols: 2, data: vec![1.0, -0.0, f32::MIN_POSITIVE, 2.5] },
+                Mat { rows: 1, cols: 3, data: vec![0.1, 1e-30, -7.25] },
+            ],
+            sigma: vec![3.25, 1.125, 0.5],
+            rng_state: [u64::MAX, 0, 0xDEAD_BEEF_CAFE_F00D, 42],
+        }
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip_is_bit_exact() {
+        let cp = sample();
+        let text = cp.serialize();
+        let back = SessionCheckpoint::parse(&text).unwrap();
+        assert_eq!(back, cp);
+        // signed zero survives (PartialEq on f32 treats -0.0 == 0.0,
+        // so check the bits explicitly)
+        assert_eq!(back.factors[0].data[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn bytes_matches_serialized_length() {
+        let cp = sample();
+        assert_eq!(cp.bytes(), cp.serialize().len());
+        assert!(cp.bytes() > 0);
+    }
+
+    #[test]
+    fn snapshot_conversion_roundtrips() {
+        let cp = sample();
+        let snap = cp.to_snapshot();
+        let back = SessionCheckpoint::from_snapshot(&snap, cp.p, &cp.ks);
+        assert_eq!(back, cp);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        assert!(SessionCheckpoint::parse("not json").is_err());
+        assert!(SessionCheckpoint::parse("{}").is_err());
+        // wrong version
+        let mut cp = sample();
+        cp.version = 9;
+        assert!(SessionCheckpoint::parse(&cp.serialize()).is_err());
+        // truncated factor data
+        let text = sample().serialize().replace("\"rows\": 2", "\"rows\": 3");
+        assert!(SessionCheckpoint::parse(&text).is_err());
+    }
+
+    #[test]
+    fn policy_due_matches_interval() {
+        assert!(!CheckpointPolicy::Never.due(1));
+        assert!(!CheckpointPolicy::Never.due(4));
+        let every2 = CheckpointPolicy::EverySweeps(2);
+        assert!(!every2.due(1));
+        assert!(every2.due(2));
+        assert!(!every2.due(3));
+        assert!(every2.due(4));
+        // degenerate k=0 never fires rather than dividing by zero
+        assert!(!CheckpointPolicy::EverySweeps(0).due(3));
+        assert_eq!(CheckpointPolicy::default(), CheckpointPolicy::EverySweeps(1));
+    }
+
+    #[test]
+    fn retry_policy_default_is_three_attempts() {
+        let rp = RetryPolicy::default();
+        assert_eq!(rp.max_attempts, 3);
+        assert!(rp.straggler_timeout.is_none());
+    }
+}

@@ -13,7 +13,7 @@ use super::leader::{run_scheme, Workload};
 use crate::dist::NetModel;
 use crate::hooi::{self, CoreRanks};
 use crate::runtime::Engine;
-use crate::sched::{self, Scheme, SchemeMetrics};
+use crate::sched::{self, CostModel, Scheme, SchemeMetrics};
 use crate::tensor::datasets;
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_secs, fmt_si, Table};
@@ -170,8 +170,20 @@ pub fn distribution_records(
         .iter()
         .map(|scheme| {
             let mut rng = Rng::new(seed);
-            let dist = scheme.distribute(&w.tensor, &w.idx, p, &mut rng);
-            let metrics = SchemeMetrics::compute(&w.tensor, &w.idx, &dist);
+            // first-class plan: the distribution plus the §4 metrics it
+            // induces, compiled once (no second metrics pass)
+            let plan = scheme.plan(
+                &w.tensor,
+                &w.idx,
+                p,
+                &mut rng,
+                &ks,
+                &CostModel::default(),
+            );
+            let dist = plan.dist;
+            let metrics = SchemeMetrics {
+                per_mode: plan.modes.into_iter().map(|m| m.metrics).collect(),
+            };
             // oracle volume: Q_n (R_sum − L_nonempty) per mode, Q_n = 4K_n
             let svd_volume: f64 = metrics
                 .per_mode
@@ -364,8 +376,16 @@ pub fn fig16(cfg: &ExpConfig, engine: &Engine) -> Table {
                 continue;
             }
             let mut rng = Rng::new(cfg.seed);
-            let dist = scheme.distribute(&w.tensor, &w.idx, cfg.p_hi, &mut rng);
-            cells.push(fmt_secs(dist.time.simulated_secs));
+            let ks = CoreRanks::Uniform(cfg.k).resolve(w.tensor.ndim());
+            let plan = scheme.plan(
+                &w.tensor,
+                &w.idx,
+                cfg.p_hi,
+                &mut rng,
+                &ks,
+                &CostModel::default(),
+            );
+            cells.push(fmt_secs(plan.dist.time.simulated_secs));
         }
         let rec = run_scheme(
             w, &sched::Lite, cfg.p_hi, cfg.k, 1, engine, cfg.net, cfg.seed,

@@ -21,6 +21,7 @@ use crate::hooi::{run_hooi, CoreRanks, HooiConfig, HooiOutcome};
 use crate::runtime::Engine;
 use crate::sched::{Distribution, Scheme, SchemeMetrics};
 use crate::tensor::datasets::DatasetSpec;
+use crate::tensor::io::TensorIoError;
 use crate::tensor::slices::build_all;
 use crate::tensor::{io, SliceIndex, SparseTensor};
 use crate::util::rng::Rng;
@@ -38,8 +39,12 @@ pub struct Workload {
 pub enum WorkloadError {
     /// Not a known synthetic analogue and not an existing file.
     UnknownDataset { name: String },
-    /// The dataset named an existing path that failed to load/parse.
+    /// The dataset named a path the OS could not read (missing file,
+    /// permissions, a read failing mid-stream).
     Io { path: std::path::PathBuf, source: std::io::Error },
+    /// The dataset file was readable but is not a FROSTT tensor — the
+    /// typed [`TensorIoError::Parse`] detail carries the line number.
+    Tensor { path: std::path::PathBuf, source: TensorIoError },
 }
 
 impl std::fmt::Display for WorkloadError {
@@ -53,6 +58,9 @@ impl std::fmt::Display for WorkloadError {
             WorkloadError::Io { path, source } => {
                 write!(f, "{}: {source}", path.display())
             }
+            WorkloadError::Tensor { path, source } => {
+                write!(f, "{}: {source}", path.display())
+            }
         }
     }
 }
@@ -62,6 +70,7 @@ impl std::error::Error for WorkloadError {
         match self {
             WorkloadError::UnknownDataset { .. } => None,
             WorkloadError::Io { source, .. } => Some(source),
+            WorkloadError::Tensor { source, .. } => Some(source),
         }
     }
 }
@@ -74,14 +83,22 @@ impl Workload {
         Workload { name: spec.name.to_string(), tensor, idx }
     }
 
-    pub fn from_tns(path: &std::path::Path) -> std::io::Result<Workload> {
-        let tensor = io::read_tns(path)?;
+    /// Load a FROSTT file with typed errors ([`TensorIoError`] keeps
+    /// "file missing" and "file malformed" apart).
+    pub fn load_tns(path: &std::path::Path) -> Result<Workload, TensorIoError> {
+        let tensor = io::load_tns(path)?;
         let idx = build_all(&tensor);
         Ok(Workload {
             name: path.file_stem().unwrap_or_default().to_string_lossy().into(),
             tensor,
             idx,
         })
+    }
+
+    /// [`Workload::load_tns`] degraded to `std::io::Result` —
+    /// compatibility shim for callers that predate [`TensorIoError`].
+    pub fn from_tns(path: &std::path::Path) -> std::io::Result<Workload> {
+        Self::load_tns(path).map_err(TensorIoError::into_io)
     }
 
     /// Build a workload from an in-memory tensor (slice indices built
@@ -101,9 +118,14 @@ impl Workload {
         }
         let path = std::path::Path::new(&job.dataset);
         if path.is_file() || job.dataset.ends_with(".tns") {
-            Workload::from_tns(path).map_err(|source| WorkloadError::Io {
-                path: path.to_path_buf(),
-                source,
+            Workload::load_tns(path).map_err(|source| match source {
+                TensorIoError::Io(source) => {
+                    WorkloadError::Io { path: path.to_path_buf(), source }
+                }
+                parse => WorkloadError::Tensor {
+                    path: path.to_path_buf(),
+                    source: parse,
+                },
             })
         } else {
             Err(WorkloadError::UnknownDataset { name: job.dataset.clone() })
@@ -141,6 +163,19 @@ pub struct RunRecord {
     pub rebalances: usize,
     pub rebalance_skips: usize,
     pub redist_secs: f64,
+    /// Fault-tolerance provenance. `faults_injected` counts the seeded
+    /// [`FaultPlan`](crate::dist::FaultPlan) events that actually fired;
+    /// `recoveries` the rollback-and-retry cycles the session ran;
+    /// `recovery_secs` the simulated `cat::RECOVER` bucket (survivor
+    /// re-placement + migration + re-run of rolled-back sweeps) — like
+    /// `redist_secs`, reported alongside `hooi_secs`, not inside it, so
+    /// the Fig 11 breakdown stays sum-invariant. `checkpoint_secs` /
+    /// `checkpoint_bytes` price the sweep-boundary snapshots.
+    pub faults_injected: usize,
+    pub recoveries: usize,
+    pub recovery_secs: f64,
+    pub checkpoint_secs: f64,
+    pub checkpoint_bytes: u64,
     /// Communication volumes in units (Fig 13).
     pub svd_volume: f64,
     pub fm_volume: f64,
@@ -200,6 +235,11 @@ pub(crate) fn collect_record(
         rebalances: 0,
         rebalance_skips: 0,
         redist_secs: cluster.elapsed.get(cat::REDIST),
+        faults_injected: cluster.faults_injected(),
+        recoveries: 0,
+        recovery_secs: cluster.elapsed.get(cat::RECOVER),
+        checkpoint_secs: 0.0,
+        checkpoint_bytes: 0,
         svd_volume: cluster.volume.get(cat::COMM_SVD),
         fm_volume: cluster.volume.get(cat::COMM_FM),
         ttm_balance: metrics.ttm_balance(),
@@ -231,7 +271,7 @@ pub fn run_scheme(
     seed: u64,
 ) -> RunRecord {
     let mut rng = Rng::new(seed);
-    let dist = scheme.distribute(&w.tensor, &w.idx, p, &mut rng);
+    let dist = scheme.policies(&w.tensor, &w.idx, p, &mut rng);
     run_distribution(w, &dist, k, invocations, engine, net, seed)
 }
 
@@ -344,6 +384,28 @@ mod tests {
                 assert_eq!(path, std::path::Path::new("/nonexistent/dir/tensor.tns"))
             }
             other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_malformed_file_reports_typed_parse_error() {
+        let dir = std::env::temp_dir().join("tucker_lite_resolve_parse");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("broken.tns");
+        std::fs::write(&path, "1 1 1 2.0\n0 1 1 3.0\n").unwrap();
+        let job = JobSpec {
+            dataset: path.to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        match Workload::resolve(&job) {
+            Err(WorkloadError::Tensor { path: p, source }) => {
+                assert_eq!(p, path);
+                match source {
+                    TensorIoError::Parse { line, .. } => assert_eq!(line, 2),
+                    other => panic!("expected Parse, got {other:?}"),
+                }
+            }
+            other => panic!("expected Tensor error, got {other:?}"),
         }
     }
 

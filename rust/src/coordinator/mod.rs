@@ -3,11 +3,13 @@
 //! cluster → HOOI → record) and the experiment harness regenerating
 //! every table/figure of §7.
 
+pub mod checkpoint;
 pub mod experiments;
 pub mod job;
 pub mod leader;
 pub mod session;
 
+pub use checkpoint::{CheckpointPolicy, RetryPolicy, SessionCheckpoint};
 pub use experiments::{run_figure, ExpConfig};
 pub use job::JobSpec;
 pub use leader::{run_distribution, run_scheme, RunRecord, Workload, WorkloadError};

@@ -79,12 +79,48 @@
 //! decision and redistribution time surface in `RunRecord`
 //! (`rebalances`, `rebalance_skips`, `redist_secs`, and `dist_secs`
 //! growing by the redistribution — the Fig 16 quantity).
+//!
+//! ## Fault tolerance
+//!
+//! The session is the recovery authority for the fault-injection layer
+//! (`dist::fault`): arm a seeded [`FaultPlan`](crate::dist::FaultPlan)
+//! with [`TuckerSessionBuilder::fault_plan`] and the decompose calls run
+//! a sweep-at-a-time recovery loop —
+//!
+//! 1. **checkpoints**: at every sweep boundary the configured
+//!    [`CheckpointPolicy`] says so, the session captures a
+//!    [`SessionCheckpoint`] (factors, RNG cursor, σ diagnostics — the
+//!    full [`HooiSnapshot`] resume state, serializable bit-exactly);
+//!    the bootstrap state is always retained, so even
+//!    `CheckpointPolicy::Never` recovers (from the start of the call);
+//! 2. **transient failures** roll the state back to the last retained
+//!    checkpoint and re-sweep — bit-identical to a run that never
+//!    faulted, because the RNG cursor and factors restore exactly;
+//! 3. **rank crashes** first re-place the dead rank's elements across
+//!    the survivors ([`sched::evict_rank`](crate::sched::evict_rank) —
+//!    Lite's min-load discipline, preferring ranks that already share
+//!    the slice), rebuild exactly the diffed (mode, rank) plans through
+//!    the migration machinery above, then roll back and re-sweep. The
+//!    same eviction is available as a planned operation
+//!    ([`TuckerSession::evict_rank`]), and crash recovery is
+//!    bit-identical to planning that eviction at the rollback boundary
+//!    (`tests/fault_tolerance.rs` pins this at every (sweep, phase));
+//! 4. **stragglers** slow the makespan, escalating to a failure only
+//!    past [`RetryPolicy::straggler_timeout`].
+//!
+//! Retries are bounded by [`RetryPolicy::max_attempts`]; exhaustion (or
+//! losing every rank) surfaces as a typed [`SessionError`] from the
+//! `try_*` variants. `RunRecord` reports `faults_injected`,
+//! `recoveries`, `recovery_secs` (the `cat::RECOVER` bucket — alongside
+//! `hooi_secs`, like `redist_secs`, so the Fig 11 breakdown stays
+//! sum-invariant) and `checkpoint_secs`/`checkpoint_bytes`.
 
+use super::checkpoint::{CheckpointPolicy, RetryPolicy, SessionCheckpoint};
 use super::leader::{collect_record, RunRecord, Workload};
-use crate::dist::{cat, NetModel, SimCluster};
+use crate::dist::{cat, FaultInjector, FaultPlan, NetModel, SimCluster};
 use crate::hooi::{
-    charge_plan_compilation, prepare_modes_with_sharers, CoreRanks, HooiState, Kernel,
-    ModeDelta, ModeState, TensorAccounting,
+    charge_plan_compilation, prepare_modes_with_sharers, CoreRanks, HooiSnapshot,
+    HooiState, Kernel, ModeDelta, ModeState, TensorAccounting,
 };
 use crate::linalg::Mat;
 use crate::runtime::Engine;
@@ -277,7 +313,8 @@ pub struct RebalanceReport {
     pub decision: RebalanceDecision,
 }
 
-/// Why a session could not be built.
+/// Why a session could not be built — or, from the `try_*` decompose
+/// variants, why a faulted run could not be recovered.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SessionError {
     /// `CoreRanks` does not apply to this tensor (length mismatch or a
@@ -287,6 +324,14 @@ pub enum SessionError {
     ZeroRanks,
     /// HOOI supports 3-D and 4-D tensors.
     UnsupportedOrder(usize),
+    /// Every rank is dead: there is no survivor to re-place onto.
+    NoSurvivors,
+    /// A sweep (or the outcome) failed [`RetryPolicy::max_attempts`]
+    /// times in a row; the message is the last failure's detail.
+    RecoveryExhausted(String),
+    /// A [`SessionCheckpoint`] does not belong to this session's
+    /// configuration (world size, core ranks or factor shapes differ).
+    CheckpointMismatch(String),
 }
 
 impl std::fmt::Display for SessionError {
@@ -296,6 +341,15 @@ impl std::fmt::Display for SessionError {
             SessionError::ZeroRanks => write!(f, "world size P must be at least 1"),
             SessionError::UnsupportedOrder(n) => {
                 write!(f, "HOOI supports 3-D and 4-D tensors, got {n}-D")
+            }
+            SessionError::NoSurvivors => {
+                write!(f, "every rank is dead: no survivor to re-place onto")
+            }
+            SessionError::RecoveryExhausted(msg) => {
+                write!(f, "recovery exhausted: {msg}")
+            }
+            SessionError::CheckpointMismatch(msg) => {
+                write!(f, "checkpoint does not match this session: {msg}")
             }
         }
     }
@@ -317,6 +371,9 @@ pub struct TuckerSessionBuilder {
     net: NetModel,
     accounting: Option<TensorAccounting>,
     rebalance: RebalancePolicy,
+    checkpoint: CheckpointPolicy,
+    retry: RetryPolicy,
+    faults: FaultPlan,
     seed: u64,
 }
 
@@ -334,6 +391,9 @@ impl TuckerSessionBuilder {
             net: NetModel::default(),
             accounting: None,
             rebalance: RebalancePolicy::default(),
+            checkpoint: CheckpointPolicy::default(),
+            retry: RetryPolicy::default(),
+            faults: FaultPlan::new(),
             seed: 0xBEEF,
         }
     }
@@ -411,6 +471,31 @@ impl TuckerSessionBuilder {
         self
     }
 
+    /// When to capture a [`SessionCheckpoint`] at sweep boundaries
+    /// (default: [`CheckpointPolicy::EverySweeps`]`(1)` — every
+    /// boundary). The bootstrap state is retained regardless, so
+    /// recovery works under [`CheckpointPolicy::Never`] too (it just
+    /// replays the whole call).
+    pub fn checkpoint_policy(mut self, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = policy;
+        self
+    }
+
+    /// Recovery bounds: retry attempts per position and the straggler
+    /// escalation timeout (default: 3 attempts, no timeout).
+    pub fn retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Arm a deterministic [`FaultPlan`]: its events fire at their
+    /// (sweep, phase) positions on every run, and the session recovers
+    /// per the module docs' *Fault tolerance* section.
+    pub fn fault_plan(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Seed for the distribution construction and the HOOI bootstrap.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
@@ -456,6 +541,8 @@ impl TuckerSessionBuilder {
             parallel,
             plan.modes.iter().map(|m| m.sharers.clone()).collect(),
         );
+        let injector =
+            if self.faults.is_empty() { None } else { Some(self.faults.injector()) };
         Ok(TuckerSession {
             workload: self.workload,
             plan,
@@ -468,6 +555,10 @@ impl TuckerSessionBuilder {
             net: self.net,
             accounting: self.accounting,
             rebalance_policy: self.rebalance,
+            checkpoint_policy: self.checkpoint,
+            retry: self.retry,
+            injector,
+            dead: vec![false; self.p],
             seed: self.seed,
             modes,
             plan_builds: 1,
@@ -480,6 +571,12 @@ impl TuckerSessionBuilder {
             rebalances: 0,
             rebalance_skips: 0,
             redist_secs_total: 0.0,
+            recoveries: 0,
+            recovery_secs_total: 0.0,
+            checkpoint_secs_total: 0.0,
+            checkpoint_bytes_total: 0,
+            last_snap: None,
+            last_checkpoint: None,
             state: None,
         })
     }
@@ -500,6 +597,14 @@ pub struct TuckerSession {
     net: NetModel,
     accounting: Option<TensorAccounting>,
     rebalance_policy: RebalancePolicy,
+    checkpoint_policy: CheckpointPolicy,
+    retry: RetryPolicy,
+    /// The armed fault injector, persisted across clusters so consumed
+    /// events and dead-rank tombstones survive between decompose calls.
+    injector: Option<FaultInjector>,
+    /// Evicted ranks (crashed, or explicitly evicted) — they own no
+    /// elements and are skipped by every future eviction.
+    dead: Vec<bool>,
     seed: u64,
     modes: Vec<ModeState>,
     plan_builds: usize,
@@ -516,6 +621,17 @@ pub struct TuckerSession {
     rebalances: usize,
     rebalance_skips: usize,
     redist_secs_total: f64,
+    recoveries: usize,
+    /// Session-lifetime `cat::RECOVER` seconds (survivor re-placement,
+    /// migration, rollback — the wall and simulated cost of recovery).
+    recovery_secs_total: f64,
+    checkpoint_secs_total: f64,
+    checkpoint_bytes_total: u64,
+    /// The in-memory restore point recovery rolls back to: the
+    /// bootstrap at first, then the last policy-due sweep boundary.
+    last_snap: Option<HooiSnapshot>,
+    /// The last policy-due serialized checkpoint (observable artifact).
+    last_checkpoint: Option<SessionCheckpoint>,
     state: Option<HooiState>,
 }
 
@@ -588,6 +704,12 @@ impl TuckerSession {
         if let Some(parallel) = self.executor.as_option() {
             cluster = cluster.with_parallel(parallel);
         }
+        if let Some(inj) = &self.injector {
+            // hand the persistent injector state over: events consumed
+            // in earlier runs stay consumed, tombstones stay dead
+            cluster.set_injector(inj.clone());
+        }
+        cluster.set_phase_timeout(self.retry.straggler_timeout);
         if self.pending_ingest_secs > 0.0 {
             // partial-rebuild work from ingest is real per-rank compute:
             // charge it (once) to the next run, like plan compilation
@@ -622,6 +744,11 @@ impl TuckerSession {
             self.kernel,
         );
         state.record_kernels(&self.engine, &mut cluster);
+        // the bootstrap is always a valid restore point (and the only
+        // one under CheckpointPolicy::Never); stale snapshots from a
+        // previous bootstrap must not survive into this run
+        self.last_snap = Some(state.snapshot());
+        self.last_checkpoint = None;
         (cluster, state)
     }
 
@@ -646,18 +773,24 @@ impl TuckerSession {
 
     /// Run the configured number of HOOI invocations from a fresh
     /// bootstrap (any previous refinement state is discarded; the
-    /// compiled plans are reused).
+    /// compiled plans are reused). Panics if recovery is exhausted —
+    /// use [`try_decompose`](TuckerSession::try_decompose) when a fault
+    /// plan is armed.
     pub fn decompose(&mut self) -> Decomposition {
+        match self.try_decompose() {
+            Ok(d) => d,
+            Err(e) => panic!("unrecovered session failure: {e}"),
+        }
+    }
+
+    /// Fallible [`decompose`](TuckerSession::decompose): surfaces
+    /// retry exhaustion and survivor loss as a [`SessionError`] instead
+    /// of panicking.
+    pub fn try_decompose(&mut self) -> Result<Decomposition, SessionError> {
         self.warn_if_pending();
-        let (mut cluster, mut state) = self.start();
-        state.sweeps(
-            &self.workload.tensor,
-            &self.modes,
-            &self.engine,
-            &mut cluster,
-            self.invocations,
-        );
+        let (mut cluster, state) = self.start();
         self.state = Some(state);
+        self.run_to(&mut cluster, self.invocations)?;
         self.finish(cluster)
     }
 
@@ -666,32 +799,161 @@ impl TuckerSession {
     /// running `decompose()` then `decompose_more(m)` is bit-identical
     /// to a single run configured with `invocations + m`. With no
     /// decomposition in flight, bootstraps and runs the configured
-    /// invocations plus `invocations` in one pass.
+    /// invocations plus `invocations` in one pass. Panics if recovery
+    /// is exhausted — use
+    /// [`try_decompose_more`](TuckerSession::try_decompose_more) when a
+    /// fault plan is armed.
     pub fn decompose_more(&mut self, invocations: usize) -> Decomposition {
+        match self.try_decompose_more(invocations) {
+            Ok(d) => d,
+            Err(e) => panic!("unrecovered session failure: {e}"),
+        }
+    }
+
+    /// Fallible [`decompose_more`](TuckerSession::decompose_more).
+    pub fn try_decompose_more(
+        &mut self,
+        invocations: usize,
+    ) -> Result<Decomposition, SessionError> {
         self.warn_if_pending();
         let mut cluster;
-        let sweeps;
+        let target;
         if self.state.is_none() {
             // start() already records kernel provenance on the cluster
             let (c, state) = self.start();
             cluster = c;
             self.state = Some(state);
-            sweeps = self.invocations + invocations;
+            target = self.invocations + invocations;
         } else {
             cluster = self.new_cluster();
-            sweeps = invocations;
             let state = self.state.as_ref().expect("decomposition state in flight");
+            target = state.sweep() + invocations;
             state.record_kernels(&self.engine, &mut cluster);
         }
-        let state = self.state.as_mut().expect("decomposition state in flight");
-        state.sweeps(
-            &self.workload.tensor,
-            &self.modes,
-            &self.engine,
-            &mut cluster,
-            sweeps,
-        );
+        self.run_to(&mut cluster, target)?;
         self.finish(cluster)
+    }
+
+    /// The recovery loop: drive the in-flight state to `target`
+    /// completed sweeps, one sweep at a time — checkpointing at
+    /// policy-due boundaries, and on failure evicting crashed ranks,
+    /// rolling back to the last retained checkpoint and re-sweeping,
+    /// bounded by [`RetryPolicy::max_attempts`] consecutive failures.
+    fn run_to(
+        &mut self,
+        cluster: &mut SimCluster,
+        target: usize,
+    ) -> Result<(), SessionError> {
+        let mut failures_in_a_row = 0usize;
+        loop {
+            let done = self.state.as_ref().expect("state in flight").sweep();
+            if done >= target {
+                self.sync_injector(cluster);
+                return Ok(());
+            }
+            let res = {
+                let state = self.state.as_mut().expect("state in flight");
+                state.sweeps(
+                    &self.workload.tensor,
+                    &self.modes,
+                    &self.engine,
+                    cluster,
+                    1,
+                )
+            };
+            match res {
+                Ok(()) => {
+                    failures_in_a_row = 0;
+                    let done =
+                        self.state.as_ref().expect("state in flight").sweep();
+                    // never checkpoint the final boundary: an outcome
+                    // failure must re-run at least one sweep, or the
+                    // final mode's locals (which only a sweep rebuilds)
+                    // would be missing at the retried core phase
+                    if self.checkpoint_policy.due(done) && done != target {
+                        self.take_checkpoint();
+                    }
+                }
+                Err(f) => {
+                    self.sync_injector(cluster);
+                    failures_in_a_row += 1;
+                    if failures_in_a_row >= self.retry.max_attempts {
+                        return Err(SessionError::RecoveryExhausted(format!(
+                            "{f} ({failures_in_a_row} consecutive failed attempts)"
+                        )));
+                    }
+                    self.recover(cluster)?;
+                }
+            }
+        }
+    }
+
+    /// One recovery cycle: evict any newly dead ranks onto the
+    /// survivors, then roll the HOOI state back to the last retained
+    /// checkpoint. All cost — eviction migration, plan rebuilds,
+    /// rollback wall time — is charged to `cat::RECOVER`.
+    fn recover(&mut self, cluster: &mut SimCluster) -> Result<(), SessionError> {
+        let t0 = Instant::now();
+        self.recoveries += 1;
+        let newly_dead: Vec<usize> = cluster
+            .injector()
+            .map(|inj| inj.dead_ranks())
+            .unwrap_or_default()
+            .into_iter()
+            .filter(|&r| !self.dead[r])
+            .collect();
+        let mut sim_secs = 0.0;
+        if !newly_dead.is_empty() {
+            if self.survivors_after(&newly_dead) == 0 {
+                return Err(SessionError::NoSurvivors);
+            }
+            for &r in &newly_dead {
+                self.dead[r] = true;
+            }
+            let (migration_sim, rebuild_secs) = self.apply_eviction();
+            sim_secs += migration_sim + rebuild_secs;
+        }
+        let snap = self.last_snap.clone().ok_or_else(|| {
+            SessionError::RecoveryExhausted("no restore point retained".into())
+        })?;
+        if let Some(state) = self.state.as_mut() {
+            state.restore(&snap);
+        }
+        let secs = sim_secs + t0.elapsed().as_secs_f64();
+        cluster.elapsed.add(cat::RECOVER, secs);
+        self.recovery_secs_total += secs;
+        Ok(())
+    }
+
+    fn survivors_after(&self, newly_dead: &[usize]) -> usize {
+        self.dead
+            .iter()
+            .enumerate()
+            .filter(|&(r, &d)| !d && !newly_dead.contains(&r))
+            .count()
+    }
+
+    /// Capture a policy-due checkpoint: the in-memory restore point
+    /// plus the serialized [`SessionCheckpoint`] artifact (its
+    /// serialization cost and size are what `RunRecord` reports).
+    fn take_checkpoint(&mut self) {
+        let state = self.state.as_ref().expect("state in flight");
+        let t0 = Instant::now();
+        let snap = state.snapshot();
+        let cp = SessionCheckpoint::from_snapshot(&snap, self.plan.dist.p, &self.ks);
+        self.checkpoint_bytes_total += cp.serialize().len() as u64;
+        self.checkpoint_secs_total += t0.elapsed().as_secs_f64();
+        self.last_snap = Some(snap);
+        self.last_checkpoint = Some(cp);
+    }
+
+    /// Persist the cluster's injector state (consumed events, fired
+    /// count, tombstones) back into the session, so the next cluster —
+    /// and the next retry — continues from it instead of re-arming.
+    fn sync_injector(&mut self, cluster: &SimCluster) {
+        if let Some(inj) = cluster.injector() {
+            self.injector = Some(inj.clone());
+        }
     }
 
     /// Apply a streaming [`TensorDelta`] to the held tensor and
@@ -1038,28 +1300,251 @@ impl TuckerSession {
         report
     }
 
-    fn finish(&mut self, mut cluster: SimCluster) -> Decomposition {
-        let state = self.state.as_ref().expect("decomposition state in flight");
-        let out = state.outcome(
-            &self.workload.tensor,
-            &self.plan.dist,
-            &self.modes,
-            &mut cluster,
-            self.accounting,
-        );
+    /// Re-place every element owned by a dead rank across the
+    /// survivors and migrate the session onto the evicted placement.
+    /// Shared by crash recovery and the planned
+    /// [`evict_rank`](TuckerSession::evict_rank): both paths produce
+    /// the identical placement from the identical starting plan — the
+    /// root of the crash-recovery ≡ planned-eviction bit contract.
+    /// Returns (simulated migration seconds, plan-rebuild makespan).
+    fn apply_eviction(&mut self) -> (f64, f64) {
+        let t0 = Instant::now();
+        let model = self.cost_model();
+        let w = self.workload.clone();
+        let t = &w.tensor;
+        let idx = &w.idx;
+        let mut candidate = self.plan.dist.clone();
+        if candidate.uni {
+            // uni-pair placements share one assignment buffer across
+            // modes: evict it once (against mode 0's slice structure)
+            // and re-alias, keeping the single-copy invariant true
+            let pol = sched::evict_rank(&candidate.policies[0], &idx[0], &self.dead);
+            let shared = pol.assign.clone();
+            candidate.policies[0] = pol;
+            for other in candidate.policies[1..].iter_mut() {
+                other.assign = shared.clone();
+            }
+        } else {
+            for n in 0..t.ndim() {
+                candidate.policies[n] =
+                    sched::evict_rank(&candidate.policies[n], &idx[n], &self.dead);
+            }
+        }
+        if !candidate.scheme.ends_with("+evict") {
+            // provenance: the placement is no longer purely the
+            // original scheme's
+            candidate.scheme.push_str("+evict");
+        }
+        let candidate_plan = PlacementPlan::compile(candidate, idx, &self.ks, &model);
+        let migration = self.plan.diff(&candidate_plan);
+        let migration_sim = migration.simulated_secs(&self.net);
+        // apply: exactly the diffed (mode, rank) plans, via the same
+        // splice/rebuild machinery ingest and rebalance use
+        let parallel =
+            crate::util::env::phase_executor_parallel(self.executor.as_option());
+        let mut rebuild_secs = 0.0f64;
+        let mut touched = 0usize;
+        for mm in &migration.per_mode {
+            if mm.is_empty() {
+                self.modes[mm.mode].refresh_fm(
+                    &idx[mm.mode],
+                    &candidate_plan.dist,
+                    mm.mode,
+                );
+                continue;
+            }
+            let stats = self.modes[mm.mode].apply_migration(
+                t,
+                &idx[mm.mode],
+                &candidate_plan.dist,
+                mm.mode,
+                &self.core,
+                &mm.outgoing,
+                &mm.incoming,
+                parallel,
+            );
+            touched += stats.spliced + stats.rebuilt;
+            rebuild_secs = rebuild_secs.max(stats.rebuild_secs);
+        }
+        self.plan_rebuilds += touched;
+        let old_time = self.plan.dist.time;
+        self.plan = candidate_plan;
+        self.plan.dist.time = DistTime {
+            serial_secs: old_time.serial_secs + t0.elapsed().as_secs_f64(),
+            simulated_secs: old_time.simulated_secs + migration_sim,
+        };
+        (migration_sim, rebuild_secs)
+    }
+
+    /// Planned eviction: drain `rank` (re-placing its elements across
+    /// the survivors with Lite's min-load discipline, preferring ranks
+    /// that already share each slice) and migrate the session onto the
+    /// evicted placement. Idempotent per rank. The identical operation
+    /// crash recovery performs — evicting at a sweep boundary and
+    /// continuing is bit-identical to crashing that rank and recovering
+    /// from a checkpoint at the same boundary.
+    pub fn evict_rank(&mut self, rank: usize) -> Result<(), SessionError> {
+        assert!(rank < self.plan.dist.p, "rank {rank} out of range");
+        if self.dead[rank] {
+            return Ok(());
+        }
+        if self.survivors_after(&[rank]) == 0 {
+            return Err(SessionError::NoSurvivors);
+        }
+        self.dead[rank] = true;
+        let (migration_sim, rebuild_secs) = self.apply_eviction();
+        // a planned eviction is redistribution work, not recovery:
+        // charge it like a rebalance migration
+        self.pending_redist_secs += migration_sim;
+        self.redist_secs_total += migration_sim;
+        self.pending_ingest_secs += rebuild_secs;
+        Ok(())
+    }
+
+    /// Ranks drained so far (crashed or explicitly evicted).
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.dead
+            .iter()
+            .enumerate()
+            .filter_map(|(r, &d)| if d { Some(r) } else { None })
+            .collect()
+    }
+
+    /// Rollback-and-retry cycles run so far (session lifetime).
+    pub fn recoveries(&self) -> usize {
+        self.recoveries
+    }
+
+    /// Seeded fault events that have fired so far (session lifetime).
+    pub fn faults_injected(&self) -> usize {
+        self.injector.as_ref().map_or(0, FaultInjector::faults_injected)
+    }
+
+    /// Capture a checkpoint of the in-flight decomposition state
+    /// (`None` when no decomposition has started).
+    pub fn checkpoint(&self) -> Option<SessionCheckpoint> {
+        self.state.as_ref().map(|state| {
+            SessionCheckpoint::from_snapshot(
+                &state.snapshot(),
+                self.plan.dist.p,
+                &self.ks,
+            )
+        })
+    }
+
+    /// The last checkpoint the [`CheckpointPolicy`] captured during a
+    /// decompose call (`None` before the first due boundary).
+    pub fn last_checkpoint(&self) -> Option<&SessionCheckpoint> {
+        self.last_checkpoint.as_ref()
+    }
+
+    /// Restore the in-flight decomposition state from a checkpoint —
+    /// the resumed session continues bit-exactly (same factors, same
+    /// RNG cursor), provided the placement and plans match the ones the
+    /// checkpoint was captured under (same builder configuration). With
+    /// no decomposition in flight, bootstraps one first.
+    pub fn restore(&mut self, cp: &SessionCheckpoint) -> Result<(), SessionError> {
+        if cp.p != self.plan.dist.p {
+            return Err(SessionError::CheckpointMismatch(format!(
+                "checkpoint world size {} vs session {}",
+                cp.p, self.plan.dist.p
+            )));
+        }
+        if cp.ks != self.ks {
+            return Err(SessionError::CheckpointMismatch(format!(
+                "checkpoint core ranks {:?} vs session {:?}",
+                cp.ks, self.ks
+            )));
+        }
+        for (n, f) in cp.factors.iter().enumerate() {
+            let l_n = self.workload.tensor.dims[n] as usize;
+            if f.rows != l_n || f.cols != self.ks[n] {
+                return Err(SessionError::CheckpointMismatch(format!(
+                    "mode {n} factor is {}x{}, expected {l_n}x{}",
+                    f.rows, f.cols, self.ks[n]
+                )));
+            }
+        }
+        let snap = cp.to_snapshot();
+        match self.state.as_mut() {
+            Some(state) => state.restore(&snap),
+            None => {
+                let mut state = HooiState::init(
+                    &self.workload.tensor,
+                    self.plan.dist.p,
+                    &self.core,
+                    self.seed,
+                    self.kernel,
+                );
+                state.restore(&snap);
+                self.state = Some(state);
+            }
+        }
+        self.last_snap = Some(snap);
+        Ok(())
+    }
+
+    fn finish(&mut self, mut cluster: SimCluster) -> Result<Decomposition, SessionError> {
+        let mut failures_in_a_row = 0usize;
+        let out = loop {
+            let res = {
+                let state =
+                    self.state.as_ref().expect("decomposition state in flight");
+                state.outcome(
+                    &self.workload.tensor,
+                    &self.plan.dist,
+                    &self.modes,
+                    &mut cluster,
+                    self.accounting,
+                )
+            };
+            self.sync_injector(&cluster);
+            match res {
+                Ok(out) => break out,
+                Err(f) => {
+                    // the core phase faulted: recover exactly like a
+                    // failed sweep, then replay up to the pre-outcome
+                    // boundary (the final checkpoint is never at that
+                    // boundary, so ≥ 1 sweep re-runs and rebuilds the
+                    // final mode's locals the core phase needs)
+                    failures_in_a_row += 1;
+                    if failures_in_a_row >= self.retry.max_attempts {
+                        return Err(SessionError::RecoveryExhausted(format!(
+                            "{f} ({failures_in_a_row} consecutive failed attempts)"
+                        )));
+                    }
+                    let target =
+                        self.state.as_ref().expect("state in flight").sweep();
+                    self.recover(&mut cluster)?;
+                    let resumed =
+                        self.state.as_ref().expect("state in flight").sweep();
+                    if resumed >= target {
+                        return Err(SessionError::RecoveryExhausted(format!(
+                            "outcome failed with no sweep to replay: {f}"
+                        )));
+                    }
+                    self.run_to(&mut cluster, target)?;
+                }
+            }
+        };
         let mut record =
             collect_record(&self.workload, &self.plan.dist, &self.ks, &cluster, &out);
-        // rebalance provenance: session-lifetime counters (the cluster
-        // bucket only sees the charge of the run after a rebalance)
+        // rebalance + fault-tolerance provenance: session-lifetime
+        // counters (the cluster bucket only sees this run's charges)
         record.rebalances = self.rebalances;
         record.rebalance_skips = self.rebalance_skips;
         record.redist_secs = self.redist_secs_total;
-        Decomposition {
+        record.faults_injected = self.faults_injected();
+        record.recoveries = self.recoveries;
+        record.recovery_secs = self.recovery_secs_total;
+        record.checkpoint_secs = self.checkpoint_secs_total;
+        record.checkpoint_bytes = self.checkpoint_bytes_total;
+        Ok(Decomposition {
             factors: out.factors,
             core: out.core,
             sigma: out.sigma,
             record,
-        }
+        })
     }
 }
 
@@ -1334,5 +1819,208 @@ mod tests {
         // 1 configured invocation + 1 more
         assert!(d.fit().is_finite());
         assert_eq!(s.plan_builds(), 1);
+    }
+
+    fn ft_session(w: &Workload, faults: FaultPlan) -> TuckerSession {
+        TuckerSession::builder(w.clone())
+            .ranks(4)
+            .core(CoreRanks::Uniform(3))
+            .invocations(2)
+            .seed(11)
+            .fault_plan(faults)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn transient_fault_rollback_matches_fault_free_run() {
+        let w = tiny_workload();
+        let clean = ft_session(&w, FaultPlan::new()).decompose();
+        let mut s = ft_session(&w, FaultPlan::new().transient_at(1, 2, 1));
+        let d = s.try_decompose().expect("recovers");
+        assert_eq!(s.faults_injected(), 1);
+        assert_eq!(s.recoveries(), 1);
+        assert_eq!(d.record.faults_injected, 1);
+        assert_eq!(d.record.recoveries, 1);
+        assert!(d.record.recovery_secs > 0.0);
+        // rollback + retry is bit-identical to never faulting
+        for (a, b) in clean.factors.iter().zip(&d.factors) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(clean.core.data, d.core.data);
+        assert_eq!(clean.record.fit, d.record.fit);
+        // the Fig 11 breakdown stays sum-invariant with recovery around
+        assert!(
+            (d.record.ttm_secs + d.record.svd_secs + d.record.core_secs
+                + d.record.comm_secs
+                - d.record.hooi_secs)
+                .abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn crash_recovery_matches_planned_eviction() {
+        let w = tiny_workload();
+        // baseline: 1 sweep, planned eviction at the boundary, 1 more
+        let mut base = TuckerSession::builder(w.clone())
+            .ranks(4)
+            .core(CoreRanks::Uniform(3))
+            .invocations(1)
+            .seed(11)
+            .build()
+            .unwrap();
+        base.decompose();
+        base.evict_rank(2).expect("3 survivors");
+        let want = base.decompose_more(1);
+        // faulted: rank 2 crashes mid-sweep-1; the due boundary-1
+        // checkpoint is the rollback point, so recovery re-places and
+        // replays exactly the sweep the baseline ran post-eviction
+        let mut s = ft_session(&w, FaultPlan::new().crash_at(1, 0, 2));
+        let got = s.try_decompose().expect("recovers");
+        assert_eq!(s.dead_ranks(), vec![2]);
+        assert_eq!(s.recoveries(), 1);
+        assert!(s.placement().scheme().ends_with("+evict"));
+        for (a, b) in want.factors.iter().zip(&got.factors) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(want.core.data, got.core.data);
+        assert_eq!(want.record.fit, got.record.fit);
+        // the dead rank owns nothing under any mode's policy
+        for pol in &s.placement().dist.policies {
+            assert!(pol.assign.iter().all(|&r| r != 2));
+        }
+    }
+
+    #[test]
+    fn retry_exhaustion_and_survivor_loss_surface_typed_errors() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w.clone())
+            .ranks(3)
+            .core(CoreRanks::Uniform(3))
+            .seed(3)
+            .fault_plan(FaultPlan::new().transient_at(0, 0, 1))
+            .retry_policy(RetryPolicy { max_attempts: 1, straggler_timeout: None })
+            .build()
+            .unwrap();
+        assert!(matches!(
+            s.try_decompose(),
+            Err(SessionError::RecoveryExhausted(_))
+        ));
+        // losing every rank at once leaves no survivor to re-place onto
+        let mut s2 = TuckerSession::builder(w.clone())
+            .ranks(2)
+            .core(CoreRanks::Uniform(3))
+            .seed(3)
+            .fault_plan(FaultPlan::new().crash_at(0, 0, 0).crash_at(0, 0, 1))
+            .build()
+            .unwrap();
+        assert!(matches!(s2.try_decompose(), Err(SessionError::NoSurvivors)));
+        // planned eviction refuses to drain the last rank
+        let mut s3 = TuckerSession::builder(w)
+            .ranks(1)
+            .core(CoreRanks::Uniform(3))
+            .build()
+            .unwrap();
+        assert!(matches!(s3.evict_rank(0), Err(SessionError::NoSurvivors)));
+    }
+
+    #[test]
+    fn serialized_checkpoint_restores_into_a_fresh_session() {
+        let w = tiny_workload();
+        let mk = || {
+            TuckerSession::builder(w.clone())
+                .ranks(3)
+                .core(CoreRanks::Uniform(3))
+                .invocations(2)
+                .seed(7)
+                .build()
+                .unwrap()
+        };
+        let mut s1 = mk();
+        s1.decompose();
+        let cp = s1.checkpoint().expect("state in flight");
+        let want = s1.decompose_more(1);
+        // ship the checkpoint over the wire into an identically
+        // configured fresh session: the resumed sweep is bit-identical
+        let mut s2 = mk();
+        let wire = SessionCheckpoint::parse(&cp.serialize()).unwrap();
+        s2.restore(&wire).unwrap();
+        let got = s2.decompose_more(1);
+        for (a, b) in want.factors.iter().zip(&got.factors) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(want.core.data, got.core.data);
+        // a mismatched configuration is rejected, session untouched
+        let mut s3 = TuckerSession::builder(w.clone())
+            .ranks(4)
+            .core(CoreRanks::Uniform(3))
+            .build()
+            .unwrap();
+        assert!(matches!(
+            s3.restore(&wire),
+            Err(SessionError::CheckpointMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn checkpoint_policy_gates_boundary_captures() {
+        let w = tiny_workload();
+        let mut s = TuckerSession::builder(w.clone())
+            .ranks(3)
+            .core(CoreRanks::Uniform(3))
+            .invocations(3)
+            .checkpoint_policy(CheckpointPolicy::EverySweeps(2))
+            .build()
+            .unwrap();
+        let d = s.decompose();
+        // boundary 2 is due (and not final); boundary 3 is excluded
+        let cp = s.last_checkpoint().expect("boundary 2 captured");
+        assert_eq!(cp.sweep, 2);
+        assert!(d.record.checkpoint_bytes > 0);
+        let mut s2 = TuckerSession::builder(w)
+            .ranks(3)
+            .core(CoreRanks::Uniform(3))
+            .invocations(3)
+            .checkpoint_policy(CheckpointPolicy::Never)
+            .build()
+            .unwrap();
+        let d2 = s2.decompose();
+        assert!(s2.last_checkpoint().is_none());
+        assert_eq!(d2.record.checkpoint_bytes, 0);
+        assert_eq!(d2.record.checkpoint_secs, 0.0);
+    }
+
+    #[test]
+    fn straggler_slows_without_failing_unless_timed_out() {
+        let w = tiny_workload();
+        let faults = || FaultPlan::new().straggler_at(0, 0, 1, 1000.0);
+        // no timeout configured: the fault fires, nothing fails
+        let mut s = ft_session(&w, faults());
+        let d = s.try_decompose().expect("no failure");
+        assert_eq!(s.faults_injected(), 1);
+        assert_eq!(s.recoveries(), 0);
+        // a tight timeout escalates the same straggler to a failure;
+        // rollback + retry still lands the fault-free bits
+        let clean = ft_session(&w, FaultPlan::new()).decompose();
+        let mut s2 = TuckerSession::builder(w)
+            .ranks(4)
+            .core(CoreRanks::Uniform(3))
+            .invocations(2)
+            .seed(11)
+            .fault_plan(faults())
+            .retry_policy(RetryPolicy {
+                max_attempts: 3,
+                straggler_timeout: Some(1e-12),
+            })
+            .build()
+            .unwrap();
+        let d2 = s2.try_decompose().expect("recovers");
+        assert_eq!(s2.recoveries(), 1);
+        for (a, b) in clean.factors.iter().zip(&d2.factors) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(clean.core.data, d2.core.data);
+        assert_eq!(clean.record.fit, d.record.fit);
     }
 }

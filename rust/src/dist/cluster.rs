@@ -13,9 +13,20 @@
 //! `TUCKER_PHASE_EXECUTOR=serial` (or use [`SimCluster::serial`] /
 //! [`SimCluster::with_parallel`]) to force the serial executor, e.g. for
 //! timing-sensitive figure runs on a busy host.
+//!
+//! Failure model: the phase methods are *fallible*. Each task runs under
+//! `catch_unwind`, so a panicking rank closure surfaces as a
+//! [`RankFailure`] from the phase call instead of tearing the process
+//! down, and an armed [`FaultInjector`] (see [`super::fault`]) can
+//! deterministically fail or slow chosen ranks at chosen `(sweep,
+//! phase)` positions. Phase positions are tracked by
+//! [`SimCluster::begin_sweep`] plus a per-sweep compute-phase counter;
+//! communication charges (`p2p`/`allreduce`) are not failure points.
 
+use super::fault::{FailureKind, FaultInjector, FaultKind, RankFailure};
 use super::net::NetModel;
 use crate::util::timer::Buckets;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -36,6 +47,11 @@ pub mod cat {
     /// wire. Charged by the session when a rebalance lands, reported as
     /// `RunRecord::redist_secs` alongside the Fig 16 distribution time.
     pub const REDIST: &str = "redist";
+    /// Fault recovery: survivor re-placement of a dead rank's elements,
+    /// checkpoint rollback, and the migration a recovery puts on the
+    /// wire. Reported as `RunRecord::recovery_secs` alongside the HOOI
+    /// phase breakdown (which stays sum-invariant without it).
+    pub const RECOVER: &str = "recover";
     /// Oracle query communication (x/y reductions).
     pub const COMM_SVD: &str = "comm-svd";
     /// Factor-matrix transfer communication.
@@ -79,7 +95,8 @@ pub struct SimCluster {
     /// Host wall seconds per compute category (what the phases really
     /// cost this process, executor overhead included).
     pub wall: Buckets,
-    /// Per-rank busy seconds of the most recent phase (diagnostics).
+    /// Per-rank busy seconds of the most recent phase (diagnostics;
+    /// straggler inflation included).
     pub last_phase: Vec<f64>,
     /// Kernel names the ranks reported, keyed by compute category (rank
     /// order within each entry; see [`SimCluster::record_kernels`]).
@@ -87,6 +104,17 @@ pub struct SimCluster {
     /// another's kernels (e.g. the TTM microkernel names).
     kernels: Vec<(String, Vec<&'static str>)>,
     parallel: bool,
+    /// Armed fault schedule (None = fault-free run; panics are still
+    /// caught and surfaced as failures).
+    injector: Option<FaultInjector>,
+    /// Current sweep label for failure reporting / fault addressing.
+    sweep: usize,
+    /// Compute-phase counter within the current sweep.
+    phase_idx: usize,
+    /// Straggler escalation threshold in simulated seconds (from the
+    /// session's `RetryPolicy`); `None` means stragglers only slow the
+    /// makespan.
+    phase_timeout: Option<f64>,
 }
 
 impl SimCluster {
@@ -106,6 +134,10 @@ impl SimCluster {
             last_phase: Vec::new(),
             kernels: Vec::new(),
             parallel,
+            injector: None,
+            sweep: 0,
+            phase_idx: 0,
+            phase_timeout: None,
         }
     }
 
@@ -123,6 +155,41 @@ impl SimCluster {
     pub fn with_parallel(mut self, on: bool) -> SimCluster {
         self.parallel = on;
         self
+    }
+
+    /// Arm a fault injector: subsequent compute phases consult it at
+    /// their `(sweep, phase)` position and fail the ranks it fires.
+    pub fn set_injector(&mut self, injector: FaultInjector) {
+        self.injector = Some(injector);
+    }
+
+    /// The armed injector, if any (recovery bookkeeping reads the
+    /// fired-fault count and dead-rank tombstones from here).
+    pub fn injector(&self) -> Option<&FaultInjector> {
+        self.injector.as_ref()
+    }
+
+    /// Straggler escalation threshold in simulated seconds (`None`
+    /// disables escalation — stragglers then only slow the makespan).
+    pub fn set_phase_timeout(&mut self, timeout: Option<f64>) {
+        self.phase_timeout = timeout;
+    }
+
+    /// Faults fired so far by the armed injector (0 when none armed).
+    pub fn faults_injected(&self) -> usize {
+        self.injector.as_ref().map_or(0, FaultInjector::faults_injected)
+    }
+
+    /// Label the phases that follow as belonging to `sweep` (0-based)
+    /// and reset the per-sweep compute-phase counter. The HOOI driver
+    /// calls this at every sweep boundary so fault positions and failure
+    /// reports are addressed consistently.
+    pub fn begin_sweep(&mut self, sweep: usize) {
+        self.sweep = sweep;
+        self.phase_idx = 0;
+        if let Some(inj) = self.injector.as_mut() {
+            inj.begin_sweep(sweep);
+        }
     }
 
     /// Is the parallel rank executor active?
@@ -182,28 +249,113 @@ impl SimCluster {
         }
     }
 
+    /// Consult the injector for the compute phase starting now,
+    /// advancing the per-sweep phase counter. Returns the per-rank
+    /// actions plus the phase's position label.
+    fn arm_phase(&mut self, n: usize) -> (Vec<Option<FaultKind>>, usize) {
+        let phase = self.phase_idx;
+        self.phase_idx += 1;
+        let actions = match self.injector.as_mut() {
+            Some(inj) => inj.arm(phase, n),
+            None => vec![None; n],
+        };
+        (actions, phase)
+    }
+
+    /// Classify the lowest failed rank of a finished phase, if any:
+    /// caught panics first, then injected crash/transient faults, then
+    /// straggler timeouts. `times` already carries straggler inflation.
+    fn classify_failure(
+        &self,
+        cat: &str,
+        phase: usize,
+        actions: &[Option<FaultKind>],
+        panics: &[Option<String>],
+        times: &[f64],
+    ) -> Option<RankFailure> {
+        for rank in 0..actions.len().max(panics.len()) {
+            let (kind, detail) = if let Some(msg) = panics.get(rank).and_then(Clone::clone) {
+                (FailureKind::Panic, format!("caught panic: {msg}"))
+            } else {
+                match actions.get(rank).copied().flatten() {
+                    Some(FaultKind::Crash) => {
+                        (FailureKind::Crash, "injected rank crash".to_string())
+                    }
+                    Some(FaultKind::Transient) => (
+                        FailureKind::Transient,
+                        "injected transient failure".to_string(),
+                    ),
+                    Some(FaultKind::Straggler(factor)) => {
+                        let secs = times.get(rank).copied().unwrap_or(0.0);
+                        match self.phase_timeout {
+                            Some(limit) if secs > limit => (
+                                FailureKind::StragglerTimeout,
+                                format!(
+                                    "straggler x{factor:.1} took {secs:.3e}s > timeout {limit:.3e}s"
+                                ),
+                            ),
+                            _ => continue,
+                        }
+                    }
+                    None => continue,
+                }
+            };
+            return Some(RankFailure {
+                rank,
+                cat: cat.to_string(),
+                sweep: self.sweep,
+                phase,
+                kind,
+                detail,
+            });
+        }
+        None
+    }
+
     /// Execute one closure per rank, record per-rank wall-times, charge
-    /// the makespan to `cat`, and return the results in rank order.
-    fn run_tasks<T, F>(&mut self, cat: &str, tasks: Vec<F>) -> Vec<T>
+    /// the makespan to `cat`, and return the results in rank order — or
+    /// the lowest failed rank's [`RankFailure`]. Time is charged either
+    /// way (the work ran before the failure was detected).
+    fn run_tasks<T, F>(&mut self, cat: &str, tasks: Vec<F>) -> Result<Vec<T>, RankFailure>
     where
         T: Send,
         F: FnOnce() -> T + Send,
     {
+        let n = tasks.len();
+        let (actions, phase) = self.arm_phase(n);
+        let guarded: Vec<_> = tasks
+            .into_iter()
+            .map(|task| move || catch_unwind(AssertUnwindSafe(task)))
+            .collect();
         let t0 = Instant::now();
-        let timed = run_scoped(tasks, self.parallel);
+        let timed = run_scoped(guarded, self.parallel);
         let wall = t0.elapsed().as_secs_f64();
-        let mut times = Vec::with_capacity(timed.len());
-        let mut results = Vec::with_capacity(timed.len());
-        for (r, secs) in timed {
-            results.push(r);
+        let mut times = Vec::with_capacity(n);
+        let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+        let mut panics: Vec<Option<String>> = vec![None; n];
+        for (rank, (outcome, mut secs)) in timed.into_iter().enumerate() {
+            if let Some(FaultKind::Straggler(factor)) = actions.get(rank).copied().flatten() {
+                secs *= factor.max(1.0);
+            }
+            match outcome {
+                Ok(v) => results.push(Some(v)),
+                Err(payload) => {
+                    panics[rank] = Some(panic_message(payload.as_ref()));
+                    results.push(None);
+                }
+            }
             times.push(secs);
         }
         let makespan = times.iter().copied().fold(0.0, f64::max);
         self.elapsed.add(cat, makespan);
         self.busy.add(cat, times.iter().sum::<f64>());
         self.wall.add(cat, wall);
+        let failure = self.classify_failure(cat, phase, &actions, &panics, &times);
         self.last_phase = times;
-        results
+        match failure {
+            Some(f) => Err(f),
+            None => Ok(results.into_iter().flatten().collect()),
+        }
     }
 
     /// Serial phase (legacy / order-dependent callers): run `f(rank)` for
@@ -212,24 +364,38 @@ impl SimCluster {
     ///
     /// [`phase_map`]: SimCluster::phase_map
     /// [`phase_tasks`]: SimCluster::phase_tasks
-    pub fn phase(&mut self, cat: &str, mut f: impl FnMut(usize)) {
+    pub fn phase(&mut self, cat: &str, mut f: impl FnMut(usize)) -> Result<(), RankFailure> {
+        let (actions, phase) = self.arm_phase(self.p);
         let mut times = vec![0.0f64; self.p];
-        for (rank, slot) in times.iter_mut().enumerate() {
+        let mut panics: Vec<Option<String>> = vec![None; self.p];
+        for rank in 0..self.p {
             let t0 = Instant::now();
-            f(rank);
-            *slot = t0.elapsed().as_secs_f64();
+            let outcome = catch_unwind(AssertUnwindSafe(|| f(rank)));
+            let mut secs = t0.elapsed().as_secs_f64();
+            if let Some(FaultKind::Straggler(factor)) = actions.get(rank).copied().flatten() {
+                secs *= factor.max(1.0);
+            }
+            times[rank] = secs;
+            if let Err(payload) = outcome {
+                panics[rank] = Some(panic_message(payload.as_ref()));
+            }
         }
         let makespan = times.iter().copied().fold(0.0, f64::max);
         self.elapsed.add(cat, makespan);
         let total: f64 = times.iter().sum();
         self.busy.add(cat, total);
         self.wall.add(cat, total);
+        let failure = self.classify_failure(cat, phase, &actions, &panics, &times);
         self.last_phase = times;
+        match failure {
+            Some(f) => Err(f),
+            None => Ok(()),
+        }
     }
 
     /// Parallel phase over a shared closure: results come back in rank
     /// order, so rank-ordered reductions are bit-identical to serial.
-    pub fn phase_map<T, F>(&mut self, cat: &str, f: F) -> Vec<T>
+    pub fn phase_map<T, F>(&mut self, cat: &str, f: F) -> Result<Vec<T>, RankFailure>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
@@ -242,7 +408,7 @@ impl SimCluster {
     /// Parallel phase over per-rank closures (one per rank, in rank
     /// order) — the form that lets each rank own `&mut` state such as its
     /// TTM plan workspace.
-    pub fn phase_tasks<T, F>(&mut self, cat: &str, tasks: Vec<F>) -> Vec<T>
+    pub fn phase_tasks<T, F>(&mut self, cat: &str, tasks: Vec<F>) -> Result<Vec<T>, RankFailure>
     where
         T: Send,
         F: FnOnce() -> T + Send,
@@ -274,6 +440,17 @@ impl SimCluster {
     /// every rank does 1/P of it.
     pub fn charge_balanced(&mut self, cat: &str, secs: f64) {
         self.elapsed.add(cat, secs / self.p.max(1) as f64);
+    }
+}
+
+/// Best-effort panic payload message for failure reports.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -340,6 +517,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::fault::FaultPlan;
 
     #[test]
     fn run_scoped_preserves_order_and_times() {
@@ -364,7 +542,8 @@ mod tests {
             // rank 2 does ~10x the work of rank 0
             let n = 10_000 * (rank + 1) * (rank + 1);
             std::hint::black_box((0..n).sum::<usize>());
-        });
+        })
+        .unwrap();
         let max = c.last_phase.iter().copied().fold(0.0, f64::max);
         assert_eq!(c.last_phase.len(), 3);
         assert!((c.elapsed.get("work") - max).abs() < 1e-12);
@@ -376,8 +555,8 @@ mod tests {
         let mut par = SimCluster::new(8).with_parallel(true);
         let mut ser = SimCluster::serial(8);
         let f = |rank: usize| (0..1000u64).map(|i| i * rank as u64).sum::<u64>();
-        let a = par.phase_map("w", f);
-        let b = ser.phase_map("w", f);
+        let a = par.phase_map("w", f).unwrap();
+        let b = ser.phase_map("w", f).unwrap();
         assert_eq!(a, b);
         assert_eq!(a.len(), 8);
         assert_eq!(par.last_phase.len(), 8);
@@ -397,7 +576,7 @@ mod tests {
                 }
             })
             .collect();
-        let out = c.phase_tasks("w", tasks);
+        let out = c.phase_tasks("w", tasks).unwrap();
         assert_eq!(out, vec![1, 2, 3, 4]);
         assert_eq!(scratch[3], vec![4]);
     }
@@ -439,7 +618,8 @@ mod tests {
         let mut c = SimCluster::new(4).with_parallel(true);
         c.phase_map("w", |rank| {
             std::hint::black_box((0..20_000 * (rank + 1)).sum::<usize>())
-        });
+        })
+        .unwrap();
         let busy = c.busy.get("w");
         let wall = c.wall.get("w");
         assert!(busy > 0.0 && wall > 0.0);
@@ -458,7 +638,8 @@ mod tests {
         assert_eq!(rep.speedup, 1.0, "no phases yet");
         c.phase("w", |_| {
             std::hint::black_box((0..10_000).sum::<usize>());
-        });
+        })
+        .unwrap();
         c.record_kernels("w", vec!["portable"; 3]);
         let rep = c.concurrency_report("w");
         assert_eq!(rep.kernel, "portable");
@@ -485,5 +666,115 @@ mod tests {
         // re-recording a category replaces its entry
         c.record_kernels(cat::TTM, vec!["scalar"; 2]);
         assert_eq!(c.concurrency_report(cat::TTM).kernel, "scalar");
+    }
+
+    #[test]
+    fn injected_crash_surfaces_failure_and_marks_dead() {
+        for parallel in [false, true] {
+            let mut c = SimCluster::new(4).with_parallel(parallel);
+            c.set_injector(FaultPlan::new().crash_at(0, 1, 2).injector());
+            c.begin_sweep(0);
+            // phase 0 is clean
+            assert!(c.phase_map("w", |r| r).is_ok());
+            // phase 1 fires the crash on rank 2
+            let err = c.phase_map("w", |r| r).unwrap_err();
+            assert_eq!(err.rank, 2);
+            assert_eq!(err.kind, FailureKind::Crash);
+            assert_eq!(err.sweep, 0);
+            assert_eq!(err.phase, 1);
+            assert_eq!(c.faults_injected(), 1);
+            assert!(c.injector().unwrap().is_dead(2));
+            // the crash was consumed: a retried sweep runs clean
+            c.begin_sweep(0);
+            assert!(c.phase_map("w", |r| r).is_ok());
+            assert!(c.phase_map("w", |r| r).is_ok());
+        }
+    }
+
+    #[test]
+    fn transient_failure_is_consumed_on_retry() {
+        let mut c = SimCluster::serial(3);
+        c.set_injector(FaultPlan::new().transient_at(1, 0, 0).injector());
+        c.begin_sweep(0);
+        assert!(c.phase("w", |_| {}).is_ok());
+        c.begin_sweep(1);
+        let err = c.phase("w", |_| {}).unwrap_err();
+        assert_eq!(err.kind, FailureKind::Transient);
+        assert_eq!(err.rank, 0);
+        c.begin_sweep(1);
+        assert!(c.phase("w", |_| {}).is_ok());
+        assert_eq!(c.faults_injected(), 1);
+    }
+
+    #[test]
+    fn panics_are_caught_at_the_executor_boundary() {
+        for parallel in [false, true] {
+            let mut c = SimCluster::new(3).with_parallel(parallel);
+            let err = c
+                .phase_map("w", |rank| {
+                    if rank == 1 {
+                        panic!("rank 1 exploded");
+                    }
+                    rank
+                })
+                .unwrap_err();
+            assert_eq!(err.rank, 1);
+            assert_eq!(err.kind, FailureKind::Panic);
+            assert!(err.detail.contains("rank 1 exploded"), "{}", err.detail);
+            // the cluster object stays usable after the caught panic
+            assert!(c.phase_map("w", |r| r).is_ok());
+        }
+    }
+
+    #[test]
+    fn serial_phase_catches_panics_too() {
+        let mut c = SimCluster::serial(2);
+        let err = c
+            .phase("w", |rank| {
+                assert!(rank != 0, "rank 0 assertion trips");
+            })
+            .unwrap_err();
+        assert_eq!(err.rank, 0);
+        assert_eq!(err.kind, FailureKind::Panic);
+    }
+
+    #[test]
+    fn straggler_inflates_time_and_escalates_past_timeout() {
+        // no timeout: the phase succeeds but the straggler dominates
+        let mut c = SimCluster::serial(3);
+        c.set_injector(FaultPlan::new().straggler_at(0, 0, 1, 1e6).injector());
+        c.begin_sweep(0);
+        c.phase("w", |_| {
+            std::hint::black_box((0..10_000).sum::<usize>());
+        })
+        .unwrap();
+        let max = c.last_phase.iter().copied().fold(0.0, f64::max);
+        assert_eq!(c.faults_injected(), 1);
+        assert!((c.last_phase[1] - max).abs() < 1e-12, "straggler is slowest");
+        assert!(c.last_phase[1] > 100.0 * c.last_phase[0].max(1e-12));
+
+        // with a timeout: the same straggler escalates to a failure
+        let mut c = SimCluster::serial(3);
+        c.set_injector(FaultPlan::new().straggler_at(0, 0, 1, 1e6).injector());
+        c.set_phase_timeout(Some(1e-9));
+        c.begin_sweep(0);
+        let err = c
+            .phase("w", |_| {
+                std::hint::black_box((0..10_000).sum::<usize>());
+            })
+            .unwrap_err();
+        assert_eq!(err.kind, FailureKind::StragglerTimeout);
+        assert_eq!(err.rank, 1);
+    }
+
+    #[test]
+    fn begin_sweep_resets_the_phase_counter() {
+        let mut c = SimCluster::serial(2);
+        c.set_injector(FaultPlan::new().transient_at(1, 0, 1).injector());
+        c.begin_sweep(0);
+        assert!(c.phase("w", |_| {}).is_ok()); // sweep 0 phase 0: clean
+        c.begin_sweep(1);
+        let err = c.phase("w", |_| {}).unwrap_err(); // sweep 1 phase 0: fires
+        assert_eq!((err.sweep, err.phase), (1, 0));
     }
 }

@@ -1,0 +1,315 @@
+//! Seeded, deterministic fault injection for the simulated cluster.
+//!
+//! The paper's setting is MPI ranks on distributed memory, where rank
+//! loss and stragglers are the operating reality. A [`FaultPlan`] is a
+//! declarative, seed-reproducible schedule of faults — rank crashes,
+//! transient failures that succeed on retry, and straggler slowdowns —
+//! addressed by `(sweep, phase, rank)` position. [`SimCluster`] arms a
+//! [`FaultInjector`] built from the plan and consults it before every
+//! compute phase; a fired fault surfaces as a [`RankFailure`] from the
+//! phase call instead of tearing the process down, and the session layer
+//! (`TuckerSession`) decides whether to retry from a checkpoint or evict
+//! the dead rank and re-place its elements across survivors.
+//!
+//! Everything here is deterministic: a plan built from a seed fires the
+//! same faults at the same positions on every run, which is what makes
+//! the recovery-equivalence property tests possible.
+//!
+//! [`SimCluster`]: super::cluster::SimCluster
+#![warn(clippy::unwrap_used)]
+
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+/// What kind of fault fires at a scheduled position.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The rank dies: the phase fails and the rank stays dead (it fires
+    /// no further faults; after recovery it owns zero elements).
+    Crash,
+    /// The phase fails once; the retry runs clean (the event is
+    /// consumed when it fires).
+    Transient,
+    /// The rank's measured phase seconds are multiplied by the factor.
+    /// Escalates to a [`FailureKind::StragglerTimeout`] failure only
+    /// when the inflated time exceeds the cluster's per-phase timeout
+    /// (set from the session's `RetryPolicy`); otherwise the phase
+    /// succeeds with a slower makespan.
+    Straggler(f64),
+}
+
+/// One scheduled fault: `kind` fires when rank `rank` executes compute
+/// phase number `phase` (0-based within the sweep) of sweep `sweep`
+/// (0-based count of completed sweeps before it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub sweep: usize,
+    pub phase: usize,
+    pub rank: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults. Build one with the `*_at`
+/// combinators (explicit positions) or [`FaultPlan::random_crash`]
+/// (seed-driven position), hand it to the session builder, and the same
+/// faults fire at the same positions on every run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan { specs: Vec::new() }
+    }
+
+    /// Schedule a rank crash at `(sweep, phase)`.
+    pub fn crash_at(mut self, sweep: usize, phase: usize, rank: usize) -> FaultPlan {
+        self.specs.push(FaultSpec { sweep, phase, rank, kind: FaultKind::Crash });
+        self
+    }
+
+    /// Schedule a transient (retry-succeeds) failure at `(sweep, phase)`.
+    pub fn transient_at(mut self, sweep: usize, phase: usize, rank: usize) -> FaultPlan {
+        self.specs.push(FaultSpec { sweep, phase, rank, kind: FaultKind::Transient });
+        self
+    }
+
+    /// Schedule a straggler slowdown: rank's measured seconds for that
+    /// phase are multiplied by `factor` (>= 1).
+    pub fn straggler_at(
+        mut self,
+        sweep: usize,
+        phase: usize,
+        rank: usize,
+        factor: f64,
+    ) -> FaultPlan {
+        self.specs.push(FaultSpec {
+            sweep,
+            phase,
+            rank,
+            kind: FaultKind::Straggler(factor),
+        });
+        self
+    }
+
+    /// A single seed-driven crash somewhere in `sweeps x phases x p`
+    /// positions — the same seed always picks the same position.
+    pub fn random_crash(seed: u64, sweeps: usize, phases: usize, p: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let sweep = rng.usize_below(sweeps.max(1));
+        let phase = rng.usize_below(phases.max(1));
+        let rank = rng.usize_below(p.max(1));
+        FaultPlan::new().crash_at(sweep, phase, rank)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Arm the plan: the injector the cluster consults phase by phase.
+    pub fn injector(&self) -> FaultInjector {
+        FaultInjector {
+            pending: self.specs.clone(),
+            dead: Vec::new(),
+            sweep: 0,
+            injected: 0,
+        }
+    }
+}
+
+/// Run-time state of a [`FaultPlan`]: pending events, the current sweep
+/// cursor, dead-rank tombstones, and the fired-fault count surfaced as
+/// `RunRecord::faults_injected`.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    pending: Vec<FaultSpec>,
+    dead: Vec<bool>,
+    sweep: usize,
+    injected: usize,
+}
+
+impl FaultInjector {
+    fn ensure_world(&mut self, p: usize) {
+        if self.dead.len() < p {
+            self.dead.resize(p, false);
+        }
+    }
+
+    /// Position the sweep cursor (the cluster forwards its
+    /// `begin_sweep`; retried sweeps re-arm nothing because fired events
+    /// are consumed).
+    pub fn begin_sweep(&mut self, sweep: usize) {
+        self.sweep = sweep;
+    }
+
+    /// Faults fired so far.
+    pub fn faults_injected(&self) -> usize {
+        self.injected
+    }
+
+    /// Is `rank` a tombstone (crashed earlier)?
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead.get(rank).copied().unwrap_or(false)
+    }
+
+    /// Ranks that have crashed so far, ascending.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.dead
+            .iter()
+            .enumerate()
+            .filter_map(|(r, &d)| if d { Some(r) } else { None })
+            .collect()
+    }
+
+    /// Decide the per-rank actions for compute phase `phase` of the
+    /// current sweep, consuming the events that fire. Dead ranks fire
+    /// nothing further; a crash marks its rank dead.
+    pub fn arm(&mut self, phase: usize, p: usize) -> Vec<Option<FaultKind>> {
+        self.ensure_world(p);
+        let mut actions: Vec<Option<FaultKind>> = vec![None; p];
+        let sweep = self.sweep;
+        let dead = &self.dead;
+        self.pending.retain(|s| {
+            let fires = s.sweep == sweep
+                && s.phase == phase
+                && s.rank < p
+                && !dead.get(s.rank).copied().unwrap_or(false);
+            if fires {
+                actions[s.rank] = Some(s.kind);
+            }
+            !fires
+        });
+        for (rank, action) in actions.iter().enumerate() {
+            if action.is_some() {
+                self.injected += 1;
+            }
+            if matches!(action, Some(FaultKind::Crash)) {
+                self.dead[rank] = true;
+            }
+        }
+        actions
+    }
+}
+
+/// How a phase failed — the executor-boundary classification carried by
+/// [`RankFailure`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Injected rank crash: the rank is gone and must be evicted
+    /// (survivor re-placement) before the sweep can be retried.
+    Crash,
+    /// Injected transient failure: a retry from the last checkpoint
+    /// runs clean.
+    Transient,
+    /// A task closure panicked; the panic was caught at the executor
+    /// boundary. Treated like a transient failure by recovery.
+    Panic,
+    /// An injected straggler exceeded the per-phase timeout.
+    StragglerTimeout,
+}
+
+/// A phase-level failure: which rank failed, where (category, sweep,
+/// phase), how, and a human-readable detail. Returned by the fallible
+/// `SimCluster` phase methods instead of propagating a panic.
+#[derive(Debug, Clone)]
+pub struct RankFailure {
+    pub rank: usize,
+    pub cat: String,
+    pub sweep: usize,
+    pub phase: usize,
+    pub kind: FailureKind,
+    pub detail: String,
+}
+
+impl fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rank {} failed ({:?}) in phase {} ('{}') of sweep {}: {}",
+            self.rank, self.kind, self.phase, self.cat, self.sweep, self.detail
+        )
+    }
+}
+
+impl std::error::Error for RankFailure {}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic_for_seed() {
+        let a = FaultPlan::random_crash(77, 4, 9, 8);
+        let b = FaultPlan::random_crash(77, 4, 9, 8);
+        assert_eq!(a.specs(), b.specs());
+        assert_eq!(a.specs().len(), 1);
+        let s = a.specs()[0];
+        assert!(s.sweep < 4 && s.phase < 9 && s.rank < 8);
+        assert_eq!(s.kind, FaultKind::Crash);
+    }
+
+    #[test]
+    fn events_fire_once_and_only_at_their_position() {
+        let plan = FaultPlan::new().transient_at(1, 2, 3);
+        let mut inj = plan.injector();
+        inj.begin_sweep(0);
+        assert!(inj.arm(2, 4).iter().all(Option::is_none));
+        inj.begin_sweep(1);
+        assert!(inj.arm(0, 4).iter().all(Option::is_none));
+        let acts = inj.arm(1, 4); // phase counter 1 then 2
+        assert!(acts.iter().all(Option::is_none));
+        let acts = inj.arm(2, 4);
+        assert_eq!(acts[3], Some(FaultKind::Transient));
+        assert_eq!(inj.faults_injected(), 1);
+        // consumed: the retried sweep runs clean
+        inj.begin_sweep(1);
+        assert!(inj.arm(2, 4).iter().all(Option::is_none));
+        assert_eq!(inj.faults_injected(), 1);
+    }
+
+    #[test]
+    fn crash_marks_rank_dead_and_suppresses_later_events() {
+        let plan = FaultPlan::new().crash_at(0, 0, 1).transient_at(2, 0, 1);
+        let mut inj = plan.injector();
+        inj.begin_sweep(0);
+        let acts = inj.arm(0, 3);
+        assert_eq!(acts[1], Some(FaultKind::Crash));
+        assert!(inj.is_dead(1));
+        assert_eq!(inj.dead_ranks(), vec![1]);
+        // the later transient on the dead rank never fires
+        inj.begin_sweep(2);
+        assert!(inj.arm(0, 3).iter().all(Option::is_none));
+        assert_eq!(inj.faults_injected(), 1);
+    }
+
+    #[test]
+    fn straggler_spec_carries_factor() {
+        let plan = FaultPlan::new().straggler_at(0, 1, 2, 50.0);
+        let mut inj = plan.injector();
+        inj.begin_sweep(0);
+        inj.arm(0, 4);
+        let acts = inj.arm(1, 4);
+        assert_eq!(acts[2], Some(FaultKind::Straggler(50.0)));
+    }
+
+    #[test]
+    fn failure_display_mentions_position() {
+        let f = RankFailure {
+            rank: 2,
+            cat: "ttm".into(),
+            sweep: 1,
+            phase: 3,
+            kind: FailureKind::Crash,
+            detail: "injected rank crash".into(),
+        };
+        let s = f.to_string();
+        assert!(s.contains("rank 2") && s.contains("sweep 1") && s.contains("ttm"));
+    }
+}

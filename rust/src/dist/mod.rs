@@ -8,9 +8,14 @@
 //!   point-to-point and allreduce charging, and the scoped-thread
 //!   parallel rank executor that makes multi-rank experiments wall-clock
 //!   scale with host cores while keeping per-rank timings honest.
+//! - [`fault`]: seeded deterministic fault injection ([`FaultPlan`] /
+//!   [`FaultInjector`]) and the [`RankFailure`] the fallible phase
+//!   methods surface instead of propagating panics.
 
 pub mod cluster;
+pub mod fault;
 pub mod net;
 
 pub use cluster::{cat, run_scoped, ConcurrencyReport, SimCluster};
+pub use fault::{FailureKind, FaultInjector, FaultKind, FaultPlan, FaultSpec, RankFailure};
 pub use net::NetModel;

@@ -23,7 +23,7 @@ use super::lanczos::{lanczos_svd, Oracle};
 use super::plan::{PlanWorkspace, TtmPlan};
 use super::ranks::{khat_of, CoreRanks};
 use super::ttm::LocalZ;
-use crate::dist::{cat, SimCluster};
+use crate::dist::{cat, RankFailure, SimCluster};
 use crate::linalg::{orthonormal_random, Mat};
 use crate::runtime::Engine;
 use crate::sched::{Distribution, RowMap, Sharers};
@@ -542,6 +542,25 @@ pub struct HooiState {
     workspaces: Vec<PlanWorkspace>,
     last_locals: Vec<LocalZ>,
     last_sigma: Vec<f32>,
+    /// Completed sweeps since init — the sweep label the cluster's fault
+    /// addressing and the session's checkpoints key off.
+    sweep: usize,
+}
+
+/// A sweep-boundary capture of everything [`HooiState`] needs to resume
+/// bit-exactly: the factor matrices, the RNG cursor, the completed-sweep
+/// count and the last sweep's singular values. Workspaces and the final
+/// mode's locals are deliberately absent — they are scratch the next
+/// sweep rebuilds, so restoring and re-sweeping reproduces the exact
+/// bits of an uninterrupted run (the [`HooiState::restore`] contract).
+#[derive(Debug, Clone)]
+pub struct HooiSnapshot {
+    /// Completed sweeps at capture time.
+    pub sweep: usize,
+    pub factors: Vec<Mat>,
+    /// The RNG cursor ([`Rng::state`]).
+    pub rng_state: [u64; 4],
+    pub last_sigma: Vec<f32>,
 }
 
 impl HooiState {
@@ -575,6 +594,37 @@ impl HooiState {
             workspaces,
             last_locals: Vec::new(),
             last_sigma: Vec::new(),
+            sweep: 0,
+        }
+    }
+
+    /// Completed sweeps since init.
+    pub fn sweep(&self) -> usize {
+        self.sweep
+    }
+
+    /// Capture a sweep-boundary snapshot (see [`HooiSnapshot`]).
+    pub fn snapshot(&self) -> HooiSnapshot {
+        HooiSnapshot {
+            sweep: self.sweep,
+            factors: self.factors.clone(),
+            rng_state: self.rng.state(),
+            last_sigma: self.last_sigma.clone(),
+        }
+    }
+
+    /// Roll the evolving state back to a snapshot. The final mode's
+    /// locals are recycled into the workspaces (they belong to the
+    /// abandoned sweep); the next sweep rebuilds them, so resuming from
+    /// here is bit-identical to a run that never went past the snapshot.
+    pub fn restore(&mut self, snap: &HooiSnapshot) {
+        self.factors = snap.factors.clone();
+        self.rng = Rng::from_state(snap.rng_state);
+        self.last_sigma = snap.last_sigma.clone();
+        self.sweep = snap.sweep;
+        let locals = std::mem::take(&mut self.last_locals);
+        for (ws, old) in self.workspaces.iter_mut().zip(locals) {
+            ws.recycle(old.z);
         }
     }
 
@@ -601,6 +651,12 @@ impl HooiState {
     /// Run `invocations` HOOI sweeps over the prepared modes, charging
     /// all compute/comm to `cluster`. May be called repeatedly; each
     /// call continues exactly where the previous one stopped.
+    ///
+    /// Fallible: a rank failure (injected fault or caught panic)
+    /// surfaces as `Err` with the sweep counter *not* advanced past the
+    /// failed sweep — the state is mid-sweep dirty and the caller must
+    /// [`HooiState::restore`] a snapshot before retrying (the session's
+    /// recovery loop does exactly that).
     pub fn sweeps(
         &mut self,
         t: &SparseTensor,
@@ -608,9 +664,10 @@ impl HooiState {
         engine: &Engine,
         cluster: &mut SimCluster,
         invocations: usize,
-    ) {
+    ) -> Result<(), RankFailure> {
         let ndim = t.ndim();
         for _inv in 0..invocations {
+            cluster.begin_sweep(self.sweep);
             for (n, st) in modes.iter().enumerate() {
                 // --- TTM: assemble truncated local penultimate matrices
                 // from the precompiled plans; ranks execute concurrently
@@ -623,7 +680,7 @@ impl HooiState {
                         .zip(self.workspaces.iter_mut())
                         .map(|(plan, ws)| move || plan.assemble(factors_ref, engine, ws))
                         .collect();
-                    cluster.phase_tasks(cat::TTM, tasks)
+                    cluster.phase_tasks(cat::TTM, tasks)?
                 };
                 // --- SVD: Lanczos bidiagonalization over the oracle ---
                 let l_n = t.dims[n] as usize;
@@ -636,7 +693,7 @@ impl HooiState {
                         st.khat_n,
                         Some(engine),
                     );
-                    lanczos_svd(&oracle, st.k_n, engine, cluster, &mut self.rng)
+                    lanczos_svd(&oracle, st.k_n, engine, cluster, &mut self.rng)?
                 };
                 // --- factor-matrix transfer for the next TTM ---
                 cluster.p2p(cat::COMM_FM, &st.fm.per_rank);
@@ -659,7 +716,9 @@ impl HooiState {
                     }
                 }
             }
+            self.sweep += 1;
         }
+        Ok(())
     }
 
     /// Compute the core, fit and memory report from the current state —
@@ -677,12 +736,15 @@ impl HooiState {
         modes: &[ModeState],
         cluster: &mut SimCluster,
         accounting: Option<TensorAccounting>,
-    ) -> HooiOutcome {
+    ) -> Result<HooiOutcome, RankFailure> {
         let ndim = t.ndim();
         let n_last = ndim - 1;
         let (k_last, kh_last) = (self.ks[n_last], modes[n_last].khat_n);
         let mut core = Mat::zeros(k_last, kh_last);
         if !self.last_locals.is_empty() {
+            // the core phase is addressed as phase 0 of the post-sweep
+            // position (sweep = completed count) for fault injection
+            cluster.begin_sweep(self.sweep);
             let f_last = &self.factors[n_last];
             let last_locals = &self.last_locals;
             cluster.phase(cat::CORE, |rank| {
@@ -697,7 +759,7 @@ impl HooiState {
                         }
                     }
                 }
-            });
+            })?;
             cluster.allreduce(cat::COMM_COMMON, (k_last * kh_last) as u64);
         }
 
@@ -713,13 +775,13 @@ impl HooiState {
             modes,
             TensorAccounting::resolve(accounting),
         );
-        HooiOutcome {
+        Ok(HooiOutcome {
             factors: self.factors.clone(),
             core,
             fit,
             memory,
             sigma: self.last_sigma.clone(),
-        }
+        })
     }
 }
 
@@ -748,8 +810,16 @@ pub fn run_hooi(
     charge_plan_compilation(&modes, cluster);
     let mut state = HooiState::init(t, dist.p, &cfg.core, cfg.seed, cfg.kernel);
     state.record_kernels(engine, cluster);
-    state.sweeps(t, &modes, engine, cluster, cfg.invocations);
-    state.outcome(t, dist, &modes, cluster, cfg.accounting)
+    // the one-shot path runs without fault injection or checkpoints, so
+    // a rank failure here is a caught panic — re-raise it (sessions that
+    // want recovery hold a `TuckerSession` instead)
+    if let Err(f) = state.sweeps(t, &modes, engine, cluster, cfg.invocations) {
+        panic!("unrecoverable rank failure outside a session: {f}");
+    }
+    match state.outcome(t, dist, &modes, cluster, cfg.accounting) {
+        Ok(out) => out,
+        Err(f) => panic!("unrecoverable rank failure outside a session: {f}"),
+    }
 }
 
 /// Charge each mode's plan-compilation makespan to the TTM bucket.
@@ -900,7 +970,7 @@ mod tests {
         k: usize,
         invocations: usize,
     ) -> (HooiOutcome, SimCluster) {
-        let dist = Lite.distribute(t, idx, p, &mut Rng::new(5));
+        let dist = Lite.policies(t, idx, p, &mut Rng::new(5));
         let mut cluster = SimCluster::new(p);
         let cfg = HooiConfig {
             core: CoreRanks::Uniform(k),
@@ -978,7 +1048,7 @@ mod tests {
     #[test]
     fn memory_model_charges_plan_streams_with_coo_behind_flag() {
         let (t, idx) = small_tensor(4);
-        let dist = Lite.distribute(&t, &idx, 4, &mut Rng::new(5));
+        let dist = Lite.policies(&t, &idx, 4, &mut Rng::new(5));
         let core = CoreRanks::Uniform(4);
         let modes = prepare_modes(&t, &idx, &dist, &core);
         // plan-stream accounting: exactly the bytes the per-(mode, rank)
@@ -1018,7 +1088,7 @@ mod tests {
         let t = SparseTensor::random(vec![10, 8, 6, 5], 500, &mut rng);
         let idx = build_all(&t);
         let (out, _) = {
-            let dist = Lite.distribute(&t, &idx, 3, &mut Rng::new(7));
+            let dist = Lite.policies(&t, &idx, 3, &mut Rng::new(7));
             let mut cluster = SimCluster::new(3);
             let cfg = HooiConfig {
                 core: CoreRanks::Uniform(3),
@@ -1040,7 +1110,7 @@ mod tests {
     #[test]
     fn per_mode_core_shapes_flow_through_the_driver() {
         let (t, idx) = small_tensor(7);
-        let dist = Lite.distribute(&t, &idx, 3, &mut Rng::new(8));
+        let dist = Lite.policies(&t, &idx, 3, &mut Rng::new(8));
         let mut cluster = SimCluster::new(3);
         let cfg = HooiConfig {
             core: CoreRanks::PerMode(vec![3, 4, 5]),
@@ -1064,21 +1134,21 @@ mod tests {
         // the HooiState contract behind TuckerSession::decompose_more:
         // 2 sweeps + outcome + 1 sweep must equal a 3-sweep run
         let (t, idx) = small_tensor(8);
-        let dist = Lite.distribute(&t, &idx, 3, &mut Rng::new(9));
+        let dist = Lite.policies(&t, &idx, 3, &mut Rng::new(9));
         let core = CoreRanks::Uniform(4);
         let modes = prepare_modes(&t, &idx, &dist, &core);
 
         let mut c1 = SimCluster::new(3);
         let mut s1 = HooiState::init(&t, 3, &core, 21, None);
-        s1.sweeps(&t, &modes, &Engine::Native, &mut c1, 3);
-        let one_shot = s1.outcome(&t, &dist, &modes, &mut c1, None);
+        s1.sweeps(&t, &modes, &Engine::Native, &mut c1, 3).unwrap();
+        let one_shot = s1.outcome(&t, &dist, &modes, &mut c1, None).unwrap();
 
         let mut c2 = SimCluster::new(3);
         let mut s2 = HooiState::init(&t, 3, &core, 21, None);
-        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 2);
-        let mid = s2.outcome(&t, &dist, &modes, &mut c2, None);
-        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 1);
-        let resumed = s2.outcome(&t, &dist, &modes, &mut c2, None);
+        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 2).unwrap();
+        let mid = s2.outcome(&t, &dist, &modes, &mut c2, None).unwrap();
+        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 1).unwrap();
+        let resumed = s2.outcome(&t, &dist, &modes, &mut c2, None).unwrap();
 
         assert!(mid.fit.is_finite());
         assert_eq!(one_shot.fit, resumed.fit, "continuation is bit-identical");
@@ -1086,5 +1156,40 @@ mod tests {
             assert_eq!(a.data, b.data);
         }
         assert_eq!(one_shot.core.data, resumed.core.data);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_exactly() {
+        // roll back over an abandoned sweep: 2 sweeps + snapshot + 1
+        // sweep + restore + 1 sweep must equal an uninterrupted 3-sweep
+        // run (the recovery-rollback contract)
+        let (t, idx) = small_tensor(10);
+        let dist = Lite.policies(&t, &idx, 3, &mut Rng::new(11));
+        let core = CoreRanks::Uniform(4);
+        let modes = prepare_modes(&t, &idx, &dist, &core);
+
+        let mut c1 = SimCluster::new(3);
+        let mut s1 = HooiState::init(&t, 3, &core, 33, None);
+        s1.sweeps(&t, &modes, &Engine::Native, &mut c1, 3).unwrap();
+        let want = s1.outcome(&t, &dist, &modes, &mut c1, None).unwrap();
+
+        let mut c2 = SimCluster::new(3);
+        let mut s2 = HooiState::init(&t, 3, &core, 33, None);
+        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 2).unwrap();
+        let snap = s2.snapshot();
+        assert_eq!(snap.sweep, 2);
+        // go one sweep past the snapshot, then roll back and redo it
+        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 1).unwrap();
+        s2.restore(&snap);
+        assert_eq!(s2.sweep(), 2);
+        s2.sweeps(&t, &modes, &Engine::Native, &mut c2, 1).unwrap();
+        let got = s2.outcome(&t, &dist, &modes, &mut c2, None).unwrap();
+
+        assert_eq!(want.fit, got.fit);
+        for (a, b) in want.factors.iter().zip(&got.factors) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(want.core.data, got.core.data);
+        assert_eq!(want.sigma, got.sigma);
     }
 }

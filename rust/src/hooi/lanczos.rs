@@ -8,7 +8,7 @@
 //! Q_n = 4K queries; oracle comm volume = Q_n · (R_n^sum − L_n).
 
 use super::ttm::LocalZ;
-use crate::dist::{cat, SimCluster};
+use crate::dist::{cat, RankFailure, SimCluster};
 use crate::linalg::{axpy, dot, norm2, scale, svd, Mat};
 use crate::runtime::Engine;
 use crate::sched::{RowMap, Sharers};
@@ -105,7 +105,13 @@ impl<'a> Oracle<'a> {
     /// returned assembled. Compute really executes per rank — concurrently
     /// on the scoped-thread executor — and is timed; the reduction below
     /// runs in rank order, so the result is bit-identical to serial.
-    pub fn matvec(&self, x: &[f32], engine: &Engine, cluster: &mut SimCluster) -> Vec<f32> {
+    /// Fallible: a rank failure in the SVD phase propagates out.
+    pub fn matvec(
+        &self,
+        x: &[f32],
+        engine: &Engine,
+        cluster: &mut SimCluster,
+    ) -> Result<Vec<f32>, RankFailure> {
         debug_assert_eq!(x.len(), self.khat);
         let mut out = vec![0.0f32; self.l_n];
         let query = |rank: usize| {
@@ -113,11 +119,11 @@ impl<'a> Oracle<'a> {
             engine.matvec_prepared(&self.prepared[rank], &local.z, x)
         };
         let partials: Vec<Vec<f32>> = if self.parallel_worth {
-            cluster.phase_map(cat::SVD, query)
+            cluster.phase_map(cat::SVD, query)?
         } else {
             // tiny query: a thread dispatch would cost more than the work
             let mut ps = Vec::with_capacity(self.locals.len());
-            cluster.phase(cat::SVD, |rank| ps.push(query(rank)));
+            cluster.phase(cat::SVD, |rank| ps.push(query(rank)))?;
             ps
         };
         for (local, partial) in self.locals.iter().zip(&partials) {
@@ -126,12 +132,17 @@ impl<'a> Oracle<'a> {
             }
         }
         cluster.p2p(cat::COMM_SVD, &self.x_comm);
-        out
+        Ok(out)
     }
 
     /// y-query: y · Z_(n), length K̂. Owners broadcast their y values to
     /// sharers, ranks multiply locally, partials allreduce.
-    pub fn rmatvec(&self, y: &[f32], engine: &Engine, cluster: &mut SimCluster) -> Vec<f32> {
+    pub fn rmatvec(
+        &self,
+        y: &[f32],
+        engine: &Engine,
+        cluster: &mut SimCluster,
+    ) -> Result<Vec<f32>, RankFailure> {
         debug_assert_eq!(y.len(), self.l_n);
         cluster.p2p(cat::COMM_SVD, &self.y_comm);
         let mut out = vec![0.0f32; self.khat];
@@ -143,17 +154,17 @@ impl<'a> Oracle<'a> {
             engine.rmatvec_prepared(&self.prepared[rank], &y_local, &local.z)
         };
         let partials: Vec<Vec<f32>> = if self.parallel_worth {
-            cluster.phase_map(cat::SVD, query)
+            cluster.phase_map(cat::SVD, query)?
         } else {
             let mut ps = Vec::with_capacity(self.locals.len());
-            cluster.phase(cat::SVD, |rank| ps.push(query(rank)));
+            cluster.phase(cat::SVD, |rank| ps.push(query(rank)))?;
             ps
         };
         for partial in &partials {
             axpy(1.0, partial, &mut out);
         }
         cluster.allreduce(cat::COMM_COMMON, self.khat as u64);
-        out
+        Ok(out)
     }
 }
 
@@ -177,7 +188,7 @@ pub fn lanczos_svd(
     engine: &Engine,
     cluster: &mut SimCluster,
     rng: &mut Rng,
-) -> LanczosResult {
+) -> Result<LanczosResult, RankFailure> {
     let l_n = oracle.l_n;
     let khat = oracle.khat;
     let j_max = (2 * k).min(l_n).min(khat).max(1);
@@ -196,7 +207,7 @@ pub fn lanczos_svd(
     for j in 0..j_max {
         vs.push(v.clone());
         // u_j = Z v_j − β_{j−1} u_{j−1}
-        let mut u = oracle.matvec(&v, engine, cluster);
+        let mut u = oracle.matvec(&v, engine, cluster)?;
         queries += 1;
         let t0 = Instant::now();
         if j > 0 {
@@ -222,7 +233,7 @@ pub fn lanczos_svd(
         alphas.push(alpha as f32);
 
         // w = u_j Z − α_j v_j  (y-query)
-        let mut w = oracle.rmatvec(us.last().unwrap(), engine, cluster);
+        let mut w = oracle.rmatvec(us.last().unwrap(), engine, cluster)?;
         queries += 1;
         let t1 = Instant::now();
         axpy(-(alpha as f32), &v, &mut w);
@@ -246,7 +257,7 @@ pub fn lanczos_svd(
     if j == 0 {
         // zero matrix: return an arbitrary orthonormal factor
         let f = crate::linalg::orthonormal_random(l_n, k, rng);
-        return LanczosResult { factor: f, sigma: vec![0.0; k], queries };
+        return Ok(LanczosResult { factor: f, sigma: vec![0.0; k], queries });
     }
     // B: j×j upper bidiagonal (α diagonal, β superdiagonal)
     let t2 = Instant::now();
@@ -275,7 +286,7 @@ pub fn lanczos_svd(
     cluster.charge_balanced(cat::SVD, t2.elapsed().as_secs_f64());
     let mut sigma = small.s.clone();
     sigma.truncate(k);
-    LanczosResult { factor, sigma, queries }
+    Ok(LanczosResult { factor, sigma, queries })
 }
 
 #[cfg(test)]
@@ -328,7 +339,7 @@ mod tests {
         let mut cluster = SimCluster::new(4);
         let mut rng = Rng::new(7);
         let x: Vec<f32> = (0..dense.cols).map(|_| rng.normal() as f32).collect();
-        let got = oracle.matvec(&x, &Engine::Native, &mut cluster);
+        let got = oracle.matvec(&x, &Engine::Native, &mut cluster).unwrap();
         let want = dense.matvec(&x);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-3, "{g} vs {w}");
@@ -346,7 +357,7 @@ mod tests {
         let mut cluster = SimCluster::new(3);
         let mut rng = Rng::new(8);
         let y: Vec<f32> = (0..dense.rows).map(|_| rng.normal() as f32).collect();
-        let got = oracle.rmatvec(&y, &Engine::Native, &mut cluster);
+        let got = oracle.rmatvec(&y, &Engine::Native, &mut cluster).unwrap();
         let want = dense.tmatvec(&y);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-3);
@@ -365,8 +376,8 @@ mod tests {
         let mut cluster = SimCluster::new(5);
         let x = vec![1.0f32; dense_cols];
         let y = vec![1.0f32; 30];
-        oracle.matvec(&x, &Engine::Native, &mut cluster);
-        oracle.rmatvec(&y, &Engine::Native, &mut cluster);
+        oracle.matvec(&x, &Engine::Native, &mut cluster).unwrap();
+        oracle.rmatvec(&y, &Engine::Native, &mut cluster).unwrap();
         let expect = (m.r_sum - m.l_nonempty) as f64 * 2.0;
         assert_eq!(cluster.volume.get(cat::COMM_SVD), expect);
     }
@@ -381,7 +392,8 @@ mod tests {
             Oracle::new(&fx.locals, &fx.rowmap, &fx.sharers, dense.rows, dense.cols);
         let mut cluster = SimCluster::new(4);
         let mut rng = Rng::new(11);
-        let res = lanczos_svd(&oracle, fx.k, &Engine::Native, &mut cluster, &mut rng);
+        let res =
+            lanczos_svd(&oracle, fx.k, &Engine::Native, &mut cluster, &mut rng).unwrap();
         let full = svd(&dense);
         for i in 0..fx.k.min(3) {
             let rel = (res.sigma[i] - full.s[i]).abs() / full.s[i].max(1e-6);
@@ -399,7 +411,8 @@ mod tests {
         let oracle = Oracle::new(&fx.locals, &fx.rowmap, &fx.sharers, 30, khat);
         let mut cluster = SimCluster::new(2);
         let mut rng = Rng::new(12);
-        let res = lanczos_svd(&oracle, fx.k, &Engine::Native, &mut cluster, &mut rng);
+        let res =
+            lanczos_svd(&oracle, fx.k, &Engine::Native, &mut cluster, &mut rng).unwrap();
         // 2K iterations × 2 queries each (unless early termination)
         assert!(res.queries <= 4 * fx.k);
         assert!(res.queries >= 2 * fx.k);

@@ -14,8 +14,8 @@ pub mod ttm;
 pub use driver::{
     charge_plan_compilation, memory_model, memory_model_with, prepare_modes,
     prepare_modes_unplanned, prepare_modes_with_executor, prepare_modes_with_sharers,
-    run_hooi, DeltaStats, HooiConfig, HooiOutcome, HooiState, MemoryReport, ModeDelta,
-    ModeState, TensorAccounting,
+    run_hooi, DeltaStats, HooiConfig, HooiOutcome, HooiSnapshot, HooiState, MemoryReport,
+    ModeDelta, ModeState, TensorAccounting,
 };
 pub use fm::{fm_pattern, FmPattern};
 pub use kernel::{pad_to_lanes, Kernel, LANES};

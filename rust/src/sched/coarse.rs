@@ -134,7 +134,7 @@ mod tests {
         let t = random_tensor(1);
         let idx = build_all(&t);
         for strategy in [SliceAssign::RandomBlocks, SliceAssign::BestFit] {
-            let d = CoarseG { strategy }.distribute(&t, &idx, 6, &mut Rng::new(2));
+            let d = CoarseG { strategy }.policies(&t, &idx, 6, &mut Rng::new(2));
             assert!(d.validate(&t).is_ok());
             for (n, i) in idx.iter().enumerate() {
                 let sharers = Sharers::build(i, &d.policies[n]);
@@ -158,9 +158,9 @@ mod tests {
         }
         let idx = build_all(&t);
         let db = CoarseG { strategy: SliceAssign::BestFit }
-            .distribute(&t, &idx, 4, &mut Rng::new(1));
+            .policies(&t, &idx, 4, &mut Rng::new(1));
         let dr = CoarseG { strategy: SliceAssign::RandomBlocks }
-            .distribute(&t, &idx, 4, &mut Rng::new(1));
+            .policies(&t, &idx, 4, &mut Rng::new(1));
         let mb = ModeMetrics::compute(&idx[0], &db.policies[0]);
         let mr = ModeMetrics::compute(&idx[0], &dr.policies[0]);
         assert!(mb.e_max <= mr.e_max);
@@ -179,7 +179,7 @@ mod tests {
             }
         }
         let idx = build_all(&t);
-        let d = CoarseG::default().distribute(&t, &idx, 5, &mut Rng::new(1));
+        let d = CoarseG::default().policies(&t, &idx, 5, &mut Rng::new(1));
         let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
         assert!(m.e_max >= 900, "giant slice stays whole");
         assert!(m.ttm_imbalance() > 3.0);
@@ -189,7 +189,7 @@ mod tests {
     fn partitions_all_elements() {
         let t = random_tensor(7);
         let idx = build_all(&t);
-        let d = CoarseG::default().distribute(&t, &idx, 8, &mut Rng::new(3));
+        let d = CoarseG::default().policies(&t, &idx, 8, &mut Rng::new(3));
         for pol in &d.policies {
             assert_eq!(pol.rank_counts().iter().sum::<usize>(), t.nnz());
         }

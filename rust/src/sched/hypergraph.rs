@@ -559,7 +559,7 @@ mod tests {
         let idx = build_all(&t);
         let hg = Hypergraph::from_tensor(&t, &idx);
         let p = 5;
-        let d = HyperG::default().distribute(&t, &idx, p, &mut Rng::new(8));
+        let d = HyperG::default().policies(&t, &idx, p, &mut Rng::new(8));
         let cut = hg.connectivity_cut(&d.policies[0].assign, p);
         let mut rsum_minus_l = 0u64;
         for (n, i) in idx.iter().enumerate() {
@@ -573,7 +573,7 @@ mod tests {
     fn scheme_is_uni_policy_offline() {
         let t = random_tensor(9, 400);
         let idx = build_all(&t);
-        let d = HyperG::default().distribute(&t, &idx, 3, &mut Rng::new(10));
+        let d = HyperG::default().policies(&t, &idx, 3, &mut Rng::new(10));
         assert!(d.uni);
         assert!(d.validate(&t).is_ok());
         assert_eq!(d.time.serial_secs, d.time.simulated_secs);

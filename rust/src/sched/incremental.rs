@@ -95,6 +95,86 @@ pub fn extend_policy(
     PlacementReport { limit, new_sharer_pairs: new_pairs }
 }
 
+/// Re-place every element owned by a dead rank across the survivors,
+/// with Lite's stage-2 discipline: prefer a *surviving* rank that
+/// already shares the element's slice, under the hard per-survivor
+/// limit ⌈|E|/S⌉ (S = survivor count), breaking ties by (load, lowest
+/// rank). Deterministic and RNG-free, so the recovery path and a
+/// planned `TuckerSession::evict_rank` call at the same sweep boundary
+/// produce bit-identical placements — the equivalence the
+/// fault-tolerance tests pin.
+///
+/// The returned policy keeps the original world size `p`; dead ranks
+/// simply own zero elements (the simulated cluster still schedules
+/// them, they just have no work). Capacity always suffices: survivor
+/// loads start ≤ the previous limit ≤ ⌈|E|/S⌉, and while any dead-rank
+/// element remains unplaced the survivors hold < |E| ≤ S·⌈|E|/S⌉
+/// elements, so some bin is strictly under the limit.
+///
+/// Panics if every rank is dead (the session surfaces that as
+/// `SessionError::NoSurvivors` before calling this).
+pub fn evict_rank(pol: &ModePolicy, idx: &SliceIndex, dead: &[bool]) -> ModePolicy {
+    assert_eq!(dead.len(), pol.p, "one liveness flag per rank");
+    let survivors: Vec<u32> =
+        (0..pol.p as u32).filter(|&r| !dead[r as usize]).collect();
+    assert!(!survivors.is_empty(), "evict_rank: no surviving ranks");
+    let nnz = pol.assign.len();
+    let limit = nnz.div_ceil(survivors.len());
+    let mut load = vec![0usize; pol.p];
+    for &r in pol.assign.iter() {
+        if !dead[r as usize] {
+            load[r as usize] += 1;
+        }
+    }
+    let mut assign: Vec<u32> = pol.assign.as_ref().clone();
+    // walk slice-grouped so each slice's surviving-sharer set is built
+    // once and the "prefer existing sharers" discipline is exact
+    for l in 0..idx.num_slices() {
+        let elems = idx.slice(l);
+        let mut sharers: Vec<u32> = Vec::new();
+        let mut needs_move = false;
+        for &e in elems {
+            let r = assign[e as usize];
+            if dead[r as usize] {
+                needs_move = true;
+            } else if !sharers.contains(&r) {
+                sharers.push(r);
+            }
+        }
+        if !needs_move {
+            continue;
+        }
+        for &e in elems {
+            if !dead[assign[e as usize] as usize] {
+                continue;
+            }
+            let pick = sharers
+                .iter()
+                .copied()
+                .filter(|&s| load[s as usize] < limit)
+                .min_by_key(|&s| (load[s as usize], s));
+            let s = match pick {
+                Some(s) => s,
+                None => {
+                    // no surviving sharer has capacity: open a new
+                    // (slice, rank) pair on the least loaded survivor
+                    let s = survivors
+                        .iter()
+                        .copied()
+                        .filter(|&s| load[s as usize] < limit)
+                        .min_by_key(|&s| (load[s as usize], s))
+                        .expect("a survivor under ⌈|E|/S⌉ exists");
+                    sharers.push(s);
+                    s
+                }
+            };
+            assign[e as usize] = s;
+            load[s as usize] += 1;
+        }
+    }
+    ModePolicy { p: pol.p, assign: Arc::new(assign) }
+}
+
 /// Theorem 6.1's three bounds for one (mode, policy) pair — the
 /// revalidation a streaming caller runs after extending a policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,7 +218,7 @@ mod tests {
 
     fn lite_mode0(t: &SparseTensor, p: usize) -> (SliceIndex, ModePolicy, Sharers) {
         let idx = build_all(t);
-        let d = Lite.distribute(t, &idx, p, &mut Rng::new(3));
+        let d = Lite.policies(t, &idx, p, &mut Rng::new(3));
         let pol = d.policies[0].clone();
         let sharers = Sharers::build(&idx[0], &pol);
         (idx.into_iter().next().unwrap(), pol, sharers)
@@ -201,11 +281,90 @@ mod tests {
         let mut rng = Rng::new(5);
         let t = SparseTensor::random(vec![25, 15, 10], 1500, &mut rng);
         let idx = build_all(&t);
-        let d = Lite.distribute(&t, &idx, 6, &mut Rng::new(6));
+        let d = Lite.policies(&t, &idx, 6, &mut Rng::new(6));
         for (i, pol) in idx.iter().zip(&d.policies) {
             let b = theorem_bounds(i, pol);
             assert!(b.all_ok(), "fresh Lite satisfies Theorem 6.1: {b:?}");
         }
+    }
+
+    #[test]
+    fn eviction_moves_every_dead_element_to_a_survivor() {
+        let mut rng = Rng::new(21);
+        let t = SparseTensor::random(vec![30, 20, 10], 2000, &mut rng);
+        let p = 6;
+        let idx = build_all(&t);
+        let d = Lite.policies(&t, &idx, p, &mut Rng::new(9));
+        let pol = &d.policies[0];
+        let mut dead = vec![false; p];
+        dead[2] = true;
+        let out = evict_rank(pol, &idx[0], &dead);
+        assert_eq!(out.assign.len(), pol.assign.len());
+        assert!(out.assign.iter().all(|&r| r != 2), "dead rank drained");
+        // survivors respect the ⌈|E|/S⌉ limit
+        let limit = t.nnz().div_ceil(p - 1);
+        assert!(out.rank_counts().iter().all(|&c| c <= limit));
+        // elements not on the dead rank are untouched
+        for (a, b) in pol.assign.iter().zip(out.assign.iter()) {
+            if *a != 2 {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_is_deterministic_and_prefers_surviving_sharers() {
+        let mut rng = Rng::new(22);
+        let t = SparseTensor::random(vec![15, 12, 9], 900, &mut rng);
+        let p = 5;
+        let idx = build_all(&t);
+        let d = Lite.policies(&t, &idx, p, &mut Rng::new(10));
+        let pol = &d.policies[0];
+        let mut dead = vec![false; p];
+        dead[0] = true;
+        let a = evict_rank(pol, &idx[0], &dead);
+        let b = evict_rank(pol, &idx[0], &dead);
+        assert_eq!(a.assign, b.assign, "no RNG: eviction is a pure function");
+    }
+
+    #[test]
+    fn eviction_prefers_a_surviving_sharer_over_the_min_load_rank() {
+        // hand-built case: slice 0 = {e0, e1}, slice 1 = {e2};
+        // assignment [2, 0, 1]; kill rank 0 (survivors {1, 2}, both at
+        // load 1, limit ⌈3/2⌉ = 2). Plain (load, rank) min would send
+        // e1 to rank 1; the sharer discipline keeps it on rank 2, which
+        // already shares slice 0.
+        let mut t = SparseTensor::new(vec![2, 2]);
+        for l in [0u32, 0, 1] {
+            t.push(&[l, 0], 1.0);
+        }
+        let idx0 = SliceIndex::build(&t, 0);
+        let pol = ModePolicy::new(3, vec![2, 0, 1]);
+        let out = evict_rank(&pol, &idx0, &[true, false, false]);
+        assert_eq!(out.assign.as_ref(), &vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn successive_evictions_drain_down_to_one_survivor() {
+        let mut rng = Rng::new(23);
+        let t = SparseTensor::random(vec![10, 8, 6], 300, &mut rng);
+        let p = 4;
+        let idx = build_all(&t);
+        let d = Lite.policies(&t, &idx, p, &mut Rng::new(11));
+        let mut pol = d.policies[0].clone();
+        let mut dead = vec![false; p];
+        for victim in [3usize, 1, 0] {
+            dead[victim] = true;
+            pol = evict_rank(&pol, &idx[0], &dead);
+            assert!(pol
+                .assign
+                .iter()
+                .all(|&r| !dead[r as usize]));
+            let s = dead.iter().filter(|&&x| !x).count();
+            let limit = t.nnz().div_ceil(s);
+            assert!(pol.rank_counts().iter().all(|&c| c <= limit));
+        }
+        assert_eq!(pol.rank_counts()[2], t.nnz(), "last survivor holds all");
     }
 
     #[test]

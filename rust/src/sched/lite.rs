@@ -167,7 +167,7 @@ mod tests {
 
     fn lite_dist(t: &SparseTensor, p: usize, seed: u64) -> Distribution {
         let idx = build_all(t);
-        Lite.distribute(t, &idx, p, &mut Rng::new(seed))
+        Lite.policies(t, &idx, p, &mut Rng::new(seed))
     }
 
     #[test]
@@ -182,7 +182,7 @@ mod tests {
             }
         }
         let idx = build_all(&t);
-        let d = Lite.distribute(&t, &idx, 5, &mut Rng::new(1));
+        let d = Lite.policies(&t, &idx, 5, &mut Rng::new(1));
         let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
         assert_eq!(m.e_max, 20, "hard limit is exactly |E|/P");
         assert!(m.r_sum <= 10 + 5);
@@ -208,7 +208,7 @@ mod tests {
                 rng,
             );
             let idx = build_all(&t);
-            let d = Lite.distribute(&t, &idx, p, rng);
+            let d = Lite.policies(&t, &idx, p, rng);
             d.validate(&t).map_err(|e| e)?;
             let limit = nnz.div_ceil(p);
             for (n, i) in idx.iter().enumerate() {
@@ -305,7 +305,7 @@ mod tests {
                 }
             }
             let idx = build_all(&t);
-            let d = Lite.distribute(&t, &idx, p, &mut Rng::new(7));
+            let d = Lite.policies(&t, &idx, p, &mut Rng::new(7));
             d.validate(&t).unwrap();
             let limit = (nnz as usize).div_ceil(p);
             for (n, pol) in d.policies.iter().enumerate() {

@@ -137,7 +137,7 @@ mod tests {
         let t = SparseTensor::random(vec![64, 32, 16], 6000, &mut rng);
         let idx = build_all(&t);
         let p = 16;
-        let d = MediumG.distribute(&t, &idx, p, &mut Rng::new(5));
+        let d = MediumG.policies(&t, &idx, p, &mut Rng::new(5));
         assert!(d.validate(&t).is_ok());
         let grid = factorize_grid(p, &t.dims);
         for (n, i) in idx.iter().enumerate() {
@@ -160,7 +160,7 @@ mod tests {
         let mut rng = Rng::new(6);
         let t = SparseTensor::random(vec![20, 20, 20], 500, &mut rng);
         let idx = build_all(&t);
-        let d = MediumG.distribute(&t, &idx, 8, &mut Rng::new(7));
+        let d = MediumG.policies(&t, &idx, 8, &mut Rng::new(7));
         assert!(d.uni);
         assert_eq!(d.tensor_copies(), 1);
         for n in 1..3 {
@@ -180,7 +180,7 @@ mod tests {
         let mut rng = Rng::new(8);
         let t = SparseTensor::random(vec![12, 12], 300, &mut rng);
         let idx = build_all(&t);
-        let d = MediumG.distribute(&t, &idx, 4, &mut Rng::new(9));
+        let d = MediumG.policies(&t, &idx, 4, &mut Rng::new(9));
         // 4 ranks over 2 modes -> at most 4 distinct ranks, all used for a
         // tensor this dense
         let mut used: Vec<u32> = d.policies[0].assign.to_vec();

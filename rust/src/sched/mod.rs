@@ -33,7 +33,9 @@ pub use coarse::CoarseG;
 pub use cost::{CostEstimate, CostModel, ModeCost};
 pub use diff::{MigrationPlan, ModeMigration};
 pub use hypergraph::HyperG;
-pub use incremental::{extend_policy, theorem_bounds, BoundsCheck, PlacementReport};
+pub use incremental::{
+    evict_rank, extend_policy, theorem_bounds, BoundsCheck, PlacementReport,
+};
 pub use lite::Lite;
 pub use medium::MediumG;
 pub use metrics::{ModeMetrics, SchemeMetrics, Sharers};

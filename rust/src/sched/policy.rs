@@ -316,9 +316,13 @@ pub trait Scheme {
         PlacementPlan::compile(self.policies(t, idx, p, rng), idx, ks, model)
     }
 
-    /// Deprecated shim over [`Scheme::policies`] — kept so the figure
-    /// harness and other pre-plan callers stay source-compatible. New
-    /// code should call [`Scheme::plan`].
+    /// Deprecated shim over [`Scheme::policies`] — kept one release so
+    /// out-of-tree callers stay source-compatible. New code should call
+    /// [`Scheme::plan`] (or [`Scheme::policies`] when the raw
+    /// distribution suffices).
+    #[deprecated(
+        note = "call Scheme::plan (or Scheme::policies for the raw Distribution)"
+    )]
     fn distribute(
         &self,
         t: &SparseTensor,
@@ -438,6 +442,7 @@ mod tests {
         // the shim and the plan build the same policies from the same rng
         let mut rng_a = Rng::new(7);
         let mut rng_b = Rng::new(7);
+        #[allow(deprecated)]
         let d = Lite.distribute(&t, &idx, 4, &mut rng_a);
         let p2 = Lite.plan(&t, &idx, 4, &mut rng_b, &[4, 4, 4], &model);
         for (a, b) in d.policies.iter().zip(&p2.dist.policies) {

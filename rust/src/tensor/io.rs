@@ -4,15 +4,70 @@
 //!
 //! The synthetic analogues (tensor::synth) are the default workload on this
 //! testbed, but any real FROSTT download drops in through this reader.
+//!
+//! [`load_tns`] is the typed entry point: it distinguishes OS-level
+//! failures ([`TensorIoError::Io`]) from malformed content
+//! ([`TensorIoError::Parse`], with the 1-based line number), so callers
+//! like `Workload::resolve` can report "file missing" and "file broken"
+//! differently. [`read_tns`] survives as a `std::io::Result` shim for
+//! pre-typed callers (parse errors degrade to `InvalidData`).
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
 use super::coo::SparseTensor;
 
-/// Read a `.tns` file. `ndim` is inferred from the first data line; mode
-/// lengths from the coordinate maxima.
-pub fn read_tns(path: &Path) -> std::io::Result<SparseTensor> {
+/// Why a `.tns` file could not be loaded.
+#[derive(Debug)]
+pub enum TensorIoError {
+    /// The OS could not produce the bytes (missing file, permissions,
+    /// a read that failed mid-stream).
+    Io(std::io::Error),
+    /// The bytes arrived but are not a FROSTT tensor; `line` is 1-based.
+    Parse { line: usize, msg: String },
+}
+
+impl TensorIoError {
+    /// Degrade to a `std::io::Error` (parse errors become `InvalidData`
+    /// with the line number in the message) — the [`read_tns`] shim.
+    pub fn into_io(self) -> std::io::Error {
+        match self {
+            TensorIoError::Io(e) => e,
+            TensorIoError::Parse { line, msg } => std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {line}: {msg}"),
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for TensorIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TensorIoError::Io(e) => write!(f, "{e}"),
+            TensorIoError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TensorIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TensorIoError::Io(e) => Some(e),
+            TensorIoError::Parse { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TensorIoError {
+    fn from(e: std::io::Error) -> Self {
+        TensorIoError::Io(e)
+    }
+}
+
+/// Read a `.tns` file with typed errors. `ndim` is inferred from the
+/// first data line; mode lengths from the coordinate maxima.
+pub fn load_tns(path: &Path) -> Result<SparseTensor, TensorIoError> {
     let f = std::fs::File::open(path)?;
     let reader = BufReader::with_capacity(1 << 20, f);
     let mut coords: Vec<Vec<u32>> = Vec::new();
@@ -51,12 +106,18 @@ pub fn read_tns(path: &Path) -> std::io::Result<SparseTensor> {
         vals.push(v);
     }
     if coords.is_empty() {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "empty tensor file",
-        ));
+        return Err(TensorIoError::Parse {
+            line: 1,
+            msg: "empty tensor file".into(),
+        });
     }
     Ok(SparseTensor { dims, coords, vals })
+}
+
+/// [`load_tns`] degraded to `std::io::Result` — compatibility shim for
+/// callers that predate [`TensorIoError`].
+pub fn read_tns(path: &Path) -> std::io::Result<SparseTensor> {
+    load_tns(path).map_err(TensorIoError::into_io)
 }
 
 /// Write a `.tns` file (1-based coordinates, one element per line).
@@ -72,11 +133,8 @@ pub fn write_tns(t: &SparseTensor, path: &Path) -> std::io::Result<()> {
     w.flush()
 }
 
-fn bad(lineno: usize, msg: &str) -> std::io::Error {
-    std::io::Error::new(
-        std::io::ErrorKind::InvalidData,
-        format!("line {}: {msg}", lineno + 1),
-    )
+fn bad(lineno: usize, msg: &str) -> TensorIoError {
+    TensorIoError::Parse { line: lineno + 1, msg: msg.to_string() }
 }
 
 #[cfg(test)]
@@ -133,5 +191,32 @@ mod tests {
         let path = dir.join("a.tns");
         std::fs::write(&path, "1 1 1 3.0\n1 1 2.0\n").unwrap();
         assert!(read_tns(&path).is_err());
+    }
+
+    #[test]
+    fn typed_errors_distinguish_missing_from_malformed() {
+        let dir = std::env::temp_dir().join("tucker_lite_io_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        // missing file → Io
+        match load_tns(&dir.join("absent.tns")) {
+            Err(TensorIoError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::NotFound)
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
+        // malformed line → Parse with the 1-based line number
+        let path = dir.join("bad.tns");
+        std::fs::write(&path, "1 1 1 2.0\n1 1 1 notafloat\n").unwrap();
+        match load_tns(&path) {
+            Err(TensorIoError::Parse { line, msg }) => {
+                assert_eq!(line, 2);
+                assert_eq!(msg, "bad value");
+            }
+            other => panic!("expected Parse, got {other:?}"),
+        }
+        // the shim degrades Parse to InvalidData, keeping the line
+        let e = read_tns(&path).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        assert!(e.to_string().contains("line 2"), "{e}");
     }
 }

@@ -37,7 +37,7 @@ fn more_ranks_than_elements() {
     let t = SparseTensor::random(vec![6, 6, 6], 5, &mut rng);
     for scheme in sched::all_schemes() {
         let idx = build_all(&t);
-        let d = scheme.distribute(&t, &idx, 16, &mut Rng::new(2));
+        let d = scheme.policies(&t, &idx, 16, &mut Rng::new(2));
         assert!(d.validate(&t).is_ok(), "{}", scheme.name());
     }
     let rec = run(&workload(t), 16, 2);
@@ -84,11 +84,11 @@ fn one_giant_slice_only() {
         t.push(&[0, rng.below(50) as u32, rng.below(50) as u32], rng.f32());
     }
     let idx = build_all(&t);
-    let d = sched::Lite.distribute(&t, &idx, 8, &mut Rng::new(8));
+    let d = sched::Lite.policies(&t, &idx, 8, &mut Rng::new(8));
     let m = ModeMetrics::compute(&idx[0], &d.policies[0]);
     assert_eq!(m.e_max, 125, "perfect split of the giant slice");
     // CoarseG cannot split it
-    let dc = sched::CoarseG::default().distribute(&t, &idx, 8, &mut Rng::new(9));
+    let dc = sched::CoarseG::default().policies(&t, &idx, 8, &mut Rng::new(9));
     let mc = ModeMetrics::compute(&idx[0], &dc.policies[0]);
     assert_eq!(mc.e_max, 1000);
 }
@@ -149,7 +149,7 @@ fn mediumg_with_prime_p() {
     let mut rng = Rng::new(15);
     let t = SparseTensor::random(vec![40, 30, 20], 800, &mut rng);
     let idx = build_all(&t);
-    let d = sched::MediumG.distribute(&t, &idx, 13, &mut Rng::new(16));
+    let d = sched::MediumG.policies(&t, &idx, 13, &mut Rng::new(16));
     assert!(d.validate(&t).is_ok());
     let grid = sched::medium::factorize_grid(13, &t.dims);
     assert_eq!(grid.iter().product::<usize>(), 13);
@@ -160,7 +160,7 @@ fn hyperg_tiny_tensor_fewer_vertices_than_parts() {
     let mut rng = Rng::new(17);
     let t = SparseTensor::random(vec![4, 4, 4], 6, &mut rng);
     let idx = build_all(&t);
-    let d = sched::HyperG::default().distribute(&t, &idx, 8, &mut Rng::new(18));
+    let d = sched::HyperG::default().policies(&t, &idx, 8, &mut Rng::new(18));
     assert!(d.validate(&t).is_ok());
 }
 

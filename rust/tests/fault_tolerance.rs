@@ -1,0 +1,253 @@
+//! Fault-tolerance end-to-end: the headline acceptance property — a
+//! single-rank crash injected at **every** `(sweep, phase)` position
+//! recovers via survivor re-placement and lands a decomposition
+//! **bit-identical** to a planned `evict_rank` at the rollback
+//! boundary — plus transient-fault ≡ fault-free bit-identity, the
+//! checkpoint serialize → parse → restore → resume round trip (3-D
+//! property-tested, 4-D pinned), and the `RunRecord` recovery counters
+//! with the Fig 11 phase-time sum invariance under both rank executors.
+
+use tucker_lite::coordinator::{
+    CheckpointPolicy, Decomposition, ExecutorChoice, RetryPolicy,
+    SessionCheckpoint, TuckerSession, TuckerSessionBuilder, Workload,
+};
+use tucker_lite::dist::FaultPlan;
+use tucker_lite::hooi::CoreRanks;
+use tucker_lite::prop_assert;
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::check::Runner;
+use tucker_lite::util::rng::Rng;
+
+fn workload(dims: Vec<u32>, nnz: usize, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed);
+    Workload::from_tensor("ft", SparseTensor::random(dims, nnz, &mut rng))
+}
+
+fn builder(w: &Workload, p: usize, k: usize, sweeps: usize) -> TuckerSessionBuilder {
+    TuckerSession::builder(w.clone())
+        .ranks(p)
+        .core(CoreRanks::Uniform(k))
+        .invocations(sweeps)
+        .seed(17)
+}
+
+/// Upper bound on compute phases per sweep — a runaway guard for the
+/// position enumeration, not a model of the real count (which the
+/// enumeration discovers by probing until a position never fires).
+const PHASE_CAP: usize = 64;
+
+/// Acceptance: crash rank 2 at every `(sweep, phase)` position of a
+/// 2-sweep run (including the post-sweep core phase, addressed as
+/// `(sweeps, 0)`). Under `CheckpointPolicy::EverySweeps(1)` recovery
+/// rolls back to boundary `b = min(sweep, sweeps - 1)`, so each run
+/// must be bit-identical to a planned eviction at that boundary.
+#[test]
+fn crash_at_every_position_matches_planned_eviction() {
+    const SWEEPS: usize = 2;
+    const VICTIM: usize = 2;
+    let w = workload(vec![14, 10, 8], 250, 5);
+
+    // planned-eviction baselines, one per rollback boundary
+    let baseline = |b: usize| -> Decomposition {
+        if b == 0 {
+            let mut s = builder(&w, 4, 2, SWEEPS).build().unwrap();
+            s.evict_rank(VICTIM).expect("3 survivors");
+            s.decompose()
+        } else {
+            let mut s = builder(&w, 4, 2, b).build().unwrap();
+            s.decompose();
+            s.evict_rank(VICTIM).expect("3 survivors");
+            s.decompose_more(SWEEPS - b)
+        }
+    };
+    let baselines: Vec<Decomposition> = (0..SWEEPS).map(baseline).collect();
+
+    let mut positions = 0usize;
+    for sweep in 0..=SWEEPS {
+        let want = &baselines[sweep.min(SWEEPS - 1)];
+        let mut phase = 0usize;
+        loop {
+            assert!(phase < PHASE_CAP, "phase enumeration runaway at sweep {sweep}");
+            let mut s = builder(&w, 4, 2, SWEEPS)
+                .fault_plan(FaultPlan::new().crash_at(sweep, phase, VICTIM))
+                .build()
+                .unwrap();
+            let got = s
+                .try_decompose()
+                .unwrap_or_else(|e| panic!("sweep {sweep} phase {phase}: {e}"));
+            if s.faults_injected() == 0 {
+                // position (sweep, phase) does not exist: the sweep has
+                // exactly `phase` compute phases — enumeration complete
+                break;
+            }
+            positions += 1;
+            assert_eq!(s.dead_ranks(), vec![VICTIM], "sweep {sweep} phase {phase}");
+            assert!(s.recoveries() >= 1, "sweep {sweep} phase {phase}");
+            assert_eq!(got.record.faults_injected, 1);
+            assert!(got.record.recoveries >= 1);
+            assert!(got.record.recovery_secs > 0.0);
+            // the dead rank owns nothing after survivor re-placement
+            for pol in &s.placement().dist.policies {
+                assert!(pol.assign.iter().all(|&r| r != VICTIM as u32));
+            }
+            for (n, (a, b)) in want.factors.iter().zip(&got.factors).enumerate() {
+                assert_eq!(
+                    a.data, b.data,
+                    "sweep {sweep} phase {phase}: mode {n} factor bits"
+                );
+            }
+            assert_eq!(
+                want.core.data, got.core.data,
+                "sweep {sweep} phase {phase}: core bits"
+            );
+            assert_eq!(want.record.fit.to_bits(), got.record.fit.to_bits());
+            phase += 1;
+        }
+        if sweep < SWEEPS {
+            assert!(phase > 0, "sweep {sweep} ran no compute phases");
+        } else {
+            assert_eq!(phase, 1, "the post-sweep position holds only the core phase");
+        }
+    }
+    // every sweep contributed at least TTM + SVD phases per mode, plus
+    // the core phase — the enumeration really swept the space
+    assert!(positions > SWEEPS * 2 * 3, "only {positions} positions probed");
+}
+
+/// A transient failure (retry succeeds) at one position per sweep must
+/// roll back and land exactly the fault-free bits — no placement
+/// change, no dead ranks.
+#[test]
+fn transient_faults_are_bit_invisible_after_recovery() {
+    let w = workload(vec![15, 12, 9], 300, 6);
+    let clean = builder(&w, 4, 3, 2).build().unwrap().decompose();
+    for (sweep, phase) in [(0, 0), (0, 3), (1, 1), (2, 0)] {
+        let mut s = builder(&w, 4, 3, 2)
+            .fault_plan(FaultPlan::new().transient_at(sweep, phase, 1))
+            .build()
+            .unwrap();
+        let d = s.try_decompose().expect("transient recovers");
+        assert_eq!(s.faults_injected(), 1, "({sweep},{phase})");
+        assert_eq!(s.recoveries(), 1, "({sweep},{phase})");
+        assert!(s.dead_ranks().is_empty());
+        for (a, b) in clean.factors.iter().zip(&d.factors) {
+            assert_eq!(a.data, b.data, "({sweep},{phase}) factor bits");
+        }
+        assert_eq!(clean.core.data, d.core.data, "({sweep},{phase}) core bits");
+        assert_eq!(clean.record.fit.to_bits(), d.record.fit.to_bits());
+    }
+}
+
+/// Checkpoint round trip, property-tested over random 3-D tensors:
+/// serialize → parse is field-exact, and restoring the parsed
+/// checkpoint into a freshly built (identical) session resumes
+/// bit-identically to the original session.
+#[test]
+fn checkpoint_roundtrip_resumes_bit_exactly_3d() {
+    Runner::new(10, 60).run("checkpoint-roundtrip-3d", |case, rng| {
+        let dims = vec![
+            8 + rng.usize_below(case.size + 8) as u32,
+            6 + rng.usize_below(case.size + 6) as u32,
+            5 + rng.usize_below(case.size + 5) as u32,
+        ];
+        let nnz = 120 + rng.usize_below(4 * case.size + 40);
+        let p = 2 + rng.usize_below(3);
+        let k = 2 + rng.usize_below(2);
+        let w = workload(dims.clone(), nnz, rng.next_u64());
+
+        let mut original = builder(&w, p, k, 2).build().unwrap();
+        original.decompose();
+        let cp = original.checkpoint().expect("state to checkpoint");
+        let wire = SessionCheckpoint::parse(&cp.serialize())
+            .map_err(|e| format!("parse failed: {e}"))?;
+        prop_assert!(wire.sweep == cp.sweep, "sweep {} != {}", wire.sweep, cp.sweep);
+        prop_assert!(wire.p == cp.p, "p mismatch");
+        prop_assert!(wire.ks == cp.ks, "ks mismatch");
+        prop_assert!(wire.rng_state == cp.rng_state, "rng state mismatch");
+        prop_assert!(wire.sigma == cp.sigma, "sigma mismatch");
+        for (n, (a, b)) in cp.factors.iter().zip(&wire.factors).enumerate() {
+            prop_assert!(a.data == b.data, "serialized factor {n} not bit-exact");
+        }
+
+        let mut resumed = builder(&w, p, k, 2).build().unwrap();
+        resumed.restore(&wire).map_err(|e| format!("restore failed: {e}"))?;
+        let a = original.decompose_more(1);
+        let b = resumed.decompose_more(1);
+        for (n, (fa, fb)) in a.factors.iter().zip(&b.factors).enumerate() {
+            prop_assert!(
+                fa.data == fb.data,
+                "dims {dims:?} p {p} k {k}: mode {n} factor bits diverge"
+            );
+        }
+        prop_assert!(a.core.data == b.core.data, "core bits diverge");
+        prop_assert!(a.record.fit == b.record.fit, "fit diverges");
+        Ok(())
+    });
+}
+
+/// The 4-D pin of the round trip: one fixed seed, one extra mode.
+#[test]
+fn checkpoint_roundtrip_resumes_bit_exactly_4d_pin() {
+    let w = workload(vec![8, 7, 6, 5], 300, 9);
+    let mut original = builder(&w, 3, 2, 2).build().unwrap();
+    original.decompose();
+    let cp = original.checkpoint().expect("state to checkpoint");
+    assert_eq!(cp.sweep, 2);
+    assert_eq!(cp.ks, vec![2, 2, 2, 2]);
+    let wire = SessionCheckpoint::parse(&cp.serialize()).expect("parses");
+    let mut resumed = builder(&w, 3, 2, 2).build().unwrap();
+    resumed.restore(&wire).expect("restores");
+    let a = original.decompose_more(1);
+    let b = resumed.decompose_more(1);
+    for (n, (fa, fb)) in a.factors.iter().zip(&b.factors).enumerate() {
+        assert_eq!(fa.data, fb.data, "mode {n} factor bits");
+    }
+    assert_eq!(a.core.data, b.core.data, "core bits");
+    assert_eq!(a.record.fit.to_bits(), b.record.fit.to_bits());
+}
+
+/// Recovery observability under both rank executors: the counters
+/// surface in `RunRecord`, checkpoints cost bytes, the recovery bucket
+/// stays out of `hooi_secs` (Fig 11 phase-time sum invariance), and the
+/// recovered bits do not depend on the executor.
+#[test]
+fn recovery_counters_and_sum_invariance_under_both_executors() {
+    let w = workload(vec![14, 10, 8], 250, 5);
+    let run = |executor: ExecutorChoice| -> Decomposition {
+        let mut s = builder(&w, 4, 2, 2)
+            .executor(executor)
+            .fault_plan(FaultPlan::new().crash_at(1, 1, 3))
+            .checkpoint_policy(CheckpointPolicy::EverySweeps(1))
+            .retry_policy(RetryPolicy { max_attempts: 3, straggler_timeout: None })
+            .build()
+            .unwrap();
+        let d = s.try_decompose().expect("recovers");
+        assert_eq!(s.dead_ranks(), vec![3]);
+        d
+    };
+    let serial = run(ExecutorChoice::Serial);
+    let parallel = run(ExecutorChoice::Parallel);
+    for d in [&serial, &parallel] {
+        assert_eq!(d.record.faults_injected, 1);
+        assert_eq!(d.record.recoveries, 1);
+        assert!(d.record.recovery_secs > 0.0);
+        assert!(d.record.checkpoint_bytes > 0);
+        assert!(d.record.checkpoint_secs >= 0.0);
+        // Fig 11 breakdown: recovery and checkpoint time live in their
+        // own buckets; the compute + comm phases still sum to hooi_secs
+        let sum = d.record.ttm_secs
+            + d.record.svd_secs
+            + d.record.core_secs
+            + d.record.comm_secs;
+        assert!(
+            (sum - d.record.hooi_secs).abs() < 1e-9,
+            "phase sum {sum} != hooi {}",
+            d.record.hooi_secs
+        );
+    }
+    for (n, (a, b)) in serial.factors.iter().zip(&parallel.factors).enumerate() {
+        assert_eq!(a.data, b.data, "mode {n} factor bits diverge across executors");
+    }
+    assert_eq!(serial.core.data, parallel.core.data);
+    assert_eq!(serial.record.fit.to_bits(), parallel.record.fit.to_bits());
+}

@@ -124,7 +124,7 @@ fn distribution_time_lightweight_vs_hyperg_ordering() {
     let mut hyper_t = 0.0;
     for scheme in sched::all_schemes() {
         let mut rng = Rng::new(5);
-        let d = scheme.distribute(&w.tensor, &w.idx, 8, &mut rng);
+        let d = scheme.policies(&w.tensor, &w.idx, 8, &mut rng);
         match scheme.name() {
             "Lite" => lite_t = d.time.simulated_secs,
             "HyperG" => hyper_t = d.time.simulated_secs,

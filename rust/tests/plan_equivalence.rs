@@ -121,7 +121,9 @@ fn concurrent_phase_is_bit_identical_to_serial() {
                 move || plan.assemble(factors_ref, &Engine::Native, ws)
             })
             .collect();
-        let out = cluster.phase_tasks(cat::TTM, tasks);
+        let out = cluster
+            .phase_tasks(cat::TTM, tasks)
+            .expect("no fault injector armed in this test");
         assert!(cluster.elapsed.get(cat::TTM) >= 0.0);
         assert_eq!(cluster.last_phase.len(), p);
         out
@@ -142,7 +144,7 @@ fn hooi_end_to_end_identical_under_both_executors() {
     let mut rng = Rng::new(9);
     let t = SparseTensor::random(vec![18, 14, 10], 700, &mut rng);
     let idx = build_all(&t);
-    let dist = Lite.distribute(&t, &idx, 4, &mut Rng::new(3));
+    let dist = Lite.policies(&t, &idx, 4, &mut Rng::new(3));
     let cfg = HooiConfig {
         core: CoreRanks::Uniform(4),
         invocations: 2,

@@ -34,7 +34,7 @@ fn theorem_6_1_holds_on_adversarial_tensors() {
         let t = adversarial_tensor(case.size.max(2), rng);
         let p = 1 + rng.usize_below(12);
         let idx = build_all(&t);
-        let d = sched::Lite.distribute(&t, &idx, p, rng);
+        let d = sched::Lite.policies(&t, &idx, p, rng);
         let limit = t.nnz().div_ceil(p);
         for (n, i) in idx.iter().enumerate() {
             let m = ModeMetrics::compute(i, &d.policies[n]);
@@ -61,7 +61,7 @@ fn every_scheme_partitions_every_element_exactly_once() {
         let p = 1 + rng.usize_below(8);
         let idx = build_all(&t);
         for scheme in sched::all_schemes() {
-            let d = scheme.distribute(&t, &idx, p, rng);
+            let d = scheme.policies(&t, &idx, p, rng);
             d.validate(&t)?;
             for (n, pol) in d.policies.iter().enumerate() {
                 let total: usize = pol.rank_counts().iter().sum();
@@ -83,7 +83,7 @@ fn coarse_grained_slices_always_good() {
         let t = adversarial_tensor(case.size.max(2), rng);
         let p = 1 + rng.usize_below(8);
         let idx = build_all(&t);
-        let d = sched::CoarseG::default().distribute(&t, &idx, p, rng);
+        let d = sched::CoarseG::default().policies(&t, &idx, p, rng);
         for (n, i) in idx.iter().enumerate() {
             let sharers = Sharers::build(i, &d.policies[n]);
             prop_assert!(
@@ -103,7 +103,7 @@ fn row_owner_is_always_a_sharer() {
         let p = 1 + rng.usize_below(8);
         let idx = build_all(&t);
         for scheme in sched::all_schemes() {
-            let d = scheme.distribute(&t, &idx, p, rng);
+            let d = scheme.policies(&t, &idx, p, rng);
             for (n, i) in idx.iter().enumerate() {
                 let sharers = Sharers::build(i, &d.policies[n]);
                 let map = sched::RowMap::build(&sharers, p);
