@@ -1,0 +1,129 @@
+//! Chaos smoke: real faults against the channel transport's robustness
+//! envelope.
+//!
+//!     cargo run --release --example chaos_smoke
+//!
+//! Every trial runs a full HOOI session over `TransportChoice::Channel`
+//! — real framed bytes, checksums, heartbeats, phase deadlines — while
+//! the chaos hooks break things for real: corrupted frames past the
+//! retransmit budget, a silently wedged rank, a straggler sleeping past
+//! the deadline. No `FaultPlan` is armed anywhere; every failure here
+//! is *detected*, classified, and recovered by the PR 6 loop. The smoke
+//! criterion is convergence (a finite fit on every trial), not
+//! bit-equality — deadlines are randomized per trial.
+
+use tucker_lite::coordinator::{RetryPolicy, TuckerSession, Workload};
+use tucker_lite::dist::{TransportChoice, TransportTuning};
+use tucker_lite::hooi::CoreRanks;
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::Table;
+
+struct Trial {
+    name: &'static str,
+    tuning: TransportTuning,
+    wedge: Option<usize>,
+}
+
+fn main() {
+    let mut rng = Rng::new(2024);
+    let tensor = SparseTensor::random(vec![14, 10, 8], 250, &mut rng);
+    let w = Workload::from_tensor("chaos", tensor);
+
+    // randomized-but-generous deadlines: far above the microseconds a
+    // healthy in-process exchange takes, small enough to keep the hang
+    // and straggler trials snappy
+    let mut deadline = || 0.03 + f64::from(rng.f32()) * 0.09;
+
+    let d1 = deadline();
+    let d2 = deadline();
+    let trials = vec![
+        Trial {
+            name: "healthy",
+            tuning: TransportTuning::default(),
+            wedge: None,
+        },
+        Trial {
+            name: "corrupt-absorbed",
+            // three damaged frames, each retransmitted inside the budget:
+            // the session must not even notice
+            tuning: TransportTuning { corrupt_frames: 3, ..TransportTuning::default() },
+            wedge: None,
+        },
+        Trial {
+            name: "corrupt-transient",
+            // zero retransmit budget: the first damaged frame escalates to
+            // a transient failure → rollback → clean replay
+            tuning: TransportTuning {
+                corrupt_frames: 1,
+                max_retries: 0,
+                ..TransportTuning::default()
+            },
+            wedge: None,
+        },
+        Trial {
+            name: "wedged-rank",
+            // rank 2 hangs silently; the deadline monitor must classify
+            // the crash and recovery must re-place onto the survivors
+            tuning: TransportTuning { phase_deadline: d1, ..TransportTuning::default() },
+            wedge: Some(2),
+        },
+        Trial {
+            name: "straggler",
+            // rank 3 heartbeats but sleeps past the deadline once: a
+            // straggler timeout, recovered without any eviction
+            tuning: TransportTuning {
+                phase_deadline: d2,
+                delay_rank: Some(3),
+                delay_secs: d2 * 2.5,
+                ..TransportTuning::default()
+            },
+            wedge: None,
+        },
+    ];
+
+    let mut t = Table::new(
+        "chaos trials (channel transport, no injected faults)",
+        &["trial", "deadline", "recoveries", "dead ranks", "fit"],
+    );
+    for trial in trials {
+        let mut s = TuckerSession::builder(w.clone())
+            .ranks(4)
+            .core(CoreRanks::Uniform(2))
+            .invocations(2)
+            .seed(11)
+            .transport(TransportChoice::Channel)
+            .transport_tuning(trial.tuning)
+            .retry_policy(RetryPolicy { max_attempts: 5, straggler_timeout: None })
+            .build()
+            .expect("valid session configuration");
+        if let Some(r) = trial.wedge {
+            s.wedge_rank(r);
+        }
+        let d = s
+            .try_decompose()
+            .unwrap_or_else(|e| panic!("trial {}: unrecovered: {e}", trial.name));
+        assert!(d.fit().is_finite(), "trial {}: fit diverged", trial.name);
+        assert_eq!(d.record.transport, "channel");
+        assert_eq!(s.faults_injected(), 0, "chaos is real, never injected");
+        match trial.name {
+            "healthy" | "corrupt-absorbed" => {
+                assert_eq!(s.recoveries(), 0, "trial {} must not recover", trial.name);
+            }
+            "wedged-rank" => {
+                assert_eq!(s.dead_ranks(), vec![2], "the hung rank is evicted");
+                assert!(s.recoveries() >= 1);
+            }
+            _ => assert!(s.recoveries() >= 1, "trial {} must recover", trial.name),
+        }
+        t.row(vec![
+            trial.name.to_string(),
+            format!("{:.0} ms", trial.tuning.phase_deadline * 1e3),
+            s.recoveries().to_string(),
+            format!("{:?}", s.dead_ranks()),
+            format!("{:.4}", d.fit()),
+        ]);
+    }
+    t.print();
+    println!("chaos_smoke OK");
+}

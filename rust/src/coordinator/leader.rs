@@ -196,6 +196,19 @@ pub struct RunRecord {
     pub workers: usize,
     pub kernel: String,
     pub ttm_speedup: f64,
+    /// Which communication transport carried the collectives: `"sim"`
+    /// (analytic α–β charging, the historical behavior) or `"channel"`
+    /// (real framed bytes over in-process channels).
+    pub transport: String,
+    /// Predicted-vs-measured `NetModel` error per communication
+    /// category: signed relative seconds error
+    /// `(measured − predicted) / predicted`. Exactly `0.0` under the
+    /// sim transport (measured is defined as the prediction); under the
+    /// channel transport this is the empirical check on the §4 cost
+    /// model that drives `RebalancePolicy::Auto` — a large positive
+    /// error means the α–β model is underpricing that category's
+    /// traffic on this host.
+    pub net_model_error: Vec<(String, f64)>,
 }
 
 /// Assemble a [`RunRecord`] from a finished HOOI run — shared by the
@@ -252,6 +265,8 @@ pub(crate) fn collect_record(
         workers: conc.workers,
         kernel: conc.kernel.to_string(),
         ttm_speedup: conc.speedup,
+        transport: cluster.transport_name().to_string(),
+        net_model_error: cluster.net_model_error(),
     }
 }
 

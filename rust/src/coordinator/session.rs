@@ -33,6 +33,7 @@
 //! |-----------------------|--------------------------|
 //! | `.kernel(..)`         | `TUCKER_KERNEL`          |
 //! | `.executor(..)`       | `TUCKER_PHASE_EXECUTOR`  |
+//! | `.transport(..)`      | `TUCKER_TRANSPORT`       |
 //! | `.memory_accounting(..)` | `TUCKER_MEM_ACCOUNTING` |
 //!
 //! The session owns the compiled distribution and the per-rank TTM
@@ -114,10 +115,22 @@
 //! `recoveries`, `recovery_secs` (the `cat::RECOVER` bucket — alongside
 //! `hooi_secs`, like `redist_secs`, so the Fig 11 breakdown stays
 //! sum-invariant) and `checkpoint_secs`/`checkpoint_bytes`.
+//!
+//! The same recovery loop also consumes *real* failures: with
+//! [`TuckerSessionBuilder::transport`] set to
+//! [`TransportChoice::Channel`], collectives move real framed bytes and
+//! the transport's heartbeat/deadline monitor classifies a genuinely
+//! hung or corrupting peer into the same
+//! [`FailureKind`](crate::dist::FailureKind) taxonomy — a detected
+//! crash is evicted and recovered bit-identically to the equivalent
+//! injected one (`tests/transport.rs` pins this).
 
 use super::checkpoint::{CheckpointPolicy, RetryPolicy, SessionCheckpoint};
 use super::leader::{collect_record, RunRecord, Workload};
-use crate::dist::{cat, FaultInjector, FaultPlan, NetModel, SimCluster};
+use crate::dist::{
+    cat, ChannelTransport, FailureKind, FaultInjector, FaultPlan, NetModel, RankFailure,
+    SimCluster, SimTransport, Transport, TransportChoice, TransportTuning,
+};
 use crate::hooi::{
     charge_plan_compilation, prepare_modes_with_sharers, CoreRanks, HooiSnapshot,
     HooiState, Kernel, ModeDelta, ModeState, TensorAccounting,
@@ -368,6 +381,8 @@ pub struct TuckerSessionBuilder {
     engine: EngineChoice,
     kernel: KernelChoice,
     executor: ExecutorChoice,
+    transport: Option<TransportChoice>,
+    transport_tuning: TransportTuning,
     net: NetModel,
     accounting: Option<TensorAccounting>,
     rebalance: RebalancePolicy,
@@ -388,6 +403,8 @@ impl TuckerSessionBuilder {
             engine: EngineChoice::Native,
             kernel: KernelChoice::Auto,
             executor: ExecutorChoice::Auto,
+            transport: None,
+            transport_tuning: TransportTuning::default(),
             net: NetModel::default(),
             accounting: None,
             rebalance: RebalancePolicy::default(),
@@ -447,6 +464,25 @@ impl TuckerSessionBuilder {
     /// `TUCKER_PHASE_EXECUTOR`, then parallel on multi-core hosts).
     pub fn executor(mut self, executor: ExecutorChoice) -> Self {
         self.executor = executor;
+        self
+    }
+
+    /// Communication transport (default: `TUCKER_TRANSPORT`, then
+    /// [`TransportChoice::Sim`] — the analytic α–β charger).
+    /// [`TransportChoice::Channel`] moves real framed bytes between
+    /// ranks over in-process channels, with heartbeat/deadline failure
+    /// detection feeding the recovery loop. Accounting is
+    /// transport-invariant: decompositions are bit-identical either way.
+    pub fn transport(mut self, transport: TransportChoice) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Robustness knobs for the channel transport (heartbeat interval,
+    /// phase deadline, retransmit budget/backoff, chaos hooks). Ignored
+    /// by [`TransportChoice::Sim`].
+    pub fn transport_tuning(mut self, tuning: TransportTuning) -> Self {
+        self.transport_tuning = tuning;
         self
     }
 
@@ -543,6 +579,7 @@ impl TuckerSessionBuilder {
         );
         let injector =
             if self.faults.is_empty() { None } else { Some(self.faults.injector()) };
+        let transport_choice = crate::util::env::transport_choice(self.transport);
         Ok(TuckerSession {
             workload: self.workload,
             plan,
@@ -552,6 +589,9 @@ impl TuckerSessionBuilder {
             engine: self.engine.into_engine(),
             kernel: self.kernel.as_option(),
             executor: self.executor,
+            transport_choice,
+            transport_tuning: self.transport_tuning,
+            wedged: vec![false; self.p],
             net: self.net,
             accounting: self.accounting,
             rebalance_policy: self.rebalance,
@@ -594,6 +634,12 @@ pub struct TuckerSession {
     engine: Arc<Engine>,
     kernel: Option<Kernel>,
     executor: ExecutorChoice,
+    /// Resolved communication transport (typed option > env > Sim).
+    transport_choice: TransportChoice,
+    transport_tuning: TransportTuning,
+    /// Ranks deliberately wedged through [`TuckerSession::wedge_rank`] —
+    /// real hangs the channel transport must *detect*, not be told about.
+    wedged: Vec<bool>,
     net: NetModel,
     accounting: Option<TensorAccounting>,
     rebalance_policy: RebalancePolicy,
@@ -699,8 +745,50 @@ impl TuckerSession {
         &self.modes
     }
 
+    /// Build the transport this session's clusters communicate over:
+    /// a fresh instance per run, seeded with the session's tuning, with
+    /// wedged ranks wedged (they hang silently — the monitor must catch
+    /// them) and evicted ranks excluded from the collectives.
+    fn make_transport(&self) -> Box<dyn Transport> {
+        match self.transport_choice {
+            TransportChoice::Sim => Box::new(SimTransport::new()),
+            TransportChoice::Channel => {
+                let mut t =
+                    ChannelTransport::new(self.plan.dist.p, self.transport_tuning);
+                for (r, &w) in self.wedged.iter().enumerate() {
+                    if w {
+                        t.wedge_rank(r);
+                    }
+                }
+                for (r, &d) in self.dead.iter().enumerate() {
+                    if d {
+                        t.mark_dead(r);
+                    }
+                }
+                Box::new(t)
+            }
+        }
+    }
+
+    /// The resolved communication transport this session runs on.
+    pub fn transport_choice(&self) -> TransportChoice {
+        self.transport_choice
+    }
+
+    /// Chaos hook: make `rank` hang silently in every future collective
+    /// — a *real* fault, with no [`FaultPlan`] involvement. Only the
+    /// channel transport's heartbeat/deadline monitor can detect it
+    /// (under [`TransportChoice::Sim`] nothing happens: no bytes move,
+    /// so there is nothing to hang).
+    pub fn wedge_rank(&mut self, rank: usize) {
+        if rank < self.wedged.len() {
+            self.wedged[rank] = true;
+        }
+    }
+
     fn new_cluster(&mut self) -> SimCluster {
         let mut cluster = SimCluster::new(self.plan.dist.p).with_net(self.net);
+        cluster.set_transport(self.make_transport());
         if let Some(parallel) = self.executor.as_option() {
             cluster = cluster.with_parallel(parallel);
         }
@@ -882,7 +970,7 @@ impl TuckerSession {
                             "{f} ({failures_in_a_row} consecutive failed attempts)"
                         )));
                     }
-                    self.recover(cluster)?;
+                    self.recover(cluster, &f)?;
                 }
             }
         }
@@ -891,17 +979,32 @@ impl TuckerSession {
     /// One recovery cycle: evict any newly dead ranks onto the
     /// survivors, then roll the HOOI state back to the last retained
     /// checkpoint. All cost — eviction migration, plan rebuilds,
-    /// rollback wall time — is charged to `cat::RECOVER`.
-    fn recover(&mut self, cluster: &mut SimCluster) -> Result<(), SessionError> {
+    /// rollback wall time — is charged to `cat::RECOVER`. Dead ranks
+    /// come from two detectors with one treatment: the injector's
+    /// tombstones (injected crashes) and the triggering failure itself
+    /// when the transport's liveness monitor classified a *real* crash.
+    fn recover(
+        &mut self,
+        cluster: &mut SimCluster,
+        failure: &RankFailure,
+    ) -> Result<(), SessionError> {
         let t0 = Instant::now();
         self.recoveries += 1;
-        let newly_dead: Vec<usize> = cluster
+        let mut newly_dead: Vec<usize> = cluster
             .injector()
             .map(|inj| inj.dead_ranks())
             .unwrap_or_default()
             .into_iter()
             .filter(|&r| !self.dead[r])
             .collect();
+        if failure.kind == FailureKind::Crash
+            && failure.rank < self.dead.len()
+            && !self.dead[failure.rank]
+            && !newly_dead.contains(&failure.rank)
+        {
+            newly_dead.push(failure.rank);
+            newly_dead.sort_unstable();
+        }
         let mut sim_secs = 0.0;
         if !newly_dead.is_empty() {
             if self.survivors_after(&newly_dead) == 0 {
@@ -909,6 +1012,9 @@ impl TuckerSession {
             }
             for &r in &newly_dead {
                 self.dead[r] = true;
+                // future collectives on this cluster (and on fresh ones,
+                // via make_transport) run over the survivors only
+                cluster.mark_rank_dead(r);
             }
             let (migration_sim, rebuild_secs) = self.apply_eviction();
             sim_secs += migration_sim + rebuild_secs;
@@ -1515,7 +1621,7 @@ impl TuckerSession {
                     }
                     let target =
                         self.state.as_ref().expect("state in flight").sweep();
-                    self.recover(&mut cluster)?;
+                    self.recover(&mut cluster, &f)?;
                     let resumed =
                         self.state.as_ref().expect("state in flight").sweep();
                     if resumed >= target {

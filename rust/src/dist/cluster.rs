@@ -20,11 +20,22 @@
 //! down, and an armed [`FaultInjector`] (see [`super::fault`]) can
 //! deterministically fail or slow chosen ranks at chosen `(sweep,
 //! phase)` positions. Phase positions are tracked by
-//! [`SimCluster::begin_sweep`] plus a per-sweep compute-phase counter;
-//! communication charges (`p2p`/`allreduce`) are not failure points.
+//! [`SimCluster::begin_sweep`] plus a per-sweep compute-phase counter.
+//! Communication charges (`p2p`/`allreduce`) run on the configured
+//! [`Transport`] and are failure points too: under `ChannelTransport` a
+//! really hung, crashed, or corrupting peer surfaces as a [`RankFailure`]
+//! classified by the transport's liveness monitor. Regardless of
+//! transport, the *predicted* α–β cost is what lands in `elapsed` /
+//! `volume` (so accounting is transport-invariant and decompositions stay
+//! bit-identical); what the transport actually measured lands in the
+//! separate `net_measured` / `net_units_measured` buckets, and
+//! [`SimCluster::net_model_error`] reports the relative gap per category.
 
 use super::fault::{FailureKind, FaultInjector, FaultKind, RankFailure};
 use super::net::NetModel;
+use super::transport::{
+    self, Transport, TransportChoice, TransportFailure, TransportStats, TransportTuning,
+};
 use crate::util::timer::Buckets;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -89,6 +100,17 @@ pub struct SimCluster {
     pub elapsed: Buckets,
     /// Communication volume per category, in units (one f32 = one unit).
     pub volume: Buckets,
+    /// Predicted α–β seconds per comm category (mirror of what `elapsed`
+    /// received from communication; comm-only, no compute makespans).
+    pub net_predicted: Buckets,
+    /// Transport-measured seconds per comm category. Under `SimTransport`
+    /// this equals `net_predicted` by definition; under `ChannelTransport`
+    /// it is the wall time of the real byte exchange.
+    pub net_measured: Buckets,
+    /// Predicted units per comm category (mirror of `volume`'s comm part).
+    pub net_units_predicted: Buckets,
+    /// Transport-measured delivered units per comm category.
+    pub net_units_measured: Buckets,
     /// Σ per-rank busy seconds per compute category (elapsed holds the
     /// makespans; busy/wall is the measured executor speedup).
     pub busy: Buckets,
@@ -115,6 +137,9 @@ pub struct SimCluster {
     /// session's `RetryPolicy`); `None` means stragglers only slow the
     /// makespan.
     phase_timeout: Option<f64>,
+    /// The communication transport: analytic charger or real in-process
+    /// byte mover (see [`super::transport`]).
+    transport: Box<dyn Transport>,
 }
 
 impl SimCluster {
@@ -124,11 +149,16 @@ impl SimCluster {
     /// their choice through [`SimCluster::with_parallel`]).
     pub fn new(p: usize) -> SimCluster {
         let parallel = crate::util::env::phase_executor_parallel(None);
+        let choice = crate::util::env::transport_choice(None);
         SimCluster {
             p,
             net: NetModel::default(),
             elapsed: Buckets::new(),
             volume: Buckets::new(),
+            net_predicted: Buckets::new(),
+            net_measured: Buckets::new(),
+            net_units_predicted: Buckets::new(),
+            net_units_measured: Buckets::new(),
             busy: Buckets::new(),
             wall: Buckets::new(),
             last_phase: Vec::new(),
@@ -138,6 +168,7 @@ impl SimCluster {
             sweep: 0,
             phase_idx: 0,
             phase_timeout: None,
+            transport: transport::from_choice(choice, p, TransportTuning::default()),
         }
     }
 
@@ -155,6 +186,57 @@ impl SimCluster {
     pub fn with_parallel(mut self, on: bool) -> SimCluster {
         self.parallel = on;
         self
+    }
+
+    /// Builder form of [`set_transport`](Self::set_transport).
+    pub fn with_transport(mut self, transport: Box<dyn Transport>) -> SimCluster {
+        self.transport = transport;
+        self
+    }
+
+    /// Replace the communication transport (typed callers — the session
+    /// builder — override the `TUCKER_TRANSPORT` env default here).
+    pub fn set_transport(&mut self, transport: Box<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    /// Convenience: install a fresh transport for `choice` with `tuning`.
+    pub fn set_transport_choice(&mut self, choice: TransportChoice, tuning: TransportTuning) {
+        self.transport = transport::from_choice(choice, self.p, tuning);
+    }
+
+    /// Name of the active transport ("sim" / "channel").
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Traffic counters from the active transport.
+    pub fn transport_stats(&self) -> TransportStats {
+        self.transport.stats()
+    }
+
+    /// Tell the transport a rank has been evicted: future collectives run
+    /// over the survivors only.
+    pub fn mark_rank_dead(&mut self, rank: usize) {
+        self.transport.mark_dead(rank);
+    }
+
+    /// Predicted-vs-measured `NetModel` error per comm category: signed
+    /// relative seconds error `(measured − predicted) / predicted`,
+    /// exactly `0.0` under `SimTransport` (measured is defined as the
+    /// prediction) and for categories with no predicted cost.
+    pub fn net_model_error(&self) -> Vec<(String, f64)> {
+        self.net_predicted
+            .iter()
+            .map(|(cat, pred)| {
+                let err = if pred > 0.0 {
+                    (self.net_measured.get(cat) - pred) / pred
+                } else {
+                    0.0
+                };
+                (cat.to_string(), err)
+            })
+            .collect()
     }
 
     /// Arm a fault injector: subsequent compute phases consult it at
@@ -417,23 +499,73 @@ impl SimCluster {
     }
 
     /// Point-to-point round: `per_rank[r] = (messages, units)` sent by
-    /// rank r. Time = max over ranks of α·msgs + β·units (rounds overlap
-    /// across ranks); volume = Σ units.
-    pub fn p2p(&mut self, cat: &str, per_rank: &[(u64, u64)]) {
-        let mut worst = 0.0f64;
-        let mut total_units = 0u64;
-        for &(msgs, units) in per_rank {
-            worst = worst.max(self.net.xfer(msgs, units));
-            total_units += units;
+    /// rank r. Runs on the transport; the *predicted* time (max over ranks
+    /// of α·msgs + β·units — rounds overlap across ranks) and volume
+    /// (Σ units) are charged to `cat`, while the transport's measurement
+    /// lands in the `net_measured` buckets. A transport-detected peer
+    /// failure aborts the round: the predicted cost is then charged to
+    /// [`cat::RECOVER`] instead (the phase never completed, so it must not
+    /// pollute the Fig 11 phase sums) and the classified [`RankFailure`]
+    /// is returned.
+    pub fn p2p(&mut self, cat: &str, per_rank: &[(u64, u64)]) -> Result<(), RankFailure> {
+        let pred_secs = self.net.p2p(per_rank);
+        let pred_units = self.net.p2p_volume(per_rank) as f64;
+        match self.transport.p2p(&self.net, per_rank) {
+            Ok(m) => {
+                self.charge_comm(cat, pred_secs, pred_units, m.secs, m.units);
+                Ok(())
+            }
+            Err(f) => Err(self.comm_failure(cat, pred_secs, f)),
         }
-        self.elapsed.add(cat, worst);
-        self.volume.add(cat, total_units as f64);
     }
 
-    /// Allreduce of `units` units across all ranks.
-    pub fn allreduce(&mut self, cat: &str, units: u64) {
-        self.elapsed.add(cat, self.net.allreduce(self.p, units));
-        self.volume.add(cat, self.net.allreduce_volume(self.p, units));
+    /// Allreduce of `units` units across all ranks. Same charging and
+    /// failure contract as [`p2p`](Self::p2p).
+    pub fn allreduce(&mut self, cat: &str, units: u64) -> Result<(), RankFailure> {
+        let pred_secs = self.net.allreduce(self.p, units);
+        let pred_units = self.net.allreduce_volume(self.p, units);
+        match self.transport.allreduce(&self.net, self.p, units) {
+            Ok(m) => {
+                self.charge_comm(cat, pred_secs, pred_units, m.secs, m.units);
+                Ok(())
+            }
+            Err(f) => Err(self.comm_failure(cat, pred_secs, f)),
+        }
+    }
+
+    /// Book one successful collective: predicted α–β cost into the
+    /// category's `elapsed`/`volume` (transport-invariant accounting),
+    /// prediction and measurement side by side into the `net_*` buckets.
+    fn charge_comm(
+        &mut self,
+        cat: &str,
+        pred_secs: f64,
+        pred_units: f64,
+        meas_secs: f64,
+        meas_units: f64,
+    ) {
+        self.elapsed.add(cat, pred_secs);
+        self.volume.add(cat, pred_units);
+        self.net_predicted.add(cat, pred_secs);
+        self.net_measured.add(cat, meas_secs);
+        self.net_units_predicted.add(cat, pred_units);
+        self.net_units_measured.add(cat, meas_units);
+    }
+
+    /// Book one failed collective and build its [`RankFailure`]. The
+    /// aborted round's predicted cost goes to [`cat::RECOVER`] — never to
+    /// the comm category or its volume — so the Fig 11 phase-sum
+    /// invariance holds under real faults too.
+    fn comm_failure(&mut self, cat: &str, pred_secs: f64, f: TransportFailure) -> RankFailure {
+        self.elapsed.add(self::cat::RECOVER, pred_secs);
+        RankFailure {
+            rank: f.rank,
+            cat: cat.to_string(),
+            sweep: self.sweep,
+            phase: self.phase_idx,
+            kind: f.kind,
+            detail: f.detail,
+        }
     }
 
     /// Charge measured serial seconds of perfectly-distributable work:
@@ -584,7 +716,7 @@ mod tests {
     #[test]
     fn p2p_charges_worst_rank_and_total_volume() {
         let mut c = SimCluster::serial(3).with_net(NetModel { alpha: 1.0, beta: 0.1 });
-        c.p2p("comm", &[(1, 10), (2, 5), (0, 0)]);
+        c.p2p("comm", &[(1, 10), (2, 5), (0, 0)]).unwrap();
         // worst = max(1 + 1.0, 2 + 0.5, 0) = 2.5
         assert!((c.elapsed.get("comm") - 2.5).abs() < 1e-12);
         assert_eq!(c.volume.get("comm"), 15.0);
@@ -593,9 +725,57 @@ mod tests {
     #[test]
     fn allreduce_single_rank_is_free() {
         let mut c = SimCluster::serial(1);
-        c.allreduce("comm", 1_000);
+        c.allreduce("comm", 1_000).unwrap();
         assert_eq!(c.elapsed.get("comm"), 0.0);
         assert_eq!(c.volume.get("comm"), 0.0);
+    }
+
+    #[test]
+    fn sim_transport_measures_exactly_the_model() {
+        use crate::dist::transport::SimTransport;
+        let mut c = SimCluster::serial(4)
+            .with_net(NetModel { alpha: 1.0, beta: 0.1 })
+            .with_transport(Box::new(SimTransport::new()));
+        assert_eq!(c.transport_name(), "sim");
+        c.p2p("comm", &[(1, 10), (2, 5), (0, 0)]).unwrap();
+        c.allreduce("comm2", 64).unwrap();
+        // measured is defined as the prediction: the model error is 0.0
+        for (cat, err) in c.net_model_error() {
+            assert_eq!(err, 0.0, "category {cat}");
+        }
+        assert_eq!(c.net_measured.get("comm"), c.net_predicted.get("comm"));
+        assert_eq!(
+            c.net_units_measured.get("comm2"),
+            c.net_units_predicted.get("comm2")
+        );
+    }
+
+    #[test]
+    fn failed_collective_charges_recover_not_the_comm_bucket() {
+        use crate::dist::transport::{ChannelTransport, TransportTuning};
+        let net = NetModel { alpha: 1.0, beta: 0.1 };
+        let tuning = TransportTuning {
+            phase_deadline: 0.05,
+            ..TransportTuning::default()
+        };
+        let mut t = ChannelTransport::new(3, tuning);
+        t.wedge_rank(1);
+        let mut c = SimCluster::serial(3)
+            .with_net(net)
+            .with_transport(Box::new(t));
+        c.begin_sweep(2);
+        let per_rank = [(1u64, 10u64), (1, 10), (1, 10)];
+        let err = c.p2p("comm", &per_rank).unwrap_err();
+        assert_eq!(err.rank, 1, "the wedged rank is blamed: {}", err.detail);
+        assert_eq!(err.kind, FailureKind::Crash, "{}", err.detail);
+        assert_eq!(err.cat, "comm");
+        assert_eq!(err.sweep, 2);
+        // the aborted round never lands in the comm bucket: its predicted
+        // cost is classified under RECOVER (Fig 11 sum invariance)
+        assert_eq!(c.elapsed.get("comm"), 0.0);
+        assert_eq!(c.volume.get("comm"), 0.0);
+        let pred = net.p2p(&per_rank);
+        assert!((c.elapsed.get(cat::RECOVER) - pred).abs() < 1e-12);
     }
 
     #[test]

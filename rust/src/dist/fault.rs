@@ -15,6 +15,12 @@
 //! same faults at the same positions on every run, which is what makes
 //! the recovery-equivalence property tests possible.
 //!
+//! The same taxonomy now also carries *real* failures: the channel
+//! transport's liveness monitor (see [`super::transport`]) classifies a
+//! detected hang, crash, or unrecoverable corruption into the same
+//! [`FailureKind`]s, so the session's recovery loop treats a really
+//! wedged rank exactly like an injected crash.
+//!
 //! [`SimCluster`]: super::cluster::SimCluster
 #![warn(clippy::unwrap_used)]
 
@@ -201,16 +207,21 @@ impl FaultInjector {
 /// [`RankFailure`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailureKind {
-    /// Injected rank crash: the rank is gone and must be evicted
-    /// (survivor re-placement) before the sweep can be retried.
+    /// The rank is gone and must be evicted (survivor re-placement)
+    /// before the sweep can be retried — whether injected or detected
+    /// for real by the transport's heartbeat monitor (a peer that never
+    /// heartbeated within the phase deadline).
     Crash,
-    /// Injected transient failure: a retry from the last checkpoint
-    /// runs clean.
+    /// A failure that clears on retry: an injected transient, or a real
+    /// one (e.g. frame corruption that persisted through the transport's
+    /// retransmit budget). A retry from the last checkpoint runs clean.
     Transient,
     /// A task closure panicked; the panic was caught at the executor
     /// boundary. Treated like a transient failure by recovery.
     Panic,
-    /// An injected straggler exceeded the per-phase timeout.
+    /// A live-but-slow rank: an injected straggler exceeded the
+    /// per-phase timeout, or a real peer kept heartbeating but missed
+    /// the transport's phase deadline.
     StragglerTimeout,
 }
 

@@ -1,13 +1,18 @@
 //! Simulated distributed runtime (paper §7 methodology): a P-rank cluster
 //! where compute really executes (and is timed per rank) while
-//! communication is charged to an α–β network model with byte-exact
-//! volumes.
+//! communication runs on a pluggable [`Transport`] — either charged to an
+//! α–β network model with byte-exact volumes ([`SimTransport`]) or moved
+//! as real framed bytes over in-process channels ([`ChannelTransport`]).
 //!
 //! - [`net`]: the α–β [`NetModel`] and its collective-cost formulas.
 //! - [`cluster`]: [`SimCluster`] — phase execution (makespan timing),
 //!   point-to-point and allreduce charging, and the scoped-thread
 //!   parallel rank executor that makes multi-rank experiments wall-clock
 //!   scale with host cores while keeping per-rank timings honest.
+//! - [`transport`]: the [`Transport`] seam — the analytic charger and the
+//!   channel transport with framing, checksums, heartbeats, phase
+//!   deadlines, and retry/backoff, whose detected failures feed the same
+//!   recovery loop as injected ones.
 //! - [`fault`]: seeded deterministic fault injection ([`FaultPlan`] /
 //!   [`FaultInjector`]) and the [`RankFailure`] the fallible phase
 //!   methods surface instead of propagating panics.
@@ -15,7 +20,12 @@
 pub mod cluster;
 pub mod fault;
 pub mod net;
+pub mod transport;
 
 pub use cluster::{cat, run_scoped, ConcurrencyReport, SimCluster};
 pub use fault::{FailureKind, FaultInjector, FaultKind, FaultPlan, FaultSpec, RankFailure};
 pub use net::NetModel;
+pub use transport::{
+    ChannelTransport, Measured, SimTransport, Transport, TransportChoice, TransportFailure,
+    TransportStats, TransportTuning,
+};

@@ -27,6 +27,21 @@ impl NetModel {
         msgs as f64 * self.alpha + units as f64 * self.beta
     }
 
+    /// Predicted wall time of one p2p exchange phase: every rank sends
+    /// concurrently, so the phase costs what the *worst* rank's
+    /// `(msgs, units)` pair costs.
+    pub fn p2p(&self, per_rank: &[(u64, u64)]) -> f64 {
+        per_rank
+            .iter()
+            .map(|&(m, u)| self.xfer(m, u))
+            .fold(0.0, f64::max)
+    }
+
+    /// Total units moved by one p2p exchange phase (volume accounting).
+    pub fn p2p_volume(&self, per_rank: &[(u64, u64)]) -> u64 {
+        per_rank.iter().map(|&(_, u)| u).sum()
+    }
+
     /// Allreduce of `units` units over `p` ranks (recursive doubling /
     /// ring hybrid): ⌈log₂ P⌉ latency terms + 2·(P−1)/P·units bandwidth.
     pub fn allreduce(&self, p: usize, units: u64) -> f64 {
@@ -72,6 +87,16 @@ mod tests {
         assert_eq!(n.allreduce(4, 100), 2.0);
         assert_eq!(n.allreduce(8, 100), 3.0);
         assert_eq!(n.allreduce(5, 100), 3.0); // ⌈log₂ 5⌉
+    }
+
+    #[test]
+    fn p2p_charges_worst_rank_and_sums_volume() {
+        let n = NetModel { alpha: 1.0, beta: 0.5 };
+        let per_rank = [(1u64, 2u64), (2, 10), (0, 0)];
+        assert_eq!(n.p2p(&per_rank), 2.0 + 5.0);
+        assert_eq!(n.p2p_volume(&per_rank), 12);
+        assert_eq!(n.p2p(&[]), 0.0);
+        assert_eq!(n.p2p_volume(&[]), 0);
     }
 
     #[test]

@@ -1,0 +1,891 @@
+//! Transport seam: the boundary where communication either *charges*
+//! analytic α–β time (simulation) or *moves real bytes* between ranks.
+//!
+//! [`Transport`] exposes the two collective shapes the HOOI driver uses —
+//! per-rank [`p2p`](Transport::p2p) exchanges and [`allreduce`](Transport::allreduce) —
+//! and returns what was *measured* ([`Measured`]) alongside the possibility
+//! of a *real* failure ([`TransportFailure`]).
+//!
+//! Two implementations:
+//!
+//! * [`SimTransport`] — the historical analytic charger. No bytes move;
+//!   "measured" is defined to equal the [`NetModel`] prediction, so every
+//!   bit-exact accounting contract from before the seam existed still holds
+//!   verbatim.
+//! * [`ChannelTransport`] — each live rank runs on its own scoped thread and
+//!   exchanges framed, sequence-numbered, checksummed payloads over
+//!   in-process channels (a ring topology). A robustness envelope watches
+//!   the exchange: per-rank heartbeats, a per-phase wall-clock deadline,
+//!   bounded retransmit with exponential backoff on checksum mismatch, and
+//!   a poisoned-drain path so a single wedged peer cannot deadlock the
+//!   collective. Detected failures are classified into the existing
+//!   [`FailureKind`] taxonomy (crash / transient / straggler) and flow into
+//!   the PR 6 recovery loop unchanged.
+//!
+//! Crucially, payload bytes never feed the numerics: factors and core are
+//! computed from the same local data under either transport, so
+//! decompositions are bit-identical across [`TransportChoice`]s. What the
+//! channel transport adds is *evidence* — measured seconds and measured
+//! units per category — which `SimCluster` reports against the α–β
+//! prediction as `net_model_error`.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::fault::FailureKind;
+use super::net::NetModel;
+
+/// Which transport a cluster runs its collectives on.
+///
+/// Resolved with the usual precedence: typed builder option >
+/// `TUCKER_TRANSPORT` env var > default ([`Sim`](TransportChoice::Sim)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportChoice {
+    /// Analytic α–β charging only; no bytes move. The historical behavior.
+    #[default]
+    Sim,
+    /// In-process channel transport: real framed bytes, checksums,
+    /// heartbeats, deadlines, retry/backoff.
+    Channel,
+}
+
+impl TransportChoice {
+    /// Parse a (case-insensitive) name: `"sim"` or `"channel"`.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "sim" => Some(Self::Sim),
+            "channel" => Some(Self::Channel),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name, matching what [`by_name`](Self::by_name) accepts.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Sim => "sim",
+            Self::Channel => "channel",
+        }
+    }
+}
+
+/// Knobs for the channel transport's robustness envelope.
+///
+/// The defaults are tuned for correctness under an oversubscribed test
+/// harness: in-process exchanges complete in microseconds, so the phase
+/// deadline only matters when a peer is genuinely hung — it is deliberately
+/// generous (2 s) to keep a descheduled thread from being mistaken for a
+/// crash. Fault-detection tests tighten it explicitly.
+#[derive(Debug, Clone, Copy)]
+pub struct TransportTuning {
+    /// Seconds between heartbeat refreshes while a rank idles in its
+    /// receive loop.
+    pub heartbeat_interval: f64,
+    /// Wall-clock seconds a single collective may take before the liveness
+    /// monitor declares the slowest peer failed.
+    pub phase_deadline: f64,
+    /// Maximum retransmissions of one frame after checksum mismatch before
+    /// the error is surfaced as a transient failure.
+    pub max_retries: u32,
+    /// Base backoff in seconds; retransmission `n` sleeps
+    /// `backoff_base * 2^(n-1)`.
+    pub backoff_base: f64,
+    /// Chaos hook: corrupt the checksums of the next N physical frame
+    /// sends (retransmissions included). Consumed across collectives.
+    pub corrupt_frames: u32,
+    /// Chaos hook: delay this rank's first participation...
+    pub delay_rank: Option<usize>,
+    /// ...by this many seconds (one-shot; cleared after it fires).
+    pub delay_secs: f64,
+}
+
+impl Default for TransportTuning {
+    fn default() -> Self {
+        Self {
+            heartbeat_interval: 0.05,
+            phase_deadline: 2.0,
+            max_retries: 3,
+            backoff_base: 5e-4,
+            corrupt_frames: 0,
+            delay_rank: None,
+            delay_secs: 0.0,
+        }
+    }
+}
+
+/// Cumulative counters a transport keeps about the traffic it carried.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Completed p2p collectives.
+    pub p2p_ops: u64,
+    /// Completed allreduce collectives.
+    pub allreduce_ops: u64,
+    /// Physical frames delivered (retransmissions included).
+    pub frames_sent: u64,
+    /// Frames retransmitted after a checksum mismatch.
+    pub frames_retried: u64,
+    /// Payload units (u32 words) delivered across all frames.
+    pub payload_units: u64,
+    /// Bytes moved on the wire (headers + payload).
+    pub bytes_moved: u64,
+}
+
+/// What one collective actually cost: wall seconds and delivered units
+/// (normalized to the same per-rank convention `NetModel` predicts in).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measured {
+    /// Wall-clock seconds the collective took.
+    pub secs: f64,
+    /// Delivered payload units, normalized to `NetModel`'s convention
+    /// (total units for p2p; per-rank ring traffic for allreduce).
+    pub units: f64,
+}
+
+/// A real failure detected by the transport's liveness monitor, already
+/// classified into the injected-fault taxonomy so the recovery loop treats
+/// it identically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportFailure {
+    /// The rank held responsible (the peer everyone was waiting on, or the
+    /// rank whose frames kept failing verification).
+    pub rank: usize,
+    /// Classification: crash (no heartbeat), straggler (alive but past
+    /// deadline), or transient (retry budget exhausted).
+    pub kind: FailureKind,
+    /// Human-readable evidence for the classification.
+    pub detail: String,
+}
+
+/// The seam `SimCluster` charges communication through.
+///
+/// `p2p` models each rank exchanging `(msgs, units)` with peers; the
+/// returned [`Measured::units`] must total the per-rank sum. `allreduce`
+/// models a P-rank reduction of `units` units; measured units follow the
+/// ring convention `NetModel::allreduce_volume` predicts (`2(P-1)/P · u`).
+pub trait Transport: std::fmt::Debug + Send {
+    /// Stable name for reports ("sim", "channel").
+    fn name(&self) -> &'static str;
+
+    /// Run one per-rank point-to-point exchange phase.
+    fn p2p(
+        &mut self,
+        net: &NetModel,
+        per_rank: &[(u64, u64)],
+    ) -> Result<Measured, TransportFailure>;
+
+    /// Run one allreduce over `p` ranks of `units` units.
+    fn allreduce(&mut self, net: &NetModel, p: usize, units: u64)
+        -> Result<Measured, TransportFailure>;
+
+    /// Exclude a rank from future collectives (post-eviction).
+    fn mark_dead(&mut self, _rank: usize) {}
+
+    /// Traffic counters accumulated so far.
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+}
+
+/// Construct a boxed transport for `choice` over `p` ranks.
+pub fn from_choice(
+    choice: TransportChoice,
+    p: usize,
+    tuning: TransportTuning,
+) -> Box<dyn Transport> {
+    match choice {
+        TransportChoice::Sim => Box::new(SimTransport::new()),
+        TransportChoice::Channel => Box::new(ChannelTransport::new(p, tuning)),
+    }
+}
+
+/// The analytic charger: measured ≡ predicted, no bytes move, never fails.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimTransport {
+    stats: TransportStats,
+}
+
+impl SimTransport {
+    /// A fresh analytic transport.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Transport for SimTransport {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn p2p(
+        &mut self,
+        net: &NetModel,
+        per_rank: &[(u64, u64)],
+    ) -> Result<Measured, TransportFailure> {
+        self.stats.p2p_ops += 1;
+        Ok(Measured {
+            secs: net.p2p(per_rank),
+            units: net.p2p_volume(per_rank) as f64,
+        })
+    }
+
+    fn allreduce(
+        &mut self,
+        net: &NetModel,
+        p: usize,
+        units: u64,
+    ) -> Result<Measured, TransportFailure> {
+        self.stats.allreduce_ops += 1;
+        Ok(Measured {
+            secs: net.allreduce(p, units),
+            units: net.allreduce_volume(p, units),
+        })
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channel transport: real bytes over in-process channels.
+// ---------------------------------------------------------------------------
+
+/// Bytes of framing overhead per frame (seq + src + checksum as u64s).
+pub const FRAME_HEADER_BYTES: u64 = 24;
+
+/// One framed message: sequence number, source rank, synthesized payload,
+/// and an FNV-1a checksum over all of it.
+#[derive(Debug, Clone)]
+struct Frame {
+    seq: u64,
+    src: usize,
+    payload: Vec<u32>,
+    checksum: u64,
+}
+
+fn fnv1a_word(mut h: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn checksum_of(seq: u64, src: usize, payload: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = fnv1a_word(h, seq);
+    h = fnv1a_word(h, src as u64);
+    for &w in payload {
+        h = fnv1a_word(h, u64::from(w));
+    }
+    h
+}
+
+impl Frame {
+    /// Build frame `seq` from `src` carrying `units` deterministic payload
+    /// words. The payload content is synthetic (collectives here carry
+    /// *volume*, not numerics) but checksummed for real, so corruption on
+    /// the wire is detected exactly as it would be for meaningful bytes.
+    fn synthesize(seq: u64, src: usize, units: u64) -> Self {
+        let payload: Vec<u32> = (0..units)
+            .map(|j| {
+                (seq as u32)
+                    .wrapping_mul(0x9E37_79B9)
+                    .wrapping_add(j as u32)
+                    ^ (src as u32).rotate_left(16)
+            })
+            .collect();
+        let checksum = checksum_of(seq, src, &payload);
+        Self {
+            seq,
+            src,
+            payload,
+            checksum,
+        }
+    }
+
+    fn verify(&self) -> bool {
+        checksum_of(self.seq, self.src, &self.payload) == self.checksum
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        FRAME_HEADER_BYTES + 4 * self.payload.len() as u64
+    }
+}
+
+/// Receiver → sender acknowledgement for frame `seq`.
+#[derive(Debug, Clone, Copy)]
+struct Ack {
+    seq: u64,
+    ok: bool,
+}
+
+/// Split `(msgs, units)` into per-frame payload sizes: `max(msgs, 1)`
+/// frames (zero frames only for the `(0, 0)` no-op), units spread evenly
+/// with the remainder on the leading frames.
+fn split_frames(msgs: u64, units: u64) -> Vec<u64> {
+    if msgs == 0 && units == 0 {
+        return Vec::new();
+    }
+    let n = msgs.max(1);
+    (0..n).map(|k| units / n + u64::from(k < units % n)).collect()
+}
+
+/// Consume one unit of a shared corruption budget; returns whether the
+/// frame about to be sent should be corrupted.
+fn take_corruption(budget: &AtomicU32) -> bool {
+    let mut cur = budget.load(Ordering::Relaxed);
+    while cur > 0 {
+        match budget.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+    false
+}
+
+/// Why one rank's exchange loop gave up.
+#[derive(Debug, Clone)]
+enum RankError {
+    /// The phase deadline passed while waiting on `waiting_on`.
+    TimedOut { waiting_on: usize },
+    /// Frame `seq` to rank `peer` failed verification `attempts` times.
+    CorruptExhausted { peer: usize, seq: u64, attempts: u32 },
+}
+
+/// What one rank's exchange thread reports back.
+#[derive(Debug, Default)]
+struct RankReport {
+    frames_sent: u64,
+    frames_retried: u64,
+    bytes_moved: u64,
+    units_delivered: u64,
+    error: Option<RankError>,
+}
+
+/// Everything one rank's exchange thread needs, bundled so the spawn site
+/// stays readable.
+struct RankCtx<'a> {
+    /// This rank's world id (not ring position).
+    rank: usize,
+    tuning: TransportTuning,
+    /// One-shot startup delay for this rank, if the chaos hook armed one.
+    delay: Option<f64>,
+    /// Frame sizes this rank sends to its next ring neighbor.
+    sizes: &'a [u64],
+    /// Number of frames expected from the previous ring neighbor.
+    expected: usize,
+    to_next: mpsc::Sender<Frame>,
+    ack_to_prev: mpsc::Sender<Ack>,
+    rx: mpsc::Receiver<Frame>,
+    arx: mpsc::Receiver<Ack>,
+    beats: &'a [AtomicU64],
+    poisoned: &'a AtomicBool,
+    corrupt: &'a AtomicU32,
+    deadline: Instant,
+    peer_prev: usize,
+    peer_next: usize,
+    /// Chaos hook: a wedged rank never participates (simulated hang).
+    wedged_self: bool,
+}
+
+/// Outcome of one full ring exchange across all live ranks.
+struct ExchangeOutcome {
+    wall_secs: f64,
+    delivered_units: u64,
+    failure: Option<TransportFailure>,
+}
+
+/// In-process channel transport over the live ranks of a `p`-rank world.
+#[derive(Debug)]
+pub struct ChannelTransport {
+    p: usize,
+    tuning: TransportTuning,
+    dead: Vec<bool>,
+    wedged: Vec<bool>,
+    corrupt_budget: AtomicU32,
+    delay_pending: Option<(usize, f64)>,
+    stats: TransportStats,
+}
+
+impl ChannelTransport {
+    /// A fresh channel transport over `p` ranks, seeding the chaos hooks
+    /// (corruption budget, one-shot delay) from `tuning`.
+    pub fn new(p: usize, tuning: TransportTuning) -> Self {
+        let delay_pending = tuning
+            .delay_rank
+            .filter(|_| tuning.delay_secs > 0.0)
+            .map(|r| (r, tuning.delay_secs));
+        Self {
+            p,
+            tuning,
+            dead: vec![false; p],
+            wedged: vec![false; p],
+            corrupt_budget: AtomicU32::new(tuning.corrupt_frames),
+            delay_pending,
+            stats: TransportStats::default(),
+        }
+    }
+
+    /// Chaos hook: make `rank` stop participating in collectives without
+    /// telling anyone — a real hang, detectable only by heartbeat/deadline.
+    pub fn wedge_rank(&mut self, rank: usize) {
+        if rank < self.wedged.len() {
+            self.wedged[rank] = true;
+        }
+    }
+
+    /// Chaos hook: corrupt the checksums of the next `n` physical sends.
+    pub fn corrupt_next_frames(&mut self, n: u32) {
+        self.corrupt_budget.store(n, Ordering::Relaxed);
+    }
+
+    /// Chaos hook: delay `rank`'s next participation by `secs` (one-shot).
+    pub fn delay_rank_once(&mut self, rank: usize, secs: f64) {
+        self.delay_pending = Some((rank, secs));
+    }
+
+    /// Ranks that still participate in collectives: not dead. Wedged ranks
+    /// are *included* — they are live as far as the world knows, which is
+    /// exactly why detecting them takes a deadline.
+    fn live_ranks(&self, world: usize) -> Vec<usize> {
+        (0..world.min(self.p))
+            .filter(|&r| !self.dead.get(r).copied().unwrap_or(false))
+            .collect()
+    }
+
+    /// Run one ring exchange: live rank at position `i` sends `sizes[i]`
+    /// frames to position `(i+1) % n` and acks what it receives from
+    /// `(i-1+n) % n`. Returns wall time, total delivered payload units,
+    /// and the classified failure if the envelope tripped.
+    fn exchange(&mut self, live: &[usize], sizes: &[Vec<u64>]) -> ExchangeOutcome {
+        let n = live.len();
+        let delay = self.delay_pending.take();
+        let tuning = self.tuning;
+        let wedged = &self.wedged;
+        let corrupt = &self.corrupt_budget;
+
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_secs_f64(tuning.phase_deadline);
+        let beats: Vec<AtomicU64> = (0..self.p).map(|_| AtomicU64::new(0)).collect();
+        let poisoned = AtomicBool::new(false);
+
+        let mut data_tx = Vec::with_capacity(n);
+        let mut data_rx = Vec::with_capacity(n);
+        let mut ack_tx = Vec::with_capacity(n);
+        let mut ack_rx = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (dt, dr) = mpsc::channel::<Frame>();
+            let (at, ar) = mpsc::channel::<Ack>();
+            data_tx.push(dt);
+            data_rx.push(Some(dr));
+            ack_tx.push(at);
+            ack_rx.push(Some(ar));
+        }
+
+        let reports: Vec<RankReport> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n);
+            for (i, rx_slot) in data_rx.iter_mut().enumerate() {
+                let nx = (i + 1) % n;
+                let pv = (i + n - 1) % n;
+                let rank = live[i];
+                let ctx = RankCtx {
+                    rank,
+                    tuning,
+                    delay: delay.filter(|&(r, _)| r == rank).map(|(_, secs)| secs),
+                    sizes: &sizes[i],
+                    expected: sizes[pv].len(),
+                    to_next: data_tx[nx].clone(),
+                    ack_to_prev: ack_tx[pv].clone(),
+                    rx: rx_slot.take().expect("receiver taken once"),
+                    arx: ack_rx[i].take().expect("ack receiver taken once"),
+                    beats: &beats,
+                    poisoned: &poisoned,
+                    corrupt,
+                    deadline,
+                    peer_prev: live[pv],
+                    peer_next: live[nx],
+                    wedged_self: wedged.get(rank).copied().unwrap_or(false),
+                };
+                handles.push(s.spawn(move || run_rank(ctx)));
+            }
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => RankReport {
+                        error: Some(RankError::TimedOut { waiting_on: 0 }),
+                        ..RankReport::default()
+                    },
+                })
+                .collect()
+        });
+        let wall_secs = t0.elapsed().as_secs_f64();
+
+        let mut delivered_units = 0u64;
+        for r in &reports {
+            self.stats.frames_sent += r.frames_sent;
+            self.stats.frames_retried += r.frames_retried;
+            self.stats.bytes_moved += r.bytes_moved;
+            self.stats.payload_units += r.units_delivered;
+            delivered_units += r.units_delivered;
+        }
+
+        // Classify. A corruption-budget exhaustion anywhere is transient
+        // (the data kept arriving, just damaged); otherwise blame the peer
+        // the earliest-timed-out rank was waiting on, and distinguish
+        // crash (never heartbeated) from straggler (alive but late).
+        let mut failure = None;
+        for (i, r) in reports.iter().enumerate() {
+            if let Some(RankError::CorruptExhausted {
+                peer,
+                seq,
+                attempts,
+            }) = r.error
+            {
+                failure = Some(TransportFailure {
+                    rank: live[i],
+                    kind: FailureKind::Transient,
+                    detail: format!(
+                        "checksum mismatch persisted through {attempts} retransmissions \
+                         of frame {seq} to rank {peer}"
+                    ),
+                });
+                break;
+            }
+        }
+        if failure.is_none() {
+            let mut culprit: Option<usize> = None;
+            for r in &reports {
+                if let Some(RankError::TimedOut { waiting_on }) = r.error {
+                    culprit = Some(match culprit {
+                        Some(c) => c.min(waiting_on),
+                        None => waiting_on,
+                    });
+                }
+            }
+            if let Some(c) = culprit {
+                let beat_seen = beats.get(c).is_some_and(|b| b.load(Ordering::Relaxed) > 0);
+                failure = Some(if beat_seen {
+                    TransportFailure {
+                        rank: c,
+                        kind: FailureKind::StragglerTimeout,
+                        detail: format!(
+                            "rank {c} heartbeating but past the {:.3}s phase deadline",
+                            tuning.phase_deadline
+                        ),
+                    }
+                } else {
+                    TransportFailure {
+                        rank: c,
+                        kind: FailureKind::Crash,
+                        detail: format!(
+                            "rank {c} sent no heartbeat within the {:.3}s phase deadline",
+                            tuning.phase_deadline
+                        ),
+                    }
+                });
+            }
+        }
+
+        ExchangeOutcome {
+            wall_secs,
+            delivered_units,
+            failure,
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn name(&self) -> &'static str {
+        "channel"
+    }
+
+    fn p2p(
+        &mut self,
+        net: &NetModel,
+        per_rank: &[(u64, u64)],
+    ) -> Result<Measured, TransportFailure> {
+        let live = self.live_ranks(per_rank.len().max(self.p));
+        if live.len() <= 1 {
+            // Nothing to exchange with; measured ≡ predicted by definition.
+            self.stats.p2p_ops += 1;
+            return Ok(Measured {
+                secs: net.p2p(per_rank),
+                units: net.p2p_volume(per_rank) as f64,
+            });
+        }
+        let sizes: Vec<Vec<u64>> = live
+            .iter()
+            .map(|&r| {
+                let (m, u) = per_rank.get(r).copied().unwrap_or((0, 0));
+                split_frames(m, u)
+            })
+            .collect();
+        let out = self.exchange(&live, &sizes);
+        match out.failure {
+            Some(f) => Err(f),
+            None => {
+                self.stats.p2p_ops += 1;
+                Ok(Measured {
+                    secs: out.wall_secs,
+                    units: out.delivered_units as f64,
+                })
+            }
+        }
+    }
+
+    fn allreduce(
+        &mut self,
+        net: &NetModel,
+        p: usize,
+        units: u64,
+    ) -> Result<Measured, TransportFailure> {
+        let live = self.live_ranks(p);
+        let l = live.len();
+        if l <= 1 || units == 0 {
+            self.stats.allreduce_ops += 1;
+            return Ok(Measured {
+                secs: net.allreduce(p, units),
+                units: net.allreduce_volume(p, units),
+            });
+        }
+        // Ring allreduce: units split into l blocks; 2(l-1) steps of
+        // reduce-scatter + allgather, each step moving one block to the
+        // next neighbor. Total wire traffic is exactly 2(l-1) · units / l
+        // per rank — the quantity `NetModel::allreduce_volume` predicts.
+        let lu = l as u64;
+        let steps = 2 * (lu - 1);
+        let sizes: Vec<Vec<u64>> = (0..lu)
+            .map(|i| {
+                (0..steps)
+                    .map(|k| units / lu + u64::from((i + k) % lu < units % lu))
+                    .collect()
+            })
+            .collect();
+        let out = self.exchange(&live, &sizes);
+        match out.failure {
+            Some(f) => Err(f),
+            None => {
+                self.stats.allreduce_ops += 1;
+                Ok(Measured {
+                    secs: out.wall_secs,
+                    units: out.delivered_units as f64 / l as f64,
+                })
+            }
+        }
+    }
+
+    fn mark_dead(&mut self, rank: usize) {
+        if rank >= self.dead.len() {
+            self.dead.resize(rank + 1, false);
+            self.wedged.resize(rank + 1, false);
+        }
+        self.dead[rank] = true;
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+/// One rank's side of the exchange: pipeline all sends up front (channels
+/// are unbounded, so sends never block), then poll data + ack channels,
+/// heartbeating while idle and bailing out on poison or deadline. This
+/// shape is deadlock-free by construction — no rank ever blocks waiting
+/// for an ack before servicing its own receive side.
+fn run_rank(ctx: RankCtx<'_>) -> RankReport {
+    let mut report = RankReport::default();
+    if ctx.wedged_self {
+        // A wedged rank is a silent hang: it holds its channels open (a
+        // hung peer's sockets do not close) but never heartbeats, sends,
+        // or acks — detectable only by the deadline monitor.
+        while !ctx.poisoned.load(Ordering::Relaxed) && Instant::now() < ctx.deadline {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        return report;
+    }
+    ctx.beats[ctx.rank].fetch_add(1, Ordering::Relaxed);
+    if let Some(secs) = ctx.delay {
+        std::thread::sleep(Duration::from_secs_f64(secs));
+    }
+
+    // Send every outgoing frame immediately; keep copies for retransmit.
+    let frames: Vec<Frame> = ctx
+        .sizes
+        .iter()
+        .enumerate()
+        .map(|(k, &u)| Frame::synthesize(k as u64, ctx.rank, u))
+        .collect();
+    let mut attempts: Vec<u32> = vec![0; frames.len()];
+    let mut acked: Vec<bool> = vec![false; frames.len()];
+    for f in &frames {
+        let mut wire = f.clone();
+        if take_corruption(ctx.corrupt) {
+            wire.checksum ^= 0xDEAD_BEEF;
+        }
+        report.frames_sent += 1;
+        report.bytes_moved += wire.wire_bytes();
+        if ctx.to_next.send(wire).is_err() {
+            // Peer's receiver dropped: it already bailed; poison flag or
+            // deadline below will end this loop.
+            ctx.poisoned.store(true, Ordering::Relaxed);
+        }
+    }
+
+    let mut got: Vec<bool> = vec![false; ctx.expected];
+    let mut got_count = 0usize;
+    let mut acked_count = 0usize;
+    let mut last_beat = Instant::now();
+    let beat_every = Duration::from_secs_f64(ctx.tuning.heartbeat_interval);
+
+    loop {
+        if ctx.poisoned.load(Ordering::Relaxed) {
+            return report;
+        }
+        let mut progressed = false;
+
+        // Drain incoming data frames: verify, ack/nack, count first-valid.
+        while let Ok(frame) = ctx.rx.try_recv() {
+            progressed = true;
+            let ok = frame.verify();
+            let _ = ctx.ack_to_prev.send(Ack {
+                seq: frame.seq,
+                ok,
+            });
+            let k = frame.seq as usize;
+            if ok && k < got.len() && !got[k] {
+                got[k] = true;
+                got_count += 1;
+                report.units_delivered += frame.payload.len() as u64;
+            }
+        }
+
+        // Drain acks: mark clean deliveries, retransmit on nack with
+        // exponential backoff, give up past the retry budget.
+        while let Ok(ack) = ctx.arx.try_recv() {
+            progressed = true;
+            let k = ack.seq as usize;
+            if k >= frames.len() {
+                continue;
+            }
+            if ack.ok {
+                if !acked[k] {
+                    acked[k] = true;
+                    acked_count += 1;
+                }
+            } else {
+                attempts[k] += 1;
+                if attempts[k] > ctx.tuning.max_retries {
+                    ctx.poisoned.store(true, Ordering::Relaxed);
+                    report.error = Some(RankError::CorruptExhausted {
+                        peer: ctx.peer_next,
+                        seq: ack.seq,
+                        attempts: attempts[k],
+                    });
+                    return report;
+                }
+                let backoff =
+                    ctx.tuning.backoff_base * f64::from(1u32 << (attempts[k] - 1).min(16));
+                std::thread::sleep(Duration::from_secs_f64(backoff));
+                let mut wire = frames[k].clone();
+                if take_corruption(ctx.corrupt) {
+                    wire.checksum ^= 0xDEAD_BEEF;
+                }
+                report.frames_sent += 1;
+                report.frames_retried += 1;
+                report.bytes_moved += wire.wire_bytes();
+                if ctx.to_next.send(wire).is_err() {
+                    ctx.poisoned.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+
+        if acked_count == frames.len() && got_count == ctx.expected {
+            return report;
+        }
+
+        if !progressed {
+            // Idle: refresh our heartbeat (throttled) and check the
+            // phase deadline against whoever we are still waiting on.
+            if last_beat.elapsed() >= beat_every {
+                ctx.beats[ctx.rank].fetch_add(1, Ordering::Relaxed);
+                last_beat = Instant::now();
+            }
+            if Instant::now() >= ctx.deadline {
+                ctx.poisoned.store(true, Ordering::Relaxed);
+                report.error = Some(RankError::TimedOut {
+                    waiting_on: if got_count < ctx.expected {
+                        ctx.peer_prev
+                    } else {
+                        ctx.peer_next
+                    },
+                });
+                return report;
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_roundtrip_and_corruption_detection() {
+        let f = Frame::synthesize(3, 1, 16);
+        assert!(f.verify());
+        let mut bad = f.clone();
+        bad.checksum ^= 0xDEAD_BEEF;
+        assert!(!bad.verify());
+        let mut flipped = f.clone();
+        flipped.payload[7] ^= 1;
+        assert!(!flipped.verify());
+    }
+
+    #[test]
+    fn split_frames_spreads_units_evenly() {
+        assert!(split_frames(0, 0).is_empty());
+        assert_eq!(split_frames(0, 5), vec![5]);
+        assert_eq!(split_frames(3, 7), vec![3, 2, 2]);
+        assert_eq!(split_frames(4, 8), vec![2, 2, 2, 2]);
+        let total: u64 = split_frames(7, 23).iter().sum();
+        assert_eq!(total, 23);
+    }
+
+    #[test]
+    fn choice_by_name_is_case_insensitive() {
+        assert_eq!(TransportChoice::by_name("sim"), Some(TransportChoice::Sim));
+        assert_eq!(
+            TransportChoice::by_name("CHANNEL"),
+            Some(TransportChoice::Channel)
+        );
+        assert_eq!(TransportChoice::by_name("tcp"), None);
+        assert_eq!(TransportChoice::default().name(), "sim");
+    }
+
+    #[test]
+    fn corruption_budget_is_consumed_exactly() {
+        let budget = AtomicU32::new(2);
+        assert!(take_corruption(&budget));
+        assert!(take_corruption(&budget));
+        assert!(!take_corruption(&budget));
+        assert!(!take_corruption(&budget));
+    }
+
+    #[test]
+    fn sim_transport_measures_the_model_exactly() {
+        let net = NetModel::default();
+        let mut t = SimTransport::new();
+        let per_rank = [(2u64, 100u64), (1, 50), (3, 10)];
+        let m = t.p2p(&net, &per_rank).expect("sim p2p never fails");
+        assert_eq!(m.secs, net.p2p(&per_rank));
+        assert_eq!(m.units, net.p2p_volume(&per_rank) as f64);
+        let a = t.allreduce(&net, 4, 64).expect("sim allreduce never fails");
+        assert_eq!(a.secs, net.allreduce(4, 64));
+        assert_eq!(a.units, net.allreduce_volume(4, 64));
+        assert_eq!(t.stats().p2p_ops, 1);
+        assert_eq!(t.stats().allreduce_ops, 1);
+    }
+}

@@ -696,7 +696,7 @@ impl HooiState {
                     lanczos_svd(&oracle, st.k_n, engine, cluster, &mut self.rng)?
                 };
                 // --- factor-matrix transfer for the next TTM ---
-                cluster.p2p(cat::COMM_FM, &st.fm.per_rank);
+                cluster.p2p(cat::COMM_FM, &st.fm.per_rank)?;
                 self.factors[n] = res.factor;
                 self.last_sigma = res.sigma;
                 if n == ndim - 1 {
@@ -760,7 +760,7 @@ impl HooiState {
                     }
                 }
             })?;
-            cluster.allreduce(cat::COMM_COMMON, (k_last * kh_last) as u64);
+            cluster.allreduce(cat::COMM_COMMON, (k_last * kh_last) as u64)?;
         }
 
         // fit via ‖T‖² − ‖G‖² (orthonormal factors)

@@ -131,7 +131,7 @@ impl<'a> Oracle<'a> {
                 out[l as usize] += partial[r];
             }
         }
-        cluster.p2p(cat::COMM_SVD, &self.x_comm);
+        cluster.p2p(cat::COMM_SVD, &self.x_comm)?;
         Ok(out)
     }
 
@@ -144,7 +144,7 @@ impl<'a> Oracle<'a> {
         cluster: &mut SimCluster,
     ) -> Result<Vec<f32>, RankFailure> {
         debug_assert_eq!(y.len(), self.l_n);
-        cluster.p2p(cat::COMM_SVD, &self.y_comm);
+        cluster.p2p(cat::COMM_SVD, &self.y_comm)?;
         let mut out = vec![0.0f32; self.khat];
         let query = |rank: usize| {
             let local = &self.locals[rank];
@@ -163,7 +163,7 @@ impl<'a> Oracle<'a> {
         for partial in &partials {
             axpy(1.0, partial, &mut out);
         }
-        cluster.allreduce(cat::COMM_COMMON, self.khat as u64);
+        cluster.allreduce(cat::COMM_COMMON, self.khat as u64)?;
         Ok(out)
     }
 }
@@ -223,7 +223,7 @@ pub fn lanczos_svd(
         let alpha = norm2(&u);
         cluster.charge_balanced(cat::SVD, t0.elapsed().as_secs_f64());
         // dots/norms on distributed vectors: one fused allreduce per iter
-        cluster.allreduce(cat::COMM_COMMON, us.len() as u64 + 1);
+        cluster.allreduce(cat::COMM_COMMON, us.len() as u64 + 1)?;
         if alpha < eps {
             vs.pop();
             break;

@@ -279,10 +279,8 @@ impl PlacementPlan {
 /// Implementations override [`policies`](Scheme::policies) — the raw
 /// per-mode assignment construction. Callers should use
 /// [`plan`](Scheme::plan), which wraps the policies into a cost-modeled
-/// [`PlacementPlan`]; [`distribute`](Scheme::distribute) survives as a
-/// thin shim over `policies` for the pre-plan call sites (the figure
-/// harness, the legacy `run_scheme` path) and is deprecated in favor of
-/// `plan` — see the README's deprecation path.
+/// [`PlacementPlan`], or call `policies` directly when the raw
+/// [`Distribution`] suffices.
 pub trait Scheme {
     fn name(&self) -> &'static str;
     fn uni(&self) -> bool;
@@ -314,23 +312,6 @@ pub trait Scheme {
         model: &CostModel,
     ) -> PlacementPlan {
         PlacementPlan::compile(self.policies(t, idx, p, rng), idx, ks, model)
-    }
-
-    /// Deprecated shim over [`Scheme::policies`] — kept one release so
-    /// out-of-tree callers stay source-compatible. New code should call
-    /// [`Scheme::plan`] (or [`Scheme::policies`] when the raw
-    /// distribution suffices).
-    #[deprecated(
-        note = "call Scheme::plan (or Scheme::policies for the raw Distribution)"
-    )]
-    fn distribute(
-        &self,
-        t: &SparseTensor,
-        idx: &[SliceIndex],
-        p: usize,
-        rng: &mut Rng,
-    ) -> Distribution {
-        self.policies(t, idx, p, rng)
     }
 }
 
@@ -439,11 +420,11 @@ mod tests {
         }
         assert!(plan.cost.secs_per_sweep > 0.0);
         assert_eq!(plan.cost.per_mode.len(), 3);
-        // the shim and the plan build the same policies from the same rng
+        // raw policies and the plan build the same assignment from the
+        // same rng (plan is a pure wrapper over policies)
         let mut rng_a = Rng::new(7);
         let mut rng_b = Rng::new(7);
-        #[allow(deprecated)]
-        let d = Lite.distribute(&t, &idx, 4, &mut rng_a);
+        let d = Lite.policies(&t, &idx, 4, &mut rng_a);
         let p2 = Lite.plan(&t, &idx, 4, &mut rng_b, &[4, 4, 4], &model);
         for (a, b) in d.policies.iter().zip(&p2.dist.policies) {
             assert_eq!(a.assign, b.assign);

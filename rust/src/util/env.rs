@@ -15,10 +15,14 @@
 //! [`resolve`] implements that table; the typed accessors below it are
 //! the per-variable entry points the rest of the crate uses.
 
+use crate::dist::transport::TransportChoice;
+
 /// Microkernel override: `scalar|portable|avx2|neon` (`hooi::Kernel`).
 pub const KERNEL: &str = "TUCKER_KERNEL";
 /// Rank executor override: `serial|parallel` (`dist::SimCluster`).
 pub const PHASE_EXECUTOR: &str = "TUCKER_PHASE_EXECUTOR";
+/// Communication transport override: `sim|channel` (`dist::transport`).
+pub const TRANSPORT: &str = "TUCKER_TRANSPORT";
 /// Fig 17 accounting override: `coo|plan` (`hooi::TensorAccounting`).
 pub const MEM_ACCOUNTING: &str = "TUCKER_MEM_ACCOUNTING";
 /// PJRT artifact directory (`runtime::artifacts`).
@@ -106,6 +110,13 @@ fn parse_executor(s: &str) -> Option<bool> {
     }
 }
 
+/// [`TRANSPORT`] as a [`TransportChoice`] (`option` from the session
+/// builder; env accepts `sim` / `channel`; default: `Sim` — the analytic
+/// charger, the historical behavior).
+pub fn transport_choice(option: Option<TransportChoice>) -> TransportChoice {
+    resolve(option, TRANSPORT, TransportChoice::by_name, TransportChoice::default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,5 +187,50 @@ mod tests {
         // only exercise the Some(..) arm, which never touches it.
         assert!(phase_executor_parallel(Some(true)));
         assert!(!phase_executor_parallel(Some(false)));
+    }
+
+    #[test]
+    fn transport_precedence_typed_env_default() {
+        // typed option beats a valid env value
+        let got = resolve_with(
+            Some(TransportChoice::Sim),
+            TRANSPORT,
+            Some("channel".to_string()),
+            TransportChoice::by_name,
+            TransportChoice::default,
+        );
+        assert_eq!(got, TransportChoice::Sim);
+        // valid env value beats the default (case-insensitively)
+        let got = resolve_with(
+            None,
+            TRANSPORT,
+            Some("CHANNEL".to_string()),
+            TransportChoice::by_name,
+            TransportChoice::default,
+        );
+        assert_eq!(got, TransportChoice::Channel);
+        // invalid env value warns and falls back to the default
+        let got = resolve_with(
+            None,
+            TRANSPORT,
+            Some("mpi".to_string()),
+            TransportChoice::by_name,
+            TransportChoice::default,
+        );
+        assert_eq!(got, TransportChoice::Sim);
+        // unset env: the default (Sim)
+        let got = resolve_with(
+            None,
+            TRANSPORT,
+            None,
+            TransportChoice::by_name,
+            TransportChoice::default,
+        );
+        assert_eq!(got, TransportChoice::Sim);
+        // the typed accessor's Some(..) arm never reads the environment
+        assert_eq!(
+            transport_choice(Some(TransportChoice::Channel)),
+            TransportChoice::Channel
+        );
     }
 }

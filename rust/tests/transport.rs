@@ -1,0 +1,266 @@
+//! Transport seam end-to-end: the channel transport's *measured* byte
+//! volumes must match the α–β `NetModel`'s unit accounting exactly
+//! (p2p) / to rounding (allreduce); corrupted frames retransmit
+//! transparently inside the retry budget and surface as a transient
+//! failure past it; a really hung rank — no `FaultPlan` involvement —
+//! is detected by the heartbeat/deadline monitor, classified as a
+//! crash, and recovered **bit-identically** to the equivalent injected
+//! crash; and full sessions land the same bits under both transports
+//! while `RunRecord::net_model_error` reports the prediction gap.
+
+use tucker_lite::coordinator::{TuckerSession, TuckerSessionBuilder, Workload};
+use tucker_lite::dist::{
+    ChannelTransport, FailureKind, FaultPlan, NetModel, Transport, TransportChoice,
+    TransportTuning,
+};
+use tucker_lite::hooi::CoreRanks;
+use tucker_lite::tensor::SparseTensor;
+use tucker_lite::util::rng::Rng;
+
+fn workload(dims: Vec<u32>, nnz: usize, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed);
+    Workload::from_tensor("transport", SparseTensor::random(dims, nnz, &mut rng))
+}
+
+fn builder(w: &Workload, p: usize, k: usize, sweeps: usize) -> TuckerSessionBuilder {
+    TuckerSession::builder(w.clone())
+        .ranks(p)
+        .core(CoreRanks::Uniform(k))
+        .invocations(sweeps)
+        .seed(17)
+}
+
+/// Deadline tight enough that a wedged peer is detected fast, but far
+/// above the microseconds a healthy in-process exchange takes.
+fn tight(deadline: f64) -> TransportTuning {
+    TransportTuning { phase_deadline: deadline, ..TransportTuning::default() }
+}
+
+/// Property: the channel p2p moves *exactly* the units `NetModel::p2p_volume`
+/// accounts — the frames are real, so the measurement is a count, not a model.
+#[test]
+fn channel_p2p_units_match_net_model_volume_exactly() {
+    let net = NetModel::default();
+    let configs: Vec<Vec<(u64, u64)>> = vec![
+        vec![(2, 100), (1, 50), (3, 10), (1, 0)],
+        vec![(1, 7), (2, 9)],
+        vec![(1, 1), (0, 0), (4, 33)],
+        vec![(3, 17), (1, 5), (2, 12), (1, 8), (1, 3)],
+    ];
+    let mut expected_total = 0u64;
+    let mut t = ChannelTransport::new(8, TransportTuning::default());
+    for per_rank in &configs {
+        let m = t.p2p(&net, per_rank).expect("healthy exchange");
+        let vol = net.p2p_volume(per_rank);
+        assert_eq!(m.units, vol as f64, "per_rank {per_rank:?}");
+        assert!(m.secs > 0.0, "real wall time was spent");
+        expected_total += vol;
+    }
+    let stats = t.stats();
+    assert_eq!(stats.p2p_ops, configs.len() as u64);
+    assert_eq!(stats.payload_units, expected_total);
+    assert_eq!(stats.frames_retried, 0);
+    // headers cost 24 bytes per frame on top of 4 bytes per unit
+    assert_eq!(
+        stats.bytes_moved,
+        4 * stats.payload_units + 24 * stats.frames_sent
+    );
+}
+
+/// Property: the channel ring allreduce delivers `2(P−1)·u` units in
+/// total, i.e. `NetModel::allreduce_volume`'s `2(P−1)/P·u` per rank (to
+/// f64 rounding — the two divide in different orders).
+#[test]
+fn channel_allreduce_units_match_net_model_volume() {
+    let net = NetModel::default();
+    for p in [2usize, 3, 4, 8] {
+        for units in [1u64, 5, 64, 1000] {
+            let mut t = ChannelTransport::new(p, TransportTuning::default());
+            let m = t.allreduce(&net, p, units).expect("healthy allreduce");
+            let want = net.allreduce_volume(p, units);
+            assert!(
+                (m.units - want).abs() <= 1e-9 * want.max(1.0),
+                "p {p} units {units}: measured {} predicted {want}",
+                m.units
+            );
+            // the raw wire count is exact: 2(P−1) ring steps of u/P each
+            assert_eq!(
+                t.stats().payload_units,
+                2 * (p as u64 - 1) * units,
+                "p {p} units {units}"
+            );
+        }
+    }
+}
+
+/// A corrupted frame is nacked, retransmitted once, and the collective
+/// still completes with exact unit accounting — corruption inside the
+/// retry budget is invisible to the caller.
+#[test]
+fn corrupted_frame_retries_transparently() {
+    let net = NetModel::default();
+    let mut t = ChannelTransport::new(3, TransportTuning::default());
+    t.corrupt_next_frames(1);
+    let per_rank = [(2u64, 10u64), (1, 5), (1, 3)];
+    let m = t.p2p(&net, &per_rank).expect("retry absorbs the corruption");
+    assert_eq!(m.units, net.p2p_volume(&per_rank) as f64);
+    let stats = t.stats();
+    assert_eq!(stats.frames_retried, 1, "exactly one retransmission");
+    assert_eq!(stats.frames_sent, 4 + 1, "4 frames + 1 retransmit");
+}
+
+/// Corruption persisting past `max_retries` surfaces as a transient
+/// failure blaming the affected link — and the *next* collective on the
+/// same transport (budget exhausted) completes cleanly: the failure
+/// really was transient.
+#[test]
+fn corruption_past_retry_budget_is_a_transient_failure() {
+    let net = NetModel::default();
+    let tuning = TransportTuning { max_retries: 2, ..TransportTuning::default() };
+    let mut t = ChannelTransport::new(2, tuning);
+    // one frame in flight total, so all 3 corruptions hit the same frame:
+    // original + 2 retransmissions all fail verification → budget spent
+    t.corrupt_next_frames(3);
+    let per_rank = [(1u64, 8u64), (0, 0)];
+    let f = t.p2p(&net, &per_rank).expect_err("retry budget exhausted");
+    assert_eq!(f.kind, FailureKind::Transient, "{}", f.detail);
+    assert!(f.detail.contains("checksum"), "{}", f.detail);
+    assert_eq!(t.stats().frames_retried, 2);
+    // clean retry of the whole collective succeeds
+    let m = t.p2p(&net, &per_rank).expect("clean retry");
+    assert_eq!(m.units, 8.0);
+}
+
+/// A wedged (silently hung, never heartbeating) rank is detected by the
+/// phase deadline and classified as a crash; after `mark_dead` the
+/// survivors exchange without it.
+#[test]
+fn wedged_rank_is_detected_as_a_crash_and_survivors_continue() {
+    let net = NetModel::default();
+    let mut t = ChannelTransport::new(3, tight(0.05));
+    t.wedge_rank(1);
+    let per_rank = [(1u64, 4u64), (1, 4), (1, 4)];
+    let f = t.p2p(&net, &per_rank).expect_err("hung peer detected");
+    assert_eq!(f.rank, 1, "{}", f.detail);
+    assert_eq!(f.kind, FailureKind::Crash, "{}", f.detail);
+    // evict the hung rank: the survivor ring completes
+    t.mark_dead(1);
+    let survivors = [(1u64, 4u64), (0, 0), (1, 4)];
+    let m = t.p2p(&net, &survivors).expect("survivors exchange");
+    assert_eq!(m.units, 8.0);
+}
+
+/// A rank that heartbeats but exceeds the phase deadline is classified
+/// as a straggler timeout — alive is distinguishable from dead — and
+/// the one-shot delay clears, so the retry completes.
+#[test]
+fn delayed_rank_is_a_straggler_timeout_and_retry_succeeds() {
+    let net = NetModel::default();
+    let mut t = ChannelTransport::new(3, tight(0.05));
+    t.delay_rank_once(1, 0.25);
+    let per_rank = [(1u64, 4u64), (1, 4), (1, 4)];
+    let f = t.p2p(&net, &per_rank).expect_err("straggler past deadline");
+    assert_eq!(f.rank, 1, "{}", f.detail);
+    assert_eq!(f.kind, FailureKind::StragglerTimeout, "{}", f.detail);
+    assert!(f.detail.contains("heartbeating"), "{}", f.detail);
+    let m = t.p2p(&net, &per_rank).expect("delay was one-shot");
+    assert_eq!(m.units, 12.0);
+}
+
+/// Tentpole bit-identity: a full session — decompose, planned eviction,
+/// continue — lands the same factor/core bits whether communication is
+/// analytically charged or really moved, because the predicted α–β cost
+/// is what feeds the accounting under both transports. The channel run
+/// additionally reports a nonzero prediction gap; the sim run's gap is
+/// exactly zero by definition.
+#[test]
+fn sessions_are_bit_identical_across_transports() {
+    let w = workload(vec![12, 10, 8], 220, 3);
+    let run = |choice: TransportChoice| {
+        let mut s = builder(&w, 4, 2, 2).transport(choice).build().unwrap();
+        let first = s.decompose();
+        s.evict_rank(1).expect("3 survivors");
+        let second = s.decompose_more(1);
+        (first, second)
+    };
+    let (sim_a, sim_b) = run(TransportChoice::Sim);
+    let (ch_a, ch_b) = run(TransportChoice::Channel);
+    for (x, y) in [(&sim_a, &ch_a), (&sim_b, &ch_b)] {
+        for (n, (fx, fy)) in x.factors.iter().zip(&y.factors).enumerate() {
+            assert_eq!(fx.data, fy.data, "mode {n} factor bits diverge");
+        }
+        assert_eq!(x.core.data, y.core.data, "core bits diverge");
+        assert_eq!(x.record.fit.to_bits(), y.record.fit.to_bits());
+        // the paper-facing accounting is transport-invariant too
+        assert_eq!(x.record.hooi_secs.to_bits(), y.record.hooi_secs.to_bits());
+        assert_eq!(x.record.comm_secs.to_bits(), y.record.comm_secs.to_bits());
+    }
+    assert_eq!(sim_a.record.transport, "sim");
+    assert_eq!(ch_a.record.transport, "channel");
+    // sim: measured is defined as the prediction
+    assert!(!sim_a.record.net_model_error.is_empty());
+    for (cat, err) in &sim_a.record.net_model_error {
+        assert_eq!(*err, 0.0, "sim category {cat}");
+    }
+    // channel: real wall time was measured against the α–β prediction
+    assert!(!ch_a.record.net_model_error.is_empty());
+    assert!(ch_a.record.net_model_error.iter().all(|(_, e)| e.is_finite()));
+    assert!(
+        ch_a.record.net_model_error.iter().any(|(_, e)| *e != 0.0),
+        "a real exchange never lands exactly on the analytic prediction"
+    );
+}
+
+/// Acceptance: a *real* hung rank — wedged transport endpoint, zero
+/// injected faults — is detected by the heartbeat/deadline monitor,
+/// classified as a crash, evicted, and the recovered decomposition is
+/// bit-identical both to the equivalent `FaultPlan`-injected crash and
+/// to a planned eviction at the same rollback boundary.
+#[test]
+fn real_hung_rank_recovers_bit_identically_to_injected_crash() {
+    const VICTIM: usize = 2;
+    let w = workload(vec![12, 10, 8], 220, 3);
+
+    // planned eviction before the first sweep (the sweep-0 rollback
+    // boundary is the bootstrap)
+    let mut base = builder(&w, 4, 2, 2).transport(TransportChoice::Sim).build().unwrap();
+    base.evict_rank(VICTIM).expect("3 survivors");
+    let want = base.decompose();
+
+    // injected crash in sweep 0 under the analytic transport
+    let mut inj = builder(&w, 4, 2, 2)
+        .transport(TransportChoice::Sim)
+        .fault_plan(FaultPlan::new().crash_at(0, 0, VICTIM))
+        .build()
+        .unwrap();
+    let got_inj = inj.try_decompose().expect("injected crash recovers");
+    assert_eq!(inj.faults_injected(), 1);
+
+    // the real thing: rank 2 hangs silently inside the channel transport;
+    // no FaultPlan is armed anywhere
+    let mut real = builder(&w, 4, 2, 2)
+        .transport(TransportChoice::Channel)
+        .transport_tuning(tight(0.1))
+        .build()
+        .unwrap();
+    real.wedge_rank(VICTIM);
+    let got_real = real.try_decompose().expect("real hang recovers");
+
+    assert_eq!(real.faults_injected(), 0, "no injector involved");
+    assert_eq!(real.dead_ranks(), vec![VICTIM]);
+    assert!(real.recoveries() >= 1);
+    assert!(real.placement().scheme().ends_with("+evict"));
+    assert!(got_real.record.recovery_secs > 0.0);
+    // the dead rank owns nothing after survivor re-placement
+    for pol in &real.placement().dist.policies {
+        assert!(pol.assign.iter().all(|&r| r != VICTIM as u32));
+    }
+
+    for other in [&got_inj, &got_real] {
+        for (n, (a, b)) in want.factors.iter().zip(&other.factors).enumerate() {
+            assert_eq!(a.data, b.data, "mode {n} factor bits diverge");
+        }
+        assert_eq!(want.core.data, other.core.data, "core bits diverge");
+        assert_eq!(want.record.fit.to_bits(), other.record.fit.to_bits());
+    }
+}
