@@ -76,7 +76,7 @@ fn main() {
         let idx: Vec<usize> = (0..t.ndim()).map(|m| t.coord(m, 0) as usize).collect();
         (idx, t.vals[0])
     };
-    let approx = refined.reconstruct_at(&coords);
+    let approx = refined.reconstruct_at(&coords).expect("stored coords are in range");
     println!("reconstruct{coords:?} = {approx:.3} (stored {val:.3})");
     println!("quickstart OK");
 }

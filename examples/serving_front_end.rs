@@ -1,0 +1,135 @@
+//! Serving front end: one coordinator, three tenants, one budget.
+//!
+//!     cargo run --release --example serving_front_end
+//!
+//! Admits three tenant sessions into a `ServeCoordinator` under a shared
+//! worker-thread and snapshot-memory budget, then interleaves the two
+//! sides of a serving deployment: streaming ingest mutating each live
+//! session while point-query batches and top-K scans are answered from
+//! the published snapshots. Queries always see one consistent
+//! sweep-boundary generation — ingest only surfaces after the next
+//! decompose republishes — and the per-tenant `ServeRecord` at the end
+//! shows exactly that lag, alongside throughput telemetry.
+
+use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
+use tucker_lite::hooi::CoreRanks;
+use tucker_lite::serve::{QueryBatch, ServeBudget, ServeCoordinator};
+use tucker_lite::tensor::synth::{generate, ModeDist};
+use tucker_lite::tensor::TensorDelta;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::{fmt_si, Table};
+
+fn tenant_session(name: &str, zipf: f64, nnz: usize, seed: u64) -> TuckerSession {
+    let modes = vec![
+        ModeDist { len: 300, zipf },
+        ModeDist { len: 200, zipf: 0.0 },
+        ModeDist { len: 80, zipf: 0.4 },
+    ];
+    let tensor = generate(&modes, nnz, seed);
+    TuckerSession::builder(Workload::from_tensor(name, tensor))
+        .scheme(SchemeChoice::Lite)
+        .ranks(4)
+        .core(CoreRanks::Uniform(6))
+        .seed(seed)
+        .build()
+        .expect("valid tenant session")
+}
+
+fn main() {
+    // 1. one global budget across every tenant: 8 worker threads, 32 MiB
+    //    of resident snapshots, engine batches capped at 256 queries
+    let budget =
+        ServeBudget { worker_threads: 8, snapshot_bytes: 32 * 1024 * 1024, max_batch: 256 };
+    let mut coord = ServeCoordinator::new(budget);
+    println!(
+        "budget: {} threads, {} snapshot bytes, max batch {}",
+        budget.worker_threads, budget.snapshot_bytes, budget.max_batch
+    );
+
+    // 2. admit three tenants with different reservations; a fourth that
+    //    would oversubscribe the thread budget is turned away with a
+    //    typed error and its session handed back untouched
+    let tenants = ["ads", "search", "recs"];
+    for (i, name) in tenants.iter().enumerate() {
+        coord
+            .admit(name, tenant_session(name, 0.3 * i as f64, 20_000 + 5_000 * i, 7 + i as u64), 2, 8 * 1024 * 1024)
+            .unwrap_or_else(|(_, e)| panic!("{name}: {e}"));
+    }
+    let (rejected, err) = coord
+        .admit("latecomer", tenant_session("latecomer", 0.0, 5_000, 42), 4, 1024)
+        .unwrap_err();
+    println!("admission: {:?} admitted; latecomer rejected: {err}", coord.tenants());
+    drop(rejected); // the caller keeps the session and can retry smaller
+
+    // 3. first sweep for everyone: decompose publishes the generation-1
+    //    serving snapshot per tenant
+    for name in &tenants {
+        let snap = coord.decompose(name).expect("first decompose");
+        println!("{name}: published generation {} (fit {:.3})", snap.generation(), snap.fit());
+    }
+
+    // 4. interleaved serving and ingest: each round streams a delta into
+    //    every session (snapshots keep serving the old generation), runs
+    //    a query batch plus a top-K scan, then republishes
+    let mut rng = Rng::new(0xFE);
+    for round in 0..3 {
+        for name in &tenants {
+            let dims = coord.session(name).unwrap().workload().tensor.dims.clone();
+            let mut delta = TensorDelta::new();
+            for _ in 0..1_500 {
+                let coord_idx: Vec<u32> =
+                    dims.iter().map(|&l| rng.below(l as u64) as u32).collect();
+                delta = delta.append(&coord_idx, rng.f32());
+            }
+            coord.ingest(name, &delta).expect("in-bounds delta");
+
+            let mut batch = QueryBatch::new();
+            for _ in 0..600 {
+                let idx: Vec<usize> =
+                    dims.iter().map(|&l| rng.usize_below(l as usize)).collect();
+                batch.add(&idx);
+            }
+            let vals = coord.query(name, &batch).expect("served from the resident snapshot");
+            assert_eq!(vals.len(), batch.len());
+            let top = coord.top_k(name, 0, rng.usize_below(dims[0] as usize), 5).expect("top-k");
+            assert_eq!(top.len(), 5);
+            // mid-round the snapshot lags the mutated session by design
+            assert!(coord.record(name).unwrap().generation_lag() >= 1);
+        }
+        // republish: the next decompose folds the ingested deltas in
+        for name in &tenants {
+            coord.decompose(name).expect("republish");
+        }
+        println!("round {round}: ingested, served, republished for all tenants");
+    }
+
+    // 5. the per-tenant serving record: throughput, batch shape, latency
+    //    quantiles, and how far serving lagged the live session
+    let mut t = Table::new(
+        "per-tenant serving records",
+        &["tenant", "queries", "batches", "mean batch", "top-K", "p50 µs", "p99 µs", "gen lag", "resident gens"],
+    );
+    for name in &tenants {
+        let gens = coord.resident_generations(name);
+        let rec = coord.record(name).unwrap();
+        t.row(vec![
+            name.to_string(),
+            fmt_si(rec.queries_served as f64),
+            rec.batches.to_string(),
+            format!("{:.0}", rec.mean_batch()),
+            rec.topk_queries.to_string(),
+            format!("{:.1}", rec.p50_latency() * 1e6),
+            format!("{:.1}", rec.p99_latency() * 1e6),
+            rec.generation_lag().to_string(),
+            format!("{gens:?}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "coordinator: {} / {} threads reserved, {} resident snapshot bytes",
+        coord.threads_reserved(),
+        budget.worker_threads,
+        coord.resident_bytes()
+    );
+    println!("serving_front_end OK");
+}

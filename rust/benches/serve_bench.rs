@@ -1,0 +1,159 @@
+//! Serving-path throughput: queries/sec for point reconstruction over a
+//! synthetic Tucker model, three ways —
+//!
+//!   - scalar loop: one `reconstruct_at` per query (the oracle recomputes
+//!     the K_{N−1}×K̂ core contraction for every query);
+//!   - batched scalar: `reconstruct_batch` under `TUCKER_KERNEL=scalar` —
+//!     the slice-grouped engine, amortizing the core contraction across
+//!     every query in the same mode-(N−1) slice;
+//!   - batched SIMD: the same engine through the detected lane-blocked
+//!     microkernel (avx2 / neon / portable).
+//!
+//! All three produce bit-identical results (asserted here, and
+//! property-tested in tests/serve.rs); the acceptance bar is batched ≥4×
+//! the scalar loop. Emits BENCH_serve.json (and results/serve_bench.csv).
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use tucker_lite::hooi::Kernel;
+use tucker_lite::linalg::Mat;
+use tucker_lite::serve::{DecompositionSnapshot, QueryBatch};
+use tucker_lite::util::json::Json;
+use tucker_lite::util::rng::Rng;
+use tucker_lite::util::table::{fmt_si, Table};
+
+fn random_model(rng: &mut Rng, dims: &[usize], ks: &[usize]) -> DecompositionSnapshot {
+    let factors: Vec<Mat> = dims
+        .iter()
+        .zip(ks)
+        .map(|(&l, &k)| {
+            let mut m = Mat::zeros(l, k);
+            for v in m.data.iter_mut() {
+                *v = rng.f32() * 2.0 - 1.0;
+            }
+            m
+        })
+        .collect();
+    let n = ks.len();
+    let kh: usize = ks[..n - 1].iter().product();
+    let mut core = Mat::zeros(ks[n - 1], kh);
+    for v in core.data.iter_mut() {
+        *v = rng.f32() * 2.0 - 1.0;
+    }
+    DecompositionSnapshot::from_parts(factors, core, vec![1.0; ks[n - 1]], 0.9, 1, 1)
+}
+
+fn time_qps(queries: usize, reps: usize, f: &mut dyn FnMut()) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    (queries * reps) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let quick = common::bench_quick();
+    // last-mode extent deliberately « query count: real serving load
+    // concentrates many queries per slice, which is exactly what the
+    // batch engine amortizes
+    let (dims, ks, nq, reps) = if quick {
+        (vec![120usize, 80, 16], vec![8usize, 6, 8], 4_000usize, 3usize)
+    } else {
+        (vec![1200, 800, 48], vec![12, 12, 16], 24_000, 5)
+    };
+    let mut rng = Rng::new(0x5E2E);
+    let snap = random_model(&mut rng, &dims, &ks);
+    let mut batch = QueryBatch::new();
+    for _ in 0..nq {
+        let idx: Vec<usize> = dims.iter().map(|&l| rng.usize_below(l)).collect();
+        batch.add(&idx);
+    }
+    let simd = Kernel::detect();
+    eprintln!(
+        "# serve_bench: dims={dims:?} K={ks:?} queries={nq} reps={reps} simd={}",
+        simd.name()
+    );
+
+    // bit-exactness first: the perf numbers only count if every path
+    // returns the same bits
+    let oracle: Vec<f32> =
+        batch.queries().iter().map(|q| snap.reconstruct_at(q).unwrap()).collect();
+    for kernel in [Kernel::Scalar, simd] {
+        let got = snap.reconstruct_batch_with(&batch, kernel).unwrap();
+        for (a, b) in got.iter().zip(&oracle) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "batched ({}) diverged from the scalar oracle",
+                kernel.name()
+            );
+        }
+    }
+
+    let scalar_loop = time_qps(nq, reps, &mut || {
+        for q in batch.queries() {
+            std::hint::black_box(snap.reconstruct_at(q).unwrap());
+        }
+    });
+    let batched_scalar = time_qps(nq, reps, &mut || {
+        std::hint::black_box(snap.reconstruct_batch_with(&batch, Kernel::Scalar).unwrap());
+    });
+    let batched_simd = time_qps(nq, reps, &mut || {
+        std::hint::black_box(snap.reconstruct_batch_with(&batch, simd).unwrap());
+    });
+
+    let speedup_batched = batched_scalar / scalar_loop;
+    let speedup_simd = batched_simd / scalar_loop;
+    let mut t = Table::new(
+        "serve_bench: point-query throughput",
+        &["path", "kernel", "queries/sec", "vs scalar loop"],
+    );
+    t.row(vec!["scalar loop".into(), "scalar".into(), fmt_si(scalar_loop), "1.00x".into()]);
+    t.row(vec![
+        "batched".into(),
+        "scalar".into(),
+        fmt_si(batched_scalar),
+        format!("{speedup_batched:.2}x"),
+    ]);
+    t.row(vec![
+        "batched".into(),
+        simd.name().into(),
+        fmt_si(batched_simd),
+        format!("{speedup_simd:.2}x"),
+    ]);
+    t.print();
+    if let Ok(p) = t.save_csv("serve_bench") {
+        eprintln!("# csv: {}", p.display());
+    }
+
+    let mut qps = Json::obj();
+    qps.set("scalar_loop", Json::Num(scalar_loop))
+        .set("batched_scalar", Json::Num(batched_scalar))
+        .set("batched_simd", Json::Num(batched_simd));
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("serve".into()))
+        .set("quick", Json::Bool(quick))
+        .set("dims", Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()))
+        .set("core", Json::Arr(ks.iter().map(|&k| Json::Num(k as f64)).collect()))
+        .set("queries", Json::Num(nq as f64))
+        .set("simd_kernel", Json::Str(simd.name().into()))
+        .set("qps", qps)
+        .set("speedup_batched_vs_scalar_loop", Json::Num(speedup_batched))
+        .set("speedup_simd_vs_scalar_loop", Json::Num(speedup_simd))
+        .set("bit_exact", Json::Bool(true));
+    std::fs::write("BENCH_serve.json", j.render()).expect("write BENCH_serve.json");
+    eprintln!("# json: BENCH_serve.json");
+
+    // the quick config is a CI smoke on noisy shared runners — hold it to
+    // a softer bar than the full-size acceptance threshold
+    let bar = if quick { 1.5 } else { 4.0 };
+    assert!(
+        speedup_batched >= bar,
+        "batched engine must beat the scalar loop by ≥{bar}x, got {speedup_batched:.2}x"
+    );
+    println!("serve_bench OK");
+}

@@ -215,11 +215,13 @@ impl SessionCheckpoint {
 
 /// f32 slice → JSON array of bit patterns. A u32 fits an f64 mantissa
 /// exactly, so `Num(bits as f64)` is lossless and renders as an integer.
-fn bits_arr(xs: &[f32]) -> Json {
+/// Shared with `serve::snapshot`, which serializes under the same
+/// bit-exact discipline.
+pub(crate) fn bits_arr(xs: &[f32]) -> Json {
     Json::Arr(xs.iter().map(|x| Json::Num(x.to_bits() as f64)).collect())
 }
 
-fn parse_bits_arr(j: &Json) -> Result<Vec<f32>, String> {
+pub(crate) fn parse_bits_arr(j: &Json) -> Result<Vec<f32>, String> {
     match j {
         Json::Arr(xs) => xs
             .iter()
@@ -235,7 +237,7 @@ fn parse_bits_arr(j: &Json) -> Result<Vec<f32>, String> {
     }
 }
 
-fn get_usize(j: &Json, key: &str) -> Result<usize, String> {
+pub(crate) fn get_usize(j: &Json, key: &str) -> Result<usize, String> {
     j.get(key)
         .and_then(Json::as_f64)
         .map(|v| v as usize)

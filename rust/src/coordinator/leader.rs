@@ -134,6 +134,7 @@ impl Workload {
 }
 
 /// Consolidated measurements of one (workload, scheme, P, core) run.
+#[derive(Debug, Clone)]
 pub struct RunRecord {
     pub workload: String,
     pub scheme: String,

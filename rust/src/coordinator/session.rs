@@ -138,6 +138,7 @@ use crate::hooi::{
 use crate::linalg::Mat;
 use crate::runtime::Engine;
 use crate::sched::{self, CostModel, DistTime, Distribution, PlacementPlan, Scheme};
+use crate::serve::{DecompositionSnapshot, QueryBatch, QueryError, TopEntry};
 use crate::tensor::slices::build_all;
 use crate::tensor::{DeltaError, TensorDelta};
 use crate::util::rng::Rng;
@@ -618,6 +619,8 @@ impl TuckerSessionBuilder {
             last_snap: None,
             last_checkpoint: None,
             state: None,
+            generation: 0,
+            snapshot: None,
         })
     }
 }
@@ -679,6 +682,28 @@ pub struct TuckerSession {
     /// The last policy-due serialized checkpoint (observable artifact).
     last_checkpoint: Option<SessionCheckpoint>,
     state: Option<HooiState>,
+    /// Monotone mutation counter: bumped on every ingest, rebalance,
+    /// eviction, restore, and completed decompose — the provenance
+    /// stamp on published [`DecompositionSnapshot`]s.
+    generation: u64,
+    /// The latest snapshot published at a sweep boundary. Readers hold
+    /// their own `Arc` clones; publication never blocks them.
+    snapshot: Option<Arc<DecompositionSnapshot>>,
+}
+
+/// Summary form only: a session owns compiled plans and engine state
+/// far too large to dump — shown are the identity and the counters a
+/// serving layer cares about.
+impl std::fmt::Debug for TuckerSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TuckerSession")
+            .field("workload", &self.workload.name)
+            .field("ks", &self.ks)
+            .field("generation", &self.generation)
+            .field("plan_builds", &self.plan_builds)
+            .field("has_snapshot", &self.snapshot.is_some())
+            .finish_non_exhaustive()
+    }
 }
 
 impl TuckerSession {
@@ -1204,6 +1229,8 @@ impl TuckerSession {
         }
         self.plan_rebuilds += report.plans_spliced + report.plans_rebuilt;
         self.pending_ingest_secs += report.rebuild_secs;
+        // the tensor mutated: published snapshots now lag the session
+        self.generation += 1;
         // 4. keep the plan's §4 provenance (metrics, cost) tracking the
         // live placement, then close the rebalance loop per policy
         if structural {
@@ -1391,6 +1418,7 @@ impl TuckerSession {
         };
         self.rebalances += 1;
         report.migrated = true;
+        self.generation += 1;
         // revalidate: a fresh Lite mode satisfies Theorem 6.1, so this
         // normally clears; a mode left un-replanned keeps its flag
         self.pending_rebalance = (0..t.ndim())
@@ -1479,6 +1507,7 @@ impl TuckerSession {
             serial_secs: old_time.serial_secs + t0.elapsed().as_secs_f64(),
             simulated_secs: old_time.simulated_secs + migration_sim,
         };
+        self.generation += 1;
         (migration_sim, rebuild_secs)
     }
 
@@ -1587,7 +1616,25 @@ impl TuckerSession {
             }
         }
         self.last_snap = Some(snap);
+        self.generation += 1;
         Ok(())
+    }
+
+    /// Monotone mutation counter: how many times this session's
+    /// logical state has advanced (ingest, rebalance, eviction,
+    /// restore, completed decompose). The provenance stamp on
+    /// published snapshots — `generation() −
+    /// snapshot.generation()` is the staleness of the serving view.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The snapshot published at the last completed
+    /// decompose/refine, if any. Cloning the `Arc` is the whole read
+    /// path — the returned view never changes, no matter what the
+    /// session does next, and holding it never blocks the session.
+    pub fn latest_snapshot(&self) -> Option<Arc<DecompositionSnapshot>> {
+        self.snapshot.clone()
     }
 
     fn finish(&mut self, mut cluster: SimCluster) -> Result<Decomposition, SessionError> {
@@ -1645,12 +1692,22 @@ impl TuckerSession {
         record.recovery_secs = self.recovery_secs_total;
         record.checkpoint_secs = self.checkpoint_secs_total;
         record.checkpoint_bytes = self.checkpoint_bytes_total;
-        Ok(Decomposition {
+        let d = Decomposition {
             factors: out.factors,
             core: out.core,
             sigma: out.sigma,
             record,
-        })
+        };
+        // publish the sweep-boundary snapshot: readers holding older
+        // Arc clones keep serving their generation untouched
+        self.generation += 1;
+        let sweep = self.state.as_ref().map(|s| s.sweep()).unwrap_or(0);
+        self.snapshot = Some(Arc::new(DecompositionSnapshot::from_decomposition(
+            &d,
+            self.generation,
+            sweep,
+        )));
+        Ok(d)
     }
 }
 
@@ -1696,6 +1753,7 @@ impl IngestReport {
 /// A finished (possibly still refinable) Tucker decomposition: the
 /// factor matrices, the core tensor, and the consolidated
 /// [`RunRecord`] (fit, timings, metrics) of the run that produced it.
+#[derive(Debug, Clone)]
 pub struct Decomposition {
     /// Factor matrices F_n (L_n × K_n), orthonormal columns (surplus
     /// columns are zero in the K_n > L_n degenerate regime — see
@@ -1743,31 +1801,62 @@ impl Decomposition {
 
     /// Reconstruct one tensor entry:
     /// X[i] = Σ_{j} G[j] · Π_n F_n[i_n, j_n]. A point query costs
-    /// O(Π K_n) — intended for spot checks and residual sampling, not
-    /// densification.
-    pub fn reconstruct_at(&self, idx: &[usize]) -> f32 {
-        let dims = self.core_dims();
-        let n = dims.len();
-        assert_eq!(idx.len(), n, "tensor index arity");
-        let kh: usize = dims[..n - 1].iter().product();
-        let f_last = self.factors[n - 1].row(idx[n - 1]);
-        let mut acc = 0.0f32;
-        for col in 0..kh {
-            // decode col into (j_0, …, j_{N−2}), earliest mode fastest
-            let mut rest = col;
-            let mut w = 1.0f32;
-            for m in 0..n - 1 {
-                let jm = rest % dims[m];
-                rest /= dims[m];
-                w *= self.factors[m].row(idx[m])[jm];
-            }
-            if w != 0.0 {
-                for (j_last, &fl) in f_last.iter().enumerate() {
-                    acc += self.core.get(j_last, col) * w * fl;
-                }
-            }
-        }
-        acc
+    /// O(Π K_n) — intended for spot checks and residual sampling; use
+    /// [`reconstruct_batch`](Decomposition::reconstruct_batch) for
+    /// query traffic. Wrong arity or an out-of-range coordinate
+    /// returns a typed [`QueryError`] instead of panicking — this is
+    /// the scalar oracle the batched serving engine is pinned
+    /// bit-exactly against.
+    pub fn reconstruct_at(&self, idx: &[usize]) -> Result<f32, QueryError> {
+        crate::serve::query::reconstruct_at(&self.factors, &self.core, idx)
+    }
+
+    /// Evaluate a batch of point queries with the host-detected
+    /// kernel: queries sharing a mode-(N−1) slice share one core
+    /// contraction and each evaluates as a Kronecker-chain GEMV
+    /// through the lane-blocked microkernels. Bit-identical to calling
+    /// [`reconstruct_at`](Decomposition::reconstruct_at) per query.
+    pub fn reconstruct_batch(&self, batch: &QueryBatch) -> Result<Vec<f32>, QueryError> {
+        self.reconstruct_batch_with(batch, Kernel::from_env())
+    }
+
+    /// [`reconstruct_batch`](Decomposition::reconstruct_batch) under
+    /// an explicit microkernel.
+    pub fn reconstruct_batch_with(
+        &self,
+        batch: &QueryBatch,
+        kernel: Kernel,
+    ) -> Result<Vec<f32>, QueryError> {
+        crate::serve::query::reconstruct_batch(
+            &self.factors,
+            &self.core,
+            batch.queries(),
+            kernel,
+        )
+    }
+
+    /// The `k` largest reconstructed entries of the mode-`mode` slice
+    /// at coordinate `index`, best first (value descending, ties by
+    /// ascending index). Host-detected kernel.
+    pub fn top_k_per_slice(
+        &self,
+        mode: usize,
+        index: usize,
+        k: usize,
+    ) -> Result<Vec<TopEntry>, QueryError> {
+        self.top_k_per_slice_with(mode, index, k, Kernel::from_env())
+    }
+
+    /// [`top_k_per_slice`](Decomposition::top_k_per_slice) under an
+    /// explicit microkernel.
+    pub fn top_k_per_slice_with(
+        &self,
+        mode: usize,
+        index: usize,
+        k: usize,
+        kernel: Kernel,
+    ) -> Result<Vec<TopEntry>, QueryError> {
+        crate::serve::topk::top_k_per_slice(&self.factors, &self.core, mode, index, k, kernel)
     }
 }
 

@@ -361,6 +361,46 @@ pub fn expand_tile(k: Kernel, coeffs: &[f32], acc: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Storing variant of [`expand_tile`] (`=` instead of `+=`): the
+/// Kronecker-weight builder of the serving query engine
+/// (`serve::query`). Every lane is a *pure product* `coeffs[c]·acc[i]`
+/// — a single IEEE rounding on every kernel (including the FMA tiles,
+/// which only fuse multiply-*add*s) — so the output is bit-identical
+/// across Scalar/Portable/AVX2/NEON. Tile contract as in [`Tile`]
+/// (the scalar arm alone accepts any `acc` length).
+pub fn expand_store_tile(k: Kernel, coeffs: &[f32], acc: &[f32], out: &mut [f32]) {
+    match k.resolve() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Kernel::Avx2 => Avx2Tile::expand_store(coeffs, acc, out),
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Kernel::Neon => NeonTile::expand_store(coeffs, acc, out),
+        Kernel::Scalar => {
+            for (&c, seg) in coeffs.iter().zip(out.chunks_exact_mut(acc.len())) {
+                for (s, &a) in seg.iter_mut().zip(acc) {
+                    *s = c * a;
+                }
+            }
+        }
+        _ => PortableTile::expand_store(coeffs, acc, out),
+    }
+}
+
+/// `y += a·x` over slices of *any* equal length: the whole-[`LANES`]
+/// prefix runs through the tiled kernel, the remainder through the
+/// scalar tail — the K̂-tiled scatter-add of `flush_contrib_batch`
+/// (K̂ is not lane-padded there). With `a == 1.0` the result is
+/// bit-identical to the plain scalar loop on every kernel: FMA computes
+/// `round(y + 1·x) = round(y + x)`, the same single rounding as the
+/// scalar add, and the operation is element-wise (no reassociation).
+pub fn axpy_any(k: Kernel, a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let split = x.len() - x.len() % LANES;
+    axpy_tile(k, a, &x[..split], &mut y[..split]);
+    for (yi, &xi) in y[split..].iter_mut().zip(&x[split..]) {
+        *yi += a * xi;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -438,6 +478,50 @@ mod tests {
             }
         }
         assert!(Kernel::from_env().available());
+    }
+
+    #[test]
+    fn expand_store_is_bit_identical_across_kernels() {
+        // pure products round once everywhere — the serve-engine
+        // contract expand_store_tile's docs state
+        let (x, _) = tile_inputs(3 * LANES, 11);
+        let coeffs = [0.5f32, -1.75, 3.1415];
+        let mut want = vec![f32::NAN; coeffs.len() * x.len()];
+        expand_store_tile(Kernel::Scalar, &coeffs, &x, &mut want);
+        for k in [Kernel::Portable, Kernel::detect()] {
+            let mut got = vec![f32::NAN; coeffs.len() * x.len()];
+            expand_store_tile(k, &coeffs, &x, &mut got);
+            let same = want
+                .iter()
+                .zip(&got)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "kernel {}", k.name());
+        }
+    }
+
+    #[test]
+    fn axpy_any_handles_ragged_lengths() {
+        for n in [1usize, 7, LANES, LANES + 3, 4 * LANES + 5] {
+            let (x, y0) = tile_inputs(n, 5);
+            // a == 1.0: bit-identical to the scalar loop on every kernel
+            let mut want = y0.clone();
+            axpy_any(Kernel::Scalar, 1.0, &x, &mut want);
+            for k in [Kernel::Portable, Kernel::detect()] {
+                let mut got = y0.clone();
+                axpy_any(k, 1.0, &x, &mut got);
+                let same = want
+                    .iter()
+                    .zip(&got)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "n {n}, kernel {}", k.name());
+            }
+            // general a: numerically close (FMA may round differently)
+            let mut want = y0.clone();
+            axpy_any(Kernel::Scalar, 0.3, &x, &mut want);
+            let mut got = y0;
+            axpy_any(Kernel::detect(), 0.3, &x, &mut got);
+            assert_close(&got, &want);
+        }
     }
 
     #[test]

@@ -845,7 +845,11 @@ impl TtmPlan {
     /// searches, targets come straight from the run walk). Runs the
     /// padding check in `flush_contrib_batch` strictly: with the
     /// lane-blocked layout a violated val==0 contract is a data-layout
-    /// bug, not a debug-only hazard.
+    /// bug, not a debug-only hazard. The gather is run-tiled (slow
+    /// factor rows hoisted out of the element loop) and the scatter-add
+    /// into Z runs K̂-tiled through the workspace kernel — both
+    /// bit-neutral: the element order and the a == 1.0 axpy rounding
+    /// are unchanged.
     pub fn assemble_batched(
         &self,
         factors: &[Mat],
@@ -868,34 +872,71 @@ impl TtmPlan {
             return LocalZ { rows: self.rows.clone(), z };
         }
         let bsz = engine.ttm_batch_size(ndim, k);
+        let kern = ws.kernel;
         ws.ensure_batch(bsz, k);
         let PlanWorkspace { rows_a, rows_b, rows_c, bvals, targets, .. } = ws;
-        let (oa, ob) = (self.others[0], self.others[1]);
-        let oc = if ndim == 4 { self.others[2] } else { 0 };
+        let (fm_a, fm_b) = (&factors[self.others[0]], &factors[self.others[1]]);
+        let fm_c = if ndim == 4 { Some(&factors[self.others[2]]) } else { None };
         let mut fill = 0usize;
-        self.for_each_element(|r, ia, ib, ic, v| {
-            rows_a[fill * k..(fill + 1) * k]
-                .copy_from_slice(factors[oa].row(ia as usize));
-            rows_b[fill * k..(fill + 1) * k]
-                .copy_from_slice(factors[ob].row(ib as usize));
-            if ndim == 4 {
-                rows_c[fill * k..(fill + 1) * k]
-                    .copy_from_slice(factors[oc].row(ic as usize));
+        // tiled gather: walk the run streams directly so the slow
+        // factor rows (b, and c for 4-D) are looked up once per run and
+        // copied sequentially from a hot source — only the fast-mode
+        // row gather stays per-element. The element order is exactly
+        // `for_each_element`'s, so batch boundaries (and therefore the
+        // engine outputs) are unchanged.
+        for r in 0..self.rows.len() {
+            let (lo, hi) = (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
+            if let Some(fm_c) = fm_c {
+                for oj in lo..hi {
+                    let rc = fm_c.row(self.outer_c[oj] as usize);
+                    let (jlo, jhi) =
+                        (self.outer_ptr[oj] as usize, self.outer_ptr[oj + 1] as usize);
+                    for j in jlo..jhi {
+                        let rb = fm_b.row(self.run_b[j] as usize);
+                        let s0 = self.slot_ptr[j] as usize;
+                        for s in s0..s0 + self.run_len[j] as usize {
+                            rows_a[fill * k..(fill + 1) * k]
+                                .copy_from_slice(fm_a.row(self.fa[s] as usize));
+                            rows_b[fill * k..(fill + 1) * k].copy_from_slice(rb);
+                            rows_c[fill * k..(fill + 1) * k].copy_from_slice(rc);
+                            bvals[fill] = self.vals[s];
+                            targets[fill] = r as u32;
+                            fill += 1;
+                            if fill == bsz {
+                                flush_contrib_batch(
+                                    engine, ndim, k, kh, fill, rows_a, rows_b,
+                                    rows_c, bvals, targets, &mut z, true, kern,
+                                );
+                                fill = 0;
+                            }
+                        }
+                    }
+                }
+            } else {
+                for j in lo..hi {
+                    let rb = fm_b.row(self.run_b[j] as usize);
+                    let s0 = self.slot_ptr[j] as usize;
+                    for s in s0..s0 + self.run_len[j] as usize {
+                        rows_a[fill * k..(fill + 1) * k]
+                            .copy_from_slice(fm_a.row(self.fa[s] as usize));
+                        rows_b[fill * k..(fill + 1) * k].copy_from_slice(rb);
+                        bvals[fill] = self.vals[s];
+                        targets[fill] = r as u32;
+                        fill += 1;
+                        if fill == bsz {
+                            flush_contrib_batch(
+                                engine, ndim, k, kh, fill, rows_a, rows_b, rows_c,
+                                bvals, targets, &mut z, true, kern,
+                            );
+                            fill = 0;
+                        }
+                    }
+                }
             }
-            bvals[fill] = v;
-            targets[fill] = r as u32;
-            fill += 1;
-            if fill == bsz {
-                flush_contrib_batch(
-                    engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals,
-                    targets, &mut z, true,
-                );
-                fill = 0;
-            }
-        });
+        }
         flush_contrib_batch(
             engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals, targets,
-            &mut z, true,
+            &mut z, true, kern,
         );
         LocalZ { rows: self.rows.clone(), z }
     }

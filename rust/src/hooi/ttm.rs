@@ -33,7 +33,8 @@
 //!   the same `z` as this module's element-order path, which therefore
 //!   stays as the correctness oracle (tests/plan_equivalence.rs).
 
-use crate::linalg::{axpy, Mat};
+use super::kernel::{axpy_any, Kernel};
+use crate::linalg::Mat;
 use crate::runtime::Engine;
 use crate::tensor::SparseTensor;
 
@@ -124,14 +125,14 @@ pub fn assemble_local_z(
         if fill == bsz {
             flush_contrib_batch(
                 engine, ndim, k, kh, fill, &rows_a, &rows_b, &rows_c, &mut vals,
-                &targets, &mut z, false,
+                &targets, &mut z, false, Kernel::Scalar,
             );
             fill = 0;
         }
     }
     flush_contrib_batch(
         engine, ndim, k, kh, fill, &rows_a, &rows_b, &rows_c, &mut vals,
-        &targets, &mut z, false,
+        &targets, &mut z, false, Kernel::Scalar,
     );
     LocalZ { rows, z }
 }
@@ -151,6 +152,14 @@ pub fn assemble_local_z(
 /// padding, and a violation there is a data-layout bug, not a
 /// debug-only hazard. (Full batches have no padded slots, so the strict
 /// check only ever scans the final partial batch.)
+///
+/// The scatter-add into Z runs K̂-tiled through `kernel`
+/// ([`axpy_any`]): whole-lane prefixes through the dispatched SIMD
+/// tile, the K̂ % LANES tail scalar. With a == 1.0 the FMA tiles round
+/// exactly like the scalar add (round(y + 1·x) = round(y + x),
+/// element-wise), so any kernel choice is bit-identical here — the
+/// legacy oracle path passes `Kernel::Scalar`, the plan layer its
+/// workspace kernel.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn flush_contrib_batch(
     engine: &Engine,
@@ -165,6 +174,7 @@ pub(crate) fn flush_contrib_batch(
     targets: &[u32],
     z: &mut Mat,
     strict: bool,
+    kernel: Kernel,
 ) {
     if fill == 0 {
         return;
@@ -194,7 +204,7 @@ pub(crate) fn flush_contrib_batch(
     }
     for i in 0..fill {
         let target = targets[i] as usize;
-        axpy(1.0, &contribs[i * kh..(i + 1) * kh], z.row_mut(target));
+        axpy_any(kernel, 1.0, &contribs[i * kh..(i + 1) * kh], z.row_mut(target));
     }
 }
 
@@ -281,7 +291,7 @@ pub fn dense_penultimate(t: &SparseTensor, mode: usize, factors: &[Mat]) -> Mat 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::orthonormal_random;
+    use crate::linalg::{axpy, orthonormal_random};
     use crate::util::rng::Rng;
 
     fn setup(dims: Vec<u32>, nnz: usize, k: usize, seed: u64) -> (SparseTensor, Vec<Mat>) {

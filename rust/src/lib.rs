@@ -73,6 +73,13 @@
 //!   SVD, factor-matrix transfer, the split driver
 //!   (`prepare_modes` + `HooiState`) the session builds on.
 //! - [`runtime`]: PJRT artifact registry + padded-batch dispatch.
+//! - [`serve`]: the query-serving layer — batched reconstruction and
+//!   top-K queries through the SIMD microkernels (pinned bit-exact to
+//!   the scalar oracle), `Arc`-published
+//!   [`serve::DecompositionSnapshot`]s with generation provenance for
+//!   consistent reads under concurrent ingest/rebalance, and the
+//!   multi-tenant [`serve::ServeCoordinator`] budgeting threads and
+//!   snapshot memory across live sessions.
 //! - [`util`]: from-scratch substrates (args, config, rng, tables) and
 //!   the one [`util::env`] front door for every `TUCKER_*` variable.
 
@@ -82,5 +89,6 @@ pub mod hooi;
 pub mod linalg;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod tensor;
 pub mod util;

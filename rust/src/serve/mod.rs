@@ -1,0 +1,31 @@
+//! Query-serving layer: the decomposition as a live, readable index.
+//!
+//! Everything upstream of this module produces a Tucker decomposition;
+//! this module is where it gets *read* at scale, the way the DynamicCF
+//! exemplar serves recommendations from an HOSVD model:
+//!
+//! * [`query`] — the batched reconstruction engine: a [`QueryBatch`]
+//!   is grouped by mode-(N−1) slice so each group shares one core
+//!   contraction, and every query reduces to a Kronecker-chain GEMV
+//!   through the lane-blocked microkernels. Pinned **bit-identical**
+//!   to the bounds-checked per-element oracle under every kernel.
+//! * [`topk`] — bounded-heap top-K over a tensor slice, the
+//!   "best items for this user" query.
+//! * [`snapshot`] — [`DecompositionSnapshot`]: immutable
+//!   `Arc`-published views with generation provenance and bit-exact
+//!   serialization, so reads stay consistent while the session
+//!   ingests, rebalances, and refines.
+//! * [`tenant`] — [`ServeCoordinator`]: many tenants' sessions behind
+//!   one thread + snapshot-memory budget, with typed admission
+//!   rejection, LRU snapshot eviction, and per-tenant [`ServeRecord`]
+//!   telemetry.
+
+pub mod query;
+pub mod snapshot;
+pub mod tenant;
+pub mod topk;
+
+pub use query::{QueryBatch, QueryError};
+pub use snapshot::DecompositionSnapshot;
+pub use tenant::{AdmissionError, ServeBudget, ServeCoordinator, ServeError, ServeRecord};
+pub use topk::TopEntry;

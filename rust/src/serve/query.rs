@@ -1,0 +1,287 @@
+//! Batched reconstruction queries over a Tucker decomposition.
+//!
+//! A point query X[i] = Σ_j G[j] · Π_n F_n[i_n, j_n] costs O(Π K_n)
+//! when evaluated cold: the dominant term is contracting the flattened
+//! core G_(N−1) (K_{N−1} × K̂) with the last-mode factor row — K̂·K_{N−1}
+//! multiply-adds that depend only on i_{N−1}, not on the other
+//! coordinates. The batched engine exploits exactly that: queries are
+//! grouped by their mode-(N−1) slice, the per-slice core contraction
+//! `g[col] = Σ_j G[j, col]·F_{N−1}[i_{N−1}, j]` is computed once per
+//! group, and each query then reduces to a small Kronecker-chain GEMV —
+//! build the weight vector `w = ⊗_{m<N−1} F_m[i_m, :]` through the
+//! lane-blocked microkernels ([`crate::hooi::kernel`]) and take one
+//! K̂-long dot against `g`. Per-query work drops from ~K_{N−1}·K̂ to
+//! ~2·K̂ flops, and the weight build vectorizes.
+//!
+//! ## Bit-exactness contract
+//!
+//! [`reconstruct_batch`] is pinned *bit-identical* to the per-element
+//! oracle [`reconstruct_at`] under **every** kernel (tests/serve.rs).
+//! Three disciplines make that hold:
+//!
+//! 1. `g` is produced by the same scalar accumulation
+//!    ([`slice_weights`]) in both paths — computed per group in the
+//!    batch engine, per query in the oracle, but the arithmetic is the
+//!    identical sequence either way;
+//! 2. the Kronecker weights are *pure products* nested slowest-last,
+//!    `f_{N−2}·(…·(f_1·f_0))`. A lone multiply rounds once on every
+//!    kernel — the FMA tiles only fuse multiply-*adds* — so the tiled
+//!    [`expand_store_tile`](crate::hooi::kernel::expand_store_tile)
+//!    chain and the oracle's scalar nesting produce the same bits;
+//! 3. the final dot runs scalar-sequential in ascending K̂-column order
+//!    (earliest mode fastest) in both paths — no SIMD reduction, whose
+//!    reassociation would break the pin.
+
+use crate::hooi::kernel::{expand_store_tile, pad_to_lanes, Kernel};
+use crate::linalg::Mat;
+
+/// Typed contract violation of a reconstruction query. Queries never
+/// panic on bad indices — a serving front end must be able to reject a
+/// malformed request without tearing the process down.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryError {
+    /// The query index has the wrong number of coordinates.
+    Arity {
+        /// Coordinates supplied.
+        got: usize,
+        /// Tensor order of the decomposition.
+        want: usize,
+    },
+    /// A coordinate is outside its mode's extent.
+    OutOfRange {
+        /// The offending mode.
+        mode: usize,
+        /// The supplied coordinate.
+        index: usize,
+        /// The mode's extent L_n.
+        extent: usize,
+    },
+    /// A slice mode (the `mode` argument of a top-K query) is outside
+    /// the tensor order.
+    Mode {
+        /// The supplied mode.
+        got: usize,
+        /// Tensor order of the decomposition.
+        order: usize,
+    },
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::Arity { got, want } => {
+                write!(f, "query arity {got} does not match tensor order {want}")
+            }
+            QueryError::OutOfRange { mode, index, extent } => write!(
+                f,
+                "query index {index} out of range for mode {mode} (extent {extent})"
+            ),
+            QueryError::Mode { got, order } => write!(
+                f,
+                "slice mode {got} out of range for a {order}-mode decomposition"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// A batch of point-reconstruction queries, evaluated together by
+/// [`reconstruct_batch`] so queries landing on the same mode-(N−1)
+/// slice share their core contraction.
+///
+/// ```
+/// use tucker_lite::serve::QueryBatch;
+/// let batch = QueryBatch::new().push(&[0, 1, 2]).push(&[3, 1, 2]);
+/// assert_eq!(batch.len(), 2);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QueryBatch {
+    queries: Vec<Vec<usize>>,
+}
+
+impl QueryBatch {
+    /// An empty batch.
+    pub fn new() -> QueryBatch {
+        QueryBatch { queries: Vec::new() }
+    }
+
+    /// Append one query (chainable). Validation happens at evaluation
+    /// time, against the decomposition the batch is run on.
+    pub fn push(mut self, idx: &[usize]) -> QueryBatch {
+        self.queries.push(idx.to_vec());
+        self
+    }
+
+    /// Append one query in place.
+    pub fn add(&mut self, idx: &[usize]) {
+        self.queries.push(idx.to_vec());
+    }
+
+    /// Queries in insertion order — results come back in this order.
+    pub fn queries(&self) -> &[Vec<usize>] {
+        &self.queries
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+}
+
+impl From<Vec<Vec<usize>>> for QueryBatch {
+    fn from(queries: Vec<Vec<usize>>) -> QueryBatch {
+        QueryBatch { queries }
+    }
+}
+
+/// Check one query index against the decomposition's shape (arity,
+/// then per-mode extents — the factor row counts).
+pub(crate) fn validate(factors: &[Mat], idx: &[usize]) -> Result<(), QueryError> {
+    if idx.len() != factors.len() {
+        return Err(QueryError::Arity { got: idx.len(), want: factors.len() });
+    }
+    for (mode, (&i, f)) in idx.iter().zip(factors).enumerate() {
+        if i >= f.rows {
+            return Err(QueryError::OutOfRange { mode, index: i, extent: f.rows });
+        }
+    }
+    Ok(())
+}
+
+/// The per-slice core contraction shared by the oracle and the batch
+/// engine: `g[col] = Σ_j G[j, col] · f_last[j]`, accumulated in the
+/// identical scalar order in both paths (bit-exactness discipline 1).
+pub(crate) fn slice_weights(core: &Mat, f_last: &[f32], g: &mut Vec<f32>) {
+    g.clear();
+    g.resize(core.cols, 0.0);
+    for (col, slot) in g.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (j, &fl) in f_last.iter().enumerate() {
+            acc += core.get(j, col) * fl;
+        }
+        *slot = acc;
+    }
+}
+
+/// Reusable per-caller buffers for the weight build (the batch engine
+/// and the top-K scan both evaluate many queries back to back).
+#[derive(Debug, Default)]
+pub(crate) struct Scratch {
+    apad: Vec<f32>,
+    wa: Vec<f32>,
+    wb: Vec<f32>,
+}
+
+/// Evaluate one query against a precomputed slice contraction `g`:
+/// build the Kronecker weight vector of the non-last modes through the
+/// tiled microkernels, then dot it against `g` scalar-sequentially.
+/// Arithmetic order matches [`reconstruct_at`] exactly (module docs).
+pub(crate) fn eval_with_g(
+    factors: &[Mat],
+    g: &[f32],
+    idx: &[usize],
+    kernel: Kernel,
+    s: &mut Scratch,
+) -> f32 {
+    let n = factors.len();
+    let k0 = factors[0].cols;
+    let kp = pad_to_lanes(k0);
+    let Scratch { apad, wa, wb } = s;
+    // kp-padded copy of the fastest factor row: the zeroed tail keeps
+    // padded lanes at exact zero through every product
+    apad.clear();
+    apad.resize(kp, 0.0);
+    apad[..k0].copy_from_slice(factors[0].row(idx[0]));
+    let (mut cur, mut next) = (wa, wb);
+    cur.clear();
+    cur.extend_from_slice(apad);
+    for m in 1..n - 1 {
+        let fm = factors[m].row(idx[m]);
+        next.clear();
+        next.resize(fm.len() * cur.len(), 0.0);
+        expand_store_tile(kernel, fm, cur, next);
+        std::mem::swap(&mut cur, &mut next);
+    }
+    // scalar dot in ascending K̂-column order, skipping the kp padding
+    let mut acc = 0.0f32;
+    for (outer, wseg) in cur.chunks_exact(kp).enumerate() {
+        let gseg = &g[outer * k0..outer * k0 + k0];
+        for (&w, &gv) in wseg[..k0].iter().zip(gseg) {
+            acc += w * gv;
+        }
+    }
+    acc
+}
+
+/// Per-element scalar oracle: reconstruct one tensor entry,
+/// bounds-checked. This is the reference arithmetic the batch engine
+/// is pinned against — the same `g` contraction, the same
+/// slowest-last product nesting for the Kronecker weight, the same
+/// sequential dot.
+pub(crate) fn reconstruct_at(
+    factors: &[Mat],
+    core: &Mat,
+    idx: &[usize],
+) -> Result<f32, QueryError> {
+    validate(factors, idx)?;
+    let n = factors.len();
+    let mut g = Vec::new();
+    slice_weights(core, factors[n - 1].row(idx[n - 1]), &mut g);
+    let mut acc = 0.0f32;
+    for (col, &gv) in g.iter().enumerate() {
+        // decode col into (j_0, …, j_{N−2}), earliest mode fastest, and
+        // nest the weight products slowest-last: f_{N−2}·(…·(f_1·f_0))
+        let mut rest = col;
+        let j0 = rest % factors[0].cols;
+        rest /= factors[0].cols;
+        let mut w = factors[0].row(idx[0])[j0];
+        for (m, f) in factors.iter().enumerate().take(n - 1).skip(1) {
+            let jm = rest % f.cols;
+            rest /= f.cols;
+            w = f.row(idx[m])[jm] * w;
+        }
+        acc += w * gv;
+    }
+    Ok(acc)
+}
+
+/// Evaluate a batch of queries, grouped by mode-(N−1) slice so each
+/// group shares one core contraction. Results come back in input
+/// order. The whole batch is validated before anything is evaluated —
+/// an error means no query ran.
+pub(crate) fn reconstruct_batch(
+    factors: &[Mat],
+    core: &Mat,
+    queries: &[Vec<usize>],
+    kernel: Kernel,
+) -> Result<Vec<f32>, QueryError> {
+    for q in queries {
+        validate(factors, q)?;
+    }
+    let n = factors.len();
+    let b = queries.len();
+    let mut out = vec![0.0f32; b];
+    if b == 0 {
+        return Ok(out);
+    }
+    // group by the last coordinate (stable: ties keep input order)
+    let mut order: Vec<usize> = (0..b).collect();
+    order.sort_by_key(|&i| queries[i][n - 1]);
+    let mut scratch = Scratch::default();
+    let mut g: Vec<f32> = Vec::new();
+    let mut i = 0usize;
+    while i < b {
+        let last = queries[order[i]][n - 1];
+        slice_weights(core, factors[n - 1].row(last), &mut g);
+        while i < b && queries[order[i]][n - 1] == last {
+            let q = order[i];
+            out[q] = eval_with_g(factors, &g, &queries[q], kernel, &mut scratch);
+            i += 1;
+        }
+    }
+    Ok(out)
+}

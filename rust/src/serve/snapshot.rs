@@ -1,0 +1,254 @@
+//! Immutable, snapshot-consistent views of a live decomposition.
+//!
+//! A [`DecompositionSnapshot`] is published by `TuckerSession` at sweep
+//! boundaries (every successful `decompose`/`decompose_more`) as an
+//! `Arc` — readers clone the `Arc` and keep serving one consistent
+//! factor/core generation while `ingest`/`rebalance`/`decompose_more`
+//! mutate the session underneath. Readers never block writers and
+//! writers never block readers: publication swaps an `Arc`, nothing is
+//! locked, and the snapshot itself has no interior mutability.
+//!
+//! Each snapshot carries **generation provenance**: the session bumps a
+//! monotone generation counter on every mutation (ingest, rebalance,
+//! eviction, restore, sweep) and stamps the snapshot with the
+//! generation it was taken at, so a serving layer can report how far a
+//! resident snapshot lags the live session
+//! ([`ServeRecord::generation_lag`](super::ServeRecord::generation_lag)).
+//!
+//! Snapshots serialize under the same bit-exact discipline as
+//! `coordinator::checkpoint`: every f32 round-trips as its u32 bit
+//! pattern (and the f64 fit as its u64 bits), so `parse(serialize)`
+//! reproduces the snapshot exactly — including -0.0, subnormals, and
+//! values that would be perturbed by decimal formatting.
+
+use std::sync::Arc;
+
+use crate::coordinator::checkpoint::{bits_arr, get_usize, parse_bits_arr};
+use crate::coordinator::Decomposition;
+use crate::hooi::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+
+use super::query::{self, QueryBatch, QueryError};
+use super::topk::{self, TopEntry};
+
+/// Serialization format version of [`DecompositionSnapshot::serialize`].
+const SNAPSHOT_VERSION: u64 = 1;
+
+/// An immutable factor/core view frozen at one session generation.
+/// Construct via [`TuckerSession::latest_snapshot`] (the published
+/// `Arc`) or [`DecompositionSnapshot::from_decomposition`].
+///
+/// [`TuckerSession::latest_snapshot`]: crate::coordinator::TuckerSession::latest_snapshot
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecompositionSnapshot {
+    generation: u64,
+    sweep: usize,
+    fit: f64,
+    factors: Vec<Mat>,
+    core: Mat,
+    sigma: Vec<f32>,
+}
+
+impl DecompositionSnapshot {
+    /// Assemble a snapshot from raw parts — for models that did not
+    /// come out of a live session (deserialized artifacts, synthetic
+    /// benchmark models). `core` is the flattened G_(N−1)
+    /// (K_{N−1} × K̂, earliest mode fastest along the columns);
+    /// `factors[n]` is L_n × K_n. `generation` and `sweep` are caller
+    /// provenance.
+    pub fn from_parts(
+        factors: Vec<Mat>,
+        core: Mat,
+        sigma: Vec<f32>,
+        fit: f64,
+        generation: u64,
+        sweep: usize,
+    ) -> DecompositionSnapshot {
+        DecompositionSnapshot { generation, sweep, fit, factors, core, sigma }
+    }
+
+    /// Freeze a finished [`Decomposition`] into a queryable snapshot,
+    /// stamped with the given generation and sweep count. The factor
+    /// and core data are cloned — the snapshot shares nothing with the
+    /// source.
+    pub fn from_decomposition(
+        d: &Decomposition,
+        generation: u64,
+        sweep: usize,
+    ) -> DecompositionSnapshot {
+        DecompositionSnapshot {
+            generation,
+            sweep,
+            fit: d.fit(),
+            factors: d.factors.clone(),
+            core: d.core.clone(),
+            sigma: d.sigma.clone(),
+        }
+    }
+
+    /// Wrap into the `Arc` form the serving layer publishes.
+    pub fn into_shared(self) -> Arc<DecompositionSnapshot> {
+        Arc::new(self)
+    }
+
+    /// Session generation this snapshot was taken at.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// HOOI sweeps completed when the snapshot was taken.
+    pub fn sweep(&self) -> usize {
+        self.sweep
+    }
+
+    /// Fit of the decomposition at snapshot time.
+    pub fn fit(&self) -> f64 {
+        self.fit
+    }
+
+    /// Frozen factor matrices (one per mode, L_n × K_n).
+    pub fn factors(&self) -> &[Mat] {
+        &self.factors
+    }
+
+    /// Frozen flattened core, G_(N−1): K_{N−1} × K̂.
+    pub fn core(&self) -> &Mat {
+        &self.core
+    }
+
+    /// Leading singular values of the last-updated mode.
+    pub fn sigma(&self) -> &[f32] {
+        &self.sigma
+    }
+
+    /// Tensor dimensions L_n (factor row counts).
+    pub fn dims(&self) -> Vec<usize> {
+        self.factors.iter().map(|f| f.rows).collect()
+    }
+
+    /// Core ranks K_n (factor column counts).
+    pub fn core_dims(&self) -> Vec<usize> {
+        self.factors.iter().map(|f| f.cols).collect()
+    }
+
+    /// Approximate resident size in bytes — factor + core + sigma
+    /// payloads. The serving layer charges this against per-tenant
+    /// snapshot-memory quotas.
+    pub fn approx_bytes(&self) -> usize {
+        let floats = self.factors.iter().map(|f| f.data.len()).sum::<usize>()
+            + self.core.data.len()
+            + self.sigma.len();
+        floats * std::mem::size_of::<f32>() + std::mem::size_of::<DecompositionSnapshot>()
+    }
+
+    /// Reconstruct one tensor entry (bounds-checked scalar oracle).
+    pub fn reconstruct_at(&self, idx: &[usize]) -> Result<f32, QueryError> {
+        query::reconstruct_at(&self.factors, &self.core, idx)
+    }
+
+    /// Evaluate a query batch with the host-detected kernel.
+    /// Bit-identical to calling [`reconstruct_at`] per query.
+    ///
+    /// [`reconstruct_at`]: DecompositionSnapshot::reconstruct_at
+    pub fn reconstruct_batch(&self, batch: &QueryBatch) -> Result<Vec<f32>, QueryError> {
+        self.reconstruct_batch_with(batch, Kernel::from_env())
+    }
+
+    /// Evaluate a query batch under an explicit microkernel.
+    pub fn reconstruct_batch_with(
+        &self,
+        batch: &QueryBatch,
+        kernel: Kernel,
+    ) -> Result<Vec<f32>, QueryError> {
+        query::reconstruct_batch(&self.factors, &self.core, batch.queries(), kernel)
+    }
+
+    /// The `k` largest reconstructed entries of the mode-`mode` slice
+    /// at coordinate `index`, best first (host-detected kernel).
+    pub fn top_k_per_slice(
+        &self,
+        mode: usize,
+        index: usize,
+        k: usize,
+    ) -> Result<Vec<TopEntry>, QueryError> {
+        self.top_k_per_slice_with(mode, index, k, Kernel::from_env())
+    }
+
+    /// [`top_k_per_slice`](DecompositionSnapshot::top_k_per_slice)
+    /// under an explicit microkernel.
+    pub fn top_k_per_slice_with(
+        &self,
+        mode: usize,
+        index: usize,
+        k: usize,
+        kernel: Kernel,
+    ) -> Result<Vec<TopEntry>, QueryError> {
+        topk::top_k_per_slice(&self.factors, &self.core, mode, index, k, kernel)
+    }
+
+    /// Serialize to the bit-exact JSON form (module docs).
+    pub fn serialize(&self) -> String {
+        let mut j = Json::obj();
+        j.set("version", Json::Num(SNAPSHOT_VERSION as f64))
+            .set("generation", Json::Str(format!("{:016x}", self.generation)))
+            .set("sweep", Json::Num(self.sweep as f64))
+            .set("fit_bits", Json::Str(format!("{:016x}", self.fit.to_bits())))
+            .set("sigma", bits_arr(&self.sigma))
+            .set(
+                "factors",
+                Json::Arr(self.factors.iter().map(mat_json).collect()),
+            )
+            .set("core", mat_json(&self.core));
+        j.render()
+    }
+
+    /// Parse the output of [`serialize`](DecompositionSnapshot::serialize).
+    pub fn parse(text: &str) -> Result<DecompositionSnapshot, String> {
+        let j = Json::parse(text)?;
+        let version = get_usize(&j, "version")?;
+        if version as u64 != SNAPSHOT_VERSION {
+            return Err(format!("unsupported snapshot version {version}"));
+        }
+        let generation = parse_hex_u64(&j, "generation")?;
+        let sweep = get_usize(&j, "sweep")?;
+        let fit = f64::from_bits(parse_hex_u64(&j, "fit_bits")?);
+        let sigma = parse_bits_arr(j.get("sigma").ok_or("missing field 'sigma'")?)?;
+        let factors = match j.get("factors") {
+            Some(Json::Arr(fs)) => fs
+                .iter()
+                .map(parse_mat)
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => return Err("missing array field 'factors'".into()),
+        };
+        let core = parse_mat(j.get("core").ok_or("missing field 'core'")?)?;
+        Ok(DecompositionSnapshot { generation, sweep, fit, factors, core, sigma })
+    }
+}
+
+fn mat_json(m: &Mat) -> Json {
+    let mut j = Json::obj();
+    j.set("rows", Json::Num(m.rows as f64))
+        .set("cols", Json::Num(m.cols as f64))
+        .set("data", bits_arr(&m.data));
+    j
+}
+
+fn parse_mat(j: &Json) -> Result<Mat, String> {
+    let rows = get_usize(j, "rows")?;
+    let cols = get_usize(j, "cols")?;
+    let data = parse_bits_arr(j.get("data").ok_or("matrix missing 'data'")?)?;
+    if data.len() != rows * cols {
+        return Err(format!("matrix data length {} != {rows}x{cols}", data.len()));
+    }
+    Ok(Mat { rows, cols, data })
+}
+
+fn parse_hex_u64(j: &Json, key: &str) -> Result<u64, String> {
+    match j.get(key) {
+        Some(Json::Str(s)) => {
+            u64::from_str_radix(s, 16).map_err(|e| format!("bad hex field '{key}': {e}"))
+        }
+        _ => Err(format!("missing string field '{key}'")),
+    }
+}

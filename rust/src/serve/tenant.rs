@@ -1,0 +1,540 @@
+//! Multi-tenant serving coordinator: many live sessions, one budget.
+//!
+//! A [`ServeCoordinator`] owns a fleet of [`TuckerSession`]s — one per
+//! tenant — and arbitrates two global resources across them:
+//!
+//! * **worker threads** — each tenant reserves a fixed worker count at
+//!   admission; the sum across tenants can never exceed
+//!   [`ServeBudget::worker_threads`];
+//! * **resident snapshot memory** — each tenant reserves a byte quota
+//!   at admission (Σ quotas ≤ [`ServeBudget::snapshot_bytes`]), and
+//!   published [`DecompositionSnapshot`]s are cached against it with
+//!   LRU eviction of cold generations (the latest snapshot is pinned —
+//!   a tenant with any snapshot can always serve).
+//!
+//! Admission is all-or-nothing with a typed [`AdmissionError`]; a
+//! rejected tenant's session is handed back untouched. Per-tenant
+//! [`ServeRecord`]s accumulate serving telemetry: queries served,
+//! batch sizes, p50/p99 batch latency, and how far the serving
+//! snapshot's generation lags the live session.
+//!
+//! Budgets resolve through the usual typed-option > env > default
+//! precedence ([`ServeBudget::resolve`]): `TUCKER_SERVE_THREADS`,
+//! `TUCKER_SERVE_SNAPSHOT_BYTES`, `TUCKER_SERVE_BATCH`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::TuckerSession;
+use crate::hooi::kernel::Kernel;
+use crate::tensor::TensorDelta;
+use crate::util::env;
+
+use super::query::{self, QueryBatch, QueryError};
+use super::snapshot::DecompositionSnapshot;
+use super::topk::TopEntry;
+
+/// Global resource budget of a [`ServeCoordinator`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeBudget {
+    /// Worker threads available for reservation across all tenants.
+    pub worker_threads: usize,
+    /// Resident snapshot memory available for quota across all
+    /// tenants, in bytes.
+    pub snapshot_bytes: usize,
+    /// Largest query batch evaluated in one engine call; longer
+    /// batches are split into chunks of this size (results are
+    /// unaffected — queries are independent).
+    pub max_batch: usize,
+}
+
+impl ServeBudget {
+    /// Typed-option > env > default resolution for every field:
+    /// `Some(v)` wins, else `TUCKER_SERVE_THREADS` /
+    /// `TUCKER_SERVE_SNAPSHOT_BYTES` / `TUCKER_SERVE_BATCH`, else the
+    /// defaults (16 threads, 64 MiB, 1024 queries).
+    pub fn resolve(
+        worker_threads: Option<usize>,
+        snapshot_bytes: Option<usize>,
+        max_batch: Option<usize>,
+    ) -> ServeBudget {
+        ServeBudget {
+            worker_threads: env::serve_threads(worker_threads),
+            snapshot_bytes: env::serve_snapshot_bytes(snapshot_bytes),
+            max_batch: env::serve_batch(max_batch),
+        }
+    }
+
+    /// Env > default resolution (no typed overrides).
+    pub fn from_env() -> ServeBudget {
+        ServeBudget::resolve(None, None, None)
+    }
+}
+
+/// Typed admission rejection: the coordinator refuses a tenant rather
+/// than oversubscribe a budget. The session is returned untouched
+/// inside [`ServeCoordinator::admit`]'s error path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// A tenant with this name is already admitted.
+    DuplicateTenant(String),
+    /// A tenant must reserve at least one worker thread.
+    ZeroWorkers(String),
+    /// Requested workers exceed the unreserved thread budget.
+    ThreadBudget {
+        tenant: String,
+        requested: usize,
+        available: usize,
+    },
+    /// Requested snapshot quota exceeds the unreserved memory budget.
+    MemoryBudget {
+        tenant: String,
+        requested: usize,
+        available: usize,
+    },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::DuplicateTenant(t) => write!(f, "tenant '{t}' already admitted"),
+            AdmissionError::ZeroWorkers(t) => {
+                write!(f, "tenant '{t}' must reserve at least one worker thread")
+            }
+            AdmissionError::ThreadBudget { tenant, requested, available } => write!(
+                f,
+                "tenant '{tenant}' requested {requested} worker threads, {available} available"
+            ),
+            AdmissionError::MemoryBudget { tenant, requested, available } => write!(
+                f,
+                "tenant '{tenant}' requested {requested} snapshot bytes, {available} available"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Serving-path failure for an admitted (or unknown) tenant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// No tenant admitted under this name.
+    UnknownTenant(String),
+    /// The tenant has never published a snapshot — run
+    /// [`ServeCoordinator::decompose`] (or `refresh` after a direct
+    /// session decompose) first.
+    NoSnapshot(String),
+    /// The query itself violated the snapshot's shape contract.
+    Query(QueryError),
+    /// The tenant's session failed to decompose.
+    Session(String),
+    /// The tenant's session rejected the ingested delta.
+    Ingest(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownTenant(t) => write!(f, "unknown tenant '{t}'"),
+            ServeError::NoSnapshot(t) => {
+                write!(f, "tenant '{t}' has no published snapshot to serve from")
+            }
+            ServeError::Query(e) => write!(f, "query error: {e}"),
+            ServeError::Session(e) => write!(f, "session error: {e}"),
+            ServeError::Ingest(e) => write!(f, "ingest error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<QueryError> for ServeError {
+    fn from(e: QueryError) -> ServeError {
+        ServeError::Query(e)
+    }
+}
+
+/// Per-tenant serving telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct ServeRecord {
+    /// Point queries answered through the batch engine (batch
+    /// entries, summed; top-K scans count under `topk_queries`).
+    pub queries_served: u64,
+    /// Engine batches evaluated (a user batch longer than
+    /// [`ServeBudget::max_batch`] counts once per chunk).
+    pub batches: u64,
+    /// Largest engine batch evaluated.
+    pub max_batch: usize,
+    /// Top-K slice scans answered.
+    pub topk_queries: u64,
+    /// Generation of the snapshot the last query was served from.
+    pub snapshot_generation: u64,
+    /// Live session generation at that moment.
+    pub session_generation: u64,
+    /// Per-engine-call wall latencies, seconds.
+    latencies: Vec<f64>,
+}
+
+impl ServeRecord {
+    /// How many mutations the serving snapshot lags the live session.
+    pub fn generation_lag(&self) -> u64 {
+        self.session_generation.saturating_sub(self.snapshot_generation)
+    }
+
+    /// Mean queries per engine batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.queries_served as f64 / self.batches as f64
+        }
+    }
+
+    /// Median engine-call latency, seconds (0.0 before any call).
+    pub fn p50_latency(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th-percentile engine-call latency, seconds.
+    pub fn p99_latency(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.latencies.clone();
+        sorted.sort_by(f64::total_cmp);
+        let pos = (sorted.len() - 1) as f64 * q;
+        sorted[pos.round() as usize]
+    }
+
+    fn observe(&mut self, queries: usize, secs: f64) {
+        self.queries_served += queries as u64;
+        self.batches += 1;
+        self.max_batch = self.max_batch.max(queries);
+        self.latencies.push(secs);
+    }
+}
+
+/// A cached snapshot generation with its LRU stamp.
+#[derive(Debug)]
+struct CachedSnapshot {
+    snap: Arc<DecompositionSnapshot>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// One admitted tenant: its live session, reservations, resident
+/// snapshot cache (publication order, latest last), and telemetry.
+#[derive(Debug)]
+struct Tenant {
+    name: String,
+    session: TuckerSession,
+    workers: usize,
+    quota_bytes: usize,
+    snapshots: Vec<CachedSnapshot>,
+    record: ServeRecord,
+}
+
+impl Tenant {
+    fn resident_bytes(&self) -> usize {
+        self.snapshots.iter().map(|c| c.bytes).sum()
+    }
+
+    /// Evict coldest non-latest snapshots until the tenant fits its
+    /// quota. The latest snapshot is pinned even if it alone exceeds
+    /// the quota — a tenant that has decomposed can always serve.
+    fn evict_cold(&mut self) {
+        while self.resident_bytes() > self.quota_bytes && self.snapshots.len() > 1 {
+            let last = self.snapshots.len() - 1;
+            let coldest = self.snapshots[..last]
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.last_used)
+                .map(|(i, _)| i);
+            match coldest {
+                Some(i) => {
+                    self.snapshots.remove(i);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// The multi-tenant serving front end (module docs).
+#[derive(Debug)]
+pub struct ServeCoordinator {
+    budget: ServeBudget,
+    kernel: Kernel,
+    clock: u64,
+    tenants: Vec<Tenant>,
+}
+
+impl ServeCoordinator {
+    /// A coordinator with the given budget, serving through the
+    /// host-detected kernel (`TUCKER_KERNEL` honored).
+    pub fn new(budget: ServeBudget) -> ServeCoordinator {
+        ServeCoordinator { budget, kernel: Kernel::from_env(), clock: 0, tenants: Vec::new() }
+    }
+
+    /// Override the serving microkernel (builder style).
+    pub fn with_kernel(mut self, kernel: Kernel) -> ServeCoordinator {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The budget this coordinator enforces.
+    pub fn budget(&self) -> ServeBudget {
+        self.budget
+    }
+
+    /// Worker threads currently reserved across tenants.
+    pub fn threads_reserved(&self) -> usize {
+        self.tenants.iter().map(|t| t.workers).sum()
+    }
+
+    /// Snapshot bytes currently reserved (Σ tenant quotas).
+    pub fn bytes_reserved(&self) -> usize {
+        self.tenants.iter().map(|t| t.quota_bytes).sum()
+    }
+
+    /// Snapshot bytes actually resident across all tenant caches.
+    pub fn resident_bytes(&self) -> usize {
+        self.tenants.iter().map(|t| t.resident_bytes()).sum()
+    }
+
+    /// Admitted tenant names, admission order.
+    pub fn tenants(&self) -> Vec<&str> {
+        self.tenants.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Admit a tenant, reserving `workers` threads and `quota_bytes`
+    /// of snapshot memory for it. All-or-nothing: on `Err` nothing was
+    /// reserved and the session was dropped back to the caller via the
+    /// error — admit again with a smaller reservation.
+    pub fn admit(
+        &mut self,
+        name: &str,
+        session: TuckerSession,
+        workers: usize,
+        quota_bytes: usize,
+    ) -> Result<(), (TuckerSession, AdmissionError)> {
+        if self.tenants.iter().any(|t| t.name == name) {
+            return Err((session, AdmissionError::DuplicateTenant(name.to_string())));
+        }
+        if workers == 0 {
+            return Err((session, AdmissionError::ZeroWorkers(name.to_string())));
+        }
+        let threads_free = self.budget.worker_threads.saturating_sub(self.threads_reserved());
+        if workers > threads_free {
+            return Err((
+                session,
+                AdmissionError::ThreadBudget {
+                    tenant: name.to_string(),
+                    requested: workers,
+                    available: threads_free,
+                },
+            ));
+        }
+        let bytes_free = self.budget.snapshot_bytes.saturating_sub(self.bytes_reserved());
+        if quota_bytes > bytes_free {
+            return Err((
+                session,
+                AdmissionError::MemoryBudget {
+                    tenant: name.to_string(),
+                    requested: quota_bytes,
+                    available: bytes_free,
+                },
+            ));
+        }
+        self.tenants.push(Tenant {
+            name: name.to_string(),
+            session,
+            workers,
+            quota_bytes,
+            snapshots: Vec::new(),
+            record: ServeRecord::default(),
+        });
+        Ok(())
+    }
+
+    /// Remove a tenant, releasing its reservations and returning its
+    /// session to the caller.
+    pub fn evict_tenant(&mut self, name: &str) -> Result<TuckerSession, ServeError> {
+        let i = self.index_of(name)?;
+        Ok(self.tenants.remove(i).session)
+    }
+
+    /// Borrow a tenant's live session.
+    pub fn session(&self, name: &str) -> Result<&TuckerSession, ServeError> {
+        let i = self.index_of(name)?;
+        Ok(&self.tenants[i].session)
+    }
+
+    /// Mutably borrow a tenant's live session. After direct mutations,
+    /// call [`refresh`](ServeCoordinator::refresh) to publish the new
+    /// snapshot into the serving cache.
+    pub fn session_mut(&mut self, name: &str) -> Result<&mut TuckerSession, ServeError> {
+        let i = self.index_of(name)?;
+        Ok(&mut self.tenants[i].session)
+    }
+
+    /// Run the tenant's session to a sweep boundary and publish the
+    /// resulting snapshot.
+    pub fn decompose(&mut self, name: &str) -> Result<Arc<DecompositionSnapshot>, ServeError> {
+        let i = self.index_of(name)?;
+        self.tenants[i]
+            .session
+            .try_decompose()
+            .map_err(|e| ServeError::Session(e.to_string()))?;
+        self.refresh(name)
+    }
+
+    /// Refine the tenant's decomposition by `invocations` more HOOI
+    /// invocations and publish the resulting snapshot.
+    pub fn decompose_more(
+        &mut self,
+        name: &str,
+        invocations: usize,
+    ) -> Result<Arc<DecompositionSnapshot>, ServeError> {
+        let i = self.index_of(name)?;
+        self.tenants[i]
+            .session
+            .try_decompose_more(invocations)
+            .map_err(|e| ServeError::Session(e.to_string()))?;
+        self.refresh(name)
+    }
+
+    /// Stream a delta into the tenant's session. Resident snapshots
+    /// keep serving the pre-ingest generations — the refreshed view
+    /// appears at the next decompose/refresh.
+    pub fn ingest(&mut self, name: &str, delta: &TensorDelta) -> Result<(), ServeError> {
+        let i = self.index_of(name)?;
+        self.tenants[i]
+            .session
+            .ingest(delta)
+            .map(|_| ())
+            .map_err(|e| ServeError::Ingest(e.to_string()))
+    }
+
+    /// Publish the session's latest snapshot into the tenant's serving
+    /// cache (no-op if that generation is already resident), then
+    /// LRU-evict cold generations beyond the tenant's quota.
+    pub fn refresh(&mut self, name: &str) -> Result<Arc<DecompositionSnapshot>, ServeError> {
+        let i = self.index_of(name)?;
+        self.clock += 1;
+        let clock = self.clock;
+        let t = &mut self.tenants[i];
+        let snap = t
+            .session
+            .latest_snapshot()
+            .ok_or_else(|| ServeError::NoSnapshot(name.to_string()))?;
+        let resident = t.snapshots.last().map(|c| c.snap.generation());
+        if resident == Some(snap.generation()) {
+            if let Some(latest) = t.snapshots.last_mut() {
+                latest.last_used = clock;
+            }
+        } else {
+            let bytes = snap.approx_bytes();
+            t.snapshots.push(CachedSnapshot { snap: Arc::clone(&snap), bytes, last_used: clock });
+            t.evict_cold();
+        }
+        Ok(snap)
+    }
+
+    /// Generations resident in a tenant's cache, publication order
+    /// (latest last). Empty for unknown tenants.
+    pub fn resident_generations(&self, name: &str) -> Vec<u64> {
+        match self.index_of(name) {
+            Ok(i) => self.tenants[i].snapshots.iter().map(|c| c.snap.generation()).collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Fetch a specific resident generation (touches its LRU stamp),
+    /// e.g. to keep serving an older view a client has pinned.
+    pub fn fetch(&mut self, name: &str, generation: u64) -> Option<Arc<DecompositionSnapshot>> {
+        let i = self.index_of(name).ok()?;
+        self.clock += 1;
+        let clock = self.clock;
+        let cached = self.tenants[i]
+            .snapshots
+            .iter_mut()
+            .find(|c| c.snap.generation() == generation)?;
+        cached.last_used = clock;
+        Some(Arc::clone(&cached.snap))
+    }
+
+    /// Serve a query batch from the tenant's latest resident snapshot.
+    /// Batches longer than [`ServeBudget::max_batch`] are evaluated in
+    /// chunks; results come back in input order either way.
+    pub fn query(&mut self, name: &str, batch: &QueryBatch) -> Result<Vec<f32>, ServeError> {
+        let i = self.index_of(name)?;
+        self.clock += 1;
+        let clock = self.clock;
+        let chunk_len = self.budget.max_batch.max(1);
+        let kernel = self.kernel;
+        let t = &mut self.tenants[i];
+        let latest = t
+            .snapshots
+            .last_mut()
+            .ok_or_else(|| ServeError::NoSnapshot(name.to_string()))?;
+        latest.last_used = clock;
+        let snap = Arc::clone(&latest.snap);
+        let mut out = Vec::with_capacity(batch.len());
+        for chunk in batch.queries().chunks(chunk_len) {
+            let start = Instant::now();
+            let vals = query::reconstruct_batch(snap.factors(), snap.core(), chunk, kernel)?;
+            t.record.observe(chunk.len(), start.elapsed().as_secs_f64());
+            out.extend_from_slice(&vals);
+        }
+        t.record.snapshot_generation = snap.generation();
+        t.record.session_generation = t.session.generation();
+        Ok(out)
+    }
+
+    /// Serve a top-K slice query from the tenant's latest resident
+    /// snapshot.
+    pub fn top_k(
+        &mut self,
+        name: &str,
+        mode: usize,
+        index: usize,
+        k: usize,
+    ) -> Result<Vec<TopEntry>, ServeError> {
+        let i = self.index_of(name)?;
+        self.clock += 1;
+        let clock = self.clock;
+        let kernel = self.kernel;
+        let t = &mut self.tenants[i];
+        let latest = t
+            .snapshots
+            .last_mut()
+            .ok_or_else(|| ServeError::NoSnapshot(name.to_string()))?;
+        latest.last_used = clock;
+        let snap = Arc::clone(&latest.snap);
+        let start = Instant::now();
+        let entries = snap.top_k_per_slice_with(mode, index, k, kernel)?;
+        t.record.topk_queries += 1;
+        t.record.latencies.push(start.elapsed().as_secs_f64());
+        t.record.snapshot_generation = snap.generation();
+        t.record.session_generation = t.session.generation();
+        Ok(entries)
+    }
+
+    /// Serving telemetry for a tenant.
+    pub fn record(&self, name: &str) -> Result<&ServeRecord, ServeError> {
+        let i = self.index_of(name)?;
+        Ok(&self.tenants[i].record)
+    }
+
+    fn index_of(&self, name: &str) -> Result<usize, ServeError> {
+        self.tenants
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| ServeError::UnknownTenant(name.to_string()))
+    }
+}

@@ -1,0 +1,174 @@
+//! Top-K reconstruction queries over one tensor slice.
+//!
+//! `top_k_per_slice(mode, index, k)` scans every entry of the
+//! mode-`mode` slice at coordinate `index` — the recommendation query
+//! of the DynamicCF exemplar ("best items for user `index`") — and
+//! keeps the `k` largest reconstructed values in a bounded min-heap:
+//! O(S·log k) ordering work over a slice of S entries, never
+//! materializing the slice. The scan walks the slice in last-mode-major
+//! order so the per-slice core contraction of [`super::query`] is
+//! reused across the whole fiber of each mode-(N−1) index, and every
+//! element evaluation goes through the same tiled weight build as the
+//! batch engine — the values are bit-identical to
+//! [`reconstruct_at`](super::query::reconstruct_at).
+//!
+//! Ordering contract: entries rank by value descending, ties broken by
+//! ascending (lexicographic) tensor index. This total order makes the
+//! result independent of scan order and lets tests pin the heap against
+//! a full-sort oracle exactly.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use crate::hooi::kernel::Kernel;
+use crate::linalg::Mat;
+
+use super::query::{self, QueryError};
+
+/// One result of a top-K query: a full tensor index and its
+/// reconstructed value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopEntry {
+    /// Full tensor coordinates of the entry.
+    pub idx: Vec<usize>,
+    /// Reconstructed value at `idx`.
+    pub value: f32,
+}
+
+/// Heap element with the ranking order baked into `Ord`: higher value
+/// ranks higher; equal values rank the *smaller* index higher, so the
+/// retained set is unique regardless of push order.
+#[derive(Debug, Clone)]
+struct Ranked {
+    value: f32,
+    idx: Vec<usize>,
+}
+
+impl PartialEq for Ranked {
+    fn eq(&self, other: &Ranked) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Ranked {}
+
+impl PartialOrd for Ranked {
+    fn partial_cmp(&self, other: &Ranked) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ranked {
+    fn cmp(&self, other: &Ranked) -> Ordering {
+        // total_cmp gives NaN a defined slot instead of poisoning the
+        // heap invariant
+        self.value
+            .total_cmp(&other.value)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+/// A bounded min-heap keeping the `k` best [`Ranked`] entries seen so
+/// far. `k == 0` keeps nothing.
+#[derive(Debug)]
+pub(crate) struct BoundedTopK {
+    k: usize,
+    heap: BinaryHeap<Reverse<Ranked>>,
+}
+
+impl BoundedTopK {
+    pub(crate) fn new(k: usize) -> BoundedTopK {
+        BoundedTopK { k, heap: BinaryHeap::with_capacity(k.saturating_add(1)) }
+    }
+
+    /// Offer one candidate; the index is only cloned if it displaces
+    /// the current worst retained entry.
+    pub(crate) fn push(&mut self, idx: &[usize], value: f32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(Reverse(Ranked { value, idx: idx.to_vec() }));
+            return;
+        }
+        if let Some(Reverse(worst)) = self.heap.peek() {
+            let better = match value.total_cmp(&worst.value) {
+                Ordering::Greater => true,
+                Ordering::Less => false,
+                Ordering::Equal => idx < &worst.idx[..],
+            };
+            if better {
+                self.heap.pop();
+                self.heap.push(Reverse(Ranked { value, idx: idx.to_vec() }));
+            }
+        }
+    }
+
+    /// Drain into ranked order: best first.
+    pub(crate) fn into_sorted(self) -> Vec<TopEntry> {
+        let mut entries: Vec<Ranked> = self.heap.into_iter().map(|r| r.0).collect();
+        entries.sort_by(|a, b| b.cmp(a));
+        entries
+            .into_iter()
+            .map(|r| TopEntry { idx: r.idx, value: r.value })
+            .collect()
+    }
+}
+
+/// Scan the mode-`mode` slice at coordinate `index` and return the `k`
+/// largest reconstructed entries, best first (ordering contract in the
+/// module docs). Returns fewer than `k` entries when the slice is
+/// smaller than `k`.
+pub(crate) fn top_k_per_slice(
+    factors: &[Mat],
+    core: &Mat,
+    mode: usize,
+    index: usize,
+    k: usize,
+    kernel: Kernel,
+) -> Result<Vec<TopEntry>, QueryError> {
+    let n = factors.len();
+    if mode >= n {
+        return Err(QueryError::Mode { got: mode, order: n });
+    }
+    if index >= factors[mode].rows {
+        return Err(QueryError::OutOfRange { mode, index, extent: factors[mode].rows });
+    }
+    let last = n - 1;
+    // free modes vary over their full extents; the pinned `mode` stays
+    // at `index`. The last mode is outermost so each slice contraction
+    // `g` serves a whole fiber of evaluations.
+    let free: Vec<usize> = (0..last).filter(|&m| m != mode).collect();
+    let last_range = if mode == last { index..index + 1 } else { 0..factors[last].rows };
+    let mut heap = BoundedTopK::new(k);
+    let mut g: Vec<f32> = Vec::new();
+    let mut scratch = query::Scratch::default();
+    let mut idx = vec![0usize; n];
+    idx[mode] = index;
+    for j_last in last_range {
+        idx[last] = j_last;
+        query::slice_weights(core, factors[last].row(j_last), &mut g);
+        for &m in &free {
+            idx[m] = 0;
+        }
+        'fiber: loop {
+            let v = query::eval_with_g(factors, &g, &idx, kernel, &mut scratch);
+            heap.push(&idx, v);
+            // odometer over the free modes, earliest fastest
+            let mut pos = 0usize;
+            loop {
+                if pos == free.len() {
+                    break 'fiber;
+                }
+                let m = free[pos];
+                idx[m] += 1;
+                if idx[m] < factors[m].rows {
+                    break;
+                }
+                idx[m] = 0;
+                pos += 1;
+            }
+        }
+    }
+    Ok(heap.into_sorted())
+}

@@ -33,6 +33,14 @@ pub const BENCH_QUICK: &str = "TUCKER_BENCH_QUICK";
 pub const BENCH_SCALE: &str = "TUCKER_BENCH_SCALE";
 /// Bench harness: `pjrt|native` engine selection.
 pub const BENCH_ENGINE: &str = "TUCKER_BENCH_ENGINE";
+/// Serving coordinator: worker-thread budget across all tenants
+/// (`serve::ServeBudget`).
+pub const SERVE_THREADS: &str = "TUCKER_SERVE_THREADS";
+/// Serving coordinator: resident snapshot-memory budget across all
+/// tenants, in bytes.
+pub const SERVE_SNAPSHOT_BYTES: &str = "TUCKER_SERVE_SNAPSHOT_BYTES";
+/// Serving engine: largest query batch evaluated in one engine call.
+pub const SERVE_BATCH: &str = "TUCKER_SERVE_BATCH";
 
 /// Raw trimmed value of an environment variable; `None` when unset,
 /// empty, or not valid UTF-8.
@@ -117,6 +125,31 @@ pub fn transport_choice(option: Option<TransportChoice>) -> TransportChoice {
     resolve(option, TRANSPORT, TransportChoice::by_name, TransportChoice::default)
 }
 
+/// Budget values must be positive — a zero thread or byte budget would
+/// make every admission fail, and a zero batch size would never serve.
+fn parse_positive(s: &str) -> Option<usize> {
+    s.parse().ok().filter(|&v: &usize| v > 0)
+}
+
+/// [`SERVE_THREADS`] as the coordinator's worker-thread budget
+/// (`option` from [`ServeBudget::resolve`]; default 16).
+///
+/// [`ServeBudget::resolve`]: crate::serve::ServeBudget::resolve
+pub fn serve_threads(option: Option<usize>) -> usize {
+    resolve(option, SERVE_THREADS, parse_positive, || 16)
+}
+
+/// [`SERVE_SNAPSHOT_BYTES`] as the coordinator's resident
+/// snapshot-memory budget (default 64 MiB).
+pub fn serve_snapshot_bytes(option: Option<usize>) -> usize {
+    resolve(option, SERVE_SNAPSHOT_BYTES, parse_positive, || 64 * 1024 * 1024)
+}
+
+/// [`SERVE_BATCH`] as the engine's maximum batch length (default 1024).
+pub fn serve_batch(option: Option<usize>) -> usize {
+    resolve(option, SERVE_BATCH, parse_positive, || 1024)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +220,43 @@ mod tests {
         // only exercise the Some(..) arm, which never touches it.
         assert!(phase_executor_parallel(Some(true)));
         assert!(!phase_executor_parallel(Some(false)));
+    }
+
+    #[test]
+    fn serve_knob_precedence_typed_env_default() {
+        // typed option beats a valid env value
+        let got = resolve_with(
+            Some(4usize),
+            SERVE_THREADS,
+            Some("8".to_string()),
+            parse_positive,
+            || 16,
+        );
+        assert_eq!(got, 4);
+        // valid env value beats the default
+        let got =
+            resolve_with(None, SERVE_THREADS, Some("8".to_string()), parse_positive, || 16);
+        assert_eq!(got, 8);
+        // zero and garbage are rejected → default (a zero budget would
+        // deadlock every admission)
+        let got =
+            resolve_with(None, SERVE_BATCH, Some("0".to_string()), parse_positive, || 1024);
+        assert_eq!(got, 1024);
+        let got = resolve_with(
+            None,
+            SERVE_SNAPSHOT_BYTES,
+            Some("lots".to_string()),
+            parse_positive,
+            || 64,
+        );
+        assert_eq!(got, 64);
+        // unset env: the default
+        let got = resolve_with(None, SERVE_SNAPSHOT_BYTES, None, parse_positive, || 64);
+        assert_eq!(got, 64);
+        // the typed accessors' Some(..) arm never reads the environment
+        assert_eq!(serve_threads(Some(2)), 2);
+        assert_eq!(serve_snapshot_bytes(Some(1 << 20)), 1 << 20);
+        assert_eq!(serve_batch(Some(64)), 64);
     }
 
     #[test]

@@ -1,0 +1,479 @@
+//! Serving-layer integration: the batched query engine pinned
+//! **bit-identical** to the per-element oracle under every kernel
+//! (3-D property + 4-D pin), typed query errors, top-K against a
+//! full-sort oracle, snapshot consistency under concurrent
+//! ingest/rebalance/refine, bit-exact snapshot serialization, and the
+//! multi-tenant coordinator's budget/LRU/telemetry contracts.
+
+use std::sync::Arc;
+
+use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
+use tucker_lite::hooi::{CoreRanks, Kernel};
+use tucker_lite::linalg::Mat;
+use tucker_lite::prop_assert;
+use tucker_lite::serve::{
+    AdmissionError, DecompositionSnapshot, QueryBatch, QueryError, ServeBudget,
+    ServeCoordinator, ServeError,
+};
+use tucker_lite::tensor::{SparseTensor, TensorDelta};
+use tucker_lite::util::check::Runner;
+use tucker_lite::util::rng::Rng;
+
+/// A synthetic Tucker model with the library's layout contract:
+/// factors L_n × K_n, core flattened K_{N−1} × K̂ (earliest mode
+/// fastest along the columns).
+fn random_model(rng: &mut Rng, dims: &[usize], ks: &[usize]) -> DecompositionSnapshot {
+    let factors: Vec<Mat> = dims
+        .iter()
+        .zip(ks)
+        .map(|(&l, &k)| {
+            let mut m = Mat::zeros(l, k);
+            for v in m.data.iter_mut() {
+                *v = rng.f32() * 2.0 - 1.0;
+            }
+            m
+        })
+        .collect();
+    let n = ks.len();
+    let kh: usize = ks[..n - 1].iter().product();
+    let mut core = Mat::zeros(ks[n - 1], kh);
+    for v in core.data.iter_mut() {
+        *v = rng.f32() * 2.0 - 1.0;
+    }
+    DecompositionSnapshot::from_parts(factors, core, vec![0.5; ks[n - 1]], 0.9, 1, 1)
+}
+
+fn random_queries(rng: &mut Rng, dims: &[usize], count: usize) -> QueryBatch {
+    let mut batch = QueryBatch::new();
+    for _ in 0..count {
+        let idx: Vec<usize> =
+            dims.iter().map(|&l| rng.usize_below(l)).collect();
+        batch.add(&idx);
+    }
+    batch
+}
+
+/// Kernels to pin against each other: the scalar reference and
+/// whatever the host actually dispatches (AVX2/NEON/portable).
+fn kernels_under_test() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar, Kernel::Portable];
+    let detected = Kernel::detect();
+    if !ks.contains(&detected) {
+        ks.push(detected);
+    }
+    ks
+}
+
+#[test]
+fn batched_matches_oracle_bit_exact_3d() {
+    Runner::new(12, 30).run("serve-batch-oracle-3d", |case, rng| {
+        let dims = vec![
+            4 + rng.usize_below(case.size + 8),
+            3 + rng.usize_below(10),
+            2 + rng.usize_below(8),
+        ];
+        let ks = vec![
+            1 + rng.usize_below(5),
+            1 + rng.usize_below(4),
+            1 + rng.usize_below(4),
+        ];
+        let snap = random_model(rng, &dims, &ks);
+        let batch = random_queries(rng, &dims, 40 + rng.usize_below(120));
+        for kernel in kernels_under_test() {
+            let got = snap
+                .reconstruct_batch_with(&batch, kernel)
+                .map_err(|e| format!("valid batch rejected: {e}"))?;
+            for (q, v) in batch.queries().iter().zip(&got) {
+                let want = snap
+                    .reconstruct_at(q)
+                    .map_err(|e| format!("oracle rejected {q:?}: {e}"))?;
+                prop_assert!(
+                    v.to_bits() == want.to_bits(),
+                    "kernel {} at {q:?}: batched {v:e} ({:#x}) vs oracle {want:e} ({:#x})",
+                    kernel.name(),
+                    v.to_bits(),
+                    want.to_bits()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_matches_oracle_bit_exact_4d_pin() {
+    let mut rng = Rng::new(0x5E24E);
+    let dims = [7usize, 6, 5, 4];
+    let ks = [3usize, 2, 4, 2];
+    let snap = random_model(&mut rng, &dims, &ks);
+    let batch = random_queries(&mut rng, &dims, 150);
+    for kernel in kernels_under_test() {
+        let got = snap.reconstruct_batch_with(&batch, kernel).unwrap();
+        for (q, v) in batch.queries().iter().zip(&got) {
+            let want = snap.reconstruct_at(q).unwrap();
+            assert_eq!(
+                v.to_bits(),
+                want.to_bits(),
+                "kernel {} at {q:?}: batched {v:e} vs oracle {want:e}",
+                kernel.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn query_errors_are_typed() {
+    let mut rng = Rng::new(11);
+    let snap = random_model(&mut rng, &[6, 5, 4], &[3, 2, 2]);
+    // wrong arity
+    assert_eq!(
+        snap.reconstruct_at(&[1, 2]),
+        Err(QueryError::Arity { got: 2, want: 3 })
+    );
+    // out-of-range coordinate names the offending mode and extent
+    assert_eq!(
+        snap.reconstruct_at(&[1, 5, 0]),
+        Err(QueryError::OutOfRange { mode: 1, index: 5, extent: 5 })
+    );
+    // a batch with one bad query fails atomically — nothing is served
+    let batch = QueryBatch::new().push(&[0, 0, 0]).push(&[6, 0, 0]);
+    assert_eq!(
+        snap.reconstruct_batch(&batch),
+        Err(QueryError::OutOfRange { mode: 0, index: 6, extent: 6 })
+    );
+    // top-K: slice mode out of order, then slice index out of range
+    assert_eq!(
+        snap.top_k_per_slice(3, 0, 5).unwrap_err(),
+        QueryError::Mode { got: 3, order: 3 }
+    );
+    assert_eq!(
+        snap.top_k_per_slice(2, 4, 5).unwrap_err(),
+        QueryError::OutOfRange { mode: 2, index: 4, extent: 4 }
+    );
+    // the errors render human-readably
+    let msg = QueryError::OutOfRange { mode: 1, index: 9, extent: 5 }.to_string();
+    assert!(msg.contains("mode 1") && msg.contains('9') && msg.contains('5'), "{msg}");
+}
+
+/// Full-sort oracle for one slice: every entry reconstructed through
+/// the scalar oracle, sorted by value descending then index ascending.
+fn top_k_oracle(
+    snap: &DecompositionSnapshot,
+    mode: usize,
+    index: usize,
+    k: usize,
+) -> Vec<(Vec<usize>, f32)> {
+    let dims = snap.dims();
+    let n = dims.len();
+    let mut idx = vec![0usize; n];
+    idx[mode] = index;
+    let free: Vec<usize> = (0..n).filter(|&m| m != mode).collect();
+    let mut all: Vec<(Vec<usize>, f32)> = Vec::new();
+    'slice: loop {
+        all.push((idx.clone(), snap.reconstruct_at(&idx).unwrap()));
+        let mut pos = 0usize;
+        loop {
+            if pos == free.len() {
+                break 'slice;
+            }
+            let m = free[pos];
+            idx[m] += 1;
+            if idx[m] < dims[m] {
+                break;
+            }
+            idx[m] = 0;
+            pos += 1;
+        }
+    }
+    all.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
+#[test]
+fn top_k_matches_full_sort_oracle() {
+    Runner::new(10, 20).run("serve-topk-oracle", |case, rng| {
+        let dims = vec![
+            3 + rng.usize_below(case.size + 6),
+            3 + rng.usize_below(8),
+            2 + rng.usize_below(6),
+        ];
+        let ks = vec![1 + rng.usize_below(4), 1 + rng.usize_below(3), 1 + rng.usize_below(3)];
+        let snap = random_model(rng, &dims, &ks);
+        let mode = rng.usize_below(3);
+        let index = rng.usize_below(dims[mode]);
+        let slice_len: usize =
+            (0..3).filter(|&m| m != mode).map(|m| dims[m]).product();
+        for k in [1usize, 3, slice_len + 7] {
+            let want = top_k_oracle(&snap, mode, index, k);
+            for kernel in kernels_under_test() {
+                let got = snap
+                    .top_k_per_slice_with(mode, index, k, kernel)
+                    .map_err(|e| format!("valid top-k rejected: {e}"))?;
+                prop_assert!(
+                    got.len() == want.len(),
+                    "kernel {}: k={k} returned {} of {} expected",
+                    kernel.name(),
+                    got.len(),
+                    want.len()
+                );
+                for (rank, (g, w)) in got.iter().zip(&want).enumerate() {
+                    prop_assert!(
+                        g.idx == w.0 && g.value.to_bits() == w.1.to_bits(),
+                        "kernel {} rank {rank}: got {:?}={:e}, want {:?}={:e}",
+                        kernel.name(),
+                        g.idx,
+                        g.value,
+                        w.0,
+                        w.1
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn serving_workload(rng: &mut Rng) -> Workload {
+    let t = SparseTensor::random(vec![12, 10, 8], 260, rng);
+    Workload::from_tensor("serving", t)
+}
+
+fn serving_session(w: &Workload) -> TuckerSession {
+    TuckerSession::builder(w.clone())
+        .scheme(SchemeChoice::Lite)
+        .ranks(2)
+        .core(CoreRanks::Uniform(3))
+        .invocations(1)
+        .seed(23)
+        .build()
+        .expect("valid serving session")
+}
+
+#[test]
+fn snapshot_queries_are_stable_under_concurrent_mutation() {
+    let mut rng = Rng::new(0xC0);
+    let w = serving_workload(&mut rng);
+    let mut session = serving_session(&w);
+    session.decompose();
+    let snap = session.latest_snapshot().expect("published at the sweep boundary");
+    let gen0 = snap.generation();
+    // freeze an independent deep copy: the later equality check proves
+    // the Arc'd snapshot never changed, not merely that it changed in
+    // some self-consistent way
+    let frozen: DecompositionSnapshot = (*snap).clone();
+    let batch = random_queries(&mut rng, &[12, 10, 8], 60);
+    let before = snap.reconstruct_batch_with(&batch, Kernel::Scalar).unwrap();
+
+    // reader thread hammers the snapshot while the session mutates
+    let reader_snap = Arc::clone(&snap);
+    let reader_batch = batch.clone();
+    let reader = std::thread::spawn(move || {
+        let mut runs = Vec::new();
+        for _ in 0..40 {
+            runs.push(
+                reader_snap.reconstruct_batch_with(&reader_batch, Kernel::Scalar).unwrap(),
+            );
+        }
+        runs
+    });
+
+    // writer side: ingest (coords stay inside the original dims, so the
+    // query batch stays valid), rebalance, refine — every mutation the
+    // serving path must be isolated from
+    let mut delta = TensorDelta::new();
+    for _ in 0..25 {
+        let coord: Vec<u32> = [12u32, 10, 8]
+            .iter()
+            .map(|&l| rng.below(l as u64) as u32)
+            .collect();
+        delta = delta.append(&coord, rng.f32() * 2.0 - 1.0);
+    }
+    session.ingest(&delta).expect("in-bounds delta");
+    assert!(session.generation() > gen0, "ingest must advance the generation");
+    session.rebalance();
+    session.decompose_more(1);
+
+    for run in reader.join().expect("reader thread") {
+        for (a, b) in run.iter().zip(&before) {
+            assert_eq!(a.to_bits(), b.to_bits(), "concurrent read drifted");
+        }
+    }
+    // the held snapshot still equals its pre-mutation deep copy
+    assert_eq!(*snap, frozen, "published snapshot mutated in place");
+    let after = snap.reconstruct_batch_with(&batch, Kernel::Scalar).unwrap();
+    for (a, b) in after.iter().zip(&before) {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-mutation read drifted");
+    }
+    // while the session has moved on to a newer published generation
+    let newest = session.latest_snapshot().unwrap();
+    assert!(
+        newest.generation() > gen0,
+        "refine must publish a newer generation ({} vs {gen0})",
+        newest.generation()
+    );
+}
+
+#[test]
+fn snapshot_serialize_roundtrip_is_bit_exact() {
+    let mut factors = vec![Mat::zeros(3, 2), Mat::zeros(2, 2), Mat::zeros(2, 2)];
+    // adversarial payloads: -0.0, subnormal, values decimal formatting
+    // would perturb
+    factors[0].data = vec![1.0, -0.0, f32::MIN_POSITIVE, 0.1 + 0.2, -7.25, 3.4e38];
+    factors[1].data = vec![0.1, 1e-30, -0.0, 2.5];
+    factors[2].data = vec![-1.5, 0.3, 0.7, -0.2];
+    let core = Mat { rows: 2, cols: 4, data: vec![0.25, -0.0, 1e-38, 3.0, -2.0, 0.5, 0.1, 9.0] };
+    let snap = DecompositionSnapshot::from_parts(
+        factors,
+        core,
+        vec![1.25, f32::MIN_POSITIVE],
+        0.123456789012345,
+        42,
+        7,
+    );
+    let text = snap.serialize();
+    let back = DecompositionSnapshot::parse(&text).expect("own output parses");
+    assert_eq!(back, snap, "round trip must reproduce every bit");
+    assert_eq!(back.generation(), 42);
+    assert_eq!(back.sweep(), 7);
+    assert_eq!(back.fit().to_bits(), snap.fit().to_bits());
+    // and the round-tripped model answers queries identically
+    let q = [2usize, 1, 0];
+    assert_eq!(
+        back.reconstruct_at(&q).unwrap().to_bits(),
+        snap.reconstruct_at(&q).unwrap().to_bits()
+    );
+    // garbage is a typed Err, not a panic
+    assert!(DecompositionSnapshot::parse("{]").is_err());
+    assert!(DecompositionSnapshot::parse("{}").is_err());
+}
+
+#[test]
+fn coordinator_enforces_thread_and_memory_budgets() {
+    let mut rng = Rng::new(3);
+    let w = serving_workload(&mut rng);
+    let budget =
+        ServeBudget { worker_threads: 4, snapshot_bytes: 10_000, max_batch: 8 };
+    let mut coord = ServeCoordinator::new(budget).with_kernel(Kernel::Scalar);
+    assert_eq!(coord.budget(), budget);
+
+    coord.admit("alpha", serving_session(&w), 2, 4_000).expect("fits");
+    coord.admit("beta", serving_session(&w), 2, 4_000).expect("fits exactly");
+    assert_eq!(coord.threads_reserved(), 4);
+    assert_eq!(coord.bytes_reserved(), 8_000);
+
+    // thread budget exhausted
+    let (_, err) = coord.admit("gamma", serving_session(&w), 1, 100).unwrap_err();
+    assert_eq!(
+        err,
+        AdmissionError::ThreadBudget { tenant: "gamma".into(), requested: 1, available: 0 }
+    );
+    // duplicate names are rejected before any accounting
+    let (_, err) = coord.admit("alpha", serving_session(&w), 1, 100).unwrap_err();
+    assert_eq!(err, AdmissionError::DuplicateTenant("alpha".into()));
+    // zero workers can never be admitted
+    let (_, err) = coord.admit("idle", serving_session(&w), 0, 100).unwrap_err();
+    assert_eq!(err, AdmissionError::ZeroWorkers("idle".into()));
+
+    // freeing a tenant releases both reservations
+    let _session = coord.evict_tenant("beta").expect("admitted above");
+    assert_eq!(coord.threads_reserved(), 2);
+    // now memory is the binding constraint
+    let (_, err) = coord.admit("gamma", serving_session(&w), 1, 7_000).unwrap_err();
+    assert_eq!(
+        err,
+        AdmissionError::MemoryBudget {
+            tenant: "gamma".into(),
+            requested: 7_000,
+            available: 6_000
+        }
+    );
+    coord.admit("gamma", serving_session(&w), 1, 6_000).expect("fits after eviction");
+    assert_eq!(coord.tenants(), vec!["alpha", "gamma"]);
+
+    // serving before any decompose is a typed error, as is an unknown
+    // tenant
+    let batch = QueryBatch::new().push(&[0, 0, 0]);
+    assert_eq!(
+        coord.query("alpha", &batch).unwrap_err(),
+        ServeError::NoSnapshot("alpha".into())
+    );
+    assert_eq!(
+        coord.query("nobody", &batch).unwrap_err(),
+        ServeError::UnknownTenant("nobody".into())
+    );
+}
+
+#[test]
+fn coordinator_serves_chunks_tracks_lag_and_lru_evicts() {
+    let mut rng = Rng::new(5);
+    let w = serving_workload(&mut rng);
+    // size the tenant quota to hold exactly two resident snapshots:
+    // probe one snapshot's footprint first (factor shapes never change,
+    // so every generation costs the same)
+    let probe = {
+        let mut s = serving_session(&w);
+        s.decompose();
+        s.latest_snapshot().unwrap().approx_bytes()
+    };
+    let budget = ServeBudget {
+        worker_threads: 8,
+        snapshot_bytes: probe * 100,
+        max_batch: 4,
+    };
+    let mut coord = ServeCoordinator::new(budget).with_kernel(Kernel::Scalar);
+    coord.admit("solo", serving_session(&w), 2, probe * 2 + probe / 2).expect("admitted");
+
+    let g1 = coord.decompose("solo").expect("first decompose").generation();
+    // chunked serving: 10 queries through max_batch=4 → 3 engine calls
+    let batch = random_queries(&mut rng, &[12, 10, 8], 10);
+    let served = coord.query("solo", &batch).expect("served");
+    let direct = coord
+        .session("solo")
+        .unwrap()
+        .latest_snapshot()
+        .unwrap()
+        .reconstruct_batch_with(&batch, Kernel::Scalar)
+        .unwrap();
+    assert_eq!(served.len(), 10);
+    for (a, b) in served.iter().zip(&direct) {
+        assert_eq!(a.to_bits(), b.to_bits(), "chunking changed results");
+    }
+    {
+        let rec = coord.record("solo").unwrap();
+        assert_eq!(rec.queries_served, 10);
+        assert_eq!(rec.batches, 3);
+        assert_eq!(rec.max_batch, 4);
+        assert_eq!(rec.generation_lag(), 0, "fresh snapshot serves at zero lag");
+        assert!(rec.p50_latency() >= 0.0 && rec.p99_latency() >= rec.p50_latency());
+    }
+
+    // ingest advances the session generation; the resident snapshot now
+    // lags until the next decompose
+    let delta = TensorDelta::new().append(&[1, 1, 1], 0.75);
+    coord.ingest("solo", &delta).expect("in-bounds delta");
+    coord.query("solo", &batch).expect("still serving the old generation");
+    assert!(
+        coord.record("solo").unwrap().generation_lag() >= 1,
+        "lag must surface after ingest"
+    );
+
+    // publish two more generations; quota=2.5 snapshots → LRU keeps two
+    let g2 = coord.decompose("solo").expect("second").generation();
+    assert!(g2 > g1);
+    assert_eq!(coord.resident_generations("solo"), vec![g1, g2]);
+    // touch g1 so g2 is the cold one when g3 arrives
+    assert!(coord.fetch("solo", g1).is_some());
+    coord.ingest("solo", &TensorDelta::new().append(&[2, 2, 2], -0.5)).unwrap();
+    let g3 = coord.decompose("solo").expect("third").generation();
+    assert_eq!(
+        coord.resident_generations("solo"),
+        vec![g1, g3],
+        "LRU must evict the coldest non-latest generation (g2)"
+    );
+    assert!(coord.fetch("solo", g2).is_none(), "evicted generations are gone");
+    // top-K serves and counts
+    let top = coord.top_k("solo", 0, 3, 5).expect("top-k served");
+    assert_eq!(top.len(), 5);
+    assert_eq!(coord.record("solo").unwrap().topk_queries, 1);
+}

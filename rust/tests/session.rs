@@ -186,7 +186,7 @@ fn reconstruct_at_recovers_planted_tensor() {
     let scale = t.vals.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
     for e in (0..t.nnz()).step_by(97) {
         let idx: Vec<usize> = (0..t.ndim()).map(|m| t.coord(m, e) as usize).collect();
-        let got = d.reconstruct_at(&idx);
+        let got = d.reconstruct_at(&idx).expect("in-range index");
         assert!(
             (got - t.vals[e]).abs() < 5e-2 * scale.max(1.0),
             "entry {idx:?}: {got} vs {}",
