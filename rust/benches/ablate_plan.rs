@@ -1,5 +1,7 @@
 //! Ablation: the precompiled TTM plan layer, its lane-blocked SIMD
-//! microkernels, and the parallel rank executor.
+//! microkernels, the parallel rank executor, and the shared-CSF plan
+//! layout (per-mode vs one tree per rank — section 6, mirrored to
+//! results/BENCH_plan.json).
 //!
 //!   1. Plan + kernel ablation across K ∈ {5, 10, 16} for 3-D and 4-D:
 //!      - naive: `assemble_local_z_fused` pays a row sort+dedup, one
@@ -20,13 +22,16 @@
 mod common;
 
 use std::time::Instant;
-use tucker_lite::coordinator::{SchemeChoice, TuckerSession, Workload};
+use tucker_lite::coordinator::{
+    KernelChoice, PlanChoice, SchemeChoice, TuckerSession, Workload,
+};
 use tucker_lite::dist::{cat, SimCluster};
 use tucker_lite::hooi::{
     assemble_local_z_fused, prepare_modes, CoreRanks, Kernel, PlanWorkspace, TtmPlan,
 };
 use tucker_lite::linalg::{orthonormal_random, Mat};
 use tucker_lite::tensor::{SparseTensor, TensorDelta};
+use tucker_lite::util::json::Json;
 use tucker_lite::util::rng::Rng;
 use tucker_lite::util::table::{fmt_secs, Table};
 
@@ -433,4 +438,116 @@ fn main() {
     ]);
     t5.print();
     let _ = t5.save_csv("ablate_plan_rebalance");
+
+    // --- 6. plan layout: N per-mode plans vs one shared CSF tree per
+    // rank (`PlanChoice::SharedCsf`). Reports the analytic per-sweep TTM
+    // FLOPs with and without cross-mode contribution reuse, the measured
+    // plan-build wall time, and the per-sweep wall time under the scalar
+    // and the detected tiled kernel — the two layouts' decompositions
+    // asserted bit-identical inline. Machine-readable mirror:
+    // results/BENCH_plan.json. ---
+    let nnz = if quick { 20_000 } else { 150_000 };
+    let t = SparseTensor::random(vec![300, 200, 80], nnz, &mut rng);
+    let w = std::sync::Arc::new(Workload::from_tensor("ablate_layout", t));
+    // a uni scheme: each rank owns one element set across all modes, so
+    // the shared tree carries real views (Lite degrades to all-Stream)
+    let build_layout = |w: std::sync::Arc<Workload>, kernel: Kernel, plan: PlanChoice| {
+        TuckerSession::builder(w)
+            .scheme(SchemeChoice::MediumG)
+            .ranks(p)
+            .core(k)
+            .invocations(1)
+            .kernel(KernelChoice::Fixed(kernel))
+            .plan(plan)
+            .seed(13)
+            .build()
+            .expect("valid layout ablation session")
+    };
+
+    let probe = build_layout(w.clone(), tiled_kernel, PlanChoice::SharedCsf);
+    let sp = probe.shared_plans().expect("SharedCsf layout holds trees");
+    let per_mode_flops = sp.per_mode_flops();
+    let shared_flops = sp.sweep_flops();
+    let build_shared: f64 = sp.plan_secs.iter().sum();
+    let pm_probe = build_layout(w.clone(), tiled_kernel, PlanChoice::PerMode);
+    let build_per_mode: f64 = pm_probe
+        .mode_states()
+        .iter()
+        .flat_map(|st| st.plan_secs.iter())
+        .sum();
+
+    let mut t6 = Table::new(
+        &format!(
+            "ablate_plan — plan layout: per-mode vs shared CSF (MediumG, \
+             nnz={nnz}, P={p}, K={k}, TTM FLOPs/sweep {per_mode_flops:.3e} -> \
+             {shared_flops:.3e}, {:.1}% saved, plan build {} -> {})",
+            100.0 * (1.0 - shared_flops / per_mode_flops),
+            fmt_secs(build_per_mode),
+            fmt_secs(build_shared),
+        ),
+        &["kernel", "per-mode sweep", "shared sweep", "shared vs per-mode"],
+    );
+    let mut kernel_rows = Vec::new();
+    for kernel in [Kernel::Scalar, tiled_kernel] {
+        let time_sweeps = |plan: PlanChoice| {
+            let mut s = build_layout(w.clone(), kernel, plan);
+            let d = s.decompose(); // absorbs the one-off plan charge
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let _ = s.decompose_more(1);
+            }
+            (t0.elapsed().as_secs_f64() / reps as f64, d)
+        };
+        let (pm_secs, pm_d) = time_sweeps(PlanChoice::PerMode);
+        let (sh_secs, sh_d) = time_sweeps(PlanChoice::SharedCsf);
+        // the headline contract rides along: a broken shared assembly
+        // arm fails the bench run, not just the test suite
+        assert_eq!(
+            pm_d.fit().to_bits(),
+            sh_d.fit().to_bits(),
+            "{}: shared layout fit diverged",
+            kernel.name()
+        );
+        for (n, (a, b)) in pm_d.factors.iter().zip(&sh_d.factors).enumerate() {
+            assert_eq!(
+                a.data,
+                b.data,
+                "{}: mode {n} factors diverged across plan layouts",
+                kernel.name()
+            );
+        }
+        assert_eq!(pm_d.core.data, sh_d.core.data, "{}: core", kernel.name());
+        t6.row(vec![
+            kernel.name().into(),
+            fmt_secs(pm_secs),
+            fmt_secs(sh_secs),
+            format!("{:.2}x", pm_secs / sh_secs),
+        ]);
+        let mut row = Json::obj();
+        row.set("kernel", Json::Str(kernel.name().into()))
+            .set("per_mode_sweep_secs", Json::Num(pm_secs))
+            .set("shared_sweep_secs", Json::Num(sh_secs));
+        kernel_rows.push(row);
+    }
+    t6.print();
+    let _ = t6.save_csv("ablate_plan_layout");
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("ablate_plan_layout".into()))
+        .set("scheme", Json::Str("mediumg".into()))
+        .set("p", Json::Num(p as f64))
+        .set("k", Json::Num(k as f64))
+        .set("nnz", Json::Num(nnz as f64))
+        .set("ttm_flops_per_sweep_per_mode", Json::Num(per_mode_flops))
+        .set("ttm_flops_per_sweep_shared", Json::Num(shared_flops))
+        .set("flop_reduction", Json::Num(1.0 - shared_flops / per_mode_flops))
+        .set("plan_build_secs_per_mode", Json::Num(build_per_mode))
+        .set("plan_build_secs_shared", Json::Num(build_shared))
+        .set("bit_identical", Json::Bool(true))
+        .set("kernels", Json::Arr(kernel_rows));
+    let _ = std::fs::create_dir_all("results");
+    match std::fs::write("results/BENCH_plan.json", j.render()) {
+        Ok(()) => eprintln!("# wrote results/BENCH_plan.json"),
+        Err(e) => eprintln!("# BENCH_plan.json not written: {e}"),
+    }
 }

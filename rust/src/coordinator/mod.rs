@@ -15,6 +15,6 @@ pub use job::JobSpec;
 pub use leader::{run_distribution, run_scheme, RunRecord, Workload, WorkloadError};
 pub use session::{
     Decomposition, EngineChoice, ExecutorChoice, IngestReport, KernelChoice,
-    RebalanceDecision, RebalancePolicy, RebalanceReport, SchemeChoice, SessionError,
-    TuckerSession, TuckerSessionBuilder,
+    PlanChoice, RebalanceDecision, RebalancePolicy, RebalanceReport, SchemeChoice,
+    SessionError, TuckerSession, TuckerSessionBuilder,
 };

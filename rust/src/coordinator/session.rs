@@ -33,6 +33,8 @@
 //! |-----------------------|--------------------------|
 //! | `.kernel(..)`         | `TUCKER_KERNEL`          |
 //! | `.executor(..)`       | `TUCKER_PHASE_EXECUTOR`  |
+//! | `.plan(..)`           | `TUCKER_PLAN`            |
+//! | `.pin_threads(..)`    | `TUCKER_PIN_THREADS`     |
 //! | `.transport(..)`      | `TUCKER_TRANSPORT`       |
 //! | `.memory_accounting(..)` | `TUCKER_MEM_ACCOUNTING` |
 //!
@@ -132,8 +134,10 @@ use crate::dist::{
     SimCluster, SimTransport, Transport, TransportChoice, TransportTuning,
 };
 use crate::hooi::{
-    charge_plan_compilation, prepare_modes_with_sharers, CoreRanks, HooiSnapshot,
-    HooiState, Kernel, ModeDelta, ModeState, TensorAccounting,
+    charge_plan_compilation, charge_shared_plan_compilation,
+    prepare_modes_unplanned_with_sharers, prepare_modes_with_sharers,
+    prepare_shared_plans, CoreRanks, HooiSnapshot, HooiState, Kernel, ModeDelta,
+    ModeState, SharedPlans, TensorAccounting,
 };
 use crate::linalg::Mat;
 use crate::runtime::Engine;
@@ -254,6 +258,39 @@ impl ExecutorChoice {
             ExecutorChoice::Auto => None,
             ExecutorChoice::Parallel => Some(true),
             ExecutorChoice::Serial => Some(false),
+        }
+    }
+}
+
+/// Typed TTM plan-layout selection (replaces `TUCKER_PLAN`): how each
+/// rank stores its sweep-invariant assembly layout.
+///
+/// Either layout produces bit-identical decompositions on every kernel
+/// and executor — including after ingest, rebalance migration, and
+/// fault recovery (`tests/csf.rs` pins this). The difference is cost:
+/// [`PlanChoice::SharedCsf`] holds one fiber-shared tree per rank
+/// instead of N independent per-mode plans, reuses each fiber's
+/// fast-factor contribution across the sweep's later TTMs (the FLOP
+/// reduction `CsfPlan::sweep_flops` reports), and maintains one
+/// splice/rebuild bookkeeping path per rank instead of N.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanChoice {
+    /// `TUCKER_PLAN` if set (`shared` / `per-mode`), else per-mode.
+    #[default]
+    Auto,
+    /// One independent `TtmPlan` per (mode, rank) — the classic layout.
+    PerMode,
+    /// One shared CSF tree per rank serving every mode's TTM
+    /// (`hooi::CsfPlan`), with cross-mode contribution reuse.
+    SharedCsf,
+}
+
+impl PlanChoice {
+    fn as_option(self) -> Option<bool> {
+        match self {
+            PlanChoice::Auto => None,
+            PlanChoice::PerMode => Some(false),
+            PlanChoice::SharedCsf => Some(true),
         }
     }
 }
@@ -382,6 +419,8 @@ pub struct TuckerSessionBuilder {
     engine: EngineChoice,
     kernel: KernelChoice,
     executor: ExecutorChoice,
+    plan_choice: PlanChoice,
+    pin: Option<bool>,
     transport: Option<TransportChoice>,
     transport_tuning: TransportTuning,
     net: NetModel,
@@ -404,6 +443,8 @@ impl TuckerSessionBuilder {
             engine: EngineChoice::Native,
             kernel: KernelChoice::Auto,
             executor: ExecutorChoice::Auto,
+            plan_choice: PlanChoice::Auto,
+            pin: None,
             transport: None,
             transport_tuning: TransportTuning::default(),
             net: NetModel::default(),
@@ -465,6 +506,25 @@ impl TuckerSessionBuilder {
     /// `TUCKER_PHASE_EXECUTOR`, then parallel on multi-core hosts).
     pub fn executor(mut self, executor: ExecutorChoice) -> Self {
         self.executor = executor;
+        self
+    }
+
+    /// TTM plan layout (default: [`PlanChoice::Auto`] — `TUCKER_PLAN`,
+    /// then per-mode plans). [`PlanChoice::SharedCsf`] compiles one
+    /// fiber-shared tree per rank instead of N per-mode plans;
+    /// decompositions are bit-identical either way.
+    pub fn plan(mut self, plan: PlanChoice) -> Self {
+        self.plan_choice = plan;
+        self
+    }
+
+    /// Pin the parallel executor's worker threads to distinct CPUs
+    /// with a static rank→worker mapping (default: `TUCKER_PIN_THREADS`,
+    /// then off). On NUMA hosts pinning keeps each rank's plan streams
+    /// on the memory node that first touched them; results are
+    /// bit-identical pinned or not.
+    pub fn pin_threads(mut self, pin: bool) -> Self {
+        self.pin = Some(pin);
         self
     }
 
@@ -556,7 +616,7 @@ impl TuckerSessionBuilder {
         let scheme = self.scheme.into_scheme();
         let mut rng = Rng::new(self.seed);
         let model = CostModel::default().with_net(self.net);
-        let plan = scheme.plan(
+        let mut plan = scheme.plan(
             &self.workload.tensor,
             &self.workload.idx,
             self.p,
@@ -570,14 +630,42 @@ impl TuckerSessionBuilder {
         // pays one Sharers pass per mode, not two
         let parallel =
             crate::util::env::phase_executor_parallel(self.executor.as_option());
-        let modes = prepare_modes_with_sharers(
-            &self.workload.tensor,
-            &self.workload.idx,
-            &plan.dist,
-            &self.core,
-            parallel,
-            plan.modes.iter().map(|m| m.sharers.clone()).collect(),
-        );
+        let shared_csf =
+            crate::util::env::plan_shared_csf(self.plan_choice.as_option());
+        let sharers: Vec<sched::Sharers> =
+            plan.modes.iter().map(|m| m.sharers.clone()).collect();
+        let (modes, shared) = if shared_csf {
+            // the mode states keep the distribution structure (sharers,
+            // σ_n, FM patterns, element lists); the assembly layout is
+            // one fiber-shared tree per rank, not N per-mode plans
+            let modes = prepare_modes_unplanned_with_sharers(
+                &self.workload.tensor,
+                &self.workload.idx,
+                &plan.dist,
+                &self.core,
+                sharers,
+            );
+            let shared = prepare_shared_plans(
+                &self.workload.tensor,
+                &modes,
+                &self.core,
+                parallel,
+            );
+            // the §4 estimate must price the tree's cross-mode
+            // contribution reuse, not N independent TTMs
+            plan.cost = plan.cost.with_shared_csf(&ks, &model);
+            (modes, Some(shared))
+        } else {
+            let modes = prepare_modes_with_sharers(
+                &self.workload.tensor,
+                &self.workload.idx,
+                &plan.dist,
+                &self.core,
+                parallel,
+                sharers,
+            );
+            (modes, None)
+        };
         let injector =
             if self.faults.is_empty() { None } else { Some(self.faults.injector()) };
         let transport_choice = crate::util::env::transport_choice(self.transport);
@@ -590,6 +678,7 @@ impl TuckerSessionBuilder {
             engine: self.engine.into_engine(),
             kernel: self.kernel.as_option(),
             executor: self.executor,
+            pin: self.pin,
             transport_choice,
             transport_tuning: self.transport_tuning,
             wedged: vec![false; self.p],
@@ -602,6 +691,7 @@ impl TuckerSessionBuilder {
             dead: vec![false; self.p],
             seed: self.seed,
             modes,
+            shared,
             plan_builds: 1,
             plan_rebuilds: 0,
             plan_charge_pending: true,
@@ -637,6 +727,8 @@ pub struct TuckerSession {
     engine: Arc<Engine>,
     kernel: Option<Kernel>,
     executor: ExecutorChoice,
+    /// Typed thread-pinning override (`None` = `TUCKER_PIN_THREADS`).
+    pin: Option<bool>,
     /// Resolved communication transport (typed option > env > Sim).
     transport_choice: TransportChoice,
     transport_tuning: TransportTuning,
@@ -656,6 +748,11 @@ pub struct TuckerSession {
     dead: Vec<bool>,
     seed: u64,
     modes: Vec<ModeState>,
+    /// Under [`PlanChoice::SharedCsf`]: the one fiber-shared tree per
+    /// rank serving every mode's TTM (`None` = per-mode `TtmPlan`s in
+    /// the mode states). Maintained by the same ingest/migration
+    /// bookkeeping, per rank instead of per (mode, rank).
+    shared: Option<SharedPlans>,
     plan_builds: usize,
     plan_rebuilds: usize,
     plan_charge_pending: bool,
@@ -770,6 +867,13 @@ impl TuckerSession {
         &self.modes
     }
 
+    /// The per-rank shared CSF trees under [`PlanChoice::SharedCsf`]
+    /// (`None` when the session holds per-mode plans) — read-only
+    /// introspection for tests, benches and memory tooling.
+    pub fn shared_plans(&self) -> Option<&SharedPlans> {
+        self.shared.as_ref()
+    }
+
     /// Build the transport this session's clusters communicate over:
     /// a fresh instance per run, seeded with the session's tuning, with
     /// wedged ranks wedged (they hang silently — the monitor must catch
@@ -817,6 +921,9 @@ impl TuckerSession {
         if let Some(parallel) = self.executor.as_option() {
             cluster = cluster.with_parallel(parallel);
         }
+        if let Some(pin) = self.pin {
+            cluster = cluster.with_pinned(pin);
+        }
         if let Some(inj) = &self.injector {
             // hand the persistent injector state over: events consumed
             // in earlier runs stay consumed, tombstones stay dead
@@ -846,7 +953,10 @@ impl TuckerSession {
         if self.plan_charge_pending {
             // plan compilation is paid exactly once per session — charge
             // it to the first run's TTM bucket, amortized thereafter
-            charge_plan_compilation(&self.modes, &mut cluster);
+            match &self.shared {
+                Some(sp) => charge_shared_plan_compilation(sp, &mut cluster),
+                None => charge_plan_compilation(&self.modes, &mut cluster),
+            }
             self.plan_charge_pending = false;
         }
         let state = HooiState::init(
@@ -966,9 +1076,10 @@ impl TuckerSession {
             }
             let res = {
                 let state = self.state.as_mut().expect("state in flight");
-                state.sweeps(
+                state.sweeps_with(
                     &self.workload.tensor,
                     &self.modes,
+                    self.shared.as_ref(),
                     &self.engine,
                     cluster,
                     1,
@@ -1113,7 +1224,14 @@ impl TuckerSession {
     /// sweep). On error the session — tensor included — is unchanged.
     pub fn ingest(&mut self, delta: &TensorDelta) -> Result<IngestReport, DeltaError> {
         let ndim = self.workload.tensor.ndim();
-        let plan_count = ndim * self.plan.dist.p;
+        // under SharedCsf the unit of maintenance is the rank's one
+        // tree, not a (mode, rank) plan — the localization denominator
+        // follows
+        let plan_count = if self.shared.is_some() {
+            self.plan.dist.p
+        } else {
+            ndim * self.plan.dist.p
+        };
         let (n_appended, n_changed, n_removed) = delta.counts();
         let mut report = IngestReport {
             appended: n_appended,
@@ -1203,9 +1321,9 @@ impl TuckerSession {
         // exactly those plans
         let parallel =
             crate::util::env::phase_executor_parallel(self.executor.as_option());
-        for n in 0..ndim {
-            let mut md = ModeDelta::empty(self.plan.dist.p);
-            {
+        let mds: Vec<ModeDelta> = (0..ndim)
+            .map(|n| {
+                let mut md = ModeDelta::empty(self.plan.dist.p);
                 let assign = &self.plan.dist.policies[n].assign;
                 for &e in &applied.changed {
                     md.changed[assign[e as usize] as usize].push(e);
@@ -1213,19 +1331,65 @@ impl TuckerSession {
                 for &e in &applied.appended {
                     md.appended[assign[e as usize] as usize].push(e);
                 }
-            }
+                md
+            })
+            .collect();
+        for (n, md) in mds.iter().enumerate() {
+            // under SharedCsf the mode states are plan-less: this pass
+            // refreshes the structural state (sharers, σ_n, FM pattern,
+            // element lists) and touches no plans
             let stats = self.modes[n].apply_delta(
                 &self.workload.tensor,
                 &self.workload.idx[n],
                 &self.plan.dist,
                 n,
                 &self.core,
-                &md,
+                md,
                 parallel,
             );
             report.plans_spliced += stats.spliced;
             report.plans_rebuilt += stats.rebuilt;
             report.rebuild_secs += stats.rebuild_secs;
+        }
+        if let Some(shared) = self.shared.as_mut() {
+            // one maintenance pass over the shared trees: a rank is
+            // dirty if ANY mode's policy assigns it a touched element;
+            // each dirty rank splices or rebuilds its single tree
+            // against the just-updated element lists
+            let t = &self.workload.tensor;
+            let modes = &self.modes;
+            let core = &self.core;
+            let mds_ref = &mds;
+            let mut tasks = Vec::new();
+            for (rank, csf) in shared.per_rank.iter_mut().enumerate() {
+                let dirty = mds.iter().any(|md| {
+                    !md.appended[rank].is_empty() || !md.changed[rank].is_empty()
+                });
+                if !dirty {
+                    continue;
+                }
+                tasks.push(move || {
+                    let lists: Vec<&[u32]> =
+                        modes.iter().map(|st| st.elems[rank].as_slice()).collect();
+                    let appended: Vec<&[u32]> = mds_ref
+                        .iter()
+                        .map(|md| md.appended[rank].as_slice())
+                        .collect();
+                    let changed: Vec<&[u32]> = mds_ref
+                        .iter()
+                        .map(|md| md.changed[rank].as_slice())
+                        .collect();
+                    csf.apply_delta(t, core, &lists, &appended, &changed)
+                });
+            }
+            let timed = crate::dist::run_scoped(tasks, parallel);
+            let mut makespan = 0.0f64;
+            for (maint, secs) in timed {
+                report.plans_spliced += maint.spliced;
+                report.plans_rebuilt += maint.rebuilt;
+                makespan = makespan.max(secs);
+            }
+            report.rebuild_secs += makespan;
         }
         self.plan_rebuilds += report.plans_spliced + report.plans_rebuilt;
         self.pending_ingest_secs += report.rebuild_secs;
@@ -1241,6 +1405,11 @@ impl TuckerSession {
             let sharers: Vec<&sched::Sharers> =
                 self.modes.iter().map(|st| &st.sharers).collect();
             self.plan.refresh_from(&self.workload.idx, &sharers, &model);
+            if self.shared.is_some() {
+                // refresh_from re-priced the sweep per-mode: re-apply
+                // the shared tree's cross-mode reuse discount
+                self.plan.cost = self.plan.cost.with_shared_csf(&self.ks, &model);
+            }
             if report.rebalance_modes.is_empty() {
                 self.pending_rebalance.clear();
             } else {
@@ -1264,6 +1433,51 @@ impl TuckerSession {
 
     fn cost_model(&self) -> CostModel {
         CostModel::default().with_net(self.net)
+    }
+
+    /// Under [`PlanChoice::SharedCsf`]: rebuild the shared tree of
+    /// every rank the migration moved elements to or from, under *any*
+    /// mode — ownership changes don't satisfy the append-only splice
+    /// contract, so dirty trees rebuild whole (the per-rank analogue of
+    /// the per-mode migration machinery; must run after the mode
+    /// states' element lists were migrated). Returns the rebuilt-tree
+    /// count and the rebuild makespan.
+    fn rebuild_shared_for(
+        &mut self,
+        migration: &sched::MigrationPlan,
+        parallel: bool,
+    ) -> (usize, f64) {
+        let Some(shared) = self.shared.as_mut() else {
+            return (0, 0.0);
+        };
+        let mut dirty = vec![false; self.plan.dist.p];
+        for mm in &migration.per_mode {
+            for (r, (inc, out)) in
+                mm.incoming.iter().zip(&mm.outgoing).enumerate()
+            {
+                if !inc.is_empty() || !out.is_empty() {
+                    dirty[r] = true;
+                }
+            }
+        }
+        let t = &self.workload.tensor;
+        let modes = &self.modes;
+        let core = &self.core;
+        let mut tasks = Vec::new();
+        for (rank, csf) in shared.per_rank.iter_mut().enumerate() {
+            if !dirty[rank] {
+                continue;
+            }
+            tasks.push(move || {
+                let lists: Vec<&[u32]> =
+                    modes.iter().map(|st| st.elems[rank].as_slice()).collect();
+                csf.rebuild(t, core, &lists);
+            });
+        }
+        let count = tasks.len();
+        let timed = crate::dist::run_scoped(tasks, parallel);
+        let makespan = timed.iter().map(|&((), s)| s).fold(0.0, f64::max);
+        (count, makespan)
     }
 
     /// Re-plan the pending modes with Lite and migrate to the
@@ -1328,7 +1542,14 @@ impl TuckerSession {
             // scheme column, placement().scheme()) report the hybrid
             candidate.scheme.push_str("+Lite-rebal");
         }
-        let candidate_plan = PlacementPlan::compile(candidate, idx, &self.ks, &model);
+        let mut candidate_plan =
+            PlacementPlan::compile(candidate, idx, &self.ks, &model);
+        if self.shared.is_some() {
+            // price the candidate under the same shared-tree reuse
+            // discount the live plan carries — the savings comparison
+            // must be apples-to-apples
+            candidate_plan.cost = candidate_plan.cost.with_shared_csf(&self.ks, &model);
+        }
         let migration = self.plan.diff(&candidate_plan);
         let migration_sim = migration.simulated_secs(&self.net);
         let savings =
@@ -1403,6 +1624,9 @@ impl TuckerSession {
             report.plans_rebuilt += stats.rebuilt;
             rebuild_secs += stats.rebuild_secs;
         }
+        let (trees, tree_secs) = self.rebuild_shared_for(&migration, parallel);
+        report.plans_rebuilt += trees;
+        rebuild_secs += tree_secs;
         self.plan_rebuilds += report.plans_spliced + report.plans_rebuilt;
         self.pending_ingest_secs += rebuild_secs;
         self.pending_redist_secs += migration_sim;
@@ -1469,7 +1693,11 @@ impl TuckerSession {
             // original scheme's
             candidate.scheme.push_str("+evict");
         }
-        let candidate_plan = PlacementPlan::compile(candidate, idx, &self.ks, &model);
+        let mut candidate_plan =
+            PlacementPlan::compile(candidate, idx, &self.ks, &model);
+        if self.shared.is_some() {
+            candidate_plan.cost = candidate_plan.cost.with_shared_csf(&self.ks, &model);
+        }
         let migration = self.plan.diff(&candidate_plan);
         let migration_sim = migration.simulated_secs(&self.net);
         // apply: exactly the diffed (mode, rank) plans, via the same
@@ -1500,6 +1728,9 @@ impl TuckerSession {
             touched += stats.spliced + stats.rebuilt;
             rebuild_secs = rebuild_secs.max(stats.rebuild_secs);
         }
+        let (trees, tree_secs) = self.rebuild_shared_for(&migration, parallel);
+        touched += trees;
+        rebuild_secs = rebuild_secs.max(tree_secs);
         self.plan_rebuilds += touched;
         let old_time = self.plan.dist.time;
         self.plan = candidate_plan;
@@ -1643,10 +1874,11 @@ impl TuckerSession {
             let res = {
                 let state =
                     self.state.as_ref().expect("decomposition state in flight");
-                state.outcome(
+                state.outcome_with(
                     &self.workload.tensor,
                     &self.plan.dist,
                     &self.modes,
+                    self.shared.as_ref(),
                     &mut cluster,
                     self.accounting,
                 )
@@ -1918,6 +2150,7 @@ mod tests {
             .ranks(4)
             .core(CoreRanks::Uniform(3))
             .seed(9)
+            .plan(PlanChoice::PerMode)
             .build()
             .unwrap();
         assert_eq!(s.plan_rebuilds(), 0);
@@ -1930,6 +2163,61 @@ mod tests {
         assert_eq!(s.plan_builds(), 1, "never a full re-prepare");
         let d = s.decompose();
         assert!(d.fit().is_finite());
+    }
+
+    #[test]
+    fn shared_csf_session_is_bit_identical_to_per_mode() {
+        let w = tiny_workload();
+        // lite: multi-policy, the tree degrades to streams; mediumg:
+        // uni placement, the tree carries real views and the ingest
+        // splice fast path — both must land the per-mode bits
+        for scheme in ["lite", "mediumg"] {
+            let mk = |choice| {
+                TuckerSession::builder(w.clone())
+                    .scheme(SchemeChoice::by_name(scheme).unwrap())
+                    .ranks(4)
+                    .core(CoreRanks::Uniform(4))
+                    .invocations(2)
+                    .seed(13)
+                    .plan(choice)
+                    .build()
+                    .unwrap()
+            };
+            let mut a = mk(PlanChoice::PerMode);
+            let mut b = mk(PlanChoice::SharedCsf);
+            assert!(a.shared_plans().is_none());
+            assert_eq!(b.shared_plans().unwrap().per_rank.len(), 4);
+            // the shared estimate prices the reuse: never above per-mode
+            assert!(
+                b.placement().cost.secs_per_sweep
+                    <= a.placement().cost.secs_per_sweep,
+                "{scheme}"
+            );
+            let da = a.decompose();
+            let db = b.decompose();
+            for (fa, fb) in da.factors.iter().zip(&db.factors) {
+                assert_eq!(fa.data, fb.data, "{scheme}");
+            }
+            assert_eq!(da.core.data, db.core.data, "{scheme}");
+            assert_eq!(da.record.fit, db.record.fit, "{scheme}");
+            // one delta through both maintenance paths: the shared
+            // denominator counts trees (one per rank), not (mode, rank)
+            // plans, and the next decompose stays bit-identical
+            let delta =
+                TensorDelta::new().append(&[0, 0, 0], 0.5).append(&[1, 1, 1], -0.25);
+            let ra = a.ingest(&delta).unwrap();
+            let rb = b.ingest(&delta).unwrap();
+            assert_eq!(ra.plan_count, 12, "{scheme}: 3 modes x 4 ranks");
+            assert_eq!(rb.plan_count, 4, "{scheme}: one tree per rank");
+            assert!(rb.plans_touched() >= 1, "{scheme}");
+            assert!(rb.plans_touched() <= rb.plan_count, "{scheme}");
+            let da = a.decompose();
+            let db = b.decompose();
+            for (fa, fb) in da.factors.iter().zip(&db.factors) {
+                assert_eq!(fa.data, fb.data, "{scheme}");
+            }
+            assert_eq!(da.core.data, db.core.data, "{scheme}");
+        }
     }
 
     #[test]

@@ -126,6 +126,10 @@ pub struct SimCluster {
     /// another's kernels (e.g. the TTM microkernel names).
     kernels: Vec<(String, Vec<&'static str>)>,
     parallel: bool,
+    /// Pin parallel-executor workers to CPUs with static round-robin
+    /// rank assignment (NUMA first-touch placement; see
+    /// [`run_scoped_pinned`]).
+    pin: bool,
     /// Armed fault schedule (None = fault-free run; panics are still
     /// caught and surfaced as failures).
     injector: Option<FaultInjector>,
@@ -149,6 +153,7 @@ impl SimCluster {
     /// their choice through [`SimCluster::with_parallel`]).
     pub fn new(p: usize) -> SimCluster {
         let parallel = crate::util::env::phase_executor_parallel(None);
+        let pin = crate::util::env::pin_threads(None);
         let choice = crate::util::env::transport_choice(None);
         SimCluster {
             p,
@@ -164,6 +169,7 @@ impl SimCluster {
             last_phase: Vec::new(),
             kernels: Vec::new(),
             parallel,
+            pin,
             injector: None,
             sweep: 0,
             phase_idx: 0,
@@ -186,6 +192,20 @@ impl SimCluster {
     pub fn with_parallel(mut self, on: bool) -> SimCluster {
         self.parallel = on;
         self
+    }
+
+    /// Force worker pinning on or off (overrides the
+    /// `TUCKER_PIN_THREADS` env default). Only meaningful with the
+    /// parallel executor; pinned phases assign ranks to workers
+    /// statically so first-touch pages stay on their worker's socket.
+    pub fn with_pinned(mut self, on: bool) -> SimCluster {
+        self.pin = on;
+        self
+    }
+
+    /// Is worker pinning active?
+    pub fn is_pinned(&self) -> bool {
+        self.pin
     }
 
     /// Builder form of [`set_transport`](Self::set_transport).
@@ -410,7 +430,7 @@ impl SimCluster {
             .map(|task| move || catch_unwind(AssertUnwindSafe(task)))
             .collect();
         let t0 = Instant::now();
-        let timed = run_scoped(guarded, self.parallel);
+        let timed = run_scoped_pinned(guarded, self.parallel, self.pin);
         let wall = t0.elapsed().as_secs_f64();
         let mut times = Vec::with_capacity(n);
         let mut results: Vec<Option<T>> = Vec::with_capacity(n);
@@ -600,6 +620,25 @@ where
     T: Send,
     F: FnOnce() -> T + Send,
 {
+    run_scoped_pinned(tasks, parallel, false)
+}
+
+/// [`run_scoped`] with optional NUMA-aware worker pinning. With `pin`
+/// on, worker `w` pins itself to CPU `w` and runs the statically
+/// assigned tasks `w, w+workers, w+2·workers, …` instead of claiming
+/// off the shared counter: rank `r`'s work lands on the same CPU every
+/// phase, so the pages its first task touches (plan buffers, the Z
+/// arena a workspace grows on first assembly) stay local to that
+/// socket, and per-rank timings stop depending on which worker happened
+/// to claim the rank. Pinning is best-effort (`sched_setaffinity` may
+/// be denied under cpuset restrictions; non-Linux hosts no-op) and
+/// bit-neutral either way: results are slot-indexed, so assignment
+/// order never changes them.
+pub fn run_scoped_pinned<T, F>(tasks: Vec<F>, parallel: bool, pin: bool) -> Vec<(T, f64)>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
     let n = tasks.len();
     let cores = std::thread::available_parallelism()
         .map(|c| c.get())
@@ -619,21 +658,36 @@ where
         tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let done: Vec<Mutex<Option<(T, f64)>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
+    let run_task = |i: usize| {
+        let task = slots[i]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("each task is claimed exactly once");
+        let t0 = Instant::now();
+        let r = task();
+        *done[i].lock().unwrap() = Some((r, t0.elapsed().as_secs_f64()));
+    };
     std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+        for w in 0..workers {
+            let run_task = &run_task;
+            let next = &next;
+            s.spawn(move || {
+                if pin {
+                    pin_current_thread(w);
+                    // static round-robin: stable task→CPU mapping
+                    for i in (w..n).step_by(workers) {
+                        run_task(i);
+                    }
+                } else {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        run_task(i);
+                    }
                 }
-                let task = slots[i]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("each task is claimed exactly once");
-                let t0 = Instant::now();
-                let r = task();
-                *done[i].lock().unwrap() = Some((r, t0.elapsed().as_secs_f64()));
             });
         }
     });
@@ -645,6 +699,33 @@ where
         })
         .collect()
 }
+
+/// Pin the calling thread to one CPU via `sched_setaffinity` (the
+/// declaration is local — the crate links libc anyway and takes no
+/// crate dependencies). Best-effort: failures (cpuset restrictions,
+/// CPU index beyond the mask) leave the thread unpinned.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(cpu: usize) {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const usize) -> i32;
+    }
+    const BITS: usize = usize::BITS as usize;
+    // 1024-CPU mask, the kernel's historical cpu_set_t width
+    let mut mask = [0usize; 1024 / BITS];
+    let word = cpu / BITS;
+    if word >= mask.len() {
+        return;
+    }
+    mask[word] |= 1usize << (cpu % BITS);
+    // Safety: pid 0 = calling thread; the mask buffer outlives the call
+    // and its length is passed exactly.
+    unsafe {
+        let _ = sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_cpu: usize) {}
 
 #[cfg(test)]
 mod tests {
@@ -665,6 +746,25 @@ mod tests {
         let sv: Vec<u64> = ser.iter().map(|(r, _)| *r).collect();
         assert_eq!(pv, sv);
         assert!(par.iter().all(|&(_, s)| s >= 0.0));
+    }
+
+    #[test]
+    fn pinned_executor_matches_unpinned_results() {
+        // static round-robin under pinning returns the same slot-ordered
+        // results as dynamic claiming (pinning itself is best-effort)
+        let mk = || {
+            (0..7u64)
+                .map(|i| move || (0..2_000).map(|j| i ^ j).sum::<u64>())
+                .collect::<Vec<_>>()
+        };
+        let pinned: Vec<u64> =
+            run_scoped_pinned(mk(), true, true).into_iter().map(|(r, _)| r).collect();
+        let plain: Vec<u64> =
+            run_scoped_pinned(mk(), true, false).into_iter().map(|(r, _)| r).collect();
+        let serial: Vec<u64> =
+            run_scoped_pinned(mk(), false, true).into_iter().map(|(r, _)| r).collect();
+        assert_eq!(pinned, plain);
+        assert_eq!(pinned, serial);
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod fault;
 pub mod net;
 pub mod transport;
 
-pub use cluster::{cat, run_scoped, ConcurrencyReport, SimCluster};
+pub use cluster::{cat, run_scoped, run_scoped_pinned, ConcurrencyReport, SimCluster};
 pub use fault::{FailureKind, FaultInjector, FaultKind, FaultPlan, FaultSpec, RankFailure};
 pub use net::NetModel;
 pub use transport::{

@@ -1,0 +1,905 @@
+//! One shared CSF plan per rank: all N mode TTMs of a HOOI sweep served
+//! from a single hierarchical layout, with cross-mode reuse of the
+//! partial Kronecker-product fiber contributions.
+//!
+//! ## Why one tree can serve every mode
+//!
+//! For every non-leaf mode `n ≥ 1` the fast Kronecker factor is mode 0
+//! (`others[0] == 0`), so each of those modes' [`TtmPlan`] runs is a
+//! *fiber*: the set of elements with every coordinate fixed except
+//! `i_0`, sorted by element id, lane-padded by repeating the last real
+//! `fa` index with `val == 0.0`. The fiber set is a property of the
+//! element list, not of the mode — so when a rank owns the *same*
+//! element set in every mode (the uniform-partition schemes MediumG and
+//! HyperG guarantee exactly this), the per-mode plans of modes
+//! `1..N-1` all encode the same fibers with byte-identical `fa`/`vals`
+//! blocks, merely grouped under different row/run orderings.
+//!
+//! A [`CsfPlan`] therefore stores the leaf streams **once**, on the
+//! *spine* — the mode-`N-1` [`TtmPlan`], whose runs are the canonical
+//! fibers — and represents each other non-leaf mode as a [`CsfView`]:
+//! the mode's row/run/outer tables plus a `fiber` map from view run to
+//! spine run. A view owns no leaf streams; [`CsfModeView`] adapts it to
+//! the [`ModePlan`] assembly contract by aliasing the spine's streams
+//! through the fiber map. Mode 0 (whose fast factor is mode 1, not
+//! mode 0) always keeps its own stream plan, as does any mode whose
+//! element set differs from the spine's (Lite/CoarseG split slices
+//! across ranks per mode — the tree degrades to per-mode streams under
+//! one roof: unified bookkeeping, no arithmetic reuse, still
+//! bit-exact).
+//!
+//! ## Cross-mode contribution reuse
+//!
+//! Every fused TTM assembly starts by accumulating, per run, the
+//! value-weighted fast-factor combination `acc = Σ_s vals[s]·F_0[fa[s]]`
+//! (`kernel::accumulate_run`). Since shared-tree view runs *are* spine
+//! fibers, that per-fiber accumulator is identical across modes
+//! `1..N-1` — it depends only on F_0 and the tensor values, neither of
+//! which changes between mode 1's TTM and mode N-1's within a sweep
+//! (HOOI updates F_n *after* mode n's TTM, and F_0 only at mode 0).
+//! So the first view assembly of a sweep **fills** a per-fiber cache in
+//! the rank's [`PlanWorkspace`] and every later non-leaf mode **uses**
+//! it, skipping the accumulation (the `2·nnz·K_0` term — the dominant
+//! share of the paper's `2·nnz·K̂` TTM cost) and paying only the
+//! Kronecker expansion. The cache holds the same accumulator tile the
+//! cache-off assembly would have produced (same slots, same kernel,
+//! same operation order), so reuse is bit-identical per kernel — the
+//! `SharedCsf ≡ PerMode` contract `tests/csf.rs` pins across kernels,
+//! executors, and the ingest/rebalance/recovery lifecycle.
+//!
+//! ## Unified maintenance
+//!
+//! Streaming updates touch **one structure per rank** instead of N
+//! plans: [`CsfPlan::apply_delta`] splices the spine and any stream
+//! components through the single `TtmPlan` splice path and re-derives
+//! the views from the spliced spine (views are pure functions of the
+//! spine), falling back to one whole-tree rebuild when the batch is
+//! large, non-uniform across modes, or hits an unknown coordinate.
+//! Dirty tracking is per *subtree* (rank), not per (mode, rank) × N —
+//! `IngestReport::plan_count` reports `p` shared trees instead of
+//! `ndim·p` plans when a session runs `PlanChoice::SharedCsf`.
+
+use super::kernel::pad_to_lanes;
+use super::plan::{
+    assemble_over, check_lane_invariants_for, check_lane_invariants_over, fused_flops,
+    CachePolicy, ModePlan, PlanWorkspace, TtmPlan,
+};
+use super::ranks::CoreRanks;
+use super::ttm::{other_modes, LocalZ};
+use crate::linalg::Mat;
+use crate::runtime::Engine;
+use crate::tensor::SparseTensor;
+
+/// One mode of a [`CsfPlan`] below the spine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CsfLower {
+    /// The mode owns its own leaf streams (mode 0 always; any mode whose
+    /// element set differs from the spine's).
+    Stream(TtmPlan),
+    /// The mode shares the spine's fibers through a fiber map.
+    View(CsfView),
+}
+
+/// A shared-tree mode view: the row/run/outer grouping tables of a
+/// per-mode [`TtmPlan`] plus the `fiber` map into the spine's runs —
+/// and **no leaf streams**. Field semantics match [`TtmPlan`]'s
+/// equally-named fields; [`CsfModeView`] adapts a view to [`ModePlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsfView {
+    pub mode: usize,
+    pub oks: Vec<usize>,
+    pub khat: usize,
+    pub kp: usize,
+    pub others: Vec<usize>,
+    pub rows: Vec<u32>,
+    pub row_runs: Vec<u32>,
+    pub outer_c: Vec<u32>,
+    pub outer_ptr: Vec<u32>,
+    pub run_b: Vec<u32>,
+    pub run_len: Vec<u32>,
+    /// Spine run index of each view run — a bijection onto
+    /// `0..spine.run_b.len()` (each spine fiber appears exactly once).
+    pub fiber: Vec<u32>,
+    nnz: usize,
+}
+
+impl CsfView {
+    /// Bytes of this view's grouping tables (4 bytes per entry). The
+    /// leaf streams it reads belong to the spine and are charged there.
+    pub fn table_bytes(&self) -> u64 {
+        4 * (self.rows.len()
+            + self.row_runs.len()
+            + self.outer_c.len()
+            + self.outer_ptr.len()
+            + self.run_b.len()
+            + self.run_len.len()
+            + self.fiber.len()) as u64
+    }
+}
+
+/// Borrowed [`ModePlan`] adapter pairing a [`CsfView`] with its spine:
+/// run `j` reads the spine's lane-padded slots of fiber `fiber[j]`, and
+/// its contribution-cache slot *is* the spine run index — which is what
+/// lets one cache fill serve every non-leaf mode.
+#[derive(Debug, Clone, Copy)]
+pub struct CsfModeView<'a> {
+    pub view: &'a CsfView,
+    pub spine: &'a TtmPlan,
+}
+
+impl ModePlan for CsfModeView<'_> {
+    fn mode(&self) -> usize {
+        self.view.mode
+    }
+    fn nnz(&self) -> usize {
+        self.view.nnz
+    }
+    fn oks(&self) -> &[usize] {
+        &self.view.oks
+    }
+    fn khat(&self) -> usize {
+        self.view.khat
+    }
+    fn kp(&self) -> usize {
+        self.view.kp
+    }
+    fn others(&self) -> &[usize] {
+        &self.view.others
+    }
+    fn rows(&self) -> &[u32] {
+        &self.view.rows
+    }
+    fn row_runs(&self) -> &[u32] {
+        &self.view.row_runs
+    }
+    fn outer_c(&self) -> &[u32] {
+        &self.view.outer_c
+    }
+    fn outer_ptr(&self) -> &[u32] {
+        &self.view.outer_ptr
+    }
+    fn run_b(&self) -> &[u32] {
+        &self.view.run_b
+    }
+    fn run_len(&self, j: usize) -> usize {
+        self.view.run_len[j] as usize
+    }
+    fn run_slots(&self, j: usize) -> (usize, usize) {
+        let f = self.view.fiber[j] as usize;
+        (self.spine.slot_ptr[f] as usize, self.spine.slot_ptr[f + 1] as usize)
+    }
+    fn streams(&self) -> (&[u32], &[f32]) {
+        (&self.spine.fa, &self.spine.vals)
+    }
+    fn cache_slot(&self, j: usize) -> usize {
+        self.view.fiber[j] as usize
+    }
+}
+
+/// Maintenance outcome of one shared tree: at most one unit of work per
+/// rank — the dirty-subtree accounting `IngestReport` aggregates.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CsfMaint {
+    /// 1 when the update was absorbed by splicing the shared tree.
+    pub spliced: usize,
+    /// 1 when the whole tree was rebuilt.
+    pub rebuilt: usize,
+}
+
+/// One rank's shared CSF plan: the spine [`TtmPlan`] (mode `N-1`, owner
+/// of the canonical fiber streams) plus one [`CsfLower`] per mode
+/// `0..N-1`. See the module docs for the layout and reuse model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsfPlan {
+    /// Mode-`N-1` plan; its runs are the tree's fibers and its
+    /// `fa`/`vals` are the only leaf streams the views read.
+    pub spine: TtmPlan,
+    /// Modes `0..N-1` (mode 0 is always a `Stream`).
+    pub lower: Vec<CsfLower>,
+    ndim: usize,
+}
+
+impl CsfPlan {
+    /// Build one rank's shared tree from its per-mode element lists
+    /// (`elems[n]` is the rank's list for mode `n`; `elems.len() ==
+    /// t.ndim()`). Mode `n ∈ 1..N-1` becomes a [`CsfView`] exactly when
+    /// its element *set* equals mode `N-1`'s — deterministic, so two
+    /// builds over the same lists are `==`.
+    pub fn build(t: &SparseTensor, elems: &[&[u32]], core: &CoreRanks) -> CsfPlan {
+        let ndim = t.ndim();
+        assert!(ndim == 3 || ndim == 4, "HOOI supports 3-D and 4-D tensors");
+        assert_eq!(elems.len(), ndim, "one element list per mode");
+        let spine = TtmPlan::build_with(t, ndim - 1, elems[ndim - 1], core);
+        let mut spine_set: Vec<u32> = elems[ndim - 1].to_vec();
+        spine_set.sort_unstable();
+        let mut lower = Vec::with_capacity(ndim - 1);
+        lower.push(CsfLower::Stream(TtmPlan::build_with(t, 0, elems[0], core)));
+        for n in 1..ndim - 1 {
+            let mut set: Vec<u32> = elems[n].to_vec();
+            set.sort_unstable();
+            if set == spine_set {
+                lower.push(CsfLower::View(derive_view(&spine, n, core)));
+            } else {
+                lower.push(CsfLower::Stream(TtmPlan::build_with(t, n, elems[n], core)));
+            }
+        }
+        CsfPlan { spine, lower, ndim }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.ndim
+    }
+
+    /// Does any mode share the spine's fibers? (When false the tree is
+    /// per-mode streams under one roof — no cache, no reuse.)
+    pub fn has_views(&self) -> bool {
+        self.lower.iter().any(|l| matches!(l, CsfLower::View(_)))
+    }
+
+    /// Real elements the given mode's component covers.
+    pub fn mode_nnz(&self, mode: usize) -> usize {
+        if mode == self.ndim - 1 {
+            return self.spine.nnz();
+        }
+        match &self.lower[mode] {
+            CsfLower::Stream(p) => p.nnz(),
+            CsfLower::View(v) => v.nnz,
+        }
+    }
+
+    /// Assemble Z for `mode`, with the sweep-scoped contribution-cache
+    /// lifecycle: mode 0 (always a stream) invalidates the cache — its
+    /// TTM precedes the F_0 update that stales any previous sweep's
+    /// contributions — the first view of the sweep fills it, and every
+    /// later view plus the spine reuses it. Callers must assemble modes
+    /// in sweep order `0..N-1` (the HOOI driver always does); the cache
+    /// additionally shape-guards itself against structural changes.
+    /// Engine routing per component matches [`TtmPlan::assemble`]; the
+    /// batched engine path runs cache-off (identical batch boundaries,
+    /// no per-run accumulator to reuse).
+    pub fn assemble(
+        &self,
+        mode: usize,
+        factors: &[Mat],
+        engine: &Engine,
+        ws: &mut PlanWorkspace,
+    ) -> LocalZ {
+        let spine_runs = self.spine.run_b.len();
+        let kp = self.spine.kp;
+        if mode == self.ndim - 1 {
+            let fused = engine.prefers_fused_ttm() || !ModePlan::uniform_core(&self.spine);
+            let cache = if fused && ws.contrib_matches(spine_runs, kp) {
+                CachePolicy::Use
+            } else {
+                CachePolicy::Off
+            };
+            return assemble_over(&self.spine, factors, engine, ws, cache);
+        }
+        match &self.lower[mode] {
+            CsfLower::Stream(p) => {
+                if mode == 0 {
+                    ws.contrib_invalidate();
+                }
+                p.assemble(factors, engine, ws)
+            }
+            CsfLower::View(v) => {
+                let mv = CsfModeView { view: v, spine: &self.spine };
+                let fused = engine.prefers_fused_ttm() || !mv.uniform_core();
+                let cache = if !fused {
+                    CachePolicy::Off
+                } else if ws.contrib_matches(spine_runs, kp) {
+                    CachePolicy::Use
+                } else {
+                    ws.contrib_prepare(spine_runs, kp);
+                    CachePolicy::Fill
+                };
+                let z = assemble_over(&mv, factors, engine, ws, cache);
+                if cache == CachePolicy::Fill {
+                    ws.contrib_commit();
+                }
+                z
+            }
+        }
+    }
+
+    /// Apply one rank's ingest delta to the shared tree — the single
+    /// splice/rebuild path replacing the N per-mode ones. `elems[n]`,
+    /// `appended[n]`, `changed[n]` are this rank's post-update element
+    /// list, appended ids (ascending), and changed ids for mode `n`.
+    ///
+    /// Splice fast paths (mirroring the per-mode driver guards): a
+    /// changes-only batch splices per component with no uniformity
+    /// requirement (values can't flip the view/stream split); a batch
+    /// with appends must be small (≤ 64 updates, ≤ nnz/4) *and* uniform
+    /// — the same appended/changed ids in every mode, which is what the
+    /// uni placement schemes produce and what guarantees the view/stream
+    /// split cannot flip (appended ids are new, so adding one identical
+    /// id set to two element sets preserves their (in)equality). The
+    /// spine and every stream component splice through the `TtmPlan`
+    /// paths; views are then re-derived from the spliced spine. Any
+    /// other delta rebuilds the whole tree. Either way the result is
+    /// `==` to a fresh [`CsfPlan::build`] on the updated lists — the
+    /// shared-tree extension of the splice ≡ fresh-build contract.
+    pub fn apply_delta(
+        &mut self,
+        t: &SparseTensor,
+        core: &CoreRanks,
+        elems: &[&[u32]],
+        appended: &[&[u32]],
+        changed: &[&[u32]],
+    ) -> CsfMaint {
+        let ndim = self.ndim;
+        let total: usize =
+            (0..ndim).map(|n| appended[n].len() + changed[n].len()).sum();
+        if total == 0 {
+            return CsfMaint::default();
+        }
+        if (0..ndim).all(|n| appended[n].is_empty()) {
+            // Value-only delta: the structure is untouched, so each
+            // component splices its own mode's changed ids without any
+            // uniformity requirement — a view's element set equals the
+            // spine's, so its changed set coincides with the spine's and
+            // the spine splice covers it (views read values through the
+            // spine and need no refresh).
+            let updates = changed.iter().map(|c| c.len()).max().unwrap_or(0);
+            let small = updates <= 64 && updates * 4 <= self.spine.nnz().max(1);
+            if small && self.try_splice_values(t, changed) {
+                return CsfMaint { spliced: 1, rebuilt: 0 };
+            }
+            *self = CsfPlan::build(t, elems, core);
+            return CsfMaint { spliced: 0, rebuilt: 1 };
+        }
+        let uniform = (1..ndim)
+            .all(|n| appended[n] == appended[0] && changed[n] == changed[0]);
+        let updates = appended[0].len() + changed[0].len();
+        let small = updates <= 64 && updates * 4 <= self.spine.nnz().max(1);
+        if uniform && small && self.try_splice(t, appended[0], changed[0]) {
+            self.refresh_views(core);
+            CsfMaint { spliced: 1, rebuilt: 0 }
+        } else {
+            *self = CsfPlan::build(t, elems, core);
+            CsfMaint { spliced: 0, rebuilt: 1 }
+        }
+    }
+
+    /// Rebuild this rank's tree from scratch — the migration/recovery
+    /// path (`MigrationPlan` apply and survivor re-placement both hand a
+    /// rank a reshaped element set; ownership changes don't satisfy the
+    /// append-only splice contract, so dirty subtrees rebuild whole).
+    pub fn rebuild(&mut self, t: &SparseTensor, core: &CoreRanks, elems: &[&[u32]]) {
+        *self = CsfPlan::build(t, elems, core);
+    }
+
+    /// Per-component value splice for a changes-only delta: the spine
+    /// takes mode N−1's changed ids, each stream component its own
+    /// mode's. `false` when a changed coordinate is missing (caller
+    /// rebuilds; partial mutation is fine — the rebuild overwrites the
+    /// whole tree).
+    fn try_splice_values(&mut self, t: &SparseTensor, changed: &[&[u32]]) -> bool {
+        for &eu in changed[self.ndim - 1] {
+            let e = eu as usize;
+            let (row, a, b, c) = plan_coords(&self.spine, t, e);
+            if !self.spine.splice_value(row, a, b, c, t.vals[e]) {
+                return false;
+            }
+        }
+        for (n, low) in self.lower.iter_mut().enumerate() {
+            if let CsfLower::Stream(p) = low {
+                for &eu in changed[n] {
+                    let e = eu as usize;
+                    let (row, a, b, c) = plan_coords(p, t, e);
+                    if !p.splice_value(row, a, b, c, t.vals[e]) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Splice `changed` then `appended` (id order) into the spine and
+    /// every stream component. `false` when a changed coordinate is
+    /// missing (caller rebuilds; partial mutation is fine — the rebuild
+    /// overwrites the whole tree).
+    fn try_splice(&mut self, t: &SparseTensor, appended: &[u32], changed: &[u32]) -> bool {
+        for &eu in changed {
+            let e = eu as usize;
+            let (row, a, b, c) = plan_coords(&self.spine, t, e);
+            if !self.spine.splice_value(row, a, b, c, t.vals[e]) {
+                return false;
+            }
+            for low in &mut self.lower {
+                if let CsfLower::Stream(p) = low {
+                    let (row, a, b, c) = plan_coords(p, t, e);
+                    if !p.splice_value(row, a, b, c, t.vals[e]) {
+                        return false;
+                    }
+                }
+            }
+        }
+        for &eu in appended {
+            let e = eu as usize;
+            let (row, a, b, c) = plan_coords(&self.spine, t, e);
+            self.spine.splice_append(row, a, b, c, t.vals[e]);
+            for low in &mut self.lower {
+                if let CsfLower::Stream(p) = low {
+                    let (row, a, b, c) = plan_coords(p, t, e);
+                    p.splice_append(row, a, b, c, t.vals[e]);
+                }
+            }
+        }
+        true
+    }
+
+    /// Re-derive every view from the (possibly spliced) spine. Views
+    /// are pure functions of the spine, so this lands exactly the
+    /// grouping tables a fresh build would.
+    fn refresh_views(&mut self, core: &CoreRanks) {
+        for n in 1..self.ndim - 1 {
+            if matches!(self.lower[n], CsfLower::View(_)) {
+                self.lower[n] = CsfLower::View(derive_view(&self.spine, n, core));
+            }
+        }
+    }
+
+    /// Bytes of the whole tree: spine streams, stream components, view
+    /// tables, plus the per-fiber contribution cache the workspace
+    /// carries when any view exists (`spine runs × kp` floats) — what
+    /// `memory_model` charges per rank under `PlanChoice::SharedCsf`.
+    pub fn stream_bytes(&self) -> u64 {
+        let mut b = self.spine.stream_bytes();
+        for low in &self.lower {
+            b += match low {
+                CsfLower::Stream(p) => p.stream_bytes(),
+                CsfLower::View(v) => v.table_bytes(),
+            };
+        }
+        if self.has_views() {
+            b += 4 * (self.spine.run_b.len() * self.spine.kp) as u64;
+        }
+        b
+    }
+
+    /// Analytic FLOPs of one sweep's N fused TTMs through this tree
+    /// (first view fills, later views and the spine reuse).
+    pub fn sweep_flops(&self) -> f64 {
+        let mut filled = false;
+        let mut fl = 0.0;
+        for low in &self.lower {
+            fl += match low {
+                CsfLower::Stream(p) => fused_flops(p, false),
+                CsfLower::View(v) => {
+                    let mv = CsfModeView { view: v, spine: &self.spine };
+                    let f = fused_flops(&mv, filled);
+                    filled = true;
+                    f
+                }
+            };
+        }
+        fl + fused_flops(&self.spine, filled)
+    }
+
+    /// Analytic FLOPs the same sweep costs without sharing (every mode
+    /// pays its full accumulation) — the per-mode baseline the reuse is
+    /// measured against in `benches/ablate_plan.rs`.
+    pub fn per_mode_flops(&self) -> f64 {
+        let mut fl = fused_flops(&self.spine, false);
+        for low in &self.lower {
+            fl += match low {
+                CsfLower::Stream(p) => fused_flops(p, false),
+                CsfLower::View(v) => {
+                    fused_flops(&CsfModeView { view: v, spine: &self.spine }, false)
+                }
+            };
+        }
+        fl
+    }
+}
+
+/// `(row, a, b, c)` of tensor element `e` in `p`'s coordinate roles
+/// (`c` is 0 for 3-D plans — the `TtmPlan` splice convention).
+fn plan_coords(p: &TtmPlan, t: &SparseTensor, e: usize) -> (u32, u32, u32, u32) {
+    let c = if p.others.len() == 3 { t.coord(p.others[2], e) } else { 0 };
+    (
+        t.coord(p.mode, e),
+        t.coord(p.others[0], e),
+        t.coord(p.others[1], e),
+        c,
+    )
+}
+
+/// Derive mode `mode`'s view from the spine: enumerate the spine's runs
+/// with their fiber coordinates, re-sort them under the view mode's
+/// (row, slowest, slow) ordering — the exact sort keys
+/// `TtmPlan::build_with` uses for that mode — and emit the grouping
+/// tables. Keys are unique (one per fiber), so the result is the
+/// deterministic bijection the bit-exactness contract needs.
+fn derive_view(spine: &TtmPlan, mode: usize, core: &CoreRanks) -> CsfView {
+    let ndim = spine.others.len() + 1;
+    debug_assert!(mode >= 1 && mode < ndim - 1);
+    let ks = core.resolve(ndim);
+    let others = other_modes(ndim, mode);
+    let oks: Vec<usize> = others.iter().map(|&m| ks[m]).collect();
+    let khat: usize = oks.iter().product();
+    let kp = pad_to_lanes(oks[0]);
+    debug_assert_eq!(kp, spine.kp, "all non-leaf modes share the fast tile width");
+    // (row, c, b, spine_run) per spine run, in the view's coordinate
+    // roles: row = coord(mode), b = coord(others[1]), c = coord(others[2])
+    let mut keys: Vec<(u32, u32, u32, u32)> = Vec::with_capacity(spine.run_b.len());
+    if ndim == 3 {
+        // spine: mode 2, runs keyed (i2 = row, i1 = run_b); view mode 1
+        // has row = i1, b = i2, no outer level
+        for r in 0..spine.rows.len() {
+            for j in spine.row_runs[r] as usize..spine.row_runs[r + 1] as usize {
+                keys.push((spine.run_b[j], 0, spine.rows[r], j as u32));
+            }
+        }
+    } else {
+        // spine: mode 3 — fiber coords i1 = run_b, i2 = outer_c, i3 = row
+        for r in 0..spine.rows.len() {
+            for oj in spine.row_runs[r] as usize..spine.row_runs[r + 1] as usize {
+                let i2 = spine.outer_c[oj];
+                let i3 = spine.rows[r];
+                for j in spine.outer_ptr[oj] as usize..spine.outer_ptr[oj + 1] as usize
+                {
+                    let i1 = spine.run_b[j];
+                    // mode 1: others [0,2,3] → row i1, b i2, c i3
+                    // mode 2: others [0,1,3] → row i2, b i1, c i3
+                    let (row, b) = if mode == 1 { (i1, i2) } else { (i2, i1) };
+                    keys.push((row, i3, b, j as u32));
+                }
+            }
+        }
+    }
+    keys.sort_unstable();
+    let four = ndim == 4;
+    let mut rows: Vec<u32> = Vec::new();
+    let mut row_runs = vec![0u32];
+    let mut outer_c: Vec<u32> = Vec::new();
+    let mut outer_ptr: Vec<u32> = if four { vec![0u32] } else { Vec::new() };
+    let mut run_b: Vec<u32> = Vec::with_capacity(keys.len());
+    let mut run_len: Vec<u32> = Vec::with_capacity(keys.len());
+    let mut fiber: Vec<u32> = Vec::with_capacity(keys.len());
+    let mut i = 0usize;
+    while i < keys.len() {
+        let row = keys[i].0;
+        while i < keys.len() && keys[i].0 == row {
+            if four {
+                let c = keys[i].1;
+                while i < keys.len() && keys[i].0 == row && keys[i].1 == c {
+                    let (_, _, b, j) = keys[i];
+                    run_b.push(b);
+                    run_len.push(spine.run_len[j as usize]);
+                    fiber.push(j);
+                    i += 1;
+                }
+                outer_c.push(c);
+                outer_ptr.push(run_b.len() as u32);
+            } else {
+                let (_, _, b, j) = keys[i];
+                run_b.push(b);
+                run_len.push(spine.run_len[j as usize]);
+                fiber.push(j);
+                i += 1;
+            }
+        }
+        rows.push(row);
+        row_runs.push(if four { outer_c.len() as u32 } else { run_b.len() as u32 });
+    }
+    CsfView {
+        mode,
+        oks,
+        khat,
+        kp,
+        others,
+        rows,
+        row_runs,
+        outer_c,
+        outer_ptr,
+        run_b,
+        run_len,
+        fiber,
+        nnz: spine.nnz(),
+    }
+}
+
+/// The session-level bundle `PlanChoice::SharedCsf` threads through the
+/// HOOI driver: one shared tree per rank plus the measured per-rank
+/// build times (charged to the TTM phase like per-mode compilation).
+#[derive(Debug, Clone)]
+pub struct SharedPlans {
+    pub per_rank: Vec<CsfPlan>,
+    /// Wall-clock seconds each rank's tree took to build.
+    pub plan_secs: Vec<f64>,
+}
+
+impl SharedPlans {
+    /// Total plan bytes across ranks (see [`CsfPlan::stream_bytes`]).
+    pub fn stream_bytes(&self) -> u64 {
+        self.per_rank.iter().map(CsfPlan::stream_bytes).sum()
+    }
+
+    /// Analytic per-sweep TTM FLOPs with cross-mode reuse.
+    pub fn sweep_flops(&self) -> f64 {
+        self.per_rank.iter().map(CsfPlan::sweep_flops).sum()
+    }
+
+    /// Analytic per-sweep TTM FLOPs without reuse (per-mode baseline).
+    pub fn per_mode_flops(&self) -> f64 {
+        self.per_rank.iter().map(CsfPlan::per_mode_flops).sum()
+    }
+}
+
+/// Assert every invariant of one shared tree against the per-mode
+/// element lists it encodes: the spine and every stream component pass
+/// the [`TtmPlan`] lane invariants; every view's fiber map is a
+/// bijection onto the spine's runs with matching run lengths, and the
+/// fiber-mapped view passes the same lane/multiset invariants through
+/// its [`CsfModeView`] adapter.
+pub fn check_csf_invariants(t: &SparseTensor, plan: &CsfPlan, elems: &[&[u32]]) {
+    let ndim = plan.ndim();
+    assert_eq!(elems.len(), ndim);
+    assert_eq!(plan.lower.len(), ndim - 1);
+    assert_eq!(plan.spine.mode, ndim - 1, "spine is the last mode");
+    check_lane_invariants_for(t, &plan.spine, elems[ndim - 1]);
+    assert!(
+        matches!(plan.lower[0], CsfLower::Stream(_)),
+        "mode 0 never shares the spine's fast factor"
+    );
+    for n in 0..ndim - 1 {
+        match &plan.lower[n] {
+            CsfLower::Stream(p) => {
+                assert_eq!(p.mode, n);
+                check_lane_invariants_for(t, p, elems[n]);
+            }
+            CsfLower::View(v) => {
+                assert_eq!(v.mode, n);
+                let mut seen = v.fiber.clone();
+                seen.sort_unstable();
+                assert!(
+                    seen.iter().enumerate().all(|(i, &f)| i as u32 == f),
+                    "mode {n} fiber map is a bijection onto spine runs"
+                );
+                for (j, &f) in v.fiber.iter().enumerate() {
+                    assert_eq!(
+                        v.run_len[j], plan.spine.run_len[f as usize],
+                        "mode {n} run {j} length matches its spine fiber"
+                    );
+                }
+                let mv = CsfModeView { view: v, spine: &plan.spine };
+                check_lane_invariants_over(t, &mv, elems[n]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hooi::kernel::Kernel;
+    use crate::linalg::orthonormal_random;
+    use crate::util::rng::Rng;
+
+    fn setup(dims: Vec<u32>, nnz: usize, k: usize, seed: u64) -> (SparseTensor, Vec<Mat>) {
+        let mut rng = Rng::new(seed);
+        let t = SparseTensor::random(dims, nnz, &mut rng);
+        let factors = t
+            .dims
+            .iter()
+            .map(|&l| orthonormal_random(l as usize, k, &mut rng))
+            .collect();
+        (t, factors)
+    }
+
+    fn all_elems(t: &SparseTensor) -> Vec<u32> {
+        (0..t.nnz() as u32).collect()
+    }
+
+    #[test]
+    fn shared_tree_has_views_and_passes_invariants() {
+        for (dims, seed) in [(vec![14u32, 11, 9], 7u64), (vec![9, 7, 6, 5], 8)] {
+            let ndim = dims.len();
+            let (t, _) = setup(dims, 400, 4, seed);
+            let elems = all_elems(&t);
+            let lists: Vec<&[u32]> = (0..ndim).map(|_| elems.as_slice()).collect();
+            let plan = CsfPlan::build(&t, &lists, &CoreRanks::Uniform(4));
+            assert!(plan.has_views(), "uniform element sets share the spine");
+            for n in 1..ndim - 1 {
+                assert!(matches!(plan.lower[n], CsfLower::View(_)), "mode {n}");
+            }
+            check_csf_invariants(&t, &plan, &lists);
+            // deterministic: a second build is identical
+            let again = CsfPlan::build(&t, &lists, &CoreRanks::Uniform(4));
+            assert_eq!(plan, again);
+        }
+    }
+
+    #[test]
+    fn disjoint_mode_sets_degrade_to_streams() {
+        let (t, _) = setup(vec![10, 9, 8], 300, 3, 9);
+        let elems = all_elems(&t);
+        let (half_a, half_b) = elems.split_at(150);
+        // mode 1 owns a different element set than the spine
+        let lists: Vec<&[u32]> = vec![&elems, half_a, half_b];
+        let plan = CsfPlan::build(&t, &lists, &CoreRanks::Uniform(3));
+        assert!(!plan.has_views());
+        assert!(matches!(plan.lower[1], CsfLower::Stream(_)));
+        check_csf_invariants(&t, &plan, &lists);
+    }
+
+    #[test]
+    fn shared_sweep_is_bit_identical_to_per_mode_plans() {
+        // the core contract: every mode's Z, assembled through the
+        // shared tree with cache fill/reuse, is bit-identical to the
+        // standalone per-mode plan on the same kernel — 3-D and 4-D,
+        // scalar oracle and the detected tile, two consecutive sweeps
+        // (the second exercises cache invalidation at mode 0)
+        for (dims, seed) in [(vec![13u32, 10, 8], 21u64), (vec![8, 7, 6, 5], 22)] {
+            let ndim = dims.len();
+            let (t, factors) = setup(dims, 500, 5, seed);
+            let elems = all_elems(&t);
+            let lists: Vec<&[u32]> = (0..ndim).map(|_| elems.as_slice()).collect();
+            let shared = CsfPlan::build(&t, &lists, &CoreRanks::Uniform(5));
+            let per_mode: Vec<TtmPlan> =
+                (0..ndim).map(|n| TtmPlan::build(&t, n, &elems, 5)).collect();
+            let mut rng = Rng::new(seed + 100);
+            let factors2: Vec<Mat> = t
+                .dims
+                .iter()
+                .map(|&l| orthonormal_random(l as usize, 5, &mut rng))
+                .collect();
+            for kern in [Kernel::Scalar, Kernel::detect()] {
+                let mut ws_shared = PlanWorkspace::with_kernel(kern);
+                let mut ws_pm = PlanWorkspace::with_kernel(kern);
+                for fs in [&factors, &factors2] {
+                    for n in 0..ndim {
+                        let got = shared.assemble(n, fs, &Engine::Native, &mut ws_shared);
+                        let want = per_mode[n].assemble(fs, &Engine::Native, &mut ws_pm);
+                        assert_eq!(got.rows, want.rows);
+                        let same = got
+                            .z
+                            .data
+                            .iter()
+                            .zip(&want.z.data)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                        assert!(same, "mode {n} kernel {} bit-exact", kern.name());
+                        ws_shared.recycle(got.z);
+                        ws_pm.recycle(want.z);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splice_matches_fresh_build_on_the_shared_tree() {
+        for (dims, seed) in [(vec![12u32, 9, 7], 31u64), (vec![8, 6, 5, 4], 32)] {
+            let ndim = dims.len();
+            let mut rng = Rng::new(seed);
+            let mut t = SparseTensor::random(dims, 300, &mut rng);
+            let elems0 = all_elems(&t);
+            let lists0: Vec<&[u32]> = (0..ndim).map(|_| elems0.as_slice()).collect();
+            let mut plan = CsfPlan::build(&t, &lists0, &CoreRanks::Uniform(4));
+            // a small uniform batch: 10 appends + 3 value changes
+            let mut appended: Vec<u32> = Vec::new();
+            for _ in 0..10 {
+                let coord: Vec<u32> =
+                    t.dims.iter().map(|&d| rng.below(d as u64) as u32).collect();
+                t.push(&coord, rng.f32() * 2.0 - 1.0);
+                appended.push(t.nnz() as u32 - 1);
+            }
+            let changed: Vec<u32> = vec![3, 77, 150];
+            for &e in &changed {
+                t.vals[e as usize] = rng.f32() * 2.0 - 1.0;
+            }
+            let elems = all_elems(&t);
+            let lists: Vec<&[u32]> = (0..ndim).map(|_| elems.as_slice()).collect();
+            let apps: Vec<&[u32]> = (0..ndim).map(|_| appended.as_slice()).collect();
+            let chgs: Vec<&[u32]> = (0..ndim).map(|_| changed.as_slice()).collect();
+            let m = plan.apply_delta(&t, &CoreRanks::Uniform(4), &lists, &apps, &chgs);
+            assert_eq!(m, CsfMaint { spliced: 1, rebuilt: 0 }, "small uniform batch splices");
+            let fresh = CsfPlan::build(&t, &lists, &CoreRanks::Uniform(4));
+            assert_eq!(plan, fresh, "spliced shared tree ≡ fresh build");
+            check_csf_invariants(&t, &plan, &lists);
+            // a large batch takes the rebuild path and still matches
+            let mut appended2: Vec<u32> = Vec::new();
+            for _ in 0..200 {
+                let coord: Vec<u32> =
+                    t.dims.iter().map(|&d| rng.below(d as u64) as u32).collect();
+                t.push(&coord, rng.f32() * 2.0 - 1.0);
+                appended2.push(t.nnz() as u32 - 1);
+            }
+            let elems2 = all_elems(&t);
+            let lists2: Vec<&[u32]> = (0..ndim).map(|_| elems2.as_slice()).collect();
+            let apps2: Vec<&[u32]> = (0..ndim).map(|_| appended2.as_slice()).collect();
+            let none: Vec<&[u32]> = (0..ndim).map(|_| &[] as &[u32]).collect();
+            let m2 = plan.apply_delta(&t, &CoreRanks::Uniform(4), &lists2, &apps2, &none);
+            assert_eq!(m2, CsfMaint { spliced: 0, rebuilt: 1 }, "large batch rebuilds");
+            assert_eq!(plan, CsfPlan::build(&t, &lists2, &CoreRanks::Uniform(4)));
+        }
+    }
+
+    #[test]
+    fn value_only_deltas_splice_without_uniformity() {
+        // disjoint per-mode element lists (all-Stream tree): a small
+        // changes-only batch splices per component even though the
+        // per-mode changed sets differ — values can't flip structure
+        let mut rng = Rng::new(61);
+        let mut t = SparseTensor::random(vec![11, 9, 8], 280, &mut rng);
+        let elems = all_elems(&t);
+        let (half_a, half_b) = elems.split_at(140);
+        let lists: Vec<&[u32]> = vec![&elems, half_a, half_b];
+        let mut plan = CsfPlan::build(&t, &lists, &CoreRanks::Uniform(3));
+        assert!(!plan.has_views());
+        let touched = [5u32, 100, 139, 140, 200];
+        for &e in &touched {
+            t.vals[e as usize] = rng.f32() * 2.0 - 1.0;
+        }
+        // each mode's changed set is its rank list's share of the batch
+        let chg_full: Vec<u32> = touched.to_vec();
+        let chg_a: Vec<u32> = vec![5, 100, 139];
+        let chg_b: Vec<u32> = vec![140, 200];
+        let none: Vec<&[u32]> = (0..3).map(|_| &[] as &[u32]).collect();
+        let chgs: Vec<&[u32]> = vec![&chg_full, &chg_a, &chg_b];
+        let m = plan.apply_delta(&t, &CoreRanks::Uniform(3), &lists, &none, &chgs);
+        assert_eq!(m, CsfMaint { spliced: 1, rebuilt: 0 }, "non-uniform values splice");
+        assert_eq!(plan, CsfPlan::build(&t, &lists, &CoreRanks::Uniform(3)));
+        check_csf_invariants(&t, &plan, &lists);
+    }
+
+    #[test]
+    fn sweep_flops_show_the_reuse() {
+        let (t, _) = setup(vec![20, 16, 12], 2000, 6, 41);
+        let elems = all_elems(&t);
+        let lists: Vec<&[u32]> = (0..3).map(|_| elems.as_slice()).collect();
+        let plan = CsfPlan::build(&t, &lists, &CoreRanks::Uniform(6));
+        let shared = plan.sweep_flops();
+        let baseline = plan.per_mode_flops();
+        assert!(
+            shared < baseline,
+            "reuse drops FLOPs: {shared} !< {baseline}"
+        );
+        // bytes: the tree (one stream set + view tables + cache) stays
+        // well under three independent stream plans
+        let per_mode_bytes: u64 =
+            (0..3).map(|n| TtmPlan::build(&t, n, &elems, 6).stream_bytes()).sum();
+        assert!(plan.stream_bytes() < per_mode_bytes);
+    }
+
+    #[test]
+    fn ragged_cores_share_through_the_fused_path() {
+        // per-mode (ragged) cores force the fused path everywhere; the
+        // shared tree must still be bit-exact vs per-mode plans
+        let (t, _) = setup(vec![10, 8, 7, 6], 400, 5, 51);
+        let core = CoreRanks::PerMode(vec![5, 4, 3, 2]);
+        let mut rng = Rng::new(151);
+        let factors: Vec<Mat> = t
+            .dims
+            .iter()
+            .zip(core.resolve(4))
+            .map(|(&l, k)| orthonormal_random(l as usize, k, &mut rng))
+            .collect();
+        let elems = all_elems(&t);
+        let lists: Vec<&[u32]> = (0..4).map(|_| elems.as_slice()).collect();
+        let shared = CsfPlan::build(&t, &lists, &core);
+        assert!(shared.has_views());
+        check_csf_invariants(&t, &shared, &lists);
+        let mut ws_a = PlanWorkspace::new();
+        let mut ws_b = PlanWorkspace::new();
+        for n in 0..4 {
+            let pm = TtmPlan::build_with(&t, n, &elems, &core);
+            let got = shared.assemble(n, &factors, &Engine::Native, &mut ws_a);
+            let want = pm.assemble(&factors, &Engine::Native, &mut ws_b);
+            assert_eq!(got.rows, want.rows);
+            let same = got
+                .z
+                .data
+                .iter()
+                .zip(&want.z.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "ragged mode {n} bit-exact");
+            ws_a.recycle(got.z);
+            ws_b.recycle(want.z);
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //! alive between calls, so `decompose_more` re-sweeps without paying
 //! `prepare_modes` again.
 
+use super::csf::{CsfPlan, SharedPlans};
 use super::fm::{fm_pattern, FmPattern};
 use super::kernel::Kernel;
 use super::lanczos::{lanczos_svd, Oracle};
@@ -189,6 +190,22 @@ pub fn prepare_modes_unplanned(
     prepare_modes_impl(t, idx, dist, core, false, false, None)
 }
 
+/// [`prepare_modes_unplanned`] reusing caller-built sharer indices —
+/// the `PlanChoice::SharedCsf` session build path: the mode states
+/// carry the distribution structure (sharers, σ_n, FM patterns, rank
+/// element lists) while the assembly layout is compiled separately by
+/// [`prepare_shared_plans`], one tree per rank instead of N plans.
+pub fn prepare_modes_unplanned_with_sharers(
+    t: &SparseTensor,
+    idx: &[SliceIndex],
+    dist: &Distribution,
+    core: &CoreRanks,
+    sharers: Vec<Sharers>,
+) -> Vec<ModeState> {
+    assert_eq!(sharers.len(), t.ndim(), "one sharer index per mode");
+    prepare_modes_impl(t, idx, dist, core, false, false, Some(sharers))
+}
+
 fn prepare_modes_impl(
     t: &SparseTensor,
     idx: &[SliceIndex],
@@ -235,6 +252,45 @@ fn prepare_modes_impl(
             }
         })
         .collect()
+}
+
+/// Build one shared [`CsfPlan`] per rank over the prepared modes'
+/// element lists — the `PlanChoice::SharedCsf` analogue of the per-mode
+/// plan compilation inside [`prepare_modes`]. Pair it with
+/// [`prepare_modes_unplanned`]: the mode states keep carrying the
+/// distribution structure (sharers, σ_n, FM patterns, element lists)
+/// while the assembly layout lives in the one tree per rank. Per-rank
+/// builds run on the scoped worker pool; `plan_secs` carries the
+/// measured per-rank build times for [`charge_shared_plan_compilation`].
+pub fn prepare_shared_plans(
+    t: &SparseTensor,
+    modes: &[ModeState],
+    core: &CoreRanks,
+    parallel: bool,
+) -> SharedPlans {
+    assert_eq!(modes.len(), t.ndim(), "one mode state per mode");
+    let p = modes[0].elems.len();
+    let tasks: Vec<_> = (0..p)
+        .map(|rank| {
+            move || {
+                let lists: Vec<&[u32]> =
+                    modes.iter().map(|st| st.elems[rank].as_slice()).collect();
+                CsfPlan::build(t, &lists, core)
+            }
+        })
+        .collect();
+    let (per_rank, plan_secs) =
+        crate::dist::run_scoped(tasks, parallel).into_iter().unzip();
+    SharedPlans { per_rank, plan_secs }
+}
+
+/// Charge the shared trees' compilation makespan to the TTM bucket —
+/// one tree per rank replaces N per-mode plans, so the charge is a
+/// single per-rank makespan rather than [`charge_plan_compilation`]'s
+/// per-mode sum.
+pub fn charge_shared_plan_compilation(shared: &SharedPlans, cluster: &mut SimCluster) {
+    let worst = shared.plan_secs.iter().copied().fold(0.0, f64::max);
+    cluster.elapsed.add(cat::TTM, worst);
 }
 
 /// One mode's share of an applied [`TensorDelta`]: the touched element
@@ -665,6 +721,27 @@ impl HooiState {
         cluster: &mut SimCluster,
         invocations: usize,
     ) -> Result<(), RankFailure> {
+        self.sweeps_with(t, modes, None, engine, cluster, invocations)
+    }
+
+    /// [`HooiState::sweeps`] with an optional set of shared CSF trees.
+    /// When `shared` is present the TTM phases assemble through
+    /// [`CsfPlan::assemble`] — one tree per rank serving all N modes,
+    /// with the sweep's mode order (0..N-1 per invocation) driving the
+    /// contribution-cache fill/reuse lifecycle — and the mode states'
+    /// per-mode `plans` are ignored (sessions pair this with
+    /// [`prepare_modes_unplanned`]). The phase timings are of the work
+    /// actually executed, so the cluster's TTM bucket (Fig 11) reflects
+    /// the cross-mode reuse directly.
+    pub fn sweeps_with(
+        &mut self,
+        t: &SparseTensor,
+        modes: &[ModeState],
+        shared: Option<&SharedPlans>,
+        engine: &Engine,
+        cluster: &mut SimCluster,
+        invocations: usize,
+    ) -> Result<(), RankFailure> {
         let ndim = t.ndim();
         for _inv in 0..invocations {
             cluster.begin_sweep(self.sweep);
@@ -674,12 +751,29 @@ impl HooiState {
                 // on the scoped-thread executor, results in rank order ---
                 let locals: Vec<LocalZ> = {
                     let factors_ref = &self.factors;
-                    let tasks: Vec<_> = st
-                        .plans
-                        .iter()
-                        .zip(self.workspaces.iter_mut())
-                        .map(|(plan, ws)| move || plan.assemble(factors_ref, engine, ws))
-                        .collect();
+                    let tasks: Vec<Box<dyn FnOnce() -> LocalZ + Send>> = match shared
+                    {
+                        Some(sp) => sp
+                            .per_rank
+                            .iter()
+                            .zip(self.workspaces.iter_mut())
+                            .map(|(csf, ws)| {
+                                Box::new(move || {
+                                    csf.assemble(n, factors_ref, engine, ws)
+                                })
+                                    as Box<dyn FnOnce() -> LocalZ + Send>
+                            })
+                            .collect(),
+                        None => st
+                            .plans
+                            .iter()
+                            .zip(self.workspaces.iter_mut())
+                            .map(|(plan, ws)| {
+                                Box::new(move || plan.assemble(factors_ref, engine, ws))
+                                    as Box<dyn FnOnce() -> LocalZ + Send>
+                            })
+                            .collect(),
+                    };
                     cluster.phase_tasks(cat::TTM, tasks)?
                 };
                 // --- SVD: Lanczos bidiagonalization over the oracle ---
@@ -737,6 +831,24 @@ impl HooiState {
         cluster: &mut SimCluster,
         accounting: Option<TensorAccounting>,
     ) -> Result<HooiOutcome, RankFailure> {
+        self.outcome_with(t, dist, modes, None, cluster, accounting)
+    }
+
+    /// [`HooiState::outcome`] with an optional set of shared CSF trees,
+    /// so the memory report charges the one-tree-per-rank layout
+    /// ([`memory_model_shared`]) instead of N per-mode stream plans.
+    /// The core/fit/factor arithmetic is untouched — the outcome bits
+    /// are identical to the per-mode path by the shared-tree assembly
+    /// contract.
+    pub fn outcome_with(
+        &self,
+        t: &SparseTensor,
+        dist: &Distribution,
+        modes: &[ModeState],
+        shared: Option<&SharedPlans>,
+        cluster: &mut SimCluster,
+        accounting: Option<TensorAccounting>,
+    ) -> Result<HooiOutcome, RankFailure> {
         let ndim = t.ndim();
         let n_last = ndim - 1;
         let (k_last, kh_last) = (self.ks[n_last], modes[n_last].khat_n);
@@ -769,12 +881,11 @@ impl HooiState {
         let fit =
             1.0 - ((tnorm_sq - gnorm_sq).max(0.0)).sqrt() / tnorm_sq.sqrt().max(1e-30);
 
-        let memory = memory_model_with(
-            t,
-            dist,
-            modes,
-            TensorAccounting::resolve(accounting),
-        );
+        let acct = TensorAccounting::resolve(accounting);
+        let memory = match shared {
+            Some(sp) => memory_model_shared(t, dist, modes, sp, acct),
+            None => memory_model_with(t, dist, modes, acct),
+        };
         Ok(HooiOutcome {
             factors: self.factors.clone(),
             core,
@@ -947,6 +1058,29 @@ pub fn memory_model_with(
         penultimate_bytes: penult,
         factor_bytes: fact,
     }
+}
+
+/// [`memory_model_with`] for a `PlanChoice::SharedCsf` session: under
+/// plan-stream accounting the per-rank tensor working copy is the one
+/// shared tree (spine streams + stream components + view tables + the
+/// contribution cache), not N per-mode stream plans. The penultimate
+/// and factor components are layout-independent and identical to the
+/// per-mode model; `TUCKER_MEM_ACCOUNTING=coo` likewise bypasses the
+/// plan layout entirely.
+pub fn memory_model_shared(
+    t: &SparseTensor,
+    dist: &Distribution,
+    modes: &[ModeState],
+    shared: &SharedPlans,
+    acct: TensorAccounting,
+) -> MemoryReport {
+    let mut rep = memory_model_with(t, dist, modes, acct);
+    if acct == TensorAccounting::PlanStreams {
+        assert_eq!(shared.per_rank.len(), dist.p, "one shared tree per rank");
+        rep.tensor_bytes =
+            shared.per_rank.iter().map(CsfPlan::stream_bytes).collect();
+    }
+    rep
 }
 
 #[cfg(test)]

@@ -385,6 +385,93 @@ pub fn expand_store_tile(k: Kernel, coeffs: &[f32], acc: &[f32], out: &mut [f32]
     }
 }
 
+/// Accumulate one lane-padded run of plan slots into `acc`:
+/// `acc = Σ_s vals[s] · apad[fa[s]·kp..][..kp]`. This is the
+/// subtree-contribution microkernel of the plan layer — the per-fiber
+/// fast-factor combination every mode's TTM starts from, and the
+/// quantity `hooi::csf::CsfPlan` caches across the sweep's N modes.
+/// `fa`/`vals` are whole lane tiles (run padding carries `val == 0.0`);
+/// `apad` is the `kp`-stride padded fast factor; `acc.len() == kp`.
+/// The first tile opens with [`Tile::scale`], so `acc` need not be
+/// zeroed. Monomorphized per [`Tile`] from the plan assembly; the
+/// [`contrib_run`] dispatcher below is the standalone entry point.
+pub(crate) fn accumulate_run<MK: Tile>(
+    fa: &[u32],
+    vals: &[f32],
+    apad: &[f32],
+    kp: usize,
+    acc: &mut [f32],
+) {
+    debug_assert!(!fa.is_empty() && fa.len() % LANES == 0);
+    debug_assert_eq!(fa.len(), vals.len());
+    let row = |f: u32| &apad[f as usize * kp..f as usize * kp + kp];
+    // First tile: scale-open the accumulator, then axpy the rest.
+    MK::scale(vals[0], row(fa[0]), acc);
+    for l in 1..LANES {
+        MK::axpy(vals[l], row(fa[l]), acc);
+    }
+    for (f8, v8) in fa[LANES..]
+        .chunks_exact(LANES)
+        .zip(vals[LANES..].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            MK::axpy(v8[l], row(f8[l]), acc);
+        }
+    }
+}
+
+/// Scalar oracle for the subtree contribution: the same per-element
+/// multiply-add sequence as [`accumulate_run`] written as plain loops —
+/// one rounding per operation, no FMA, the reference the tiled paths
+/// are pinned against. Accepts the same padded layout (`acc.len() ==
+/// kp`); padding slots contribute `0.0 · row`, which leaves every
+/// accumulator lane bit-unchanged.
+pub fn contrib_run_scalar(fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc: &mut [f32]) {
+    debug_assert!(!fa.is_empty());
+    debug_assert_eq!(fa.len(), vals.len());
+    debug_assert_eq!(acc.len(), kp);
+    let row = |f: u32| &apad[f as usize * kp..f as usize * kp + kp];
+    for (a, &x) in acc.iter_mut().zip(row(fa[0])) {
+        *a = vals[0] * x;
+    }
+    for (&f, &v) in fa[1..].iter().zip(&vals[1..]) {
+        for (a, &x) in acc.iter_mut().zip(row(f)) {
+            *a += v * x;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn contrib_run_avx2(fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc: &mut [f32]) {
+    accumulate_run::<Avx2Tile>(fa, vals, apad, kp, acc)
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[target_feature(enable = "neon")]
+unsafe fn contrib_run_neon(fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc: &mut [f32]) {
+    accumulate_run::<NeonTile>(fa, vals, apad, kp, acc)
+}
+
+/// Kernel-dispatched subtree-contribution entry point: one run's
+/// fast-factor accumulation `acc = Σ_s vals[s]·apad[fa[s]]` behind the
+/// same runtime [`Kernel`] selection as the other microkernels (scalar
+/// oracle, portable tile, AVX2/NEON intrinsics). Layout contract as in
+/// [`contrib_run_scalar`]; the tiled arms additionally require whole
+/// [`LANES`] tiles in `fa`/`vals` (plan padding guarantees this).
+pub fn contrib_run(k: Kernel, fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc: &mut [f32]) {
+    match k.resolve() {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // Safety: dispatch guarantees avx2+fma via Kernel::available().
+        Kernel::Avx2 => unsafe { contrib_run_avx2(fa, vals, apad, kp, acc) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // Safety: NEON is baseline on aarch64.
+        Kernel::Neon => unsafe { contrib_run_neon(fa, vals, apad, kp, acc) },
+        Kernel::Scalar => contrib_run_scalar(fa, vals, apad, kp, acc),
+        _ => accumulate_run::<PortableTile>(fa, vals, apad, kp, acc),
+    }
+}
+
 /// `y += a·x` over slices of *any* equal length: the whole-[`LANES`]
 /// prefix runs through the tiled kernel, the remainder through the
 /// scalar tail — the K̂-tiled scatter-add of `flush_contrib_batch`
@@ -522,6 +609,35 @@ mod tests {
             axpy_any(Kernel::detect(), 0.3, &x, &mut got);
             assert_close(&got, &want);
         }
+    }
+
+    #[test]
+    fn contrib_run_matches_scalar_oracle() {
+        // one padded run: 11 real elements → 16 slots, kp = 2 lanes
+        let kp = 2 * LANES;
+        let nrows = 6usize;
+        let apad: Vec<f32> =
+            (0..nrows * kp).map(|i| ((i as f32) * 0.11).sin()).collect();
+        let real = 11usize;
+        let slots = pad_to_lanes(real);
+        let mut fa: Vec<u32> = (0..real as u32).map(|i| i % nrows as u32).collect();
+        let mut vals: Vec<f32> =
+            (0..real).map(|i| ((i as f32) * 0.7 - 1.0).cos()).collect();
+        // plan padding contract: repeat the last real row id, val == 0.0
+        fa.resize(slots, fa[real - 1]);
+        vals.resize(slots, 0.0);
+
+        let mut want = vec![f32::NAN; kp];
+        contrib_run(Kernel::Scalar, &fa, &vals, &apad, kp, &mut want);
+        for k in [Kernel::Portable, Kernel::detect()] {
+            let mut got = vec![f32::NAN; kp];
+            contrib_run(k, &fa, &vals, &apad, kp, &mut got);
+            assert_close(&got, &want);
+        }
+        // the generic tile path is what the plan assembly monomorphizes
+        let mut got = vec![f32::NAN; kp];
+        accumulate_run::<PortableTile>(&fa, &vals, &apad, kp, &mut got);
+        assert_close(&got, &want);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! the sum-distributed penultimate matrix, factor-matrix transfer, and the
 //! end-of-run core computation.
 
+pub mod csf;
 pub mod driver;
 pub mod fm;
 pub mod kernel;
@@ -12,14 +13,20 @@ pub mod ranks;
 pub mod ttm;
 
 pub use driver::{
-    charge_plan_compilation, memory_model, memory_model_with, prepare_modes,
-    prepare_modes_unplanned, prepare_modes_with_executor, prepare_modes_with_sharers,
+    charge_plan_compilation, charge_shared_plan_compilation, memory_model,
+    memory_model_shared, memory_model_with, prepare_modes, prepare_modes_unplanned,
+    prepare_modes_unplanned_with_sharers, prepare_modes_with_executor,
+    prepare_modes_with_sharers, prepare_shared_plans,
     run_hooi, DeltaStats, HooiConfig, HooiOutcome, HooiSnapshot, HooiState, MemoryReport,
     ModeDelta, ModeState, TensorAccounting,
 };
+pub use csf::{check_csf_invariants, CsfLower, CsfMaint, CsfModeView, CsfPlan, CsfView, SharedPlans};
 pub use fm::{fm_pattern, FmPattern};
-pub use kernel::{pad_to_lanes, Kernel, LANES};
+pub use kernel::{contrib_run, contrib_run_scalar, pad_to_lanes, Kernel, LANES};
 pub use lanczos::{lanczos_svd, LanczosResult, Oracle};
-pub use plan::{check_lane_invariants, check_lane_invariants_for, PlanWorkspace, TtmPlan};
+pub use plan::{
+    check_lane_invariants, check_lane_invariants_for, check_lane_invariants_over,
+    for_each_element_over, fused_flops, ModePlan, PlanWorkspace, TtmPlan,
+};
 pub use ranks::{khat_of, CoreRanks};
 pub use ttm::{assemble_local_z, assemble_local_z_fused, dense_penultimate, khat, LocalZ};

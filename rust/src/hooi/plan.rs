@@ -48,7 +48,7 @@
 //! `tests/kernel_equivalence.rs` pin the equivalences against the
 //! element-order oracle (`assemble_local_z_fused`).
 
-use super::kernel::{pad_to_lanes, Kernel, PortableTile, Tile, LANES};
+use super::kernel::{accumulate_run, pad_to_lanes, Kernel, PortableTile, Tile, LANES};
 use super::ranks::CoreRanks;
 use super::ttm::{flush_contrib_batch, other_modes, LocalZ};
 use crate::linalg::{axpy, Mat};
@@ -82,6 +82,13 @@ pub struct PlanWorkspace {
     bvals: Vec<f32>,
     targets: Vec<u32>,
     z_pool: Vec<Vec<f32>>,
+    /// Per-fiber contribution cache (kp-stride, one slot per spine run)
+    /// — filled by the first shared-tree view assembly of a sweep,
+    /// reused by the later non-leaf modes (`hooi::csf`).
+    contrib: Vec<f32>,
+    contrib_runs: usize,
+    contrib_stride: usize,
+    contrib_ready: bool,
 }
 
 impl Default for PlanWorkspace {
@@ -111,7 +118,40 @@ impl PlanWorkspace {
             bvals: Vec::new(),
             targets: Vec::new(),
             z_pool: Vec::new(),
+            contrib: Vec::new(),
+            contrib_runs: 0,
+            contrib_stride: 0,
+            contrib_ready: false,
         }
+    }
+
+    /// Drop the per-fiber contribution cache (sweep restart, factor
+    /// update of the fast mode, or any structural plan change).
+    pub(crate) fn contrib_invalidate(&mut self) {
+        self.contrib_ready = false;
+    }
+
+    /// Is the cache valid for a plan with this many fibers at this
+    /// column stride? (Defensive shape guard on top of the sweep-order
+    /// lifecycle `hooi::csf` maintains.)
+    pub(crate) fn contrib_matches(&self, runs: usize, stride: usize) -> bool {
+        self.contrib_ready && self.contrib_runs == runs && self.contrib_stride == stride
+    }
+
+    /// Size the cache for a fill pass (`runs` fibers × `stride` floats).
+    /// The fill itself happens inside the fused assembly; the caller
+    /// marks the cache live with [`PlanWorkspace::contrib_commit`] once
+    /// that assembly returns.
+    pub(crate) fn contrib_prepare(&mut self, runs: usize, stride: usize) {
+        self.contrib_ready = false;
+        self.contrib_runs = runs;
+        self.contrib_stride = stride;
+        self.contrib.clear();
+        self.contrib.resize(runs * stride, 0.0);
+    }
+
+    pub(crate) fn contrib_commit(&mut self) {
+        self.contrib_ready = true;
     }
 
     /// The kernel this workspace dispatches to.
@@ -625,219 +665,17 @@ impl TtmPlan {
         engine: &Engine,
         ws: &mut PlanWorkspace,
     ) -> LocalZ {
-        if engine.prefers_fused_ttm() || !self.uniform_core() {
-            self.assemble_fused(factors, ws)
-        } else {
-            self.assemble_batched(factors, engine, ws)
-        }
+        assemble_over(self, factors, engine, ws, CachePolicy::Off)
     }
 
     /// Fused plan kernel, dispatched on the workspace's [`Kernel`]:
     /// the scalar oracle replays the PR 1 per-element arithmetic; the
     /// tiled kernels run the lane-blocked layout through the 8-wide
-    /// microkernels (monomorphized per instruction set).
+    /// microkernels (monomorphized per instruction set). Thin wrapper
+    /// over the generic [`assemble_fused_over`] with the contribution
+    /// cache off — per-mode plans have no cross-mode fibers to share.
     pub fn assemble_fused(&self, factors: &[Mat], ws: &mut PlanWorkspace) -> LocalZ {
-        match ws.kernel.resolve() {
-            Kernel::Scalar => self.assemble_fused_scalar(factors, ws),
-            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-            // Safety: the dispatch contract — Kernel::resolve only yields
-            // Avx2 after runtime detection of avx2+fma succeeded.
-            Kernel::Avx2 => unsafe { self.assemble_fused_avx2(factors, ws) },
-            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
-            // Safety: NEON is architecturally guaranteed on aarch64.
-            Kernel::Neon => unsafe { self.assemble_fused_neon(factors, ws) },
-            _ => self.assemble_fused_tiled::<PortableTile>(factors, ws),
-        }
-    }
-
-    /// AVX2 entry point: `target_feature` on the *whole* assembly so the
-    /// intrinsic microkernels inline into the run/row loops (a
-    /// `target_feature` fn cannot inline into a plain caller — wrapping
-    /// only the 8-float microkernel would pay a call per 2 FMAs).
-    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-    #[target_feature(enable = "avx2,fma")]
-    unsafe fn assemble_fused_avx2(
-        &self,
-        factors: &[Mat],
-        ws: &mut PlanWorkspace,
-    ) -> LocalZ {
-        self.assemble_fused_tiled::<Avx2Tile>(factors, ws)
-    }
-
-    /// NEON entry point (see `assemble_fused_avx2` for why the feature
-    /// is enabled on the whole assembly).
-    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
-    #[target_feature(enable = "neon")]
-    unsafe fn assemble_fused_neon(
-        &self,
-        factors: &[Mat],
-        ws: &mut PlanWorkspace,
-    ) -> LocalZ {
-        self.assemble_fused_tiled::<NeonTile>(factors, ws)
-    }
-
-    /// Scalar reference path: the PR 1 run-hoisted loops over unpadded
-    /// K-length rows (padding slots skipped via `run_len`). Kept as the
-    /// equivalence oracle and the ablation baseline.
-    fn assemble_fused_scalar(&self, factors: &[Mat], ws: &mut PlanWorkspace) -> LocalZ {
-        let ka = self.oks[0];
-        let nrows = self.rows.len();
-        let data = ws.take_z(nrows * self.khat);
-        let mut z = Mat { rows: nrows, cols: self.khat, data };
-        if self.nnz == 0 {
-            return LocalZ { rows: self.rows.clone(), z };
-        }
-        let fm_a = &factors[self.others[0]];
-        let fm_b = &factors[self.others[1]];
-        ws.acc.clear();
-        ws.acc.resize(ka, 0.0);
-        if self.others.len() == 2 {
-            let acc = &mut ws.acc;
-            for r in 0..nrows {
-                let zrow = z.row_mut(r);
-                for j in self.row_runs[r] as usize..self.row_runs[r + 1] as usize {
-                    acc.fill(0.0);
-                    let s0 = self.slot_ptr[j] as usize;
-                    for s in s0..s0 + self.run_len[j] as usize {
-                        axpy(self.vals[s], fm_a.row(self.fa[s] as usize), acc);
-                    }
-                    let rb = fm_b.row(self.run_b[j] as usize);
-                    for (cb, &bv) in rb.iter().enumerate() {
-                        axpy(bv, acc, &mut zrow[cb * ka..(cb + 1) * ka]);
-                    }
-                }
-            }
-        } else {
-            let fm_c = &factors[self.others[2]];
-            let kk = ka * self.oks[1];
-            ws.acc2.clear();
-            ws.acc2.resize(kk, 0.0);
-            let PlanWorkspace { acc, acc2, .. } = ws;
-            for r in 0..nrows {
-                let zrow = z.row_mut(r);
-                for oj in self.row_runs[r] as usize..self.row_runs[r + 1] as usize {
-                    acc2.fill(0.0);
-                    for j in self.outer_ptr[oj] as usize..self.outer_ptr[oj + 1] as usize
-                    {
-                        acc.fill(0.0);
-                        let s0 = self.slot_ptr[j] as usize;
-                        for s in s0..s0 + self.run_len[j] as usize {
-                            axpy(self.vals[s], fm_a.row(self.fa[s] as usize), acc);
-                        }
-                        let rb = fm_b.row(self.run_b[j] as usize);
-                        for (cb, &bv) in rb.iter().enumerate() {
-                            axpy(bv, acc, &mut acc2[cb * ka..(cb + 1) * ka]);
-                        }
-                    }
-                    let rc = fm_c.row(self.outer_c[oj] as usize);
-                    for (cc, &cv) in rc.iter().enumerate() {
-                        axpy(cv, acc2, &mut zrow[cc * kk..(cc + 1) * kk]);
-                    }
-                }
-            }
-        }
-        LocalZ { rows: self.rows.clone(), z }
-    }
-
-    /// Tiled fused path: every inner loop is whole 8-lane tiles — run
-    /// accumulation over the padded fa/vals blocks against the kp-stride
-    /// factor table, fused slow×fast expansion into kp-stride tiles,
-    /// then one compaction copy per row into the K̂ layout.
-    fn assemble_fused_tiled<MK: Tile>(
-        &self,
-        factors: &[Mat],
-        ws: &mut PlanWorkspace,
-    ) -> LocalZ {
-        let (ka, kp) = (self.oks[0], self.kp);
-        let nrows = self.rows.len();
-        let data = ws.take_z(nrows * self.khat);
-        let mut z = Mat { rows: nrows, cols: self.khat, data };
-        if self.nnz == 0 {
-            return LocalZ { rows: self.rows.clone(), z };
-        }
-        ws.prepare_apad(&factors[self.others[0]], kp);
-        ws.acc.clear();
-        ws.acc.resize(kp, 0.0);
-        if self.others.len() == 2 {
-            let kb = self.oks[1];
-            let fm_b = &factors[self.others[1]];
-            ws.ztile.clear();
-            ws.ztile.resize(kb * kp, 0.0);
-            let PlanWorkspace { apad, acc, ztile, .. } = ws;
-            for r in 0..nrows {
-                let (jlo, jhi) =
-                    (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
-                for j in jlo..jhi {
-                    let (slo, shi) =
-                        (self.slot_ptr[j] as usize, self.slot_ptr[j + 1] as usize);
-                    accumulate_run::<MK>(
-                        &self.fa[slo..shi],
-                        &self.vals[slo..shi],
-                        apad,
-                        kp,
-                        acc,
-                    );
-                    let rb = fm_b.row(self.run_b[j] as usize);
-                    if j == jlo {
-                        MK::expand_store(rb, acc, ztile);
-                    } else {
-                        MK::expand(rb, acc, ztile);
-                    }
-                }
-                // compact the kp-stride tile into the dense K̂ row
-                let zrow = z.row_mut(r);
-                for cb in 0..kb {
-                    zrow[cb * ka..(cb + 1) * ka]
-                        .copy_from_slice(&ztile[cb * kp..cb * kp + ka]);
-                }
-            }
-        } else {
-            let (kb, kc) = (self.oks[1], self.oks[2]);
-            let fm_b = &factors[self.others[1]];
-            let fm_c = &factors[self.others[2]];
-            ws.acc2.clear();
-            ws.acc2.resize(kb * kp, 0.0);
-            ws.ztile.clear();
-            ws.ztile.resize(kc * kb * kp, 0.0);
-            let PlanWorkspace { apad, acc, acc2, ztile, .. } = ws;
-            for r in 0..nrows {
-                let (olo, ohi) =
-                    (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
-                for oj in olo..ohi {
-                    let (jlo, jhi) =
-                        (self.outer_ptr[oj] as usize, self.outer_ptr[oj + 1] as usize);
-                    for j in jlo..jhi {
-                        let (slo, shi) =
-                            (self.slot_ptr[j] as usize, self.slot_ptr[j + 1] as usize);
-                        accumulate_run::<MK>(
-                            &self.fa[slo..shi],
-                            &self.vals[slo..shi],
-                            apad,
-                            kp,
-                            acc,
-                        );
-                        let rb = fm_b.row(self.run_b[j] as usize);
-                        if j == jlo {
-                            MK::expand_store(rb, acc, acc2);
-                        } else {
-                            MK::expand(rb, acc, acc2);
-                        }
-                    }
-                    let rc = fm_c.row(self.outer_c[oj] as usize);
-                    if oj == olo {
-                        MK::expand_store(rc, acc2, ztile);
-                    } else {
-                        MK::expand(rc, acc2, ztile);
-                    }
-                }
-                let zrow = z.row_mut(r);
-                for seg in 0..kc * kb {
-                    zrow[seg * ka..(seg + 1) * ka]
-                        .copy_from_slice(&ztile[seg * kp..seg * kp + ka]);
-                }
-            }
-        }
-        LocalZ { rows: self.rows.clone(), z }
+        assemble_fused_over(self, factors, ws, CachePolicy::Off)
     }
 
     /// Batched plan path: same padded fixed-shape engine contract as
@@ -856,71 +694,449 @@ impl TtmPlan {
         engine: &Engine,
         ws: &mut PlanWorkspace,
     ) -> LocalZ {
-        assert!(
-            self.uniform_core(),
-            "the batched engine contract requires a uniform core \
-             (ragged ranks {:?} must use the fused path)",
-            self.oks
-        );
-        let k = self.oks[0];
-        let kh = self.khat;
-        let ndim = self.others.len() + 1;
-        let nrows = self.rows.len();
-        let data = ws.take_z(nrows * kh);
-        let mut z = Mat { rows: nrows, cols: kh, data };
-        if self.nnz == 0 {
-            return LocalZ { rows: self.rows.clone(), z };
+        assemble_batched_over(self, factors, engine, ws)
+    }
+}
+
+/// The stream/padding/workspace contract every TTM assembly runs over:
+/// a mode's elements as lane-padded `(fa, vals)` run blocks grouped
+/// under rows (and, for 4-D, outer runs), exactly the [`TtmPlan`]
+/// layout. [`TtmPlan`] implements it by owning its streams; the
+/// shared-tree mode views of [`super::csf::CsfPlan`] implement it by
+/// *aliasing* the spine plan's streams through a fiber map. The fused
+/// and batched assemblies, the lane-invariant checker, and the FLOP
+/// model are all generic over this trait (monomorphized — the per-mode
+/// path compiles to the same code as before the trait existed).
+pub trait ModePlan {
+    /// The mode this plan assembles Z for.
+    fn mode(&self) -> usize;
+    /// Real elements covered (padding slots excluded).
+    fn nnz(&self) -> usize;
+    /// Core rank of each *other* mode, fast Kronecker factor first.
+    fn oks(&self) -> &[usize];
+    /// K̂_n = Π_{j≠n} K_j.
+    fn khat(&self) -> usize;
+    /// Lane-padded fast-mode column tile width.
+    fn kp(&self) -> usize;
+    /// Modes other than `mode`, ascending.
+    fn others(&self) -> &[usize];
+    /// Global slice index of each local row, ascending.
+    fn rows(&self) -> &[u32];
+    /// Per-row run range (3-D) or outer-run range (4-D).
+    fn row_runs(&self) -> &[u32];
+    /// 4-D only: slowest-mode factor row per outer run.
+    fn outer_c(&self) -> &[u32];
+    /// 4-D only: run range per outer run.
+    fn outer_ptr(&self) -> &[u32];
+    /// Slow-mode factor row per run.
+    fn run_b(&self) -> &[u32];
+    /// Real (unpadded) element count of run `j`.
+    fn run_len(&self, j: usize) -> usize;
+    /// Slot range of run `j` in the leaf streams (whole [`LANES`] tiles).
+    fn run_slots(&self, j: usize) -> (usize, usize);
+    /// The lane-padded leaf streams `(fa, vals)` the runs index into.
+    fn streams(&self) -> (&[u32], &[f32]);
+    /// Contribution-cache slot of run `j`: the shared-tree fiber index
+    /// for a CSF view, identity for a per-mode plan.
+    fn cache_slot(&self, j: usize) -> usize {
+        j
+    }
+    /// Are all other-mode ranks equal? (Batched-engine eligibility.)
+    fn uniform_core(&self) -> bool {
+        self.oks().windows(2).all(|w| w[0] == w[1])
+    }
+}
+
+impl ModePlan for TtmPlan {
+    fn mode(&self) -> usize {
+        self.mode
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn oks(&self) -> &[usize] {
+        &self.oks
+    }
+    fn khat(&self) -> usize {
+        self.khat
+    }
+    fn kp(&self) -> usize {
+        self.kp
+    }
+    fn others(&self) -> &[usize] {
+        &self.others
+    }
+    fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+    fn row_runs(&self) -> &[u32] {
+        &self.row_runs
+    }
+    fn outer_c(&self) -> &[u32] {
+        &self.outer_c
+    }
+    fn outer_ptr(&self) -> &[u32] {
+        &self.outer_ptr
+    }
+    fn run_b(&self) -> &[u32] {
+        &self.run_b
+    }
+    fn run_len(&self, j: usize) -> usize {
+        self.run_len[j] as usize
+    }
+    fn run_slots(&self, j: usize) -> (usize, usize) {
+        (self.slot_ptr[j] as usize, self.slot_ptr[j + 1] as usize)
+    }
+    fn streams(&self) -> (&[u32], &[f32]) {
+        (&self.fa, &self.vals)
+    }
+}
+
+/// What a fused assembly does with the workspace's per-fiber
+/// contribution cache. Per-mode plans always run `Off`; the shared CSF
+/// tree fills on its first non-leaf view of a sweep and reuses on the
+/// later ones (`hooi::csf` owns the lifecycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CachePolicy {
+    /// No cache interaction (per-mode plans; batched engine path).
+    Off,
+    /// Compute every run contribution and store it at its cache slot.
+    Fill,
+    /// Skip the accumulation and read each run's cached contribution.
+    Use,
+}
+
+/// Engine-routing assembly over any [`ModePlan`] — fused native kernel
+/// vs. the padded-batch engine contract, exactly [`TtmPlan::assemble`]'s
+/// dispatch rule. The batched path never touches the contribution cache
+/// (its per-element gather has no per-run accumulator to reuse).
+pub(crate) fn assemble_over<P: ModePlan>(
+    p: &P,
+    factors: &[Mat],
+    engine: &Engine,
+    ws: &mut PlanWorkspace,
+    cache: CachePolicy,
+) -> LocalZ {
+    if engine.prefers_fused_ttm() || !p.uniform_core() {
+        assemble_fused_over(p, factors, ws, cache)
+    } else {
+        assemble_batched_over(p, factors, engine, ws)
+    }
+}
+
+/// Kernel-dispatching fused assembly over any [`ModePlan`].
+pub(crate) fn assemble_fused_over<P: ModePlan>(
+    p: &P,
+    factors: &[Mat],
+    ws: &mut PlanWorkspace,
+    cache: CachePolicy,
+) -> LocalZ {
+    match ws.kernel.resolve() {
+        Kernel::Scalar => assemble_fused_scalar_over(p, factors, ws, cache),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // Safety: the dispatch contract — Kernel::resolve only yields
+        // Avx2 after runtime detection of avx2+fma succeeded.
+        Kernel::Avx2 => unsafe { assemble_fused_avx2_over(p, factors, ws, cache) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // Safety: NEON is architecturally guaranteed on aarch64.
+        Kernel::Neon => unsafe { assemble_fused_neon_over(p, factors, ws, cache) },
+        _ => assemble_fused_tiled_over::<PortableTile, P>(p, factors, ws, cache),
+    }
+}
+
+/// AVX2 entry point: `target_feature` on the *whole* assembly so the
+/// intrinsic microkernels inline into the run/row loops (a
+/// `target_feature` fn cannot inline into a plain caller — wrapping
+/// only the 8-float microkernel would pay a call per 2 FMAs).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn assemble_fused_avx2_over<P: ModePlan>(
+    p: &P,
+    factors: &[Mat],
+    ws: &mut PlanWorkspace,
+    cache: CachePolicy,
+) -> LocalZ {
+    assemble_fused_tiled_over::<Avx2Tile, P>(p, factors, ws, cache)
+}
+
+/// NEON entry point (see `assemble_fused_avx2_over` for why the feature
+/// is enabled on the whole assembly).
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[target_feature(enable = "neon")]
+unsafe fn assemble_fused_neon_over<P: ModePlan>(
+    p: &P,
+    factors: &[Mat],
+    ws: &mut PlanWorkspace,
+    cache: CachePolicy,
+) -> LocalZ {
+    assemble_fused_tiled_over::<NeonTile, P>(p, factors, ws, cache)
+}
+
+/// Scalar reference path: the PR 1 run-hoisted loops over unpadded
+/// K-length rows (padding slots skipped via `run_len`). Kept as the
+/// equivalence oracle and the ablation baseline. Under `Fill`/`Use` the
+/// cache holds the unpadded `K_fast`-prefix of each fiber's accumulator
+/// (stored at the same `kp` stride the tiled path uses), so cache reuse
+/// replays the exact per-run arithmetic of a cache-off assembly.
+fn assemble_fused_scalar_over<P: ModePlan>(
+    p: &P,
+    factors: &[Mat],
+    ws: &mut PlanWorkspace,
+    cache: CachePolicy,
+) -> LocalZ {
+    let ka = p.oks()[0];
+    let kp = p.kp();
+    let nrows = p.rows().len();
+    let data = ws.take_z(nrows * p.khat());
+    let mut z = Mat { rows: nrows, cols: p.khat(), data };
+    if p.nnz() == 0 {
+        return LocalZ { rows: p.rows().to_vec(), z };
+    }
+    let (fa, vals) = p.streams();
+    let fm_a = &factors[p.others()[0]];
+    let fm_b = &factors[p.others()[1]];
+    ws.acc.clear();
+    ws.acc.resize(ka, 0.0);
+    if p.others().len() == 2 {
+        let PlanWorkspace { acc, contrib, .. } = ws;
+        for r in 0..nrows {
+            let zrow = z.row_mut(r);
+            for j in p.row_runs()[r] as usize..p.row_runs()[r + 1] as usize {
+                let acc_row: &[f32] = if cache == CachePolicy::Use {
+                    let cs = p.cache_slot(j) * kp;
+                    &contrib[cs..cs + ka]
+                } else {
+                    acc.fill(0.0);
+                    let (s0, _) = p.run_slots(j);
+                    for s in s0..s0 + p.run_len(j) {
+                        axpy(vals[s], fm_a.row(fa[s] as usize), acc);
+                    }
+                    if cache == CachePolicy::Fill {
+                        let cs = p.cache_slot(j) * kp;
+                        contrib[cs..cs + ka].copy_from_slice(acc);
+                    }
+                    &acc[..]
+                };
+                let rb = fm_b.row(p.run_b()[j] as usize);
+                for (cb, &bv) in rb.iter().enumerate() {
+                    axpy(bv, acc_row, &mut zrow[cb * ka..(cb + 1) * ka]);
+                }
+            }
         }
-        let bsz = engine.ttm_batch_size(ndim, k);
-        let kern = ws.kernel;
-        ws.ensure_batch(bsz, k);
-        let PlanWorkspace { rows_a, rows_b, rows_c, bvals, targets, .. } = ws;
-        let (fm_a, fm_b) = (&factors[self.others[0]], &factors[self.others[1]]);
-        let fm_c = if ndim == 4 { Some(&factors[self.others[2]]) } else { None };
-        let mut fill = 0usize;
-        // tiled gather: walk the run streams directly so the slow
-        // factor rows (b, and c for 4-D) are looked up once per run and
-        // copied sequentially from a hot source — only the fast-mode
-        // row gather stays per-element. The element order is exactly
-        // `for_each_element`'s, so batch boundaries (and therefore the
-        // engine outputs) are unchanged.
-        for r in 0..self.rows.len() {
-            let (lo, hi) = (self.row_runs[r] as usize, self.row_runs[r + 1] as usize);
-            if let Some(fm_c) = fm_c {
-                for oj in lo..hi {
-                    let rc = fm_c.row(self.outer_c[oj] as usize);
-                    let (jlo, jhi) =
-                        (self.outer_ptr[oj] as usize, self.outer_ptr[oj + 1] as usize);
-                    for j in jlo..jhi {
-                        let rb = fm_b.row(self.run_b[j] as usize);
-                        let s0 = self.slot_ptr[j] as usize;
-                        for s in s0..s0 + self.run_len[j] as usize {
-                            rows_a[fill * k..(fill + 1) * k]
-                                .copy_from_slice(fm_a.row(self.fa[s] as usize));
-                            rows_b[fill * k..(fill + 1) * k].copy_from_slice(rb);
-                            rows_c[fill * k..(fill + 1) * k].copy_from_slice(rc);
-                            bvals[fill] = self.vals[s];
-                            targets[fill] = r as u32;
-                            fill += 1;
-                            if fill == bsz {
-                                flush_contrib_batch(
-                                    engine, ndim, k, kh, fill, rows_a, rows_b,
-                                    rows_c, bvals, targets, &mut z, true, kern,
-                                );
-                                fill = 0;
-                            }
+    } else {
+        let fm_c = &factors[p.others()[2]];
+        let kk = ka * p.oks()[1];
+        ws.acc2.clear();
+        ws.acc2.resize(kk, 0.0);
+        let PlanWorkspace { acc, acc2, contrib, .. } = ws;
+        for r in 0..nrows {
+            let zrow = z.row_mut(r);
+            for oj in p.row_runs()[r] as usize..p.row_runs()[r + 1] as usize {
+                acc2.fill(0.0);
+                for j in p.outer_ptr()[oj] as usize..p.outer_ptr()[oj + 1] as usize {
+                    let acc_row: &[f32] = if cache == CachePolicy::Use {
+                        let cs = p.cache_slot(j) * kp;
+                        &contrib[cs..cs + ka]
+                    } else {
+                        acc.fill(0.0);
+                        let (s0, _) = p.run_slots(j);
+                        for s in s0..s0 + p.run_len(j) {
+                            axpy(vals[s], fm_a.row(fa[s] as usize), acc);
                         }
+                        if cache == CachePolicy::Fill {
+                            let cs = p.cache_slot(j) * kp;
+                            contrib[cs..cs + ka].copy_from_slice(acc);
+                        }
+                        &acc[..]
+                    };
+                    let rb = fm_b.row(p.run_b()[j] as usize);
+                    for (cb, &bv) in rb.iter().enumerate() {
+                        axpy(bv, acc_row, &mut acc2[cb * ka..(cb + 1) * ka]);
                     }
                 }
-            } else {
-                for j in lo..hi {
-                    let rb = fm_b.row(self.run_b[j] as usize);
-                    let s0 = self.slot_ptr[j] as usize;
-                    for s in s0..s0 + self.run_len[j] as usize {
+                let rc = fm_c.row(p.outer_c()[oj] as usize);
+                for (cc, &cv) in rc.iter().enumerate() {
+                    axpy(cv, acc2, &mut zrow[cc * kk..(cc + 1) * kk]);
+                }
+            }
+        }
+    }
+    LocalZ { rows: p.rows().to_vec(), z }
+}
+
+/// Tiled fused path: every inner loop is whole 8-lane tiles — run
+/// accumulation over the padded fa/vals blocks against the kp-stride
+/// factor table, fused slow×fast expansion into kp-stride tiles, then
+/// one compaction copy per row into the K̂ layout. Under `Fill`/`Use`
+/// the cache stores each fiber's full kp-wide accumulator tile, so a
+/// cache hit feeds the expansion the bit-identical tile the
+/// accumulation would have produced.
+fn assemble_fused_tiled_over<MK: Tile, P: ModePlan>(
+    p: &P,
+    factors: &[Mat],
+    ws: &mut PlanWorkspace,
+    cache: CachePolicy,
+) -> LocalZ {
+    let (ka, kp) = (p.oks()[0], p.kp());
+    let nrows = p.rows().len();
+    let data = ws.take_z(nrows * p.khat());
+    let mut z = Mat { rows: nrows, cols: p.khat(), data };
+    if p.nnz() == 0 {
+        return LocalZ { rows: p.rows().to_vec(), z };
+    }
+    let (fa, vals) = p.streams();
+    ws.prepare_apad(&factors[p.others()[0]], kp);
+    ws.acc.clear();
+    ws.acc.resize(kp, 0.0);
+    if p.others().len() == 2 {
+        let kb = p.oks()[1];
+        let fm_b = &factors[p.others()[1]];
+        ws.ztile.clear();
+        ws.ztile.resize(kb * kp, 0.0);
+        let PlanWorkspace { apad, acc, ztile, contrib, .. } = ws;
+        for r in 0..nrows {
+            let (jlo, jhi) = (p.row_runs()[r] as usize, p.row_runs()[r + 1] as usize);
+            for j in jlo..jhi {
+                let acc_row: &[f32] = if cache == CachePolicy::Use {
+                    let cs = p.cache_slot(j) * kp;
+                    &contrib[cs..cs + kp]
+                } else {
+                    let (slo, shi) = p.run_slots(j);
+                    accumulate_run::<MK>(&fa[slo..shi], &vals[slo..shi], apad, kp, acc);
+                    if cache == CachePolicy::Fill {
+                        let cs = p.cache_slot(j) * kp;
+                        contrib[cs..cs + kp].copy_from_slice(acc);
+                    }
+                    &acc[..]
+                };
+                let rb = fm_b.row(p.run_b()[j] as usize);
+                if j == jlo {
+                    MK::expand_store(rb, acc_row, ztile);
+                } else {
+                    MK::expand(rb, acc_row, ztile);
+                }
+            }
+            // compact the kp-stride tile into the dense K̂ row
+            let zrow = z.row_mut(r);
+            for cb in 0..kb {
+                zrow[cb * ka..(cb + 1) * ka]
+                    .copy_from_slice(&ztile[cb * kp..cb * kp + ka]);
+            }
+        }
+    } else {
+        let (kb, kc) = (p.oks()[1], p.oks()[2]);
+        let fm_b = &factors[p.others()[1]];
+        let fm_c = &factors[p.others()[2]];
+        ws.acc2.clear();
+        ws.acc2.resize(kb * kp, 0.0);
+        ws.ztile.clear();
+        ws.ztile.resize(kc * kb * kp, 0.0);
+        let PlanWorkspace { apad, acc, acc2, ztile, contrib, .. } = ws;
+        for r in 0..nrows {
+            let (olo, ohi) = (p.row_runs()[r] as usize, p.row_runs()[r + 1] as usize);
+            for oj in olo..ohi {
+                let (jlo, jhi) =
+                    (p.outer_ptr()[oj] as usize, p.outer_ptr()[oj + 1] as usize);
+                for j in jlo..jhi {
+                    let acc_row: &[f32] = if cache == CachePolicy::Use {
+                        let cs = p.cache_slot(j) * kp;
+                        &contrib[cs..cs + kp]
+                    } else {
+                        let (slo, shi) = p.run_slots(j);
+                        accumulate_run::<MK>(
+                            &fa[slo..shi],
+                            &vals[slo..shi],
+                            apad,
+                            kp,
+                            acc,
+                        );
+                        if cache == CachePolicy::Fill {
+                            let cs = p.cache_slot(j) * kp;
+                            contrib[cs..cs + kp].copy_from_slice(acc);
+                        }
+                        &acc[..]
+                    };
+                    let rb = fm_b.row(p.run_b()[j] as usize);
+                    if j == jlo {
+                        MK::expand_store(rb, acc_row, acc2);
+                    } else {
+                        MK::expand(rb, acc_row, acc2);
+                    }
+                }
+                let rc = fm_c.row(p.outer_c()[oj] as usize);
+                if oj == olo {
+                    MK::expand_store(rc, acc2, ztile);
+                } else {
+                    MK::expand(rc, acc2, ztile);
+                }
+            }
+            let zrow = z.row_mut(r);
+            for seg in 0..kc * kb {
+                zrow[seg * ka..(seg + 1) * ka]
+                    .copy_from_slice(&ztile[seg * kp..seg * kp + ka]);
+            }
+        }
+    }
+    LocalZ { rows: p.rows().to_vec(), z }
+}
+
+/// Batched plan path over any [`ModePlan`]: same padded fixed-shape
+/// engine contract as `assemble_local_z`, but fed from the lane-blocked
+/// streams (no searches, targets come straight from the run walk). Runs
+/// the padding check in `flush_contrib_batch` strictly: with the
+/// lane-blocked layout a violated val==0 contract is a data-layout bug,
+/// not a debug-only hazard. The gather is run-tiled (slow factor rows
+/// hoisted out of the element loop) and the scatter-add into Z runs
+/// K̂-tiled through the workspace kernel — both bit-neutral: the element
+/// order and the a == 1.0 axpy rounding are unchanged. A CSF view walks
+/// its runs in its own plan order here, which is exactly the element
+/// order of the equivalent per-mode plan — identical batch boundaries,
+/// identical bits.
+pub(crate) fn assemble_batched_over<P: ModePlan>(
+    p: &P,
+    factors: &[Mat],
+    engine: &Engine,
+    ws: &mut PlanWorkspace,
+) -> LocalZ {
+    assert!(
+        p.uniform_core(),
+        "the batched engine contract requires a uniform core \
+         (ragged ranks {:?} must use the fused path)",
+        p.oks()
+    );
+    let k = p.oks()[0];
+    let kh = p.khat();
+    let ndim = p.others().len() + 1;
+    let nrows = p.rows().len();
+    let data = ws.take_z(nrows * kh);
+    let mut z = Mat { rows: nrows, cols: kh, data };
+    if p.nnz() == 0 {
+        return LocalZ { rows: p.rows().to_vec(), z };
+    }
+    let (fa, vals) = p.streams();
+    let bsz = engine.ttm_batch_size(ndim, k);
+    let kern = ws.kernel;
+    ws.ensure_batch(bsz, k);
+    let PlanWorkspace { rows_a, rows_b, rows_c, bvals, targets, .. } = ws;
+    let (fm_a, fm_b) = (&factors[p.others()[0]], &factors[p.others()[1]]);
+    let fm_c = if ndim == 4 { Some(&factors[p.others()[2]]) } else { None };
+    let mut fill = 0usize;
+    for r in 0..nrows {
+        let (lo, hi) = (p.row_runs()[r] as usize, p.row_runs()[r + 1] as usize);
+        if let Some(fm_c) = fm_c {
+            for oj in lo..hi {
+                let rc = fm_c.row(p.outer_c()[oj] as usize);
+                let (jlo, jhi) =
+                    (p.outer_ptr()[oj] as usize, p.outer_ptr()[oj + 1] as usize);
+                for j in jlo..jhi {
+                    let rb = fm_b.row(p.run_b()[j] as usize);
+                    let (s0, _) = p.run_slots(j);
+                    for s in s0..s0 + p.run_len(j) {
                         rows_a[fill * k..(fill + 1) * k]
-                            .copy_from_slice(fm_a.row(self.fa[s] as usize));
+                            .copy_from_slice(fm_a.row(fa[s] as usize));
                         rows_b[fill * k..(fill + 1) * k].copy_from_slice(rb);
-                        bvals[fill] = self.vals[s];
+                        rows_c[fill * k..(fill + 1) * k].copy_from_slice(rc);
+                        bvals[fill] = vals[s];
                         targets[fill] = r as u32;
                         fill += 1;
                         if fill == bsz {
@@ -933,40 +1149,87 @@ impl TtmPlan {
                     }
                 }
             }
+        } else {
+            for j in lo..hi {
+                let rb = fm_b.row(p.run_b()[j] as usize);
+                let (s0, _) = p.run_slots(j);
+                for s in s0..s0 + p.run_len(j) {
+                    rows_a[fill * k..(fill + 1) * k]
+                        .copy_from_slice(fm_a.row(fa[s] as usize));
+                    rows_b[fill * k..(fill + 1) * k].copy_from_slice(rb);
+                    bvals[fill] = vals[s];
+                    targets[fill] = r as u32;
+                    fill += 1;
+                    if fill == bsz {
+                        flush_contrib_batch(
+                            engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals,
+                            targets, &mut z, true, kern,
+                        );
+                        fill = 0;
+                    }
+                }
+            }
         }
-        flush_contrib_batch(
-            engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals, targets,
-            &mut z, true, kern,
-        );
-        LocalZ { rows: self.rows.clone(), z }
     }
+    flush_contrib_batch(
+        engine, ndim, k, kh, fill, rows_a, rows_b, rows_c, bvals, targets, &mut z,
+        true, kern,
+    );
+    LocalZ { rows: p.rows().to_vec(), z }
 }
 
-/// Accumulate one padded run into `acc`: `acc = Σ_s vals[s]·apad[fa[s]]`
-/// over whole [`LANES`]-wide element blocks. The first element opens the
-/// accumulator with the scale(-accumulate) microkernel — no zero-fill —
-/// and the padded tail (val==0) contributes exact zeros.
-#[inline]
-fn accumulate_run<MK: Tile>(
-    fa: &[u32],
-    vals: &[f32],
-    apad: &[f32],
-    kp: usize,
-    acc: &mut [f32],
-) {
-    debug_assert!(!fa.is_empty());
-    debug_assert_eq!(fa.len() % LANES, 0);
-    debug_assert_eq!(fa.len(), vals.len());
-    let row = |f: u32| &apad[f as usize * kp..f as usize * kp + kp];
-    MK::scale(vals[0], row(fa[0]), acc);
-    for l in 1..LANES {
-        MK::axpy(vals[l], row(fa[l]), acc);
+/// Analytic FLOP count of one fused assembly of `p`: run accumulation
+/// (2·K_fast per real element) plus the per-run (and, for 4-D,
+/// per-outer) Kronecker expansions. With `cached == true` the
+/// accumulation term is dropped — the cost a shared-CSF mode pays when
+/// it reuses the sweep's fiber contributions instead of recomputing
+/// them. `benches/ablate_plan.rs` and the shared-plan `CostEstimate`
+/// discount are both derived from this model.
+pub fn fused_flops<P: ModePlan>(p: &P, cached: bool) -> f64 {
+    let ka = p.oks()[0] as f64;
+    let runs = p.run_b().len() as f64;
+    let mut fl = 0.0;
+    if !cached {
+        fl += 2.0 * p.nnz() as f64 * ka;
     }
-    for (f8, v8) in
-        fa[LANES..].chunks_exact(LANES).zip(vals[LANES..].chunks_exact(LANES))
-    {
-        for l in 0..LANES {
-            MK::axpy(v8[l], row(f8[l]), acc);
+    if p.others().len() == 2 {
+        fl += 2.0 * p.khat() as f64 * runs;
+    } else {
+        fl += 2.0 * ka * p.oks()[1] as f64 * runs;
+        fl += 2.0 * p.khat() as f64 * p.outer_c().len() as f64;
+    }
+    fl
+}
+
+/// Visit every *real* element of any [`ModePlan`] in plan order as
+/// `(local_row, fa, fb, fc, val)` — the generic counterpart of
+/// [`TtmPlan::for_each_element`] (`fc` is 0 for 3-D plans).
+pub fn for_each_element_over<P: ModePlan>(
+    p: &P,
+    mut f: impl FnMut(usize, u32, u32, u32, f32),
+) {
+    let four = p.others().len() == 3;
+    let (fa, vals) = p.streams();
+    for r in 0..p.rows().len() {
+        let (lo, hi) = (p.row_runs()[r] as usize, p.row_runs()[r + 1] as usize);
+        if four {
+            for oj in lo..hi {
+                let (jlo, jhi) =
+                    (p.outer_ptr()[oj] as usize, p.outer_ptr()[oj + 1] as usize);
+                for j in jlo..jhi {
+                    let (s0, _) = p.run_slots(j);
+                    for s in s0..s0 + p.run_len(j) {
+                        f(r, fa[s], p.run_b()[j], p.outer_c()[oj], vals[s]);
+                    }
+                }
+            }
+        } else {
+            for j in lo..hi {
+                let (s0, _) = p.run_slots(j);
+                for s in s0..s0 + p.run_len(j) {
+                    f(r, fa[s], p.run_b()[j], 0, vals[s]);
+                }
+            }
         }
     }
 }
@@ -994,43 +1257,55 @@ pub fn check_lane_invariants(t: &SparseTensor, plan: &TtmPlan) {
 /// by the plan unit tests and by the streaming-ingest tests to pin that
 /// incrementally spliced/rebuilt plans stay well-formed.
 pub fn check_lane_invariants_for(t: &SparseTensor, plan: &TtmPlan, elems: &[u32]) {
-    let mode = plan.mode;
-    assert!(plan.rows.windows(2).all(|w| w[0] < w[1]), "rows ascending");
-    assert_eq!(plan.kp % LANES, 0);
-    assert!(plan.kp >= plan.oks[0]);
+    // stream totals only an owning plan can promise (CSF views alias the
+    // spine streams, so these stay TtmPlan-specific)
     assert_eq!(*plan.slot_ptr.last().unwrap() as usize, plan.fa.len());
     assert_eq!(plan.fa.len(), plan.vals.len());
+    check_lane_invariants_over(t, plan, elems);
+}
+
+/// The [`ModePlan`]-generic core of [`check_lane_invariants_for`]:
+/// ascending rows, lane-aligned run blocks, the val==0/repeated-index
+/// padding contract, `run_len` summing to `nnz`, and the real-element
+/// multiset matching `elems` — the form `hooi::csf` runs over the
+/// shared tree's spine, streams, *and* fiber-mapped views alike.
+pub fn check_lane_invariants_over<P: ModePlan>(t: &SparseTensor, plan: &P, elems: &[u32]) {
+    let mode = plan.mode();
+    let (fa, vals) = plan.streams();
+    assert!(plan.rows().windows(2).all(|w| w[0] < w[1]), "rows ascending");
+    assert_eq!(plan.kp() % LANES, 0);
+    assert!(plan.kp() >= plan.oks()[0]);
     let mut real = 0usize;
-    for j in 0..plan.run_b.len() {
-        let (lo, hi) = (plan.slot_ptr[j] as usize, plan.slot_ptr[j + 1] as usize);
-        let len = plan.run_len[j] as usize;
+    for j in 0..plan.run_b().len() {
+        let (lo, hi) = plan.run_slots(j);
+        let len = plan.run_len(j);
         assert!(len >= 1, "runs are non-empty");
         assert_eq!(hi - lo, pad_to_lanes(len), "run {j} aligned");
         // padded slots: val exactly 0.0, index repeats a real slot
         for s in lo + len..hi {
-            assert_eq!(plan.vals[s].to_bits(), 0.0f32.to_bits(), "pad val run {j}");
-            assert_eq!(plan.fa[s], plan.fa[lo + len - 1], "pad idx run {j}");
+            assert_eq!(vals[s].to_bits(), 0.0f32.to_bits(), "pad val run {j}");
+            assert_eq!(fa[s], fa[lo + len - 1], "pad idx run {j}");
         }
         real += len;
     }
     assert_eq!(real, plan.nnz(), "run_len sums to nnz");
     // multiset of real elements matches the given element list
     let mut got: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
-    plan.for_each_element(|r, ia, ib, ic, v| {
-        got.push((plan.rows[r], ia, ib, ic, v.to_bits()));
+    for_each_element_over(plan, |r, ia, ib, ic, v| {
+        got.push((plan.rows()[r], ia, ib, ic, v.to_bits()));
     });
     let mut want: Vec<(u32, u32, u32, u32, u32)> = Vec::new();
     for &eu in elems {
         let e = eu as usize;
-        let ic = if plan.others.len() == 3 {
-            t.coord(plan.others[2], e)
+        let ic = if plan.others().len() == 3 {
+            t.coord(plan.others()[2], e)
         } else {
             0
         };
         want.push((
             t.coord(mode, e),
-            t.coord(plan.others[0], e),
-            t.coord(plan.others[1], e),
+            t.coord(plan.others()[0], e),
+            t.coord(plan.others()[1], e),
             ic,
             t.vals[e].to_bits(),
         ));

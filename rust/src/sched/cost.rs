@@ -129,6 +129,48 @@ impl CostEstimate {
             secs_per_sweep: secs,
         }
     }
+
+    /// Re-price this estimate for a `PlanChoice::SharedCsf` sweep. The
+    /// shared tree's contribution cache computes each fiber's
+    /// `2·E·K_0` value-weighted fast-factor accumulation once per sweep
+    /// (mode 0 cannot share it — its fast factor is mode 1 — and the
+    /// first non-leaf mode fills the cache), so every *later* non-leaf
+    /// mode `n ≥ 2` skips that accumulation and keeps only its
+    /// Kronecker-expansion share: its TTM term scales by
+    /// `1 − K_0/K̂_n`. Communication and SVD terms are layout-invariant.
+    /// The per-mode seconds and the sweep totals are recomputed under
+    /// the same [`CostModel`] so rebalance comparisons stay
+    /// commensurable with the per-mode estimate.
+    pub fn with_shared_csf(&self, ks: &[usize], model: &CostModel) -> CostEstimate {
+        assert_eq!(self.per_mode.len(), ks.len(), "one core rank per mode");
+        let k0 = ks.first().copied().unwrap_or(1) as f64;
+        let mut per_mode = Vec::with_capacity(self.per_mode.len());
+        let (mut flops, mut units, mut secs) = (0.0f64, 0.0f64, 0.0f64);
+        for (n, (mc, &k_n)) in self.per_mode.iter().zip(ks.iter()).enumerate() {
+            let khat: f64 = ks
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != n)
+                .map(|(_, &k)| k as f64)
+                .product();
+            let reuse = if n >= 2 { (1.0 - k0 / khat).max(0.0) } else { 1.0 };
+            let ttm_flops = mc.ttm_flops * reuse;
+            let q_n = 4.0 * k_n as f64;
+            let mode_secs = (ttm_flops + mc.svd_flops) / model.flops_per_sec
+                + model.net.alpha * (q_n + 1.0)
+                + model.net.beta * (mc.oracle_units + mc.fm_units);
+            flops += ttm_flops + mc.svd_flops;
+            units += mc.oracle_units + mc.fm_units;
+            secs += mode_secs;
+            per_mode.push(ModeCost { ttm_flops, secs: mode_secs, ..mc.clone() });
+        }
+        CostEstimate {
+            per_mode,
+            flops_per_sweep: flops,
+            comm_units_per_sweep: units,
+            secs_per_sweep: secs,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +210,32 @@ mod tests {
         // its redundancy (comm units) exceeds the single-rank layout's
         assert!(cb.comm_units_per_sweep > cs.comm_units_per_sweep);
         assert!(cb.secs_per_sweep > 0.0 && cs.secs_per_sweep > 0.0);
+    }
+
+    #[test]
+    fn shared_csf_discount_drops_reusing_modes_only() {
+        let mut rng = Rng::new(7);
+        let t = SparseTensor::random(vec![16, 12, 10], 700, &mut rng);
+        let p = 3usize;
+        let assigns: Vec<Vec<u32>> =
+            (0..3).map(|_| (0..t.nnz()).map(|e| (e % p) as u32).collect()).collect();
+        let ms = metrics_for(&assigns, p, &t);
+        let ks = [4usize, 4, 4];
+        let model = CostModel::default();
+        let base = CostEstimate::from_metrics(&ms.iter().collect::<Vec<_>>(), &ks, &model);
+        let shared = base.with_shared_csf(&ks, &model);
+        // modes 0 and 1 pay full freight (mode 0 owns its streams; the
+        // first non-leaf mode fills the cache)
+        assert_eq!(shared.per_mode[0].ttm_flops, base.per_mode[0].ttm_flops);
+        assert_eq!(shared.per_mode[1].ttm_flops, base.per_mode[1].ttm_flops);
+        // mode 2 reuses: its accumulation share (K_0/K̂ = 4/16) drops
+        let want = base.per_mode[2].ttm_flops * (1.0 - 4.0 / 16.0);
+        assert!((shared.per_mode[2].ttm_flops - want).abs() < 1e-6);
+        assert!(shared.flops_per_sweep < base.flops_per_sweep);
+        assert!(shared.secs_per_sweep < base.secs_per_sweep);
+        // comm and SVD are layout-invariant
+        assert_eq!(shared.comm_units_per_sweep, base.comm_units_per_sweep);
+        assert_eq!(shared.per_mode[2].svd_flops, base.per_mode[2].svd_flops);
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub const PHASE_EXECUTOR: &str = "TUCKER_PHASE_EXECUTOR";
 pub const TRANSPORT: &str = "TUCKER_TRANSPORT";
 /// Fig 17 accounting override: `coo|plan` (`hooi::TensorAccounting`).
 pub const MEM_ACCOUNTING: &str = "TUCKER_MEM_ACCOUNTING";
+/// Plan layout override: `per-mode|shared` (`coordinator::PlanChoice`).
+pub const PLAN: &str = "TUCKER_PLAN";
+/// Pin parallel-executor worker threads to cores: `on|off`
+/// (`dist::SimCluster`; NUMA first-touch placement).
+pub const PIN_THREADS: &str = "TUCKER_PIN_THREADS";
 /// PJRT artifact directory (`runtime::artifacts`).
 pub const ARTIFACTS: &str = "TUCKER_ARTIFACTS";
 /// Bench harness: any value selects the tiny smoke configuration.
@@ -113,6 +118,42 @@ fn parse_executor(s: &str) -> Option<bool> {
         Some(false)
     } else if s.eq_ignore_ascii_case("parallel") {
         Some(true)
+    } else {
+        None
+    }
+}
+
+/// [`PLAN`] as "should the sweep run over one shared CSF tree per rank"
+/// (`option` from the session's typed `PlanChoice`; env accepts
+/// `shared`/`csf` and `per-mode`/`permode`; default: per-mode plans —
+/// the historical layout).
+pub fn plan_shared_csf(option: Option<bool>) -> bool {
+    resolve(option, PLAN, parse_plan, || false)
+}
+
+fn parse_plan(s: &str) -> Option<bool> {
+    if s.eq_ignore_ascii_case("shared") || s.eq_ignore_ascii_case("csf") {
+        Some(true)
+    } else if s.eq_ignore_ascii_case("per-mode") || s.eq_ignore_ascii_case("permode") {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// [`PIN_THREADS`] as "should parallel-executor workers pin to cores"
+/// (`option` from the session builder; env accepts `on`/`off`; default:
+/// off — pinning helps NUMA hosts but hurts oversubscribed ones, so it
+/// stays opt-in).
+pub fn pin_threads(option: Option<bool>) -> bool {
+    resolve(option, PIN_THREADS, parse_on_off, || false)
+}
+
+fn parse_on_off(s: &str) -> Option<bool> {
+    if s.eq_ignore_ascii_case("on") || s == "1" {
+        Some(true)
+    } else if s.eq_ignore_ascii_case("off") || s == "0" {
+        Some(false)
     } else {
         None
     }
@@ -257,6 +298,56 @@ mod tests {
         assert_eq!(serve_threads(Some(2)), 2);
         assert_eq!(serve_snapshot_bytes(Some(1 << 20)), 1 << 20);
         assert_eq!(serve_batch(Some(64)), 64);
+    }
+
+    #[test]
+    fn plan_and_pin_precedence_typed_env_default() {
+        // typed option beats a valid env value
+        let got = resolve_with(
+            Some(false),
+            PLAN,
+            Some("shared".to_string()),
+            parse_plan,
+            || false,
+        );
+        assert!(!got);
+        // valid env values beat the default, case-insensitively
+        for v in ["shared", "CSF"] {
+            let got =
+                resolve_with(None, PLAN, Some(v.to_string()), parse_plan, || false);
+            assert!(got, "{v}");
+        }
+        for v in ["per-mode", "PerMode"] {
+            let got =
+                resolve_with(None, PLAN, Some(v.to_string()), parse_plan, || true);
+            assert!(!got, "{v}");
+        }
+        // invalid env value warns and falls back to the default
+        let got =
+            resolve_with(None, PLAN, Some("tree".to_string()), parse_plan, || false);
+        assert!(!got);
+        // unset env: per-mode
+        assert!(!resolve_with(None, PLAN, None, parse_plan, || false));
+        // pinning: same table, on/off/1/0 spellings
+        let got = resolve_with(
+            Some(true),
+            PIN_THREADS,
+            Some("off".to_string()),
+            parse_on_off,
+            || false,
+        );
+        assert!(got);
+        assert_eq!(parse_on_off("on"), Some(true));
+        assert_eq!(parse_on_off("1"), Some(true));
+        assert_eq!(parse_on_off("OFF"), Some(false));
+        assert_eq!(parse_on_off("0"), Some(false));
+        assert_eq!(parse_on_off("yes"), None);
+        assert!(!resolve_with(None, PIN_THREADS, None, parse_on_off, || false));
+        // the typed accessors' Some(..) arm never reads the environment
+        assert!(plan_shared_csf(Some(true)));
+        assert!(!plan_shared_csf(Some(false)));
+        assert!(pin_threads(Some(true)));
+        assert!(!pin_threads(Some(false)));
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! Shared-CSF plan layer integration: `PlanChoice::SharedCsf` must be
+//! **bit-identical** to `PlanChoice::PerMode` on every decomposition
+//! (3-D property-tested, 4-D pinned across executors and kernels), the
+//! per-rank trees keep the CSF structural invariants through ingest
+//! splices and rebalance migrations, ingest + decompose under the
+//! shared layout matches a fresh shared build on the mutated tensor,
+//! and crash recovery lands the same bits regardless of the plan
+//! layout.
+
+use tucker_lite::coordinator::{
+    ExecutorChoice, KernelChoice, PlanChoice, SchemeChoice, TuckerSession,
+    Workload,
+};
+use tucker_lite::dist::FaultPlan;
+use tucker_lite::hooi::{check_csf_invariants, CoreRanks, Kernel};
+use tucker_lite::prop_assert;
+use tucker_lite::sched::{Distribution, Scheme};
+use tucker_lite::tensor::{SliceIndex, SparseTensor, TensorDelta};
+use tucker_lite::util::check::Runner;
+use tucker_lite::util::rng::Rng;
+
+/// A scheme that replays a fixed distribution — pins "the same
+/// placement" when comparing a streamed shared session against a fresh
+/// build on the mutated tensor.
+struct Fixed(Distribution);
+
+impl Scheme for Fixed {
+    fn name(&self) -> &'static str {
+        "Fixed"
+    }
+
+    fn uni(&self) -> bool {
+        self.0.uni
+    }
+
+    fn policies(
+        &self,
+        _t: &SparseTensor,
+        _idx: &[SliceIndex],
+        _p: usize,
+        _rng: &mut Rng,
+    ) -> Distribution {
+        self.0.clone()
+    }
+}
+
+fn workload(dims: Vec<u32>, nnz: usize, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed);
+    Workload::from_tensor("csf", SparseTensor::random(dims, nnz, &mut rng))
+}
+
+fn build(
+    w: &Workload,
+    scheme: SchemeChoice,
+    p: usize,
+    k: usize,
+    invocations: usize,
+    plan: PlanChoice,
+) -> TuckerSession {
+    TuckerSession::builder(w.clone())
+        .scheme(scheme)
+        .ranks(p)
+        .core(CoreRanks::Uniform(k))
+        .invocations(invocations)
+        .plan(plan)
+        .seed(31)
+        .build()
+        .expect("valid session")
+}
+
+fn random_delta(
+    t: &SparseTensor,
+    rng: &mut Rng,
+    n_app: usize,
+    n_chg: usize,
+    n_rem: usize,
+) -> TensorDelta {
+    let mut d = TensorDelta::new();
+    for _ in 0..n_app {
+        let coord: Vec<u32> =
+            t.dims.iter().map(|&l| rng.below(l as u64) as u32).collect();
+        d = d.append(&coord, rng.f32() * 2.0 - 1.0);
+    }
+    let existing = |rng: &mut Rng| -> Vec<u32> {
+        let e = rng.usize_below(t.nnz());
+        (0..t.ndim()).map(|m| t.coord(m, e)).collect()
+    };
+    for _ in 0..n_chg {
+        let coord = existing(rng);
+        d = d.change(&coord, rng.f32() * 2.0 - 1.0);
+    }
+    for _ in 0..n_rem {
+        let coord = existing(rng);
+        d = d.remove(&coord);
+    }
+    d
+}
+
+/// Every per-rank tree of a shared-layout session passes the CSF
+/// structural invariants against the live mode element lists.
+fn assert_shared_invariants(s: &TuckerSession) {
+    let t = &s.workload().tensor;
+    let shared = s.shared_plans().expect("SharedCsf layout");
+    assert_eq!(shared.per_rank.len(), s.distribution().p);
+    for (rank, plan) in shared.per_rank.iter().enumerate() {
+        let lists: Vec<&[u32]> = s
+            .mode_states()
+            .iter()
+            .map(|st| st.elems[rank].as_slice())
+            .collect();
+        check_csf_invariants(t, plan, &lists);
+    }
+}
+
+fn assert_bit_identical(
+    a: &tucker_lite::coordinator::Decomposition,
+    b: &tucker_lite::coordinator::Decomposition,
+    ctx: &str,
+) {
+    assert_eq!(a.fit().to_bits(), b.fit().to_bits(), "{ctx}: fit diverges");
+    for (n, (x, y)) in a.factors.iter().zip(&b.factors).enumerate() {
+        assert_eq!(x.data, y.data, "{ctx}: mode {n} factors diverge");
+    }
+    assert_eq!(a.core.data, b.core.data, "{ctx}: cores diverge");
+}
+
+#[test]
+fn shared_matches_per_mode_bit_exactly_3d() {
+    Runner::new(10, 30).run("csf-shared-per-mode-equivalence", |case, rng| {
+        let p = 2 + rng.usize_below(4);
+        let k = 2 + rng.usize_below(3);
+        let dims = vec![
+            (8 + rng.usize_below(case.size + 8)) as u32,
+            (6 + rng.usize_below(12)) as u32,
+            (4 + rng.usize_below(8)) as u32,
+        ];
+        let nnz = 150 + rng.usize_below(case.size * 10 + 50);
+        let w = Workload::from_tensor("csf", SparseTensor::random(dims, nnz, rng));
+        // alternate uni (MediumG: views exist) and non-uni (Lite:
+        // all-Stream degradation) schemes — both must be bit-exact
+        let scheme = || {
+            if case.index % 2 == 0 {
+                SchemeChoice::Lite
+            } else {
+                SchemeChoice::MediumG
+            }
+        };
+        let mut a = build(&w, scheme(), p, k, 2, PlanChoice::PerMode);
+        let mut b = build(&w, scheme(), p, k, 2, PlanChoice::SharedCsf);
+        prop_assert!(a.shared_plans().is_none(), "per-mode holds no trees");
+        prop_assert!(
+            b.shared_plans().map_or(0, |sp| sp.per_rank.len()) == p,
+            "one tree per rank"
+        );
+        let da = a.decompose();
+        let db = b.decompose();
+        prop_assert!(
+            da.fit().to_bits() == db.fit().to_bits(),
+            "fit {} vs shared {}",
+            da.fit(),
+            db.fit()
+        );
+        for (n, (x, y)) in da.factors.iter().zip(&db.factors).enumerate() {
+            prop_assert!(x.data == y.data, "mode {n} factors diverge");
+        }
+        prop_assert!(da.core.data == db.core.data, "cores diverge");
+        Ok(())
+    });
+}
+
+#[test]
+fn shared_matches_per_mode_across_executors_and_kernels_4d() {
+    let w = workload(vec![10, 8, 6, 5], 400, 17);
+    for executor in [ExecutorChoice::Serial, ExecutorChoice::Parallel] {
+        for kernel in [Kernel::Scalar, Kernel::Portable] {
+            let run = |plan: PlanChoice| {
+                TuckerSession::builder(w.clone())
+                    .scheme(SchemeChoice::Lite)
+                    .ranks(3)
+                    .core(CoreRanks::Uniform(3))
+                    .invocations(2)
+                    .executor(executor)
+                    .kernel(KernelChoice::Fixed(kernel))
+                    .plan(plan)
+                    .seed(23)
+                    .build()
+                    .unwrap()
+                    .decompose()
+            };
+            let a = run(PlanChoice::PerMode);
+            let b = run(PlanChoice::SharedCsf);
+            assert_bit_identical(&a, &b, &format!("{executor:?}/{kernel:?}"));
+        }
+    }
+}
+
+#[test]
+fn session_trees_keep_invariants_through_consecutive_ingests() {
+    Runner::new(8, 25).run("csf-ingest-invariants", |case, rng| {
+        let p = 2 + rng.usize_below(3);
+        let dims = vec![
+            (6 + rng.usize_below(case.size + 6)) as u32,
+            (5 + rng.usize_below(10)) as u32,
+            (4 + rng.usize_below(6)) as u32,
+        ];
+        let nnz = 120 + rng.usize_below(case.size * 8 + 40);
+        let w = Workload::from_tensor("csf", SparseTensor::random(dims, nnz, rng));
+        let mut s = build(&w, SchemeChoice::Lite, p, 3, 1, PlanChoice::SharedCsf);
+        assert_shared_invariants(&s);
+        // consecutive ingests stress splice-on-spliced trees
+        for round in 0..3 {
+            let n_app = 1 + rng.usize_below(12);
+            let n_chg = rng.usize_below(6);
+            let n_rem = rng.usize_below(3);
+            let delta =
+                random_delta(&s.workload().tensor, rng, n_app, n_chg, n_rem);
+            let rep =
+                s.ingest(&delta).map_err(|e| format!("round {round}: {e}"))?;
+            prop_assert!(
+                rep.plan_count == p,
+                "shared layout reports one tree per rank, got {}",
+                rep.plan_count
+            );
+            prop_assert!(
+                rep.plans_touched() <= rep.plan_count,
+                "touched {} of {} trees",
+                rep.plans_touched(),
+                rep.plan_count
+            );
+            assert_shared_invariants(&s);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shared_ingest_matches_fresh_shared_build() {
+    let mut rng = Rng::new(43);
+    let t = SparseTensor::random(vec![18, 14, 9], 700, &mut rng);
+    let w = Workload::from_tensor("csf", t);
+    let mut streamed = build(&w, SchemeChoice::Lite, 4, 3, 1, PlanChoice::SharedCsf);
+    let delta = random_delta(&streamed.workload().tensor, &mut rng, 25, 6, 3);
+    streamed.ingest(&delta).unwrap();
+    assert_shared_invariants(&streamed);
+    let w2 = Workload::from_tensor("fresh", streamed.workload().tensor.clone());
+    let mut fresh = build(
+        &w2,
+        SchemeChoice::custom(Box::new(Fixed(streamed.distribution().clone()))),
+        4,
+        3,
+        1,
+        PlanChoice::SharedCsf,
+    );
+    let d_inc = streamed.decompose();
+    let d_fresh = fresh.decompose();
+    assert_bit_identical(&d_inc, &d_fresh, "ingest vs fresh shared build");
+    assert_eq!(streamed.plan_builds(), 1, "ingest never re-runs prepare_modes");
+}
+
+#[test]
+fn value_only_ingest_splices_shared_trees_in_place() {
+    let mut rng = Rng::new(23);
+    let t = SparseTensor::random(vec![20, 15, 10], 900, &mut rng);
+    let w = Workload::from_tensor("values", t);
+    let mut s = build(&w, SchemeChoice::Lite, 4, 4, 1, PlanChoice::SharedCsf);
+    let delta = random_delta(&s.workload().tensor, &mut rng, 0, 5, 2);
+    let rep = s.ingest(&delta).unwrap();
+    assert_eq!(rep.appended, 0);
+    assert!(rep.plans_rebuilt == 0, "small value batches splice in place");
+    assert!(rep.plans_spliced >= 1);
+    assert_shared_invariants(&s);
+    let w2 = Workload::from_tensor("fresh", s.workload().tensor.clone());
+    let mut fresh = build(
+        &w2,
+        SchemeChoice::custom(Box::new(Fixed(s.distribution().clone()))),
+        4,
+        4,
+        1,
+        PlanChoice::SharedCsf,
+    );
+    let d_inc = s.decompose();
+    let d_fresh = fresh.decompose();
+    assert_bit_identical(&d_inc, &d_fresh, "value splice vs fresh shared build");
+}
+
+#[test]
+fn rebalance_migration_round_trip_under_shared() {
+    let mut rng = Rng::new(19);
+    let t = SparseTensor::random(vec![10, 8, 6, 5], 500, &mut rng);
+    let w = Workload::from_tensor("csf4d", t);
+    let mut streamed = build(&w, SchemeChoice::Lite, 3, 3, 1, PlanChoice::SharedCsf);
+    let delta = random_delta(&streamed.workload().tensor, &mut rng, 30, 0, 0);
+    streamed.ingest(&delta).unwrap();
+    let rb = streamed.rebalance();
+    assert!(rb.migrated, "a fresh Lite re-plan of a grown tensor moves elements");
+    assert!(
+        rb.plans_spliced + rb.plans_rebuilt <= 3,
+        "at most one rebuild per rank's tree, got {}",
+        rb.plans_spliced + rb.plans_rebuilt
+    );
+    assert_shared_invariants(&streamed);
+    let w2 = Workload::from_tensor("fresh", streamed.workload().tensor.clone());
+    let mut fresh = build(
+        &w2,
+        SchemeChoice::custom(Box::new(Fixed(streamed.distribution().clone()))),
+        3,
+        3,
+        1,
+        PlanChoice::SharedCsf,
+    );
+    let d_inc = streamed.decompose();
+    let d_fresh = fresh.decompose();
+    assert_bit_identical(&d_inc, &d_fresh, "migration vs fresh shared build");
+    assert_eq!(streamed.plan_builds(), 1, "migration never re-runs prepare_modes");
+}
+
+#[test]
+fn crash_recovery_is_plan_layout_invariant() {
+    // a crash at a mid-sweep phase recovers via survivor re-placement;
+    // the recovered bits must not depend on the plan layout, and the
+    // shared session's trees must reflect the post-eviction element
+    // lists
+    let w = workload(vec![14, 10, 8], 250, 5);
+    let run = |plan: PlanChoice| {
+        let mut s = TuckerSession::builder(w.clone())
+            .ranks(4)
+            .core(CoreRanks::Uniform(2))
+            .invocations(2)
+            .fault_plan(FaultPlan::new().crash_at(1, 1, 2))
+            .plan(plan)
+            .seed(17)
+            .build()
+            .unwrap();
+        let d = s.try_decompose().expect("recovers");
+        assert_eq!(s.dead_ranks(), vec![2]);
+        assert_eq!(d.record.faults_injected, 1);
+        (s, d)
+    };
+    let (_a, da) = run(PlanChoice::PerMode);
+    let (b, db) = run(PlanChoice::SharedCsf);
+    assert_bit_identical(&da, &db, "recovery across plan layouts");
+    assert_shared_invariants(&b);
+    // the dead rank's tree is empty after survivor re-placement
+    let shared = b.shared_plans().unwrap();
+    assert_eq!(shared.per_rank[2].spine.nnz(), 0, "victim owns nothing");
+}
+
+#[test]
+fn checkpoint_restore_round_trip_under_shared() {
+    let w = workload(vec![15, 12, 9], 300, 6);
+    let mk = || build(&w, SchemeChoice::Lite, 4, 3, 2, PlanChoice::SharedCsf);
+    let mut original = mk();
+    original.decompose();
+    let cp = original.checkpoint().expect("state to checkpoint");
+    let wire = tucker_lite::coordinator::SessionCheckpoint::parse(&cp.serialize())
+        .expect("parses");
+    let mut resumed = mk();
+    resumed.restore(&wire).expect("restores");
+    let a = original.decompose_more(1);
+    let b = resumed.decompose_more(1);
+    assert_bit_identical(&a, &b, "checkpoint round trip under shared");
+    assert_shared_invariants(&resumed);
+}

@@ -198,7 +198,13 @@ fn four_dimensional_ingest_matches_fresh_session() {
     let mut streamed = build_streamed(&w, 3, 3, 1);
     let delta = random_delta(&streamed.workload().tensor, &mut rng, 25, 6, 3);
     let rep = streamed.ingest(&delta).unwrap();
-    assert!(rep.plans_touched() >= 4, "every mode has a dirty rank");
+    if streamed.shared_plans().is_some() {
+        // under TUCKER_PLAN=shared the unit of maintenance is the
+        // rank's one tree: a broad delta dirties all P of them
+        assert!(rep.plans_touched() >= 3, "every rank's tree is dirty");
+    } else {
+        assert!(rep.plans_touched() >= 4, "every mode has a dirty rank");
+    }
     let mut fresh = build_fresh(&streamed, 3, 3, 1);
     let d_inc = streamed.decompose();
     let d_fresh = fresh.decompose();

@@ -109,12 +109,31 @@ fn rebalance_rebuilds_only_the_diffed_plans() {
     assert!(!mig.is_empty());
     assert_eq!(rb.moved_elements, mig.moved_elements);
     assert_eq!(rb.migration_bytes, mig.bytes);
-    assert_eq!(
-        s.plan_rebuilds() - rebuilds_before,
-        mig.dirty_plans(),
-        "rebalance touches exactly the diffed (mode, rank) plans"
-    );
-    assert_eq!(rb.plans_spliced + rb.plans_rebuilt, mig.dirty_plans());
+    if s.shared_plans().is_some() {
+        // under TUCKER_PLAN=shared the unit of maintenance is the
+        // rank's one tree: a rank dirtied by any mode's move rebuilds
+        // exactly once
+        let dirty_ranks = (0..p)
+            .filter(|&r| {
+                mig.per_mode.iter().any(|mm| {
+                    !mm.incoming[r].is_empty() || !mm.outgoing[r].is_empty()
+                })
+            })
+            .count();
+        assert_eq!(
+            s.plan_rebuilds() - rebuilds_before,
+            dirty_ranks,
+            "rebalance rebuilds exactly the dirty ranks' trees"
+        );
+        assert_eq!(rb.plans_spliced + rb.plans_rebuilt, dirty_ranks);
+    } else {
+        assert_eq!(
+            s.plan_rebuilds() - rebuilds_before,
+            mig.dirty_plans(),
+            "rebalance touches exactly the diffed (mode, rank) plans"
+        );
+        assert_eq!(rb.plans_spliced + rb.plans_rebuilt, mig.dirty_plans());
+    }
     assert_eq!(s.plan_builds(), 1, "never a full re-prepare");
     assert!(s.pending_rebalance().is_empty(), "fresh Lite satisfies the bounds");
     assert!(s.decompose().fit().is_finite());
