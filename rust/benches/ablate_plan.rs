@@ -21,7 +21,7 @@
 #[path = "common.rs"]
 mod common;
 
-use std::time::Instant;
+use tucker_lite::util::timer::Stopwatch;
 use tucker_lite::coordinator::{
     KernelChoice, PlanChoice, SchemeChoice, TuckerSession, Workload,
 };
@@ -37,11 +37,11 @@ use tucker_lite::util::table::{fmt_secs, Table};
 
 fn time_it(reps: usize, f: &mut dyn FnMut()) -> f64 {
     f(); // warmup
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     for _ in 0..reps {
         f();
     }
-    t0.elapsed().as_secs_f64() / reps as f64
+    t0.seconds() / reps as f64
 }
 
 fn assembly_case(
@@ -65,9 +65,9 @@ fn assembly_case(
         std::hint::black_box(z.rows.len());
     });
 
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let plan = TtmPlan::build(t, 0, &elems, k);
-    let build = t0.elapsed().as_secs_f64();
+    let build = t0.seconds();
 
     let mut ws_scalar = PlanWorkspace::with_kernel(Kernel::Scalar);
     let scalar = time_it(reps, &mut || {
@@ -182,11 +182,11 @@ fn main() {
             }
         };
         one_round(&mut cluster, &mut workspaces); // warmup
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         for _ in 0..reps {
             one_round(&mut cluster, &mut workspaces);
         }
-        let wall = t0.elapsed().as_secs_f64() / reps as f64;
+        let wall = t0.seconds() / reps as f64;
         // 1 warmup + reps rounds charged
         let sim = cluster.elapsed.get(cat::TTM) / (reps + 1) as f64;
         (wall, sim)
@@ -236,21 +236,21 @@ fn main() {
     };
 
     // fresh: one full run per trace point — the pre-session pattern
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let mut fresh_fit = 0.0;
     for inv in 1..=sweeps {
         fresh_fit = build_session(w.clone(), inv).decompose().fit();
     }
-    let fresh_wall = t0.elapsed().as_secs_f64();
+    let fresh_wall = t0.seconds();
 
     // reused: one session, one plan compilation, incremental refinement
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let mut session = build_session(w.clone(), 1);
     let mut d = session.decompose();
     for _ in 1..sweeps {
         d = session.decompose_more(1);
     }
-    let reused_wall = t0.elapsed().as_secs_f64();
+    let reused_wall = t0.seconds();
     assert_eq!(session.plan_builds(), 1, "one compilation for all sweeps");
     assert!(
         (d.fit() - fresh_fit).abs() < 1e-6,
@@ -317,23 +317,23 @@ fn main() {
                 dims.iter().map(|&l| rng.below(l as u64) as u32).collect();
             delta = delta.append(&coord, rng.f32() * 2.0 - 1.0);
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let rep = session.ingest(&delta).expect("valid ablation delta");
-        let ingest_secs = t0.elapsed().as_secs_f64();
+        let ingest_secs = t0.seconds();
         // the full-rebuild baseline compiles every (mode, rank) plan of
         // the mutated tensor under the now-extended placement
         let w2 = Workload::from_tensor(
             "ablate_ingest_full",
             session.workload().tensor.clone(),
         );
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let modes = prepare_modes(
             &w2.tensor,
             &w2.idx,
             session.distribution(),
             &CoreRanks::Uniform(k),
         );
-        let full_secs = t0.elapsed().as_secs_f64();
+        let full_secs = t0.seconds();
         std::hint::black_box(modes.len());
         t4.row(vec![
             batch.to_string(),
@@ -382,23 +382,23 @@ fn main() {
     // compare the same tensor under the old vs the re-planned placement
     let _ = session.decompose();
     let h_before = session.decompose().record.hooi_secs;
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let rb = session.rebalance();
-    let rebal_secs = t0.elapsed().as_secs_f64();
+    let rebal_secs = t0.seconds();
     // baseline: what a session without diff-driven migration would pay —
     // prepare_modes over everything on the re-planned placement
     let w2 = Workload::from_tensor(
         "ablate_rebalance_full",
         session.workload().tensor.clone(),
     );
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let modes = prepare_modes(
         &w2.tensor,
         &w2.idx,
         session.distribution(),
         &CoreRanks::Uniform(k),
     );
-    let full_secs = t0.elapsed().as_secs_f64();
+    let full_secs = t0.seconds();
     std::hint::black_box(modes.len());
     // drain the pending ingest/migration charges into a throwaway run,
     // then measure a clean post-rebalance sweep
@@ -492,11 +492,11 @@ fn main() {
         let time_sweeps = |plan: PlanChoice| {
             let mut s = build_layout(w.clone(), kernel, plan);
             let d = s.decompose(); // absorbs the one-off plan charge
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             for _ in 0..reps {
                 let _ = s.decompose_more(1);
             }
-            (t0.elapsed().as_secs_f64() / reps as f64, d)
+            (t0.seconds() / reps as f64, d)
         };
         let (pm_secs, pm_d) = time_sweeps(PlanChoice::PerMode);
         let (sh_secs, sh_d) = time_sweeps(PlanChoice::SharedCsf);

@@ -11,7 +11,7 @@
 #[path = "common.rs"]
 mod common;
 
-use std::time::Instant;
+use tucker_lite::util::timer::Stopwatch;
 use tucker_lite::hooi::{assemble_local_z, assemble_local_z_fused};
 use tucker_lite::linalg::orthonormal_random;
 use tucker_lite::runtime::Engine;
@@ -41,11 +41,11 @@ fn main() {
     );
     let mut run = |name: &str, f: &mut dyn FnMut()| {
         f(); // warmup (compiles artifacts on first pjrt call)
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         for _ in 0..reps {
             f();
         }
-        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let per = t0.seconds() / reps as f64;
         table.row(vec![
             name.into(),
             fmt_secs(per),

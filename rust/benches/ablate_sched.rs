@@ -10,7 +10,7 @@
 #[path = "common.rs"]
 mod common;
 
-use std::time::Instant;
+use tucker_lite::util::timer::Stopwatch;
 use tucker_lite::sched::hypergraph::{partition, Hypergraph, PartitionParams};
 use tucker_lite::sched::{self, ModeMetrics, Scheme};
 use tucker_lite::tensor::datasets;
@@ -53,23 +53,23 @@ fn main() {
         &format!("ablate — slice sort ({} slices)", sizes.len()),
         &["sort", "serial secs", "parallel critical path"],
     );
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     for _ in 0..reps {
         let mut v: Vec<u32> = (0..sizes.len() as u32).collect();
         v.sort_unstable_by_key(|&i| sizes[i as usize]);
         std::hint::black_box(v.len());
     }
-    let std_sort = t0.elapsed().as_secs_f64() / reps as f64;
+    let std_sort = t0.seconds() / reps as f64;
     t2.row(vec!["std (serial)".into(), fmt_secs(std_sort), "-".into()]);
     let mut rng = Rng::new(2);
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let mut crit = 0.0;
     for _ in 0..reps {
         let out = sched::samplesort::sample_sort(&sizes, p, &mut rng);
         crit += out.prefix_secs / p as f64 + out.max_bucket_secs;
         std::hint::black_box(out.order.len());
     }
-    let ss = t0.elapsed().as_secs_f64() / reps as f64;
+    let ss = t0.seconds() / reps as f64;
     t2.row(vec![
         format!("sample sort (P={p})"),
         fmt_secs(ss),
@@ -89,9 +89,9 @@ fn main() {
     );
     for passes in [0usize, 1, 3, 6] {
         let params = PartitionParams { passes, ..Default::default() };
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let part = partition(&hg, p, params, &mut Rng::new(4));
-        let secs = t0.elapsed().as_secs_f64();
+        let secs = t0.seconds();
         let cut = hg.connectivity_cut(&part, p);
         t3.row(vec![passes.to_string(), cut.to_string(), fmt_secs(secs)]);
     }

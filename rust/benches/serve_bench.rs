@@ -16,7 +16,7 @@
 #[path = "common.rs"]
 mod common;
 
-use std::time::Instant;
+use tucker_lite::util::timer::Stopwatch;
 
 use tucker_lite::hooi::Kernel;
 use tucker_lite::linalg::Mat;
@@ -48,11 +48,11 @@ fn random_model(rng: &mut Rng, dims: &[usize], ks: &[usize]) -> DecompositionSna
 
 fn time_qps(queries: usize, reps: usize, f: &mut dyn FnMut()) -> f64 {
     f(); // warmup
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     for _ in 0..reps {
         f();
     }
-    (queries * reps) as f64 / t0.elapsed().as_secs_f64()
+    (queries * reps) as f64 / t0.seconds()
 }
 
 fn main() {

@@ -12,6 +12,7 @@
 use crate::hooi::HooiSnapshot;
 use crate::linalg::Mat;
 use crate::util::json::Json;
+use crate::util::float::is_integral_f64;
 
 /// When a [`crate::coordinator::TuckerSession`] snapshots its HOOI state.
 ///
@@ -227,7 +228,7 @@ pub(crate) fn parse_bits_arr(j: &Json) -> Result<Vec<f32>, String> {
             .iter()
             .map(|x| {
                 let v = x.as_f64().ok_or("non-numeric bit pattern")?;
-                if v < 0.0 || v > u32::MAX as f64 || v.fract() != 0.0 {
+                if v < 0.0 || v > u32::MAX as f64 || !is_integral_f64(v) {
                     return Err(format!("value {v} is not a valid f32 bit pattern"));
                 }
                 Ok(f32::from_bits(v as u32))

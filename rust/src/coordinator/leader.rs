@@ -235,12 +235,12 @@ pub(crate) fn collect_record(
         p: dist.p,
         k: ks.iter().copied().max().unwrap_or(0),
         core: ks.to_vec(),
-        // every charged HOOI component: TTM + SVD + core + communication
-        // (the core phase used to be timed but dropped from the total)
-        hooi_secs: cluster.elapsed.get(cat::TTM)
-            + cluster.elapsed.get(cat::SVD)
-            + cluster.elapsed.get(cat::CORE)
-            + comm_secs,
+        // every charged HOOI component — the in-phase side of the
+        // cat::IN_PHASE_SUM / cat::OUT_OF_PHASE_SUM partition (lint L5)
+        hooi_secs: cat::IN_PHASE_SUM
+            .iter()
+            .map(|c| cluster.elapsed.get(c))
+            .sum(),
         ttm_secs: cluster.elapsed.get(cat::TTM),
         svd_secs: cluster.elapsed.get(cat::SVD),
         core_secs: cluster.elapsed.get(cat::CORE),

@@ -147,7 +147,7 @@ use crate::tensor::slices::build_all;
 use crate::tensor::{DeltaError, TensorDelta};
 use crate::util::rng::Rng;
 use std::sync::Arc;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 /// Typed distribution-scheme selection: the paper's four registry
 /// entries plus an escape hatch for user-provided schemes.
@@ -1124,7 +1124,7 @@ impl TuckerSession {
         cluster: &mut SimCluster,
         failure: &RankFailure,
     ) -> Result<(), SessionError> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         self.recoveries += 1;
         let mut newly_dead: Vec<usize> = cluster
             .injector()
@@ -1161,7 +1161,7 @@ impl TuckerSession {
         if let Some(state) = self.state.as_mut() {
             state.restore(&snap);
         }
-        let secs = sim_secs + t0.elapsed().as_secs_f64();
+        let secs = sim_secs + t0.seconds();
         cluster.elapsed.add(cat::RECOVER, secs);
         self.recovery_secs_total += secs;
         Ok(())
@@ -1180,11 +1180,11 @@ impl TuckerSession {
     /// serialization cost and size are what `RunRecord` reports).
     fn take_checkpoint(&mut self) {
         let state = self.state.as_ref().expect("state in flight");
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let snap = state.snapshot();
         let cp = SessionCheckpoint::from_snapshot(&snap, self.plan.dist.p, &self.ks);
         self.checkpoint_bytes_total += cp.serialize().len() as u64;
-        self.checkpoint_secs_total += t0.elapsed().as_secs_f64();
+        self.checkpoint_secs_total += t0.seconds();
         self.last_snap = Some(snap);
         self.last_checkpoint = Some(cp);
     }
@@ -1512,7 +1512,7 @@ impl TuckerSession {
         modes: Vec<usize>,
         horizon: Option<usize>,
     ) -> RebalanceReport {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let model = self.cost_model();
         let w = self.workload.clone();
         let t = &w.tensor;
@@ -1637,7 +1637,7 @@ impl TuckerSession {
         let old_time = self.plan.dist.time;
         self.plan = candidate_plan;
         self.plan.dist.time = DistTime {
-            serial_secs: old_time.serial_secs + t0.elapsed().as_secs_f64(),
+            serial_secs: old_time.serial_secs + t0.seconds(),
             simulated_secs: old_time.simulated_secs + replan_sim + migration_sim,
         };
         self.rebalances += 1;
@@ -1666,7 +1666,7 @@ impl TuckerSession {
     /// root of the crash-recovery ≡ planned-eviction bit contract.
     /// Returns (simulated migration seconds, plan-rebuild makespan).
     fn apply_eviction(&mut self) -> (f64, f64) {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let model = self.cost_model();
         let w = self.workload.clone();
         let t = &w.tensor;
@@ -1735,7 +1735,7 @@ impl TuckerSession {
         let old_time = self.plan.dist.time;
         self.plan = candidate_plan;
         self.plan.dist.time = DistTime {
-            serial_secs: old_time.serial_secs + t0.elapsed().as_secs_f64(),
+            serial_secs: old_time.serial_secs + t0.seconds(),
             simulated_secs: old_time.simulated_secs + migration_sim,
         };
         self.generation += 1;

@@ -40,7 +40,7 @@ use crate::util::timer::Buckets;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 /// Phase / volume category names, shared by the HOOI driver, the oracle
 /// and the experiment harness (Fig 11 breakup keys off these).
@@ -69,6 +69,19 @@ pub mod cat {
     pub const COMM_FM: &str = "comm-fm";
     /// Common collectives (dots, norms, core allreduce).
     pub const COMM_COMMON: &str = "comm-common";
+
+    /// The Fig 11 phase-sum partition, side A: categories whose elapsed
+    /// seconds are **inside** `RunRecord::hooi_secs`. `collect_record`
+    /// folds over this array, and lint rule L5 (`cargo run -p
+    /// tucker-lint`) checks that every category above appears in exactly
+    /// one of the two partition arrays — adding a category without
+    /// deciding its accounting side is a build-breaking offence.
+    pub const IN_PHASE_SUM: &[&str] = &[TTM, SVD, CORE, COMM_SVD, COMM_FM, COMM_COMMON];
+
+    /// Partition side B: categories reported in their own `RunRecord`
+    /// buckets, **outside** `hooi_secs` (distribution construction,
+    /// streaming redistribution, fault recovery).
+    pub const OUT_OF_PHASE_SUM: &[&str] = &[DIST, REDIST, RECOVER];
 }
 
 /// Per-phase concurrency provenance: how a category's compute phases
@@ -429,9 +442,9 @@ impl SimCluster {
             .into_iter()
             .map(|task| move || catch_unwind(AssertUnwindSafe(task)))
             .collect();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let timed = run_scoped_pinned(guarded, self.parallel, self.pin);
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.seconds();
         let mut times = Vec::with_capacity(n);
         let mut results: Vec<Option<T>> = Vec::with_capacity(n);
         let mut panics: Vec<Option<String>> = vec![None; n];
@@ -471,9 +484,9 @@ impl SimCluster {
         let mut times = vec![0.0f64; self.p];
         let mut panics: Vec<Option<String>> = vec![None; self.p];
         for rank in 0..self.p {
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             let outcome = catch_unwind(AssertUnwindSafe(|| f(rank)));
-            let mut secs = t0.elapsed().as_secs_f64();
+            let mut secs = t0.seconds();
             if let Some(FaultKind::Straggler(factor)) = actions.get(rank).copied().flatten() {
                 secs *= factor.max(1.0);
             }
@@ -648,9 +661,9 @@ where
         return tasks
             .into_iter()
             .map(|task| {
-                let t0 = Instant::now();
+                let t0 = Stopwatch::start();
                 let r = task();
-                (r, t0.elapsed().as_secs_f64())
+                (r, t0.seconds())
             })
             .collect();
     }
@@ -664,9 +677,9 @@ where
             .unwrap()
             .take()
             .expect("each task is claimed exactly once");
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let r = task();
-        *done[i].lock().unwrap() = Some((r, t0.elapsed().as_secs_f64()));
+        *done[i].lock().unwrap() = Some((r, t0.seconds()));
     };
     std::thread::scope(|s| {
         for w in 0..workers {
@@ -717,7 +730,7 @@ fn pin_current_thread(cpu: usize) {
         return;
     }
     mask[word] |= 1usize << (cpu % BITS);
-    // Safety: pid 0 = calling thread; the mask buffer outlives the call
+    // SAFETY: pid 0 = calling thread; the mask buffer outlives the call
     // and its length is passed exactly.
     unsafe {
         let _ = sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
@@ -731,6 +744,27 @@ fn pin_current_thread(_cpu: usize) {}
 mod tests {
     use super::*;
     use crate::dist::fault::FaultPlan;
+
+    #[test]
+    fn phase_sum_partition_is_disjoint() {
+        // lint L5 checks coverage (every cat const appears somewhere);
+        // this checks the other half: no category is counted twice
+        for c in cat::IN_PHASE_SUM {
+            assert!(
+                !cat::OUT_OF_PHASE_SUM.contains(c),
+                "category {c} appears on both sides of the phase-sum partition"
+            );
+        }
+        let mut all: Vec<&str> = cat::IN_PHASE_SUM
+            .iter()
+            .chain(cat::OUT_OF_PHASE_SUM)
+            .copied()
+            .collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate category within a partition side");
+    }
 
     #[test]
     fn run_scoped_preserves_order_and_times() {

@@ -28,12 +28,14 @@
 //! channel transport adds is *evidence* — measured seconds and measured
 //! units per category — which `SimCluster` reports against the α–β
 //! prediction as `net_model_error`.
+#![warn(clippy::unwrap_used)]
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::fault::FailureKind;
+use crate::util::timer::{Deadline, Stopwatch};
 use super::net::NetModel;
 
 /// Which transport a cluster runs its collectives on.
@@ -382,7 +384,7 @@ struct RankCtx<'a> {
     beats: &'a [AtomicU64],
     poisoned: &'a AtomicBool,
     corrupt: &'a AtomicU32,
-    deadline: Instant,
+    deadline: Deadline,
     peer_prev: usize,
     peer_next: usize,
     /// Chaos hook: a wedged rank never participates (simulated hang).
@@ -465,8 +467,8 @@ impl ChannelTransport {
         let wedged = &self.wedged;
         let corrupt = &self.corrupt_budget;
 
-        let t0 = Instant::now();
-        let deadline = t0 + Duration::from_secs_f64(tuning.phase_deadline);
+        let t0 = Stopwatch::start();
+        let deadline = Deadline::in_secs(tuning.phase_deadline);
         let beats: Vec<AtomicU64> = (0..self.p).map(|_| AtomicU64::new(0)).collect();
         let poisoned = AtomicBool::new(false);
 
@@ -497,8 +499,12 @@ impl ChannelTransport {
                     expected: sizes[pv].len(),
                     to_next: data_tx[nx].clone(),
                     ack_to_prev: ack_tx[pv].clone(),
-                    rx: rx_slot.take().expect("receiver taken once"),
-                    arx: ack_rx[i].take().expect("ack receiver taken once"),
+                    rx: rx_slot
+                        .take()
+                        .expect("invariant: each data receiver is taken exactly once"),
+                    arx: ack_rx[i]
+                        .take()
+                        .expect("invariant: each ack receiver is taken exactly once"),
                     beats: &beats,
                     poisoned: &poisoned,
                     corrupt,
@@ -520,7 +526,7 @@ impl ChannelTransport {
                 })
                 .collect()
         });
-        let wall_secs = t0.elapsed().as_secs_f64();
+        let wall_secs = t0.seconds();
 
         let mut delivered_units = 0u64;
         for r in &reports {
@@ -700,7 +706,7 @@ fn run_rank(ctx: RankCtx<'_>) -> RankReport {
         // A wedged rank is a silent hang: it holds its channels open (a
         // hung peer's sockets do not close) but never heartbeats, sends,
         // or acks — detectable only by the deadline monitor.
-        while !ctx.poisoned.load(Ordering::Relaxed) && Instant::now() < ctx.deadline {
+        while !ctx.poisoned.load(Ordering::Relaxed) && !ctx.deadline.expired() {
             std::thread::sleep(Duration::from_micros(200));
         }
         return report;
@@ -736,8 +742,7 @@ fn run_rank(ctx: RankCtx<'_>) -> RankReport {
     let mut got: Vec<bool> = vec![false; ctx.expected];
     let mut got_count = 0usize;
     let mut acked_count = 0usize;
-    let mut last_beat = Instant::now();
-    let beat_every = Duration::from_secs_f64(ctx.tuning.heartbeat_interval);
+    let mut last_beat = Stopwatch::start();
 
     loop {
         if ctx.poisoned.load(Ordering::Relaxed) {
@@ -808,11 +813,11 @@ fn run_rank(ctx: RankCtx<'_>) -> RankReport {
         if !progressed {
             // Idle: refresh our heartbeat (throttled) and check the
             // phase deadline against whoever we are still waiting on.
-            if last_beat.elapsed() >= beat_every {
+            if last_beat.seconds() >= ctx.tuning.heartbeat_interval {
                 ctx.beats[ctx.rank].fetch_add(1, Ordering::Relaxed);
-                last_beat = Instant::now();
+                last_beat = Stopwatch::start();
             }
-            if Instant::now() >= ctx.deadline {
+            if ctx.deadline.expired() {
                 ctx.poisoned.store(true, Ordering::Relaxed);
                 report.error = Some(RankError::TimedOut {
                     waiting_on: if got_count < ctx.expected {
@@ -829,6 +834,7 @@ fn run_rank(ctx: RankCtx<'_>) -> RankReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

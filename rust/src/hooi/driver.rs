@@ -25,6 +25,7 @@ use super::plan::{PlanWorkspace, TtmPlan};
 use super::ranks::{khat_of, CoreRanks};
 use super::ttm::LocalZ;
 use crate::dist::{cat, RankFailure, SimCluster};
+use crate::util::float::exactly_zero_f32;
 use crate::linalg::{orthonormal_random, Mat};
 use crate::runtime::Engine;
 use crate::sched::{Distribution, RowMap, Sharers};
@@ -866,7 +867,7 @@ impl HooiState {
                     let frow = f_last.row(l as usize);
                     for kk in 0..k_last {
                         let w = frow[kk];
-                        if w != 0.0 {
+                        if !exactly_zero_f32(w) {
                             crate::linalg::axpy(w, zrow, core.row_mut(kk));
                         }
                     }

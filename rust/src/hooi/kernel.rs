@@ -204,6 +204,9 @@ mod avx2 {
     // x.len() == y.len() must be a multiple of LANES.
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: caller upholds the module contract above (runtime-verified
+    // avx2+fma, equal whole-LANES lengths); every unaligned load/store
+    // below stays in bounds because i*LANES + LANES <= x.len().
     pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         let va = _mm256_set1_ps(a);
         for i in 0..x.len() / LANES {
@@ -215,6 +218,7 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: same contract as axpy above.
     pub(super) unsafe fn scale(a: f32, x: &[f32], y: &mut [f32]) {
         let va = _mm256_set1_ps(a);
         for i in 0..x.len() / LANES {
@@ -237,7 +241,7 @@ impl Tile for Avx2Tile {
     fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), y.len());
         debug_assert_eq!(x.len() % LANES, 0);
-        // Safety: dispatch guarantees avx2+fma (see Avx2Tile docs); the
+        // SAFETY: dispatch guarantees avx2+fma (see Avx2Tile docs); the
         // length asserts uphold the whole-tile contract.
         unsafe { avx2::axpy(a, x, y) }
     }
@@ -246,7 +250,7 @@ impl Tile for Avx2Tile {
     fn scale(a: f32, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), y.len());
         debug_assert_eq!(x.len() % LANES, 0);
-        // Safety: as for axpy above.
+        // SAFETY: as for axpy above.
         unsafe { avx2::scale(a, x, y) }
     }
 }
@@ -260,6 +264,9 @@ mod neon {
     // must be a multiple of LANES (two q-registers per tile).
 
     #[target_feature(enable = "neon")]
+    // SAFETY: caller upholds the module contract above (aarch64 baseline
+    // NEON, equal whole-LANES lengths); both q-register load/store pairs
+    // stay in bounds because i*LANES + LANES <= x.len().
     pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         let va = vdupq_n_f32(a);
         for i in 0..x.len() / LANES {
@@ -274,6 +281,7 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: same contract as axpy above.
     pub(super) unsafe fn scale(a: f32, x: &[f32], y: &mut [f32]) {
         let va = vdupq_n_f32(a);
         for i in 0..x.len() / LANES {
@@ -295,7 +303,7 @@ impl Tile for NeonTile {
     fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), y.len());
         debug_assert_eq!(x.len() % LANES, 0);
-        // Safety: NEON is baseline on aarch64; lengths asserted above.
+        // SAFETY: NEON is baseline on aarch64; lengths asserted above.
         unsafe { neon::axpy(a, x, y) }
     }
 
@@ -303,7 +311,7 @@ impl Tile for NeonTile {
     fn scale(a: f32, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), y.len());
         debug_assert_eq!(x.len() % LANES, 0);
-        // Safety: as for axpy above.
+        // SAFETY: as for axpy above.
         unsafe { neon::scale(a, x, y) }
     }
 }
@@ -443,12 +451,15 @@ pub fn contrib_run_scalar(fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx2,fma")]
+// SAFETY: caller must have verified avx2+fma at runtime (contrib_run's
+// dispatch does); the body is safe code whose tiles inherit the feature.
 unsafe fn contrib_run_avx2(fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc: &mut [f32]) {
     accumulate_run::<Avx2Tile>(fa, vals, apad, kp, acc)
 }
 
 #[cfg(all(feature = "simd", target_arch = "aarch64"))]
 #[target_feature(enable = "neon")]
+// SAFETY: NEON is baseline on aarch64; the body is safe code.
 unsafe fn contrib_run_neon(fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc: &mut [f32]) {
     accumulate_run::<NeonTile>(fa, vals, apad, kp, acc)
 }
@@ -462,10 +473,10 @@ unsafe fn contrib_run_neon(fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, ac
 pub fn contrib_run(k: Kernel, fa: &[u32], vals: &[f32], apad: &[f32], kp: usize, acc: &mut [f32]) {
     match k.resolve() {
         #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-        // Safety: dispatch guarantees avx2+fma via Kernel::available().
+        // SAFETY: dispatch guarantees avx2+fma via Kernel::available().
         Kernel::Avx2 => unsafe { contrib_run_avx2(fa, vals, apad, kp, acc) },
         #[cfg(all(feature = "simd", target_arch = "aarch64"))]
-        // Safety: NEON is baseline on aarch64.
+        // SAFETY: NEON is baseline on aarch64.
         Kernel::Neon => unsafe { contrib_run_neon(fa, vals, apad, kp, acc) },
         Kernel::Scalar => contrib_run_scalar(fa, vals, apad, kp, acc),
         _ => accumulate_run::<PortableTile>(fa, vals, apad, kp, acc),

@@ -13,7 +13,8 @@ use crate::linalg::{axpy, dot, norm2, scale, svd, Mat};
 use crate::runtime::Engine;
 use crate::sched::{RowMap, Sharers};
 use crate::util::rng::Rng;
-use std::time::Instant;
+use crate::util::float::exactly_zero_f32;
+use crate::util::timer::Stopwatch;
 
 /// Per-mode oracle context: local copies + the communication patterns,
 /// which are query-invariant and therefore precomputed once.
@@ -209,7 +210,7 @@ pub fn lanczos_svd(
         // u_j = Z v_j − β_{j−1} u_{j−1}
         let mut u = oracle.matvec(&v, engine, cluster)?;
         queries += 1;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         if j > 0 {
             let beta = betas[j - 1];
             axpy(-beta, &us[j - 1], &mut u);
@@ -221,7 +222,7 @@ pub fn lanczos_svd(
             axpy(-c, uu, &mut u);
         }
         let alpha = norm2(&u);
-        cluster.charge_balanced(cat::SVD, t0.elapsed().as_secs_f64());
+        cluster.charge_balanced(cat::SVD, t0.seconds());
         // dots/norms on distributed vectors: one fused allreduce per iter
         cluster.allreduce(cat::COMM_COMMON, us.len() as u64 + 1)?;
         if alpha < eps {
@@ -235,7 +236,7 @@ pub fn lanczos_svd(
         // w = u_j Z − α_j v_j  (y-query)
         let mut w = oracle.rmatvec(us.last().unwrap(), engine, cluster)?;
         queries += 1;
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         axpy(-(alpha as f32), &v, &mut w);
         for vv in &vs {
             let c = dot(vv, &w);
@@ -244,7 +245,7 @@ pub fn lanczos_svd(
         let beta = norm2(&w);
         // v-side vectors are K̂-long and replicated: every rank does this
         // work, so it charges at full measured cost
-        cluster.elapsed.add(cat::SVD, t1.elapsed().as_secs_f64());
+        cluster.elapsed.add(cat::SVD, t1.seconds());
         if beta < eps {
             break;
         }
@@ -260,7 +261,7 @@ pub fn lanczos_svd(
         return Ok(LanczosResult { factor: f, sigma: vec![0.0; k], queries });
     }
     // B: j×j upper bidiagonal (α diagonal, β superdiagonal)
-    let t2 = Instant::now();
+    let t2 = Stopwatch::start();
     let mut b = Mat::zeros(j, j);
     for i in 0..j {
         b.set(i, i, alphas[i]);
@@ -275,7 +276,7 @@ pub fn lanczos_svd(
     for col in 0..kk {
         for (jj, uu) in us.iter().enumerate() {
             let w = small.u.get(jj, col);
-            if w != 0.0 {
+            if !exactly_zero_f32(w) {
                 for (l, &ul) in uu.iter().enumerate() {
                     factor.data[l * k + col] += w * ul;
                 }
@@ -283,7 +284,7 @@ pub fn lanczos_svd(
         }
     }
     // projection work is distributed over rows (owners)
-    cluster.charge_balanced(cat::SVD, t2.elapsed().as_secs_f64());
+    cluster.charge_balanced(cat::SVD, t2.seconds());
     let mut sigma = small.s.clone();
     sigma.truncate(k);
     Ok(LanczosResult { factor, sigma, queries })

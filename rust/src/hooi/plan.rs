@@ -834,11 +834,11 @@ pub(crate) fn assemble_fused_over<P: ModePlan>(
     match ws.kernel.resolve() {
         Kernel::Scalar => assemble_fused_scalar_over(p, factors, ws, cache),
         #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-        // Safety: the dispatch contract — Kernel::resolve only yields
+        // SAFETY: the dispatch contract — Kernel::resolve only yields
         // Avx2 after runtime detection of avx2+fma succeeded.
         Kernel::Avx2 => unsafe { assemble_fused_avx2_over(p, factors, ws, cache) },
         #[cfg(all(feature = "simd", target_arch = "aarch64"))]
-        // Safety: NEON is architecturally guaranteed on aarch64.
+        // SAFETY: NEON is architecturally guaranteed on aarch64.
         Kernel::Neon => unsafe { assemble_fused_neon_over(p, factors, ws, cache) },
         _ => assemble_fused_tiled_over::<PortableTile, P>(p, factors, ws, cache),
     }
@@ -850,6 +850,9 @@ pub(crate) fn assemble_fused_over<P: ModePlan>(
 /// only the 8-float microkernel would pay a call per 2 FMAs).
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx2,fma")]
+// SAFETY: caller must have verified avx2+fma at runtime (the dispatch
+// in assemble_fused_over does); the body is safe code whose intrinsic
+// tiles inherit the enabled features.
 unsafe fn assemble_fused_avx2_over<P: ModePlan>(
     p: &P,
     factors: &[Mat],
@@ -863,6 +866,8 @@ unsafe fn assemble_fused_avx2_over<P: ModePlan>(
 /// is enabled on the whole assembly).
 #[cfg(all(feature = "simd", target_arch = "aarch64"))]
 #[target_feature(enable = "neon")]
+// SAFETY: NEON is baseline on aarch64, so the feature precondition
+// always holds; the body is safe code using NEON tiles.
 unsafe fn assemble_fused_neon_over<P: ModePlan>(
     p: &P,
     factors: &[Mat],

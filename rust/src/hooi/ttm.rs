@@ -37,6 +37,7 @@ use super::kernel::{axpy_any, Kernel};
 use crate::linalg::Mat;
 use crate::runtime::Engine;
 use crate::tensor::SparseTensor;
+use crate::util::float::exactly_zero_f32;
 
 /// Truncated local penultimate matrix of one rank.
 #[derive(Debug, Clone)]
@@ -188,7 +189,7 @@ pub(crate) fn flush_contrib_batch(
     } else {
         engine.kron4_batch(k, rows_a, rows_b, rows_c, vals)
     };
-    let padding_clean = || contribs[fill * kh..].iter().all(|&x| x == 0.0);
+    let padding_clean = || contribs[fill * kh..].iter().all(|&x| exactly_zero_f32(x));
     if strict {
         assert!(
             padding_clean(),
@@ -391,7 +392,7 @@ mod tests {
         }
         // all other rows zero
         for l in [0usize, 1] {
-            assert!(dense.row(l).iter().all(|&x| x == 0.0));
+            assert!(dense.row(l).iter().all(|&x| exactly_zero_f32(x)));
         }
     }
 

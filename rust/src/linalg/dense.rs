@@ -3,6 +3,8 @@
 //! This replaces the paper's ATLAS dependency for everything outside the
 //! PJRT-compiled hot path: factor matrices, Lanczos state, small SVDs.
 
+use crate::util::float::exactly_zero_f32;
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
     pub rows: usize,
@@ -73,7 +75,7 @@ impl Mat {
         for i in 0..self.rows {
             let arow = self.row(i);
             for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
+                if exactly_zero_f32(aik) {
                     continue;
                 }
                 let brow = b.row(k);
@@ -97,7 +99,7 @@ impl Mat {
         assert_eq!(self.rows, x.len());
         let mut y = vec![0.0f32; self.cols];
         for (r, &xr) in x.iter().enumerate() {
-            if xr == 0.0 {
+            if exactly_zero_f32(xr) {
                 continue;
             }
             axpy(xr, self.row(r), &mut y);

@@ -7,6 +7,7 @@
 //! matrices — the role SLEPc's dense kernels play in the paper's stack.
 
 use super::dense::{dot, norm2, scale, Mat};
+use crate::util::float::exactly_zero_f64;
 
 #[derive(Debug, Clone)]
 pub struct Svd {
@@ -45,7 +46,7 @@ fn svd_tall(a: &Mat) -> Svd {
                 let alpha = dot(&cols[p], &cols[p]) as f64;
                 let beta = dot(&cols[q], &cols[q]) as f64;
                 let gamma = dot(&cols[p], &cols[q]) as f64;
-                if alpha * beta == 0.0 {
+                if exactly_zero_f64(alpha * beta) {
                     continue;
                 }
                 off = off.max(gamma.abs() / (alpha * beta).sqrt());

@@ -251,12 +251,12 @@ fn bench_kernel(job: &JobSpec, args: &Args) {
         &["kernel", "engine", "secs/call", "GFLOP/s"],
     );
     for (name, eng) in [("pjrt", &pjrt), ("native", &native)] {
-        let t0 = std::time::Instant::now();
+        let t0 = tucker_lite::util::timer::Stopwatch::start();
         for _ in 0..reps {
             let out = eng.kron3_batch(k, &rows_a, &rows_b, &vals);
             std::hint::black_box(out.len());
         }
-        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let per = t0.seconds() / reps as f64;
         let flops = (b * k * k) as f64; // one multiply per output element (+scale)
         t.row(vec![
             "kron3".into(),
@@ -274,12 +274,12 @@ fn bench_kernel(job: &JobSpec, args: &Args) {
     let z = tucker_lite::linalg::Mat::from_fn(rt, khat, |_, _| rng.normal() as f32);
     let x: Vec<f32> = (0..khat).map(|_| rng.normal() as f32).collect();
     for (name, eng) in [("pjrt", &pjrt), ("native", &native)] {
-        let t0 = std::time::Instant::now();
+        let t0 = tucker_lite::util::timer::Stopwatch::start();
         for _ in 0..reps {
             let out = eng.local_matvec(&z, &x);
             std::hint::black_box(out.len());
         }
-        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let per = t0.seconds() / reps as f64;
         let flops = (rt * khat * 2) as f64;
         t.row(vec![
             format!("matvec({rt}x{khat})"),
@@ -292,12 +292,12 @@ fn bench_kernel(job: &JobSpec, args: &Args) {
     if let Engine::Pjrt(rtm) = &pjrt {
         if let Ok(zdev) = rtm.upload_z(khat, rt, &z.data) {
             let _ = rtm.matvec_dev(&zdev, &x); // warmup/compile
-            let t0 = std::time::Instant::now();
+            let t0 = tucker_lite::util::timer::Stopwatch::start();
             for _ in 0..reps {
                 let out = rtm.matvec_dev(&zdev, &x).expect("matvec_dev");
                 std::hint::black_box(out.len());
             }
-            let per = t0.elapsed().as_secs_f64() / reps as f64;
+            let per = t0.seconds() / reps as f64;
             let flops = (rt * khat * 2) as f64;
             t.row(vec![
                 format!("matvec({rt}x{khat})"),

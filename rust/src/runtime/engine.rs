@@ -7,6 +7,7 @@
 
 use super::pjrt::{PjrtRuntime, ZDevice};
 use crate::linalg::Mat;
+use crate::util::float::exactly_zero_f32;
 
 /// A local penultimate matrix prepared for repeated Lanczos queries.
 /// `Device` holds Z^p tiles resident on the PJRT device — uploaded once
@@ -208,7 +209,7 @@ pub fn native_kron3(k: usize, rows_a: &[f32], rows_b: &[f32], vals: &[f32]) -> V
     let mut out = vec![0.0f32; b * k * k];
     for e in 0..b {
         let v = vals[e];
-        if v == 0.0 {
+        if exactly_zero_f32(v) {
             continue;
         }
         let ra = &rows_a[e * k..(e + 1) * k];
@@ -238,7 +239,7 @@ pub fn native_kron4(
     let mut out = vec![0.0f32; b * k3];
     for e in 0..b {
         let v = vals[e];
-        if v == 0.0 {
+        if exactly_zero_f32(v) {
             continue;
         }
         let ra = &rows_a[e * k..(e + 1) * k];
@@ -298,7 +299,7 @@ mod tests {
         let k = 2;
         let rows = [1.0, 2.0, 3.0, 4.0];
         let out = native_kron3(k, &rows, &rows, &[1.0, 0.0]);
-        assert!(out[4..].iter().all(|&x| x == 0.0));
+        assert!(out[4..].iter().all(|&x| exactly_zero_f32(x)));
     }
 
     #[test]

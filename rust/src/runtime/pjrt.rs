@@ -40,6 +40,9 @@ pub struct PjrtRuntime {
 // are supported); all interior mutability on the rust side goes through
 // the Mutex above.
 unsafe impl Send for PjrtRuntime {}
+// SAFETY: shared references only reach the runtime through &self
+// methods whose rust-side mutable state is behind the cache Mutex; the
+// PJRT client itself supports concurrent use (note above).
 unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
@@ -213,6 +216,9 @@ pub struct ZDevice {
 // permits concurrent executions referencing them (see the PjrtRuntime
 // thread-safety note above).
 unsafe impl Send for ZDevice {}
+// SAFETY: all ZDevice methods take &self and never mutate the uploaded
+// tiles, so concurrent shared access is read-only on both sides of the
+// FFI boundary.
 unsafe impl Sync for ZDevice {}
 
 impl PjrtRuntime {

@@ -12,7 +12,7 @@
 use super::policy::{DistTime, Distribution, ModePolicy, Scheme};
 use crate::tensor::{SliceIndex, SparseTensor};
 use crate::util::rng::Rng;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SliceAssign {
@@ -51,7 +51,7 @@ impl Scheme for CoarseG {
         p: usize,
         rng: &mut Rng,
     ) -> Distribution {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let policies: Vec<ModePolicy> = idx
             .iter()
             .map(|i| match self.strategy {
@@ -59,7 +59,7 @@ impl Scheme for CoarseG {
                 SliceAssign::BestFit => best_fit(t, i, p),
             })
             .collect();
-        let serial = t0.elapsed().as_secs_f64();
+        let serial = t0.seconds();
         Distribution {
             scheme: self.name().into(),
             p,

@@ -15,7 +15,7 @@
 use super::policy::{DistTime, Distribution, ModePolicy, Scheme};
 use crate::tensor::{SliceIndex, SparseTensor};
 use crate::util::rng::Rng;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 /// A hypergraph in dual CSR form.
 #[derive(Debug, Clone)]
@@ -465,12 +465,12 @@ impl Scheme for HyperG {
         p: usize,
         rng: &mut Rng,
     ) -> Distribution {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let hg = Hypergraph::from_tensor(t, idx);
         let part = partition(&hg, p, self.params, rng);
         // one Arc'd buffer aliased by all N policy slots (uni-policy)
         let pol = ModePolicy::new(p, part);
-        let serial = t0.elapsed().as_secs_f64();
+        let serial = t0.seconds();
         Distribution {
             scheme: self.name().into(),
             p,

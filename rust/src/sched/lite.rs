@@ -16,7 +16,7 @@ use super::policy::{DistTime, Distribution, ModePolicy, Scheme};
 use super::samplesort::sample_sort;
 use crate::tensor::{SliceIndex, SparseTensor};
 use crate::util::rng::Rng;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 pub struct Lite;
 
@@ -36,7 +36,7 @@ impl Scheme for Lite {
         p: usize,
         rng: &mut Rng,
     ) -> Distribution {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut simulated = 0.0f64;
         let policies = idx
             .iter()
@@ -52,7 +52,7 @@ impl Scheme for Lite {
             policies,
             uni: false,
             time: DistTime {
-                serial_secs: t0.elapsed().as_secs_f64(),
+                serial_secs: t0.seconds(),
                 simulated_secs: simulated,
             },
         }
@@ -88,7 +88,7 @@ fn distribute_mode(
     let limit = nnz.div_ceil(p);
     let sizes = idx.sizes();
     let sort = sample_sort(&sizes, p, rng);
-    let t1 = Instant::now();
+    let t1 = Stopwatch::start();
 
     let mut assign = vec![0u32; nnz];
     let mut load = vec![0usize; p];
@@ -152,7 +152,7 @@ fn distribute_mode(
         order.len() - pos
     );
 
-    let scan_secs = t1.elapsed().as_secs_f64();
+    let scan_secs = t1.seconds();
     let simulated =
         sort.prefix_secs / p as f64 + sort.max_bucket_secs + scan_secs / p as f64;
     (ModePolicy::new(p, assign), simulated)

@@ -7,7 +7,7 @@
 use super::policy::{DistTime, Distribution, ModePolicy, Scheme};
 use crate::tensor::{SliceIndex, SparseTensor};
 use crate::util::rng::Rng;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 pub struct MediumG;
 
@@ -28,7 +28,7 @@ impl Scheme for MediumG {
         rng: &mut Rng,
     ) -> Distribution {
         let _ = idx;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let n = t.ndim();
         let grid = factorize_grid(p, &t.dims);
         // random index permutation per mode (skew offset)
@@ -49,7 +49,7 @@ impl Scheme for MediumG {
         // one Arc'd buffer aliased by all N policy slots — uni-policy
         // schemes store a single assignment copy
         let pol = ModePolicy::new(p, assign);
-        let serial = t0.elapsed().as_secs_f64();
+        let serial = t0.seconds();
         Distribution {
             scheme: self.name().into(),
             p,

@@ -9,6 +9,7 @@
 
 use super::policy::{Distribution, ModePolicy};
 use crate::tensor::{SliceIndex, SparseTensor};
+use crate::util::float::exactly_zero_f64;
 
 /// Sharer lists per slice, CSR layout: ranks sharing Slice_n^l are
 /// `ranks[offsets[l]..offsets[l+1]]`. Built once per (mode, policy) and
@@ -110,7 +111,7 @@ impl ModeMetrics {
     pub fn ttm_imbalance(&self) -> f64 {
         let total: usize = self.e_counts.iter().sum();
         let avg = total as f64 / self.e_counts.len() as f64;
-        if avg == 0.0 {
+        if exactly_zero_f64(avg) {
             1.0
         } else {
             self.e_max as f64 / avg
@@ -129,7 +130,7 @@ impl ModeMetrics {
     /// SVD load balance = R_max / (R_sum/P); 1.0 is perfect.
     pub fn svd_imbalance(&self) -> f64 {
         let avg = self.r_sum as f64 / self.r_counts.len() as f64;
-        if avg == 0.0 {
+        if exactly_zero_f64(avg) {
             1.0
         } else {
             self.r_max as f64 / avg

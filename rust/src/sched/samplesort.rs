@@ -6,7 +6,7 @@
 //! timed so the simulated cluster can charge the makespan.
 
 use crate::util::rng::Rng;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 #[derive(Debug, Clone)]
 pub struct SampleSortOutcome {
@@ -24,12 +24,12 @@ pub struct SampleSortOutcome {
 /// `p`-bucket sample sort. Returns the permutation and the timing split.
 pub fn sample_sort(keys: &[u32], p: usize, rng: &mut Rng) -> SampleSortOutcome {
     let n = keys.len();
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     if n == 0 {
         return SampleSortOutcome {
             order: Vec::new(),
             max_bucket_secs: 0.0,
-            prefix_secs: t0.elapsed().as_secs_f64(),
+            prefix_secs: t0.seconds(),
         };
     }
     let buckets = p.max(1).min(n);
@@ -61,14 +61,14 @@ pub fn sample_sort(keys: &[u32], p: usize, rng: &mut Rng) -> SampleSortOutcome {
         bucketed[cursor[b as usize]] = i as u32;
         cursor[b as usize] += 1;
     }
-    let prefix_secs = t0.elapsed().as_secs_f64();
+    let prefix_secs = t0.seconds();
     // independent bucket sorts — the parallel part
     let mut max_bucket_secs = 0.0f64;
     for b in 0..buckets {
-        let tb = Instant::now();
+        let tb = Stopwatch::start();
         let seg = &mut bucketed[starts[b]..starts[b + 1]];
         seg.sort_unstable_by_key(|&i| (keys[i as usize], i));
-        max_bucket_secs = max_bucket_secs.max(tb.elapsed().as_secs_f64());
+        max_bucket_secs = max_bucket_secs.max(tb.seconds());
     }
     SampleSortOutcome { order: bucketed, max_bucket_secs, prefix_secs }
 }

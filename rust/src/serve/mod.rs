@@ -19,6 +19,7 @@
 //!   one thread + snapshot-memory budget, with typed admission
 //!   rejection, LRU snapshot eviction, and per-tenant [`ServeRecord`]
 //!   telemetry.
+#![warn(clippy::unwrap_used)]
 
 pub mod query;
 pub mod snapshot;

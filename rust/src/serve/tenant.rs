@@ -23,7 +23,7 @@
 //! `TUCKER_SERVE_SNAPSHOT_BYTES`, `TUCKER_SERVE_BATCH`.
 
 use std::sync::Arc;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 use crate::coordinator::TuckerSession;
 use crate::hooi::kernel::Kernel;
@@ -486,9 +486,9 @@ impl ServeCoordinator {
         let snap = Arc::clone(&latest.snap);
         let mut out = Vec::with_capacity(batch.len());
         for chunk in batch.queries().chunks(chunk_len) {
-            let start = Instant::now();
+            let start = Stopwatch::start();
             let vals = query::reconstruct_batch(snap.factors(), snap.core(), chunk, kernel)?;
-            t.record.observe(chunk.len(), start.elapsed().as_secs_f64());
+            t.record.observe(chunk.len(), start.seconds());
             out.extend_from_slice(&vals);
         }
         t.record.snapshot_generation = snap.generation();
@@ -516,10 +516,10 @@ impl ServeCoordinator {
             .ok_or_else(|| ServeError::NoSnapshot(name.to_string()))?;
         latest.last_used = clock;
         let snap = Arc::clone(&latest.snap);
-        let start = Instant::now();
+        let start = Stopwatch::start();
         let entries = snap.top_k_per_slice_with(mode, index, k, kernel)?;
         t.record.topk_queries += 1;
-        t.record.latencies.push(start.elapsed().as_secs_f64());
+        t.record.latencies.push(start.seconds());
         t.record.snapshot_generation = snap.generation();
         t.record.session_generation = t.session.generation();
         Ok(entries)

@@ -1,0 +1,57 @@
+//! Exact floating-point comparison helpers.
+//!
+//! This module is the **only** place allowed to write bare `==`/`!=`
+//! against an `f32`/`f64` literal (lint rule L6, `cargo run -p
+//! tucker-lint`). Everywhere else an exact comparison must go through
+//! these helpers or `to_bits()`, so each use states *which* exactness
+//! it means: sparse skip-zero fast paths want IEEE equality (where
+//! `-0.0 == 0.0`), while bit-exactness pins want `to_bits()` (where
+//! they differ, and NaNs compare equal to themselves).
+
+/// IEEE equality with zero: true for `+0.0` and `-0.0`, false for NaN.
+/// The sanctioned spelling of the sparse fast-path test `x == 0.0`,
+/// where a signed zero still contributes nothing to an accumulation.
+#[inline(always)]
+pub fn exactly_zero_f32(x: f32) -> bool {
+    x == 0.0
+}
+
+/// IEEE equality with zero for `f64`; see [`exactly_zero_f32`].
+#[inline(always)]
+pub fn exactly_zero_f64(x: f64) -> bool {
+    x == 0.0
+}
+
+/// True iff `x` has no fractional part (an exact integer, including
+/// ±0.0 and values too large to hold a fraction). False for NaN and
+/// infinities (`fract` is NaN there).
+#[inline(always)]
+pub fn is_integral_f64(x: f64) -> bool {
+    x.fract() == 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_semantics_match_ieee() {
+        assert!(exactly_zero_f32(0.0));
+        assert!(exactly_zero_f32(-0.0));
+        assert!(!exactly_zero_f32(f32::NAN));
+        assert!(!exactly_zero_f32(f32::MIN_POSITIVE));
+        assert!(exactly_zero_f64(0.0));
+        assert!(exactly_zero_f64(-0.0));
+        assert!(!exactly_zero_f64(f64::NAN));
+    }
+
+    #[test]
+    fn integrality() {
+        assert!(is_integral_f64(3.0));
+        assert!(is_integral_f64(-0.0));
+        assert!(is_integral_f64(1e300)); // no room for a fraction
+        assert!(!is_integral_f64(3.5));
+        assert!(!is_integral_f64(f64::NAN));
+        assert!(!is_integral_f64(f64::INFINITY));
+    }
+}

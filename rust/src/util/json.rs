@@ -5,6 +5,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+use crate::util::float::is_integral_f64;
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -63,7 +65,7 @@ impl Json {
                 let _ = write!(out, "{b}");
             }
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if is_integral_f64(*x) && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");

@@ -5,6 +5,7 @@ pub mod args;
 pub mod check;
 pub mod config;
 pub mod env;
+pub mod float;
 pub mod json;
 pub mod rng;
 pub mod table;

@@ -1,14 +1,65 @@
 //! Wallclock timing + a tiny scoped profiler used by the perf pass
 //! (EXPERIMENTS.md §Perf). Real measured seconds everywhere; the simulated
 //! cluster combines them into makespans (dist::cluster).
+//!
+//! This module is the **only** place allowed to touch
+//! `std::time::Instant`/`SystemTime` directly (lint rule L4,
+//! `cargo run -p tucker-lint`): every other clock read goes through
+//! [`time`], [`Stopwatch`] or [`Deadline`], so the accounting that
+//! feeds the Fig 11 phase breakups has a single auditable source.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Measure a closure, returning (result, seconds).
 pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();
     let r = f();
     (r, t0.elapsed().as_secs_f64())
+}
+
+/// A started monotonic clock: `Stopwatch::start()` … `sw.seconds()` is
+/// the sanctioned spelling of `Instant::now()` … `elapsed()`.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`start`](Stopwatch::start).
+    pub fn seconds(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Stopwatch::start()
+    }
+}
+
+/// A monotonic deadline: answers only "has it passed yet?" so callers
+/// never handle raw `Instant`s. Used by the transport's phase/heartbeat
+/// monitors.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `secs` from now.
+    pub fn in_secs(secs: f64) -> Deadline {
+        Deadline { at: Instant::now() + Duration::from_secs_f64(secs.max(0.0)) }
+    }
+
+    /// True once the deadline has passed.
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
 }
 
 /// Accumulating named timer buckets, e.g. ttm/svd/comm breakups.
@@ -72,6 +123,22 @@ mod tests {
         b.add("svd", 2.0);
         assert!((b.get("ttm") - 1.5).abs() < 1e-12);
         assert!((b.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn deadline_expires() {
+        assert!(Deadline::in_secs(0.0).expired());
+        assert!(Deadline::in_secs(-1.0).expired());
+        assert!(!Deadline::in_secs(60.0).expired());
     }
 
     #[test]

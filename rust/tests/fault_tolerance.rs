@@ -233,8 +233,9 @@ fn recovery_counters_and_sum_invariance_under_both_executors() {
         assert!(d.record.recovery_secs > 0.0);
         assert!(d.record.checkpoint_bytes > 0);
         assert!(d.record.checkpoint_secs >= 0.0);
-        // Fig 11 breakdown: recovery and checkpoint time live in their
-        // own buckets; the compute + comm phases still sum to hooi_secs
+        // Fig 11 breakdown: recovery and checkpoint time live in the
+        // cat::OUT_OF_PHASE_SUM buckets; the cat::IN_PHASE_SUM phases
+        // (compute + comm) still sum to hooi_secs
         let sum = d.record.ttm_secs
             + d.record.svd_secs
             + d.record.core_secs

@@ -64,16 +64,25 @@ fn check_case(dims: Vec<u32>, nnz: usize, k: usize, p: usize, seed: u64) {
 
 #[test]
 fn plan_matches_oracle_on_random_3d_tensors() {
-    for (seed, (nnz, p, k)) in
-        [(900, 4, 5), (300, 7, 3), (1200, 2, 6)].into_iter().enumerate()
-    {
+    // Miri interprets every load/store, so each sweep shrinks to one
+    // small case there — the point under Miri is UB detection in the
+    // plan pointer arithmetic, not statistical coverage (CI runs the
+    // full sweep natively as well)
+    let cases: &[(usize, usize, usize)] = if cfg!(miri) {
+        &[(120, 2, 3)]
+    } else {
+        &[(900, 4, 5), (300, 7, 3), (1200, 2, 6)]
+    };
+    for (seed, &(nnz, p, k)) in cases.iter().enumerate() {
         check_case(vec![20, 14, 9], nnz, k, p, seed as u64 + 1);
     }
 }
 
 #[test]
 fn plan_matches_oracle_on_random_4d_tensors() {
-    for (seed, (nnz, p, k)) in [(700, 3, 3), (250, 5, 4)].into_iter().enumerate() {
+    let cases: &[(usize, usize, usize)] =
+        if cfg!(miri) { &[(90, 2, 3)] } else { &[(700, 3, 3), (250, 5, 4)] };
+    for (seed, &(nnz, p, k)) in cases.iter().enumerate() {
         check_case(vec![10, 8, 6, 5], nnz, k, p, seed as u64 + 10);
     }
 }
@@ -102,8 +111,9 @@ fn explicitly_empty_rank_matches_oracle() {
 fn concurrent_phase_is_bit_identical_to_serial() {
     let p = 6;
     let k = 5;
+    let nnz = if cfg!(miri) { 400 } else { 4000 };
     let mut rng = Rng::new(42);
-    let t = SparseTensor::random(vec![40, 25, 15], 4000, &mut rng);
+    let t = SparseTensor::random(vec![40, 25, 15], nnz, &mut rng);
     let factors = random_factors(&t, k, &mut rng);
     let per_rank = random_partition(t.nnz(), p, &mut rng);
     let plans: Vec<TtmPlan> =
@@ -142,12 +152,13 @@ fn concurrent_phase_is_bit_identical_to_serial() {
 #[test]
 fn hooi_end_to_end_identical_under_both_executors() {
     let mut rng = Rng::new(9);
-    let t = SparseTensor::random(vec![18, 14, 10], 700, &mut rng);
+    let nnz = if cfg!(miri) { 200 } else { 700 };
+    let t = SparseTensor::random(vec![18, 14, 10], nnz, &mut rng);
     let idx = build_all(&t);
     let dist = Lite.policies(&t, &idx, 4, &mut Rng::new(3));
     let cfg = HooiConfig {
         core: CoreRanks::Uniform(4),
-        invocations: 2,
+        invocations: if cfg!(miri) { 1 } else { 2 },
         seed: 11,
         ..HooiConfig::default()
     };

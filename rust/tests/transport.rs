@@ -16,6 +16,7 @@ use tucker_lite::dist::{
 use tucker_lite::hooi::CoreRanks;
 use tucker_lite::tensor::SparseTensor;
 use tucker_lite::util::rng::Rng;
+use tucker_lite::util::float::exactly_zero_f64;
 
 fn workload(dims: Vec<u32>, nnz: usize, seed: u64) -> Workload {
     let mut rng = Rng::new(seed);
@@ -206,7 +207,7 @@ fn sessions_are_bit_identical_across_transports() {
     assert!(!ch_a.record.net_model_error.is_empty());
     assert!(ch_a.record.net_model_error.iter().all(|(_, e)| e.is_finite()));
     assert!(
-        ch_a.record.net_model_error.iter().any(|(_, e)| *e != 0.0),
+        ch_a.record.net_model_error.iter().any(|(_, e)| !exactly_zero_f64(*e)),
         "a real exchange never lands exactly on the analytic prediction"
     );
 }

@@ -1,0 +1,5 @@
+// L1 bad fixture: raw env read outside util/env.
+
+fn quick() -> Option<String> {
+    std::env::var("TUCKER_PLAN").ok()
+}

@@ -1,0 +1,10 @@
+// L2 bad fixture: unsafe without an adjacent SAFETY comment.
+
+fn lane_sum(p: *const f32) -> f32 {
+    // adds the first two lanes
+    unsafe { *p + *p.add(1) }
+}
+
+struct Raw(*mut u8);
+
+unsafe impl Send for Raw {}

@@ -1,0 +1,9 @@
+// L3 bad fixture: panicking calls on a fault-facing path.
+
+fn serve(values: &[f32], head: Option<f32>) -> f32 {
+    let first = head.unwrap();
+    let second = values.iter().copied().reduce(f32::max);
+    let third = second.expect("nonempty");
+    // constant indexing can panic on short slices
+    first + third + values[0]
+}

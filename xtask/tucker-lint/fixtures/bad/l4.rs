@@ -1,0 +1,7 @@
+// L4 bad fixture: direct clock reads outside util/timer.
+
+fn elapsed_secs() -> f64 {
+    let t0 = std::time::Instant::now();
+    let _wall = std::time::SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

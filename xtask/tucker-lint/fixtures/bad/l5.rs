@@ -1,0 +1,10 @@
+// L5 bad fixture: a category outside the phase-sum partition.
+
+pub mod cat {
+    pub const TTM: &str = "TTM";
+    pub const SVD: &str = "SVD";
+    pub const CORE: &str = "CORE";
+
+    pub const IN_PHASE_SUM: &[&str] = &[TTM, SVD];
+    pub const OUT_OF_PHASE_SUM: &[&str] = &[];
+}

@@ -1,0 +1,5 @@
+// L6 bad fixture: bare float equality against literals.
+
+fn is_zero(x: f32) -> bool { x == 0.0 }
+
+fn not_one(y: f64) -> bool { 1.0 != y }

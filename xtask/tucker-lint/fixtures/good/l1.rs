@@ -1,0 +1,5 @@
+// L1 good fixture: options resolved through the util::env facade.
+
+fn quick(opt: Option<usize>) -> usize {
+    crate::util::env::resolve(opt, "TUCKER_P", 4)
+}

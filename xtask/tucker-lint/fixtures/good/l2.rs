@@ -1,0 +1,18 @@
+// L2 good fixture: every unsafe keyword carries a SAFETY comment.
+
+fn lane_sum(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees p points at >= 2 readable f32 lanes.
+    unsafe { *p + *p.add(1) }
+}
+
+struct Raw(*mut u8);
+
+// SAFETY: Raw owns its allocation exclusively; moving it between
+// threads transfers ownership of the pointer with it.
+unsafe impl Send for Raw {}
+
+#[allow(dead_code)]
+// SAFETY: thin wrapper over lane_sum; same contract as above.
+unsafe fn lanes(p: *const f32) -> f32 {
+    lane_sum(p)
+}

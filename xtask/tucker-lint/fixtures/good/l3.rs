@@ -1,0 +1,17 @@
+// L3 good fixture: typed errors and invariant-named expects.
+
+fn serve(values: &[f32], head: Option<f32>) -> Result<f32, String> {
+    let first = head.ok_or("no head value")?;
+    let tail = values.first().copied().unwrap_or(0.0);
+    let anchor = head.expect("invariant: checked by ok_or above");
+    Ok(first + tail + anchor)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

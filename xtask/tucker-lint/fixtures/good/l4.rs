@@ -1,0 +1,6 @@
+// L4 good fixture: timing through the util::timer facade.
+
+fn elapsed_secs() -> f64 {
+    let sw = crate::util::timer::Stopwatch::start();
+    sw.seconds()
+}

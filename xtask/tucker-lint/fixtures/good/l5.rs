@@ -1,0 +1,10 @@
+// L5 good fixture: the partition covers every category.
+
+pub mod cat {
+    pub const TTM: &str = "TTM";
+    pub const SVD: &str = "SVD";
+    pub const CORE: &str = "CORE";
+
+    pub const IN_PHASE_SUM: &[&str] = &[TTM, SVD];
+    pub const OUT_OF_PHASE_SUM: &[&str] = &[CORE];
+}

@@ -1,0 +1,5 @@
+// L6 good fixture: exact comparisons through bits or helpers.
+
+fn is_zero(x: f32) -> bool { x.to_bits() == 0.0f32.to_bits() }
+
+fn within(y: f64) -> bool { (y - 1.0).abs() < 1e-12 }

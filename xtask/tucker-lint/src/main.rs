@@ -1,0 +1,1086 @@
+//! `tucker-lint` — dependency-free static analysis for the tucker-lite
+//! tree. The offline image vendors no crates, so this is a hand-rolled
+//! lexer (comments, strings, char literals, `#[cfg(test)]` regions)
+//! plus a handful of repo-specific rules, all deny-by-default:
+//!
+//! - **L1** `std::env::var*` only inside `rust/src/util/env.rs` — the
+//!   typed-option > env > default precedence lives there and nowhere
+//!   else.
+//! - **L2** every `unsafe` keyword (block, fn, impl) immediately
+//!   preceded by a `// SAFETY:` comment (attribute lines between the
+//!   comment and the keyword are fine).
+//! - **L3** no `.unwrap()`, no `.expect(..)` whose message does not
+//!   start with `"invariant: "`, and no constant-literal slice indexing
+//!   in the fault-facing modules (`serve/`, `dist/transport.rs`,
+//!   `dist/fault.rs`, `coordinator/checkpoint.rs`) outside
+//!   `#[cfg(test)]`.
+//! - **L4** `Instant`/`SystemTime` only inside `rust/src/util/timer.rs`
+//!   — all other timing goes through `timer::Stopwatch`/`Deadline` so
+//!   clock reads stay auditable.
+//! - **L5** every category const declared in `dist::cluster::cat` must
+//!   be a member of `cat::IN_PHASE_SUM` or `cat::OUT_OF_PHASE_SUM`, the
+//!   arrays the Fig 11 phase-sum-invariance checks iterate.
+//! - **L6** no bare `==`/`!=` against an `f32`/`f64` literal outside
+//!   the designated helpers in `rust/src/util/float.rs` — exact float
+//!   comparisons must be spelled through the quarantined helpers or
+//!   `to_bits()`.
+//!
+//! Diagnostics print as `path:line: [RULE] message: line text`. The
+//! checked-in allowlist (`xtask/tucker-lint/allowlist.txt`) can
+//! grandfather L3–L6 sites with a one-line justification; L1 and L2 are
+//! not allowlistable. Stale entries (matching nothing) are themselves
+//! errors, so the burn-down is monotone.
+//!
+//! Run from the workspace root: `cargo run -p tucker-lint` (optionally
+//! with an explicit repo root argument).
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories scanned relative to the repo root.
+const WALK_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// The one file allowed to read process environment variables.
+const ENV_HOME: &str = "rust/src/util/env.rs";
+
+/// The one file allowed to touch `Instant`/`SystemTime` directly.
+const TIMER_HOME: &str = "rust/src/util/timer.rs";
+
+/// The quarantine for exact float comparisons.
+const FLOAT_HOME: &str = "rust/src/util/float.rs";
+
+/// Fault-facing modules where panicking calls are banned (L3).
+const NO_PANIC_FILES: [&str; 3] =
+    ["rust/src/dist/transport.rs", "rust/src/dist/fault.rs", "rust/src/coordinator/checkpoint.rs"];
+const NO_PANIC_DIR: &str = "rust/src/serve/";
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Rule {
+    L1,
+    L2,
+    L3,
+    L4,
+    L5,
+    L6,
+}
+
+impl Rule {
+    fn id(self) -> &'static str {
+        match self {
+            Rule::L1 => "L1",
+            Rule::L2 => "L2",
+            Rule::L3 => "L3",
+            Rule::L4 => "L4",
+            Rule::L5 => "L5",
+            Rule::L6 => "L6",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "L1" => Some(Rule::L1),
+            "L2" => Some(Rule::L2),
+            "L3" => Some(Rule::L3),
+            "L4" => Some(Rule::L4),
+            "L5" => Some(Rule::L5),
+            "L6" => Some(Rule::L6),
+            _ => None,
+        }
+    }
+
+    /// L1 (env containment) and L2 (SAFETY comments) must be fixed at
+    /// the source, never grandfathered.
+    fn allowlistable(self) -> bool {
+        !matches!(self, Rule::L1 | Rule::L2)
+    }
+}
+
+#[derive(Debug)]
+struct Diagnostic {
+    rule: Rule,
+    path: String,
+    line: usize,
+    message: String,
+    text: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}: {}",
+            self.path,
+            self.line,
+            self.rule.id(),
+            self.message,
+            self.text
+        )
+    }
+}
+
+/// One source line after lexing: `code` is the raw text with comment
+/// bodies and string/char-literal contents blanked to spaces
+/// (byte-aligned with `raw`), `in_test` marks `#[cfg(test)]` regions.
+struct LineInfo {
+    raw: String,
+    code: String,
+    in_test: bool,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Recognize a raw-string opener (`r"`, `r#"`, `br##"`, ...) at `i`.
+/// Returns (hash count, bytes consumed by the opener).
+fn raw_str_start(bytes: &[u8], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_ident_byte(bytes[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while bytes.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if bytes.get(j) == Some(&b'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Blank comments and string/char-literal contents out of `text`,
+/// byte-for-byte, then split into per-line records with `#[cfg(test)]`
+/// region tracking.
+fn lex(text: &str) -> Vec<LineInfo> {
+    let bytes = text.as_bytes();
+    let mut code = vec![b' '; bytes.len()];
+
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(usize),
+        Chr,
+    }
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        match st {
+            St::Code => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                    st = St::Line;
+                    i += 2;
+                    continue;
+                }
+                if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    st = St::Block(1);
+                    i += 2;
+                    continue;
+                }
+                if let Some((hashes, skip)) = raw_str_start(bytes, i) {
+                    code[i..i + skip].copy_from_slice(&bytes[i..i + skip]);
+                    st = St::RawStr(hashes);
+                    i += skip;
+                    continue;
+                }
+                if b == b'"' {
+                    code[i] = b'"';
+                    st = St::Str;
+                    i += 1;
+                    continue;
+                }
+                if b == b'b' && bytes.get(i + 1) == Some(&b'"') {
+                    code[i] = b'b';
+                    code[i + 1] = b'"';
+                    st = St::Str;
+                    i += 2;
+                    continue;
+                }
+                if b == b'\'' {
+                    // char literal vs lifetime: 'x' / '\..' open a
+                    // literal, 'ident without a closing quote is a
+                    // lifetime and stays code
+                    let next = bytes.get(i + 1).copied();
+                    let is_char = match next {
+                        Some(b'\\') => true,
+                        Some(c) if c != b'\'' => bytes.get(i + 2) == Some(&b'\''),
+                        _ => false,
+                    };
+                    if is_char {
+                        code[i] = b'\'';
+                        st = St::Chr;
+                        i += 1;
+                        continue;
+                    }
+                }
+                code[i] = if b.is_ascii() { b } else { b' ' };
+                i += 1;
+            }
+            St::Line => {
+                if b == b'\n' {
+                    st = St::Code;
+                }
+                i += 1;
+            }
+            St::Block(d) => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else if b == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if b == b'\\' {
+                    i += 2;
+                } else if b == b'"' {
+                    code[i] = b'"';
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                let tail = &bytes[i + 1..];
+                let closed = b == b'"'
+                    && tail.len() >= hashes
+                    && tail[..hashes].iter().all(|&h| h == b'#');
+                if closed {
+                    st = St::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Chr => {
+                if b == b'\\' {
+                    i += 2;
+                } else if b == b'\'' || b == b'\n' {
+                    if b == b'\'' {
+                        code[i] = b'\'';
+                    }
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            code[i] = b'\n';
+        }
+    }
+    let code_text = String::from_utf8_lossy(&code).into_owned();
+
+    // cfg(test) regions: an attribute arms `pending`; the next `{` at
+    // the same brace depth opens a test region, a `;` there cancels it
+    // (brace-less item).
+    let mut lines = Vec::new();
+    let mut depth: i64 = 0;
+    let mut pending: Option<i64> = None;
+    let mut active: Vec<i64> = Vec::new();
+    for (raw, code) in text.lines().zip(code_text.lines()) {
+        let started_in_test = !active.is_empty();
+        let cb = code.as_bytes();
+        let mut p = 0;
+        while p < cb.len() {
+            if code[p..].starts_with("#[cfg(test)]") {
+                pending = Some(depth);
+                p += "#[cfg(test)]".len();
+                continue;
+            }
+            match cb[p] {
+                b'{' => {
+                    if pending == Some(depth) {
+                        pending = None;
+                        active.push(depth);
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if active.last() == Some(&depth) {
+                        active.pop();
+                    }
+                }
+                b';' => {
+                    if pending == Some(depth) {
+                        pending = None;
+                    }
+                }
+                _ => {}
+            }
+            p += 1;
+        }
+        lines.push(LineInfo {
+            raw: raw.to_string(),
+            code: code.to_string(),
+            in_test: started_in_test || !active.is_empty(),
+        });
+    }
+    lines
+}
+
+/// Byte offsets of word-boundary occurrences of `word` in `hay`.
+fn word_hits(hay: &str, word: &str) -> Vec<usize> {
+    let hb = hay.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(word) {
+        let at = from + rel;
+        let before_ok = at == 0 || !is_ident_byte(hb[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= hb.len() || !is_ident_byte(hb[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+fn push_diag(
+    out: &mut Vec<Diagnostic>,
+    rule: Rule,
+    path: &str,
+    line: usize,
+    message: &str,
+    text: &str,
+) {
+    out.push(Diagnostic {
+        rule,
+        path: path.to_string(),
+        line,
+        message: message.to_string(),
+        text: text.trim().to_string(),
+    });
+}
+
+/// L2 helper: the comment block immediately above line `i` (skipping
+/// attribute lines) must contain a line starting `// SAFETY:`.
+fn has_safety_comment(lines: &[LineInfo], i: usize) -> bool {
+    let mut j = i;
+    loop {
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+        let code = lines[j].code.trim();
+        if code.starts_with("#[") || code.starts_with("#![") {
+            continue; // attribute between the comment and the keyword
+        }
+        if !code.is_empty() {
+            return false; // real code directly above
+        }
+        // blank in code: either a comment line or truly empty
+        if !lines[j].raw.trim_start().starts_with("//") {
+            return false;
+        }
+        // walk the contiguous comment block upward
+        let mut k = j + 1;
+        while k > 0 && lines[k - 1].raw.trim_start().starts_with("//") {
+            if lines[k - 1].raw.trim_start().starts_with("// SAFETY:") {
+                return true;
+            }
+            k -= 1;
+        }
+        return false;
+    }
+}
+
+/// True when `tok` is exactly an f32/f64 literal (`0.0`, `1.`, `2.5e-3`,
+/// `1.0f32`) with nothing trailing — `0.0f32.to_bits` is *not* one.
+fn is_float_literal(tok: &str) -> bool {
+    let b = tok.as_bytes();
+    let mut i = 0;
+    let mut digits = false;
+    while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+        digits |= b[i].is_ascii_digit();
+        i += 1;
+    }
+    if !digits {
+        return false;
+    }
+    let mut float = false;
+    if i < b.len() && b[i] == b'.' {
+        float = true;
+        i += 1;
+        while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+            i += 1;
+        }
+    }
+    if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+        let mut j = i + 1;
+        if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+            j += 1;
+        }
+        if j < b.len() && b[j].is_ascii_digit() {
+            float = true;
+            i = j;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+    }
+    if tok[i..].starts_with("f32") || tok[i..].starts_with("f64") {
+        float = true;
+        i += 3;
+    }
+    float && i == b.len()
+}
+
+/// The token (ident/number chars plus `.`) ending at byte `end` of
+/// `line` (exclusive), skipping trailing spaces.
+fn token_before(line: &str, end: usize) -> &str {
+    let b = line.as_bytes();
+    let mut e = end;
+    while e > 0 && b[e - 1] == b' ' {
+        e -= 1;
+    }
+    let mut s = e;
+    while s > 0 && (is_ident_byte(b[s - 1]) || b[s - 1] == b'.') {
+        s -= 1;
+    }
+    &line[s..e]
+}
+
+/// The token starting at byte `start` of `line`, skipping leading
+/// spaces.
+fn token_after(line: &str, start: usize) -> &str {
+    let b = line.as_bytes();
+    let mut s = start;
+    while s < b.len() && b[s] == b' ' {
+        s += 1;
+    }
+    let mut e = s;
+    while e < b.len() && (is_ident_byte(b[e]) || b[e] == b'.') {
+        e += 1;
+    }
+    &line[s..e]
+}
+
+fn in_no_panic_zone(vpath: &str) -> bool {
+    vpath.starts_with(NO_PANIC_DIR) || NO_PANIC_FILES.contains(&vpath)
+}
+
+/// All per-file rules over one lexed source file.
+fn analyze_file(vpath: &str, text: &str) -> Vec<Diagnostic> {
+    let lines = lex(text);
+    let mut out = Vec::new();
+
+    for (idx, li) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = li.code.as_str();
+
+        // L1: env reads stay inside util/env.
+        if vpath != ENV_HOME && code.contains("env::var") {
+            push_diag(
+                &mut out,
+                Rule::L1,
+                vpath,
+                lineno,
+                "process env read outside util/env (route through util::env::resolve)",
+                &li.raw,
+            );
+        }
+
+        // L2: every `unsafe` needs an adjacent SAFETY comment.
+        if !word_hits(code, "unsafe").is_empty() && !has_safety_comment(&lines, idx) {
+            push_diag(
+                &mut out,
+                Rule::L2,
+                vpath,
+                lineno,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment",
+                &li.raw,
+            );
+        }
+
+        // L3: panicking calls in fault-facing modules.
+        if in_no_panic_zone(vpath) && !li.in_test {
+            if code.contains(".unwrap()") {
+                push_diag(
+                    &mut out,
+                    Rule::L3,
+                    vpath,
+                    lineno,
+                    "`.unwrap()` on a fault-facing path (convert to a typed error)",
+                    &li.raw,
+                );
+            }
+            let mut from = 0;
+            while let Some(rel) = code[from..].find(".expect(") {
+                let at = from + rel;
+                if !li.raw[at..].starts_with(".expect(\"invariant: ") {
+                    push_diag(
+                        &mut out,
+                        Rule::L3,
+                        vpath,
+                        lineno,
+                        "`.expect(..)` message must start with \"invariant: \" on a \
+                         fault-facing path",
+                        &li.raw,
+                    );
+                }
+                from = at + ".expect(".len();
+            }
+            let cb = code.as_bytes();
+            for (p, &b) in cb.iter().enumerate() {
+                if b != b'[' || p == 0 {
+                    continue;
+                }
+                let prev = cb[p - 1];
+                if !(is_ident_byte(prev) || prev == b')' || prev == b']') {
+                    continue;
+                }
+                if let Some(close) = code[p + 1..].find(']') {
+                    let inner = code[p + 1..p + 1 + close].trim();
+                    if !inner.is_empty()
+                        && inner.bytes().all(|c| c.is_ascii_digit() || c == b'_')
+                    {
+                        push_diag(
+                            &mut out,
+                            Rule::L3,
+                            vpath,
+                            lineno,
+                            "constant slice index on a fault-facing path (can panic)",
+                            &li.raw,
+                        );
+                    }
+                }
+            }
+        }
+
+        // L4: clock reads stay inside util/timer.
+        if vpath != TIMER_HOME
+            && (!word_hits(code, "Instant").is_empty()
+                || !word_hits(code, "SystemTime").is_empty())
+        {
+            push_diag(
+                &mut out,
+                Rule::L4,
+                vpath,
+                lineno,
+                "direct clock type outside util/timer (use timer::Stopwatch / timer::Deadline)",
+                &li.raw,
+            );
+        }
+
+        // L6: bare float (in)equality against a literal.
+        if vpath != FLOAT_HOME {
+            for op in ["==", "!="] {
+                let mut from = 0;
+                while let Some(rel) = code[from..].find(op) {
+                    let at = from + rel;
+                    from = at + op.len();
+                    // skip `..=`, `=>`, `<=`, `>=` neighborhoods: the
+                    // two-byte ops here are exact, but `!` of `!=` must
+                    // not be the `=` of a preceding op
+                    if at > 0 && matches!(code.as_bytes()[at - 1], b'=' | b'!' | b'<' | b'>') {
+                        continue;
+                    }
+                    if code.as_bytes().get(at + 2) == Some(&b'=') {
+                        continue;
+                    }
+                    let lhs = token_before(code, at);
+                    let rhs = token_after(code, at + 2);
+                    if is_float_literal(lhs) || is_float_literal(rhs) {
+                        push_diag(
+                            &mut out,
+                            Rule::L6,
+                            vpath,
+                            lineno,
+                            "bare float ==/!= (use util::float helpers or to_bits())",
+                            &li.raw,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // L5: the cat category partition, only in files declaring the module.
+    out.extend(rule_l5(vpath, &lines));
+    out
+}
+
+/// Keep only all-caps identifiers — the category const names.
+fn push_member(members: &mut Vec<(String, usize)>, tok: &str, line: usize) {
+    let caps = !tok.is_empty()
+        && tok
+            .bytes()
+            .all(|b| b.is_ascii_uppercase() || b == b'_' || b.is_ascii_digit());
+    if caps {
+        members.push((tok.to_string(), line));
+    }
+}
+
+/// L5: every `pub const NAME: &str` inside `pub mod cat` must appear in
+/// `IN_PHASE_SUM` or `OUT_OF_PHASE_SUM`; unknown names in the arrays
+/// are flagged too.
+fn rule_l5(vpath: &str, lines: &[LineInfo]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(open) = lines.iter().position(|l| l.code.contains("pub mod cat")) else {
+        return out;
+    };
+    // find the module's closing line by brace depth
+    let mut depth = 0i64;
+    let mut end = lines.len();
+    'outer: for (idx, li) in lines.iter().enumerate().skip(open) {
+        for b in li.code.bytes() {
+            match b {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = idx + 1;
+                        break 'outer;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let region = &lines[open..end];
+
+    let mut consts: Vec<(String, usize)> = Vec::new();
+    for (idx, li) in region.iter().enumerate() {
+        let t = li.code.trim();
+        if let Some(rest) = t.strip_prefix("pub const ") {
+            if let Some(colon) = rest.find(':') {
+                let name = rest[..colon].trim().to_string();
+                if rest[colon..].starts_with(": &str") {
+                    consts.push((name, open + idx + 1));
+                }
+            }
+        }
+    }
+
+    let mut members: Vec<(String, usize)> = Vec::new();
+    for array in ["IN_PHASE_SUM", "OUT_OF_PHASE_SUM"] {
+        let Some(decl) = region
+            .iter()
+            .position(|l| l.code.contains(array) && l.code.contains("pub const"))
+        else {
+            continue;
+        };
+        // collect uppercase identifiers between the initializer's `[`
+        // (the first one after `=` — the type's `&[&str]` bracket sits
+        // before it) and the matching `]`
+        let mut after_eq = false;
+        let mut in_init = false;
+        'array: for (idx, li) in region.iter().enumerate().skip(decl) {
+            let mut tok_start: Option<usize> = None;
+            for (p, b) in li.code.bytes().enumerate() {
+                let ident = is_ident_byte(b);
+                if in_init {
+                    match (ident, tok_start) {
+                        (true, None) => tok_start = Some(p),
+                        (false, Some(s)) => {
+                            push_member(&mut members, &li.code[s..p], open + idx + 1);
+                            tok_start = None;
+                        }
+                        _ => {}
+                    }
+                }
+                if !ident {
+                    match b {
+                        b'=' if !in_init => after_eq = true,
+                        b'[' if after_eq && !in_init => in_init = true,
+                        b']' if in_init => {
+                            break 'array;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            if let (true, Some(s)) = (in_init, tok_start) {
+                push_member(&mut members, &li.code[s..], open + idx + 1);
+            }
+        }
+    }
+    if members.is_empty() && !consts.is_empty() {
+        let (_, line) = consts[0];
+        push_diag(
+            &mut out,
+            Rule::L5,
+            vpath,
+            line,
+            "cat module declares categories but no IN_PHASE_SUM / OUT_OF_PHASE_SUM partition",
+            &lines[line - 1].raw,
+        );
+        return out;
+    }
+    for (name, line) in &consts {
+        if !members.iter().any(|(m, _)| m == name) {
+            push_diag(
+                &mut out,
+                Rule::L5,
+                vpath,
+                *line,
+                "category missing from cat::IN_PHASE_SUM / cat::OUT_OF_PHASE_SUM",
+                &lines[line - 1].raw,
+            );
+        }
+    }
+    for (name, line) in &members {
+        if !consts.iter().any(|(c, _)| c == name) {
+            push_diag(
+                &mut out,
+                Rule::L5,
+                vpath,
+                *line,
+                "phase-sum array names an undeclared category",
+                &lines[line - 1].raw,
+            );
+        }
+    }
+    out
+}
+
+/// One allowlist entry: `RULE|path|needle|justification`.
+struct AllowEntry {
+    rule: Rule,
+    path: String,
+    needle: String,
+    line: usize,
+    used: bool,
+}
+
+fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, '|').collect();
+        if parts.len() != 4 {
+            return Err(format!(
+                "allowlist line {}: expected RULE|path|needle|justification",
+                idx + 1
+            ));
+        }
+        let rule = Rule::parse(parts[0].trim())
+            .ok_or_else(|| format!("allowlist line {}: unknown rule {:?}", idx + 1, parts[0]))?;
+        if !rule.allowlistable() {
+            return Err(format!(
+                "allowlist line {}: rule {} is not allowlistable (fix the site instead)",
+                idx + 1,
+                rule.id()
+            ));
+        }
+        if parts[3].trim().is_empty() {
+            return Err(format!("allowlist line {}: empty justification", idx + 1));
+        }
+        out.push(AllowEntry {
+            rule,
+            path: parts[1].trim().to_string(),
+            needle: parts[2].trim().to_string(),
+            line: idx + 1,
+            used: false,
+        });
+    }
+    Ok(out)
+}
+
+/// Split diagnostics into (suppressed, remaining), marking entries used.
+fn apply_allowlist(
+    diags: Vec<Diagnostic>,
+    entries: &mut [AllowEntry],
+) -> (Vec<Diagnostic>, Vec<Diagnostic>) {
+    let mut suppressed = Vec::new();
+    let mut remaining = Vec::new();
+    for d in diags {
+        let hit = entries.iter_mut().find(|e| {
+            e.rule == d.rule && e.path == d.path && d.text.contains(&e.needle)
+        });
+        match hit {
+            Some(e) => {
+                e.used = true;
+                suppressed.push(d);
+            }
+            None => remaining.push(d),
+        }
+    }
+    (suppressed, remaining)
+}
+
+fn collect_files(root: &Path) -> Result<Vec<(String, PathBuf)>, String> {
+    let mut out = Vec::new();
+    for wr in WALK_ROOTS {
+        let dir = root.join(wr);
+        if dir.is_dir() {
+            walk_dir(&dir, root, &mut out)?;
+        }
+    }
+    if out.is_empty() && root.is_dir() {
+        // not a workspace root: lint the directory itself, so the binary
+        // can be pointed straight at a snippet directory (e.g. the
+        // bad-fixture set, which must exit nonzero)
+        walk_dir(root, root, &mut out)?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk_dir(
+    dir: &Path,
+    root: &Path,
+    out: &mut Vec<(String, PathBuf)>,
+) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk_dir(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|e| e.to_string())?
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+fn run(root: &Path) -> Result<usize, String> {
+    let files = collect_files(root)?;
+    if files.is_empty() {
+        return Err(format!("no .rs files found under {}", root.display()));
+    }
+    let mut diags = Vec::new();
+    for (vpath, path) in &files {
+        let text =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        diags.extend(analyze_file(vpath, &text));
+    }
+
+    let allow_path = root.join("xtask/tucker-lint/allowlist.txt");
+    let allow_text = fs::read_to_string(&allow_path).unwrap_or_default();
+    let mut entries = parse_allowlist(&allow_text)?;
+    let (suppressed, remaining) = apply_allowlist(diags, &mut entries);
+
+    let mut problems = 0;
+    for d in &remaining {
+        eprintln!("{d}");
+        problems += 1;
+    }
+    for e in entries.iter().filter(|e| !e.used) {
+        eprintln!(
+            "xtask/tucker-lint/allowlist.txt:{}: stale allowlist entry ([{}] {} {:?}) — \
+             the site is gone, delete the entry",
+            e.line,
+            e.rule.id(),
+            e.path,
+            e.needle
+        );
+        problems += 1;
+    }
+    eprintln!(
+        "tucker-lint: {} file(s), {} diagnostic(s) ({} allowlisted), {} problem(s)",
+        files.len(),
+        remaining.len() + suppressed.len(),
+        suppressed.len(),
+        problems
+    );
+    Ok(problems)
+}
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    match run(Path::new(&root)) {
+        Ok(0) => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("tucker-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        fs::read_to_string(&p).unwrap_or_else(|e| panic!("fixture {}: {e}", p.display()))
+    }
+
+    fn diag_lines(vpath: &str, text: &str, rule: Rule) -> Vec<usize> {
+        analyze_file(vpath, text)
+            .into_iter()
+            .filter(|d| d.rule == rule)
+            .map(|d| d.line)
+            .collect()
+    }
+
+    #[test]
+    fn lexer_blanks_comments_and_strings() {
+        let lines = lex("let a = \"x == 0.0\"; // y == 1.0\nlet b = 'c';\n");
+        assert!(!lines[0].code.contains("0.0"), "{}", lines[0].code);
+        assert!(lines[0].code.contains("let a ="));
+        assert_eq!(lines[1].code, "let b = ' ';");
+    }
+
+    #[test]
+    fn lexer_handles_lifetimes_and_block_comments() {
+        let lines = lex("fn f<'a>(x: &'a str) {}\n/* a == 1.0\n   b == 2.0 */\nlet y = 1;\n");
+        assert!(lines[0].code.contains("fn f<'a>"));
+        assert!(!lines[1].code.contains("1.0"));
+        assert!(!lines[2].code.contains("2.0"));
+        assert!(lines[3].code.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracking() {
+        let src = "fn live() { a.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t() { b.unwrap(); }\n\
+                   }\n\
+                   fn live2() { c.unwrap(); }\n";
+        let lines = lex(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[3].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn l1_bad_fixture_flagged_good_passes() {
+        let bad = fixture("bad/l1.rs");
+        assert_eq!(diag_lines("rust/src/dist/foo.rs", &bad, Rule::L1), vec![4]);
+        let good = fixture("good/l1.rs");
+        assert!(diag_lines("rust/src/dist/foo.rs", &good, Rule::L1).is_empty());
+        // util/env.rs itself is exempt
+        assert!(diag_lines(ENV_HOME, &bad, Rule::L1).is_empty());
+    }
+
+    #[test]
+    fn l2_bad_fixture_flagged_good_passes() {
+        let bad = fixture("bad/l2.rs");
+        assert_eq!(diag_lines("rust/src/hooi/foo.rs", &bad, Rule::L2), vec![5, 10]);
+        let good = fixture("good/l2.rs");
+        assert!(diag_lines("rust/src/hooi/foo.rs", &good, Rule::L2).is_empty());
+    }
+
+    #[test]
+    fn l3_bad_fixture_flagged_good_passes() {
+        let bad = fixture("bad/l3.rs");
+        assert_eq!(
+            diag_lines("rust/src/serve/foo.rs", &bad, Rule::L3),
+            vec![4, 6, 8]
+        );
+        // outside the fault-facing zone the same source is clean
+        assert!(diag_lines("rust/src/hooi/foo.rs", &bad, Rule::L3).is_empty());
+        let good = fixture("good/l3.rs");
+        assert!(diag_lines("rust/src/serve/foo.rs", &good, Rule::L3).is_empty());
+    }
+
+    #[test]
+    fn l4_bad_fixture_flagged_good_passes() {
+        let bad = fixture("bad/l4.rs");
+        assert_eq!(diag_lines("rust/src/sched/foo.rs", &bad, Rule::L4), vec![4, 5]);
+        assert!(diag_lines(TIMER_HOME, &bad, Rule::L4).is_empty());
+        let good = fixture("good/l4.rs");
+        assert!(diag_lines("rust/src/sched/foo.rs", &good, Rule::L4).is_empty());
+    }
+
+    #[test]
+    fn l5_bad_fixture_flagged_good_passes() {
+        let bad = fixture("bad/l5.rs");
+        assert_eq!(diag_lines("rust/src/dist/cluster.rs", &bad, Rule::L5), vec![6]);
+        let good = fixture("good/l5.rs");
+        assert!(diag_lines("rust/src/dist/cluster.rs", &good, Rule::L5).is_empty());
+    }
+
+    #[test]
+    fn l6_bad_fixture_flagged_good_passes() {
+        let bad = fixture("bad/l6.rs");
+        assert_eq!(
+            diag_lines("rust/src/linalg/foo.rs", &bad, Rule::L6),
+            vec![3, 5]
+        );
+        assert!(diag_lines(FLOAT_HOME, &bad, Rule::L6).is_empty());
+        let good = fixture("good/l6.rs");
+        assert!(diag_lines("rust/src/linalg/foo.rs", &good, Rule::L6).is_empty());
+    }
+
+    #[test]
+    fn float_literal_recognizer() {
+        for yes in ["0.0", "1.", "2.5e-3", "1.0f32", "3f64", "1_000.5"] {
+            assert!(is_float_literal(yes), "{yes}");
+        }
+        for no in ["0", "0x3f", "x", "0.0f32.to_bits", "f32", ""] {
+            assert!(!is_float_literal(no), "{no}");
+        }
+    }
+
+    #[test]
+    fn allowlist_suppresses_and_detects_stale() {
+        let bad = fixture("bad/l3.rs");
+        let diags = analyze_file("rust/src/serve/foo.rs", &bad);
+        let mut entries = parse_allowlist(
+            "L3|rust/src/serve/foo.rs|.unwrap()|fixture justification\n\
+             L3|rust/src/serve/foo.rs|no_such_site|stale entry\n",
+        )
+        .unwrap();
+        let (suppressed, remaining) = apply_allowlist(diags, &mut entries);
+        assert_eq!(suppressed.len(), 1);
+        assert!(!remaining.is_empty());
+        assert!(entries[0].used);
+        assert!(!entries[1].used, "second entry must be stale");
+    }
+
+    #[test]
+    fn allowlist_rejects_l1_l2_and_bad_shape() {
+        assert!(parse_allowlist("L1|a|b|c\n").is_err());
+        assert!(parse_allowlist("L2|a|b|c\n").is_err());
+        assert!(parse_allowlist("L3|a|b\n").is_err());
+        assert!(parse_allowlist("L3|a|b|\n").is_err());
+        assert!(parse_allowlist("# comment\n\nL3|a|b|why\n").is_ok());
+    }
+
+    #[test]
+    fn expect_invariant_convention_allowed() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   x.expect(\"invariant: caller checked\")\n\
+                   }\n";
+        assert!(diag_lines("rust/src/serve/foo.rs", src, Rule::L3).is_empty());
+    }
+
+    #[test]
+    fn repo_self_scan_is_clean() {
+        // The crate ships inside the repo it lints: running the full
+        // pass over the real tree (workspace root = two levels up) must
+        // produce zero problems. This is the same invocation CI runs.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let problems = run(&root).expect("lint run");
+        assert_eq!(problems, 0, "repo must lint clean (see stderr)");
+    }
+}
